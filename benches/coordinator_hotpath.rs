@@ -1,0 +1,58 @@
+//! Bench: L3 coordinator hot paths — batcher enqueue/dispatch, split-K
+//! combine merge, gpusim sweep throughput.  Perf targets from DESIGN.md §6:
+//! batcher > 1M ops/s, full figure sweep < 50 ms.
+
+use std::time::Duration;
+
+use fa2::attn::combine::{merge_all, Partial};
+use fa2::bench::figures;
+use fa2::coordinator::batcher::{BatchPolicy, Batcher};
+use fa2::util::rng::Rng;
+use fa2::util::stats::Bencher;
+
+fn main() {
+    let b = Bencher::default();
+
+    // --- batcher throughput ---
+    let ops = 100_000usize;
+    let s = b.run("batcher push+dispatch x100k", || {
+        let mut batcher = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        let mut out = 0usize;
+        for i in 0..ops {
+            batcher.push(i as u64, i as f64 * 1e-6);
+            if batcher.ready(i as f64 * 1e-6) {
+                out += batcher.take_batch().len();
+            }
+        }
+        out
+    });
+    let ops_per_sec = ops as f64 / s.p50;
+    println!("batcher throughput: {:.2} M ops/s", ops_per_sec / 1e6);
+    assert!(ops_per_sec > 1e6, "batcher below 1M ops/s: {ops_per_sec:.0}");
+
+    // --- combine merge throughput (flash-decoding reduction path) ---
+    let mut rng = Rng::seed_from(3);
+    let parts: Vec<Partial> = (0..64)
+        .map(|_| {
+            let scores: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+            let values: Vec<Vec<f64>> =
+                (0..8).map(|_| (0..64).map(|_| rng.normal()).collect()).collect();
+            Partial::from_scores(&scores, &values)
+        })
+        .collect();
+    let s = b.run("combine merge 64 partials (d=64)", || merge_all(&parts));
+    println!(
+        "combine: {:.1} merges/ms",
+        64.0 / (s.p50 * 1e3)
+    );
+
+    // --- gpusim sweep (all four figures) ---
+    let s = b.run("gpusim all-figure sweep (4x4 panels x 4 methods x 6 n)", || {
+        (4u32..=7).map(|f| figures::run_figure(f).len()).sum::<usize>()
+    });
+    assert!(s.p50 < 0.2, "gpusim sweep too slow: {}s", s.p50);
+    println!("gpusim full sweep p50: {:.2} ms", s.p50 * 1e3);
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Figure 4 and assert the reproduction bands.
+//! Run via `cargo bench --bench fig4_attn_fwd_bwd` (harness = in-tree criterion-lite).
+
+use fa2::attn::Pass;
+use fa2::bench::figures;
+use fa2::util::stats::Bencher;
+
+fn main() {
+    let b = Bencher::default();
+    // How long does the full figure-4 sweep take? (gpusim perf target:
+    // a whole figure in well under 50 ms — see DESIGN.md §6)
+    let s = b.run("figure4 full sweep (gpusim)", || figures::run_figure(4));
+    assert!(s.p50 < 0.25, "figure sweep too slow: {}s", s.p50);
+
+    let results = figures::run_figure(4);
+    for r in &results {
+        print!("{}", figures::render_ascii(r));
+    }
+    let checks = figures::check_bands(&results, Pass::FwdBwd);
+    let bad: Vec<_> = checks.iter().filter(|c| !c.ok).collect();
+    for c in &checks {
+        println!(
+            "{} {:<60} {:>8.2} in [{}, {}]",
+            if c.ok { "PASS" } else { "FAIL" },
+            c.name, c.value, c.lo, c.hi
+        );
+    }
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/fig4.csv", figures::to_csv(&results)).unwrap();
+    assert!(bad.is_empty(), "{} band checks failed", bad.len());
+    println!("figure 4: {}/{} bands ok; wrote reports/fig4.csv", checks.len(), checks.len());
+}

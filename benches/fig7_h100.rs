@@ -1,0 +1,34 @@
+//! Bench: regenerate paper Figure 7 (H100, same kernels, no Hopper-specific
+//! instructions) and check the headline 335 TFLOPs/s band.
+
+use fa2::attn::Method;
+use fa2::bench::figures;
+
+fn main() {
+    let results = figures::run_figure(7);
+    for r in &results {
+        print!("{}", figures::render_ascii(r));
+    }
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/fig7.csv", figures::to_csv(&results)).unwrap();
+    // paper: "we obtain up to 335 TFLOPs/s" on H100 fwd+bwd
+    let best = results
+        .iter()
+        .flat_map(|r| r.series.iter())
+        .filter(|s| s.method == Method::Flash2)
+        .flat_map(|s| s.tflops.iter())
+        .cloned()
+        .fold(0.0f64, f64::max);
+    println!("H100 FA2 best fwd+bwd: {best:.0} TFLOPs/s (paper: up to 335)");
+    assert!(best > 280.0 && best < 390.0, "H100 peak out of band: {best}");
+    // H100 must beat A100 everywhere for FA2
+    let a100 = figures::run_figure(4);
+    for (rh, ra) in results.iter().zip(&a100) {
+        let fh = rh.series.iter().find(|s| s.method == Method::Flash2).unwrap();
+        let fa = ra.series.iter().find(|s| s.method == Method::Flash2).unwrap();
+        for (h, a) in fh.tflops.iter().zip(&fa.tflops) {
+            assert!(h > a, "H100 slower than A100 somewhere");
+        }
+    }
+    println!("figure 7 ok; wrote reports/fig7.csv");
+}

@@ -1,0 +1,74 @@
+//! Bench: real PJRT execution of the attention artifacts on CPU — FA2 vs
+//! standard vs split-K wall-clock, plus runtime dispatch overhead
+//! (transfer time vs execute time).  Requires `make artifacts`.
+
+use std::path::Path;
+
+use fa2::runtime::Runtime;
+use fa2::util::rng::Rng;
+use fa2::util::stats::{fmt_duration, Bencher};
+use fa2::util::tensorio::HostTensor;
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("(skipping runtime_exec: run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::new(Path::new("artifacts")).unwrap();
+    let b = Bencher { warmup: 2, iters: 8, ..Default::default() };
+
+    // small problem: kernel-vs-kernel on identical inputs
+    let mut rng = Rng::seed_from(11);
+    for name in [
+        "attn_fa2_full_b1h2n64d32",
+        "attn_std_full_b1h2n64d32",
+        "attn_splitk4_full_b1h2n64d32",
+        "attn_fa2_causal_b1h2n64d32",
+        "attn_fa2grad_causal_b1h2n64d32",
+    ] {
+        let exe = rt.load(name).unwrap();
+        let inputs: Vec<HostTensor> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|s| {
+                let n: usize = s.dims.iter().product();
+                HostTensor::from_f32(
+                    &s.dims,
+                    &(0..n).map(|_| rng.normal() as f32).collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        b.run(name, || exe.run(&inputs).unwrap());
+    }
+
+    // larger problem at paper-like scale (CPU): b4 h4 n512 d64
+    for name in ["attn_fa2_causal_b4h4n512d64", "attn_std_causal_b4h4n512d64"] {
+        let exe = rt.load(name).unwrap();
+        let inputs: Vec<HostTensor> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|s| {
+                let n: usize = s.dims.iter().product();
+                HostTensor::from_f32(
+                    &s.dims,
+                    &(0..n).map(|_| rng.normal() as f32).collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        b.run(name, || exe.run(&inputs).unwrap());
+    }
+
+    // dispatch overhead: transfer vs execute split from ExecStats
+    let exe = rt.load("attn_fa2_causal_b4h4n512d64").unwrap();
+    let st = exe.stats();
+    let overhead = st.total_transfer_secs / (st.total_exec_secs + st.total_transfer_secs);
+    println!(
+        "runtime dispatch overhead: {:.1}% of wall (exec {}, transfer {}) over {} runs",
+        overhead * 100.0,
+        fmt_duration(st.total_exec_secs),
+        fmt_duration(st.total_transfer_secs),
+        st.executions
+    );
+}

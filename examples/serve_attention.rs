@@ -1,0 +1,39 @@
+//! Serving example: run the mini-vLLM coordinator (dynamic batching,
+//! KV-cache state management, AOT prefill/decode executables) under a
+//! Poisson open-loop workload and report latency/throughput.
+//!
+//!   cargo run --release --example serve_attention [n_requests]
+
+use anyhow::Result;
+use fa2::coordinator::server::{GenRequest, Server};
+use fa2::train::corpus::Corpus;
+use fa2::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("n_requests"))
+        .unwrap_or(24);
+
+    let server = Server::start("artifacts".into(), "tiny")?;
+    let mut corpus = Corpus::new(512, 7);
+    let mut rng = Rng::seed_from(7);
+
+    println!("submitting {n_requests} requests (Poisson, 25 req/s, 12 new tokens each)...");
+    let mut rxs = Vec::new();
+    for _ in 0..n_requests {
+        let prompt = corpus.next_batch(1, 16);
+        rxs.push(server.submit(GenRequest { prompt, n_new: 12 }));
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(25.0)));
+    }
+    let mut total_tokens = 0;
+    for rx in &rxs {
+        let resp = rx.recv()?;
+        total_tokens += resp.tokens.len();
+        assert_eq!(resp.tokens.len(), 12);
+    }
+    let metrics = server.shutdown()?;
+    println!("{}", metrics.report());
+    println!("all {n_requests} requests completed ({total_tokens} tokens)");
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Regenerate every paper artifact in one shot: figures 4-7 CSVs + ASCII
+//! charts, Table 1, and the three ablation reports — the "reproduce the
+//! paper" button.
+//!
+//!   cargo run --release --example sweep_figures
+
+use anyhow::Result;
+use fa2::attn::Pass;
+use fa2::bench::{figures, table1};
+use fa2::gpusim::Device;
+
+fn main() -> Result<()> {
+    std::fs::create_dir_all("reports")?;
+    for fig in [4u32, 5, 6, 7] {
+        let results = figures::run_figure(fig);
+        println!("=== Figure {fig} ===");
+        for r in &results {
+            print!("{}", figures::render_ascii(r));
+        }
+        std::fs::write(format!("reports/fig{fig}.csv"), figures::to_csv(&results))?;
+        if fig != 7 {
+            let pass = match fig { 5 => Pass::Fwd, 6 => Pass::Bwd, _ => Pass::FwdBwd };
+            let checks = figures::check_bands(&results, pass);
+            let bad = checks.iter().filter(|c| !c.ok).count();
+            println!("figure {fig} bands: {}/{} ok", checks.len() - bad, checks.len());
+            assert_eq!(bad, 0, "figure {fig} band checks failed");
+        }
+    }
+    for dev in [Device::a100(), Device::h100()] {
+        let cells = table1::run_table1(&dev);
+        println!("=== Table 1 ({}) ===\n{}", dev.name, table1::render(&cells));
+        if dev.name.starts_with("A100") {
+            std::fs::write("reports/table1.csv", table1::to_csv(&cells))?;
+        }
+    }
+    println!("wrote reports/fig{{4,5,6,7}}.csv and reports/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! E2E validation: train a GPT on the synthetic Markov corpus through the
+//! AOT train_step (fwd + FlashAttention-2 bwd + Adam fused in one HLO
+//! executable), log the loss curve, and report MFU-style accounting.
+//!
+//!   cargo run --release --example train_gpt [small [steps]]
+//!
+//! Defaults to the ~13.7M-param "small" model for 300 steps (the
+//! EXPERIMENTS.md run). Pass `tiny 50` for a fast smoke run.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use fa2::runtime::Runtime;
+use fa2::train::trainer::{TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("small").to_string();
+    let steps = args
+        .get(1)
+        .map(|s| s.parse().expect("steps must be a number"))
+        .unwrap_or(300);
+
+    let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
+    let cfg = TrainConfig { model, steps, log_every: 10, ..Default::default() };
+    let report = Trainer::new(rt).run(&cfg)?;
+
+    std::fs::create_dir_all("reports")?;
+    let csv = format!("reports/train_{}_loss.csv", cfg.model);
+    std::fs::write(&csv, report.loss_csv())?;
+
+    println!("\n=== loss curve (every 10th step) ===");
+    let max_loss = report.logs.iter().map(|l| l.loss).fold(0.0f32, f32::max);
+    for l in report.logs.iter().step_by(10) {
+        let bar = "▇".repeat(((l.loss / max_loss) * 50.0) as usize);
+        println!("step {:>4}  loss {:>7.4}  {bar}", l.step, l.loss);
+    }
+    println!(
+        "\nfinal: {:.4} (from {:.4}); {} tokens/step; {:.2}s/step; {:.2} GFLOP/s",
+        report.last_loss(),
+        report.first_loss(),
+        report.tokens_per_step,
+        report.mean_step_secs,
+        report.achieved_flops / 1e9,
+    );
+    println!("wrote {csv}");
+    assert!(
+        report.last_loss() < report.first_loss() - 0.3,
+        "loss did not decrease meaningfully"
+    );
+    Ok(())
+}

@@ -1,0 +1,366 @@
+"""AOT pipeline: lower every model/kernel entry point to HLO *text* plus a
+JSON manifest + FAT1 golden test vectors, all consumed by the Rust runtime.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+xla_extension 0.5.1 (what the published ``xla`` rust crate links) rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--profile full|test]
+
+Artifact inventory (profile=full):
+  attn_fa2_{causal|full}_b{B}h{H}n{N}d{D}     FA2 fwd (Alg 1)   -> (O, L)
+  attn_fa2grad_{...}                          FA2 fwd+bwd       -> (O,dQ,dK,dV)
+  attn_std_{...}                              standard attention baseline
+  attn_splitk{S}_{...}                        split-K ablation
+  {model}_init                                seed -> initial params (flat)
+  {model}_train_step                          params+opt+tokens -> updated
+  {model}_prefill_b{B}                        params+tokens -> logits+cache
+  {model}_decode_b{B}                         params+cache+token+pos -> logits
+Every artifact gets input/output specs in manifest.json; most get a FAT1
+golden file with concrete inputs/outputs for the rust integration tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import BlockSizes, attention_ref, flash2_fwd, flash_attention, splitk_fwd
+from .tensorio import write_tensors
+
+# ---------------------------------------------------------------------------
+# Model registry (mirrored by configs/*.toml on the rust side)
+# ---------------------------------------------------------------------------
+
+MODELS: dict[str, M.GPTConfig] = {
+    "tiny": M.GPTConfig(
+        vocab_size=512, n_layer=2, n_head=4, n_kv_head=4, d_model=64,
+        max_seq=64, block_q=32, block_k=32,
+    ),
+    # ~13.7M params: the e2e CPU training target (single core).
+    "small": M.GPTConfig(
+        vocab_size=8192, n_layer=6, n_head=6, n_kv_head=6, d_model=384,
+        max_seq=128, block_q=64, block_k=64,
+    ),
+}
+TRAIN_BATCH = {"tiny": 4, "small": 4}
+ADAM = M.AdamConfig(lr=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.int32): "i32",
+    np.dtype(np.uint32): "u32",
+    np.dtype(np.float64): "f64",
+    np.dtype(np.int64): "i64",
+}
+
+
+def _spec(name: str, x) -> dict:
+    return {
+        "name": name,
+        "shape": list(np.shape(x)),
+        "dtype": _DTYPE_NAMES[np.dtype(x.dtype)],
+    }
+
+
+class Exporter:
+    """Accumulates artifacts + manifest in an output directory."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: list[dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(
+        self,
+        name: str,
+        fn,
+        example_inputs: list[tuple[str, np.ndarray]],
+        *,
+        kind: str,
+        meta: dict | None = None,
+        golden: bool = True,
+        donate_argnums: tuple = (),
+    ) -> None:
+        """Lower fn(*inputs) -> tuple of outputs; write hlo + golden + entry."""
+        args = [jnp.asarray(v) for _, v in example_inputs]
+        jitted = jax.jit(fn, donate_argnums=donate_argnums)
+        lowered = jitted.lower(*args)
+        hlo = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, hlo_file), "w") as f:
+            f.write(hlo)
+
+        outputs = fn(*args)
+        if not isinstance(outputs, (tuple, list)):
+            outputs = (outputs,)
+        out_specs = [_spec(f"out{i}", o) for i, o in enumerate(outputs)]
+
+        golden_file = None
+        if golden:
+            golden_file = f"{name}.golden.fat1"
+            tensors = {f"in{i}": np.asarray(v) for i, (_, v) in enumerate(example_inputs)}
+            tensors.update({f"out{i}": np.asarray(o) for i, o in enumerate(outputs)})
+            write_tensors(os.path.join(self.out_dir, golden_file), tensors)
+
+        self.entries.append(
+            {
+                "name": name,
+                "kind": kind,
+                "hlo": hlo_file,
+                "golden": golden_file,
+                "inputs": [
+                    {**_spec(n, v), "name": n} for n, v in example_inputs
+                ],
+                "outputs": out_specs,
+                "meta": meta or {},
+            }
+        )
+        print(f"  [aot] {name}: {len(hlo)//1024} KiB hlo, "
+              f"{len(example_inputs)} in / {len(out_specs)} out")
+
+    def finish(self) -> None:
+        manifest = {"version": 1, "artifacts": self.entries}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"  [aot] manifest.json: {len(self.entries)} artifacts")
+
+
+# ---------------------------------------------------------------------------
+# Attention artifacts
+# ---------------------------------------------------------------------------
+
+
+def _attn_cases(profile: str):
+    if profile == "test":
+        return [(1, 2, 64, 32)]
+    # Tiny case for fast integration tests, then B chosen so B*N = 2048
+    # "tokens" (scaled-down paper setting: the paper fixes B*N = 16k on
+    # A100; CPU gets 2k).
+    return [
+        (1, 2, 64, 32),
+        (16, 4, 128, 64), (8, 4, 256, 64), (4, 4, 512, 64), (4, 4, 256, 128),
+    ]
+
+
+def export_attention(ex: Exporter, profile: str) -> None:
+    rng = np.random.default_rng(42)
+    for b, h, n, d in _attn_cases(profile):
+        q = rng.normal(size=(b, h, n, d)).astype(np.float32)
+        k = rng.normal(size=(b, h, n, d)).astype(np.float32)
+        v = rng.normal(size=(b, h, n, d)).astype(np.float32)
+        do = rng.normal(size=(b, h, n, d)).astype(np.float32)
+        bs = BlockSizes(min(128, n), min(128, n))
+        meta = {"batch": b, "heads": h, "seqlen": n, "head_dim": d}
+        for causal in (False, True):
+            tag = "causal" if causal else "full"
+            sfx = f"{tag}_b{b}h{h}n{n}d{d}"
+
+            ex.add(
+                f"attn_fa2_{sfx}",
+                functools.partial(flash2_fwd, causal=causal, block_sizes=bs),
+                [("q", q), ("k", k), ("v", v)],
+                kind="attn_fwd", meta={**meta, "causal": causal, "impl": "fa2"},
+            )
+
+            def grad_fn(q_, k_, v_, do_, _c=causal, _bs=bs):
+                def f(a, b_, c):
+                    return flash_attention(a, b_, c, _c, None, _bs, True)
+                o, vjp = jax.vjp(f, q_, k_, v_)
+                dq, dk, dv = vjp(do_)
+                return o, dq, dk, dv
+
+            ex.add(
+                f"attn_fa2grad_{sfx}",
+                grad_fn,
+                [("q", q), ("k", k), ("v", v), ("do", do)],
+                kind="attn_grad", meta={**meta, "causal": causal, "impl": "fa2"},
+            )
+
+            ex.add(
+                f"attn_std_{sfx}",
+                functools.partial(attention_ref, causal=causal),
+                [("q", q), ("k", k), ("v", v)],
+                kind="attn_fwd", meta={**meta, "causal": causal, "impl": "std"},
+            )
+        # split-K ablation: non-causal only (its natural decode use case)
+        ex.add(
+            f"attn_splitk4_full_b{b}h{h}n{n}d{d}",
+            functools.partial(splitk_fwd, n_split=4, block_sizes=bs),
+            [("q", q), ("k", k), ("v", v)],
+            kind="attn_fwd", meta={**meta, "causal": False, "impl": "splitk4"},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Model artifacts (init / train_step / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _flatten_with_names(tree) -> tuple[list[str], list, object]:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [
+        "/".join(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        for path, _ in paths
+    ]
+    return names, [leaf for _, leaf in paths], treedef
+
+
+def export_model(ex: Exporter, model_name: str, profile: str) -> None:
+    cfg = MODELS[model_name]
+    batch = TRAIN_BATCH[model_name]
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    opt = M.init_opt_state(params)
+    p_names, p_leaves, p_tree = _flatten_with_names(params)
+    o_names, o_leaves, o_tree = _flatten_with_names(opt)
+    cfg_meta = {
+        "model": model_name,
+        "vocab_size": cfg.vocab_size, "n_layer": cfg.n_layer,
+        "n_head": cfg.n_head, "n_kv_head": cfg.n_kv_head,
+        "d_model": cfg.d_model, "max_seq": cfg.max_seq,
+        "n_params": cfg.n_params, "train_batch": batch,
+        "param_leaves": p_names, "opt_leaves": o_names,
+    }
+
+    # --- init: seed -> flat params (rust never constructs params itself) ---
+    def init_fn(seed):
+        p = M.init_params(jax.random.PRNGKey(seed), cfg)
+        return tuple(_flatten_with_names(p)[1])
+
+    ex.add(
+        f"{model_name}_init", init_fn,
+        [("seed", np.uint32(0))],
+        kind="init", meta=cfg_meta, golden=(model_name == "tiny"),
+    )
+
+    # --- train_step: flat(params) + flat(opt) + tokens -> updated + loss ---
+    n_p, n_o = len(p_leaves), len(o_leaves)
+
+    def make_train_step(attention_impl):
+        cfg_i = dataclasses.replace(cfg, attention_impl=attention_impl)
+
+        def step_fn(*args):
+            ps = jax.tree_util.tree_unflatten(p_tree, args[:n_p])
+            os_ = jax.tree_util.tree_unflatten(o_tree, args[n_p:n_p + n_o])
+            tokens = args[n_p + n_o]
+            new_p, new_o, loss = M.train_step(cfg_i, ADAM, ps, os_, tokens)
+            return tuple(
+                jax.tree_util.tree_leaves(new_p)
+                + jax.tree_util.tree_leaves(new_o)
+                + [loss]
+            )
+
+        return step_fn
+
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(0, cfg.vocab_size, size=(batch, cfg.max_seq)).astype(np.int32)
+    inputs = (
+        [(f"p_{n}", np.asarray(v)) for n, v in zip(p_names, p_leaves)]
+        + [(f"o_{n}", np.asarray(v)) for n, v in zip(o_names, o_leaves)]
+        + [("tokens", tokens)]
+    )
+    variants = [("flash2", "")] if profile == "test" else [
+        ("flash2", ""), ("reference", "_refattn")
+    ]
+    for impl, suffix in variants:
+        ex.add(
+            f"{model_name}_train_step{suffix}",
+            make_train_step(impl),
+            inputs,
+            kind="train_step",
+            meta={**cfg_meta, "attention_impl": impl},
+            golden=(model_name == "tiny" and impl == "flash2"),
+            donate_argnums=tuple(range(n_p + n_o)),
+        )
+
+    # --- serving: prefill + decode (tiny model only; serving example) ---
+    if model_name != "tiny":
+        return
+    for b in (1, 4):
+        n_prompt = cfg.max_seq // 2
+
+        def prefill_fn(*args):
+            ps = jax.tree_util.tree_unflatten(p_tree, args[:n_p])
+            toks = args[n_p]
+            logits, cache = M.prefill(cfg, ps, toks)
+            return logits, cache["k"], cache["v"]
+
+        toks = rng.integers(0, cfg.vocab_size, size=(b, n_prompt)).astype(np.int32)
+        ex.add(
+            f"{model_name}_prefill_b{b}", prefill_fn,
+            [(f"p_{n}", np.asarray(v)) for n, v in zip(p_names, p_leaves)]
+            + [("tokens", toks)],
+            kind="prefill",
+            meta={**cfg_meta, "batch": b, "prompt_len": n_prompt},
+        )
+
+        def decode_fn(*args):
+            ps = jax.tree_util.tree_unflatten(p_tree, args[:n_p])
+            k_cache, v_cache, token, pos = args[n_p:]
+            logits, cache = M.decode_step(
+                cfg, ps, {"k": k_cache, "v": v_cache}, token, pos
+            )
+            return logits, cache["k"], cache["v"]
+
+        cache_shape = (cfg.n_layer, b, cfg.n_kv_head, cfg.max_seq, cfg.d_head)
+        k_cache = np.zeros(cache_shape, np.float32)
+        v_cache = np.zeros(cache_shape, np.float32)
+        token = rng.integers(0, cfg.vocab_size, size=(b,)).astype(np.int32)
+        pos = np.full((b,), n_prompt, np.int32)
+        ex.add(
+            f"{model_name}_decode_b{b}", decode_fn,
+            [(f"p_{n}", np.asarray(v)) for n, v in zip(p_names, p_leaves)]
+            + [("k_cache", k_cache), ("v_cache", v_cache),
+               ("token", token), ("pos", pos)],
+            kind="decode",
+            meta={**cfg_meta, "batch": b},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", choices=["full", "test"], default="full")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out_dir)
+    print(f"[aot] profile={args.profile} -> {args.out_dir}")
+    export_attention(ex, args.profile)
+    export_model(ex, "tiny", args.profile)
+    if args.profile == "full":
+        export_model(ex, "small", args.profile)
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""FlashAttention-2 Pallas kernels (L1) and their pure-jnp oracle."""
+
+from .ref import attention_ref, attention_ref_bwd, attention_ref_vjp, expand_kv_heads
+from .flash2 import BlockSizes, flash2_fwd, flash2_bwd, flash_attention
+from .flash1 import flash1_fwd
+from .splitk import splitk_fwd, splitk_fwd_partial, combine_partials
+
+__all__ = [
+    "attention_ref", "attention_ref_bwd", "attention_ref_vjp", "expand_kv_heads",
+    "BlockSizes", "flash2_fwd", "flash2_bwd", "flash_attention",
+    "flash1_fwd", "splitk_fwd", "splitk_fwd_partial", "combine_partials",
+]

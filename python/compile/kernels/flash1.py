@@ -1,0 +1,147 @@
+"""FlashAttention-1 style forward kernel — the non-matmul-FLOPs ablation.
+
+Differences from ``flash2.py`` (each one is a paper section 3.1.1 tweak that
+FlashAttention-2 *removes*):
+
+1. **Per-iteration rescale**: after every KV block the output accumulator is
+   brought back to the fully-normalized form ``diag(l)^-1 O`` — two extra
+   rows of non-matmul work (a divide and a multiply over the whole ``Bq x d``
+   accumulator) per iteration, versus FA2's single rescale after the loop.
+2. **Both softmax statistics stored**: the kernel writes the row max ``m``
+   AND the row sum-of-exponentials ``l`` to HBM (2N floats) instead of the
+   single logsumexp ``L`` (N floats).
+
+The final output is bit-wise *mathematically* identical to FA2 (the tests
+assert allclose); only the FLOP mix and the saved statistics differ.  The
+occupancy/loop-order differences of FA1 (grid over batch x heads only) are
+modeled in the Rust `gpusim` substrate, where they belong — on the real GPU
+they are scheduling properties, not arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .flash2 import BlockSizes, NEG_INF, _pad_seq
+
+__all__ = ["flash1_fwd"]
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal, block_k, n_k):
+    block_q, d = q_ref.shape
+    i = pl.program_id(2)
+    n_k_pad = k_ref.shape[0]
+    num_kv_blocks = n_k_pad // block_k
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    if causal:
+        hi = lax.min(
+            lax.div((i + 1) * block_q + block_k - 1, block_k), num_kv_blocks
+        )
+    else:
+        hi = num_kv_blocks
+
+    def body(j, carry):
+        o_scaled, m, l = carry
+        k_blk = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+
+        rows = i * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = j * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        if causal:
+            keep = jnp.logical_and(cols <= rows, cols < n_k)
+        else:
+            keep = cols < n_k
+        # FA1 applies the mask unconditionally (no diagonal-only tweak).
+        s = jnp.where(keep, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p_sum = jnp.sum(p, axis=-1)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p_sum
+        # FA1-style update: the accumulator is kept FULLY NORMALIZED at every
+        # step — rescale the old value by l*alpha/l_new and the new
+        # contribution by 1/l_new.  This is the extra non-matmul work FA2
+        # deletes (one multiply + one divide over Bq x d per iteration).
+        l_new_safe = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_scaled = (
+            o_scaled * (l * alpha / l_new_safe)[:, None]
+            + jnp.dot(p, v_blk, preferred_element_type=jnp.float32)
+            / l_new_safe[:, None]
+        )
+        return o_scaled, m_new, l_new
+
+    o0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    o_scaled, m, l = lax.fori_loop(0, hi, body, (o0, m0, l0))
+
+    o_ref[...] = o_scaled.astype(o_ref.dtype)
+    # FA1 stores BOTH statistics (2N floats of HBM traffic vs FA2's N).
+    m_ref[...] = jnp.where(jnp.isfinite(m), m, 0.0)
+    l_ref[...] = l
+
+
+def flash1_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    block_sizes: BlockSizes = BlockSizes(),
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """FlashAttention-1-style forward. Returns ``(O, m, l)``."""
+    b, hq, n_q, d = q.shape
+    _, hk, n_k, _ = k.shape
+    if causal and n_q != n_k:
+        raise ValueError("causal kernel requires square attention")
+    group = hq // hk
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_sizes.block_q, n_q)
+    bk = min(block_sizes.block_k, n_k)
+    qp = _pad_seq(q, 2, bq)
+    kp = _pad_seq(k, 2, bk)
+    vp = _pad_seq(v, 2, bk)
+    n_q_pad, n_k_pad = qp.shape[2], kp.shape[2]
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, block_k=bk, n_k=n_k
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q_pad // bq),
+        in_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec(
+                (None, None, n_k_pad, d), lambda b_, h, i: (b_, h // group, 0, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, n_k_pad, d), lambda b_, h, i: (b_, h // group, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec((None, None, bq), lambda b_, h, i: (b_, h, i)),
+            pl.BlockSpec((None, None, bq), lambda b_, h, i: (b_, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, n_q_pad, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, n_q_pad), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, n_q_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return o[:, :, :n_q], m[:, :, :n_q], l[:, :, :n_q]

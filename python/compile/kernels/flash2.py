@@ -1,0 +1,517 @@
+"""FlashAttention-2 forward and backward Pallas kernels (paper Alg. 1 & 2).
+
+Hardware adaptation (see DESIGN.md section "Hardware adaptation"): the paper's
+CUDA concepts map onto Pallas as
+
+* thread-block tile      -> ``pl.BlockSpec`` (the HBM<->VMEM schedule),
+* grid over (batch, head, Q-block) -> the paper's *sequence-length
+  parallelism* (section 3.2): every Q row-block is an independent grid cell,
+* split-Q warp layout    -> each grid cell owns its output row-block outright
+  and never exchanges partial sums (the analogue of avoiding "split-K";
+  the split-K ablation lives in ``splitk.py``),
+* tensor-core MXU        -> ``jnp.dot(..., preferred_element_type=f32)``.
+
+Paper-faithful algorithmic details implemented here:
+
+* **Deferred rescale** (section 3.1.1 tweak #1): the output accumulator is kept
+  *unscaled*; ``diag(l)^-1`` is applied once after the KV loop, not per
+  iteration (``flash1.py`` implements the per-iteration variant for the
+  non-matmul-FLOPs ablation).
+* **Logsumexp only** (tweak #2): the forward stores a single statistic
+  ``L = m + log(l)`` per row; the backward recomputes ``P = exp(S - L)``.
+* **Causal block skipping** (section 3.1.1 "Causal masking"): for causal
+  attention the KV loop of row-block ``i`` runs only to
+  ``ceil((i+1)*Bq / Bk)`` — blocks entirely above the diagonal are never
+  computed (the ~1.7-1.8x claimed speedup), and the elementwise mask is
+  applied *only* to blocks that straddle the diagonal (``lax.cond``).
+* **Backward parallelism** (section 3.2): dK/dV are computed by a kernel
+  gridded over KV column-blocks (each grid cell owns one dK_j/dV_j block);
+  dQ is computed by a second kernel gridded over Q row-blocks.  CUDA FA2
+  updates dQ with atomic adds across thread blocks; Pallas has no cross-cell
+  atomics, so the dQ reduction is restructured as an independent row-parallel
+  kernel — same arithmetic, same parallel width, no data races by
+  construction.
+* **GQA/MQA** (section 3.1.2): KV head indices are manipulated in the
+  BlockSpec ``index_map`` (no duplication of K/V in memory); backward sums
+  dK/dV over the query heads sharing a KV head.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and lower to plain HLO, which is what ``aot.py`` exports for the
+Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "BlockSizes",
+    "flash2_fwd",
+    "flash2_bwd",
+    "flash_attention",
+    "DEFAULT_BLOCK_Q",
+    "DEFAULT_BLOCK_K",
+]
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+NEG_INF = float("-inf")
+
+
+class BlockSizes(NamedTuple):
+    """Tile sizes: the Pallas analogue of the paper's {64,128}x{64,128} sweep."""
+
+    block_q: int = DEFAULT_BLOCK_Q
+    block_k: int = DEFAULT_BLOCK_K
+
+
+def _pad_len(n: int, b: int) -> int:
+    return (b - n % b) % b
+
+
+def _pad_seq(x: jax.Array, axis: int, block: int, value: float = 0.0) -> jax.Array:
+    pad = _pad_len(x.shape[axis], block)
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, causal, block_k, n_k):
+    """One grid cell = one (batch, head, Q row-block): Alg. 1 lines 4-15."""
+    block_q, d = q_ref.shape
+    i = pl.program_id(2)  # Q row-block index (seqlen parallelism)
+    n_k_pad = k_ref.shape[0]
+    num_kv_blocks = n_k_pad // block_k
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    # Causal block skipping: only KV blocks with any column <= the last row
+    # of this Q block are visited.  hi is dynamic (depends on program_id) —
+    # this *is* the paper's "skip ~half the blocks".
+    if causal:
+        hi = lax.min(
+            lax.div((i + 1) * block_q + block_k - 1, block_k), num_kv_blocks
+        )
+    else:
+        hi = num_kv_blocks
+
+    def body(j, carry):
+        o_acc, m, l = carry
+        k_blk = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)  # (Bq, Bk)
+
+        # Elementwise mask is applied only when this block straddles the
+        # causal diagonal or contains the padded KV tail (tweak: non-diagonal
+        # blocks skip the mask entirely).
+        rows = i * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = j * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        needs_tail = (j + 1) * block_k > n_k
+        if causal:
+            needs_diag = (j + 1) * block_k - 1 > i * block_q
+            needs_mask = jnp.logical_or(needs_diag, needs_tail)
+            keep = jnp.logical_and(cols <= rows, cols < n_k)
+        else:
+            needs_mask = needs_tail
+            keep = cols < n_k
+        s = lax.cond(
+            needs_mask,
+            lambda s_: jnp.where(keep, s_, NEG_INF),
+            lambda s_: s_,
+            s,
+        )
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])  # masked entries: exp(-inf)=0
+        alpha = jnp.exp(m - m_new)  # exp(-inf - m_new) = 0 on first visit
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        # Deferred rescale: accumulator stays UNSCALED (no diag(l)^-1 here).
+        o_acc = o_acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return o_acc, m_new, l_new
+
+    o_acc = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    o_acc, m, l = lax.fori_loop(0, hi, body, (o_acc, m0, l0))
+
+    # Single final rescale (Alg. 1 line 12) + logsumexp (line 13).
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (o_acc / l_safe[:, None]).astype(o_ref.dtype)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    lse_ref[...] = (m_safe + jnp.log(l_safe)).astype(jnp.float32)
+
+
+def flash2_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    block_sizes: BlockSizes = BlockSizes(),
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """FlashAttention-2 forward pass (paper Algorithm 1).
+
+    Args/shape conventions match :func:`..kernels.ref.attention_ref`; returns
+    ``(O, L)`` with ``L`` the row-wise logsumexp in f32.
+    """
+    b, hq, n_q, d = q.shape
+    _, hk, n_k, _ = k.shape
+    if causal and n_q != n_k:
+        raise ValueError("causal kernel requires square attention (n_q == n_k)")
+    if hq % hk != 0:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hk}")
+    group = hq // hk
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_sizes.block_q, n_q)
+    bk = min(block_sizes.block_k, n_k)
+    qp = _pad_seq(q, 2, bq)
+    kp = _pad_seq(k, 2, bk)
+    vp = _pad_seq(v, 2, bk)
+    n_q_pad, n_k_pad = qp.shape[2], kp.shape[2]
+    grid = (b, hq, n_q_pad // bq)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, block_k=bk, n_k=n_k
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            # GQA: the KV head index is derived from the Q head index here,
+            # in the index_map — K/V are never duplicated in memory.
+            pl.BlockSpec(
+                (None, None, n_k_pad, d), lambda b_, h, i: (b_, h // group, 0, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, n_k_pad, d), lambda b_, h, i: (b_, h // group, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec((None, None, bq), lambda b_, h, i: (b_, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, n_q_pad, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, n_q_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return o[:, :, :n_q], lse[:, :, :n_q]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def _precompute_d_kernel(o_ref, do_ref, d_ref):
+    """Alg. 2 line 4: D = rowsum(dO o O), written to HBM once per row."""
+    o = o_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    d_ref[...] = jnp.sum(o * do, axis=-1)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dk_ref, dv_ref,
+    *, scale, causal, block_q, n_q, n_k,
+):
+    """One grid cell = one KV column-block: Alg. 2 lines 6-18 (dK_j, dV_j).
+
+    This is the paper's backward seqlen-parallelism: column blocks are
+    independent workers (Fig. 2 right).
+    """
+    block_k, d = k_ref.shape
+    j = pl.program_id(2)
+    n_q_pad = q_ref.shape[0]
+    num_q_blocks = n_q_pad // block_q
+
+    k_blk = k_ref[...].astype(jnp.float32)
+    v_blk = v_ref[...].astype(jnp.float32)
+
+    # Causal block skipping, transposed: rows strictly above this column
+    # block's start can be skipped (their P entries are all zero).
+    if causal:
+        lo = lax.div(j * block_k, block_q)
+    else:
+        lo = 0
+
+    def body(i, carry):
+        dk_acc, dv_acc = carry
+        q_blk = q_ref[pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        do_blk = do_ref[pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        lse_blk = lse_ref[pl.ds(i * block_q, block_q)]
+        d_blk = d_ref[pl.ds(i * block_q, block_q)]
+
+        s = jnp.dot(q_blk, k_blk.T, preferred_element_type=jnp.float32) * scale
+        p = jnp.exp(s - lse_blk[:, None])  # recompute P from L (no P stored)
+
+        rows = i * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = j * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        needs_tail = jnp.logical_or((i + 1) * block_q > n_q, (j + 1) * block_k > n_k)
+        if causal:
+            needs_diag = (j + 1) * block_k - 1 > i * block_q
+            needs_mask = jnp.logical_or(needs_diag, needs_tail)
+            keep = jnp.logical_and(
+                cols <= rows, jnp.logical_and(rows < n_q, cols < n_k)
+            )
+        else:
+            needs_mask = needs_tail
+            keep = jnp.logical_and(rows < n_q, cols < n_k)
+        p = lax.cond(
+            needs_mask,
+            lambda p_: jnp.where(keep, p_, 0.0),
+            lambda p_: p_,
+            p,
+        )
+
+        dv_acc = dv_acc + jnp.dot(p.T, do_blk, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do_blk, v_blk.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - d_blk[:, None]) * scale
+        dk_acc = dk_acc + jnp.dot(ds.T, q_blk, preferred_element_type=jnp.float32)
+        return dk_acc, dv_acc
+
+    dk0 = jnp.zeros((block_k, d), jnp.float32)
+    dv0 = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = lax.fori_loop(lo, num_q_blocks, body, (dk0, dv0))
+    dk_ref[...] = dk
+    dv_ref[...] = dv
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dq_ref,
+    *, scale, causal, block_k, n_k,
+):
+    """One grid cell = one Q row-block: the dQ half of Alg. 2.
+
+    CUDA FA2 accumulates dQ_i across column-block workers with atomic adds;
+    here dQ_i is owned by a single grid cell that loops over KV blocks —
+    identical arithmetic, no atomics (Pallas/TPU adaptation).
+    """
+    block_q, d = q_ref.shape
+    i = pl.program_id(2)
+    n_k_pad = k_ref.shape[0]
+    num_kv_blocks = n_k_pad // block_k
+
+    q_blk = q_ref[...].astype(jnp.float32)
+    do_blk = do_ref[...].astype(jnp.float32)
+    lse_blk = lse_ref[...]
+    d_blk = d_ref[...]
+
+    if causal:
+        hi = lax.min(
+            lax.div((i + 1) * block_q + block_k - 1, block_k), num_kv_blocks
+        )
+    else:
+        hi = num_kv_blocks
+
+    def body(j, dq_acc):
+        k_blk = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q_blk, k_blk.T, preferred_element_type=jnp.float32) * scale
+        p = jnp.exp(s - lse_blk[:, None])
+
+        rows = i * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = j * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        needs_tail = (j + 1) * block_k > n_k
+        if causal:
+            needs_diag = (j + 1) * block_k - 1 > i * block_q
+            needs_mask = jnp.logical_or(needs_diag, needs_tail)
+            keep = jnp.logical_and(cols <= rows, cols < n_k)
+        else:
+            needs_mask = needs_tail
+            keep = cols < n_k
+        p = lax.cond(
+            needs_mask,
+            lambda p_: jnp.where(keep, p_, 0.0),
+            lambda p_: p_,
+            p,
+        )
+
+        dp = jnp.dot(do_blk, v_blk.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - d_blk[:, None]) * scale
+        return dq_acc + jnp.dot(ds, k_blk, preferred_element_type=jnp.float32)
+
+    dq = lax.fori_loop(0, hi, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = dq
+
+
+def flash2_bwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    lse: jax.Array,
+    do: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    block_sizes: BlockSizes = BlockSizes(),
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """FlashAttention-2 backward pass (paper Algorithm 2)."""
+    b, hq, n_q, d = q.shape
+    _, hk, n_k, _ = k.shape
+    group = hq // hk
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_sizes.block_q, n_q)
+    bk = min(block_sizes.block_k, n_k)
+    qp = _pad_seq(q, 2, bq)
+    op = _pad_seq(o, 2, bq)
+    dop = _pad_seq(do, 2, bq)
+    # Padded rows get lse=+inf so their recomputed P is exactly zero and they
+    # contribute nothing to dK/dV.
+    lsep = _pad_seq(lse, 2, bq, value=float("inf"))
+    kp = _pad_seq(k, 2, bk)
+    vp = _pad_seq(v, 2, bk)
+    n_q_pad, n_k_pad = qp.shape[2], kp.shape[2]
+
+    # --- D = rowsum(dO o O) (Alg. 2 line 4), its own tiny kernel/grid ---
+    d_vec = pl.pallas_call(
+        _precompute_d_kernel,
+        grid=(b, hq, n_q_pad // bq),
+        in_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, bq), lambda b_, h, i: (b_, h, i)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, n_q_pad), jnp.float32),
+        interpret=interpret,
+    )(op, dop)
+
+    # --- dK/dV: grid over KV column blocks (Fig. 2 right) ---
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, scale=scale, causal=causal, block_q=bq, n_q=n_q, n_k=n_k
+    )
+    dk_per_qhead, dv_per_qhead = pl.pallas_call(
+        dkv_kernel,
+        grid=(b, hq, n_k_pad // bk),
+        in_specs=[
+            pl.BlockSpec((None, None, n_q_pad, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec(
+                (None, None, bk, d), lambda b_, h, j: (b_, h // group, j, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, bk, d), lambda b_, h, j: (b_, h // group, j, 0)
+            ),
+            pl.BlockSpec((None, None, n_q_pad, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((None, None, n_q_pad), lambda b_, h, j: (b_, h, 0)),
+            pl.BlockSpec((None, None, n_q_pad), lambda b_, h, j: (b_, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((None, None, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, n_k_pad, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, n_k_pad, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, d_vec)
+
+    # GQA: sum dK/dV over the query heads that share each KV head.
+    if group > 1:
+        dk = dk_per_qhead.reshape(b, hk, group, n_k_pad, d).sum(axis=2)
+        dv = dv_per_qhead.reshape(b, hk, group, n_k_pad, d).sum(axis=2)
+    else:
+        dk, dv = dk_per_qhead, dv_per_qhead
+
+    # --- dQ: grid over Q row blocks (atomic-free restructuring) ---
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, scale=scale, causal=causal, block_k=bk, n_k=n_k
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(b, hq, n_q_pad // bq),
+        in_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec(
+                (None, None, n_k_pad, d), lambda b_, h, i: (b_, h // group, 0, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, n_k_pad, d), lambda b_, h, i: (b_, h // group, 0, 0)
+            ),
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec((None, None, bq), lambda b_, h, i: (b_, h, i)),
+            pl.BlockSpec((None, None, bq), lambda b_, h, i: (b_, h, i)),
+        ],
+        out_specs=pl.BlockSpec((None, None, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, n_q_pad, d), jnp.float32),
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, d_vec)
+
+    return (
+        dq[:, :, :n_q].astype(q.dtype),
+        dk[:, :, :n_k].astype(k.dtype),
+        dv[:, :, :n_k].astype(v.dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper: what the L2 model calls
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = False,
+    scale: float | None = None,
+    block_sizes: BlockSizes = BlockSizes(),
+    interpret: bool = True,
+) -> jax.Array:
+    """Differentiable FlashAttention-2: fwd = Alg. 1, bwd = Alg. 2."""
+    o, _ = flash2_fwd(
+        q, k, v, causal=causal, scale=scale, block_sizes=block_sizes,
+        interpret=interpret,
+    )
+    return o
+
+
+def _fa_fwd(q, k, v, causal, scale, block_sizes, interpret):
+    o, lse = flash2_fwd(
+        q, k, v, causal=causal, scale=scale, block_sizes=block_sizes,
+        interpret=interpret,
+    )
+    # Residuals: Q,K,V,O and the single logsumexp vector — exactly what the
+    # paper stores (O(N) extra memory, section 3.1.1).
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, scale, block_sizes, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash2_bwd(
+        q, k, v, o, lse, do, causal=causal, scale=scale,
+        block_sizes=block_sizes, interpret=interpret,
+    )
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,180 @@
+"""Pure-jnp correctness oracle for FlashAttention-2.
+
+This module is the ground truth every Pallas kernel is tested against:
+
+* :func:`attention_ref`        -- numerically-stable standard attention fwd,
+                                  returning both the output ``O`` and the
+                                  row-wise logsumexp ``L`` (the only softmax
+                                  statistic FlashAttention-2 stores, paper
+                                  section 3.1.1 tweak #2).
+* :func:`attention_ref_bwd`    -- hand-derived backward pass following the
+                                  chain rule in paper section 2.2, written
+                                  with the same ``D = rowsum(dO o O)``
+                                  simplification Algorithm 2 uses.
+* :func:`attention_ref_vjp`    -- jax.vjp-based gradients, used as a second,
+                                  independent oracle for the hand-derived
+                                  backward.
+
+All functions operate on ``(batch, heads, seqlen, head_dim)`` arrays and
+support causal masking and grouped-query attention (KV heads fewer than Q
+heads, paper section 3.1.2 "Multi-query attention and grouped-query
+attention").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "attention_ref_bwd",
+    "attention_ref_vjp",
+    "expand_kv_heads",
+]
+
+
+def expand_kv_heads(kv: jax.Array, n_q_heads: int) -> jax.Array:
+    """Explicitly duplicate KV heads so K/V match the query head count.
+
+    The paper implements GQA/MQA by *implicitly* manipulating head indices;
+    the oracle does the explicit duplication instead (same math, simpler to
+    audit).  ``n_q_heads`` must be a multiple of the KV head count.
+    """
+    n_kv = kv.shape[1]
+    if n_kv == n_q_heads:
+        return kv
+    if n_q_heads % n_kv != 0:
+        raise ValueError(f"q heads {n_q_heads} not a multiple of kv heads {n_kv}")
+    reps = n_q_heads // n_kv
+    return jnp.repeat(kv, reps, axis=1)
+
+
+def _causal_mask(n_q: int, n_k: int, dtype) -> jax.Array:
+    """Additive causal mask: 0 where j <= i, -inf where j > i.
+
+    Supports rectangular S (n_q != n_k) by right-aligning the query block,
+    matching the convention used for KV-cache decoding (query position i
+    corresponds to absolute position n_k - n_q + i).
+    """
+    offset = n_k - n_q
+    rows = jnp.arange(n_q)[:, None] + offset
+    cols = jnp.arange(n_k)[None, :]
+    return jnp.where(cols <= rows, 0.0, -jnp.inf).astype(dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Standard attention with a numerically stable softmax.
+
+    Args:
+      q: ``(B, Hq, Nq, D)`` queries.
+      k: ``(B, Hk, Nk, D)`` keys   (``Hk`` divides ``Hq`` for GQA/MQA).
+      v: ``(B, Hk, Nk, D)`` values.
+      causal: apply the autoregressive mask (entries with j > i set to -inf).
+      scale: softmax temperature; defaults to ``1/sqrt(D)``.
+
+    Returns:
+      ``(O, L)`` where ``O`` is ``(B, Hq, Nq, D)`` and ``L`` is the row-wise
+      logsumexp ``(B, Hq, Nq)`` of the *scaled, masked* scores -- exactly the
+      statistic FlashAttention-2's backward pass consumes.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    hq = q.shape[1]
+    k = expand_kv_heads(k, hq)
+    v = expand_kv_heads(v, hq)
+
+    # All softmax statistics in f32 regardless of input dtype (the kernels
+    # accumulate in f32 on the MXU the same way).
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if causal:
+        s = s + _causal_mask(q.shape[2], k.shape[2], s.dtype)[None, None]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # Guard fully-masked rows (can only happen with empty KV): exp(-inf - -inf).
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe)
+    ell = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    o = o / ell
+    lse = (m_safe + jnp.log(ell))[..., 0]
+    return o.astype(q.dtype), lse
+
+
+def attention_ref_bwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    lse: jax.Array,
+    do: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Hand-derived attention backward using only the logsumexp statistic.
+
+    Implements the math of Algorithm 2 without tiling:
+
+      P  = exp(S - L)                (recomputed, not stored)
+      dV = P^T dO
+      dP = dO V^T
+      D  = rowsum(dO o O)
+      dS = P o (dP - D)
+      dQ = dS K * scale
+      dK = dS^T Q * scale
+
+    For GQA the dK/dV of implicitly-duplicated heads are summed back into
+    the shared KV head (paper section 3.1.2).
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    hq, hk = q.shape[1], k.shape[1]
+    kx = expand_kv_heads(k, hq)
+    vx = expand_kv_heads(v, hq)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kx, preferred_element_type=jnp.float32)
+    s = s * scale
+    if causal:
+        s = s + _causal_mask(q.shape[2], kx.shape[2], s.dtype)[None, None]
+    p = jnp.exp(s - lse[..., None])  # (B,Hq,Nq,Nk); rows of P sum to 1
+
+    do32 = do.astype(jnp.float32)
+    o32 = o.astype(jnp.float32)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, do32)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", do32, vx.astype(jnp.float32))
+    d_vec = jnp.sum(do32 * o32, axis=-1, keepdims=True)  # D = rowsum(dO o O)
+    ds = p * (dp - d_vec)
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kx.astype(jnp.float32)) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(jnp.float32)) * scale
+
+    if hk != hq:
+        reps = hq // hk
+        dk = dk.reshape(dk.shape[0], hk, reps, *dk.shape[2:]).sum(axis=2)
+        dv = dv.reshape(dv.shape[0], hk, reps, *dv.shape[2:]).sum(axis=2)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def attention_ref_vjp(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    do: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Independent oracle: gradients via jax autodiff of the reference fwd."""
+
+    def f(q_, k_, v_):
+        return attention_ref(q_, k_, v_, causal=causal, scale=scale)[0]
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(do)

@@ -1,0 +1,204 @@
+"""Split-K attention forward — the work-partitioning ablation (paper §3.3).
+
+FlashAttention-1 splits **K/V across warps** ("split-K"): every warp computes
+a partial, differently-normalized output for the *same* rows, and the partials
+must be exchanged through shared memory and combined.  FlashAttention-2 splits
+**Q across warps** so each warp owns its rows outright (no exchange) — that is
+what ``flash2.py`` does at grid level.
+
+This module implements the split-K scheme in Pallas so the cost of the
+exchange is real and measurable on our substrate:
+
+* ``splitk_fwd_partial`` grids over ``(batch, head, Q-block, KV-chunk)``;
+  each cell produces an *unscaled* partial output plus its local softmax
+  statistics ``(O~, m, l)`` — the analogue of a warp's private accumulator.
+* ``combine_partials`` is the "shared-memory exchange": a second pass that
+  merges the per-chunk partials with the online-softmax algebra
+  ``O = (sum_s e^{m_s - m} O~_s) / (sum_s e^{m_s - m} l_s)``.
+
+The combine algebra is associative and commutative — the Rust `gpusim`
+substrate property-tests the same merge operator (mirrored in
+``rust/src/attn/combine.rs``).  This is also exactly the flash-decoding
+decomposition, so the serving example reuses it for long-context decode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .flash2 import BlockSizes, NEG_INF, _pad_seq
+
+__all__ = ["splitk_fwd_partial", "combine_partials", "splitk_fwd"]
+
+
+def _partial_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, causal, block_k, n_k, kv_chunk):
+    """One (Q-block, KV-chunk) cell: local online softmax over the chunk."""
+    block_q, d = q_ref.shape
+    i = pl.program_id(2)  # Q block
+    s_idx = pl.program_id(3)  # KV chunk ("warp")
+    chunk_blocks = kv_chunk // block_k
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(jj, carry):
+        o_acc, m, l = carry
+        j = s_idx * chunk_blocks + jj  # global KV block index
+        k_blk = k_ref[pl.ds(jj * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.ds(jj * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+
+        rows = i * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = j * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        if causal:
+            keep = jnp.logical_and(cols <= rows, cols < n_k)
+        else:
+            keep = cols < n_k
+        s = jnp.where(keep, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(
+            jnp.isfinite(s), jnp.exp(s - m_safe[:, None]), 0.0
+        )
+        alpha = jnp.where(
+            jnp.isfinite(m), jnp.exp(m - m_safe), 0.0
+        )
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        o_acc = o_acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return o_acc, m_new, l_new
+
+    o0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    o_acc, m, l = lax.fori_loop(0, chunk_blocks, body, (o0, m0, l0))
+
+    # Unscaled partials written out — this extra O(B*H*N*d*n_split) traffic is
+    # the split-K exchange cost FA2 eliminates.
+    o_ref[...] = o_acc
+    m_ref[...] = m
+    l_ref[...] = l
+
+
+def splitk_fwd_partial(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    n_split: int,
+    causal: bool = False,
+    scale: float | None = None,
+    block_sizes: BlockSizes = BlockSizes(),
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compute per-chunk partials ``(O~, m, l)``.
+
+    Returns arrays with a leading split axis: ``O~ (S,B,H,Nq,d)``,
+    ``m, l (S,B,H,Nq)``.
+    """
+    b, hq, n_q, d = q.shape
+    _, hk, n_k, _ = k.shape
+    group = hq // hk
+    if causal and n_q != n_k:
+        raise ValueError("causal kernel requires square attention")
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_sizes.block_q, n_q)
+    bk = min(block_sizes.block_k, n_k)
+    qp = _pad_seq(q, 2, bq)
+    kp = _pad_seq(k, 2, bk)
+    vp = _pad_seq(v, 2, bk)
+    n_q_pad, n_k_pad = qp.shape[2], kp.shape[2]
+
+    # KV chunk per split, in whole blocks; pad KV so chunks divide evenly.
+    blocks_total = n_k_pad // bk
+    chunk_blocks = -(-blocks_total // n_split)
+    kv_chunk = chunk_blocks * bk
+    kp = _pad_seq(kp, 2, kv_chunk * n_split)
+    vp = _pad_seq(vp, 2, kv_chunk * n_split)
+
+    kernel = functools.partial(
+        _partial_kernel, scale=scale, causal=causal, block_k=bk, n_k=n_k,
+        kv_chunk=kv_chunk,
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q_pad // bq, n_split),
+        in_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h, i, s: (b_, h, i, 0)),
+            pl.BlockSpec(
+                (None, None, kv_chunk, d),
+                lambda b_, h, i, s: (b_, h // group, s, 0),
+            ),
+            pl.BlockSpec(
+                (None, None, kv_chunk, d),
+                lambda b_, h, i, s: (b_, h // group, s, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (None, None, None, bq, d), lambda b_, h, i, s: (s, b_, h, i, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, None, bq), lambda b_, h, i, s: (s, b_, h, i)
+            ),
+            pl.BlockSpec(
+                (None, None, None, bq), lambda b_, h, i, s: (s, b_, h, i)
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_split, b, hq, n_q_pad, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_split, b, hq, n_q_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_split, b, hq, n_q_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return o[:, :, :, :n_q], m[:, :, :, :n_q], l[:, :, :, :n_q]
+
+
+def combine_partials(
+    o_parts: jax.Array, m_parts: jax.Array, l_parts: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Merge split-K partials: the "shared-memory exchange" pass.
+
+    ``O = (sum_s e^{m_s - m} O~_s) / (sum_s e^{m_s - m} l_s)``,
+    ``L = m + log(sum_s e^{m_s - m} l_s)``.
+    """
+    m = jnp.max(m_parts, axis=0)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    w = jnp.where(
+        jnp.isfinite(m_parts), jnp.exp(m_parts - m_safe[None]), 0.0
+    )
+    l = jnp.sum(w * l_parts, axis=0)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.sum(w[..., None] * o_parts, axis=0) / l_safe[..., None]
+    lse = m_safe + jnp.log(l_safe)
+    return o, lse
+
+
+def splitk_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    n_split: int = 4,
+    causal: bool = False,
+    scale: float | None = None,
+    block_sizes: BlockSizes = BlockSizes(),
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Full split-K forward: partials + combine. Returns ``(O, L)``."""
+    o_p, m_p, l_p = splitk_fwd_partial(
+        q, k, v, n_split=n_split, causal=causal, scale=scale,
+        block_sizes=block_sizes, interpret=interpret,
+    )
+    o, lse = combine_partials(o_p, m_p, l_p)
+    return o.astype(q.dtype), lse

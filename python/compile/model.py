@@ -1,0 +1,397 @@
+"""L2: GPT-style transformer in JAX, attention via the L1 FlashAttention-2
+kernels, plus the train/prefill/decode entry points that ``aot.py`` lowers to
+HLO for the Rust runtime.
+
+Everything here is build-time Python: the Rust coordinator only ever sees the
+lowered HLO text.  The model is deliberately framework-free (no flax/optax —
+neither is available offline, and inlining Adam keeps the *entire* training
+step inside one donated-buffer HLO executable, which is what the Table-1
+harness measures).
+
+Architecture (GPT-2/3 style, pre-LN):
+  token embedding + learned positional embedding
+  n_layer x [ LN -> MHA/GQA (FlashAttention-2, causal) -> residual
+              LN -> MLP (4x, GeLU)                     -> residual ]
+  final LN -> tied LM head (embedding transpose)
+Layers are stacked and scanned (``lax.scan``) so HLO size is O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import BlockSizes, attention_ref, flash_attention
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GPTConfig:
+    """Model + kernel configuration (mirrored by rust/src/config)."""
+
+    vocab_size: int = 8192
+    n_layer: int = 4
+    n_head: int = 8
+    n_kv_head: int = 8          # < n_head enables GQA; == 1 is MQA
+    d_model: int = 256
+    max_seq: int = 256
+    attention_impl: str = "flash2"  # "flash2" | "reference"
+    block_q: int = 128
+    block_k: int = 128
+    param_dtype: Any = jnp.float32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def n_params(self) -> int:
+        """Exact parameter count (used by the MFU accounting)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        d_kv = self.n_kv_head * self.d_head
+        per_layer = (
+            2 * d * d          # W_q, W_o
+            + 2 * d * d_kv     # W_k, W_v
+            + 2 * d * f        # W_in, W_out
+            + 3 * d + 2 * d_kv + f  # biases: bq, bo, b_out, bk, bv, b_in
+            + 4 * d            # 2 LN scale+bias
+        )
+        embed = v * d + self.max_seq * d
+        final_ln = 2 * d
+        return self.n_layer * per_layer + embed + final_ln
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: GPTConfig) -> Params:
+    """GPT-2 style init: N(0, 0.02), residual projections scaled by 1/sqrt(2L)."""
+    k_emb, k_pos, k_blocks = jax.random.split(key, 3)
+    std = 0.02
+    resid_std = std / math.sqrt(2 * cfg.n_layer)
+    d, dh = cfg.d_model, cfg.d_head
+    d_kv = cfg.n_kv_head * dh
+    L = cfg.n_layer
+    dt = cfg.param_dtype
+
+    def norm(key, shape, s):
+        return (jax.random.normal(key, shape) * s).astype(dt)
+
+    ks = jax.random.split(k_blocks, 8)
+    blocks = {
+        "ln1_g": jnp.ones((L, d), dt),
+        "ln1_b": jnp.zeros((L, d), dt),
+        "wq": norm(ks[0], (L, d, d), std),
+        "bq": jnp.zeros((L, d), dt),
+        "wk": norm(ks[1], (L, d, d_kv), std),
+        "bk": jnp.zeros((L, d_kv), dt),
+        "wv": norm(ks[2], (L, d, d_kv), std),
+        "bv": jnp.zeros((L, d_kv), dt),
+        "wo": norm(ks[3], (L, d, d), resid_std),
+        "bo": jnp.zeros((L, d), dt),
+        "ln2_g": jnp.ones((L, d), dt),
+        "ln2_b": jnp.zeros((L, d), dt),
+        "w_in": norm(ks[4], (L, d, cfg.d_ff), std),
+        "b_in": jnp.zeros((L, cfg.d_ff), dt),
+        "w_out": norm(ks[5], (L, cfg.d_ff, d), resid_std),
+        "b_out": jnp.zeros((L, d), dt),
+    }
+    return {
+        "wte": norm(k_emb, (cfg.vocab_size, d), std),
+        "wpe": norm(k_pos, (cfg.max_seq, d), std),
+        "ln_f_g": jnp.ones((d,), dt),
+        "ln_f_b": jnp.zeros((d,), dt),
+        "blocks": blocks,
+    }
+
+
+def count_params(params: Params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_head, d_head):
+    b, n, _ = x.shape
+    return x.reshape(b, n, n_head, d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _attention(cfg: GPTConfig, q, k, v, *, causal: bool):
+    """Dispatch to the FlashAttention-2 kernel or the jnp reference."""
+    if cfg.attention_impl == "flash2":
+        return flash_attention(
+            q, k, v, causal, None, BlockSizes(cfg.block_q, cfg.block_k), True
+        )
+    elif cfg.attention_impl == "reference":
+        return attention_ref(q, k, v, causal=causal)[0]
+    raise ValueError(f"unknown attention_impl {cfg.attention_impl!r}")
+
+
+def _block(cfg: GPTConfig, x, p, *, causal: bool = True):
+    """One pre-LN transformer block. x: (B, N, D)."""
+    h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = _split_heads(h @ p["wq"] + p["bq"], cfg.n_head, cfg.d_head)
+    k = _split_heads(h @ p["wk"] + p["bk"], cfg.n_kv_head, cfg.d_head)
+    v = _split_heads(h @ p["wv"] + p["bv"], cfg.n_kv_head, cfg.d_head)
+    o = _merge_heads(_attention(cfg, q, k, v, causal=causal))
+    x = x + (o @ p["wo"] + p["bo"])
+    h = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+    h = jax.nn.gelu(h @ p["w_in"] + p["b_in"])
+    return x + (h @ p["w_out"] + p["b_out"])
+
+
+def forward(cfg: GPTConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """tokens (B, N) int32 -> logits (B, N, vocab)."""
+    b, n = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:n][None]
+
+    def scan_body(x, layer_params):
+        return _block(cfg, x, layer_params), None
+
+    x, _ = lax.scan(scan_body, x, params["blocks"])
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    return x @ params["wte"].T  # tied head
+
+
+def loss_fn(cfg: GPTConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """Causal LM cross-entropy (next-token prediction), mean over tokens."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# Training step (inline Adam, donated state)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: Params) -> dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+    }
+
+
+def train_step(
+    cfg: GPTConfig,
+    adam: AdamConfig,
+    params: Params,
+    opt_state: dict,
+    tokens: jax.Array,
+) -> tuple[Params, dict, jax.Array]:
+    """One fused fwd+bwd+Adam update. AOT-lowered with donated params/state."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+
+    # Global-norm gradient clip.
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    clip = jnp.minimum(1.0, adam.grad_clip / (gnorm + 1e-6))
+    grads = jax.tree_util.tree_map(lambda g: g * clip, grads)
+
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - adam.beta1**t
+    bc2 = 1.0 - adam.beta2**t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = adam.beta1 * m + (1 - adam.beta1) * g32
+        v_new = adam.beta2 * v + (1 - adam.beta2) * g32 * g32
+        delta = adam.lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + adam.eps)
+        if adam.weight_decay:
+            delta = delta + adam.lr * adam.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, loss
+
+
+# ---------------------------------------------------------------------------
+# Inference: prefill + single-token decode with a fixed-size KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: GPTConfig, batch: int) -> dict:
+    shape = (cfg.n_layer, batch, cfg.n_kv_head, cfg.max_seq, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, jnp.float32),
+        "v": jnp.zeros(shape, jnp.float32),
+    }
+
+
+def _cached_attention(cfg, q, k_cache, v_cache, pos):
+    """Decode attention: one query row against cache[:pos+1].
+
+    Decode is memory-bound (a (1 x d) @ (d x N) matvec — no MXU win), so it
+    uses a masked dense softmax over the fixed-size cache; the causal
+    structure is enforced with a position mask, which keeps the HLO static
+    for AOT.  This is the flash-decoding regime; the split-K kernel covers
+    the long-context variant and is exercised in the serving bench.
+    """
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    from .kernels.ref import expand_kv_heads
+
+    k_cache = expand_kv_heads(k_cache, cfg.n_head)
+    v_cache = expand_kv_heads(v_cache, cfg.n_head)
+    s = jnp.einsum("bhd,bhnd->bhn", q, k_cache) * scale  # (B, H, max_seq)
+    idx = jnp.arange(cfg.max_seq)[None, None]
+    s = jnp.where(idx <= pos[:, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhn,bhnd->bhd", p, v_cache)
+
+
+def _block_decode(cfg, x, p, k_cache, v_cache, pos):
+    """One block for a single new token. x: (B, D); caches (B, Hkv, S, dh)."""
+    h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = (h @ p["wq"] + p["bq"]).reshape(-1, cfg.n_head, cfg.d_head)
+    k = (h @ p["wk"] + p["bk"]).reshape(-1, cfg.n_kv_head, cfg.d_head)
+    v = (h @ p["wv"] + p["bv"]).reshape(-1, cfg.n_kv_head, cfg.d_head)
+    # Scatter this token's K/V into the cache at `pos` (per batch row).
+    b_idx = jnp.arange(k.shape[0])
+    k_cache = k_cache.at[b_idx, :, pos].set(k)
+    v_cache = v_cache.at[b_idx, :, pos].set(v)
+    o = _cached_attention(cfg, q, k_cache, v_cache, pos)
+    x = x + (o.reshape(-1, cfg.d_model) @ p["wo"] + p["bo"])
+    h = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+    h = jax.nn.gelu(h @ p["w_in"] + p["b_in"])
+    return x + (h @ p["w_out"] + p["b_out"]), k_cache, v_cache
+
+
+def prefill(
+    cfg: GPTConfig, params: Params, tokens: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Run the full prompt through the model, filling the KV cache.
+
+    tokens: (B, N) with N <= max_seq.  Returns (logits for last position,
+    cache dict).  Prefill attention uses the FA2 kernel (compute-bound).
+    """
+    b, n = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:n][None]
+    ks, vs = [], []
+
+    def scan_body(x, p):
+        h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+        q = _split_heads(h @ p["wq"] + p["bq"], cfg.n_head, cfg.d_head)
+        k = _split_heads(h @ p["wk"] + p["bk"], cfg.n_kv_head, cfg.d_head)
+        v = _split_heads(h @ p["wv"] + p["bv"], cfg.n_kv_head, cfg.d_head)
+        o = _merge_heads(_attention(cfg, q, k, v, causal=True))
+        x = x + (o @ p["wo"] + p["bo"])
+        h2 = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+        h2 = jax.nn.gelu(h2 @ p["w_in"] + p["b_in"])
+        return x + (h2 @ p["w_out"] + p["b_out"]), (k, v)
+
+    x, (k_all, v_all) = lax.scan(scan_body, x, params["blocks"])
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x[:, -1] @ params["wte"].T
+
+    pad = cfg.max_seq - n
+    cache = {
+        "k": jnp.pad(k_all, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        "v": jnp.pad(v_all, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+    }
+    return logits, cache
+
+
+def decode_step(
+    cfg: GPTConfig,
+    params: Params,
+    cache: dict,
+    token: jax.Array,  # (B,) int32
+    pos: jax.Array,    # (B,) int32 — position to write / attend through
+) -> tuple[jax.Array, dict]:
+    """Append one token per sequence and return next-token logits (B, vocab)."""
+    x = params["wte"][token] + params["wpe"][pos]
+
+    def scan_body(x, inputs):
+        p, k_cache, v_cache = inputs
+        x, k_new, v_new = _block_decode(cfg, x, p, k_cache, v_cache, pos)
+        return x, (k_new, v_new)
+
+    x, (k_all, v_all) = lax.scan(
+        scan_body, x, (params["blocks"], cache["k"], cache["v"])
+    )
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["wte"].T
+    return logits, {"k": k_all, "v": v_all}
+
+
+# ---------------------------------------------------------------------------
+# FLOPs accounting (paper section 4.2, the Megatron-LM formula)
+# ---------------------------------------------------------------------------
+
+
+def train_step_flops(cfg: GPTConfig, batch: int, seqlen: int) -> float:
+    """6 * seqlen * n_params + 12 * n_layer * d_model * seqlen^2, times batch.
+
+    This is the exact formula the paper uses for Table 1 (footnote: attention
+    term NOT halved for causal, "for consistency with the literature").
+    """
+    per_seq = (
+        6.0 * seqlen * cfg.n_params
+        + 12.0 * cfg.n_layer * cfg.d_model * float(seqlen) ** 2
+    )
+    return batch * per_seq
+
+
+def attention_flops(
+    seqlen: int, head_dim: int, n_heads: int, *, causal: bool, mode: str = "fwd"
+) -> float:
+    """Paper section 4.1 benchmark formula: 4 * N^2 * d * heads [/2 causal].
+
+    mode: "fwd" -> x1, "bwd" -> x2.5, "fwd_bwd" -> x3.5.
+    """
+    f = 4.0 * float(seqlen) ** 2 * head_dim * n_heads
+    if causal:
+        f /= 2
+    return {"fwd": f, "bwd": 2.5 * f, "fwd_bwd": 3.5 * f}[mode]

@@ -1,0 +1,73 @@
+"""FAT1: a tiny named-tensor binary format shared by python and rust.
+
+Used for golden test vectors (python writes, rust reads and compares after
+executing the same HLO artifact) and for initial checkpoint export.  numpy's
+.npy was avoided only because the offline rust side has no npy crate; FAT1 is
+~40 lines on each side.
+
+Layout (little-endian):
+  magic  b"FAT1"
+  u32    n_tensors
+  repeat n_tensors times:
+    u32      name_len, name (utf-8)
+    u8       dtype code (0=f32, 1=i32, 2=u32, 3=f64, 4=i64, 5=bf16 as u16)
+    u32      ndim
+    u64*ndim dims
+    bytes    raw data (C order)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_DTYPE_CODES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint32): 2,
+    np.dtype(np.float64): 3,
+    np.dtype(np.int64): 4,
+}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+def write_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"FAT1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            # NB: not ascontiguousarray — it promotes 0-d arrays to 1-d.
+            # tobytes() below always emits a C-order copy.
+            arr = np.asarray(arr)
+            if arr.dtype == np.bool_:
+                arr = arr.astype(np.int32)
+            if arr.dtype not in _DTYPE_CODES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _DTYPE_CODES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != b"FAT1":
+            raise ValueError(f"{path}: bad magic")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(ndim)]
+            dt = _CODE_DTYPES[code]
+            count = int(np.prod(dims)) if dims else 1
+            data = f.read(count * dt.itemsize)
+            out[name] = np.frombuffer(data, dtype=dt).reshape(dims).copy()
+    return out

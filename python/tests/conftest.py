@@ -1,0 +1,17 @@
+"""Shared fixtures: deterministic RNG helpers for kernel tests."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_qkv(rng, b, hq, hk, n_q, n_k, d, dtype=np.float32):
+    """Gaussian Q/K/V with the given head layout."""
+    q = rng.normal(size=(b, hq, n_q, d)).astype(dtype)
+    k = rng.normal(size=(b, hk, n_k, d)).astype(dtype)
+    v = rng.normal(size=(b, hk, n_k, d)).astype(dtype)
+    return q, k, v

@@ -1,0 +1,121 @@
+"""FA1-style kernel and split-K ablation kernels vs the oracle.
+
+These kernels exist to make the paper's ablations *executable*:
+  - flash1_fwd: per-iteration rescale + (m, l) stored  (section 3.1.1)
+  - splitk_fwd: partial-per-KV-chunk + combine pass    (section 3.3)
+Both must produce the same output as FA2/reference — the paper's point is
+that they differ in *work*, not in *result*.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    BlockSizes,
+    attention_ref,
+    combine_partials,
+    flash1_fwd,
+    flash2_fwd,
+    splitk_fwd,
+    splitk_fwd_partial,
+)
+from tests.conftest import make_qkv
+
+ATOL = 3e-5
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("n,d", [(64, 16), (96, 32), (80, 8)])
+def test_flash1_matches_ref(rng, causal, n, d):
+    q, k, v = make_qkv(rng, 2, 2, 2, n, n, d)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, lse_ref = attention_ref(q, k, v, causal=causal)
+    o, m, l = flash1_fwd(q, k, v, causal=causal, block_sizes=BlockSizes(32, 32))
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+    # FA1's (m, l) pair must recombine to FA2's single statistic: L = m+log(l)
+    np.testing.assert_allclose(
+        np.asarray(m) + np.log(np.asarray(l)), lse_ref, atol=ATOL, rtol=ATOL
+    )
+
+
+@pytest.mark.parametrize("n_split", [1, 2, 3, 4])
+@pytest.mark.parametrize("causal", [False, True])
+def test_splitk_matches_ref(rng, n_split, causal):
+    q, k, v = make_qkv(rng, 1, 2, 2, 96, 96, 16)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, lse_ref = attention_ref(q, k, v, causal=causal)
+    o, lse = splitk_fwd(
+        q, k, v, n_split=n_split, causal=causal, block_sizes=BlockSizes(32, 32)
+    )
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(lse, lse_ref, atol=ATOL, rtol=ATOL)
+
+
+def test_splitk_gqa(rng):
+    q, k, v = make_qkv(rng, 1, 4, 2, 64, 64, 16)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, _ = attention_ref(q, k, v)
+    o, _ = splitk_fwd(q, k, v, n_split=2, block_sizes=BlockSizes(32, 32))
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+
+
+def test_splitk_partials_are_locally_normalized(rng):
+    """Each partial must itself be a valid attention over its KV chunk."""
+    q, k, v = make_qkv(rng, 1, 1, 1, 32, 64, 8)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_p, m_p, l_p = splitk_fwd_partial(
+        q, k, v, n_split=2, block_sizes=BlockSizes(32, 32)
+    )
+    # Chunk 0 covers keys [0, 32): compare against reference over that slice.
+    o_ref, lse_ref = attention_ref(q, k[:, :, :32], v[:, :, :32])
+    o0 = np.asarray(o_p[0]) / np.asarray(l_p[0])[..., None]
+    np.testing.assert_allclose(o0, o_ref, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(
+        np.asarray(m_p[0]) + np.log(np.asarray(l_p[0])), lse_ref, atol=ATOL
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_rows=st.integers(1, 8),
+    n_split=st.integers(2, 5),
+    d=st.sampled_from([2, 4, 8]),
+)
+def test_combine_is_order_invariant(seed, n_rows, n_split, d):
+    """Property: combine_partials is permutation-invariant in the split axis
+    (the merge operator is associative+commutative — same property the Rust
+    gpusim mirror is proptested on)."""
+    rng = np.random.default_rng(seed)
+    o_p = jnp.asarray(rng.normal(size=(n_split, 1, 1, n_rows, d)), jnp.float32)
+    m_p = jnp.asarray(rng.normal(size=(n_split, 1, 1, n_rows)), jnp.float32)
+    l_p = jnp.asarray(rng.uniform(0.1, 5.0, size=(n_split, 1, 1, n_rows)), jnp.float32)
+    o1, lse1 = combine_partials(o_p, m_p, l_p)
+    perm = rng.permutation(n_split)
+    o2, lse2 = combine_partials(o_p[perm], m_p[perm], l_p[perm])
+    np.testing.assert_allclose(o1, o2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(lse1, lse2, atol=1e-5, rtol=1e-5)
+
+
+def test_combine_handles_empty_chunk():
+    """A chunk whose rows saw only -inf scores (m=-inf, l=0) must be a no-op."""
+    o_p = jnp.stack([jnp.ones((1, 1, 4, 2)), jnp.zeros((1, 1, 4, 2))])
+    m_p = jnp.stack([jnp.zeros((1, 1, 4)), jnp.full((1, 1, 4), -jnp.inf)])
+    l_p = jnp.stack([jnp.full((1, 1, 4), 2.0), jnp.zeros((1, 1, 4))])
+    o, lse = combine_partials(o_p, m_p, l_p)
+    np.testing.assert_allclose(np.asarray(o), 0.5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.log(2.0), atol=1e-6)
+
+
+def test_all_variants_agree(rng):
+    """FA2, FA1 and split-K must agree pairwise to tight tolerance."""
+    q, k, v = make_qkv(rng, 1, 2, 2, 64, 64, 16)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    bs = BlockSizes(16, 16)
+    o2, _ = flash2_fwd(q, k, v, causal=True, block_sizes=bs)
+    o1, _, _ = flash1_fwd(q, k, v, causal=True, block_sizes=bs)
+    os, _ = splitk_fwd(q, k, v, n_split=2, causal=True, block_sizes=bs)
+    np.testing.assert_allclose(o1, o2, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(os, o2, atol=ATOL, rtol=ATOL)

@@ -1,0 +1,193 @@
+"""FlashAttention-2 Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the whole repo: every artifact the
+Rust runtime executes goes through these kernels.  Includes a hypothesis
+sweep over shapes/blocks/flags (paper Algorithm 1 & 2 under every tiling).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    BlockSizes,
+    attention_ref,
+    attention_ref_bwd,
+    attention_ref_vjp,
+    flash2_bwd,
+    flash2_fwd,
+)
+from tests.conftest import make_qkv
+
+ATOL = 2e-5
+BWD_ATOL = 5e-5
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("n,d,bq,bk", [
+    (64, 32, 16, 16),
+    (128, 64, 64, 32),
+    (96, 16, 32, 64),   # block_k > block_q
+    (256, 32, 128, 128),
+    (80, 32, 32, 32),   # n not a multiple of block (tail masking)
+    (100, 8, 64, 32),
+])
+def test_fwd_matches_ref(rng, causal, n, d, bq, bk):
+    q, k, v = make_qkv(rng, 2, 2, 2, n, n, d)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, lse_ref = attention_ref(q, k, v, causal=causal)
+    o, lse = flash2_fwd(q, k, v, causal=causal, block_sizes=BlockSizes(bq, bk))
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(lse, lse_ref, atol=ATOL, rtol=ATOL)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("n,d,bq,bk", [
+    (64, 32, 16, 16),
+    (128, 32, 64, 32),
+    (96, 16, 32, 64),
+    (80, 32, 32, 32),
+])
+def test_bwd_matches_ref(rng, causal, n, d, bq, bk):
+    q, k, v = make_qkv(rng, 2, 2, 2, n, n, d)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o, lse = flash2_fwd(q, k, v, causal=causal, block_sizes=BlockSizes(bq, bk))
+    do = jnp.asarray(rng.normal(size=o.shape).astype(np.float32))
+    dq, dk, dv = flash2_bwd(
+        q, k, v, o, lse, do, causal=causal, block_sizes=BlockSizes(bq, bk)
+    )
+    dq_r, dk_r, dv_r = attention_ref_vjp(q, k, v, do, causal=causal)
+    np.testing.assert_allclose(dq, dq_r, atol=BWD_ATOL, rtol=BWD_ATOL)
+    np.testing.assert_allclose(dk, dk_r, atol=BWD_ATOL, rtol=BWD_ATOL)
+    np.testing.assert_allclose(dv, dv_r, atol=BWD_ATOL, rtol=BWD_ATOL)
+
+
+@pytest.mark.parametrize("hq,hk", [(2, 1), (4, 2), (6, 2)])
+@pytest.mark.parametrize("causal", [False, True])
+def test_gqa_fwd_bwd(rng, hq, hk, causal):
+    """GQA via BlockSpec index_map == explicit KV duplication (paper 3.1.2)."""
+    q, k, v = make_qkv(rng, 1, hq, hk, 64, 64, 16)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    bs = BlockSizes(32, 32)
+    o_ref, lse_ref = attention_ref(q, k, v, causal=causal)
+    o, lse = flash2_fwd(q, k, v, causal=causal, block_sizes=bs)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(lse, lse_ref, atol=ATOL, rtol=ATOL)
+
+    do = jnp.asarray(rng.normal(size=o.shape).astype(np.float32))
+    dq, dk, dv = flash2_bwd(q, k, v, o, lse, do, causal=causal, block_sizes=bs)
+    dq_r, dk_r, dv_r = attention_ref_vjp(q, k, v, do, causal=causal)
+    np.testing.assert_allclose(dq, dq_r, atol=BWD_ATOL, rtol=BWD_ATOL)
+    np.testing.assert_allclose(dk, dk_r, atol=BWD_ATOL, rtol=BWD_ATOL)
+    np.testing.assert_allclose(dv, dv_r, atol=BWD_ATOL, rtol=BWD_ATOL)
+
+
+def test_cross_attention_rectangular(rng):
+    """n_q != n_k (non-causal cross attention)."""
+    q, k, v = make_qkv(rng, 1, 2, 2, 48, 112, 16)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, lse_ref = attention_ref(q, k, v)
+    o, lse = flash2_fwd(q, k, v, block_sizes=BlockSizes(16, 32))
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(lse, lse_ref, atol=ATOL, rtol=ATOL)
+
+
+def test_bf16_inputs(rng):
+    """bf16 inputs with f32 accumulation (the MXU configuration)."""
+    q, k, v = make_qkv(rng, 1, 2, 2, 64, 64, 32)
+    qb, kb, vb = (jnp.asarray(x, jnp.bfloat16) for x in (q, k, v))
+    o_ref, _ = attention_ref(qb, kb, vb, causal=True)
+    o, _ = flash2_fwd(qb, kb, vb, causal=True, block_sizes=BlockSizes(32, 32))
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_scale_override(rng):
+    q, k, v = make_qkv(rng, 1, 1, 1, 32, 32, 8)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, _ = attention_ref(q, k, v, scale=0.25)
+    o, _ = flash2_fwd(q, k, v, scale=0.25, block_sizes=BlockSizes(16, 16))
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+
+
+def test_extreme_scores_stability():
+    """Large score magnitudes: online softmax must not overflow."""
+    b, h, n, d = 1, 1, 64, 16
+    q = jnp.full((b, h, n, d), 30.0, jnp.float32)
+    k = jnp.full((b, h, n, d), 30.0, jnp.float32)
+    v = jnp.ones((b, h, n, d), jnp.float32)
+    o, lse = flash2_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+    assert np.isfinite(np.asarray(o)).all()
+    assert np.isfinite(np.asarray(lse)).all()
+    np.testing.assert_allclose(np.asarray(o), 1.0, atol=1e-5)
+
+
+def test_single_block_degenerate(rng):
+    """Whole problem fits one block: the online loop runs exactly once."""
+    q, k, v = make_qkv(rng, 1, 1, 1, 8, 8, 4)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, lse_ref = attention_ref(q, k, v, causal=True)
+    o, lse = flash2_fwd(q, k, v, causal=True, block_sizes=BlockSizes(128, 128))
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(lse, lse_ref, atol=ATOL, rtol=ATOL)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    n=st.integers(4, 96),
+    d=st.sampled_from([4, 8, 16, 32]),
+    bq=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+    causal=st.booleans(),
+)
+def test_fwd_hypothesis_sweep(seed, b, h, n, d, bq, bk, causal):
+    """Property: for ANY shape/tiling, FA2 fwd == reference (Alg. 1 invariant)."""
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, b, h, h, n, n, d)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o_ref, lse_ref = attention_ref(q, k, v, causal=causal)
+    o, lse = flash2_fwd(q, k, v, causal=causal, block_sizes=BlockSizes(bq, bk))
+    np.testing.assert_allclose(o, o_ref, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(lse, lse_ref, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(8, 64),
+    d=st.sampled_from([4, 8, 16]),
+    bq=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_bwd_hypothesis_sweep(seed, n, d, bq, bk, causal):
+    """Property: for ANY shape/tiling, FA2 bwd == autodiff of the reference."""
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, 1, 2, 2, n, n, d)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    bs = BlockSizes(bq, bk)
+    o, lse = flash2_fwd(q, k, v, causal=causal, block_sizes=bs)
+    do = jnp.asarray(rng.normal(size=o.shape).astype(np.float32))
+    dq, dk, dv = flash2_bwd(q, k, v, o, lse, do, causal=causal, block_sizes=bs)
+    dq_r, dk_r, dv_r = attention_ref_vjp(q, k, v, do, causal=causal)
+    np.testing.assert_allclose(dq, dq_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(dk, dk_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(dv, dv_r, atol=1e-4, rtol=1e-4)
+
+
+def test_lse_is_the_only_residual_needed(rng):
+    """Paper tweak #2: bwd from (Q,K,V,O,L) alone reproduces autodiff grads,
+    proving m and l separately are redundant residuals."""
+    q, k, v = make_qkv(rng, 1, 1, 1, 48, 48, 8)
+    q, k, v = map(jnp.asarray, (q, k, v))
+    o, lse = flash2_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+    do = jnp.ones_like(o)
+    dq, dk, dv = flash2_bwd(q, k, v, o, lse, do, block_sizes=BlockSizes(16, 16))
+    dq_r, dk_r, dv_r = attention_ref_vjp(q, k, v, do)
+    np.testing.assert_allclose(dq, dq_r, atol=BWD_ATOL, rtol=BWD_ATOL)

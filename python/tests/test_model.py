@@ -1,0 +1,121 @@
+"""L2 model tests: shapes, flash2-vs-reference equivalence, train step,
+prefill/decode consistency, FLOPs accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG_TINY = M.GPTConfig(
+    vocab_size=128, n_layer=2, n_head=4, n_kv_head=4, d_model=32,
+    max_seq=32, block_q=16, block_k=16,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG_TINY)
+
+
+def test_param_count_formula_matches_actual(params):
+    assert M.count_params(params) == CFG_TINY.n_params
+
+
+def test_forward_shapes(params):
+    tokens = jnp.zeros((2, 16), jnp.int32)
+    logits = M.forward(CFG_TINY, params, tokens)
+    assert logits.shape == (2, 16, CFG_TINY.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_flash2_and_reference_attention_agree(params):
+    """The whole model, flash2 kernels vs jnp reference — must agree."""
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 128)
+    cfg_ref = M.GPTConfig(**{**CFG_TINY.__dict__, "attention_impl": "reference"})
+    lf = M.forward(CFG_TINY, params, tokens)
+    lr = M.forward(cfg_ref, params, tokens)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr), atol=2e-4, rtol=2e-4)
+
+
+def test_gqa_model_runs():
+    cfg = M.GPTConfig(
+        vocab_size=64, n_layer=2, n_head=4, n_kv_head=2, d_model=32,
+        max_seq=16, block_q=8, block_k=8,
+    )
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    assert M.count_params(p) == cfg.n_params
+    tokens = jnp.zeros((1, 16), jnp.int32)
+    logits = M.forward(cfg, p, tokens)
+    assert logits.shape == (1, 16, 64)
+
+
+def test_gradients_flow_and_loss_decreases(params):
+    """A few Adam steps on a fixed batch must reduce the loss (overfit test)
+    and gradients must flow through the custom_vjp FA2 backward."""
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0, 128)
+    adam = M.AdamConfig(lr=1e-2)
+    step = jax.jit(lambda p, s, t: M.train_step(CFG_TINY, adam, p, s, t))
+    p, s = params, M.init_opt_state(params)
+    losses = []
+    for _ in range(8):
+        p, s, loss = step(p, s, tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+    assert all(np.isfinite(losses))
+
+
+def test_train_step_grads_match_reference_attention(params):
+    """Grad through the FA2 custom_vjp == grad through reference attention."""
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, 128)
+    cfg_ref = M.GPTConfig(**{**CFG_TINY.__dict__, "attention_impl": "reference"})
+    g_fa = jax.grad(lambda p: M.loss_fn(CFG_TINY, p, tokens))(params)
+    g_ref = jax.grad(lambda p: M.loss_fn(cfg_ref, p, tokens))(params)
+    flat_fa = jax.tree_util.tree_leaves(g_fa)
+    flat_ref = jax.tree_util.tree_leaves(g_ref)
+    for a, b in zip(flat_fa, flat_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3)
+
+
+def test_prefill_decode_matches_full_forward(params):
+    """Decoding token-by-token with the KV cache must reproduce the logits of
+    a single full forward pass (the serving-path correctness invariant)."""
+    key = jax.random.PRNGKey(4)
+    tokens = jax.random.randint(key, (2, 12), 0, 128)
+    full = M.forward(CFG_TINY, params, tokens)
+
+    n_prefill = 8
+    logits_p, cache = M.prefill(CFG_TINY, params, tokens[:, :n_prefill])
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full[:, n_prefill - 1]), atol=2e-4, rtol=2e-4
+    )
+    logits = logits_p
+    for t in range(n_prefill, 12):
+        pos = jnp.full((2,), t, jnp.int32)
+        logits, cache = M.decode_step(CFG_TINY, params, cache, tokens[:, t], pos)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, t]), atol=5e-4, rtol=5e-4
+        )
+
+
+def test_loss_at_init_near_uniform(params):
+    """Untrained model: x-ent ~ log(vocab)."""
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (4, 32), 0, 128)
+    loss = float(M.loss_fn(CFG_TINY, params, tokens))
+    assert abs(loss - np.log(128)) < 0.5, loss
+
+
+def test_flops_formulas():
+    cfg = M.GPTConfig(vocab_size=50257, n_layer=24, n_head=16, n_kv_head=16,
+                      d_model=2048, max_seq=2048)
+    # GPT3-1.3B-ish: ~1.3e9 params
+    assert 1.2e9 < cfg.n_params < 1.5e9
+    f = M.train_step_flops(cfg, batch=1, seqlen=2048)
+    # 6 * 2048 * 1.3e9 ~ 1.6e13 plus attention term
+    assert 1.5e13 < f < 2.5e13
+    a = M.attention_flops(2048, 64, 32, causal=False, mode="fwd")
+    assert a == 4 * 2048**2 * 64 * 32
+    assert M.attention_flops(2048, 64, 32, causal=True, mode="fwd") == a / 2
+    assert M.attention_flops(2048, 64, 32, causal=False, mode="bwd") == 2.5 * a
+    assert M.attention_flops(2048, 64, 32, causal=False, mode="fwd_bwd") == 3.5 * a

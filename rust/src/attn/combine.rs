@@ -1,0 +1,133 @@
+//! Split-K combine algebra — the rust mirror of
+//! `python/compile/kernels/splitk.py::combine_partials`.
+//!
+//! A partial is the triple (o_tilde, m, l) a KV-chunk worker produces:
+//! o_tilde = sum_j exp(s_j - m) v_j (unscaled), m = local max, l = local
+//! sum of exponentials.  Merging two partials is the online-softmax update;
+//! it is associative and commutative, which is what makes both the warp
+//! split-K exchange (section 3.3) and flash-decoding correct under any
+//! reduction order.  That property is property-tested in
+//! `rust/tests/prop_combine.rs` and mirrored by the hypothesis test on the
+//! python side.
+
+/// One row's partial softmax state over `d` output dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partial {
+    pub o: Vec<f64>,
+    pub m: f64,
+    pub l: f64,
+}
+
+impl Partial {
+    /// The identity element: an empty chunk (no keys seen).
+    pub fn empty(d: usize) -> Partial {
+        Partial { o: vec![0.0; d], m: f64::NEG_INFINITY, l: 0.0 }
+    }
+
+    /// A partial from explicit scores + values (reference construction).
+    pub fn from_scores(scores: &[f64], values: &[Vec<f64>]) -> Partial {
+        assert_eq!(scores.len(), values.len());
+        let d = values.first().map_or(0, |v| v.len());
+        if scores.is_empty() {
+            return Partial::empty(d);
+        }
+        let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut o = vec![0.0; d];
+        let mut l = 0.0;
+        for (s, v) in scores.iter().zip(values) {
+            let w = (s - m).exp();
+            l += w;
+            for (oi, vi) in o.iter_mut().zip(v) {
+                *oi += w * vi;
+            }
+        }
+        Partial { o, m, l }
+    }
+
+    /// Merge two partials (the smem exchange / combine pass).
+    pub fn merge(&self, other: &Partial) -> Partial {
+        if other.l == 0.0 && other.m == f64::NEG_INFINITY {
+            return self.clone();
+        }
+        if self.l == 0.0 && self.m == f64::NEG_INFINITY {
+            return other.clone();
+        }
+        let m = self.m.max(other.m);
+        let wa = (self.m - m).exp();
+        let wb = (other.m - m).exp();
+        let l = wa * self.l + wb * other.l;
+        let o = self
+            .o
+            .iter()
+            .zip(&other.o)
+            .map(|(a, b)| wa * a + wb * b)
+            .collect();
+        Partial { o, m, l }
+    }
+
+    /// Finalize: O = o_tilde / l, LSE = m + ln(l).
+    pub fn finalize(&self) -> (Vec<f64>, f64) {
+        let l = if self.l == 0.0 { 1.0 } else { self.l };
+        (self.o.iter().map(|x| x / l).collect(), self.m + l.ln())
+    }
+}
+
+/// Merge a slice of partials (any order is valid; left fold used here).
+pub fn merge_all(parts: &[Partial]) -> Partial {
+    let d = parts.first().map_or(0, |p| p.o.len());
+    parts.iter().fold(Partial::empty(d), |acc, p| acc.merge(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn split_equals_monolithic() {
+        let scores = vec![0.3, -1.2, 2.0, 0.7, -0.5, 1.1];
+        let values: Vec<Vec<f64>> =
+            (0..6).map(|i| vec![i as f64, 1.0 - i as f64]).collect();
+        let whole = Partial::from_scores(&scores, &values).finalize();
+        let a = Partial::from_scores(&scores[..2], &values[..2]);
+        let b = Partial::from_scores(&scores[2..5], &values[2..5]);
+        let c = Partial::from_scores(&scores[5..], &values[5..]);
+        let merged = merge_all(&[a, b, c]).finalize();
+        for (x, y) in whole.0.iter().zip(&merged.0) {
+            assert!(close(*x, *y), "{x} vs {y}");
+        }
+        assert!(close(whole.1, merged.1));
+    }
+
+    #[test]
+    fn empty_is_identity() {
+        let p = Partial::from_scores(&[1.0, 2.0], &[vec![3.0], vec![4.0]]);
+        let e = Partial::empty(1);
+        assert_eq!(p.merge(&e), p);
+        assert_eq!(e.merge(&p), p);
+    }
+
+    #[test]
+    fn merge_commutes() {
+        let a = Partial::from_scores(&[5.0, -3.0], &[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let b = Partial::from_scores(&[0.1], &[vec![2.0, 2.0]]);
+        let ab = a.merge(&b).finalize();
+        let ba = b.merge(&a).finalize();
+        for (x, y) in ab.0.iter().zip(&ba.0) {
+            assert!(close(*x, *y));
+        }
+        assert!(close(ab.1, ba.1));
+    }
+
+    #[test]
+    fn numerically_stable_with_huge_scores() {
+        let a = Partial::from_scores(&[800.0], &[vec![1.0]]);
+        let b = Partial::from_scores(&[-800.0], &[vec![5.0]]);
+        let (o, lse) = a.merge(&b).finalize();
+        assert!(o[0].is_finite() && (o[0] - 1.0).abs() < 1e-12);
+        assert!(lse.is_finite() && (lse - 800.0).abs() < 1e-9);
+    }
+}

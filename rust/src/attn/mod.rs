@@ -1,0 +1,12 @@
+//! Attention schedules + FLOP accounting + split-K combine algebra: the
+//! executable form of the paper's sections 3.1-3.3 differences between
+//! standard attention, FlashAttention-1, Triton, and FlashAttention-2.
+
+pub mod autotune;
+pub mod combine;
+pub mod problem;
+pub mod schedule;
+
+pub use autotune::{best as autotune_best, tune as autotune_tune, TunedSchedule};
+pub use problem::{AttnProblem, Pass};
+pub use schedule::{kernels_for, simulate_tflops, simulate_time, Method, ScheduleSpec};

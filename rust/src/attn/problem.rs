@@ -1,0 +1,110 @@
+//! Attention problem description + the paper's FLOP accounting formulas
+//! (section 4.1).
+
+/// One attention benchmark point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttnProblem {
+    pub batch: u64,
+    pub heads: u64,
+    pub seqlen: u64,
+    pub head_dim: u64,
+    pub causal: bool,
+    /// Bytes per element of Q/K/V/O (2 = fp16/bf16, the paper's setting).
+    pub dtype_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Fwd,
+    Bwd,
+    FwdBwd,
+}
+
+impl AttnProblem {
+    /// The paper's benchmark grid: total tokens fixed (16k on A100), hidden
+    /// dim 2048 split into heads of `head_dim`.
+    pub fn paper_setting(seqlen: u64, head_dim: u64, causal: bool) -> AttnProblem {
+        let total_tokens = 16 * 1024;
+        let hidden = 2048;
+        AttnProblem {
+            batch: (total_tokens / seqlen).max(1),
+            heads: hidden / head_dim,
+            seqlen,
+            head_dim,
+            causal,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Section 4.1: `4 * seqlen^2 * head_dim * heads` per batch element,
+    /// halved for causal, x2.5 for backward, x3.5 for fwd+bwd.  This is the
+    /// *reported* FLOP count used for TFLOPs/s figures (not the executed
+    /// count — standard attention executes the full square even with a
+    /// causal mask but is still charged the halved count).
+    pub fn reported_flops(&self, pass: Pass) -> f64 {
+        let n = self.seqlen as f64;
+        let mut f = 4.0 * n * n * self.head_dim as f64
+            * (self.heads * self.batch) as f64;
+        if self.causal {
+            f /= 2.0;
+        }
+        match pass {
+            Pass::Fwd => f,
+            Pass::Bwd => 2.5 * f,
+            Pass::FwdBwd => 3.5 * f,
+        }
+    }
+
+    /// Bytes of Q+K+V (inputs) for one full pass over the problem.
+    pub fn qkv_bytes(&self) -> f64 {
+        (3 * self.batch * self.heads * self.seqlen * self.head_dim * self.dtype_bytes)
+            as f64
+    }
+
+    /// Bytes of the output O.
+    pub fn o_bytes(&self) -> f64 {
+        (self.batch * self.heads * self.seqlen * self.head_dim * self.dtype_bytes)
+            as f64
+    }
+
+    /// Bytes of one full N x N score/probability matrix (what standard
+    /// attention materializes and FlashAttention exists to avoid).
+    pub fn score_matrix_bytes(&self) -> f64 {
+        (self.batch * self.heads * self.seqlen * self.seqlen * self.dtype_bytes) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_setting_fixes_token_count() {
+        for n in [512, 1024, 2048, 4096, 8192, 16384] {
+            let p = AttnProblem::paper_setting(n, 64, false);
+            assert_eq!(p.batch * p.seqlen, 16 * 1024);
+            assert_eq!(p.heads, 32); // hidden 2048 / 64
+        }
+        assert_eq!(AttnProblem::paper_setting(2048, 128, false).heads, 16);
+    }
+
+    #[test]
+    fn flops_formula_matches_paper() {
+        let p = AttnProblem::paper_setting(2048, 64, false);
+        // 4 * N^2 * d * heads * batch
+        let expect = 4.0 * 2048.0f64 * 2048.0 * 64.0 * 32.0 * 8.0;
+        assert_eq!(p.reported_flops(Pass::Fwd), expect);
+        assert_eq!(p.reported_flops(Pass::Bwd), 2.5 * expect);
+        assert_eq!(p.reported_flops(Pass::FwdBwd), 3.5 * expect);
+        let pc = AttnProblem { causal: true, ..p };
+        assert_eq!(pc.reported_flops(Pass::Fwd), expect / 2.0);
+    }
+
+    #[test]
+    fn traffic_helpers() {
+        let p = AttnProblem { batch: 2, heads: 4, seqlen: 1024, head_dim: 64, causal: false, dtype_bytes: 2 };
+        assert_eq!(p.qkv_bytes(), (3 * 2 * 4 * 1024 * 64 * 2) as f64);
+        assert_eq!(p.o_bytes(), (2 * 4 * 1024 * 64 * 2) as f64);
+        assert_eq!(p.score_matrix_bytes(), (2u64 * 4 * 1024 * 1024 * 2) as f64);
+    }
+}

@@ -1,0 +1,528 @@
+//! Attention schedules: how standard attention, FlashAttention-1, the
+//! Triton implementation, and FlashAttention-2 map the same math onto GPU
+//! kernels.  Each schedule builds `KernelLaunch`es for the `gpusim` cost
+//! model; the *differences between schedules are exactly the paper's three
+//! contributions*:
+//!
+//!   1. non-matmul FLOP counts  (`per_iter_rescale`, `mask_all_blocks`,
+//!      `stores_m_and_l`)                                    — section 3.1
+//!   2. grid shape (`seqlen_parallel`)                       — section 3.2
+//!   3. warp partitioning (`split_k_warps` -> smem exchange) — section 3.3
+//!
+//! Counting conventions (all auditable in `fwd_kernels`/`bwd_kernels`):
+//! exp = 4 FLOPs, div = 4 FLOPs, everything else 1 FLOP.
+
+use crate::gpusim::device::Device;
+use crate::gpusim::kernel::{simulate_pipeline, KernelLaunch};
+use crate::gpusim::occupancy::BlockResources;
+
+use super::problem::{AttnProblem, Pass};
+
+const EXP: f64 = 4.0;
+const DIV: f64 = 4.0;
+/// Effective smem read traffic per staged tile, in tile-sizes: warps share
+/// tiles through ldmatrix broadcasts, so reads do not scale with warp count.
+const SMEM_READ_FACTOR: f64 = 2.0;
+
+/// Which implementation a schedule models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// PyTorch-style standard attention: 3 kernels, materializes S and P.
+    Standard,
+    /// FlashAttention (original): batch*heads grid, split-K warps,
+    /// per-iteration output rescale, stores (m, l).
+    Flash1,
+    /// The Triton implementation: FA2-style loop order and seqlen
+    /// parallelism, but weaker codegen (calibrated `mm_eff`) and
+    /// unconditional masking.
+    Triton,
+    /// FlashAttention-2.
+    Flash2,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Standard => "standard",
+            Method::Flash1 => "flashattention",
+            Method::Triton => "triton",
+            Method::Flash2 => "flashattention-2",
+        }
+    }
+
+    pub fn all() -> [Method; 4] {
+        [Method::Standard, Method::Flash1, Method::Triton, Method::Flash2]
+    }
+}
+
+/// Tiling + work-partitioning knobs for the flash-style schedules.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleSpec {
+    pub method: Method,
+    pub block_q: u64,
+    pub block_k: u64,
+    pub warps: u32,
+    /// Grid includes the sequence dimension (section 3.2).  Without it the
+    /// grid is batch*heads only.
+    pub seqlen_parallel: bool,
+    /// Warps split K/V and exchange partial outputs through shared memory
+    /// (section 3.3's "split-K scheme").
+    pub split_k_warps: bool,
+    /// Output accumulator rescaled by diag(l)^-1 every iteration
+    /// (section 3.1 tweak #1 removes this).
+    pub per_iter_rescale: bool,
+    /// Stores both m and l instead of the single logsumexp
+    /// (section 3.1 tweak #2 removes this).
+    pub stores_m_and_l: bool,
+    /// Causal masking applied to every visited block, not only diagonal
+    /// blocks (section 3.1 "causal masking" tweak #2 removes this).
+    pub mask_all_blocks: bool,
+    /// Tensor-core efficiency of the generated code (tile geometry and
+    /// pipelining quality; calibration knob, see DESIGN.md section 1).
+    pub mm_eff_fwd: f64,
+    pub mm_eff_bwd: f64,
+}
+
+impl ScheduleSpec {
+    pub fn for_method(method: Method, head_dim: u64) -> ScheduleSpec {
+        // Block sizes per the paper section 3.3: {64,128} x {64,128},
+        // chosen per head_dim so the tiles fit shared memory.
+        let (bq, bk) = if head_dim <= 64 { (128, 128) } else { (128, 64) };
+        match method {
+            Method::Flash2 => ScheduleSpec {
+                method,
+                block_q: bq,
+                block_k: bk,
+                warps: 4,
+                seqlen_parallel: true,
+                split_k_warps: false,
+                per_iter_rescale: false,
+                stores_m_and_l: false,
+                mask_all_blocks: false,
+                mm_eff_fwd: 0.90,
+                mm_eff_bwd: 0.82,
+            },
+            Method::Triton => ScheduleSpec {
+                method,
+                block_q: bq,
+                block_k: bk,
+                warps: 4,
+                seqlen_parallel: true,
+                split_k_warps: false,
+                per_iter_rescale: false,
+                stores_m_and_l: false,
+                mask_all_blocks: true,
+                // Calibrated to the paper's measured 1.3-1.5x fwd and ~2x
+                // bwd gaps vs FA2 (section 4.1).
+                mm_eff_fwd: 0.65,
+                mm_eff_bwd: 0.42,
+            },
+            Method::Flash1 => ScheduleSpec {
+                method,
+                block_q: bq.min(64),
+                block_k: bk,
+                warps: 4,
+                seqlen_parallel: false,
+                split_k_warps: true,
+                per_iter_rescale: true,
+                stores_m_and_l: true,
+                mask_all_blocks: true,
+                // FA1's CUTLASS 2.x codegen + split-K epilogue kept it at
+                // 30-50% of peak fwd / 25-35% bwd (paper section 1).
+                mm_eff_fwd: 0.72,
+                mm_eff_bwd: 0.55,
+            },
+            Method::Standard => panic!("standard attention uses standard_kernels()"),
+        }
+    }
+}
+
+/// Exact count of visited (q-block, kv-block) pairs per (batch, head),
+/// honouring causal block skipping.
+pub fn visited_pairs(p: &AttnProblem, bq: u64, bk: u64) -> u64 {
+    let tr = p.seqlen.div_ceil(bq);
+    let tc = p.seqlen.div_ceil(bk);
+    if !p.causal {
+        return tr * tc;
+    }
+    (0..tr)
+        .map(|i| (((i + 1) * bq).div_ceil(bk)).min(tc))
+        .sum()
+}
+
+/// Number of diagonal (mask-straddling) pairs per (batch, head).
+fn diagonal_pairs(p: &AttnProblem, bq: u64, bk: u64) -> u64 {
+    if !p.causal {
+        return 0;
+    }
+    let tr = p.seqlen.div_ceil(bq);
+    // blocks j with j*bk < (i+1)*bq and (j+1)*bk - 1 > i*bq
+    (0..tr)
+        .map(|i| {
+            let lo = (i * bq) / bk;
+            let hi = ((i + 1) * bq).div_ceil(bk);
+            hi - lo
+        })
+        .sum()
+}
+
+/// Shared-memory footprint of a forward flash block: Q tile + K,V tiles
+/// (double-buffered K/V, as real implementations pipeline the loads).
+fn fwd_smem(spec: &ScheduleSpec, d: u64, bytes: u64) -> usize {
+    ((spec.block_q * d + 2 * spec.block_k * d) * bytes) as usize
+}
+
+/// Backward needs Q, dO, K, V tiles plus dS staging (5-matmul working set,
+/// paper section 2.3.2 "more values to be kept in SRAM").
+fn bwd_smem(spec: &ScheduleSpec, d: u64, bytes: u64) -> usize {
+    ((2 * spec.block_q * d + 2 * spec.block_k * d + spec.block_q * spec.block_k)
+        * bytes) as usize
+}
+
+/// Build forward kernels for a flash-style schedule.
+pub fn fwd_kernels(p: &AttnProblem, spec: &ScheduleSpec) -> Vec<KernelLaunch> {
+    let bh = p.batch * p.heads;
+    let (bq, bk, d) = (spec.block_q, spec.block_k, p.head_dim);
+    let pairs = visited_pairs(p, bq, bk) as f64 * bh as f64;
+    let diag = diagonal_pairs(p, bq, bk) as f64 * bh as f64;
+    let rows = (p.seqlen * bh) as f64;
+    let tile = (bq * bk) as f64;
+
+    // -- matmul: QK^T + PV per visited pair --
+    let matmul = pairs * 4.0 * tile as f64 * d as f64 / 2.0 * 2.0; // 2*2*Bq*Bk*d
+    // -- non-matmul: online softmax per pair --
+    let mut nonmatmul = pairs * tile * (1.0 + EXP + 1.0 + 1.0); // max, exp, sum, scale
+    nonmatmul += pairs * (bq as f64) * (EXP + 2.0); // alpha + l update per row
+    // accumulator rescale by alpha each iteration (FA2 keeps this; it is the
+    // diag(l)^-1 *division* that is deferred)
+    nonmatmul += pairs * (bq * d) as f64;
+    if spec.per_iter_rescale {
+        // FA1: full diag(l)^-1 normalization every iteration: ratio (div) +
+        // acc multiply + new-term divide over Bq x d.
+        nonmatmul += pairs * ((bq as f64) * DIV + 2.0 * (bq * d) as f64 + (bq * d) as f64 * DIV);
+    } else {
+        // FA2: single final rescale + logsumexp.
+        nonmatmul += rows * (d as f64 * DIV + EXP + 1.0);
+    }
+    // masking
+    let masked_pairs = if spec.mask_all_blocks { pairs } else { diag };
+    nonmatmul += masked_pairs * tile * 2.0;
+
+    // -- HBM traffic --
+    // Fraction of the full Tr x Tc square actually visited (causal block
+    // skipping also skips the corresponding K/V tile loads).
+    let tr = p.seqlen.div_ceil(bq) as f64;
+    let tc = p.seqlen.div_ceil(bk) as f64;
+    let visit_frac = pairs / (tr * tc * bh as f64);
+    let stats = if spec.stores_m_and_l { 2.0 } else { 1.0 };
+    let mut hbm = p.qkv_bytes() + p.o_bytes() + rows * 4.0 * stats;
+    if !spec.seqlen_parallel {
+        // FA1 loop order: K/V resident, Q and O streamed per KV block —
+        // O is read+written every outer iteration (the rewrite FA2 removes
+        // by swapping the loops).
+        hbm += bh as f64 * tc * visit_frac
+            * (p.seqlen * d) as f64 * p.dtype_bytes as f64 * 2.0;
+    } else {
+        // seqlen-parallel: every Q block re-reads its visited share of K,V.
+        hbm += (tr - 1.0).max(0.0) * visit_frac * 2.0 / 3.0 * p.qkv_bytes();
+    }
+
+    // -- shared-memory traffic --
+    // Baseline: K/V tiles staged through smem; warp reads amortized by
+    // ldmatrix-style broadcast (~2 read-equivalents per tile).
+    let kv_tile_bytes = (2 * bk * d * p.dtype_bytes) as f64;
+    let mut smem = pairs * kv_tile_bytes * (1.0 + SMEM_READ_FACTOR);
+    if spec.split_k_warps {
+        // Section 3.3 split-K: every warp writes its partial O (f32) +
+        // (m,l) to shared memory once and the reduction reads each once.
+        let partial = (bq * d) as f64 * 4.0 + (2 * bq) as f64 * 4.0;
+        smem += pairs * spec.warps as f64 * partial;
+    }
+
+    let grid = if spec.seqlen_parallel {
+        bh * p.seqlen.div_ceil(bq)
+    } else {
+        bh
+    };
+    vec![KernelLaunch {
+        label: "attn_fwd",
+        grid,
+        block: BlockResources {
+            threads: spec.warps * 32,
+            regs_per_thread: 128,
+            smem_bytes: fwd_smem(spec, d, p.dtype_bytes),
+        },
+        matmul_flops: matmul,
+        nonmatmul_flops: nonmatmul,
+        hbm_bytes: hbm,
+        smem_bytes: smem,
+        mm_eff: spec.mm_eff_fwd,
+    }]
+}
+
+/// Build backward kernels for a flash-style schedule (paper Algorithm 2:
+/// 5 matmuls per visited pair, P recomputed from the saved statistic).
+pub fn bwd_kernels(p: &AttnProblem, spec: &ScheduleSpec) -> Vec<KernelLaunch> {
+    let bh = p.batch * p.heads;
+    let (bq, bk, d) = (spec.block_q, spec.block_k, p.head_dim);
+    let pairs = visited_pairs(p, bq, bk) as f64 * bh as f64;
+    let diag = diagonal_pairs(p, bq, bk) as f64 * bh as f64;
+    let rows = (p.seqlen * bh) as f64;
+    let tile = (bq * bk) as f64;
+
+    // 5 matmuls: S=QK^T, dV+=P^T dO, dP=dO V^T, dQ+=dS K, dK+=dS^T Q.
+    let matmul = pairs * 5.0 * 2.0 * tile * d as f64;
+    // recompute P = exp(S - L), dS = P o (dP - D), masking, D precompute.
+    let mut nonmatmul = pairs * tile * (EXP + 1.0 + 2.0);
+    nonmatmul += rows * (2.0 * d as f64); // D = rowsum(dO o O)
+    let masked_pairs = if spec.mask_all_blocks { pairs } else { diag };
+    nonmatmul += masked_pairs * tile * 2.0;
+    if spec.stores_m_and_l {
+        nonmatmul += pairs * tile; // extra subtract path using separate m, l
+    }
+
+    // HBM: Q,K,V,O,dO read; dQ,dK,dV written; dQ via atomic adds in the
+    // seqlen-parallel scheme (each column-block worker adds its dQ_i
+    // contribution, section 3.2 backward).
+    let tr = p.seqlen.div_ceil(bq) as f64;
+    let tc = p.seqlen.div_ceil(bk) as f64;
+    let visit_frac = pairs / (tr * tc * bh as f64);
+    let stats = if spec.stores_m_and_l { 2.0 } else { 1.0 };
+    let mut hbm = p.qkv_bytes() * 2.0 + p.o_bytes() * 3.0 + rows * 4.0 * (stats + 1.0);
+    if spec.seqlen_parallel {
+        // dQ atomic traffic: one f32 add per row element per visited column
+        // block (section 3.2: "atomic adds to communicate between different
+        // thread blocks to update dQ").
+        hbm += tc * visit_frac * rows * d as f64 * 4.0;
+        // every column block re-reads its visited share of Q and dO
+        hbm += (tc - 1.0).max(0.0) * visit_frac
+            * 2.0 * (rows * d as f64) * p.dtype_bytes as f64;
+    } else {
+        // FA1 bwd loop order: dQ read+modify+write per column block.
+        hbm += tc * visit_frac * rows * d as f64 * 4.0 * 2.0;
+        hbm += (tc - 1.0).max(0.0) * visit_frac
+            * 2.0 * (rows * d as f64) * p.dtype_bytes as f64;
+    }
+
+    let kv_tile_bytes = (2 * bk * d * p.dtype_bytes) as f64;
+    let mut smem = pairs * kv_tile_bytes * (1.0 + SMEM_READ_FACTOR);
+    // dS staging between the matmuls goes through smem in all schemes.
+    smem += pairs * tile * p.dtype_bytes as f64 * 2.0;
+    if spec.split_k_warps {
+        let partial = (bk * d) as f64 * 4.0 * 2.0; // dK, dV partials (f32)
+        smem += pairs * spec.warps as f64 * partial;
+    }
+
+    let grid = if spec.seqlen_parallel {
+        bh * p.seqlen.div_ceil(bk) // column-block parallel (Fig. 2 right)
+    } else {
+        bh
+    };
+    vec![KernelLaunch {
+        label: "attn_bwd",
+        grid,
+        block: BlockResources {
+            threads: spec.warps * 32,
+            regs_per_thread: 160,
+            smem_bytes: bwd_smem(spec, d, p.dtype_bytes),
+        },
+        matmul_flops: matmul,
+        nonmatmul_flops: nonmatmul,
+        hbm_bytes: hbm,
+        smem_bytes: smem,
+        mm_eff: spec.mm_eff_bwd,
+    }]
+}
+
+/// Standard (PyTorch) attention: three memory-bound kernels that
+/// materialize S and P in HBM (paper section 2.2).  Executes the full
+/// square even under a causal mask; PyTorch's softmax path upcasts the
+/// score matrix to fp32 and the causal mask is its own elementwise kernel.
+pub fn standard_kernels(p: &AttnProblem, pass: Pass) -> Vec<KernelLaunch> {
+    let bh = (p.batch * p.heads) as f64;
+    let n = p.seqlen as f64;
+    let d = p.head_dim as f64;
+    // fp32 S/P materialization (softmax upcast): 4 bytes per score.
+    let score = (p.batch * p.heads * p.seqlen * p.seqlen * 4) as f64;
+    let nd_bytes = (p.seqlen * p.head_dim * p.dtype_bytes) as f64 * bh;
+    let gemm_block = BlockResources { threads: 256, regs_per_thread: 128, smem_bytes: 96 * 1024 };
+    let gemm_grid = ((bh * n * n) / (128.0 * 128.0)).ceil() as u64;
+    let eltwise_block = BlockResources { threads: 256, regs_per_thread: 40, smem_bytes: 0 };
+    let eltwise_grid = ((bh * n * n) / (256.0 * 8.0)).ceil() as u64;
+
+    let gemm = |label, flops, hbm| KernelLaunch {
+        label,
+        grid: gemm_grid.max(1),
+        block: gemm_block,
+        matmul_flops: flops,
+        nonmatmul_flops: 0.0,
+        hbm_bytes: hbm,
+        smem_bytes: 0.0,
+        mm_eff: 0.85,
+    };
+
+    let mut kernels = vec![
+        // S = QK^T: read Q,K; write S.
+        gemm("std_qk", bh * 2.0 * n * n * d, 2.0 * nd_bytes + score),
+        // softmax: read S, write P.
+        KernelLaunch {
+            label: "std_softmax",
+            grid: eltwise_grid.max(1),
+            block: eltwise_block,
+            matmul_flops: 0.0,
+            nonmatmul_flops: bh * n * n * (1.0 + EXP + 1.0 + DIV),
+            hbm_bytes: 2.0 * score,
+            smem_bytes: 0.0,
+            mm_eff: 1.0,
+        },
+        // O = PV: read P,V; write O.
+        gemm("std_pv", bh * 2.0 * n * n * d, score + 2.0 * nd_bytes),
+    ];
+    if p.causal {
+        // masked_fill: read S + mask, write S — a separate eltwise pass.
+        kernels.insert(1, KernelLaunch {
+            label: "std_mask",
+            grid: eltwise_grid.max(1),
+            block: eltwise_block,
+            matmul_flops: 0.0,
+            nonmatmul_flops: bh * n * n,
+            hbm_bytes: 2.0 * score + score / 4.0, // mask is 1 byte/element
+            smem_bytes: 0.0,
+            mm_eff: 1.0,
+        });
+    }
+
+    if pass != Pass::Fwd {
+        // Autograd backward: each GEMM touching an N x N operand also pays a
+        // transpose/.contiguous() materialization pass (PyTorch autograd
+        // does not fuse these), hence the extra `score` per GEMM.
+        let bwd = vec![
+            gemm("std_dv", bh * 2.0 * n * n * d, 2.0 * score + 2.0 * nd_bytes),
+            gemm("std_dp", bh * 2.0 * n * n * d, 2.0 * nd_bytes + 2.0 * score),
+            KernelLaunch {
+                label: "std_dsoftmax",
+                grid: eltwise_grid.max(1),
+                block: eltwise_block,
+                matmul_flops: 0.0,
+                nonmatmul_flops: bh * n * n * 4.0,
+                hbm_bytes: 3.0 * score,
+                smem_bytes: 0.0,
+                mm_eff: 1.0,
+            },
+            gemm("std_dq", bh * 2.0 * n * n * d, 2.0 * score + 2.0 * nd_bytes),
+            gemm("std_dk", bh * 2.0 * n * n * d, 2.0 * score + 2.0 * nd_bytes),
+        ];
+        if pass == Pass::Bwd {
+            return bwd;
+        }
+        kernels.extend(bwd);
+    }
+    kernels
+}
+
+/// Build the kernels for any method/pass.
+pub fn kernels_for(p: &AttnProblem, method: Method, pass: Pass) -> Vec<KernelLaunch> {
+    if method == Method::Standard {
+        return standard_kernels(p, pass);
+    }
+    let spec = ScheduleSpec::for_method(method, p.head_dim);
+    match pass {
+        Pass::Fwd => fwd_kernels(p, &spec),
+        Pass::Bwd => bwd_kernels(p, &spec),
+        Pass::FwdBwd => {
+            let mut ks = fwd_kernels(p, &spec);
+            ks.extend(bwd_kernels(p, &spec));
+            ks
+        }
+    }
+}
+
+/// Simulated wall-clock time for (problem, method, pass) on a device.
+pub fn simulate_time(dev: &Device, p: &AttnProblem, method: Method, pass: Pass) -> f64 {
+    simulate_pipeline(dev, &kernels_for(p, method, pass))
+}
+
+/// Reported throughput in FLOP/s (paper's accounting, section 4.1).
+pub fn simulate_tflops(dev: &Device, p: &AttnProblem, method: Method, pass: Pass) -> f64 {
+    p.reported_flops(pass) / simulate_time(dev, p, method, pass)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visited_pairs_counts() {
+        let full = AttnProblem { batch: 1, heads: 1, seqlen: 1024, head_dim: 64, causal: false, dtype_bytes: 2 };
+        assert_eq!(visited_pairs(&full, 128, 128), 8 * 8);
+        let causal = AttnProblem { causal: true, ..full };
+        // sum_{i=0..7} (i+1) = 36 of 64 pairs
+        assert_eq!(visited_pairs(&causal, 128, 128), 36);
+        // causal block skipping approaches 1/2 for large N (paper: ~1.7-1.8x
+        // speedup because the ratio is (Tc+1)/2Tc, not exactly 1/2)
+        let big = AttnProblem { seqlen: 16384, causal: true, ..full };
+        let frac = visited_pairs(&big, 128, 128) as f64 / (128.0 * 128.0);
+        assert!(frac < 0.51 && frac > 0.49, "{frac}");
+    }
+
+    #[test]
+    fn diagonal_pairs_is_about_one_per_row_block() {
+        let p = AttnProblem { batch: 1, heads: 1, seqlen: 2048, head_dim: 64, causal: true, dtype_bytes: 2 };
+        assert_eq!(diagonal_pairs(&p, 128, 128), 16); // exactly 1 per row block
+        // block_k smaller than block_q straddles 2 per row block
+        assert_eq!(diagonal_pairs(&p, 128, 64), 32);
+    }
+
+    #[test]
+    fn fa2_has_fewer_nonmatmul_flops_than_fa1() {
+        // Section 3.1: the tweaks strictly reduce non-matmul work.
+        let p = AttnProblem::paper_setting(4096, 128, false);
+        let fa1 = &fwd_kernels(&p, &ScheduleSpec::for_method(Method::Flash1, 128))[0];
+        let fa2 = &fwd_kernels(&p, &ScheduleSpec::for_method(Method::Flash2, 128))[0];
+        assert!(fa2.nonmatmul_flops < fa1.nonmatmul_flops);
+        // and identical matmul FLOPs per visited pair (same math!)
+        assert!((fa2.matmul_flops - fa1.matmul_flops).abs() / fa1.matmul_flops < 0.02);
+    }
+
+    #[test]
+    fn fa2_grid_scales_with_seqlen_fa1_does_not() {
+        let p = AttnProblem::paper_setting(16384, 128, false);
+        let fa1 = &fwd_kernels(&p, &ScheduleSpec::for_method(Method::Flash1, 128))[0];
+        let fa2 = &fwd_kernels(&p, &ScheduleSpec::for_method(Method::Flash2, 128))[0];
+        assert_eq!(fa1.grid, p.batch * p.heads);
+        assert_eq!(fa2.grid, p.batch * p.heads * (16384 / 128));
+    }
+
+    #[test]
+    fn splitk_smem_exchange_is_visible() {
+        let p = AttnProblem::paper_setting(4096, 64, false);
+        let fa1 = &fwd_kernels(&p, &ScheduleSpec::for_method(Method::Flash1, 64))[0];
+        let fa2 = &fwd_kernels(&p, &ScheduleSpec::for_method(Method::Flash2, 64))[0];
+        assert!(fa1.smem_bytes > 1.5 * fa2.smem_bytes);
+    }
+
+    #[test]
+    fn standard_materializes_the_square() {
+        let p = AttnProblem::paper_setting(4096, 64, false);
+        let ks = standard_kernels(&p, Pass::Fwd);
+        assert_eq!(ks.len(), 3);
+        let total_hbm: f64 = ks.iter().map(|k| k.hbm_bytes).sum();
+        // at least 4 full N^2 matrices of traffic
+        assert!(total_hbm > 4.0 * p.score_matrix_bytes());
+        let ks_bwd = standard_kernels(&p, Pass::FwdBwd);
+        assert_eq!(ks_bwd.len(), 8);
+    }
+
+    #[test]
+    fn causal_halves_flash_matmul_but_not_standard() {
+        let full = AttnProblem::paper_setting(8192, 128, false);
+        let causal = AttnProblem::paper_setting(8192, 128, true);
+        let f2f = &kernels_for(&full, Method::Flash2, Pass::Fwd)[0];
+        let f2c = &kernels_for(&causal, Method::Flash2, Pass::Fwd)[0];
+        let ratio = f2c.matmul_flops / f2f.matmul_flops;
+        assert!(ratio > 0.45 && ratio < 0.55, "{ratio}");
+        let sf: f64 = kernels_for(&full, Method::Standard, Pass::Fwd).iter().map(|k| k.matmul_flops).sum();
+        let sc: f64 = kernels_for(&causal, Method::Standard, Pass::Fwd).iter().map(|k| k.matmul_flops).sum();
+        assert_eq!(sf, sc); // standard computes the whole square regardless
+    }
+}

@@ -1,0 +1,282 @@
+//! Regenerate the paper's figures 4-7: attention throughput (TFLOPs/s) vs
+//! sequence length for standard / FlashAttention / Triton / FlashAttention-2,
+//! across {causal, non-causal} x {head_dim 64, 128}, on A100 (figs 4-6) and
+//! H100 (fig 7).
+//!
+//! Output: CSV rows + an ASCII chart per sub-figure + shape assertions (the
+//! reproduction bands from DESIGN.md section 4: who wins, by what factor).
+
+use std::fmt::Write as _;
+
+use crate::attn::{simulate_tflops, AttnProblem, Method, Pass};
+use crate::gpusim::Device;
+
+pub const SEQLENS: [u64; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// One sub-figure (a panel in the paper's figure grid).
+#[derive(Debug, Clone)]
+pub struct Panel {
+    pub device: Device,
+    pub pass: Pass,
+    pub head_dim: u64,
+    pub causal: bool,
+}
+
+impl Panel {
+    pub fn title(&self) -> String {
+        format!(
+            "{}, {} head_dim={} {}",
+            self.device.name,
+            match self.pass {
+                Pass::Fwd => "fwd",
+                Pass::Bwd => "bwd",
+                Pass::FwdBwd => "fwd+bwd",
+            },
+            self.head_dim,
+            if self.causal { "causal" } else { "no-mask" },
+        )
+    }
+}
+
+/// A measured/simulated series: TFLOPs/s per seqlen for one method.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub method: Method,
+    pub tflops: Vec<f64>,
+}
+
+pub struct PanelResult {
+    pub panel: Panel,
+    pub series: Vec<Series>,
+}
+
+pub fn run_panel(panel: &Panel) -> PanelResult {
+    let series = Method::all()
+        .into_iter()
+        .map(|method| Series {
+            method,
+            tflops: SEQLENS
+                .iter()
+                .map(|&n| {
+                    let p = AttnProblem::paper_setting(n, panel.head_dim, panel.causal);
+                    simulate_tflops(&panel.device, &p, method, panel.pass) / 1e12
+                })
+                .collect(),
+        })
+        .collect();
+    PanelResult { panel: panel.clone(), series }
+}
+
+/// The panels of one paper figure.
+pub fn figure_panels(fig: u32) -> Vec<Panel> {
+    let (device, pass) = match fig {
+        4 => (Device::a100(), Pass::FwdBwd),
+        5 => (Device::a100(), Pass::Fwd),
+        6 => (Device::a100(), Pass::Bwd),
+        7 => (Device::h100(), Pass::FwdBwd),
+        _ => panic!("unknown figure {fig} (paper has figures 4-7)"),
+    };
+    let mut panels = Vec::new();
+    for causal in [false, true] {
+        for head_dim in [64, 128] {
+            panels.push(Panel { device: device.clone(), pass, head_dim, causal });
+        }
+    }
+    panels
+}
+
+pub fn run_figure(fig: u32) -> Vec<PanelResult> {
+    figure_panels(fig).iter().map(run_panel).collect()
+}
+
+/// CSV for all panels of a figure (matches the paper's plotted series).
+pub fn to_csv(results: &[PanelResult]) -> String {
+    let mut out = String::from("figure_panel,device,pass,head_dim,causal,method,seqlen,tflops\n");
+    for r in results {
+        for s in &r.series {
+            for (i, &n) in SEQLENS.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "{},{},{:?},{},{},{},{},{:.1}",
+                    r.panel.title(),
+                    r.panel.device.name,
+                    r.panel.pass,
+                    r.panel.head_dim,
+                    r.panel.causal,
+                    s.method.name(),
+                    n,
+                    s.tflops[i]
+                );
+            }
+        }
+    }
+    out
+}
+
+/// ASCII rendering of one panel (the terminal stand-in for the paper plot).
+pub fn render_ascii(r: &PanelResult) -> String {
+    let mut out = String::new();
+    let peak = r.panel.device.matmul_flops / 1e12;
+    let _ = writeln!(out, "── {} (peak {peak:.0} TFLOPs/s) ──", r.panel.title());
+    let _ = writeln!(
+        out,
+        "{:<18} {}",
+        "method",
+        SEQLENS.iter().map(|n| format!("{n:>7}")).collect::<String>()
+    );
+    let max = r
+        .series
+        .iter()
+        .flat_map(|s| s.tflops.iter())
+        .cloned()
+        .fold(1.0f64, f64::max);
+    for s in &r.series {
+        let _ = write!(out, "{:<18}", s.method.name());
+        for &t in &s.tflops {
+            let _ = write!(out, "{t:>7.0}");
+        }
+        let _ = writeln!(out);
+        // bar chart line
+        let _ = write!(out, "{:<18}", "");
+        for &t in &s.tflops {
+            let w = ((t / max) * 6.0).round() as usize;
+            let _ = write!(out, "{:>7}", "▇".repeat(w.max(1)));
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Shape assertions: the reproduction bands.  Returns a list of human-
+/// readable check results; `ok == false` on any row fails the bench.
+#[derive(Debug)]
+pub struct BandCheck {
+    pub name: String,
+    pub value: f64,
+    pub lo: f64,
+    pub hi: f64,
+    pub ok: bool,
+}
+
+fn check(name: String, value: f64, lo: f64, hi: f64) -> BandCheck {
+    BandCheck { name, value, lo, hi, ok: value >= lo && value <= hi }
+}
+
+fn series<'a>(r: &'a PanelResult, m: Method) -> &'a [f64] {
+    &r.series.iter().find(|s| s.method == m).unwrap().tflops
+}
+
+/// Bands for the A100 figures, from the paper's section 4.1 claims.
+pub fn check_bands(results: &[PanelResult], pass: Pass) -> Vec<BandCheck> {
+    let mut checks = Vec::new();
+    for r in results {
+        let title = r.panel.title();
+        let peak = r.panel.device.matmul_flops / 1e12;
+        let fa2 = series(r, Method::Flash2);
+        let fa1 = series(r, Method::Flash1);
+        let tri = series(r, Method::Triton);
+        let std_ = series(r, Method::Standard);
+        // "FlashAttention-2 is 1.7-3.0x faster than FlashAttention": checked
+        // as a geometric mean over the sweep, plus loose pointwise rails
+        // (the ratio legitimately explodes at 16k where FA1's grid is 16-32
+        // blocks on 108 SMs — that IS the paper's occupancy argument).
+        let geomean = ((0..SEQLENS.len())
+            .map(|i| (fa2[i] / fa1[i]).ln())
+            .sum::<f64>()
+            / SEQLENS.len() as f64)
+            .exp();
+        checks.push(check(format!("{title}: FA2/FA1 geomean"), geomean, 1.5, 3.6));
+        for i in 0..SEQLENS.len() {
+            checks.push(check(
+                format!("{title}: FA2/FA1 @n={}", SEQLENS[i]),
+                fa2[i] / fa1[i],
+                1.2,
+                16.0,
+            ));
+        }
+        // "1.3-2.5x faster than FlashAttention in Triton" (fwd; ~2x bwd)
+        let mid = 2;
+        checks.push(check(
+            format!("{title}: FA2/Triton @n={}", SEQLENS[mid]),
+            fa2[mid] / tri[mid],
+            1.2,
+            2.8,
+        ));
+        // "3-10x faster than a standard attention implementation" (the
+        // causal panels exceed 10x because standard is charged the halved
+        // FLOP count while executing the full square — same accounting as
+        // the paper's figures)
+        for i in 2..SEQLENS.len() {
+            checks.push(check(
+                format!("{title}: FA2/standard @n={}", SEQLENS[i]),
+                fa2[i] / std_[i],
+                2.5,
+                22.0,
+            ));
+        }
+        // Peak efficiency: fwd "up to 73%", bwd "up to 63%" of max.
+        let best = fa2.iter().cloned().fold(0.0f64, f64::max) / peak;
+        match pass {
+            Pass::Fwd => checks.push(check(
+                format!("{title}: FA2 peak fraction (fwd)"),
+                best,
+                0.55,
+                0.80,
+            )),
+            Pass::Bwd => checks.push(check(
+                format!("{title}: FA2 peak fraction (bwd)"),
+                best,
+                0.45,
+                0.70,
+            )),
+            Pass::FwdBwd => checks.push(check(
+                format!("{title}: FA2 peak fraction (fwd+bwd)"),
+                best,
+                0.45,
+                0.75,
+            )),
+        }
+        // FA2 should hold throughput flat (or rising) with seqlen — that is
+        // the whole point of seqlen parallelism. Allow 15% sag.
+        let sag = fa2[SEQLENS.len() - 1] / fa2.iter().cloned().fold(0.0f64, f64::max);
+        checks.push(check(format!("{title}: FA2 long-seq retention"), sag, 0.85, 1.01));
+        // FA1 must DROP with seqlen in the fixed-token setting (occupancy).
+        let fa1_drop = fa1[SEQLENS.len() - 1] / fa1[0];
+        checks.push(check(format!("{title}: FA1 long-seq decline"), fa1_drop, 0.05, 0.9));
+    }
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure4_panels_cover_the_grid() {
+        let panels = figure_panels(4);
+        assert_eq!(panels.len(), 4);
+        assert!(panels.iter().any(|p| p.causal && p.head_dim == 128));
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let results = run_figure(5);
+        let csv = to_csv(&results);
+        // 4 panels x 4 methods x 6 seqlens + header
+        assert_eq!(csv.lines().count(), 1 + 4 * 4 * 6);
+    }
+
+    #[test]
+    fn h100_beats_a100_for_fa2() {
+        let a = run_panel(&Panel { device: Device::a100(), pass: Pass::FwdBwd, head_dim: 128, causal: false });
+        let h = run_panel(&Panel { device: Device::h100(), pass: Pass::FwdBwd, head_dim: 128, causal: false });
+        let fa2_a = series(&a, Method::Flash2);
+        let fa2_h = series(&h, Method::Flash2);
+        for i in 0..SEQLENS.len() {
+            assert!(fa2_h[i] > fa2_a[i]);
+        }
+        // paper fig 7: up to ~335 TFLOPs/s on H100 with the same kernels
+        let peak_h = fa2_h.iter().cloned().fold(0.0f64, f64::max);
+        assert!(peak_h > 280.0 && peak_h < 390.0, "H100 peak {peak_h}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Benchmark harness: one module per paper artifact (figures 4-7, table 1),
+//! plus runtime microbenches.  `cargo bench` targets and the `repro figures`
+//! CLI both call into here.
+
+pub mod figures;
+pub mod table1;

@@ -1,0 +1,131 @@
+//! Run configuration: TOML files under `configs/` parsed with the in-tree
+//! `toml_lite` codec into typed structs used by the CLI, trainer and server.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::train::trainer::TrainConfig;
+use crate::util::toml_lite::TomlDoc;
+
+/// Top-level config file (see configs/train_tiny.toml for the schema).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifact_dir: String,
+    pub train: TrainConfig,
+    pub serve: ServeConfig,
+    pub bench: BenchConfig,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub num_requests: usize,
+    pub tokens_per_request: usize,
+    /// Poisson arrival rate (requests/second); 0 = closed-loop.
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "tiny".into(),
+            num_requests: 16,
+            tokens_per_request: 8,
+            arrival_rate: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub out_dir: String,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { out_dir: "reports".into() }
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifact_dir: "artifacts".into(),
+            train: TrainConfig::default(),
+            serve: ServeConfig::default(),
+            bench: BenchConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> RunConfig {
+        let d = RunConfig::default();
+        let dt = TrainConfig::default();
+        RunConfig {
+            artifact_dir: doc.str_or("artifact_dir", &d.artifact_dir).to_string(),
+            train: TrainConfig {
+                model: doc.str_or("train.model", &dt.model).to_string(),
+                variant: doc.str_or("train.variant", &dt.variant).to_string(),
+                steps: doc.i64_or("train.steps", dt.steps as i64) as usize,
+                seed: doc.i64_or("train.seed", dt.seed as i64) as u64,
+                log_every: doc.i64_or("train.log_every", dt.log_every as i64) as usize,
+                checkpoint: doc
+                    .get("train.checkpoint")
+                    .and_then(|v| v.as_str())
+                    .map(String::from),
+            },
+            serve: ServeConfig {
+                model: doc.str_or("serve.model", &d.serve.model).to_string(),
+                num_requests: doc.i64_or("serve.num_requests", d.serve.num_requests as i64)
+                    as usize,
+                tokens_per_request: doc
+                    .i64_or("serve.tokens_per_request", d.serve.tokens_per_request as i64)
+                    as usize,
+                arrival_rate: doc.f64_or("serve.arrival_rate", d.serve.arrival_rate),
+                seed: doc.i64_or("serve.seed", d.serve.seed as i64) as u64,
+            },
+            bench: BenchConfig {
+                out_dir: doc.str_or("bench.out_dir", &d.bench.out_dir).to_string(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = RunConfig::from_doc(&doc);
+        assert_eq!(c.train.model, "tiny");
+        assert_eq!(c.serve.num_requests, 16);
+    }
+
+    #[test]
+    fn overrides_applied() {
+        let doc = TomlDoc::parse(
+            "artifact_dir = \"a\"\n[train]\nmodel = \"small\"\nsteps = 7\n\
+             checkpoint = \"ckpt.fat1\"\n[serve]\narrival_rate = 3.5\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_doc(&doc);
+        assert_eq!(c.artifact_dir, "a");
+        assert_eq!(c.train.model, "small");
+        assert_eq!(c.train.steps, 7);
+        assert_eq!(c.train.checkpoint.as_deref(), Some("ckpt.fat1"));
+        assert!((c.serve.arrival_rate - 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,215 @@
+//! Dynamic batching policy: the pure, testable core of the serving
+//! coordinator (vLLM-router-style max-batch / max-wait policy).
+//!
+//! The policy is deliberately separated from threads and channels so its
+//! invariants can be property-tested exhaustively:
+//!   * no request is lost or duplicated,
+//!   * a batch never exceeds `max_batch`,
+//!   * no admitted request waits longer than `max_wait` once the clock
+//!     advances (modulo an in-flight batch),
+//!   * FIFO order is preserved within a batch.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Policy configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch the executor accepts (a compiled bucket size).
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before a partial batch
+    /// is dispatched anyway.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A queued request with its enqueue timestamp (abstract clock, seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Queued<T> {
+    pub item: T,
+    pub enqueued_at: f64,
+}
+
+/// The batching queue.  Generic over the request payload.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Queued<T>>,
+    /// Monotonic counters for invariant checking / metrics.
+    pub enqueued: u64,
+    pub dispatched: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: VecDeque::new(), enqueued: 0, dispatched: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn push(&mut self, item: T, now: f64) {
+        self.queue.push_back(Queued { item, enqueued_at: now });
+        self.enqueued += 1;
+    }
+
+    /// Should a batch be dispatched right now?
+    pub fn ready(&self, now: f64) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(front) => now - front.enqueued_at >= self.policy.max_wait.as_secs_f64(),
+            None => false,
+        }
+    }
+
+    /// Time until the oldest request hits its deadline (for worker sleeps).
+    pub fn time_to_deadline(&self, now: f64) -> Option<Duration> {
+        self.queue.front().map(|f| {
+            let dl = f.enqueued_at + self.policy.max_wait.as_secs_f64();
+            Duration::from_secs_f64((dl - now).max(0.0))
+        })
+    }
+
+    /// Pop the next batch (up to max_batch, FIFO).  Call when `ready`.
+    pub fn take_batch(&mut self) -> Vec<Queued<T>> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<_> = self.queue.drain(..n).collect();
+        self.dispatched += batch.len() as u64;
+        batch
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn policy(max_batch: usize, max_wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(max_wait_ms) }
+    }
+
+    #[test]
+    fn dispatches_full_batch_immediately() {
+        let mut b = Batcher::new(policy(4, 100));
+        for i in 0..4 {
+            b.push(i, 0.0);
+        }
+        assert!(b.ready(0.0));
+        let batch = b.take_batch();
+        assert_eq!(batch.iter().map(|q| q.item).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = Batcher::new(policy(4, 100));
+        b.push(1u32, 0.0);
+        assert!(!b.ready(0.05));
+        assert!(b.ready(0.11));
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let mut b = Batcher::new(policy(3, 1));
+        for i in 0..10 {
+            b.push(i, 0.0);
+        }
+        assert_eq!(b.take_batch().len(), 3);
+        assert_eq!(b.take_batch().len(), 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn deadline_countdown() {
+        let mut b = Batcher::new(policy(8, 10));
+        assert!(b.time_to_deadline(0.0).is_none());
+        b.push(0u8, 1.0);
+        let d = b.time_to_deadline(1.004).unwrap();
+        assert!((d.as_secs_f64() - 0.006).abs() < 1e-9);
+        assert_eq!(b.time_to_deadline(2.0).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn prop_no_loss_no_duplication_fifo() {
+        check("batcher-conservation", PropConfig::default(), |rng: &mut Rng| {
+            let max_batch = rng.range_usize(1, 9);
+            let max_wait = rng.range_i64(1, 50) as u64;
+            let mut b = Batcher::new(policy(max_batch, max_wait));
+            let n = rng.range_usize(1, 200);
+            let mut now = 0.0;
+            let mut out: Vec<usize> = Vec::new();
+            let mut pushed = 0usize;
+            while out.len() < n {
+                // interleave pushes and dispatches randomly
+                if pushed < n && rng.next_f64() < 0.6 {
+                    b.push(pushed, now);
+                    pushed += 1;
+                }
+                now += rng.next_f64() * 0.01;
+                while b.ready(now) {
+                    out.extend(b.take_batch().into_iter().map(|q| q.item));
+                }
+                if pushed == n {
+                    now += 1.0; // flush via deadline
+                }
+            }
+            crate::prop_assert!(
+                out == (0..n).collect::<Vec<_>>(),
+                "requests lost/duplicated/reordered: {out:?}"
+            );
+            crate::prop_assert!(
+                b.enqueued == b.dispatched && b.is_empty(),
+                "counters diverge: {} vs {}", b.enqueued, b.dispatched
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_batches_bounded_and_deadline_respected() {
+        check("batcher-bounds", PropConfig::default(), |rng: &mut Rng| {
+            let max_batch = rng.range_usize(1, 6);
+            let wait_ms = rng.range_i64(1, 20) as u64;
+            let mut b = Batcher::new(policy(max_batch, wait_ms));
+            let mut now = 0.0;
+            for i in 0..100 {
+                b.push(i, now);
+                now += rng.next_f64() * 0.005;
+                if b.ready(now) {
+                    let batch = b.take_batch();
+                    crate::prop_assert!(
+                        batch.len() <= max_batch,
+                        "batch too big: {}", batch.len()
+                    );
+                    // the oldest dispatched item must not have exceeded its
+                    // deadline by more than the simulation step
+                    let age = now - batch[0].enqueued_at;
+                    crate::prop_assert!(
+                        age <= wait_ms as f64 / 1000.0 + 0.005 + 1e-9
+                            || batch.len() == max_batch,
+                        "deadline violated: age {age}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,91 @@
+//! Serving metrics: request latency distribution, time-to-first-token,
+//! token throughput.  Printed by `repro serve` and the serving example.
+
+use std::time::Instant;
+
+use crate::util::stats::{percentile, fmt_duration};
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    latencies: Vec<f64>,
+    ttfts: Vec<f64>,
+    tokens: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { started: Instant::now(), latencies: Vec::new(), ttfts: Vec::new(), tokens: 0 }
+    }
+
+    pub fn observe_request(&mut self, latency: f64, ttft: f64, n_tokens: usize) {
+        self.latencies.push(latency);
+        self.ttfts.push(ttft);
+        self.tokens += n_tokens as u64;
+    }
+
+    pub fn requests(&self) -> usize {
+        self.latencies.len()
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.elapsed()
+    }
+
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let mut s = self.latencies.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() { 0.0 } else { percentile(&s, q) }
+    }
+
+    pub fn ttft_percentile(&self, q: f64) -> f64 {
+        let mut s = self.ttfts.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() { 0.0 } else { percentile(&s, q) }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s  \
+             latency p50={} p95={}  ttft p50={}",
+            self.requests(),
+            self.tokens(),
+            self.tokens_per_sec(),
+            fmt_duration(self.latency_percentile(0.5)),
+            fmt_duration(self.latency_percentile(0.95)),
+            fmt_duration(self.ttft_percentile(0.5)),
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_counts() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_request(i as f64 / 1000.0, i as f64 / 2000.0, 4);
+        }
+        assert_eq!(m.requests(), 100);
+        assert_eq!(m.tokens(), 400);
+        assert!((m.latency_percentile(0.5) - 0.0505).abs() < 1e-3);
+        assert!(m.latency_percentile(0.95) > m.latency_percentile(0.5));
+        assert!(m.report().contains("requests=100"));
+    }
+}

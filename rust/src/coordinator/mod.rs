@@ -1,0 +1,8 @@
+//! Serving coordinator: dynamic batcher policy, mini-vLLM decode server,
+//! and serving metrics.  The paper's kernel slots into serving as the
+//! prefill compute; the coordinator proves the artifacts compose into a
+//! request-driven system with Python off the request path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;

@@ -1,0 +1,206 @@
+//! Kernel cost model: time a simulated kernel launch on a `Device`.
+//!
+//! Model (deliberately simple, every term auditable):
+//!
+//!   t_matmul    = matmul_flops    / (matmul_peak  * mm_eff * fill)
+//!   t_nonmatmul = nonmatmul_flops / (nonmatmul_pk * fill)
+//!   t_compute   = t_matmul + t_nonmatmul          (serialized in-SM: the
+//!                 softmax sits on the critical path between the two GEMMs)
+//!   t_hbm       = hbm_bytes  / hbm_bw
+//!   t_smem      = smem_bytes / smem_bw
+//!   time        = max(t_compute, t_hbm, t_smem) / wave_efficiency
+//!
+//! where `fill` is the fraction of SMs occupied in the first wave (section
+//! 3.2's occupancy effect: a grid of batch*heads = 16 blocks on 108 SMs can
+//! use at most 15% of the compute no matter what), `wave_efficiency`
+//! captures the partial-last-wave tail, and `mm_eff` derates the tensor-core
+//! peak for tile geometry (head_dim 64 tiles utilize the MXU/tensor-core
+//! pipeline less than 128-wide tiles; GEMM itself tops out at 80-90%).
+
+use super::device::Device;
+use super::occupancy::{occupancy, waves, BlockResources, Limiter};
+
+/// A simulated kernel launch: grid + per-block resources + aggregate work.
+#[derive(Debug, Clone)]
+pub struct KernelLaunch {
+    pub label: &'static str,
+    pub grid: u64,
+    pub block: BlockResources,
+    /// Total tensor-core FLOPs over the whole kernel.
+    pub matmul_flops: f64,
+    /// Total CUDA-core (non-matmul) FLOPs: softmax exp/max/sum, rescales,
+    /// masking — the currency of paper section 3.1.
+    pub nonmatmul_flops: f64,
+    /// Total HBM traffic in bytes (both directions).
+    pub hbm_bytes: f64,
+    /// Total shared-memory traffic in bytes, *excluding* what stays in
+    /// registers.  Split-K partial exchanges land here (section 3.3).
+    pub smem_bytes: f64,
+    /// Tensor-core efficiency for this kernel's tile geometry (0..1].
+    pub mm_eff: f64,
+}
+
+/// Cost breakdown for one kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelCost {
+    pub time: f64,
+    pub t_matmul: f64,
+    pub t_nonmatmul: f64,
+    pub t_hbm: f64,
+    pub t_smem: f64,
+    pub sm_fill: f64,
+    pub wave_efficiency: f64,
+    pub waves: u64,
+    pub limiter: Limiter,
+}
+
+impl KernelCost {
+    pub fn bound(&self) -> &'static str {
+        let compute = self.t_matmul + self.t_nonmatmul;
+        if compute >= self.t_hbm && compute >= self.t_smem {
+            "compute"
+        } else if self.t_hbm >= self.t_smem {
+            "hbm"
+        } else {
+            "smem"
+        }
+    }
+}
+
+/// Fixed launch overhead per kernel (host->device, ~3-5us on real GPUs);
+/// matters only for the standard-attention multi-kernel pipeline at tiny N.
+const LAUNCH_OVERHEAD: f64 = 4e-6;
+
+pub fn simulate(dev: &Device, k: &KernelLaunch) -> KernelCost {
+    let occ = occupancy(dev, k.block);
+    let w = waves(dev, &occ, k.grid);
+    if occ.concurrent_blocks == 0 || k.grid == 0 {
+        return KernelCost {
+            time: f64::INFINITY,
+            t_matmul: 0.0,
+            t_nonmatmul: 0.0,
+            t_hbm: 0.0,
+            t_smem: 0.0,
+            sm_fill: 0.0,
+            wave_efficiency: 0.0,
+            waves: 0,
+            limiter: occ.limiter,
+        };
+    }
+    let fill = w.sm_fill;
+    let t_matmul = k.matmul_flops / (dev.matmul_flops * k.mm_eff * fill);
+    let t_nonmatmul = k.nonmatmul_flops / (dev.nonmatmul_flops * fill);
+    let t_compute = t_matmul + t_nonmatmul;
+    let t_hbm = k.hbm_bytes / dev.hbm_bw;
+    // smem bandwidth scales with the SMs actually in use.
+    let t_smem = k.smem_bytes / (dev.smem_bw * fill);
+    let time = t_compute.max(t_hbm).max(t_smem) / w.efficiency + LAUNCH_OVERHEAD;
+    KernelCost {
+        time,
+        t_matmul,
+        t_nonmatmul,
+        t_hbm,
+        t_smem,
+        sm_fill: fill,
+        wave_efficiency: w.efficiency,
+        waves: w.waves,
+        limiter: occ.limiter,
+    }
+}
+
+/// Total time of a multi-kernel pipeline (standard attention = 3 kernels,
+/// split-K = partial + combine, backward = D + dKdV + dQ).
+pub fn simulate_pipeline(dev: &Device, kernels: &[KernelLaunch]) -> f64 {
+    kernels.iter().map(|k| simulate(dev, k).time).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flash_like(grid: u64, matmul: f64, nonmatmul: f64) -> KernelLaunch {
+        KernelLaunch {
+            label: "test",
+            grid,
+            block: BlockResources::flash_block(4, 64 * 1024),
+            matmul_flops: matmul,
+            nonmatmul_flops: nonmatmul,
+            hbm_bytes: 1e6,
+            smem_bytes: 0.0,
+            mm_eff: 0.9,
+        }
+    }
+
+    #[test]
+    fn compute_bound_kernel_hits_derated_peak() {
+        let dev = Device::a100();
+        let k = flash_like(10_000, 1e12, 0.0);
+        let c = simulate(&dev, &k);
+        assert_eq!(c.bound(), "compute");
+        let achieved = 1e12 / c.time;
+        // ~0.9 * 312T derated by wave efficiency; must be in (200, 290) TFLOPs.
+        assert!(achieved > 200e12 && achieved < 290e12, "{achieved:e}");
+    }
+
+    #[test]
+    fn nonmatmul_flops_are_16x_more_expensive() {
+        let dev = Device::a100();
+        let only_mm = simulate(&dev, &flash_like(10_000, 1e12, 0.0));
+        let only_nm = simulate(&dev, &flash_like(10_000, 0.0, 1e12));
+        let ratio = only_nm.t_nonmatmul / only_mm.t_matmul;
+        // 16x raw penalty, scaled by the 0.9 mm_eff on the matmul side.
+        assert!((ratio - 16.0 * 0.9).abs() < 0.2, "{ratio}");
+    }
+
+    #[test]
+    fn hbm_bound_when_traffic_dominates() {
+        let dev = Device::a100();
+        let mut k = flash_like(10_000, 1e9, 0.0);
+        k.hbm_bytes = 1e12; // 0.5s of HBM vs ~4us of compute
+        let c = simulate(&dev, &k);
+        assert_eq!(c.bound(), "hbm");
+        assert!((c.time - 0.5).abs() / 0.5 < 0.1, "{}", c.time);
+    }
+
+    #[test]
+    fn small_grid_is_slower_per_flop() {
+        // Section 3.2: grid = 16 (batch*heads, long-seq regime) vs 4096.
+        let dev = Device::a100();
+        let small = simulate(&dev, &flash_like(16, 1e12, 0.0));
+        let large = simulate(&dev, &flash_like(4096, 1e12, 0.0));
+        assert!(
+            small.time > 5.0 * large.time,
+            "small {} vs large {}",
+            small.time,
+            large.time
+        );
+    }
+
+    #[test]
+    fn smem_traffic_adds_cost() {
+        let dev = Device::a100();
+        let mut with_exchange = flash_like(4096, 1e12, 0.0);
+        with_exchange.smem_bytes = 1e11; // split-K style exchange
+        let base = simulate(&dev, &flash_like(4096, 1e12, 0.0));
+        let loaded = simulate(&dev, &with_exchange);
+        assert!(loaded.time > base.time);
+        assert_eq!(loaded.bound(), "smem");
+    }
+
+    #[test]
+    fn pipeline_sums_kernels() {
+        let dev = Device::a100();
+        let k = flash_like(4096, 1e12, 0.0);
+        let one = simulate(&dev, &k).time;
+        let three = simulate_pipeline(&dev, &[k.clone(), k.clone(), k]);
+        assert!((three - 3.0 * one).abs() / three < 1e-9);
+    }
+
+    #[test]
+    fn oversized_kernel_is_infinite() {
+        let dev = Device::a100();
+        let mut k = flash_like(100, 1e12, 0.0);
+        k.block.smem_bytes = 300 * 1024;
+        assert!(simulate(&dev, &k).time.is_infinite());
+    }
+}

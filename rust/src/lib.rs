@@ -1,0 +1,12 @@
+//! FlashAttention-2 reproduction: Rust coordinator over JAX/Pallas AOT
+//! artifacts, plus the GPU cost-model substrate that regenerates the paper's
+//! figures.  See DESIGN.md for the system inventory.
+
+pub mod attn;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod gpusim;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,387 @@
+//! `repro` — the FlashAttention-2 reproduction CLI (leader entry point).
+//!
+//! Subcommands (argument parsing is in-tree; clap is not vendored offline):
+//!   figures   regenerate paper figures 4-7 from the gpusim cost model
+//!   table1    regenerate paper Table 1 (end-to-end training TFLOPs/s)
+//!   simulate  section 3.1/3.3 ablation reports (rescale, split-K, occupancy)
+//!   verify    execute every artifact with golden vectors and compare
+//!   train     run the AOT train_step loop on the synthetic corpus
+//!   serve     run the batched decode server on a synthetic workload
+//!   inspect   list artifacts in the manifest
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
+use fa2::bench::{figures, table1};
+use fa2::config::RunConfig;
+use fa2::coordinator::server::{GenRequest, Server};
+use fa2::gpusim::{simulate, Device};
+use fa2::runtime::Runtime;
+use fa2::train::corpus::Corpus;
+use fa2::train::trainer::{TrainConfig, Trainer};
+use fa2::util::rng::Rng;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [options]\n\
+         commands:\n  \
+           figures  [--fig 4|5|6|7|all] [--out-dir DIR]\n  \
+           table1   [--device a100|h100] [--out-dir DIR]\n  \
+           simulate [--ablation rescale|splitk|occupancy|blocks]\n  \
+           verify   [--artifact NAME] [--artifact-dir DIR]\n  \
+           train    [--config FILE] [--model tiny|small] [--steps N]\n           \
+                    [--variant ''|_refattn] [--loss-csv FILE]\n  \
+           serve    [--config FILE] [--requests N] [--tokens N] [--rate R]\n  \
+           inspect  [--artifact-dir DIR]"
+    );
+    std::process::exit(2)
+}
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    pairs: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
+            let v = argv.get(i + 1).cloned().unwrap_or_default();
+            pairs.push((k.to_string(), v));
+            i += 2;
+        }
+        Ok(Args { pairs })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key} {v}: not a number")))
+            .transpose()
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "figures" => cmd_figures(&args),
+        "table1" => cmd_table1(&args),
+        "simulate" => cmd_simulate(&args),
+        "verify" => cmd_verify(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "inspect" => cmd_inspect(&args),
+        _ => usage(),
+    }
+}
+
+fn out_dir(args: &Args) -> Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(args.get("out-dir").unwrap_or("reports"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args.get("fig").unwrap_or("all");
+    let figs: Vec<u32> = match which {
+        "all" => vec![4, 5, 6, 7],
+        f => vec![f.parse().context("--fig must be 4..7 or all")?],
+    };
+    let dir = out_dir(args)?;
+    let mut any_fail = false;
+    for fig in figs {
+        let results = figures::run_figure(fig);
+        println!("=== Figure {fig} ===");
+        for r in &results {
+            print!("{}", figures::render_ascii(r));
+        }
+        let csv_path = dir.join(format!("fig{fig}.csv"));
+        std::fs::write(&csv_path, figures::to_csv(&results))?;
+        println!("wrote {}", csv_path.display());
+        if fig != 7 {
+            let pass = match fig {
+                5 => Pass::Fwd,
+                6 => Pass::Bwd,
+                _ => Pass::FwdBwd,
+            };
+            let checks = figures::check_bands(&results, pass);
+            let failed: Vec<_> = checks.iter().filter(|c| !c.ok).collect();
+            println!(
+                "band checks: {}/{} ok",
+                checks.len() - failed.len(),
+                checks.len()
+            );
+            for c in failed {
+                println!("  FAIL {}: {:.2} not in [{},{}]", c.name, c.value, c.lo, c.hi);
+                any_fail = true;
+            }
+        }
+    }
+    if any_fail {
+        bail!("figure band checks failed");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let dev = Device::by_name(args.get("device").unwrap_or("a100"))
+        .context("--device must be a100 or h100")?;
+    let cells = table1::run_table1(&dev);
+    println!("=== Table 1 (simulated {}) ===", dev.name);
+    print!("{}", table1::render(&cells));
+    println!("\npaper-reported values for comparison:");
+    println!(
+        "GPT3-1.3B 2k: 142/189/196   GPT3-1.3B 8k: 72/170/220\n\
+         GPT3-2.7B 2k: 149/189/205   GPT3-2.7B 8k: 80/175/225"
+    );
+    let dir = out_dir(args)?;
+    let p = dir.join("table1.csv");
+    std::fs::write(&p, table1::to_csv(&cells))?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let dev = Device::a100();
+    match args.get("ablation").unwrap_or("rescale") {
+        "rescale" => {
+            // Section 3.1 ablation: non-matmul FLOPs FA1 vs FA2.
+            println!("non-matmul FLOPs ablation (fwd, B*N=16k tokens, d=128):");
+            println!(
+                "{:<8} {:>14} {:>14} {:>10} {:>12}",
+                "seqlen", "FA1 nm-FLOPs", "FA2 nm-FLOPs", "saved", "time saved"
+            );
+            for n in figures::SEQLENS {
+                let p = AttnProblem::paper_setting(n, 128, false);
+                let f1 = &kernels_for(&p, Method::Flash1, Pass::Fwd)[0];
+                let f2 = &kernels_for(&p, Method::Flash2, Pass::Fwd)[0];
+                let saved = f1.nonmatmul_flops - f2.nonmatmul_flops;
+                println!(
+                    "{:<8} {:>14.3e} {:>14.3e} {:>9.1}% {:>10.3} ms",
+                    n,
+                    f1.nonmatmul_flops,
+                    f2.nonmatmul_flops,
+                    100.0 * saved / f1.nonmatmul_flops,
+                    saved / dev.nonmatmul_flops * 1e3,
+                );
+            }
+        }
+        "splitk" => {
+            // Section 3.3 ablation: smem exchange traffic split-K vs split-Q.
+            println!("warp-partitioning ablation (fwd, d=64):");
+            println!(
+                "{:<8} {:>14} {:>14} {:>12}",
+                "seqlen", "splitK smem", "splitQ smem", "extra time"
+            );
+            for n in figures::SEQLENS {
+                let p = AttnProblem::paper_setting(n, 64, false);
+                let f1 = &kernels_for(&p, Method::Flash1, Pass::Fwd)[0];
+                let f2 = &kernels_for(&p, Method::Flash2, Pass::Fwd)[0];
+                println!(
+                    "{:<8} {:>11.2} GB {:>11.2} GB {:>10.3} ms",
+                    n,
+                    f1.smem_bytes / 1e9,
+                    f2.smem_bytes / 1e9,
+                    (f1.smem_bytes - f2.smem_bytes) / dev.smem_bw * 1e3,
+                );
+            }
+        }
+        "occupancy" => {
+            // Section 3.2 ablation: grid size & SM fill vs seqlen.
+            println!("occupancy ablation (fwd, d=128, B*N=16k tokens):");
+            println!(
+                "{:<8} {:>10} {:>10} {:>9} {:>9}",
+                "seqlen", "FA1 grid", "FA2 grid", "FA1 fill", "FA2 fill"
+            );
+            for n in figures::SEQLENS {
+                let p = AttnProblem::paper_setting(n, 128, false);
+                let f1 = &kernels_for(&p, Method::Flash1, Pass::Fwd)[0];
+                let f2 = &kernels_for(&p, Method::Flash2, Pass::Fwd)[0];
+                let c1 = simulate(&dev, f1);
+                let c2 = simulate(&dev, f2);
+                println!(
+                    "{:<8} {:>10} {:>10} {:>8.0}% {:>8.0}%",
+                    n, f1.grid, f2.grid, c1.sm_fill * 100.0, c2.sm_fill * 100.0
+                );
+            }
+        }
+        "blocks" => {
+            // Section 3.3 "tuning block sizes": sweep {64,128}^2.
+            println!("block-size sweep (FA2 fwd, n=4096):");
+            for d in [64u64, 128] {
+                for bq in [64u64, 128] {
+                    for bk in [64u64, 128] {
+                        let p = AttnProblem::paper_setting(4096, d, false);
+                        let mut spec =
+                            fa2::attn::ScheduleSpec::for_method(Method::Flash2, d);
+                        spec.block_q = bq;
+                        spec.block_k = bk;
+                        let ks = fa2::attn::schedule::fwd_kernels(&p, &spec);
+                        let t = fa2::gpusim::simulate_pipeline(&dev, &ks);
+                        println!(
+                            "d={d:<4} Bq={bq:<4} Bk={bk:<4} -> {:>7.1} TFLOPs/s",
+                            p.reported_flops(Pass::Fwd) / t / 1e12
+                        );
+                    }
+                }
+            }
+        }
+        other => bail!("unknown ablation {other}"),
+    }
+    Ok(())
+}
+
+fn runtime_from(args: &Args) -> Result<Arc<Runtime>> {
+    let dir = args.get("artifact-dir").unwrap_or("artifacts");
+    Ok(Arc::new(Runtime::new(Path::new(dir))?))
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let rt = runtime_from(args)?;
+    let names: Vec<String> = match args.get("artifact") {
+        Some(n) => vec![n.to_string()],
+        None => rt
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.golden_path.is_some())
+            .map(|a| a.name.clone())
+            .collect(),
+    };
+    let mut failures = 0;
+    for name in names {
+        match rt.verify_golden(&name) {
+            Ok(diffs) => {
+                let worst = diffs.iter().cloned().fold(0.0f32, f32::max);
+                let ok = worst < 2e-4;
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "{} {name}: max|Δ| = {worst:.2e} over {} outputs",
+                    if ok { "PASS" } else { "FAIL" },
+                    diffs.len()
+                );
+            }
+            Err(e) => {
+                failures += 1;
+                println!("FAIL {name}: {e:#}");
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} artifact(s) failed golden verification");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::load(Path::new(p))?.train,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.to_string();
+    }
+    if let Some(s) = args.get_usize("steps")? {
+        cfg.steps = s;
+    }
+    let rt = runtime_from(args)?;
+    let report = Trainer::new(rt).run(&cfg)?;
+    println!(
+        "trained {} for {} steps: loss {:.4} -> {:.4}",
+        cfg.model,
+        cfg.steps,
+        report.first_loss(),
+        report.last_loss()
+    );
+    println!(
+        "tokens/step {}  mean step {:.3}s  achieved {:.2} GFLOP/s (model-FLOPs accounting)",
+        report.tokens_per_step,
+        report.mean_step_secs,
+        report.achieved_flops / 1e9
+    );
+    if let Some(path) = args.get("loss-csv") {
+        std::fs::write(path, report.loss_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::load(Path::new(p))?.serve,
+        None => fa2::config::ServeConfig::default(),
+    };
+    if let Some(n) = args.get_usize("requests")? {
+        cfg.num_requests = n;
+    }
+    if let Some(n) = args.get_usize("tokens")? {
+        cfg.tokens_per_request = n;
+    }
+    if let Some(r) = args.get("rate") {
+        cfg.arrival_rate = r.parse().context("--rate")?;
+    }
+    let server = Server::start(
+        std::path::PathBuf::from(args.get("artifact-dir").unwrap_or("artifacts")),
+        &cfg.model,
+    )?;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut corpus = Corpus::new(512, cfg.seed);
+    let mut rxs = Vec::new();
+    for _ in 0..cfg.num_requests {
+        let prompt = corpus.next_batch(1, 16);
+        rxs.push(server.submit(GenRequest { prompt, n_new: cfg.tokens_per_request }));
+        if cfg.arrival_rate > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                rng.exponential(cfg.arrival_rate),
+            ));
+        }
+    }
+    for (i, rx) in rxs.iter().enumerate() {
+        let resp = rx.recv().context("server dropped response")?;
+        if i < 3 {
+            println!(
+                "req {i}: {} tokens, latency {:.1} ms, ttft {:.1} ms: {:?}",
+                resp.tokens.len(),
+                resp.latency * 1e3,
+                resp.ttft * 1e3,
+                &resp.tokens[..resp.tokens.len().min(8)]
+            );
+        }
+    }
+    let metrics = server.shutdown()?;
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = runtime_from(args)?;
+    println!("{} artifacts in {}:", rt.manifest.artifacts.len(), rt.manifest.dir.display());
+    for a in rt.manifest.artifacts.values() {
+        println!(
+            "  {:<40} {:?} {:>2} in / {:>2} out {}",
+            a.name,
+            a.kind,
+            a.inputs.len(),
+            a.outputs.len(),
+            if a.golden_path.is_some() { "[golden]" } else { "" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Artifact manifest model: the typed view of `artifacts/manifest.json`
+//! produced by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::tensorio::DType;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.dtype.size()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("spec missing name")?
+            .to_string();
+        let dtype_s = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .context("spec missing dtype")?;
+        let dtype = DType::from_name(dtype_s)
+            .with_context(|| format!("unknown dtype {dtype_s}"))?;
+        let dims = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("spec missing shape")?
+            .iter()
+            .map(|d| d.as_i64().map(|v| v as usize).context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, dims, dtype })
+    }
+}
+
+/// What kind of executable an artifact is (drives which subsystem uses it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    AttnFwd,
+    AttnGrad,
+    Init,
+    TrainStep,
+    Prefill,
+    Decode,
+    Other,
+}
+
+impl ArtifactKind {
+    fn from_str(s: &str) -> Self {
+        match s {
+            "attn_fwd" => Self::AttnFwd,
+            "attn_grad" => Self::AttnGrad,
+            "init" => Self::Init,
+            "train_step" => Self::TrainStep,
+            "prefill" => Self::Prefill,
+            "decode" => Self::Decode,
+            _ => Self::Other,
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub hlo_path: PathBuf,
+    pub golden_path: Option<PathBuf>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Integer metadata accessor (`meta.seqlen`, `meta.batch`, ...).
+    pub fn meta_i64(&self, key: &str) -> Option<i64> {
+        self.meta.get(key).and_then(Json::as_i64)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+
+    pub fn meta_bool(&self, key: &str) -> Option<bool> {
+        self.meta.get(key).and_then(Json::as_bool)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let version = json.get("version").and_then(Json::as_i64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = BTreeMap::new();
+        for entry in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+        {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let hlo = entry
+                .get("hlo")
+                .and_then(Json::as_str)
+                .context("artifact missing hlo")?;
+            let golden_path = entry
+                .get("golden")
+                .and_then(Json::as_str)
+                .map(|g| dir.join(g));
+            let inputs = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let kind = ArtifactKind::from_str(
+                entry.get("kind").and_then(Json::as_str).unwrap_or(""),
+            );
+            let meta = entry.get("meta").cloned().unwrap_or(Json::Obj(vec![]));
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    kind,
+                    hlo_path: dir.join(hlo),
+                    golden_path,
+                    inputs,
+                    outputs,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn by_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactSpec> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        fs::create_dir_all(dir).unwrap();
+        fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join("fa2_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [
+                {"name": "a", "kind": "attn_fwd", "hlo": "a.hlo.txt",
+                 "golden": "a.golden.fat1",
+                 "inputs": [{"name": "q", "shape": [1, 2, 64, 32], "dtype": "f32"}],
+                 "outputs": [{"name": "out0", "shape": [1, 2, 64, 32], "dtype": "f32"}],
+                 "meta": {"seqlen": 64, "causal": true, "impl": "fa2"}}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("a").unwrap();
+        assert_eq!(a.kind, ArtifactKind::AttnFwd);
+        assert_eq!(a.inputs[0].dims, vec![1, 2, 64, 32]);
+        assert_eq!(a.inputs[0].byte_size(), 1 * 2 * 64 * 32 * 4);
+        assert_eq!(a.meta_i64("seqlen"), Some(64));
+        assert_eq!(a.meta_bool("causal"), Some(true));
+        assert_eq!(m.by_kind(ArtifactKind::AttnFwd).len(), 1);
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("fa2_manifest_test_v2");
+        write_manifest(&dir, r#"{"version": 9, "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

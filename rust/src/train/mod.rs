@@ -1,0 +1,4 @@
+//! Training driver: synthetic corpus + AOT train_step loop + MFU accounting.
+
+pub mod corpus;
+pub mod trainer;

@@ -1,0 +1,10 @@
+//! In-tree substrates: JSON/TOML codecs, PRNG, stats/bench harness, FAT1
+//! tensor I/O, property-testing helper.  These exist because the offline
+//! vendor set contains only the `xla` crate closure.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensorio;
+pub mod toml_lite;

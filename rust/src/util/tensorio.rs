@@ -1,0 +1,234 @@
+//! FAT1 named-tensor reader/writer — the rust half of
+//! `python/compile/tensorio.py` (see that file for the format spec).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    F64,
+    I64,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+            DType::F64 => 3,
+            DType::I64 => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> io::Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            3 => DType::F64,
+            4 => DType::I64,
+            _ => return Err(bad(format!("unknown dtype code {c}"))),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F64 | DType::I64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+            DType::F64 => "f64",
+            DType::I64 => "i64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "f64" => DType::F64,
+            "i64" => DType::I64,
+            _ => return None,
+        })
+    }
+}
+
+/// A host tensor: raw little-endian bytes + shape + dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(if self.dims.is_empty() { 1 } else { 0 })
+    }
+
+    pub fn from_f32(dims: &[usize], values: &[f32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::F32, dims: dims.to_vec(), data }
+    }
+
+    pub fn from_i32(dims: &[usize], values: &[i32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: DType::I32, dims: dims.to_vec(), data }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        HostTensor { dtype: DType::U32, dims: vec![], data: v.to_le_bytes().to_vec() }
+    }
+
+    pub fn zeros(dtype: DType, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        HostTensor { dtype, dims: dims.to_vec(), data: vec![0u8; n * dtype.size()] }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32, "expected f32 tensor");
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn to_i32_vec(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32, "expected i32 tensor");
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Max |a - b| between two f32 tensors (golden comparisons).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        let a = self.to_f32_vec();
+        let b = other.to_f32_vec();
+        assert_eq!(a.len(), b.len(), "shape mismatch in comparison");
+        a.iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+pub fn read_tensors(path: &Path) -> io::Result<BTreeMap<String, HostTensor>> {
+    let data = fs::read(path)?;
+    let mut r = &data[..];
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"FAT1" {
+        return Err(bad(format!("{}: bad magic", path.display())));
+    }
+    let n = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|e| bad(e.to_string()))?;
+        let mut code = [0u8; 1];
+        r.read_exact(&mut code)?;
+        let dtype = DType::from_code(code[0])?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut r)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        let nbytes = count * dtype.size();
+        let mut buf = vec![0u8; nbytes];
+        r.read_exact(&mut buf)?;
+        out.insert(name, HostTensor { dtype, dims, data: buf });
+    }
+    Ok(out)
+}
+
+pub fn write_tensors(path: &Path, tensors: &BTreeMap<String, HostTensor>) -> io::Result<()> {
+    let mut f = io::BufWriter::new(fs::File::create(path)?);
+    f.write_all(b"FAT1")?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&[t.dtype.code()])?;
+        f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+        for d in &t.dims {
+            f.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut &[u8]) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut &[u8]) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fa2_tensorio_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.fat1");
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), HostTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]));
+        m.insert("b".to_string(), HostTensor::from_i32(&[4], &[-1, 0, 1, 2]));
+        m.insert("s".to_string(), HostTensor::scalar_u32(42));
+        write_tensors(&path, &m).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back["a"].to_f32_vec(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::from_f32(&[3], &[1.0, 2.0, 3.0]);
+        let b = HostTensor::from_f32(&[3], &[1.0, 2.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn zeros_sized_correctly() {
+        let z = HostTensor::zeros(DType::F64, &[2, 2]);
+        assert_eq!(z.data.len(), 32);
+        assert_eq!(z.element_count(), 4);
+    }
+}

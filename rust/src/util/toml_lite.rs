@@ -1,0 +1,219 @@
+//! TOML-subset parser for `configs/*.toml`.
+//!
+//! Supported: `[section]` / `[a.b]` tables, `key = value` with string,
+//! integer, float, bool and flat-array values, `#` comments.  This covers
+//! every config this repo ships; exotic TOML (dates, inline tables,
+//! multi-line strings) is intentionally rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key -> value (`section.key`).
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed '['"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty table name"));
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            doc.values.insert(format!("{prefix}{key}"), val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Keys under a `section.` prefix.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let pfx = format!("{section}.");
+        self.values
+            .keys()
+            .filter(|k| k.starts_with(&pfx))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("unsupported escaped quote".into());
+        }
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let doc = TomlDoc::parse(
+            "# comment\ntitle = \"hi # not comment\"\n[model]\nn_layer = 6\nlr = 3e-4\n\
+             gqa = false\nblocks = [64, 128]\n[model.adam]\nbeta1 = 0.9\n",
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("title", ""), "hi # not comment");
+        assert_eq!(doc.i64_or("model.n_layer", 0), 6);
+        assert!((doc.f64_or("model.lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert!(!doc.bool_or("model.gqa", true));
+        assert_eq!(
+            doc.get("model.blocks").unwrap(),
+            &TomlValue::Arr(vec![TomlValue::Int(64), TomlValue::Int(128)])
+        );
+        assert!((doc.f64_or("model.adam.beta1", 0.0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_with_underscores() {
+        let doc = TomlDoc::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.i64_or("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unclosed\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn section_keys_listing() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        assert_eq!(doc.section_keys("a"), vec!["a.x", "a.y"]);
+    }
+}

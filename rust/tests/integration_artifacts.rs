@@ -1,0 +1,139 @@
+//! Integration: every golden-bearing artifact loads, compiles, executes and
+//! reproduces the Python-side outputs through the PJRT runtime.
+//! Requires `make artifacts` to have run.
+
+use std::path::Path;
+
+use fa2::runtime::{ArtifactKind, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_is_complete() {
+    let rt = runtime();
+    assert!(rt.manifest.artifacts.len() >= 30, "expected full artifact set");
+    // every kind is represented
+    for kind in [
+        ArtifactKind::AttnFwd,
+        ArtifactKind::AttnGrad,
+        ArtifactKind::Init,
+        ArtifactKind::TrainStep,
+        ArtifactKind::Prefill,
+        ArtifactKind::Decode,
+    ] {
+        assert!(!rt.manifest.by_kind(kind).is_empty(), "missing kind {kind:?}");
+    }
+}
+
+#[test]
+fn specs_are_internally_consistent() {
+    let rt = runtime();
+    for a in rt.manifest.artifacts.values() {
+        assert!(a.hlo_path.exists(), "{}: missing hlo file", a.name);
+        assert!(!a.inputs.is_empty(), "{}: no inputs", a.name);
+        assert!(!a.outputs.is_empty(), "{}: no outputs", a.name);
+        if let Some(g) = &a.golden_path {
+            assert!(g.exists(), "{}: missing golden file", a.name);
+        }
+        // attention artifacts: q/k/v agree on shape
+        if a.kind == ArtifactKind::AttnFwd {
+            assert_eq!(a.inputs[0].dims, a.inputs[1].dims, "{}", a.name);
+            assert_eq!(a.inputs[0].dims.len(), 4, "{}", a.name);
+            let n = a.meta_i64("seqlen").unwrap() as usize;
+            assert_eq!(a.inputs[0].dims[2], n, "{}", a.name);
+        }
+    }
+}
+
+#[test]
+fn all_goldens_verify() {
+    let rt = runtime();
+    let names: Vec<String> = rt
+        .manifest
+        .artifacts
+        .values()
+        .filter(|a| a.golden_path.is_some())
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(!names.is_empty());
+    for name in names {
+        let diffs = rt.verify_golden(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let worst = diffs.iter().cloned().fold(0.0f32, f32::max);
+        assert!(worst < 2e-4, "{name}: max diff {worst}");
+    }
+}
+
+#[test]
+fn fa2_and_standard_artifacts_agree_on_fresh_inputs() {
+    // Beyond goldens: generate NEW inputs in rust and check the two
+    // schedules compute the same attention.
+    use fa2::util::rng::Rng;
+    use fa2::util::tensorio::HostTensor;
+    let rt = runtime();
+    let fa2 = rt.load("attn_fa2_causal_b1h2n64d32").unwrap();
+    let std_ = rt.load("attn_std_causal_b1h2n64d32").unwrap();
+    let dims = fa2.spec.inputs[0].dims.clone();
+    let n: usize = dims.iter().product();
+    let mut rng = Rng::seed_from(123);
+    let mk = |rng: &mut Rng| {
+        HostTensor::from_f32(&dims, &(0..n).map(|_| rng.normal() as f32).collect::<Vec<_>>())
+    };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let a = fa2.run(&[q.clone(), k.clone(), v.clone()]).unwrap();
+    let b = std_.run(&[q, k, v]).unwrap();
+    assert!(a[0].max_abs_diff(&b[0]) < 1e-4);
+    assert!(a[1].max_abs_diff(&b[1]) < 1e-4, "logsumexp mismatch");
+}
+
+#[test]
+fn splitk_artifact_matches_fa2() {
+    let rt = runtime();
+    let fa2 = rt.load("attn_fa2_full_b1h2n64d32").unwrap();
+    let splitk = rt.load("attn_splitk4_full_b1h2n64d32").unwrap();
+    // run both on the fa2 golden inputs
+    let tensors =
+        fa2::util::tensorio::read_tensors(fa2.spec.golden_path.as_ref().unwrap()).unwrap();
+    let inputs = vec![tensors["in0"].clone(), tensors["in1"].clone(), tensors["in2"].clone()];
+    let a = fa2.run(&inputs).unwrap();
+    let b = splitk.run(&inputs).unwrap();
+    assert!(a[0].max_abs_diff(&b[0]) < 1e-4);
+}
+
+#[test]
+fn grad_artifact_outputs_have_input_shapes() {
+    let rt = runtime();
+    let g = rt.load("attn_fa2grad_causal_b1h2n64d32").unwrap();
+    let tensors =
+        fa2::util::tensorio::read_tensors(g.spec.golden_path.as_ref().unwrap()).unwrap();
+    let inputs: Vec<_> = (0..4).map(|i| tensors[&format!("in{i}")].clone()).collect();
+    let out = g.run(&inputs).unwrap();
+    // (o, dq, dk, dv) all shaped like q
+    assert_eq!(out.len(), 4);
+    for t in &out {
+        assert_eq!(t.dims, g.spec.inputs[0].dims);
+    }
+}
+
+#[test]
+fn exec_stats_accumulate() {
+    let rt = runtime();
+    let exe = rt.load("attn_fa2_full_b1h2n64d32").unwrap();
+    let before = exe.stats().executions;
+    rt.verify_golden("attn_fa2_full_b1h2n64d32").unwrap();
+    assert_eq!(exe.stats().executions, before + 1);
+    assert!(exe.stats().total_exec_secs > 0.0);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    use fa2::util::tensorio::HostTensor;
+    let rt = runtime();
+    let exe = rt.load("attn_fa2_full_b1h2n64d32").unwrap();
+    let bad = HostTensor::from_f32(&[1, 2, 3], &[0.0; 6]);
+    let err = exe.run(&[bad.clone(), bad.clone(), bad]).unwrap_err();
+    assert!(format!("{err}").contains("expects"));
+    let err = exe.run(&[]).unwrap_err();
+    assert!(format!("{err}").contains("expected 3 inputs"));
+}

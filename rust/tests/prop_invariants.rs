@@ -1,0 +1,201 @@
+//! Property tests over the pure substrates (no artifacts needed):
+//! split-K combine algebra, gpusim monotonicity, schedule accounting,
+//! batcher/ordering (complementing the in-module proptests).
+
+use fa2::attn::combine::{merge_all, Partial};
+use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
+use fa2::gpusim::{occupancy, simulate, waves, BlockResources, Device};
+use fa2::prop_assert;
+use fa2::util::prop::{check, close, PropConfig};
+use fa2::util::rng::Rng;
+
+fn random_partial(rng: &mut Rng, d: usize) -> Partial {
+    let n = rng.range_usize(1, 6);
+    let scores: Vec<f64> = (0..n).map(|_| rng.normal() * 3.0).collect();
+    let values: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect();
+    Partial::from_scores(&scores, &values)
+}
+
+#[test]
+fn prop_combine_is_associative() {
+    check("combine-associative", PropConfig::default(), |rng| {
+        let d = rng.range_usize(1, 5);
+        let (a, b, c) = (
+            random_partial(rng, d),
+            random_partial(rng, d),
+            random_partial(rng, d),
+        );
+        let left = a.merge(&b).merge(&c).finalize();
+        let right = a.merge(&b.merge(&c)).finalize();
+        for (x, y) in left.0.iter().zip(&right.0) {
+            prop_assert!(close(*x, *y, 1e-9), "O mismatch {x} vs {y}");
+        }
+        prop_assert!(close(left.1, right.1, 1e-9), "LSE mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_combine_split_equals_whole() {
+    // Splitting a score/value stream at ANY point and merging the partials
+    // must equal the monolithic softmax — the correctness core of both
+    // split-K (section 3.3) and flash-decoding.
+    check("combine-split-invariance", PropConfig::default(), |rng| {
+        let d = rng.range_usize(1, 4);
+        let n = rng.range_usize(2, 12);
+        let scores: Vec<f64> = (0..n).map(|_| rng.normal() * 5.0).collect();
+        let values: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let whole = Partial::from_scores(&scores, &values).finalize();
+        // random partition into up to 4 chunks
+        let mut cuts: Vec<usize> = (0..rng.range_usize(0, 3))
+            .map(|_| rng.range_usize(0, n + 1))
+            .collect();
+        cuts.push(0);
+        cuts.push(n);
+        cuts.sort();
+        let parts: Vec<Partial> = cuts
+            .windows(2)
+            .map(|w| Partial::from_scores(&scores[w[0]..w[1]], &values[w[0]..w[1]]))
+            .collect();
+        let merged = merge_all(&parts).finalize();
+        for (x, y) in whole.0.iter().zip(&merged.0) {
+            prop_assert!(close(*x, *y, 1e-9), "{x} vs {y} (cuts {cuts:?})");
+        }
+        prop_assert!(close(whole.1, merged.1, 1e-9), "LSE (cuts {cuts:?})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gpusim_more_work_never_faster() {
+    check("gpusim-monotone-work", PropConfig::default(), |rng| {
+        let dev = Device::a100();
+        let base = AttnProblem {
+            batch: rng.range_i64(1, 8) as u64,
+            heads: rng.range_i64(1, 32) as u64,
+            seqlen: 256 << rng.range_i64(0, 5),
+            head_dim: *rng.choice(&[64u64, 128]),
+            causal: rng.next_f64() < 0.5,
+            dtype_bytes: 2,
+        };
+        let bigger = AttnProblem { seqlen: base.seqlen * 2, ..base };
+        for m in Method::all() {
+            let t1 = fa2::attn::simulate_time(&dev, &base, m, Pass::Fwd);
+            let t2 = fa2::attn::simulate_time(&dev, &bigger, m, Pass::Fwd);
+            prop_assert!(
+                t2 >= t1 * 0.99,
+                "{m:?}: doubling seqlen got faster ({t1} -> {t2}) for {base:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gpusim_faster_device_never_slower() {
+    check("gpusim-monotone-device", PropConfig::default(), |rng| {
+        let p = AttnProblem {
+            batch: rng.range_i64(1, 16) as u64,
+            heads: rng.range_i64(1, 32) as u64,
+            seqlen: 128 << rng.range_i64(0, 6),
+            head_dim: *rng.choice(&[64u64, 128]),
+            causal: rng.next_f64() < 0.5,
+            dtype_bytes: 2,
+        };
+        for m in Method::all() {
+            let ta = fa2::attn::simulate_time(&Device::a100(), &p, m, Pass::FwdBwd);
+            let th = fa2::attn::simulate_time(&Device::h100(), &p, m, Pass::FwdBwd);
+            prop_assert!(th <= ta * 1.01, "{m:?}: H100 slower than A100 for {p:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_causal_never_more_expensive() {
+    check("causal-cheaper", PropConfig::default(), |rng| {
+        let dev = Device::a100();
+        let full = AttnProblem {
+            batch: rng.range_i64(1, 8) as u64,
+            heads: rng.range_i64(2, 16) as u64,
+            seqlen: 512 << rng.range_i64(0, 4),
+            head_dim: *rng.choice(&[64u64, 128]),
+            causal: false,
+            dtype_bytes: 2,
+        };
+        let causal = AttnProblem { causal: true, ..full };
+        for m in [Method::Flash1, Method::Flash2, Method::Triton] {
+            let tf = fa2::attn::simulate_time(&dev, &full, m, Pass::Fwd);
+            let tc = fa2::attn::simulate_time(&dev, &causal, m, Pass::Fwd);
+            prop_assert!(tc <= tf * 1.01, "{m:?}: causal slower for {full:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernels_have_finite_positive_work() {
+    check("kernels-sane", PropConfig::default(), |rng| {
+        let p = AttnProblem {
+            batch: rng.range_i64(1, 8) as u64,
+            heads: rng.range_i64(1, 16) as u64,
+            seqlen: 128 << rng.range_i64(0, 5),
+            head_dim: *rng.choice(&[64u64, 128]),
+            causal: rng.next_f64() < 0.5,
+            dtype_bytes: 2,
+        };
+        for m in Method::all() {
+            for pass in [Pass::Fwd, Pass::Bwd, Pass::FwdBwd] {
+                for k in kernels_for(&p, m, pass) {
+                    prop_assert!(k.grid > 0, "{m:?} zero grid");
+                    prop_assert!(
+                        k.matmul_flops >= 0.0 && k.matmul_flops.is_finite(),
+                        "{m:?} bad matmul flops"
+                    );
+                    prop_assert!(k.hbm_bytes > 0.0, "{m:?} no traffic");
+                    let cost = simulate(&Device::a100(), &k);
+                    prop_assert!(
+                        cost.time.is_finite() && cost.time > 0.0,
+                        "{m:?}/{pass:?} infinite time: {:?}", k.label
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_occupancy_bounds() {
+    check("occupancy-bounds", PropConfig::default(), |rng| {
+        let dev = Device::a100();
+        let res = BlockResources {
+            threads: 32 * rng.range_i64(1, 16) as u32,
+            regs_per_thread: rng.range_i64(16, 256) as u32,
+            smem_bytes: rng.range_usize(0, 200 * 1024),
+        };
+        let occ = occupancy(&dev, res);
+        prop_assert!(
+            occ.blocks_per_sm <= dev.max_blocks_per_sm,
+            "blocks/SM over cap"
+        );
+        let grid = rng.range_i64(1, 100_000) as u64;
+        let w = waves(&dev, &occ, grid);
+        prop_assert!(w.sm_fill >= 0.0 && w.sm_fill <= 1.0, "fill {}", w.sm_fill);
+        prop_assert!(
+            w.efficiency >= 0.0 && w.efficiency <= 1.0 + 1e-12,
+            "eff {}", w.efficiency
+        );
+        if occ.concurrent_blocks > 0 {
+            prop_assert!(
+                w.waves == grid.div_ceil(occ.concurrent_blocks),
+                "wave count"
+            );
+        }
+        Ok(())
+    });
+}
