@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 verify plus the wiring checks that keep this repo honest:
+#   1. cargo build --release && cargo test -q   (the ROADMAP tier-1 gate)
+#   2. benches + examples still build           (their [[bench]]/[[example]]
+#      path entries in rust/Cargo.toml point outside the package dir and
+#      would otherwise rot silently)
+#   3. dependency policy: `cargo tree` lists only `fa2`
+#
+# Run from anywhere; CHANGES.md convention: every PR's entry should note
+# that `./ci.sh` is green (or which step it knowingly skips).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== wiring: benches + examples build =="
+cargo build --release --benches --examples
+
+echo "== dependency policy: fa2 only =="
+deps="$(cargo tree --prefix none --edges normal | awk '{print $1}' | sort -u)"
+echo "$deps"
+if [ "$deps" != "fa2" ]; then
+    echo "FAIL: external dependencies crept in (offline policy: util::* replaces them)" >&2
+    exit 1
+fi
+
+echo "ci.sh: all green"

@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use fa2::util::error::Result;
 use fa2::runtime::Runtime;
 use fa2::util::rng::Rng;
 use fa2::util::tensorio::HostTensor;

@@ -4,7 +4,7 @@
 //!
 //!   cargo run --release --example serve_attention [n_requests]
 
-use anyhow::Result;
+use fa2::util::error::Result;
 use fa2::coordinator::server::{GenRequest, Server};
 use fa2::train::corpus::Corpus;
 use fa2::util::rng::Rng;

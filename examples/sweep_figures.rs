@@ -4,7 +4,7 @@
 //!
 //!   cargo run --release --example sweep_figures
 
-use anyhow::Result;
+use fa2::util::error::Result;
 use fa2::attn::Pass;
 use fa2::bench::{figures, table1};
 use fa2::gpusim::Device;

@@ -10,7 +10,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::Result;
+use fa2::util::error::Result;
 use fa2::runtime::Runtime;
 use fa2::train::trainer::{TrainConfig, Trainer};
 

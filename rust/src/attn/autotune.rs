@@ -10,6 +10,7 @@
 
 use crate::gpusim::device::Device;
 use crate::gpusim::kernel::simulate_pipeline;
+use crate::util::pool;
 
 use super::problem::{AttnProblem, Pass};
 use super::schedule::{bwd_kernels, fwd_kernels, Method, ScheduleSpec};
@@ -39,27 +40,34 @@ pub fn tune(
     pass: Pass,
 ) -> Vec<TunedSchedule> {
     let base = ScheduleSpec::for_method(method, p.head_dim);
-    let mut out = Vec::new();
+    let mut jobs = Vec::new();
     for &bq in &TILE_CANDIDATES {
         for &bk in &TILE_CANDIDATES {
             for &warps in &WARP_CANDIDATES {
-                let spec = ScheduleSpec { block_q: bq, block_k: bk, warps, ..base };
-                let mut kernels = Vec::new();
-                if pass != Pass::Bwd {
-                    kernels.extend(fwd_kernels(p, &spec));
-                }
-                if pass != Pass::Fwd {
-                    kernels.extend(bwd_kernels(p, &spec));
-                }
-                out.push(TunedSchedule {
-                    block_q: bq,
-                    block_k: bk,
-                    warps,
-                    time: simulate_pipeline(dev, &kernels),
-                });
+                jobs.push((bq, bk, warps));
             }
         }
     }
+    // The candidate grid points are independent cost-model evaluations:
+    // fan them across the work-stealing pool.  par_map preserves candidate
+    // order and the sort below is stable, so the returned ranking is
+    // identical to the serial search.
+    let mut out = pool::par_map(jobs, |(bq, bk, warps)| {
+        let spec = ScheduleSpec { block_q: bq, block_k: bk, warps, ..base };
+        let mut kernels = Vec::new();
+        if pass != Pass::Bwd {
+            kernels.extend(fwd_kernels(p, &spec));
+        }
+        if pass != Pass::Fwd {
+            kernels.extend(bwd_kernels(p, &spec));
+        }
+        TunedSchedule {
+            block_q: bq,
+            block_k: bk,
+            warps,
+            time: simulate_pipeline(dev, &kernels),
+        }
+    });
     out.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
     out
 }

@@ -10,6 +10,7 @@ use std::fmt::Write as _;
 
 use crate::attn::{simulate_tflops, AttnProblem, Method, Pass};
 use crate::gpusim::Device;
+use crate::util::pool;
 
 pub const SEQLENS: [u64; 6] = [512, 1024, 2048, 4096, 8192, 16384];
 
@@ -50,19 +51,24 @@ pub struct PanelResult {
     pub series: Vec<Series>,
 }
 
+/// One grid point of the sweep: a full seqlen series for (panel, method).
+fn series_for(panel: &Panel, method: Method) -> Series {
+    Series {
+        method,
+        tflops: SEQLENS
+            .iter()
+            .map(|&n| {
+                let p = AttnProblem::paper_setting(n, panel.head_dim, panel.causal);
+                simulate_tflops(&panel.device, &p, method, panel.pass) / 1e12
+            })
+            .collect(),
+    }
+}
+
 pub fn run_panel(panel: &Panel) -> PanelResult {
     let series = Method::all()
         .into_iter()
-        .map(|method| Series {
-            method,
-            tflops: SEQLENS
-                .iter()
-                .map(|&n| {
-                    let p = AttnProblem::paper_setting(n, panel.head_dim, panel.causal);
-                    simulate_tflops(&panel.device, &p, method, panel.pass) / 1e12
-                })
-                .collect(),
-        })
+        .map(|method| series_for(panel, method))
         .collect();
     PanelResult { panel: panel.clone(), series }
 }
@@ -85,8 +91,27 @@ pub fn figure_panels(fig: u32) -> Vec<Panel> {
     panels
 }
 
+/// Regenerate one figure, fanning the independent (panel × method) grid
+/// points across the work-stealing pool.  `par_map` preserves input order,
+/// so the assembled panels — and therefore `to_csv` — are byte-identical to
+/// a serial run (`FA2_POOL_THREADS=1`).
 pub fn run_figure(fig: u32) -> Vec<PanelResult> {
-    figure_panels(fig).iter().map(run_panel).collect()
+    let panels = figure_panels(fig);
+    let jobs: Vec<(usize, Method)> = panels
+        .iter()
+        .enumerate()
+        .flat_map(|(i, _)| Method::all().into_iter().map(move |m| (i, m)))
+        .collect();
+    let series = pool::par_map(jobs, |(i, m)| series_for(&panels[i], m));
+    let per_panel = Method::all().len();
+    let mut it = series.into_iter();
+    panels
+        .iter()
+        .map(|panel| PanelResult {
+            panel: panel.clone(),
+            series: it.by_ref().take(per_panel).collect(),
+        })
+        .collect()
 }
 
 /// CSV for all panels of a figure (matches the paper's plotted series).

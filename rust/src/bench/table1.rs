@@ -13,6 +13,7 @@ use std::fmt::Write as _;
 
 use crate::attn::{simulate_time, AttnProblem, Method, Pass};
 use crate::gpusim::Device;
+use crate::util::pool;
 
 /// Non-attention GEMM MFU for the Megatron-style trainer (calibrated so the
 /// FA2 2k rows land on the paper's ~196 TFLOPs/s; see EXPERIMENTS.md).
@@ -106,16 +107,21 @@ pub fn batch_for(seqlen: u64) -> u64 {
     (16 * 1024 / seqlen).max(1)
 }
 
+/// Price every (model × context × method) cell; the cells are independent,
+/// so they fan out across the work-stealing pool.  `par_map` preserves
+/// input order, keeping `render`/`to_csv` byte-identical to a serial run.
 pub fn run_table1(dev: &Device) -> Vec<Cell> {
-    let mut cells = Vec::new();
+    let mut jobs = Vec::new();
     for model in [GptModel::gpt3_1p3b(), GptModel::gpt3_2p7b()] {
         for seqlen in [2048u64, 8192] {
             for method in methods() {
-                cells.push(simulate_cell(dev, &model, seqlen, method, batch_for(seqlen)));
+                jobs.push((model, seqlen, method));
             }
         }
     }
-    cells
+    pool::par_map(jobs, |(model, seqlen, method)| {
+        simulate_cell(dev, &model, seqlen, method, batch_for(seqlen))
+    })
 }
 
 /// Paper's measured values for band checking: (model, seqlen, method) -> TFLOPs/s.

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::train::trainer::TrainConfig;
 use crate::util::toml_lite::TomlDoc;
@@ -65,7 +65,8 @@ impl RunConfig {
     pub fn load(path: &Path) -> Result<RunConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
-        let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let doc = TomlDoc::parse(&text)
+            .with_context(|| format!("parsing config {}", path.display()))?;
         Ok(Self::from_doc(&doc))
     }
 

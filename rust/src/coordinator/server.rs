@@ -14,7 +14,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Error, Result};
 
 use crate::runtime::{Executable, Runtime};
 use crate::util::tensorio::{DType, HostTensor};
@@ -120,14 +120,14 @@ impl Server {
                     worker(rx, prefill1, decode1, decode4, params, shapes)
                 }
                 Err(e) => {
-                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                    let _ = ready_tx.send(Err(e));
                     Ok(Metrics::new())
                 }
             }
         });
         ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("server worker died during setup"))??;
+            .map_err(|_| Error::msg("server worker died during setup"))??;
         Ok(Server { tx, handle: Some(handle) })
     }
 
@@ -145,7 +145,7 @@ impl Server {
             .take()
             .unwrap()
             .join()
-            .map_err(|_| anyhow::anyhow!("server worker panicked"))?
+            .map_err(|_| Error::msg("server worker panicked"))?
     }
 }
 

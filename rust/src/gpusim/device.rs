@@ -30,6 +30,9 @@ pub struct Device {
     /// 32-bit registers per SM.
     pub regs_per_sm: u32,
     pub max_threads_per_sm: u32,
+    /// Hardware cap on threads in a single block (1024 on every CUDA GPU);
+    /// a wider block cannot launch regardless of SM-level resources.
+    pub max_threads_per_block: u32,
     pub max_blocks_per_sm: u32,
     pub threads_per_warp: u32,
 }
@@ -48,6 +51,7 @@ impl Device {
             smem_per_sm: 164 * 1024,
             regs_per_sm: 65536,
             max_threads_per_sm: 2048,
+            max_threads_per_block: 1024,
             max_blocks_per_sm: 32,
             threads_per_warp: 32,
         }
@@ -74,6 +78,7 @@ impl Device {
             smem_per_sm: 228 * 1024,
             regs_per_sm: 65536,
             max_threads_per_sm: 2048,
+            max_threads_per_block: 1024,
             max_blocks_per_sm: 32,
             threads_per_warp: 32,
         }

@@ -42,22 +42,42 @@ pub enum Limiter {
 }
 
 /// Compute device occupancy for a block shape.
+///
+/// A block that cannot launch at all — zero threads, wider than the
+/// hardware block limit, shared memory beyond the per-block budget, or a
+/// register file larger than the SM's — reports zero occupancy with
+/// `Limiter::KernelDoesNotFit`.  It must never divide by zero here or hand
+/// a bogus `blocks_per_sm` to the wave analysis downstream (`waves` and
+/// `kernel::simulate` both treat `concurrent_blocks == 0` as unlaunchable).
 pub fn occupancy(dev: &Device, res: BlockResources) -> Occupancy {
+    const DOES_NOT_FIT: Occupancy = Occupancy {
+        blocks_per_sm: 0,
+        concurrent_blocks: 0,
+        limiter: Limiter::KernelDoesNotFit,
+    };
+    if res.threads == 0 || res.threads > dev.max_threads_per_block {
+        return DOES_NOT_FIT;
+    }
     if res.smem_bytes > dev.smem_per_block_max {
-        return Occupancy {
-            blocks_per_sm: 0,
-            concurrent_blocks: 0,
-            limiter: Limiter::KernelDoesNotFit,
-        };
+        return DOES_NOT_FIT;
+    }
+    // Register arithmetic in u64: 2^20 regs/thread x 1024 threads would
+    // overflow u32 before the comparison rejects it.
+    let regs_per_block = res.regs_per_thread as u64 * res.threads as u64;
+    if regs_per_block > dev.regs_per_sm as u64 {
+        return DOES_NOT_FIT;
     }
     let by_smem = if res.smem_bytes == 0 {
         u32::MAX
     } else {
         (dev.smem_per_sm / res.smem_bytes) as u32
     };
-    let regs_per_block = res.regs_per_thread * res.threads;
-    let by_regs = if regs_per_block == 0 { u32::MAX } else { dev.regs_per_sm / regs_per_block };
-    let by_threads = dev.max_threads_per_sm / res.threads.max(1);
+    let by_regs = if regs_per_block == 0 {
+        u32::MAX
+    } else {
+        (dev.regs_per_sm as u64 / regs_per_block) as u32
+    };
+    let by_threads = dev.max_threads_per_sm / res.threads;
     let by_slots = dev.max_blocks_per_sm;
 
     let (blocks, limiter) = [
@@ -71,11 +91,7 @@ pub fn occupancy(dev: &Device, res: BlockResources) -> Occupancy {
     .unwrap();
 
     if blocks == 0 {
-        return Occupancy {
-            blocks_per_sm: 0,
-            concurrent_blocks: 0,
-            limiter: Limiter::KernelDoesNotFit,
-        };
+        return DOES_NOT_FIT;
     }
     Occupancy {
         blocks_per_sm: blocks,
@@ -189,6 +205,43 @@ mod tests {
         let w_cont = 110.0 / 108.0;
         assert!((w.efficiency - w_cont / (0.5 * w_cont + 1.0)).abs() < 1e-9);
         assert!(w.efficiency > 0.5 && w.efficiency < 1.0);
+    }
+
+    #[test]
+    fn zero_thread_block_cannot_launch() {
+        let occ = occupancy(&dev(), BlockResources { threads: 0, regs_per_thread: 64, smem_bytes: 1024 });
+        assert_eq!(occ.limiter, Limiter::KernelDoesNotFit);
+        assert_eq!(occ.blocks_per_sm, 0);
+        assert_eq!(occ.concurrent_blocks, 0);
+    }
+
+    #[test]
+    fn block_wider_than_hw_limit_cannot_launch() {
+        // 2048 threads fit an SM's thread budget but not a single block's.
+        let occ = occupancy(&dev(), BlockResources { threads: 2048, regs_per_thread: 16, smem_bytes: 1024 });
+        assert_eq!(occ.limiter, Limiter::KernelDoesNotFit);
+        assert_eq!(occ.concurrent_blocks, 0);
+    }
+
+    #[test]
+    fn register_file_overflow_is_does_not_fit() {
+        // 1024 threads x 255 regs = 261120 > 65536 regs/SM: the block can
+        // never be resident, which is KernelDoesNotFit, not Registers with
+        // a fabricated blocks_per_sm.
+        let occ = occupancy(&dev(), BlockResources { threads: 1024, regs_per_thread: 255, smem_bytes: 0 });
+        assert_eq!(occ.limiter, Limiter::KernelDoesNotFit);
+        // And absurd per-thread counts must not overflow the arithmetic.
+        let occ = occupancy(&dev(), BlockResources { threads: 1024, regs_per_thread: u32::MAX, smem_bytes: 0 });
+        assert_eq!(occ.limiter, Limiter::KernelDoesNotFit);
+    }
+
+    #[test]
+    fn unlaunchable_block_yields_zero_waves_downstream() {
+        let occ = occupancy(&dev(), BlockResources { threads: 0, regs_per_thread: 0, smem_bytes: 0 });
+        let w = waves(&dev(), &occ, 4096);
+        assert_eq!(w.waves, 0);
+        assert_eq!(w.efficiency, 0.0);
+        assert_eq!(w.sm_fill, 0.0);
     }
 
     #[test]

@@ -12,7 +12,8 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use fa2::bail;
+use fa2::util::error::{Context, Result};
 
 use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
 use fa2::bench::{figures, table1};

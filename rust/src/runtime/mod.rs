@@ -1,90 +1,28 @@
 //! L3 runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes them
-//! on the PJRT CPU client via the `xla` crate.
+//! on the PJRT CPU client via the `backend` seam (real `xla` bindings under
+//! the `xla` feature, an in-tree stub otherwise — see backend.rs).
 //!
 //! Python never runs on this path: `aot.py` lowered every entry point to HLO
-//! *text* at build time (text, not serialized proto — xla_extension 0.5.1
-//! rejects jax>=0.5's 64-bit instruction ids; the text parser reassigns
-//! them).  The runtime compiles each module once, caches the executable, and
-//! exchanges host tensors as XLA literals.
+//! text at build time.  The runtime compiles each module once, caches the
+//! executable, and exchanges host tensors with the backend.
 
 pub mod artifact;
+pub mod backend;
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 pub use artifact::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};
+pub use backend::ExecTiming;
 
 use crate::util::tensorio::{DType, HostTensor};
 
-fn element_type(dt: DType) -> xla::ElementType {
-    match dt {
-        DType::F32 => xla::ElementType::F32,
-        DType::I32 => xla::ElementType::S32,
-        DType::U32 => xla::ElementType::U32,
-        DType::F64 => xla::ElementType::F64,
-        DType::I64 => xla::ElementType::S64,
-    }
-}
-
-fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-    xla::Literal::create_from_shape_and_untyped_data(
-        element_type(t.dtype),
-        &t.dims,
-        &t.data,
-    )
-    .map_err(|e| anyhow::anyhow!("literal create failed: {e:?}"))
-}
-
-fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let dtype = match shape.primitive_type() {
-        xla::PrimitiveType::F32 => DType::F32,
-        xla::PrimitiveType::S32 => DType::I32,
-        xla::PrimitiveType::U32 => DType::U32,
-        xla::PrimitiveType::F64 => DType::F64,
-        xla::PrimitiveType::S64 => DType::I64,
-        other => bail!("unsupported output primitive type {other:?}"),
-    };
-    let n = lit.element_count();
-    let data;
-    // Bulk path: one copy_raw_to into a typed buffer, then a single memcpy
-    // reinterpreting to bytes (host is little-endian, matching FAT1).
-    // (Perf: the original per-element to_le_bytes loop was ~40% of transfer
-    // time on large outputs — see EXPERIMENTS.md §Perf.)
-    macro_rules! copy_as {
-        ($t:ty) => {{
-            let mut buf = vec![<$t>::default(); n];
-            lit.copy_raw_to::<$t>(&mut buf)
-                .map_err(|e| anyhow::anyhow!("copy_raw_to: {e:?}"))?;
-            // SAFETY: buf is a live, initialized slice of plain-old-data
-            // numeric values; reinterpreting as bytes is always valid.
-            let bytes = unsafe {
-                std::slice::from_raw_parts(
-                    buf.as_ptr() as *const u8,
-                    n * std::mem::size_of::<$t>(),
-                )
-            };
-            data = bytes.to_vec();
-        }};
-    }
-    match dtype {
-        DType::F32 => copy_as!(f32),
-        DType::I32 => copy_as!(i32),
-        DType::U32 => copy_as!(u32),
-        DType::F64 => copy_as!(f64),
-        DType::I64 => copy_as!(i64),
-    }
-    Ok(HostTensor { dtype, dims, data })
-}
-
-/// Execution statistics for one executable (perf accounting, EXPERIMENTS §Perf).
+/// Execution statistics for one executable (perf accounting).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct ExecStats {
     pub executions: u64,
@@ -95,7 +33,7 @@ pub struct ExecStats {
 /// A compiled artifact ready to run.
 pub struct Executable {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    module: backend::LoadedModule,
     stats: Mutex<ExecStats>,
 }
 
@@ -119,35 +57,7 @@ impl Executable {
                 );
             }
         }
-        let t0 = Instant::now();
-        let literals = inputs
-            .iter()
-            .map(to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let t_transfer_in = t0.elapsed().as_secs_f64();
-
-        let t1 = Instant::now();
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.spec.name))?;
-        let exec_secs = t1.elapsed().as_secs_f64();
-
-        let t2 = Instant::now();
-        let buffer = &result[0][0];
-        let lit = buffer
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: the single output is a tuple.
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
-        let outputs = parts
-            .iter()
-            .map(from_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let transfer_secs = t_transfer_in + t2.elapsed().as_secs_f64();
-
+        let (outputs, timing) = self.module.execute(inputs)?;
         if outputs.len() != self.spec.outputs.len() {
             bail!(
                 "{}: manifest promises {} outputs, executable returned {}",
@@ -158,8 +68,8 @@ impl Executable {
         }
         let mut st = self.stats.lock().unwrap();
         st.executions += 1;
-        st.total_exec_secs += exec_secs;
-        st.total_transfer_secs += transfer_secs;
+        st.total_exec_secs += timing.exec_secs;
+        st.total_transfer_secs += timing.transfer_secs;
         Ok(outputs)
     }
 
@@ -168,18 +78,17 @@ impl Executable {
     }
 }
 
-/// PJRT client + manifest + executable cache.
+/// Backend client + manifest + executable cache.
 pub struct Runtime {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
+    client: backend::Client,
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
 impl Runtime {
     pub fn new(artifact_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let client = backend::Client::cpu()?;
         Ok(Runtime { manifest, client, cache: Mutex::new(HashMap::new()) })
     }
 
@@ -194,24 +103,14 @@ impl Runtime {
         }
         let spec = self.manifest.get(name)?.clone();
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.hlo_path
-                .to_str()
-                .context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow::anyhow!("{}: parse hlo: {e:?}", name))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("{}: compile: {e:?}", name))?;
+        let module = self.client.compile_hlo_text(name, &spec.hlo_path)?;
         let compile_secs = t0.elapsed().as_secs_f64();
         if std::env::var_os("FA2_LOG_COMPILE").is_some() {
             eprintln!("[runtime] compiled {name} in {compile_secs:.2}s");
         }
         let exec = std::sync::Arc::new(Executable {
             spec,
-            exe,
+            module,
             stats: Mutex::new(ExecStats::default()),
         });
         self.cache

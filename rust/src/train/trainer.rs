@@ -9,7 +9,8 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::runtime::{ArtifactKind, Runtime};
 use crate::util::tensorio::{write_tensors, HostTensor};

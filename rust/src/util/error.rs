@@ -1,0 +1,191 @@
+//! In-tree error type replacing `anyhow` — the crate's last external
+//! dependency (same offline policy that keeps clap/serde/rand out of the
+//! tree).  Provides an [`Error`] carrying a context chain, a [`Result`]
+//! alias, the [`bail!`](crate::bail) macro, and a [`Context`] extension
+//! trait for `Result` and `Option`.
+//!
+//! Formatting matches the `anyhow` conventions the codebase already relies
+//! on: `{e}` prints the outermost message, `{e:#}` the whole chain joined
+//! with `": "`, and `{e:?}` (what `fn main() -> Result<()>` prints on exit)
+//! a multi-line "Caused by" report.
+
+use std::fmt;
+
+/// An error as a chain of context messages, outermost first; the last entry
+/// is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with a new outermost context layer.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost message (what `{}` prints).
+    pub fn message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that is what
+// lets the blanket impls below coexist (the same coherence trick anyhow
+// uses) while `?` still converts any std error into an `Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Attach context to a `Result` or `Option`, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.message(), "outer");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "mid", "root"]);
+    }
+
+    #[test]
+    fn debug_is_a_caused_by_report() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("root"));
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "no such file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+
+        let o: Result<u32> = None.with_context(|| format!("missing in{}", 3));
+        assert_eq!(format!("{}", o.unwrap_err()), "missing in3");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn bail_formats_and_returns() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                crate::bail!("x must be nonzero (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(7).unwrap(), 7);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x must be nonzero (got 0)");
+    }
+}

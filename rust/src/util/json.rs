@@ -370,4 +370,14 @@ mod tests {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
     }
+
+    #[test]
+    fn json_error_chains_into_crate_error() {
+        // JsonError is a std error, so manifest parsing can layer context
+        // through util::error (the anyhow replacement) without adapters.
+        use crate::util::error::Context;
+        let err = Json::parse("{oops").context("parsing manifest.json").unwrap_err();
+        assert_eq!(format!("{err}"), "parsing manifest.json");
+        assert!(format!("{err:#}").contains("json error at byte"));
+    }
 }

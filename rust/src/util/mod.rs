@@ -1,8 +1,13 @@
-//! In-tree substrates: JSON/TOML codecs, PRNG, stats/bench harness, FAT1
-//! tensor I/O, property-testing helper.  These exist because the offline
-//! vendor set contains only the `xla` crate closure.
+//! In-tree substrates: error type, JSON/TOML codecs, PRNG, stats/bench
+//! harness, FAT1 tensor I/O, property-testing helper, work-stealing thread
+//! pool.  These exist because the build is fully offline: the crate has
+//! zero external dependencies (see the dependency policy in
+//! `rust/Cargo.toml`; the optional `xla` execution backend is the one
+//! feature-gated exception).
 
+pub mod error;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

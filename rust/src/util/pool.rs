@@ -1,0 +1,164 @@
+//! Work-stealing thread pool for embarrassingly-parallel sweeps (std-only:
+//! `thread::scope` + mutexed deques + channels; rayon is not vendored
+//! offline).
+//!
+//! This is the host-side analogue of the paper's section 3.2 lesson: the
+//! figure/table/autotune sweeps are grids of independent (method × seqlen ×
+//! pass × device) points, and running them serially leaves every core but
+//! one idle — the same low-occupancy failure mode FlashAttention-2
+//! diagnoses on GPUs.  `par_map` deals the grid across one deque per
+//! worker; an idle worker drains its own deque from the front and steals
+//! from the back of the fullest other deque.
+//!
+//! Results are returned in input order no matter which worker computed
+//! them, so parallel sweeps are byte-identical to their serial equivalents.
+//! `FA2_POOL_THREADS=1` forces serial execution for A/B comparison.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Worker count: the `FA2_POOL_THREADS` override, else the host parallelism.
+pub fn threads() -> usize {
+    std::env::var("FA2_POOL_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// Map `f` over `items` on the pool; results come back in input order.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    par_map_with(threads(), items, f)
+}
+
+/// [`par_map`] with an explicit worker count (tests pin this; `<= 1` runs
+/// serially on the calling thread).
+pub fn par_map_with<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.min(n);
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Deal jobs round-robin, one deque per worker.  Jobs are only ever
+    // removed, never re-added, which is what makes the termination check in
+    // `grab` sound.
+    let deques: Vec<Mutex<VecDeque<(usize, T)>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        deques[i % workers].lock().unwrap().push_back((i, item));
+    }
+
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let tx = tx.clone();
+            let deques = &deques;
+            let f = &f;
+            scope.spawn(move || {
+                while let Some((i, item)) = grab(deques, w) {
+                    if tx.send((i, f(item))).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        // The receive loop runs on the calling thread; it ends when every
+        // worker has dropped its sender.  Indexing by `i` restores input
+        // order regardless of completion order.
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("pool worker dropped a result"))
+        .collect()
+}
+
+/// Next job for worker `me`: its own deque first, else steal from the back
+/// of the fullest other deque.  Returns `None` only once every deque has
+/// been observed empty — stable, because jobs are never re-queued.
+fn grab<T>(deques: &[Mutex<VecDeque<(usize, T)>>], me: usize) -> Option<(usize, T)> {
+    if let Some(job) = deques[me].lock().unwrap().pop_front() {
+        return Some(job);
+    }
+    loop {
+        let mut victim: Option<(usize, usize)> = None; // (index, observed len)
+        for (v, d) in deques.iter().enumerate() {
+            if v == me {
+                continue;
+            }
+            let len = d.lock().unwrap().len();
+            if len > 0 && victim.map_or(true, |(_, best)| len > best) {
+                victim = Some((v, len));
+            }
+        }
+        let Some((v, _)) = victim else { return None };
+        // The victim may have drained between the scan and this lock; if so,
+        // rescan rather than giving up (other deques may still hold work).
+        if let Some(job) = deques[v].lock().unwrap().pop_back() {
+            return Some(job);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_single_item_run_serially() {
+        assert_eq!(par_map_with(8, Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(par_map_with(8, vec![3u32], |x| x * 2), vec![6]);
+    }
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map_with(7, items, |i| i * i);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * i));
+    }
+
+    #[test]
+    fn oversubscribed_worker_count_is_clamped() {
+        assert_eq!(par_map_with(64, vec![1u32, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn stealing_drains_skewed_workloads() {
+        // All the slow jobs land in worker 0's deque (round-robin deal with
+        // stride == workers); the others must steal to finish.
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map_with(4, items, |i| {
+            if i % 4 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            i + 1
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i + 1));
+    }
+
+    #[test]
+    fn env_override_parses() {
+        // `threads()` must never return 0 even under a bogus override.
+        assert!(threads() >= 1);
+    }
+}

