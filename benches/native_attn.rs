@@ -1,0 +1,103 @@
+//! Bench: the native executing FlashAttention-2 kernels (`attn::exec`) —
+//! forward/backward GFLOP/s and thread scaling over worker counts
+//! {1, 2, 4, 8}, plus split-KV decode latency.
+//!
+//! Contracts asserted here (DESIGN.md §7):
+//! - outputs at every worker count are byte-identical to the serial run
+//!   (the same order-preserving fan-out contract as PR 1's sweeps);
+//! - with ≥ 4 host cores, 4 workers beat serial on the forward pass.
+//!
+//! Writes reports/native_attn.csv:
+//!   pass,threads,p50_secs,gflops,speedup_vs_serial
+
+use fa2::attn::exec::{parallel, AttnDims, FlashParams};
+use fa2::attn::Pass;
+use fa2::util::rng::Rng;
+use fa2::util::stats::Bencher;
+
+fn main() {
+    let dims = AttnDims { batch: 2, heads: 8, seq: 256, head_dim: 64, causal: false };
+    let p = FlashParams::default();
+    let mut rng = Rng::seed_from(0xBE7C);
+    let n = dims.elems();
+    let mut draw = || -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+    let (q, k, v, dout) = (draw(), draw(), draw(), draw());
+
+    let b = Bencher::quick();
+    let base_fwd = parallel::forward_with(1, &q, &k, &v, dims, p);
+    let base_bwd = parallel::backward_with(1, &q, &k, &v, &base_fwd, &dout, dims, p);
+
+    let mut csv = String::from("pass,threads,p50_secs,gflops,speedup_vs_serial\n");
+    let mut fwd_serial_p50 = 0.0f64;
+    let mut bwd_serial_p50 = 0.0f64;
+    let mut fwd_speedup4 = 0.0f64;
+
+    for &threads in &[1usize, 2, 4, 8] {
+        let s = b.run(&format!("flash fwd B2 H8 N256 d64 ({threads} thr)"), || {
+            parallel::forward_with(threads, &q, &k, &v, dims, p)
+        });
+        let out = parallel::forward_with(threads, &q, &k, &v, dims, p);
+        assert!(
+            out.o == base_fwd.o && out.lse == base_fwd.lse,
+            "forward at {threads} workers is not byte-identical to serial"
+        );
+        if threads == 1 {
+            fwd_serial_p50 = s.p50;
+        }
+        let speedup = fwd_serial_p50 / s.p50;
+        if threads == 4 {
+            fwd_speedup4 = speedup;
+        }
+        let gflops = dims.flops(Pass::Fwd) / s.p50 / 1e9;
+        println!("fwd  {threads} threads: {gflops:>7.2} GFLOP/s  speedup {speedup:.2}x");
+        csv.push_str(&format!("fwd,{threads},{:.6},{gflops:.2},{speedup:.3}\n", s.p50));
+
+        let s = b.run(&format!("flash bwd B2 H8 N256 d64 ({threads} thr)"), || {
+            parallel::backward_with(threads, &q, &k, &v, &base_fwd, &dout, dims, p)
+        });
+        let g = parallel::backward_with(threads, &q, &k, &v, &base_fwd, &dout, dims, p);
+        assert!(
+            g.dq == base_bwd.dq && g.dk == base_bwd.dk && g.dv == base_bwd.dv,
+            "backward at {threads} workers is not byte-identical to serial"
+        );
+        if threads == 1 {
+            bwd_serial_p50 = s.p50;
+        }
+        let speedup = bwd_serial_p50 / s.p50;
+        let gflops = dims.flops(Pass::Bwd) / s.p50 / 1e9;
+        println!("bwd  {threads} threads: {gflops:>7.2} GFLOP/s  speedup {speedup:.2}x");
+        csv.push_str(&format!("bwd,{threads},{:.6},{gflops:.2},{speedup:.3}\n", s.p50));
+    }
+
+    // split-KV decode: one row over a long history, streamed vs fanned
+    let (hist, dh) = (4096usize, 64usize);
+    let qrow: Vec<f32> = (0..dh).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.1).collect();
+    let kh: Vec<f32> = (0..hist * dh).map(|i| ((i * 11 % 17) as f32 - 8.0) * 0.05).collect();
+    let vh: Vec<f32> = (0..hist * dh).map(|i| ((i * 5 % 19) as f32 - 9.0) * 0.05).collect();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let s = b.run("split-KV decode n=4096 d=64 chunk=256 (streamed)", || {
+        parallel::decode_splitkv(&qrow, &kh, &vh, hist, scale, 256)
+    });
+    println!("decode (streamed): {:.1} µs/token", s.p50 * 1e6);
+    csv.push_str(&format!("decode_streamed,1,{:.6},,\n", s.p50));
+    let s = b.run("split-KV decode n=4096 d=64 chunk=256 (fanned x4)", || {
+        parallel::decode_splitkv_fanned(4, &qrow, &kh, &vh, hist, scale, 256)
+    });
+    println!("decode (fanned 4): {:.1} µs/token", s.p50 * 1e6);
+    csv.push_str(&format!("decode_fanned,4,{:.6},,\n", s.p50));
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/native_attn.csv", &csv).unwrap();
+    println!("wrote reports/native_attn.csv");
+
+    let host = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    if host >= 4 {
+        assert!(
+            fwd_speedup4 > 1.0,
+            "4-worker forward not faster than serial on a {host}-core host \
+             (speedup {fwd_speedup4:.2}x)"
+        );
+    } else {
+        println!("(host has {host} cores; skipping the ≥4-thread speedup assertion)");
+    }
+}

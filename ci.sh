@@ -17,8 +17,22 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
-echo "== wiring: benches + examples build =="
+echo "== native exec: parity + gradcheck suites (release) =="
+cargo test -q --release --test prop_native_attn --test gradcheck_native_attn
+
+echo "== wiring: benches + examples build (includes native_attn) =="
 cargo build --release --benches --examples
+
+echo "== warnings gate: attn/exec + runtime/native must be warning-free =="
+# cargo re-emits cached warnings on `check`; any diagnostic naming these
+# paths fails CI (errors would already have failed the build steps above).
+check_out="$(cargo check --release --all-targets 2>&1)" \
+    || { printf '%s\n' "$check_out"; exit 1; }
+if printf '%s\n' "$check_out" | grep -q 'attn/exec\|runtime/native'; then
+    printf '%s\n' "$check_out" | grep -B3 -A1 'attn/exec\|runtime/native'
+    echo "FAIL: compiler warnings in rust/src/attn/exec/ or rust/src/runtime/native.rs" >&2
+    exit 1
+fi
 
 echo "== dependency policy: fa2 only =="
 deps="$(cargo tree --prefix none --edges normal | awk '{print $1}' | sort -u)"

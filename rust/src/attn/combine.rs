@@ -44,25 +44,37 @@ impl Partial {
         Partial { o, m, l }
     }
 
-    /// Merge two partials (the smem exchange / combine pass).
-    pub fn merge(&self, other: &Partial) -> Partial {
+    /// Merge `other` into `self` in place (the smem exchange / combine
+    /// pass).  Allocation-free when both partials share `d` — this is the
+    /// flash-decoding hot loop, which must not allocate per KV chunk.
+    pub fn merge_from(&mut self, other: &Partial) {
         if other.l == 0.0 && other.m == f64::NEG_INFINITY {
-            return self.clone();
+            return;
         }
         if self.l == 0.0 && self.m == f64::NEG_INFINITY {
-            return other.clone();
+            // clone_from reuses self.o's buffer when capacities allow.
+            self.o.clone_from(&other.o);
+            self.m = other.m;
+            self.l = other.l;
+            return;
         }
         let m = self.m.max(other.m);
         let wa = (self.m - m).exp();
         let wb = (other.m - m).exp();
-        let l = wa * self.l + wb * other.l;
-        let o = self
-            .o
-            .iter()
-            .zip(&other.o)
-            .map(|(a, b)| wa * a + wb * b)
-            .collect();
-        Partial { o, m, l }
+        self.l = wa * self.l + wb * other.l;
+        for (a, b) in self.o.iter_mut().zip(&other.o) {
+            *a = wa * *a + wb * b;
+        }
+        self.m = m;
+    }
+
+    /// Merge two partials, returning the result ([`merge_from`] wrapper).
+    ///
+    /// [`merge_from`]: Partial::merge_from
+    pub fn merge(&self, other: &Partial) -> Partial {
+        let mut out = self.clone();
+        out.merge_from(other);
+        out
     }
 
     /// Finalize: O = o_tilde / l, LSE = m + ln(l).
@@ -72,10 +84,15 @@ impl Partial {
     }
 }
 
-/// Merge a slice of partials (any order is valid; left fold used here).
+/// Merge a slice of partials (any order is valid; in-place left fold so
+/// the reduction allocates once, not per element).
 pub fn merge_all(parts: &[Partial]) -> Partial {
     let d = parts.first().map_or(0, |p| p.o.len());
-    parts.iter().fold(Partial::empty(d), |acc, p| acc.merge(p))
+    let mut acc = Partial::empty(d);
+    for p in parts {
+        acc.merge_from(p);
+    }
+    acc
 }
 
 #[cfg(test)]
@@ -120,6 +137,26 @@ mod tests {
             assert!(close(*x, *y));
         }
         assert!(close(ab.1, ba.1));
+    }
+
+    #[test]
+    fn merge_from_matches_merge_and_reuses_buffer() {
+        let a = Partial::from_scores(&[0.5, -2.0], &[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Partial::from_scores(&[1.5], &[vec![-1.0, 0.5]]);
+        let via_merge = a.merge(&b);
+        let mut via_from = a.clone();
+        let ptr_before = via_from.o.as_ptr();
+        via_from.merge_from(&b);
+        assert_eq!(via_from, via_merge);
+        // in-place path: the output buffer is the input buffer
+        assert_eq!(via_from.o.as_ptr(), ptr_before);
+        // identity cases mirror merge()
+        let mut e = Partial::empty(2);
+        e.merge_from(&a);
+        assert_eq!(e, a);
+        let mut a2 = a.clone();
+        a2.merge_from(&Partial::empty(2));
+        assert_eq!(a2, a);
     }
 
     #[test]

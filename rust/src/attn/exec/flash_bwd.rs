@@ -1,0 +1,115 @@
+//! Tiled backward — the paper's Algorithm 2, the 5-matmul pass.
+//!
+//! P is *recomputed* from the saved logsumexp (`Pᵢⱼ = exp(scale·qᵢ·kⱼ −
+//! LSEᵢ)`), never stored: the five tile matmuls are S = QKᵀ, dV = PᵀdO,
+//! dP = dOVᵀ, dK = dSᵀQ and dQ = dSK, with `dSᵢⱼ = Pᵢⱼ(dPᵢⱼ − Dᵢ)·scale`
+//! and `Dᵢ = Σₜ dOᵢₜOᵢₜ` precomputed once per tensor.
+//!
+//! Work partitioning mirrors the paper's backward: one task per
+//! (b, h, K-block) owns that block's dK/dV exclusively and emits a partial
+//! dQ covering the rows it touched; [`super::parallel::backward_with`]
+//! sums those partials in task order, so the reduction is deterministic at
+//! any worker count (no atomics — the host-side stand-in for the paper's
+//! atomic-add on dQ).
+
+use super::TensorView;
+
+/// One (b, h, K-block) backward tile over columns `j0..j1`.
+///
+/// Returns `(dk_tile, dv_tile, q_start, dq_partial)`: dK/dV rows for
+/// `j0..j1`, and a dQ contribution for rows `q_start..seq` (rows below
+/// `q_start` provably receive nothing from this block under the mask).
+pub(crate) fn backward_tile(
+    q: TensorView,
+    k: TensorView,
+    v: TensorView,
+    lse: &[f32],
+    dout: TensorView,
+    dvec: &[f32],
+    b: usize,
+    h: usize,
+    j0: usize,
+    j1: usize,
+) -> (Vec<f32>, Vec<f32>, usize, Vec<f32>) {
+    let dims = q.dims;
+    let (n, d) = (dims.seq, dims.head_dim);
+    let scale = dims.scale();
+    let w = j1 - j0;
+
+    let mut dk = vec![0.0f32; w * d];
+    let mut dv = vec![0.0f32; w * d];
+    let q_start = if dims.causal { j0 } else { 0 };
+    let mut dq = vec![0.0f32; (n - q_start) * d];
+
+    for i in q_start..n {
+        // columns of this block row i attends to (j ≤ i when causal)
+        let cols = if dims.causal { (i - j0 + 1).min(w) } else { w };
+        let qi = q.row(b, h, i);
+        let doi = dout.row(b, h, i);
+        let lse_i = lse[dims.lse_offset(b, h, i)];
+        let d_i = dvec[dims.lse_offset(b, h, i)];
+        let dqrow = &mut dq[(i - q_start) * d..(i - q_start + 1) * d];
+        for cj in 0..cols {
+            let j = j0 + cj;
+            let kj = k.row(b, h, j);
+            let vj = v.row(b, h, j);
+            // S then P from the saved LSE (recomputation, not storage)
+            let mut s = 0.0f32;
+            for t in 0..d {
+                s += qi[t] * kj[t];
+            }
+            let pij = (s * scale - lse_i).exp();
+            // dP = dO·Vⱼ ;  dS = P(dP − D)·scale
+            let mut dp = 0.0f32;
+            for t in 0..d {
+                dp += doi[t] * vj[t];
+            }
+            let ds = pij * (dp - d_i) * scale;
+            let dkrow = &mut dk[cj * d..(cj + 1) * d];
+            let dvrow = &mut dv[cj * d..(cj + 1) * d];
+            for t in 0..d {
+                dkrow[t] += ds * qi[t];
+                dvrow[t] += pij * doi[t];
+                dqrow[t] += ds * kj[t];
+            }
+        }
+    }
+    (dk, dv, q_start, dq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parallel, reference, AttnDims, FlashParams};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn matches_reference_gradients() {
+        let mut rng = Rng::seed_from(31);
+        for &(seq, causal) in &[(9usize, false), (16, true), (21, true)] {
+            let dims = AttnDims { batch: 1, heads: 2, seq, head_dim: 8, causal };
+            let n = dims.elems();
+            let (q, k, v, dout) = (
+                rand_vec(&mut rng, n),
+                rand_vec(&mut rng, n),
+                rand_vec(&mut rng, n),
+                rand_vec(&mut rng, n),
+            );
+            let p = FlashParams { block_q: 8, block_k: 8 };
+            let fwd = parallel::forward_with(1, &q, &k, &v, dims, p);
+            let g = parallel::backward_with(1, &q, &k, &v, &fwd, &dout, dims, p);
+            let r = reference::backward(&q, &k, &v, &dout, dims);
+            assert!(max_diff(&g.dq, &r.dq) < 1e-4, "dQ seq={seq} causal={causal}");
+            assert!(max_diff(&g.dk, &r.dk) < 1e-4, "dK seq={seq} causal={causal}");
+            assert!(max_diff(&g.dv, &r.dv) < 1e-4, "dV seq={seq} causal={causal}");
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Tiled online-softmax forward — the paper's Algorithm 1.
+//!
+//! One call to [`forward_tile`] computes a (b, h, Q-block) tile: it streams
+//! K/V blocks through a running (m, l, õ) state, rescales the accumulator
+//! once per block instead of once per iteration (§3.1), skips K blocks that
+//! are entirely above the causal diagonal, and masks only the blocks the
+//! diagonal actually crosses.  Only the logsumexp is saved for the backward
+//! pass — not m and l separately, and never the N×N score matrix.
+//!
+//! The whole-tensor entry point lives in [`super::parallel`]; `forward`
+//! here is the serial spelling (worker count 1 through the same fan-out),
+//! so serial and parallel runs are byte-identical by construction.
+
+use super::{AttnDims, FlashOut, FlashParams, TensorView};
+
+/// Compute rows `q0..q1` of head (b, h).  Returns the tile's output rows
+/// (`(q1-q0)·head_dim` values) and logsumexps (`q1-q0` values).
+pub(crate) fn forward_tile(
+    q: TensorView,
+    k: TensorView,
+    v: TensorView,
+    p: FlashParams,
+    b: usize,
+    h: usize,
+    q0: usize,
+    q1: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let dims = q.dims;
+    let (n, d) = (dims.seq, dims.head_dim);
+    let scale = dims.scale();
+    let rows = q1 - q0;
+    let bk = p.block_k.max(1);
+
+    let mut o = vec![0.0f32; rows * d];
+    let mut m = vec![f32::NEG_INFINITY; rows];
+    let mut l = vec![0.0f32; rows];
+    let mut s = vec![0.0f32; rows * bk]; // score tile scratch
+
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + bk).min(n);
+        if dims.causal && j0 > q1 - 1 {
+            break; // this and all later K blocks are fully masked
+        }
+        let w = j1 - j0;
+        // A block is "full" when the causal diagonal does not cross it;
+        // then no per-row masking is needed (§3.1: mask only where needed).
+        let full = !dims.causal || j1 - 1 <= q0;
+        for (ri, i) in (q0..q1).enumerate() {
+            // columns of this block row i may attend to (j ≤ i when
+            // causal); masked columns are never computed, not computed
+            // then discarded
+            let lim = if full {
+                w
+            } else if i < j0 {
+                0
+            } else {
+                (i - j0 + 1).min(w)
+            };
+            if lim == 0 {
+                continue;
+            }
+            // S[ri, ..lim] = scale · qᵢ Kᵀ
+            let qi = q.row(b, h, i);
+            {
+                let srow = &mut s[ri * bk..ri * bk + lim];
+                for (cj, sv) in srow.iter_mut().enumerate() {
+                    let kj = k.row(b, h, j0 + cj);
+                    let mut acc = 0.0f32;
+                    for t in 0..d {
+                        acc += qi[t] * kj[t];
+                    }
+                    *sv = acc * scale;
+                }
+            }
+            let srow = &s[ri * bk..ri * bk + lim];
+            let mut mb = f32::NEG_INFINITY;
+            for &x in srow {
+                mb = mb.max(x);
+            }
+            let mnew = m[ri].max(mb);
+            // one rescale of the existing accumulator per block (not per
+            // iteration — the §3.1 non-matmul-FLOP reduction)
+            let alpha = (m[ri] - mnew).exp(); // exp(-inf)=0 on the first block
+            let orow = &mut o[ri * d..(ri + 1) * d];
+            if alpha != 1.0 {
+                for x in orow.iter_mut() {
+                    *x *= alpha;
+                }
+                l[ri] *= alpha;
+            }
+            for (cj, &sj) in srow.iter().enumerate() {
+                let pij = (sj - mnew).exp();
+                l[ri] += pij;
+                let vj = v.row(b, h, j0 + cj);
+                for t in 0..d {
+                    orow[t] += pij * vj[t];
+                }
+            }
+            m[ri] = mnew;
+        }
+        j0 = j1;
+    }
+
+    // finalize: O = õ / l, LSE = m + ln l (the single statistic saved)
+    let mut lse = vec![0.0f32; rows];
+    for ri in 0..rows {
+        if l[ri] > 0.0 {
+            let inv = 1.0 / l[ri];
+            for x in &mut o[ri * d..(ri + 1) * d] {
+                *x *= inv;
+            }
+            lse[ri] = m[ri] + l[ri].ln();
+        } else {
+            // a row that attended to nothing (cannot happen for square
+            // causal/full attention, but keep the contract total)
+            lse[ri] = f32::NEG_INFINITY;
+        }
+    }
+    (o, lse)
+}
+
+/// Algorithm 1 over the whole tensor, serially (worker count 1 through the
+/// same order-preserving fan-out `parallel::forward` uses).
+pub fn forward(q: &[f32], k: &[f32], v: &[f32], dims: AttnDims, p: FlashParams) -> FlashOut {
+    super::parallel::forward_with(1, q, k, v, dims, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn matches_reference_on_block_boundaries_and_remainders() {
+        let mut rng = Rng::seed_from(42);
+        for &(seq, bq, bkc) in &[(16usize, 8usize, 8usize), (17, 8, 8), (5, 2, 3), (33, 16, 8)] {
+            for &causal in &[false, true] {
+                let dims = AttnDims { batch: 1, heads: 2, seq, head_dim: 16, causal };
+                let n = dims.elems();
+                let (q, k, v) =
+                    (rand_vec(&mut rng, n), rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+                let p = FlashParams { block_q: bq, block_k: bkc };
+                let fl = forward(&q, &k, &v, dims, p);
+                let rf = reference::forward(&q, &k, &v, dims);
+                assert!(
+                    max_diff(&fl.o, &rf.o) < 1e-4,
+                    "O mismatch seq={seq} bq={bq} bk={bkc} causal={causal}"
+                );
+                assert!(
+                    max_diff(&fl.lse, &rf.lse) < 1e-4,
+                    "LSE mismatch seq={seq} causal={causal}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_size_does_not_change_results_beyond_roundoff() {
+        let mut rng = Rng::seed_from(7);
+        let dims = AttnDims { batch: 1, heads: 1, seq: 29, head_dim: 8, causal: true };
+        let n = dims.elems();
+        let (q, k, v) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+        let a = forward(&q, &k, &v, dims, FlashParams { block_q: 4, block_k: 4 });
+        let b = forward(&q, &k, &v, dims, FlashParams { block_q: 64, block_k: 64 });
+        assert!(max_diff(&a.o, &b.o) < 1e-5);
+        assert!(max_diff(&a.lse, &b.lse) < 1e-5);
+    }
+
+    #[test]
+    fn causal_block_skipping_still_covers_the_diagonal() {
+        // seq smaller than one block AND seq spanning many blocks
+        let mut rng = Rng::seed_from(8);
+        for seq in [1usize, 2, 3, 64, 70] {
+            let dims = AttnDims { batch: 1, heads: 1, seq, head_dim: 4, causal: true };
+            let n = dims.elems();
+            let (q, k, v) =
+                (rand_vec(&mut rng, n), rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+            let fl = forward(&q, &k, &v, dims, FlashParams { block_q: 16, block_k: 16 });
+            let rf = reference::forward(&q, &k, &v, dims);
+            assert!(max_diff(&fl.o, &rf.o) < 1e-4, "seq={seq}");
+        }
+    }
+}

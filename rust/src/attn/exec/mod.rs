@@ -1,0 +1,176 @@
+//! `attn::exec` — the native *executing* FlashAttention-2 engine (CPU, f32).
+//!
+//! Everything else under `attn` prices schedules on the gpusim cost model;
+//! this subsystem actually computes attention, so a fresh checkout runs
+//! `serve`/`verify` end-to-end with no AOT artifacts (see
+//! `runtime::native`).  DESIGN.md §7 is the architecture note.
+//!
+//! Layout contract: every tensor is a flat `Vec<f32>`/`&[f32]` in row-major
+//! `(batch, heads, seq, head_dim)` order with the last dim contiguous,
+//! wrapped in a [`TensorView`] shared by all kernels.  Modules:
+//!
+//! - [`reference`]: naive O(N²) forward + backward, the correctness oracle
+//!   (f64 accumulation, f32 in/out).
+//! - [`flash_fwd`]: the tiled online-softmax forward (paper Algorithm 1)
+//!   with causal block skipping; saves only the per-row logsumexp.
+//! - [`flash_bwd`]: the 5-matmul backward (Algorithm 2), recomputing P
+//!   from the saved LSE instead of storing the N×N matrix.
+//! - [`parallel`]: §3.2 work partitioning — (batch, head, Q-block) /
+//!   (batch, head, K-block) tasks fanned across `util::pool`, plus the
+//!   split-KV decode path reduced through `attn::combine`.
+
+pub mod flash_bwd;
+pub mod flash_fwd;
+pub mod parallel;
+pub mod reference;
+
+use super::Pass;
+
+/// Dimensions + masking of one executing attention problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnDims {
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+}
+
+impl AttnDims {
+    /// Element count of one (batch, heads, seq, head_dim) tensor.
+    pub fn elems(&self) -> usize {
+        self.batch * self.heads * self.seq * self.head_dim
+    }
+
+    /// Row count — the size of per-row tensors like the LSE.
+    pub fn rows(&self) -> usize {
+        self.batch * self.heads * self.seq
+    }
+
+    /// Softmax scale 1/sqrt(d).
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+
+    /// Flat offset of row `i` of head (b, h).
+    pub fn row_offset(&self, b: usize, h: usize, i: usize) -> usize {
+        ((b * self.heads + h) * self.seq + i) * self.head_dim
+    }
+
+    /// Flat index into a per-row (batch, heads, seq) tensor (the LSE).
+    pub fn lse_offset(&self, b: usize, h: usize, i: usize) -> usize {
+        (b * self.heads + h) * self.seq + i
+    }
+
+    /// Executed FLOPs under the paper's §4.1 accounting — delegates to
+    /// [`AttnProblem::reported_flops`] so the formula lives in one place.
+    ///
+    /// [`AttnProblem::reported_flops`]: crate::attn::AttnProblem::reported_flops
+    pub fn flops(&self, pass: Pass) -> f64 {
+        crate::attn::AttnProblem {
+            batch: self.batch as u64,
+            heads: self.heads as u64,
+            seqlen: self.seq as u64,
+            head_dim: self.head_dim as u64,
+            causal: self.causal,
+            dtype_bytes: 4, // f32 (irrelevant to the FLOP count)
+        }
+        .reported_flops(pass)
+    }
+}
+
+/// Borrowed row-major (batch, heads, seq, head_dim) view over a flat f32
+/// buffer — the layout shared by every kernel in this subsystem.
+#[derive(Clone, Copy)]
+pub struct TensorView<'a> {
+    pub dims: AttnDims,
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(dims: AttnDims, data: &'a [f32]) -> TensorView<'a> {
+        assert_eq!(
+            data.len(),
+            dims.elems(),
+            "TensorView: buffer length does not match {dims:?}"
+        );
+        TensorView { dims, data }
+    }
+
+    /// Row `i` of head (b, h): a contiguous `head_dim` slice.
+    pub fn row(&self, b: usize, h: usize, i: usize) -> &'a [f32] {
+        let o = self.dims.row_offset(b, h, i);
+        &self.data[o..o + self.dims.head_dim]
+    }
+
+    /// The contiguous (seq, head_dim) block of head (b, h).
+    pub fn head(&self, b: usize, h: usize) -> &'a [f32] {
+        let o = self.dims.row_offset(b, h, 0);
+        &self.data[o..o + self.dims.seq * self.dims.head_dim]
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+}
+
+/// Tile sizes for the flash kernels (B_r × B_c in the paper's notation).
+/// Any positive sizes are correct — seqlens need not divide them.
+#[derive(Debug, Clone, Copy)]
+pub struct FlashParams {
+    pub block_q: usize,
+    pub block_k: usize,
+}
+
+impl Default for FlashParams {
+    fn default() -> Self {
+        FlashParams { block_q: 64, block_k: 64 }
+    }
+}
+
+/// Forward products: O shaped like Q, plus the per-row logsumexp — the
+/// only softmax statistic the backward pass needs (§3.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlashOut {
+    pub o: Vec<f32>,
+    pub lse: Vec<f32>,
+}
+
+/// Backward products, each shaped like the corresponding input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlashGrads {
+    pub dq: Vec<f32>,
+    pub dk: Vec<f32>,
+    pub dv: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_offsets_and_flops() {
+        let d = AttnDims { batch: 2, heads: 3, seq: 5, head_dim: 4, causal: false };
+        assert_eq!(d.elems(), 2 * 3 * 5 * 4);
+        assert_eq!(d.rows(), 2 * 3 * 5);
+        assert_eq!(d.row_offset(0, 0, 0), 0);
+        assert_eq!(d.row_offset(1, 2, 4), ((1 * 3 + 2) * 5 + 4) * 4);
+        assert_eq!(d.lse_offset(1, 0, 3), (1 * 3) * 5 + 3);
+        let f = d.flops(Pass::Fwd);
+        assert_eq!(f, 4.0 * 25.0 * 4.0 * 6.0);
+        assert_eq!(d.flops(Pass::Bwd), 2.5 * f);
+        let dc = AttnDims { causal: true, ..d };
+        assert_eq!(dc.flops(Pass::Fwd), f / 2.0);
+    }
+
+    #[test]
+    fn view_rows_are_contiguous_slices() {
+        let d = AttnDims { batch: 1, heads: 2, seq: 3, head_dim: 2, causal: false };
+        let data: Vec<f32> = (0..d.elems()).map(|x| x as f32).collect();
+        let v = TensorView::new(d, &data);
+        assert_eq!(v.row(0, 0, 0), &[0.0, 1.0]);
+        assert_eq!(v.row(0, 1, 2), &[10.0, 11.0]);
+        assert_eq!(v.head(0, 1).len(), 6);
+        assert_eq!(v.head(0, 1)[0], 6.0);
+    }
+}

@@ -1,0 +1,338 @@
+//! §3.2 work partitioning for the native kernels, on `util::pool`.
+//!
+//! Forward fans one task per (batch, head, Q-block); backward fans one per
+//! (batch, head, K-block) — exactly the grid dimensions the paper adds over
+//! FlashAttention-1 to fill the machine when batch·heads alone is too
+//! small.  `par_map` returns results in input order, and dQ partials are
+//! summed in fixed task order, so any worker count produces byte-identical
+//! outputs (`FA2_POOL_THREADS=1` is the serial A/B switch, as for the
+//! sweeps).
+//!
+//! The split-KV decode path is the flash-decoding shape: one query row
+//! against a long KV history, cut into chunks whose partial softmax states
+//! reduce through `attn::combine` — the same associative merge the warp
+//! split-K exchange (§3.3) relies on.  The streaming variant
+//! ([`decode_splitkv`]) reuses two `Partial`s and never allocates per
+//! chunk; the fanned variant ([`decode_splitkv_fanned`]) computes chunk
+//! partials on the pool and reduces them with `merge_all`.
+
+use crate::attn::combine::{merge_all, Partial};
+use crate::util::pool;
+
+use super::{flash_bwd, flash_fwd, AttnDims, FlashGrads, FlashOut, FlashParams, TensorView};
+
+/// One task per (b, h, block) where `block` tiles `0..seq` by `step`.
+fn block_tasks(dims: AttnDims, step: usize) -> Vec<(usize, usize, usize, usize)> {
+    let step = step.max(1);
+    let mut tasks = Vec::new();
+    for b in 0..dims.batch {
+        for h in 0..dims.heads {
+            let mut lo = 0;
+            while lo < dims.seq {
+                let hi = (lo + step).min(dims.seq);
+                tasks.push((b, h, lo, hi));
+                lo = hi;
+            }
+        }
+    }
+    tasks
+}
+
+/// Flash forward over the whole tensor, fanned across the pool.
+pub fn forward(q: &[f32], k: &[f32], v: &[f32], dims: AttnDims, p: FlashParams) -> FlashOut {
+    forward_with(pool::threads(), q, k, v, dims, p)
+}
+
+/// [`forward`] with an explicit worker count (1 = serial; benches and the
+/// byte-identical A/B tests pin this).
+pub fn forward_with(
+    workers: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dims: AttnDims,
+    p: FlashParams,
+) -> FlashOut {
+    let qv = TensorView::new(dims, q);
+    let kv = TensorView::new(dims, k);
+    let vv = TensorView::new(dims, v);
+    let tasks = block_tasks(dims, p.block_q);
+    let tiles = pool::par_map_with(workers, tasks.clone(), |(b, h, q0, q1)| {
+        flash_fwd::forward_tile(qv, kv, vv, p, b, h, q0, q1)
+    });
+    let d = dims.head_dim;
+    let mut out = FlashOut { o: vec![0.0; dims.elems()], lse: vec![0.0; dims.rows()] };
+    for ((b, h, q0, q1), (ot, lt)) in tasks.into_iter().zip(tiles) {
+        let ro = dims.row_offset(b, h, q0);
+        out.o[ro..ro + (q1 - q0) * d].copy_from_slice(&ot);
+        let lo = dims.lse_offset(b, h, q0);
+        out.lse[lo..lo + (q1 - q0)].copy_from_slice(&lt);
+    }
+    out
+}
+
+/// Flash backward over the whole tensor, fanned across the pool.
+/// `fwd` is the forward's output (O for the D vector, LSE to recompute P).
+pub fn backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    fwd: &FlashOut,
+    dout: &[f32],
+    dims: AttnDims,
+    p: FlashParams,
+) -> FlashGrads {
+    backward_with(pool::threads(), q, k, v, fwd, dout, dims, p)
+}
+
+/// [`backward`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_with(
+    workers: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    fwd: &FlashOut,
+    dout: &[f32],
+    dims: AttnDims,
+    p: FlashParams,
+) -> FlashGrads {
+    let qv = TensorView::new(dims, q);
+    let kv = TensorView::new(dims, k);
+    let vv = TensorView::new(dims, v);
+    let dov = TensorView::new(dims, dout);
+    assert_eq!(fwd.o.len(), dims.elems(), "forward O length mismatch");
+    assert_eq!(fwd.lse.len(), dims.rows(), "forward LSE length mismatch");
+
+    // D_i = Σ_t dO_it · O_it, once per tensor (Algorithm 2 line 1)
+    let d = dims.head_dim;
+    let mut dvec = vec![0.0f32; dims.rows()];
+    for (r, dv) in dvec.iter_mut().enumerate() {
+        let (orow, dorow) = (&fwd.o[r * d..(r + 1) * d], &dout[r * d..(r + 1) * d]);
+        let mut acc = 0.0f32;
+        for t in 0..d {
+            acc += orow[t] * dorow[t];
+        }
+        *dv = acc;
+    }
+
+    let tasks = block_tasks(dims, p.block_k);
+    let lse = &fwd.lse;
+    let dvec_ref = &dvec;
+
+    let mut g = FlashGrads {
+        dq: vec![0.0; dims.elems()],
+        dk: vec![0.0; dims.elems()],
+        dv: vec![0.0; dims.elems()],
+    };
+    // Fan tasks in bounded waves: each task's dQ partial spans up to the
+    // whole seqlen, so holding every tile at once would cost
+    // O(seq²·d/block_k) transient memory on long sequences.  dK/dV rows
+    // are owned by exactly one task; dQ partials are summed in ascending
+    // task order — the order is the same for ANY worker or wave size, so
+    // outputs stay byte-identical to serial.
+    let wave = workers.max(1) * 4;
+    for wave_tasks in tasks.chunks(wave) {
+        let tiles = pool::par_map_with(workers, wave_tasks.to_vec(), |(b, h, j0, j1)| {
+            flash_bwd::backward_tile(qv, kv, vv, lse, dov, dvec_ref, b, h, j0, j1)
+        });
+        for (&(b, h, j0, j1), (dk_t, dv_t, q_start, dq_t)) in
+            wave_tasks.iter().zip(tiles)
+        {
+            let ro = dims.row_offset(b, h, j0);
+            g.dk[ro..ro + (j1 - j0) * d].copy_from_slice(&dk_t);
+            g.dv[ro..ro + (j1 - j0) * d].copy_from_slice(&dv_t);
+            let base = dims.row_offset(b, h, q_start);
+            for (x, acc) in dq_t.iter().zip(&mut g.dq[base..base + dq_t.len()]) {
+                *acc += *x;
+            }
+        }
+    }
+    g
+}
+
+/// Fill `out` with the partial softmax state of one KV chunk (`rows`
+/// key/value rows of width `d = qrow.len()`), in f64 like `combine`.
+/// Allocation-free once `out.o` has capacity `d`.
+fn partial_from_chunk(out: &mut Partial, qrow: &[f32], kc: &[f32], vc: &[f32], scale: f32) {
+    let d = qrow.len();
+    out.o.clear();
+    out.o.resize(d, 0.0);
+    out.m = f64::NEG_INFINITY;
+    out.l = 0.0;
+    let rows = kc.len() / d;
+    for r in 0..rows {
+        let (kr, vr) = (&kc[r * d..(r + 1) * d], &vc[r * d..(r + 1) * d]);
+        let mut s = 0.0f64;
+        for t in 0..d {
+            s += qrow[t] as f64 * kr[t] as f64;
+        }
+        s *= scale as f64;
+        if s > out.m {
+            // raise the running max; rescale what we have so far
+            let alpha = (out.m - s).exp(); // 0 on the first row
+            out.l *= alpha;
+            for o in out.o.iter_mut() {
+                *o *= alpha;
+            }
+            out.m = s;
+        }
+        let w = (s - out.m).exp();
+        out.l += w;
+        for (o, &x) in out.o.iter_mut().zip(vr) {
+            *o += w * x as f64;
+        }
+    }
+}
+
+/// Streaming split-KV decode: one query row against `n` cached KV rows,
+/// reduced chunk by chunk with `Partial::merge_from` — zero allocations
+/// per chunk (the serving decode hot loop).  Returns (O row, LSE).
+pub fn decode_splitkv(
+    qrow: &[f32],
+    k_hist: &[f32],
+    v_hist: &[f32],
+    n: usize,
+    scale: f32,
+    chunk: usize,
+) -> (Vec<f32>, f32) {
+    let d = qrow.len();
+    assert!(k_hist.len() >= n * d && v_hist.len() >= n * d, "history too short");
+    let chunk = chunk.max(1);
+    let mut acc = Partial::empty(d);
+    let mut tmp = Partial::empty(d);
+    let mut c0 = 0;
+    while c0 < n {
+        let c1 = (c0 + chunk).min(n);
+        partial_from_chunk(&mut tmp, qrow, &k_hist[c0 * d..c1 * d], &v_hist[c0 * d..c1 * d], scale);
+        acc.merge_from(&tmp);
+        c0 = c1;
+    }
+    let (o, lse) = acc.finalize();
+    (o.into_iter().map(|x| x as f32).collect(), lse as f32)
+}
+
+/// Fanned split-KV decode: chunk partials computed on the pool, reduced
+/// with `merge_all` — the flash-decoding shape, exercising the same
+/// merge associativity the §3.3 warp split-K models.
+pub fn decode_splitkv_fanned(
+    workers: usize,
+    qrow: &[f32],
+    k_hist: &[f32],
+    v_hist: &[f32],
+    n: usize,
+    scale: f32,
+    chunk: usize,
+) -> (Vec<f32>, f32) {
+    let d = qrow.len();
+    assert!(k_hist.len() >= n * d && v_hist.len() >= n * d, "history too short");
+    let chunk = chunk.max(1);
+    let mut ranges = Vec::new();
+    let mut c0 = 0;
+    while c0 < n {
+        let c1 = (c0 + chunk).min(n);
+        ranges.push((c0, c1));
+        c0 = c1;
+    }
+    let parts = pool::par_map_with(workers, ranges, |(c0, c1)| {
+        let mut p = Partial::empty(d);
+        partial_from_chunk(&mut p, qrow, &k_hist[c0 * d..c1 * d], &v_hist[c0 * d..c1 * d], scale);
+        p
+    });
+    let (o, lse) = merge_all(&parts).finalize();
+    (o.into_iter().map(|x| x as f32).collect(), lse as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn parallel_forward_is_bitwise_equal_to_serial() {
+        let mut rng = Rng::seed_from(77);
+        let dims = AttnDims { batch: 2, heads: 3, seq: 37, head_dim: 16, causal: true };
+        let n = dims.elems();
+        let (q, k, v) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+        let p = FlashParams { block_q: 8, block_k: 8 };
+        let serial = forward_with(1, &q, &k, &v, dims, p);
+        let par = forward_with(4, &q, &k, &v, dims, p);
+        assert_eq!(serial.o, par.o, "parallel forward diverged from serial");
+        assert_eq!(serial.lse, par.lse);
+    }
+
+    #[test]
+    fn parallel_backward_is_bitwise_equal_to_serial() {
+        let mut rng = Rng::seed_from(78);
+        let dims = AttnDims { batch: 1, heads: 4, seq: 26, head_dim: 8, causal: false };
+        let n = dims.elems();
+        let (q, k, v, dout) = (
+            rand_vec(&mut rng, n),
+            rand_vec(&mut rng, n),
+            rand_vec(&mut rng, n),
+            rand_vec(&mut rng, n),
+        );
+        let p = FlashParams { block_q: 8, block_k: 8 };
+        let fwd = forward_with(1, &q, &k, &v, dims, p);
+        let serial = backward_with(1, &q, &k, &v, &fwd, &dout, dims, p);
+        let par = backward_with(4, &q, &k, &v, &fwd, &dout, dims, p);
+        assert_eq!(serial.dq, par.dq, "parallel dQ diverged from serial");
+        assert_eq!(serial.dk, par.dk);
+        assert_eq!(serial.dv, par.dv);
+    }
+
+    #[test]
+    fn decode_chunking_is_split_invariant() {
+        let mut rng = Rng::seed_from(79);
+        let (n, d) = (130usize, 16usize);
+        let q = rand_vec(&mut rng, d);
+        let k = rand_vec(&mut rng, n * d);
+        let v = rand_vec(&mut rng, n * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mono = decode_splitkv(&q, &k, &v, n, scale, n);
+        for chunk in [1usize, 3, 32, 64, 127] {
+            let split = decode_splitkv(&q, &k, &v, n, scale, chunk);
+            let fanned = decode_splitkv_fanned(4, &q, &k, &v, n, scale, chunk);
+            for (a, b) in mono.0.iter().zip(&split.0) {
+                assert!((a - b).abs() < 1e-5, "chunk={chunk}: {a} vs {b}");
+            }
+            assert!((mono.1 - split.1).abs() < 1e-5);
+            for (a, b) in split.0.iter().zip(&fanned.0) {
+                assert!((a - b).abs() < 1e-5, "fanned chunk={chunk}");
+            }
+            assert!((split.1 - fanned.1).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn decode_matches_single_row_softmax() {
+        let mut rng = Rng::seed_from(80);
+        let (n, d) = (23usize, 8usize);
+        let q = rand_vec(&mut rng, d);
+        let k = rand_vec(&mut rng, n * d);
+        let v = rand_vec(&mut rng, n * d);
+        let scale = 0.5f32;
+        let (o, lse) = decode_splitkv(&q, &k, &v, n, scale, 5);
+        // direct f64 softmax over the row
+        let scores: Vec<f64> = (0..n)
+            .map(|j| {
+                scale as f64
+                    * (0..d).map(|t| q[t] as f64 * k[j * d + t] as f64).sum::<f64>()
+            })
+            .collect();
+        let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let l: f64 = scores.iter().map(|s| (s - m).exp()).sum();
+        for t in 0..d {
+            let want: f64 = (0..n)
+                .map(|j| (scores[j] - m).exp() * v[j * d + t] as f64)
+                .sum::<f64>()
+                / l;
+            assert!((o[t] as f64 - want).abs() < 1e-6, "dim {t}");
+        }
+        assert!((lse as f64 - (m + l.ln())).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,168 @@
+//! Naive O(N²) attention — the correctness oracle for the flash kernels.
+//!
+//! Materializes each score row, computes the softmax the straightforward
+//! way, and accumulates in f64 so the flash kernels' f32 results can be
+//! held to a tight tolerance (DESIGN.md §7: parity within 1e-4).  Inputs
+//! and outputs are f32 in the shared (batch, heads, seq, head_dim) layout;
+//! the softmax scale is the same f32 `1/sqrt(d)` the flash kernels use so
+//! the two paths compute the *same* math, not merely similar math.
+
+use super::{AttnDims, FlashGrads, FlashOut, TensorView};
+
+fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Standard attention forward: O = softmax(scale·QKᵀ + mask)·V, plus the
+/// per-row logsumexp (what the flash forward saves for the backward).
+pub fn forward(q: &[f32], k: &[f32], v: &[f32], dims: AttnDims) -> FlashOut {
+    let (qv, kv, vv) = (
+        TensorView::new(dims, q),
+        TensorView::new(dims, k),
+        TensorView::new(dims, v),
+    );
+    let (n, d) = (dims.seq, dims.head_dim);
+    let scale = dims.scale() as f64;
+    let mut out = FlashOut {
+        o: vec![0.0; dims.elems()],
+        lse: vec![0.0; dims.rows()],
+    };
+    let mut scores = vec![0.0f64; n];
+    for b in 0..dims.batch {
+        for h in 0..dims.heads {
+            for i in 0..n {
+                let qi = qv.row(b, h, i);
+                let lim = if dims.causal { i + 1 } else { n };
+                let mut m = f64::NEG_INFINITY;
+                for (j, s) in scores[..lim].iter_mut().enumerate() {
+                    *s = scale * dot_f64(qi, kv.row(b, h, j));
+                    m = m.max(*s);
+                }
+                let mut l = 0.0f64;
+                let mut acc = vec![0.0f64; d];
+                for j in 0..lim {
+                    let w = (scores[j] - m).exp();
+                    l += w;
+                    for (a, &x) in acc.iter_mut().zip(vv.row(b, h, j)) {
+                        *a += w * x as f64;
+                    }
+                }
+                let orow = dims.row_offset(b, h, i);
+                for (t, a) in acc.iter().enumerate() {
+                    out.o[orow + t] = (a / l) as f32;
+                }
+                out.lse[dims.lse_offset(b, h, i)] = (m + l.ln()) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Standard attention backward: recomputes P row by row and applies the
+/// softmax chain rule.  `dout` is dL/dO shaped like Q.
+pub fn backward(q: &[f32], k: &[f32], v: &[f32], dout: &[f32], dims: AttnDims) -> FlashGrads {
+    let (qv, kv, vv, dov) = (
+        TensorView::new(dims, q),
+        TensorView::new(dims, k),
+        TensorView::new(dims, v),
+        TensorView::new(dims, dout),
+    );
+    let (n, d) = (dims.seq, dims.head_dim);
+    let scale = dims.scale() as f64;
+    let elems = dims.elems();
+    let mut dq = vec![0.0f64; elems];
+    let mut dk = vec![0.0f64; elems];
+    let mut dv = vec![0.0f64; elems];
+    let mut p = vec![0.0f64; n];
+    let mut dp = vec![0.0f64; n];
+    for b in 0..dims.batch {
+        for h in 0..dims.heads {
+            for i in 0..n {
+                let qi = qv.row(b, h, i);
+                let doi = dov.row(b, h, i);
+                let lim = if dims.causal { i + 1 } else { n };
+                let mut m = f64::NEG_INFINITY;
+                for (j, s) in p[..lim].iter_mut().enumerate() {
+                    *s = scale * dot_f64(qi, kv.row(b, h, j));
+                    m = m.max(*s);
+                }
+                let mut l = 0.0f64;
+                for s in p[..lim].iter_mut() {
+                    *s = (*s - m).exp();
+                    l += *s;
+                }
+                for s in p[..lim].iter_mut() {
+                    *s /= l;
+                }
+                // dP_j = dO·V_j ;  D = Σ_j P_j dP_j ;  dS_j = P_j (dP_j − D)
+                let mut dsum = 0.0f64;
+                for j in 0..lim {
+                    dp[j] = dot_f64(doi, vv.row(b, h, j));
+                    dsum += p[j] * dp[j];
+                }
+                for j in 0..lim {
+                    let ds = p[j] * (dp[j] - dsum) * scale;
+                    let kj = kv.row(b, h, j);
+                    let qrow = dims.row_offset(b, h, i);
+                    let krow = dims.row_offset(b, h, j);
+                    for t in 0..d {
+                        dq[qrow + t] += ds * kj[t] as f64;
+                        dk[krow + t] += ds * qi[t] as f64;
+                        dv[krow + t] += p[j] * doi[t] as f64;
+                    }
+                }
+            }
+        }
+    }
+    FlashGrads {
+        dq: dq.into_iter().map(|x| x as f32).collect(),
+        dk: dk.into_iter().map(|x| x as f32).collect(),
+        dv: dv.into_iter().map(|x| x as f32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // Q = 0 ⇒ all scores 0 ⇒ O is the plain mean of V rows.
+        let dims = AttnDims { batch: 1, heads: 1, seq: 3, head_dim: 2, causal: false };
+        let q = vec![0.0; dims.elems()];
+        let k = vec![1.0; dims.elems()];
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let out = forward(&q, &k, &v, dims);
+        assert!((out.o[0] - 3.0).abs() < 1e-6);
+        assert!((out.o[1] - 4.0).abs() < 1e-6);
+        // lse = ln(3) for three zero scores
+        assert!((out.lse[0] - 3.0f32.ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn causal_first_row_copies_v0() {
+        let dims = AttnDims { batch: 1, heads: 1, seq: 3, head_dim: 2, causal: true };
+        let q: Vec<f32> = (0..dims.elems()).map(|x| x as f32 * 0.1).collect();
+        let k = q.clone();
+        let v = vec![7.0, -2.0, 1.0, 1.0, 1.0, 1.0];
+        let out = forward(&q, &k, &v, dims);
+        assert!((out.o[0] - 7.0).abs() < 1e-6);
+        assert!((out.o[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backward_shapes_and_finiteness() {
+        let dims = AttnDims { batch: 1, heads: 2, seq: 4, head_dim: 3, causal: true };
+        let mut rng = crate::util::rng::Rng::seed_from(9);
+        let n = dims.elems();
+        let gen = |rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32).collect()
+        };
+        let (q, k, v, dout) = (gen(&mut rng), gen(&mut rng), gen(&mut rng), gen(&mut rng));
+        let g = backward(&q, &k, &v, &dout, dims);
+        assert_eq!(g.dq.len(), n);
+        assert_eq!(g.dk.len(), n);
+        assert_eq!(g.dv.len(), n);
+        assert!(g.dq.iter().chain(&g.dk).chain(&g.dv).all(|x| x.is_finite()));
+    }
+}

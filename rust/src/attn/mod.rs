@@ -4,6 +4,7 @@
 
 pub mod autotune;
 pub mod combine;
+pub mod exec;
 pub mod problem;
 pub mod schedule;
 

@@ -20,6 +20,9 @@ pub struct RunConfig {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub model: String,
+    /// Execution backend: "auto" | "native" | "xla" | "stub" (the
+    /// `--backend` CLI flag overrides this).
+    pub backend: String,
     pub num_requests: usize,
     pub tokens_per_request: usize,
     /// Poisson arrival rate (requests/second); 0 = closed-loop.
@@ -31,6 +34,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             model: "tiny".into(),
+            backend: "auto".into(),
             num_requests: 16,
             tokens_per_request: 8,
             arrival_rate: 0.0,
@@ -88,6 +92,7 @@ impl RunConfig {
             },
             serve: ServeConfig {
                 model: doc.str_or("serve.model", &d.serve.model).to_string(),
+                backend: doc.str_or("serve.backend", &d.serve.backend).to_string(),
                 num_requests: doc.i64_or("serve.num_requests", d.serve.num_requests as i64)
                     as usize,
                 tokens_per_request: doc
@@ -119,7 +124,8 @@ mod tests {
     fn overrides_applied() {
         let doc = TomlDoc::parse(
             "artifact_dir = \"a\"\n[train]\nmodel = \"small\"\nsteps = 7\n\
-             checkpoint = \"ckpt.fat1\"\n[serve]\narrival_rate = 3.5\n",
+             checkpoint = \"ckpt.fat1\"\n[serve]\narrival_rate = 3.5\n\
+             backend = \"native\"\n",
         )
         .unwrap();
         let c = RunConfig::from_doc(&doc);
@@ -128,5 +134,6 @@ mod tests {
         assert_eq!(c.train.steps, 7);
         assert_eq!(c.train.checkpoint.as_deref(), Some("ckpt.fat1"));
         assert!((c.serve.arrival_rate - 3.5).abs() < 1e-12);
+        assert_eq!(c.serve.backend, "native");
     }
 }

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use crate::util::error::{Context, Error, Result};
 
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{BackendKind, Executable, Runtime};
 use crate::util::tensorio::{DType, HostTensor};
 
 use super::metrics::Metrics;
@@ -81,19 +81,30 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker.  `model` is the artifact prefix ("tiny").
+    /// Start the worker on the default backend.  `model` is the artifact
+    /// prefix ("tiny").
+    pub fn start(artifact_dir: std::path::PathBuf, model: &str) -> Result<Server> {
+        Self::start_with(artifact_dir, model, BackendKind::Auto)
+    }
+
+    /// Start the worker on an explicit backend (`BackendKind::Native` needs
+    /// no artifacts on disk).
     ///
-    /// The PJRT client and executables are created INSIDE the worker thread:
+    /// The backend and executables are created INSIDE the worker thread:
     /// the `xla` crate's handles are `!Send` (Rc internals), so the worker
     /// owns the whole runtime and talks to clients only through channels —
     /// which is the right shape for a serving leader anyway.
-    pub fn start(artifact_dir: std::path::PathBuf, model: &str) -> Result<Server> {
+    pub fn start_with(
+        artifact_dir: std::path::PathBuf,
+        model: &str,
+        backend: BackendKind,
+    ) -> Result<Server> {
         let model = model.to_string();
         let (tx, rx) = channel::<Inflight>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let handle = std::thread::spawn(move || {
             let setup = || -> Result<_> {
-                let rt = Runtime::new(&artifact_dir)?;
+                let rt = Runtime::with_backend(&artifact_dir, backend)?;
                 let prefill1 = rt.load(&format!("{model}_prefill_b1"))?;
                 let decode1 = rt.load(&format!("{model}_decode_b1"))?;
                 let decode4 = rt.load(&format!("{model}_decode_b4"))?;

@@ -7,7 +7,14 @@
 //!   verify    execute every artifact with golden vectors and compare
 //!   train     run the AOT train_step loop on the synthetic corpus
 //!   serve     run the batched decode server on a synthetic workload
+//!   attn-exec run the native flash-attention kernels (GFLOP/s + parity)
 //!   inspect   list artifacts in the manifest
+//!
+//! `verify`, `train`, `serve` and `inspect` take `--backend
+//! auto|native|xla|stub`.  `native` executes on the in-tree `attn::exec`
+//! CPU engine and needs no artifacts on disk for `serve`, `verify` and
+//! `inspect`; `train` still requires the AOT train_step artifact (native
+//! reports a clear error).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -15,12 +22,13 @@ use std::sync::Arc;
 use fa2::bail;
 use fa2::util::error::{Context, Result};
 
+use fa2::attn::exec::{parallel, reference, AttnDims, FlashParams};
 use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
 use fa2::bench::{figures, table1};
 use fa2::config::RunConfig;
 use fa2::coordinator::server::{GenRequest, Server};
 use fa2::gpusim::{simulate, Device};
-use fa2::runtime::Runtime;
+use fa2::runtime::{BackendKind, Runtime};
 use fa2::train::corpus::Corpus;
 use fa2::train::trainer::{TrainConfig, Trainer};
 use fa2::util::rng::Rng;
@@ -29,14 +37,18 @@ fn usage() -> ! {
     eprintln!(
         "usage: repro <command> [options]\n\
          commands:\n  \
-           figures  [--fig 4|5|6|7|all] [--out-dir DIR]\n  \
-           table1   [--device a100|h100] [--out-dir DIR]\n  \
-           simulate [--ablation rescale|splitk|occupancy|blocks]\n  \
-           verify   [--artifact NAME] [--artifact-dir DIR]\n  \
-           train    [--config FILE] [--model tiny|small] [--steps N]\n           \
-                    [--variant ''|_refattn] [--loss-csv FILE]\n  \
-           serve    [--config FILE] [--requests N] [--tokens N] [--rate R]\n  \
-           inspect  [--artifact-dir DIR]"
+           figures   [--fig 4|5|6|7|all] [--out-dir DIR]\n  \
+           table1    [--device a100|h100] [--out-dir DIR]\n  \
+           simulate  [--ablation rescale|splitk|occupancy|blocks]\n  \
+           verify    [--artifact NAME] [--artifact-dir DIR] [--backend B]\n  \
+           train     [--config FILE] [--model tiny|small] [--steps N]\n            \
+                     [--variant ''|_refattn] [--loss-csv FILE] [--backend B]\n  \
+           serve     [--config FILE] [--requests N] [--tokens N] [--rate R]\n            \
+                     [--backend B]\n  \
+           attn-exec [--batch B] [--heads H] [--seqlen N] [--head-dim D]\n            \
+                     [--causal 0|1] [--threads T] [--check 0|1]\n  \
+           inspect   [--artifact-dir DIR] [--backend B]\n\
+         backends (B): auto (default) | native | xla | stub"
     );
     std::process::exit(2)
 }
@@ -83,6 +95,7 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "attn-exec" => cmd_attn_exec(&args),
         "inspect" => cmd_inspect(&args),
         _ => usage(),
     }
@@ -244,22 +257,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn backend_from(args: &Args) -> Result<BackendKind> {
+    BackendKind::from_flag(args.get("backend").unwrap_or("auto"))
+}
+
 fn runtime_from(args: &Args) -> Result<Arc<Runtime>> {
     let dir = args.get("artifact-dir").unwrap_or("artifacts");
-    Ok(Arc::new(Runtime::new(Path::new(dir))?))
+    Ok(Arc::new(Runtime::with_backend(Path::new(dir), backend_from(args)?)?))
 }
 
 fn cmd_verify(args: &Args) -> Result<()> {
     let rt = runtime_from(args)?;
+    println!("backend: {}", rt.platform());
     let names: Vec<String> = match args.get("artifact") {
         Some(n) => vec![n.to_string()],
-        None => rt
-            .manifest
-            .artifacts
-            .values()
-            .filter(|a| a.golden_path.is_some())
-            .map(|a| a.name.clone())
-            .collect(),
+        None => rt.golden_names(),
     };
     let mut failures = 0;
     for name in names {
@@ -338,9 +350,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(r) = args.get("rate") {
         cfg.arrival_rate = r.parse().context("--rate")?;
     }
-    let server = Server::start(
+    let backend = BackendKind::from_flag(args.get("backend").unwrap_or(&cfg.backend))?;
+    let server = Server::start_with(
         std::path::PathBuf::from(args.get("artifact-dir").unwrap_or("artifacts")),
         &cfg.model,
+        backend,
     )?;
     let mut rng = Rng::seed_from(cfg.seed);
     let mut corpus = Corpus::new(512, cfg.seed);
@@ -368,6 +382,77 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let metrics = server.shutdown()?;
     println!("{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_attn_exec(args: &Args) -> Result<()> {
+    let dims = AttnDims {
+        batch: args.get_usize("batch")?.unwrap_or(2),
+        heads: args.get_usize("heads")?.unwrap_or(8),
+        seq: args.get_usize("seqlen")?.unwrap_or(512),
+        head_dim: args.get_usize("head-dim")?.unwrap_or(64),
+        causal: matches!(args.get("causal"), Some("1") | Some("true")),
+    };
+    let threads = args
+        .get_usize("threads")?
+        .unwrap_or_else(fa2::util::pool::threads);
+    let check = !matches!(args.get("check"), Some("0") | Some("false"));
+    println!(
+        "native attn exec: B={} H={} N={} d={} causal={} threads={threads}",
+        dims.batch, dims.heads, dims.seq, dims.head_dim, dims.causal
+    );
+
+    let mut rng = Rng::seed_from(0xA77);
+    let n = dims.elems();
+    let mut draw = || -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+    let (q, k, v, dout) = (draw(), draw(), draw(), draw());
+    let p = FlashParams::default();
+
+    let b = fa2::util::stats::Bencher::quick();
+    let s = b.run("flash fwd", || parallel::forward_with(threads, &q, &k, &v, dims, p));
+    println!(
+        "fwd:  {:>8.2} ms  {:>7.2} GFLOP/s",
+        s.p50 * 1e3,
+        dims.flops(Pass::Fwd) / s.p50 / 1e9
+    );
+    let fwd = parallel::forward_with(threads, &q, &k, &v, dims, p);
+    let s = b.run("flash bwd", || {
+        parallel::backward_with(threads, &q, &k, &v, &fwd, &dout, dims, p)
+    });
+    println!(
+        "bwd:  {:>8.2} ms  {:>7.2} GFLOP/s",
+        s.p50 * 1e3,
+        dims.flops(Pass::Bwd) / s.p50 / 1e9
+    );
+
+    // split-KV decode over one head's history
+    let dh = dims.head_dim;
+    let scale = dims.scale();
+    let hist = dims.seq;
+    let s = b.run("split-KV decode", || {
+        parallel::decode_splitkv(&q[..dh], &k[..hist * dh], &v[..hist * dh], hist, scale, 64)
+    });
+    println!(
+        "decode: {:>6.1} µs/token over {hist} cached rows (chunk 64)",
+        s.p50 * 1e6
+    );
+
+    if check {
+        let rf = reference::forward(&q, &k, &v, dims);
+        let worst = fwd
+            .o
+            .iter()
+            .zip(&rf.o)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // same 2e-4 gate as `verify`, relaxed mildly with seqlen (f32
+        // accumulation error grows with the number of summed terms)
+        let tol = 2e-4f32 * (1.0 + dims.seq as f32 / 1024.0);
+        println!("parity vs O(N²) reference: max|Δ| = {worst:.2e} (tol {tol:.1e})");
+        if worst >= tol {
+            bail!("native flash forward diverged from reference ({worst:.2e} >= {tol:.1e})");
+        }
+    }
     Ok(())
 }
 

@@ -1,11 +1,19 @@
-//! Execution-backend seam for the runtime.
+//! Execution-backend seam for the runtime: the [`Backend`]/[`Module`]
+//! traits and the three implementations behind them.
 //!
-//! The real path (feature `xla`) drives the PJRT CPU client through the
-//! `xla` bindings; those bindings are not part of the offline vendor set,
-//! so the default build substitutes an in-tree stub with the same API.
-//! Manifest-only workflows (`repro inspect`, spec validation, the
-//! synthesized-fixture tests) work under both; compiling or executing an
-//! artifact requires the real backend and reports a clear error otherwise.
+//! - `pjrt` (feature `xla`): the real PJRT CPU client over compiled HLO
+//!   artifacts.  The bindings are not part of the offline vendor set, so
+//!   default builds omit it.
+//! - `stub`: always available; manifest-only workflows work, executing an
+//!   artifact reports a clear error.
+//! - `native` (`runtime::native`): the in-tree `attn::exec` CPU engine
+//!   with a synthesized manifest — `serve`/`verify` run end-to-end on a
+//!   fresh checkout with no AOT artifacts and no `xla` feature.
+
+use crate::bail;
+use crate::runtime::artifact::ArtifactSpec;
+use crate::util::error::Result;
+use crate::util::tensorio::HostTensor;
 
 /// Wall-clock split of one execution, feeding `runtime::ExecStats`.
 #[derive(Debug, Clone, Copy, Default)]
@@ -14,18 +22,107 @@ pub struct ExecTiming {
     pub transfer_secs: f64,
 }
 
+/// Which execution backend `Runtime::with_backend` constructs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when built with the `xla` feature, the stub otherwise.
+    Auto,
+    /// In-tree `attn::exec` CPU engine + synthesized manifest.
+    Native,
+    /// PJRT CPU client (requires the `xla` feature).
+    Pjrt,
+    /// No-op backend: inspection works, execution errors.
+    Stub,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` flag / config value.
+    pub fn from_flag(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "auto" | "" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "xla" | "pjrt" => BackendKind::Pjrt,
+            "stub" => BackendKind::Stub,
+            other => bail!("unknown backend '{other}' (expected auto|native|xla|stub)"),
+        })
+    }
+}
+
+/// One loaded executable.
+pub trait Module {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)>;
+}
+
+/// Synthesized golden vectors: run the module on `inputs`, expect
+/// `outputs` (the native backend derives these from `attn::exec::reference`).
+pub struct GoldenCase {
+    pub inputs: Vec<HostTensor>,
+    pub outputs: Vec<HostTensor>,
+}
+
+/// A pluggable execution backend behind `runtime::Runtime`.
+pub trait Backend {
+    fn platform_name(&self) -> String;
+
+    /// Load (compile) one artifact into an executable module.
+    fn load(&self, spec: &ArtifactSpec) -> Result<Box<dyn Module>>;
+
+    /// Whether this backend can synthesize golden vectors for `spec`
+    /// (file-based goldens still work when this is false).
+    fn provides_golden(&self, spec: &ArtifactSpec) -> bool {
+        let _ = spec;
+        false
+    }
+
+    /// Synthesize the golden case for `spec`, or `None` to fall back to
+    /// golden files on disk.
+    fn golden(&self, spec: &ArtifactSpec) -> Result<Option<GoldenCase>> {
+        let _ = spec;
+        Ok(None)
+    }
+}
+
+/// Construct the backend for `kind`.
+pub fn make(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Auto => auto_backend(),
+        BackendKind::Native => Ok(Box::new(crate::runtime::native::NativeBackend::new())),
+        BackendKind::Pjrt => pjrt_backend(),
+        BackendKind::Stub => Ok(Box::new(stub::StubBackend)),
+    }
+}
+
 #[cfg(feature = "xla")]
-pub use pjrt::{Client, LoadedModule};
+fn auto_backend() -> Result<Box<dyn Backend>> {
+    pjrt_backend()
+}
+
 #[cfg(not(feature = "xla"))]
-pub use stub::{Client, LoadedModule};
+fn auto_backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(stub::StubBackend))
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(pjrt::PjrtBackend::cpu()?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_backend() -> Result<Box<dyn Backend>> {
+    Err(crate::util::error::Error::msg(
+        "this build has no PJRT backend (enable the `xla` feature and add the \
+         xla bindings as a path dependency in rust/Cargo.toml); `--backend \
+         native` runs the in-tree CPU engine instead",
+    ))
+}
 
 #[cfg(feature = "xla")]
 mod pjrt {
-    use std::path::Path;
     use std::time::Instant;
 
     use super::ExecTiming;
     use crate::bail;
+    use crate::runtime::artifact::ArtifactSpec;
     use crate::util::error::{Context, Error, Result};
     use crate::util::tensorio::{DType, HostTensor};
 
@@ -94,27 +191,30 @@ mod pjrt {
     }
 
     /// The PJRT CPU client.
-    pub struct Client {
+    pub struct PjrtBackend {
         inner: xla::PjRtClient,
     }
 
-    impl Client {
-        pub fn cpu() -> Result<Client> {
+    impl PjrtBackend {
+        pub fn cpu() -> Result<PjrtBackend> {
             let inner = xla::PjRtClient::cpu()
                 .map_err(|e| Error::msg(format!("PjRtClient::cpu: {e:?}")))?;
-            Ok(Client { inner })
+            Ok(PjrtBackend { inner })
         }
+    }
 
-        pub fn platform_name(&self) -> String {
+    impl super::Backend for PjrtBackend {
+        fn platform_name(&self) -> String {
             self.inner.platform_name()
         }
 
         /// Parse + compile an HLO *text* module (text, not serialized proto:
         /// xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids;
         /// the text parser reassigns them).
-        pub fn compile_hlo_text(&self, name: &str, path: &Path) -> Result<LoadedModule> {
+        fn load(&self, spec: &ArtifactSpec) -> Result<Box<dyn super::Module>> {
+            let name = spec.name.as_str();
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
+                spec.hlo_path.to_str().context("non-utf8 artifact path")?,
             )
             .map_err(|e| Error::msg(format!("{name}: parse hlo: {e:?}")))?;
             let comp = xla::XlaComputation::from_proto(&proto);
@@ -122,18 +222,18 @@ mod pjrt {
                 .inner
                 .compile(&comp)
                 .map_err(|e| Error::msg(format!("{name}: compile: {e:?}")))?;
-            Ok(LoadedModule { exe, name: name.to_string() })
+            Ok(Box::new(LoadedModule { exe, name: name.to_string() }))
         }
     }
 
     /// A compiled HLO module ready to run.
-    pub struct LoadedModule {
+    struct LoadedModule {
         exe: xla::PjRtLoadedExecutable,
         name: String,
     }
 
-    impl LoadedModule {
-        pub fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
+    impl super::Module for LoadedModule {
+        fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
             let t0 = Instant::now();
             let literals = inputs
                 .iter()
@@ -168,40 +268,63 @@ mod pjrt {
     }
 }
 
-#[cfg(not(feature = "xla"))]
 mod stub {
-    use std::path::Path;
-
-    use super::ExecTiming;
+    use crate::runtime::artifact::ArtifactSpec;
     use crate::util::error::{Error, Result};
-    use crate::util::tensorio::HostTensor;
 
     const HINT: &str =
-        "this build has no execution backend (enable the `xla` feature and \
-         add the xla bindings as a path dependency in rust/Cargo.toml)";
+        "this build has no compiled-artifact execution backend (enable the \
+         `xla` feature, or run with `--backend native` for the in-tree CPU \
+         engine)";
 
-    /// No-op PJRT stand-in so the crate builds fully offline.
-    pub struct Client;
+    /// No-op stand-in so the crate builds and inspects manifests fully
+    /// offline; loading any artifact reports a clear error.
+    pub struct StubBackend;
 
-    impl Client {
-        pub fn cpu() -> Result<Client> {
-            Ok(Client)
+    impl super::Backend for StubBackend {
+        fn platform_name(&self) -> String {
+            "stub (no execution backend)".to_string()
         }
 
-        pub fn platform_name(&self) -> String {
-            "stub (built without the `xla` feature)".to_string()
-        }
-
-        pub fn compile_hlo_text(&self, name: &str, _path: &Path) -> Result<LoadedModule> {
-            Err(Error::msg(format!("{name}: cannot compile HLO artifact: {HINT}")))
+        fn load(&self, spec: &ArtifactSpec) -> Result<Box<dyn super::Module>> {
+            Err(Error::msg(format!(
+                "{}: cannot compile HLO artifact: {HINT}",
+                spec.name
+            )))
         }
     }
+}
 
-    pub struct LoadedModule;
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-    impl LoadedModule {
-        pub fn execute(&self, _inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
-            Err(Error::msg(HINT))
-        }
+    #[test]
+    fn backend_kind_parses_flags() {
+        assert_eq!(BackendKind::from_flag("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::from_flag("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::from_flag("xla").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::from_flag("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::from_flag("stub").unwrap(), BackendKind::Stub);
+        assert!(BackendKind::from_flag("gpu").is_err());
+    }
+
+    #[test]
+    fn stub_backend_errors_on_load_not_panic() {
+        let b = make(BackendKind::Stub).unwrap();
+        assert!(b.platform_name().contains("stub"));
+        let spec = ArtifactSpec {
+            name: "toy".into(),
+            kind: crate::runtime::artifact::ArtifactKind::Other,
+            hlo_path: "nonexistent.hlo.txt".into(),
+            golden_path: None,
+            inputs: vec![],
+            outputs: vec![],
+            meta: crate::util::json::Json::Obj(vec![]),
+        };
+        let err = b.load(&spec).unwrap_err();
+        assert!(format!("{err}").contains("toy"));
+        assert!(!b.provides_golden(&spec));
+        assert!(b.golden(&spec).unwrap().is_none());
     }
 }

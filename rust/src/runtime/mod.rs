@@ -1,13 +1,18 @@
-//! L3 runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes them
-//! on the PJRT CPU client via the `backend` seam (real `xla` bindings under
-//! the `xla` feature, an in-tree stub otherwise — see backend.rs).
+//! L3 runtime: loads artifacts and executes them through the pluggable
+//! [`Backend`] seam (see backend.rs):
 //!
-//! Python never runs on this path: `aot.py` lowered every entry point to HLO
-//! text at build time.  The runtime compiles each module once, caches the
-//! executable, and exchanges host tensors with the backend.
+//! - `pjrt` (feature `xla`): compiles AOT HLO text (`artifacts/*.hlo.txt`)
+//!   on the PJRT CPU client; Python never runs on this path.
+//! - `stub`: default offline build; manifest inspection only.
+//! - `native`: the in-tree `attn::exec` CPU engine with a synthesized
+//!   manifest — executes with no artifacts on disk at all.
+//!
+//! The runtime loads each module once, caches the executable, and
+//! exchanges host tensors with the backend.
 
 pub mod artifact;
 pub mod backend;
+pub mod native;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -18,7 +23,8 @@ use crate::bail;
 use crate::util::error::{Context, Result};
 
 pub use artifact::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};
-pub use backend::ExecTiming;
+pub use backend::{Backend, BackendKind, ExecTiming, GoldenCase, Module};
+pub use native::NativeBackend;
 
 use crate::util::tensorio::{DType, HostTensor};
 
@@ -33,7 +39,7 @@ pub struct ExecStats {
 /// A compiled artifact ready to run.
 pub struct Executable {
     pub spec: ArtifactSpec,
-    module: backend::LoadedModule,
+    module: Box<dyn backend::Module>,
     stats: Mutex<ExecStats>,
 }
 
@@ -78,22 +84,32 @@ impl Executable {
     }
 }
 
-/// Backend client + manifest + executable cache.
+/// Backend + manifest + executable cache.
 pub struct Runtime {
     pub manifest: Manifest,
-    client: backend::Client,
+    backend: Box<dyn backend::Backend>,
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
 impl Runtime {
+    /// The default backend: PJRT under the `xla` feature, stub otherwise.
     pub fn new(artifact_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = backend::Client::cpu()?;
-        Ok(Runtime { manifest, client, cache: Mutex::new(HashMap::new()) })
+        Self::with_backend(artifact_dir, BackendKind::Auto)
+    }
+
+    /// Build a runtime on an explicit backend.  `Native` synthesizes its
+    /// manifest in memory, so nothing needs to exist at `artifact_dir`.
+    pub fn with_backend(artifact_dir: &Path, kind: BackendKind) -> Result<Runtime> {
+        let manifest = match kind {
+            BackendKind::Native => native::synth_manifest(artifact_dir),
+            _ => Manifest::load(artifact_dir)?,
+        };
+        let backend = backend::make(kind)?;
+        Ok(Runtime { manifest, backend, cache: Mutex::new(HashMap::new()) })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform_name()
     }
 
     /// Load (compile) an artifact; compiled executables are cached by name.
@@ -103,7 +119,7 @@ impl Runtime {
         }
         let spec = self.manifest.get(name)?.clone();
         let t0 = Instant::now();
-        let module = self.client.compile_hlo_text(name, &spec.hlo_path)?;
+        let module = self.backend.load(&spec)?;
         let compile_secs = t0.elapsed().as_secs_f64();
         if std::env::var_os("FA2_LOG_COMPILE").is_some() {
             eprintln!("[runtime] compiled {name} in {compile_secs:.2}s");
@@ -120,29 +136,60 @@ impl Runtime {
         Ok(exec)
     }
 
-    /// Run an artifact's golden vectors: returns (max_abs_diff per output).
+    /// Artifacts that can be golden-verified under this backend: those with
+    /// golden files on disk, plus those the backend self-verifies (native).
+    pub fn golden_names(&self) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .values()
+            .filter(|a| a.golden_path.is_some() || self.backend.provides_golden(a))
+            .map(|a| a.name.clone())
+            .collect()
+    }
+
+    /// Run an artifact's golden vectors: returns max_abs_diff per output.
+    /// Goldens come from the backend when it synthesizes them (native:
+    /// `attn::exec::reference`), else from the artifact's golden file.
     pub fn verify_golden(&self, name: &str) -> Result<Vec<f32>> {
         let exe = self.load(name)?;
-        let golden_path = exe
-            .spec
-            .golden_path
-            .as_ref()
-            .with_context(|| format!("{name} has no golden file"))?;
-        let tensors = crate::util::tensorio::read_tensors(golden_path)?;
-        let inputs: Vec<HostTensor> = (0..exe.spec.inputs.len())
-            .map(|i| {
-                tensors
-                    .get(&format!("in{i}"))
-                    .cloned()
-                    .with_context(|| format!("{name}: golden missing in{i}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let (inputs, expected) = match self.backend.golden(&exe.spec)? {
+            Some(case) => (case.inputs, case.outputs),
+            None => {
+                let golden_path = exe
+                    .spec
+                    .golden_path
+                    .as_ref()
+                    .with_context(|| format!("{name} has no golden file"))?;
+                let tensors = crate::util::tensorio::read_tensors(golden_path)?;
+                let inputs: Vec<HostTensor> = (0..exe.spec.inputs.len())
+                    .map(|i| {
+                        tensors
+                            .get(&format!("in{i}"))
+                            .cloned()
+                            .with_context(|| format!("{name}: golden missing in{i}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let expected: Vec<HostTensor> = (0..exe.spec.outputs.len())
+                    .map(|i| {
+                        tensors
+                            .get(&format!("out{i}"))
+                            .cloned()
+                            .with_context(|| format!("{name}: golden missing out{i}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                (inputs, expected)
+            }
+        };
+        if expected.len() != exe.spec.outputs.len() {
+            bail!(
+                "{name}: golden provides {} outputs, spec promises {}",
+                expected.len(),
+                exe.spec.outputs.len()
+            );
+        }
         let outputs = exe.run(&inputs)?;
         let mut diffs = Vec::new();
-        for (i, out) in outputs.iter().enumerate() {
-            let want = tensors
-                .get(&format!("out{i}"))
-                .with_context(|| format!("{name}: golden missing out{i}"))?;
+        for (out, want) in outputs.iter().zip(&expected) {
             let diff = match out.dtype {
                 DType::F32 => out.max_abs_diff(want),
                 _ => {

@@ -1,0 +1,869 @@
+//! The `native` execution backend: a fully in-tree CPU implementation of
+//! the serving artifact set, with attention computed by `attn::exec`.
+//!
+//! Where `pjrt` compiles AOT HLO artifacts, this backend *synthesizes* its
+//! manifest ([`synth_manifest`]) and implements each artifact as Rust:
+//!
+//! - `tiny_init` — seeded parameter initialization for a tiny GPT
+//!   (tied-embedding, RMS-norm, GELU MLP; heads sized for `attn::exec`).
+//! - `tiny_prefill_b1` — full prompt forward; causal attention runs
+//!   through `attn::exec::parallel::forward` (Algorithm 1 on the pool),
+//!   and the per-layer K/V land in the serving cache layout.
+//! - `tiny_decode_b1` / `tiny_decode_b4` — one-token steps over the KV
+//!   cache via the split-KV decode path (`parallel::decode_splitkv`, the
+//!   flash-decoding reduction through `attn::combine`).
+//! - `native_attn_*` — bare attention kernels whose golden vectors are
+//!   synthesized from `attn::exec::reference`, so `repro verify --backend
+//!   native` checks flash-vs-reference parity end to end through the
+//!   runtime with no files on disk.
+//!
+//! Input/output specs match what `coordinator::server` already exchanges
+//! with the AOT artifacts, so the serving path is backend-agnostic.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::bail;
+use crate::util::error::Result;
+
+use crate::attn::exec::{parallel, reference, AttnDims, FlashParams};
+use crate::runtime::artifact::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};
+use crate::runtime::backend::{Backend, ExecTiming, GoldenCase, Module};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::tensorio::{DType, HostTensor};
+
+/// KV rows per split-KV chunk in the decode hot loop.
+const DECODE_CHUNK: usize = 64;
+
+/// Shape of the tiny native serving model.
+#[derive(Debug, Clone, Copy)]
+pub struct GptConfig {
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub prompt_len: usize,
+}
+
+impl GptConfig {
+    pub fn tiny() -> GptConfig {
+        GptConfig {
+            n_layer: 2,
+            n_head: 4,
+            d_model: 64,
+            vocab: 512,
+            max_seq: 128,
+            prompt_len: 16,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    fn n_params(&self) -> usize {
+        2 + 4 * self.n_layer
+    }
+
+    /// Serving cache dims (L, B, H, S, dh) — the layout the coordinator
+    /// assembles and scatters.
+    fn cache_dims(&self, batch: usize) -> Vec<usize> {
+        vec![self.n_layer, batch, self.n_head, self.max_seq, self.d_head()]
+    }
+
+    /// Flat offset of cache row (l, b, h, s) under batch size `batch`.
+    fn cache_offset(&self, batch: usize, l: usize, b: usize, h: usize, s: usize) -> usize {
+        (((l * batch + b) * self.n_head + h) * self.max_seq + s) * self.d_head()
+    }
+}
+
+/// Flat parameter list: wte, wpe, then per layer (wqkv, wo, wmlp1, wmlp2).
+fn param_specs(cfg: &GptConfig) -> Vec<TensorSpec> {
+    let d = cfg.d_model;
+    let f32_spec = |name: String, dims: Vec<usize>| TensorSpec { name, dims, dtype: DType::F32 };
+    let mut specs = vec![
+        f32_spec("wte".into(), vec![cfg.vocab, d]),
+        f32_spec("wpe".into(), vec![cfg.max_seq, d]),
+    ];
+    for l in 0..cfg.n_layer {
+        specs.push(f32_spec(format!("l{l}_wqkv"), vec![d, 3 * d]));
+        specs.push(f32_spec(format!("l{l}_wo"), vec![d, d]));
+        specs.push(f32_spec(format!("l{l}_wmlp1"), vec![d, 4 * d]));
+        specs.push(f32_spec(format!("l{l}_wmlp2"), vec![4 * d, d]));
+    }
+    specs
+}
+
+// ---------------------------------------------------------------------------
+// small dense math (f32, row-major)
+
+/// y[m,n] = x[m,k] @ w[k,n]
+fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xr = &x[i * k..(i + 1) * k];
+        let yr = &mut y[i * n..(i + 1) * n];
+        for (t, &xv) in xr.iter().enumerate() {
+            let wr = &w[t * n..(t + 1) * n];
+            for (yv, &wv) in yr.iter_mut().zip(wr) {
+                *yv += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+/// Parameter-free RMS norm applied row-wise.
+fn rmsnorm(x: &[f32], d: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    for (yr, xr) in y.chunks_mut(d).zip(x.chunks(d)) {
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for (yv, &xv) in yr.iter_mut().zip(xr) {
+            *yv = xv * inv;
+        }
+    }
+    y
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+fn add_inplace(x: &mut [f32], y: &[f32]) {
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+struct Params {
+    tensors: Vec<Vec<f32>>,
+}
+
+impl Params {
+    fn parse(cfg: &GptConfig, inputs: &[HostTensor]) -> Params {
+        Params {
+            tensors: inputs[..cfg.n_params()].iter().map(|t| t.to_f32_vec()).collect(),
+        }
+    }
+
+    fn wte(&self) -> &[f32] {
+        &self.tensors[0]
+    }
+
+    fn wpe(&self) -> &[f32] {
+        &self.tensors[1]
+    }
+
+    fn wqkv(&self, l: usize) -> &[f32] {
+        &self.tensors[2 + 4 * l]
+    }
+
+    fn wo(&self, l: usize) -> &[f32] {
+        &self.tensors[3 + 4 * l]
+    }
+
+    fn wmlp1(&self, l: usize) -> &[f32] {
+        &self.tensors[4 + 4 * l]
+    }
+
+    fn wmlp2(&self, l: usize) -> &[f32] {
+        &self.tensors[5 + 4 * l]
+    }
+}
+
+/// Pre-norm GELU MLP with residual, applied to all `rows` of `x`.
+fn layer_ffn(cfg: &GptConfig, params: &Params, l: usize, x: &mut [f32], rows: usize) {
+    let d = cfg.d_model;
+    let xn = rmsnorm(x, d);
+    let mut h = matmul(&xn, params.wmlp1(l), rows, d, 4 * d);
+    for v in h.iter_mut() {
+        *v = gelu(*v);
+    }
+    let y = matmul(&h, params.wmlp2(l), rows, 4 * d, d);
+    add_inplace(x, &y);
+}
+
+/// Logits for one d_model row against the tied embedding.
+fn lm_head(cfg: &GptConfig, params: &Params, xrow: &[f32]) -> Vec<f32> {
+    let d = cfg.d_model;
+    let xn = rmsnorm(xrow, d);
+    let wte = params.wte();
+    (0..cfg.vocab).map(|t| dot(&xn, &wte[t * d..(t + 1) * d])).collect()
+}
+
+fn embed(cfg: &GptConfig, params: &Params, tok: usize, pos: usize) -> Vec<f32> {
+    let d = cfg.d_model;
+    let mut x = vec![0.0f32; d];
+    let (wte, wpe) = (params.wte(), params.wpe());
+    for c in 0..d {
+        x[c] = wte[tok * d + c] + wpe[pos * d + c];
+    }
+    x
+}
+
+fn check_token(cfg: &GptConfig, t: i32) -> Result<usize> {
+    if t < 0 || t as usize >= cfg.vocab {
+        bail!("token {t} out of vocab range 0..{}", cfg.vocab);
+    }
+    Ok(t as usize)
+}
+
+// ---------------------------------------------------------------------------
+// modules
+
+struct InitModule {
+    cfg: GptConfig,
+}
+
+impl Module for InitModule {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
+        let t0 = Instant::now();
+        let seed = u32::from_le_bytes(
+            inputs[0].data[..4].try_into().expect("validated scalar seed"),
+        );
+        let mut rng = Rng::seed_from(0xFA2_0002 ^ seed as u64);
+        let outputs = param_specs(&self.cfg)
+            .iter()
+            .map(|spec| {
+                let vals: Vec<f32> = (0..spec.element_count())
+                    .map(|_| (rng.normal() * 0.02) as f32)
+                    .collect();
+                HostTensor::from_f32(&spec.dims, &vals)
+            })
+            .collect();
+        Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
+    }
+}
+
+struct PrefillModule {
+    cfg: GptConfig,
+}
+
+impl Module for PrefillModule {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        let params = Params::parse(cfg, inputs);
+        let tokens = inputs[cfg.n_params()].to_i32_vec();
+        let (d, dh, hn, p_len) = (cfg.d_model, cfg.d_head(), cfg.n_head, cfg.prompt_len);
+
+        // embed the prompt
+        let mut x = vec![0.0f32; p_len * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let tok = check_token(cfg, t)?;
+            x[i * d..(i + 1) * d].copy_from_slice(&embed(cfg, &params, tok, i));
+        }
+
+        let cache_len: usize = cfg.cache_dims(1).iter().product();
+        let mut kc = vec![0.0f32; cache_len];
+        let mut vc = vec![0.0f32; cache_len];
+        let adims = AttnDims { batch: 1, heads: hn, seq: p_len, head_dim: dh, causal: true };
+
+        for l in 0..cfg.n_layer {
+            let xn = rmsnorm(&x, d);
+            let qkv = matmul(&xn, params.wqkv(l), p_len, d, 3 * d);
+            // repack (row, 3·d) into three (1, H, P, dh) tensors
+            let mut qb = vec![0.0f32; adims.elems()];
+            let mut kb = vec![0.0f32; adims.elems()];
+            let mut vb = vec![0.0f32; adims.elems()];
+            for i in 0..p_len {
+                let src = i * 3 * d;
+                for h in 0..hn {
+                    let ro = adims.row_offset(0, h, i);
+                    for t in 0..dh {
+                        qb[ro + t] = qkv[src + h * dh + t];
+                        kb[ro + t] = qkv[src + d + h * dh + t];
+                        vb[ro + t] = qkv[src + 2 * d + h * dh + t];
+                    }
+                }
+            }
+            // Algorithm 1 on the pool (prompt rows fan as Q-blocks)
+            let out = parallel::forward(&qb, &kb, &vb, adims, FlashParams::default());
+            // K/V into the serving cache layout (l, 0, h, s, ·)
+            for h in 0..hn {
+                for s in 0..p_len {
+                    let dst = cfg.cache_offset(1, l, 0, h, s);
+                    let src = adims.row_offset(0, h, s);
+                    kc[dst..dst + dh].copy_from_slice(&kb[src..src + dh]);
+                    vc[dst..dst + dh].copy_from_slice(&vb[src..src + dh]);
+                }
+            }
+            // concat heads, project, residual, MLP
+            let mut y = vec![0.0f32; p_len * d];
+            for i in 0..p_len {
+                for h in 0..hn {
+                    let src = adims.row_offset(0, h, i);
+                    y[i * d + h * dh..i * d + (h + 1) * dh]
+                        .copy_from_slice(&out.o[src..src + dh]);
+                }
+            }
+            let proj = matmul(&y, params.wo(l), p_len, d, d);
+            add_inplace(&mut x, &proj);
+            layer_ffn(cfg, &params, l, &mut x, p_len);
+        }
+
+        let logits = lm_head(cfg, &params, &x[(p_len - 1) * d..p_len * d]);
+        let outputs = vec![
+            HostTensor::from_f32(&[1, cfg.vocab], &logits),
+            HostTensor::from_f32(&cfg.cache_dims(1), &kc),
+            HostTensor::from_f32(&cfg.cache_dims(1), &vc),
+        ];
+        Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
+    }
+}
+
+struct DecodeModule {
+    cfg: GptConfig,
+    batch: usize,
+}
+
+impl DecodeModule {
+    /// One-token forward for row `b`, reading and extending the caches.
+    fn decode_row(
+        &self,
+        params: &Params,
+        tok: i32,
+        pos: usize,
+        kc: &mut [f32],
+        vc: &mut [f32],
+        b: usize,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, dh, hn) = (cfg.d_model, cfg.d_head(), cfg.n_head);
+        if pos >= cfg.max_seq {
+            bail!("decode position {pos} exceeds max_seq {}", cfg.max_seq);
+        }
+        let tok = check_token(cfg, tok)?;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut x = embed(cfg, params, tok, pos);
+        for l in 0..cfg.n_layer {
+            let xn = rmsnorm(&x, d);
+            let qkv = matmul(&xn, params.wqkv(l), 1, d, 3 * d);
+            // append this token's K/V at `pos`
+            for h in 0..hn {
+                let dst = cfg.cache_offset(self.batch, l, b, h, pos);
+                kc[dst..dst + dh].copy_from_slice(&qkv[d + h * dh..d + (h + 1) * dh]);
+                vc[dst..dst + dh]
+                    .copy_from_slice(&qkv[2 * d + h * dh..2 * d + (h + 1) * dh]);
+            }
+            // split-KV attention over the 0..=pos history per head
+            let mut y = vec![0.0f32; d];
+            for h in 0..hn {
+                let off = cfg.cache_offset(self.batch, l, b, h, 0);
+                let kh = &kc[off..off + (pos + 1) * dh];
+                let vh = &vc[off..off + (pos + 1) * dh];
+                let qh = &qkv[h * dh..(h + 1) * dh];
+                let (oh, _lse) =
+                    parallel::decode_splitkv(qh, kh, vh, pos + 1, scale, DECODE_CHUNK);
+                y[h * dh..(h + 1) * dh].copy_from_slice(&oh);
+            }
+            let proj = matmul(&y, params.wo(l), 1, d, d);
+            add_inplace(&mut x, &proj);
+            layer_ffn(cfg, params, l, &mut x, 1);
+        }
+        Ok(lm_head(cfg, params, &x))
+    }
+}
+
+impl Module for DecodeModule {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        let np = cfg.n_params();
+        let params = Params::parse(cfg, inputs);
+        let mut kc = inputs[np].to_f32_vec();
+        let mut vc = inputs[np + 1].to_f32_vec();
+        let tok = inputs[np + 2].to_i32_vec();
+        let pos = inputs[np + 3].to_i32_vec();
+
+        let mut logits = vec![0.0f32; self.batch * cfg.vocab];
+        for b in 0..self.batch {
+            if pos[b] < 0 {
+                bail!("negative decode position {}", pos[b]);
+            }
+            let row =
+                self.decode_row(&params, tok[b], pos[b] as usize, &mut kc, &mut vc, b)?;
+            logits[b * cfg.vocab..(b + 1) * cfg.vocab].copy_from_slice(&row);
+        }
+        let outputs = vec![
+            HostTensor::from_f32(&[self.batch, cfg.vocab], &logits),
+            HostTensor::from_f32(&cfg.cache_dims(self.batch), &kc),
+            HostTensor::from_f32(&cfg.cache_dims(self.batch), &vc),
+        ];
+        Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
+    }
+}
+
+/// Bare flash attention forward (q, k, v) → (o, lse).
+struct AttnFwdModule {
+    dims: AttnDims,
+}
+
+impl Module for AttnFwdModule {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
+        let t0 = Instant::now();
+        let (q, k, v) = (inputs[0].to_f32_vec(), inputs[1].to_f32_vec(), inputs[2].to_f32_vec());
+        let out = parallel::forward(&q, &k, &v, self.dims, FlashParams::default());
+        let d = self.dims;
+        let outputs = vec![
+            HostTensor::from_f32(&[d.batch, d.heads, d.seq, d.head_dim], &out.o),
+            HostTensor::from_f32(&[d.batch, d.heads, d.seq], &out.lse),
+        ];
+        Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
+    }
+}
+
+/// Bare flash attention backward (q, k, v, do) → (dq, dk, dv).
+struct AttnBwdModule {
+    dims: AttnDims,
+}
+
+impl Module for AttnBwdModule {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
+        let t0 = Instant::now();
+        let (q, k, v, dout) = (
+            inputs[0].to_f32_vec(),
+            inputs[1].to_f32_vec(),
+            inputs[2].to_f32_vec(),
+            inputs[3].to_f32_vec(),
+        );
+        let p = FlashParams::default();
+        let fwd = parallel::forward(&q, &k, &v, self.dims, p);
+        let g = parallel::backward(&q, &k, &v, &fwd, &dout, self.dims, p);
+        let d = self.dims;
+        let tdims = [d.batch, d.heads, d.seq, d.head_dim];
+        let outputs = vec![
+            HostTensor::from_f32(&tdims, &g.dq),
+            HostTensor::from_f32(&tdims, &g.dk),
+            HostTensor::from_f32(&tdims, &g.dv),
+        ];
+        Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// backend + synthesized manifest
+
+/// The native backend: `attn::exec` CPU engine, no artifacts needed.
+pub struct NativeBackend {
+    cfg: GptConfig,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { cfg: GptConfig::tiny() }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn attn_dims_from(spec: &ArtifactSpec) -> Result<AttnDims> {
+    let Some(first) = spec.inputs.first() else {
+        bail!("{}: attention artifact has no inputs", spec.name);
+    };
+    if first.dims.len() != 4 {
+        bail!("{}: expected rank-4 (b, h, n, d) input, got {:?}", spec.name, first.dims);
+    }
+    Ok(AttnDims {
+        batch: first.dims[0],
+        heads: first.dims[1],
+        seq: first.dims[2],
+        head_dim: first.dims[3],
+        causal: spec.meta_bool("causal").unwrap_or(false),
+    })
+}
+
+impl Backend for NativeBackend {
+    fn platform_name(&self) -> String {
+        format!("native (attn::exec cpu f32, {} pool threads)", pool::threads())
+    }
+
+    fn load(&self, spec: &ArtifactSpec) -> Result<Box<dyn Module>> {
+        match spec.kind {
+            ArtifactKind::Init => Ok(Box::new(InitModule { cfg: self.cfg })),
+            ArtifactKind::Prefill => Ok(Box::new(PrefillModule { cfg: self.cfg })),
+            ArtifactKind::Decode => {
+                let batch = spec.meta_i64("batch").unwrap_or(1) as usize;
+                Ok(Box::new(DecodeModule { cfg: self.cfg, batch }))
+            }
+            ArtifactKind::AttnFwd => {
+                Ok(Box::new(AttnFwdModule { dims: attn_dims_from(spec)? }))
+            }
+            ArtifactKind::AttnGrad => {
+                Ok(Box::new(AttnBwdModule { dims: attn_dims_from(spec)? }))
+            }
+            ArtifactKind::TrainStep | ArtifactKind::Other => bail!(
+                "{}: the native backend does not implement artifact kind {:?}",
+                spec.name,
+                spec.kind
+            ),
+        }
+    }
+
+    fn provides_golden(&self, spec: &ArtifactSpec) -> bool {
+        matches!(spec.kind, ArtifactKind::AttnFwd | ArtifactKind::AttnGrad)
+    }
+
+    fn golden(&self, spec: &ArtifactSpec) -> Result<Option<GoldenCase>> {
+        if !self.provides_golden(spec) {
+            return Ok(None);
+        }
+        let dims = attn_dims_from(spec)?;
+        let seed = spec.meta_i64("seed").unwrap_or(1) as u64;
+        let mut rng = Rng::seed_from(seed);
+        let n = dims.elems();
+        let mut draw = || -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+        let tdims = [dims.batch, dims.heads, dims.seq, dims.head_dim];
+        let case = match spec.kind {
+            ArtifactKind::AttnFwd => {
+                let (q, k, v) = (draw(), draw(), draw());
+                let r = reference::forward(&q, &k, &v, dims);
+                GoldenCase {
+                    inputs: vec![
+                        HostTensor::from_f32(&tdims, &q),
+                        HostTensor::from_f32(&tdims, &k),
+                        HostTensor::from_f32(&tdims, &v),
+                    ],
+                    outputs: vec![
+                        HostTensor::from_f32(&tdims, &r.o),
+                        HostTensor::from_f32(&[dims.batch, dims.heads, dims.seq], &r.lse),
+                    ],
+                }
+            }
+            ArtifactKind::AttnGrad => {
+                let (q, k, v, dout) = (draw(), draw(), draw(), draw());
+                let r = reference::backward(&q, &k, &v, &dout, dims);
+                GoldenCase {
+                    inputs: vec![
+                        HostTensor::from_f32(&tdims, &q),
+                        HostTensor::from_f32(&tdims, &k),
+                        HostTensor::from_f32(&tdims, &v),
+                        HostTensor::from_f32(&tdims, &dout),
+                    ],
+                    outputs: vec![
+                        HostTensor::from_f32(&tdims, &r.dq),
+                        HostTensor::from_f32(&tdims, &r.dk),
+                        HostTensor::from_f32(&tdims, &r.dv),
+                    ],
+                }
+            }
+            _ => unreachable!("provides_golden gated the kinds above"),
+        };
+        Ok(Some(case))
+    }
+}
+
+fn meta_obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+/// The in-memory manifest the native backend serves: the tiny GPT artifact
+/// set plus self-verifying attention kernels.  `dir` is only recorded for
+/// display — nothing is read from disk.
+pub fn synth_manifest(dir: &Path) -> Manifest {
+    let cfg = GptConfig::tiny();
+    let params = param_specs(&cfg);
+    let f32_spec = |name: &str, dims: Vec<usize>| TensorSpec {
+        name: name.to_string(),
+        dims,
+        dtype: DType::F32,
+    };
+    let model_meta = meta_obj(&[
+        ("model", Json::Str("tiny".into())),
+        ("n_layer", num(cfg.n_layer)),
+        ("n_head", num(cfg.n_head)),
+        ("n_kv_head", num(cfg.n_head)),
+        ("d_model", num(cfg.d_model)),
+        ("max_seq", num(cfg.max_seq)),
+        ("vocab_size", num(cfg.vocab)),
+        ("prompt_len", num(cfg.prompt_len)),
+    ]);
+    let mut specs: Vec<ArtifactSpec> = Vec::new();
+
+    specs.push(ArtifactSpec {
+        name: "tiny_init".into(),
+        kind: ArtifactKind::Init,
+        hlo_path: dir.join("tiny_init.native"),
+        golden_path: None,
+        inputs: vec![TensorSpec { name: "seed".into(), dims: vec![], dtype: DType::U32 }],
+        outputs: params.clone(),
+        meta: model_meta.clone(),
+    });
+
+    let mut prefill_inputs = params.clone();
+    prefill_inputs.push(TensorSpec {
+        name: "tokens".into(),
+        dims: vec![1, cfg.prompt_len],
+        dtype: DType::I32,
+    });
+    specs.push(ArtifactSpec {
+        name: "tiny_prefill_b1".into(),
+        kind: ArtifactKind::Prefill,
+        hlo_path: dir.join("tiny_prefill_b1.native"),
+        golden_path: None,
+        inputs: prefill_inputs,
+        outputs: vec![
+            f32_spec("logits", vec![1, cfg.vocab]),
+            f32_spec("k_cache", cfg.cache_dims(1)),
+            f32_spec("v_cache", cfg.cache_dims(1)),
+        ],
+        meta: model_meta.clone(),
+    });
+
+    for batch in [1usize, 4] {
+        let mut decode_inputs = params.clone();
+        decode_inputs.push(f32_spec("k_cache", cfg.cache_dims(batch)));
+        decode_inputs.push(f32_spec("v_cache", cfg.cache_dims(batch)));
+        decode_inputs.push(TensorSpec {
+            name: "tok".into(),
+            dims: vec![batch],
+            dtype: DType::I32,
+        });
+        decode_inputs.push(TensorSpec {
+            name: "pos".into(),
+            dims: vec![batch],
+            dtype: DType::I32,
+        });
+        let mut meta = model_meta.clone();
+        if let Json::Obj(kvs) = &mut meta {
+            kvs.push(("batch".to_string(), num(batch)));
+        }
+        specs.push(ArtifactSpec {
+            name: format!("tiny_decode_b{batch}"),
+            kind: ArtifactKind::Decode,
+            hlo_path: dir.join(format!("tiny_decode_b{batch}.native")),
+            golden_path: None,
+            inputs: decode_inputs,
+            outputs: vec![
+                f32_spec("logits", vec![batch, cfg.vocab]),
+                f32_spec("k_cache", cfg.cache_dims(batch)),
+                f32_spec("v_cache", cfg.cache_dims(batch)),
+            ],
+            meta,
+        });
+    }
+
+    // Placeholder so `train --backend native` reaches NativeBackend::load's
+    // clear "does not implement artifact kind TrainStep" error instead of a
+    // misleading "not in manifest" (the trainer resolves
+    // "{model}_train_step{variant}" before loading).
+    specs.push(ArtifactSpec {
+        name: "tiny_train_step".into(),
+        kind: ArtifactKind::TrainStep,
+        hlo_path: dir.join("tiny_train_step.native"),
+        golden_path: None,
+        inputs: vec![TensorSpec { name: "seed".into(), dims: vec![], dtype: DType::U32 }],
+        outputs: vec![f32_spec("loss", vec![1])],
+        meta: meta_obj(&[(
+            "note",
+            Json::Str("not implemented by the native backend".into()),
+        )]),
+    });
+
+    // self-verifying attention kernels (golden = attn::exec::reference)
+    let attn_cases: [(&str, ArtifactKind, usize, usize, usize, usize, bool, usize); 3] = [
+        ("native_attn_fwd_full_b2h2n48d32", ArtifactKind::AttnFwd, 2, 2, 48, 32, false, 11),
+        ("native_attn_fwd_causal_b2h2n40d32", ArtifactKind::AttnFwd, 2, 2, 40, 32, true, 12),
+        ("native_attn_grad_causal_b1h2n24d16", ArtifactKind::AttnGrad, 1, 2, 24, 16, true, 13),
+    ];
+    for (name, kind, b, h, n, d, causal, seed) in attn_cases {
+        let tdims = vec![b, h, n, d];
+        let mut inputs = vec![
+            f32_spec("q", tdims.clone()),
+            f32_spec("k", tdims.clone()),
+            f32_spec("v", tdims.clone()),
+        ];
+        let outputs = if kind == ArtifactKind::AttnFwd {
+            vec![f32_spec("o", tdims.clone()), f32_spec("lse", vec![b, h, n])]
+        } else {
+            inputs.push(f32_spec("do", tdims.clone()));
+            vec![
+                f32_spec("dq", tdims.clone()),
+                f32_spec("dk", tdims.clone()),
+                f32_spec("dv", tdims.clone()),
+            ]
+        };
+        specs.push(ArtifactSpec {
+            name: name.to_string(),
+            kind,
+            hlo_path: dir.join(format!("{name}.native")),
+            golden_path: None,
+            inputs,
+            outputs,
+            meta: meta_obj(&[
+                ("seqlen", num(n)),
+                ("head_dim", num(d)),
+                ("causal", Json::Bool(causal)),
+                ("seed", num(seed)),
+                ("impl", Json::Str("attn_exec".into())),
+            ]),
+        });
+    }
+
+    let mut artifacts = BTreeMap::new();
+    for spec in specs {
+        artifacts.insert(spec.name.clone(), spec);
+    }
+    Manifest { dir: dir.to_path_buf(), artifacts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        synth_manifest(Path::new("unused"))
+    }
+
+    #[test]
+    fn synth_manifest_has_the_serving_set() {
+        let m = manifest();
+        for name in ["tiny_init", "tiny_prefill_b1", "tiny_decode_b1", "tiny_decode_b4"] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+        assert_eq!(m.by_kind(ArtifactKind::AttnFwd).len(), 2);
+        assert_eq!(m.by_kind(ArtifactKind::AttnGrad).len(), 1);
+        let pre = m.get("tiny_prefill_b1").unwrap();
+        for key in
+            ["n_layer", "n_kv_head", "max_seq", "d_model", "n_head", "vocab_size", "prompt_len"]
+        {
+            assert!(pre.meta_i64(key).is_some(), "prefill meta missing {key}");
+        }
+        assert_eq!(m.get("tiny_decode_b4").unwrap().meta_i64("batch"), Some(4));
+        // train_step resolves in the manifest but loads with the clear
+        // "not implemented" error (never the misleading "not in manifest")
+        let err = NativeBackend::new()
+            .load(m.get("tiny_train_step").unwrap())
+            .unwrap_err();
+        assert!(format!("{err}").contains("does not implement"), "{err}");
+    }
+
+    #[test]
+    fn init_prefill_decode_roundtrip_shapes_and_determinism() {
+        let be = NativeBackend::new();
+        let m = manifest();
+        let init = be.load(m.get("tiny_init").unwrap()).unwrap();
+        let prefill = be.load(m.get("tiny_prefill_b1").unwrap()).unwrap();
+        let decode = be.load(m.get("tiny_decode_b1").unwrap()).unwrap();
+        let cfg = GptConfig::tiny();
+
+        let (params, _) = init.execute(&[HostTensor::scalar_u32(0)]).unwrap();
+        assert_eq!(params.len(), cfg.n_params());
+        let (params2, _) = init.execute(&[HostTensor::scalar_u32(0)]).unwrap();
+        assert_eq!(params, params2, "init must be deterministic");
+
+        let tokens: Vec<i32> = (0..cfg.prompt_len as i32).collect();
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::from_i32(&[1, cfg.prompt_len], &tokens));
+        let (pre, _) = prefill.execute(&inputs).unwrap();
+        assert_eq!(pre[0].dims, vec![1, cfg.vocab]);
+        assert_eq!(pre[1].dims, cfg.cache_dims(1));
+        assert!(pre[0].to_f32_vec().iter().all(|x| x.is_finite()));
+
+        let mut dec_inputs = params.clone();
+        dec_inputs.push(pre[1].clone());
+        dec_inputs.push(pre[2].clone());
+        dec_inputs.push(HostTensor::from_i32(&[1], &[7]));
+        dec_inputs.push(HostTensor::from_i32(&[1], &[cfg.prompt_len as i32]));
+        let (dec, _) = decode.execute(&dec_inputs).unwrap();
+        assert_eq!(dec[0].dims, vec![1, cfg.vocab]);
+        let (dec2, _) = decode.execute(&dec_inputs).unwrap();
+        assert_eq!(dec[0], dec2[0], "decode must be deterministic");
+        // the new K/V row landed at prompt_len
+        let kc = dec[1].to_f32_vec();
+        let at = cfg.cache_offset(1, 0, 0, 0, cfg.prompt_len);
+        assert!(kc[at..at + cfg.d_head()].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn decode_is_batch_invariant_across_bucket_sizes() {
+        let be = NativeBackend::new();
+        let m = manifest();
+        let cfg = GptConfig::tiny();
+        let init = be.load(m.get("tiny_init").unwrap()).unwrap();
+        let prefill = be.load(m.get("tiny_prefill_b1").unwrap()).unwrap();
+        let d1 = be.load(m.get("tiny_decode_b1").unwrap()).unwrap();
+        let d4 = be.load(m.get("tiny_decode_b4").unwrap()).unwrap();
+
+        let (params, _) = init.execute(&[HostTensor::scalar_u32(0)]).unwrap();
+        let tokens: Vec<i32> = (1..=cfg.prompt_len as i32).collect();
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::from_i32(&[1, cfg.prompt_len], &tokens));
+        let (pre, _) = prefill.execute(&inputs).unwrap();
+        let (kc1, vc1) = (pre[1].to_f32_vec(), pre[2].to_f32_vec());
+
+        let mut in1 = params.clone();
+        in1.push(pre[1].clone());
+        in1.push(pre[2].clone());
+        in1.push(HostTensor::from_i32(&[1], &[3]));
+        in1.push(HostTensor::from_i32(&[1], &[cfg.prompt_len as i32]));
+        let (solo, _) = d1.execute(&in1).unwrap();
+
+        // replicate the row 4× (what the server's padding does)
+        let per = kc1.len();
+        let mut kc4 = vec![0.0f32; 0];
+        let mut vc4 = vec![0.0f32; 0];
+        let per_layer = per / cfg.n_layer;
+        for l in 0..cfg.n_layer {
+            for _ in 0..4 {
+                kc4.extend_from_slice(&kc1[l * per_layer..(l + 1) * per_layer]);
+                vc4.extend_from_slice(&vc1[l * per_layer..(l + 1) * per_layer]);
+            }
+        }
+        let mut in4 = params.clone();
+        in4.push(HostTensor::from_f32(&cfg.cache_dims(4), &kc4));
+        in4.push(HostTensor::from_f32(&cfg.cache_dims(4), &vc4));
+        in4.push(HostTensor::from_i32(&[4], &[3, 3, 3, 3]));
+        in4.push(HostTensor::from_i32(&[4], &[cfg.prompt_len as i32; 4]));
+        let (batched, _) = d4.execute(&in4).unwrap();
+
+        let solo_logits = solo[0].to_f32_vec();
+        let batch_logits = batched[0].to_f32_vec();
+        assert_eq!(
+            &batch_logits[..cfg.vocab],
+            &solo_logits[..],
+            "batched decode row 0 diverged from solo decode"
+        );
+    }
+
+    #[test]
+    fn golden_cases_pass_their_own_modules() {
+        let be = NativeBackend::new();
+        let m = manifest();
+        for name in [
+            "native_attn_fwd_full_b2h2n48d32",
+            "native_attn_fwd_causal_b2h2n40d32",
+            "native_attn_grad_causal_b1h2n24d16",
+        ] {
+            let spec = m.get(name).unwrap();
+            assert!(be.provides_golden(spec));
+            let case = be.golden(spec).unwrap().expect("golden case");
+            let module = be.load(spec).unwrap();
+            let (outs, _) = module.execute(&case.inputs).unwrap();
+            assert_eq!(outs.len(), case.outputs.len());
+            for (got, want) in outs.iter().zip(&case.outputs) {
+                let diff = got.max_abs_diff(want);
+                assert!(diff < 2e-4, "{name}: flash vs reference max|Δ| = {diff}");
+            }
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Gradient check: `flash_bwd`'s dQ/dK/dV against central finite
+//! differences of the reference forward, on tiny problems (N ≤ 32).
+//!
+//! Loss is L = Σ O ⊙ W for a fixed random W, so dL/dO = W is the `dout`
+//! fed to the backward.  Each input element x gets the two-sided probe
+//! (L(x+h) − L(x−h)) / 2h with h = 1e-2; perturbed values are stored back
+//! as f32 (exactly what the kernel sees).  Tolerance is 1e-3 relative —
+//! FD truncation + f32 quantization noise sit well under that on these
+//! sizes.
+
+use fa2::attn::exec::{parallel, reference, AttnDims, FlashParams};
+use fa2::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// L = Σ O ⊙ W under the reference forward.
+fn loss(q: &[f32], k: &[f32], v: &[f32], w: &[f32], dims: AttnDims) -> f64 {
+    let out = reference::forward(q, k, v, dims);
+    out.o.iter().zip(w).map(|(&o, &wi)| o as f64 * wi as f64).sum()
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Check every element of `grad` against the FD probe of `which` (0=q,
+/// 1=k, 2=v).
+#[allow(clippy::too_many_arguments)]
+fn check_grad(
+    name: &str,
+    which: usize,
+    grad: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    w: &[f32],
+    dims: AttnDims,
+) {
+    let h = 1e-2f32;
+    let mut bufs = [q.to_vec(), k.to_vec(), v.to_vec()];
+    for e in 0..grad.len() {
+        let orig = bufs[which][e];
+        bufs[which][e] = orig + h;
+        let up = loss(&bufs[0], &bufs[1], &bufs[2], w, dims);
+        bufs[which][e] = orig - h;
+        let dn = loss(&bufs[0], &bufs[1], &bufs[2], w, dims);
+        bufs[which][e] = orig;
+        let fd = (up - dn) / (2.0 * h as f64);
+        assert!(
+            close(grad[e] as f64, fd, 1e-3),
+            "{name}[{e}]: analytic {} vs FD {fd} ({dims:?})",
+            grad[e]
+        );
+    }
+}
+
+fn gradcheck(dims: AttnDims, seed: u64) {
+    assert!(dims.seq <= 32, "gradcheck is O(elems²·N) — keep problems tiny");
+    let mut rng = Rng::seed_from(seed);
+    let n = dims.elems();
+    let (q, k, v, w) = (
+        rand_vec(&mut rng, n),
+        rand_vec(&mut rng, n),
+        rand_vec(&mut rng, n),
+        rand_vec(&mut rng, n),
+    );
+    let p = FlashParams { block_q: 8, block_k: 8 };
+    let fwd = parallel::forward_with(1, &q, &k, &v, dims, p);
+    let g = parallel::backward_with(1, &q, &k, &v, &fwd, &w, dims, p);
+    check_grad("dQ", 0, &g.dq, &q, &k, &v, &w, dims);
+    check_grad("dK", 1, &g.dk, &q, &k, &v, &w, dims);
+    check_grad("dV", 2, &g.dv, &q, &k, &v, &w, dims);
+}
+
+#[test]
+fn gradcheck_full_attention() {
+    gradcheck(
+        AttnDims { batch: 1, heads: 1, seq: 6, head_dim: 4, causal: false },
+        0xFD01,
+    );
+}
+
+#[test]
+fn gradcheck_causal_attention() {
+    gradcheck(
+        AttnDims { batch: 1, heads: 2, seq: 8, head_dim: 4, causal: true },
+        0xFD02,
+    );
+}
+
+#[test]
+fn gradcheck_blocks_crossing_diagonal() {
+    // seq spans multiple 8-blocks so masked, partial, and full K-blocks all
+    // occur in the backward tiling
+    gradcheck(
+        AttnDims { batch: 1, heads: 1, seq: 18, head_dim: 3, causal: true },
+        0xFD03,
+    );
+}

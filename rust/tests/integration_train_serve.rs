@@ -1,9 +1,12 @@
 //! Integration: the training driver and the serving coordinator over real
-//! compiled artifacts.
+//! compiled artifacts, plus the native (`attn::exec`) serving path.
 //!
-//! Requires `make artifacts` (python/compile/aot.py) AND the `xla`
-//! execution backend; without either, every test SKIPS with a note instead
-//! of panicking, so a fresh offline checkout is green.
+//! The artifact-backed tests require `make artifacts`
+//! (python/compile/aot.py) AND the `xla` execution backend; without
+//! either, they SKIP with a note instead of panicking, so a fresh offline
+//! checkout is green.  The `native_*` tests at the bottom run the same
+//! coordinator on `BackendKind::Native` and never skip — serving works on
+//! a fresh checkout with no artifacts at all.
 
 mod common;
 
@@ -11,7 +14,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use fa2::coordinator::server::{GenRequest, Server};
-use fa2::runtime::Runtime;
+use fa2::runtime::{BackendKind, Runtime};
 use fa2::train::trainer::{TrainConfig, Trainer};
 
 /// artifacts/ with everything needed to EXECUTE artifacts, or `None` (with
@@ -119,6 +122,86 @@ fn greedy_decode_is_batch_invariant() {
         solo.tokens, batched[0].tokens,
         "batching changed greedy decode output"
     );
+}
+
+fn native_server() -> Server {
+    // the directory is never read: the native backend synthesizes its
+    // manifest in memory
+    Server::start_with(PathBuf::from("artifacts"), "tiny", BackendKind::Native)
+        .expect("native server must start with no artifacts on disk")
+}
+
+#[test]
+fn native_server_answers_generate_requests() {
+    let server = native_server();
+    let mut rxs = Vec::new();
+    for i in 0..5 {
+        rxs.push(server.submit(GenRequest { prompt: vec![i as i32 + 1; 8], n_new: 4 }));
+    }
+    for rx in &rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.tokens.len(), 4);
+        assert!(resp.latency >= resp.ttft);
+        assert!(resp.tokens.iter().all(|&t| (0..512).contains(&t)));
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests(), 5);
+    assert_eq!(metrics.tokens(), 20);
+}
+
+#[test]
+fn native_greedy_decode_is_batch_invariant() {
+    // same contract as the artifact-backed test: batching with padding must
+    // not change a sequence's greedy tokens
+    let server = native_server();
+    let prompt: Vec<i32> = (1..=8).collect();
+    let solo = server
+        .submit(GenRequest { prompt: prompt.clone(), n_new: 6 })
+        .recv()
+        .unwrap();
+    let rxs: Vec<_> = (0..4)
+        .map(|j| {
+            let mut p = prompt.clone();
+            if j > 0 {
+                p[0] = 100 + j;
+            }
+            server.submit(GenRequest { prompt: p, n_new: 6 })
+        })
+        .collect();
+    let batched: Vec<_> = rxs.iter().map(|rx| rx.recv().unwrap()).collect();
+    server.shutdown().unwrap();
+    assert_eq!(
+        solo.tokens, batched[0].tokens,
+        "batching changed native greedy decode output"
+    );
+}
+
+#[test]
+fn native_generation_is_deterministic() {
+    let run = || {
+        let server = native_server();
+        let resp = server
+            .submit(GenRequest { prompt: (10..26).collect(), n_new: 5 })
+            .recv()
+            .unwrap();
+        server.shutdown().unwrap();
+        resp.tokens
+    };
+    assert_eq!(run(), run(), "same prompt + seed 0 weights must repeat exactly");
+}
+
+#[test]
+fn native_runtime_verifies_flash_against_reference() {
+    // `repro verify --backend native` in test form: golden vectors are
+    // synthesized from attn::exec::reference, executed through the runtime.
+    let rt = Runtime::with_backend(&PathBuf::from("artifacts"), BackendKind::Native).unwrap();
+    let names = rt.golden_names();
+    assert!(names.len() >= 3, "native manifest should self-verify attention kernels");
+    for name in names {
+        let diffs = rt.verify_golden(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let worst = diffs.iter().cloned().fold(0.0f32, f32::max);
+        assert!(worst < 2e-4, "{name}: max diff {worst}");
+    }
 }
 
 #[test]

@@ -1,0 +1,179 @@
+//! Property tests for the native executing kernels (`attn::exec`):
+//!
+//! - flash forward matches the O(N²) reference within 1e-4 over random
+//!   shapes — causal and full, seqlens not divisible by the block sizes,
+//!   head_dim ∈ {16, 64, 128};
+//! - flash backward matches the reference gradients within 1e-4;
+//! - parallel execution is byte-identical to serial at any worker count
+//!   (the same order-preserving fan-out contract as the sweeps);
+//! - split-KV decode matches monolithic decode for any chunking, streamed
+//!   (`merge_from`) or fanned (`merge_all`).
+//!
+//! Replay failures with FA2_PROP_SEED / FA2_PROP_CASES (see util::prop).
+
+use fa2::attn::exec::{parallel, reference, AttnDims, FlashParams};
+use fa2::prop_assert;
+use fa2::util::prop::{check, PropConfig};
+use fa2::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// A random problem: small batch/heads, awkward seqlens, the paper's head
+/// dims, random masking.
+fn rand_dims(rng: &mut Rng, max_seq: usize) -> AttnDims {
+    AttnDims {
+        batch: rng.range_usize(1, 3),
+        heads: rng.range_usize(1, 3),
+        seq: rng.range_usize(1, max_seq + 1),
+        head_dim: *rng.choice(&[16usize, 64, 128]),
+        causal: rng.next_f64() < 0.5,
+    }
+}
+
+fn rand_params(rng: &mut Rng) -> FlashParams {
+    FlashParams {
+        block_q: *rng.choice(&[4usize, 8, 16, 33, 64]),
+        block_k: *rng.choice(&[4usize, 8, 16, 33, 64]),
+    }
+}
+
+#[test]
+fn prop_flash_forward_matches_reference() {
+    let cfg = PropConfig { cases: 32, ..PropConfig::default() };
+    check("flash-fwd-parity", cfg, |rng| {
+        let dims = rand_dims(rng, 48);
+        let p = rand_params(rng);
+        let n = dims.elems();
+        let (q, k, v) = (rand_vec(rng, n), rand_vec(rng, n), rand_vec(rng, n));
+        let fl = parallel::forward_with(1, &q, &k, &v, dims, p);
+        let rf = reference::forward(&q, &k, &v, dims);
+        let od = max_diff(&fl.o, &rf.o);
+        prop_assert!(od < 1e-4, "O diff {od} for {dims:?} {p:?}");
+        let ld = max_diff(&fl.lse, &rf.lse);
+        prop_assert!(ld < 1e-4, "LSE diff {ld} for {dims:?} {p:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flash_backward_matches_reference() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("flash-bwd-parity", cfg, |rng| {
+        let dims = AttnDims {
+            batch: rng.range_usize(1, 3),
+            heads: rng.range_usize(1, 3),
+            seq: rng.range_usize(1, 25),
+            head_dim: *rng.choice(&[16usize, 64]),
+            causal: rng.next_f64() < 0.5,
+        };
+        let p = rand_params(rng);
+        let n = dims.elems();
+        let (q, k, v, dout) = (
+            rand_vec(rng, n),
+            rand_vec(rng, n),
+            rand_vec(rng, n),
+            rand_vec(rng, n),
+        );
+        let fwd = parallel::forward_with(1, &q, &k, &v, dims, p);
+        let g = parallel::backward_with(1, &q, &k, &v, &fwd, &dout, dims, p);
+        let r = reference::backward(&q, &k, &v, &dout, dims);
+        for (name, got, want) in
+            [("dQ", &g.dq, &r.dq), ("dK", &g.dk, &r.dk), ("dV", &g.dv, &r.dv)]
+        {
+            let d = max_diff(got, want);
+            prop_assert!(d < 1e-4, "{name} diff {d} for {dims:?} {p:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_equals_serial_bitwise() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("parallel-serial-identical", cfg, |rng| {
+        let dims = rand_dims(rng, 40);
+        let p = rand_params(rng);
+        let workers = rng.range_usize(2, 9);
+        let n = dims.elems();
+        let (q, k, v, dout) = (
+            rand_vec(rng, n),
+            rand_vec(rng, n),
+            rand_vec(rng, n),
+            rand_vec(rng, n),
+        );
+        let serial = parallel::forward_with(1, &q, &k, &v, dims, p);
+        let par = parallel::forward_with(workers, &q, &k, &v, dims, p);
+        prop_assert!(serial.o == par.o, "forward O diverged at {workers} workers");
+        prop_assert!(serial.lse == par.lse, "forward LSE diverged");
+        let gs = parallel::backward_with(1, &q, &k, &v, &serial, &dout, dims, p);
+        let gp = parallel::backward_with(workers, &q, &k, &v, &serial, &dout, dims, p);
+        prop_assert!(gs.dq == gp.dq, "dQ diverged at {workers} workers");
+        prop_assert!(gs.dk == gp.dk, "dK diverged");
+        prop_assert!(gs.dv == gp.dv, "dV diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_splitkv_decode_matches_monolithic_for_any_chunking() {
+    check("splitkv-chunk-invariance", PropConfig::default(), |rng| {
+        let d = *rng.choice(&[16usize, 64, 128]);
+        let n = rng.range_usize(1, 160);
+        let chunk = rng.range_usize(1, n + 1);
+        let q = rand_vec(rng, d);
+        let k = rand_vec(rng, n * d);
+        let v = rand_vec(rng, n * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mono = parallel::decode_splitkv(&q, &k, &v, n, scale, n);
+        let split = parallel::decode_splitkv(&q, &k, &v, n, scale, chunk);
+        let fanned = parallel::decode_splitkv_fanned(4, &q, &k, &v, n, scale, chunk);
+        let ds = max_diff(&mono.0, &split.0);
+        prop_assert!(ds < 1e-5, "streamed split diff {ds} (n={n} chunk={chunk})");
+        prop_assert!((mono.1 - split.1).abs() < 1e-5, "LSE diff (n={n} chunk={chunk})");
+        let df = max_diff(&split.0, &fanned.0);
+        prop_assert!(df < 1e-5, "fanned split diff {df} (n={n} chunk={chunk})");
+        prop_assert!((split.1 - fanned.1).abs() < 1e-5, "fanned LSE diff");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_agrees_with_flash_last_row() {
+    // The decode path and the full flash forward must agree on the last
+    // causal row (which attends to the whole history) — ties the serving
+    // decode path to the prefill kernel.
+    check("decode-vs-flash-row", PropConfig { cases: 24, ..PropConfig::default() }, |rng| {
+        let dims = AttnDims {
+            batch: 1,
+            heads: 1,
+            seq: rng.range_usize(1, 65),
+            head_dim: *rng.choice(&[16usize, 64]),
+            causal: true,
+        };
+        let n = dims.elems();
+        let (q, k, v) = (rand_vec(rng, n), rand_vec(rng, n), rand_vec(rng, n));
+        let fwd = parallel::forward_with(1, &q, &k, &v, dims, FlashParams::default());
+        let last = dims.seq - 1;
+        let d = dims.head_dim;
+        let (orow, lse) = parallel::decode_splitkv(
+            &q[last * d..(last + 1) * d],
+            &k,
+            &v,
+            dims.seq,
+            dims.scale(),
+            rng.range_usize(1, dims.seq + 1),
+        );
+        let got = &fwd.o[last * d..(last + 1) * d];
+        let diff = max_diff(got, &orow);
+        prop_assert!(diff < 1e-5, "decode vs flash last row diff {diff} ({dims:?})");
+        let flse = fwd.lse[last];
+        prop_assert!((flse - lse).abs() < 1e-5, "LSE {flse} vs {lse}");
+        Ok(())
+    });
+}
