@@ -1,14 +1,20 @@
 //! Bench: L3 coordinator hot paths — batcher enqueue/dispatch, split-K
-//! combine merge, gpusim sweep throughput.  Perf targets from DESIGN.md §6:
-//! batcher > 1M ops/s, full figure sweep < 50 ms.
+//! combine merge, gpusim sweep throughput, and the serving decode step
+//! before/after the KV arena (DESIGN.md §8).  Perf targets from DESIGN.md
+//! §6: batcher > 1M ops/s, full figure sweep < 50 ms; the native decode
+//! hot path must move ZERO per-token KV assemble/scatter bytes (asserted
+//! here and recorded in reports/coordinator_hotpath.csv).
 
+use std::path::Path;
 use std::time::Duration;
 
 use fa2::attn::combine::{merge_all, Partial};
 use fa2::bench::figures;
 use fa2::coordinator::batcher::{BatchPolicy, Batcher};
+use fa2::runtime::{BackendKind, KvArena, KvSlot, ModelBundle, Runtime};
 use fa2::util::rng::Rng;
 use fa2::util::stats::Bencher;
+use fa2::util::tensorio::HostTensor;
 
 fn main() {
     let b = Bencher::default();
@@ -55,4 +61,74 @@ fn main() {
     });
     assert!(s.p50 < 0.2, "gpusim sweep too slow: {}s", s.p50);
     println!("gpusim full sweep p50: {:.2} ms", s.p50 * 1e3);
+
+    // --- serving decode step: legacy assemble/scatter vs KV arena ---
+    // Per-token overhead comparison on the native backend (4 active
+    // sequences, bucket 4).  "legacy" reproduces the pre-engine worker:
+    // gather the per-sequence slots into the (L, B, H, S, dh) batch cache
+    // pair, execute, scatter the rows back.  "kv_arena" is the widened
+    // decode_step seam: the native module mutates the slots in place.
+    let rt = Runtime::with_backend(Path::new("artifacts"), BackendKind::Native)
+        .expect("native runtime needs no artifacts");
+    let bundle = ModelBundle::discover(&rt, "tiny").expect("tiny bundle");
+    let params = bundle.init.run(&[HostTensor::scalar_u32(0)]).expect("init");
+    let shapes = bundle.shapes;
+    let prompt: Vec<i32> = (1..=shapes.prompt_len as i32).collect();
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::from_i32(&[1, shapes.prompt_len], &prompt));
+    let pre = bundle.prefill.run(&inputs).expect("prefill");
+
+    let mut arena = KvArena::new(shapes.geometry());
+    let slots: Vec<KvSlot> = (0..4)
+        .map(|_| arena.adopt(pre[1].to_f32_vec(), pre[2].to_f32_vec()).unwrap())
+        .collect();
+    let exe = bundle.decode_for(4).expect("bucket-4 decode");
+    let tok: Vec<i32> = vec![5, 6, 7, 8];
+    let pos: Vec<i32> = vec![shapes.prompt_len as i32; 4];
+
+    let before = arena.stats();
+    let s_legacy = b.run("decode step x4 (legacy assemble+scatter)", || {
+        let mut view = arena.batch_view(&slots, 4);
+        let (k, v) = view.gather();
+        let mut inputs = params.clone(); // the old worker cloned params per step too
+        inputs.push(k);
+        inputs.push(v);
+        inputs.push(HostTensor::from_i32(&[4], &tok));
+        inputs.push(HostTensor::from_i32(&[4], &pos));
+        let out = exe.run(&inputs).expect("legacy decode");
+        view.scatter(&out[1], &out[2]).expect("scatter");
+        out[0].to_f32_vec()
+    });
+    let after = arena.stats();
+    let legacy_steps = after.gathers - before.gathers;
+    let legacy_bytes_per_step = (after.total_bytes() - before.total_bytes()) / legacy_steps;
+
+    let before = arena.stats();
+    let s_arena = b.run("decode step x4 (KvArena in-place)", || {
+        let mut view = arena.batch_view(&slots, 4);
+        exe.decode_step(&params, &mut view, &tok, &pos).expect("arena decode")
+    });
+    let after = arena.stats();
+    let arena_bytes = after.total_bytes() - before.total_bytes();
+    assert_eq!(
+        arena_bytes, 0,
+        "native decode hot path must move ZERO KV assemble/scatter bytes"
+    );
+
+    println!(
+        "decode kv overhead: legacy {} B/step ({:.1} µs/step) -> arena 0 B/step ({:.1} µs/step)",
+        legacy_bytes_per_step,
+        s_legacy.p50 * 1e6,
+        s_arena.p50 * 1e6
+    );
+    std::fs::create_dir_all("reports").expect("reports dir");
+    let csv = format!(
+        "path,decode_batch,kv_bytes_per_step,us_per_step\n\
+         legacy_assemble_scatter,4,{legacy_bytes_per_step},{:.2}\n\
+         kv_arena_in_place,4,0,{:.2}\n",
+        s_legacy.p50 * 1e6,
+        s_arena.p50 * 1e6
+    );
+    std::fs::write("reports/coordinator_hotpath.csv", csv).expect("write csv");
+    println!("wrote reports/coordinator_hotpath.csv");
 }

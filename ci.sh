@@ -23,14 +23,20 @@ cargo test -q --release --test prop_native_attn --test gradcheck_native_attn
 echo "== wiring: benches + examples build (includes native_attn) =="
 cargo build --release --benches --examples
 
-echo "== warnings gate: attn/exec + runtime/native must be warning-free =="
+echo "== serving hot path: coordinator_hotpath bench smoke run =="
+# Asserts the native decode path moves ZERO per-token KV assemble/scatter
+# bytes and writes the before/after CSV to reports/coordinator_hotpath.csv.
+cargo bench --bench coordinator_hotpath
+
+echo "== warnings gate: attn/exec + runtime + coordinator must be warning-free =="
 # cargo re-emits cached warnings on `check`; any diagnostic naming these
 # paths fails CI (errors would already have failed the build steps above).
 check_out="$(cargo check --release --all-targets 2>&1)" \
     || { printf '%s\n' "$check_out"; exit 1; }
-if printf '%s\n' "$check_out" | grep -q 'attn/exec\|runtime/native'; then
-    printf '%s\n' "$check_out" | grep -B3 -A1 'attn/exec\|runtime/native'
-    echo "FAIL: compiler warnings in rust/src/attn/exec/ or rust/src/runtime/native.rs" >&2
+gate='attn/exec\|runtime/\|coordinator/'
+if printf '%s\n' "$check_out" | grep -q "$gate"; then
+    printf '%s\n' "$check_out" | grep -B3 -A1 "$gate"
+    echo "FAIL: compiler warnings in rust/src/attn/exec/, rust/src/runtime/ or rust/src/coordinator/" >&2
     exit 1
 fi
 

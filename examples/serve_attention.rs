@@ -1,12 +1,16 @@
-//! Serving example: run the mini-vLLM coordinator (dynamic batching,
-//! KV-cache state management, AOT prefill/decode executables) under a
+//! Serving example: run the session-based engine (typed `Engine`/`Session`
+//! API, streamed `TokenEvent`s, zero-copy KV arena — DESIGN.md §8) under a
 //! Poisson open-loop workload and report latency/throughput.
 //!
-//!   cargo run --release --example serve_attention [n_requests]
+//! Runs on the native backend by default, so it works on a fresh checkout
+//! with no AOT artifacts:
+//!
+//!   cargo run --release --example serve_attention [n_requests] [backend]
 
-use fa2::util::error::Result;
-use fa2::coordinator::server::{GenRequest, Server};
+use fa2::coordinator::engine::{Engine, SamplingParams, TokenEvent};
+use fa2::runtime::BackendKind;
 use fa2::train::corpus::Corpus;
+use fa2::util::error::Result;
 use fa2::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -14,25 +18,61 @@ fn main() -> Result<()> {
         .nth(1)
         .map(|s| s.parse().expect("n_requests"))
         .unwrap_or(24);
+    let backend = BackendKind::from_flag(
+        std::env::args().nth(2).as_deref().unwrap_or("native"),
+    )?;
 
-    let server = Server::start("artifacts".into(), "tiny")?;
+    let engine = Engine::start("artifacts".into(), "tiny", backend)?;
     let mut corpus = Corpus::new(512, 7);
     let mut rng = Rng::seed_from(7);
 
     println!("submitting {n_requests} requests (Poisson, 25 req/s, 12 new tokens each)...");
-    let mut rxs = Vec::new();
-    for _ in 0..n_requests {
+    let mut sessions = Vec::new();
+    for i in 0..n_requests {
         let prompt = corpus.next_batch(1, 16);
-        rxs.push(server.submit(GenRequest { prompt, n_new: 12 }));
+        // mixed workload: even sessions greedy, odd sessions sampled
+        let sampling = if i % 2 == 0 {
+            SamplingParams::greedy(12)
+        } else {
+            SamplingParams {
+                max_tokens: 12,
+                temperature: 0.8,
+                top_k: 40,
+                seed: i as u64,
+                stop_tokens: Vec::new(),
+            }
+        };
+        sessions.push(engine.submit(prompt, sampling)?);
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(25.0)));
     }
+
     let mut total_tokens = 0;
-    for rx in &rxs {
-        let resp = rx.recv()?;
-        total_tokens += resp.tokens.len();
-        assert_eq!(resp.tokens.len(), 12);
+    for (i, session) in sessions.into_iter().enumerate() {
+        if i == 0 {
+            // demonstrate streaming on the first session
+            print!("session 0 tokens:");
+            let tokens = loop {
+                match session.recv() {
+                    Some(TokenEvent::First { token, ttft_secs }) => {
+                        print!(" {token} (ttft {:.1} ms)", ttft_secs * 1e3)
+                    }
+                    Some(TokenEvent::Delta { token, .. }) => print!(" {token}"),
+                    Some(TokenEvent::Done { finish, tokens, .. }) => {
+                        println!("  [{finish:?}]");
+                        break tokens;
+                    }
+                    None => panic!("engine closed mid-stream"),
+                }
+            };
+            assert_eq!(tokens.len(), 12);
+            total_tokens += tokens.len();
+        } else {
+            let comp = session.wait()?;
+            assert_eq!(comp.tokens.len(), 12);
+            total_tokens += comp.tokens.len();
+        }
     }
-    let metrics = server.shutdown()?;
+    let metrics = engine.shutdown()?;
     println!("{}", metrics.report());
     println!("all {n_requests} requests completed ({total_tokens} tokens)");
     Ok(())

@@ -28,6 +28,12 @@ pub struct ServeConfig {
     /// Poisson arrival rate (requests/second); 0 = closed-loop.
     pub arrival_rate: f64,
     pub seed: u64,
+    /// Sampling temperature for the workload's sessions; 0 = greedy.
+    pub temperature: f32,
+    /// Top-k sampling cutoff; 0 = full vocabulary.
+    pub top_k: usize,
+    /// Stream the first session's `TokenEvent`s to stdout (`--stream`).
+    pub stream: bool,
 }
 
 impl Default for ServeConfig {
@@ -39,6 +45,9 @@ impl Default for ServeConfig {
             tokens_per_request: 8,
             arrival_rate: 0.0,
             seed: 0,
+            temperature: 0.0,
+            top_k: 0,
+            stream: false,
         }
     }
 }
@@ -100,6 +109,10 @@ impl RunConfig {
                     as usize,
                 arrival_rate: doc.f64_or("serve.arrival_rate", d.serve.arrival_rate),
                 seed: doc.i64_or("serve.seed", d.serve.seed as i64) as u64,
+                temperature: doc.f64_or("serve.temperature", d.serve.temperature as f64)
+                    as f32,
+                top_k: doc.i64_or("serve.top_k", d.serve.top_k as i64) as usize,
+                stream: doc.bool_or("serve.stream", d.serve.stream),
             },
             bench: BenchConfig {
                 out_dir: doc.str_or("bench.out_dir", &d.bench.out_dir).to_string(),
@@ -125,7 +138,8 @@ mod tests {
         let doc = TomlDoc::parse(
             "artifact_dir = \"a\"\n[train]\nmodel = \"small\"\nsteps = 7\n\
              checkpoint = \"ckpt.fat1\"\n[serve]\narrival_rate = 3.5\n\
-             backend = \"native\"\n",
+             backend = \"native\"\ntemperature = 0.8\ntop_k = 40\n\
+             stream = true\n",
         )
         .unwrap();
         let c = RunConfig::from_doc(&doc);
@@ -135,5 +149,16 @@ mod tests {
         assert_eq!(c.train.checkpoint.as_deref(), Some("ckpt.fat1"));
         assert!((c.serve.arrival_rate - 3.5).abs() < 1e-12);
         assert_eq!(c.serve.backend, "native");
+        assert!((c.serve.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(c.serve.top_k, 40);
+        assert!(c.serve.stream);
+    }
+
+    #[test]
+    fn serve_sampling_defaults_are_greedy() {
+        let c = RunConfig::from_doc(&TomlDoc::parse("").unwrap());
+        assert_eq!(c.serve.temperature, 0.0);
+        assert_eq!(c.serve.top_k, 0);
+        assert!(!c.serve.stream);
     }
 }

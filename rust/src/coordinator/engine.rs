@@ -1,0 +1,751 @@
+//! The session-based serving engine (DESIGN.md §8): a typed
+//! [`Engine`]/[`Session`] API over the coordinator worker.
+//!
+//! Where the old `Server` took a `GenRequest` and answered with one final
+//! `GenResponse`, the engine:
+//!
+//! - discovers a [`ModelBundle`] from the manifest by typed query
+//!   (`ArtifactKind` + `meta.model`) instead of format-string name
+//!   guessing, and drives decode grouping from the discovered
+//!   [`DecodeBuckets`] rather than a hardcoded 1/4 pair;
+//! - hands each request a [`Session`] carrying [`SamplingParams`] (greedy
+//!   by default; temperature/top-k with the seeded in-tree RNG) and
+//!   **streams** [`TokenEvent`]s — first token, per-token deltas, and a
+//!   final finish reason — instead of buffering the whole generation;
+//! - rejects over-long prompts ([`EngineError::PromptTooLong`] — the old
+//!   server silently truncated and padded with token 0) and out-of-vocab
+//!   tokens ([`EngineError::TokenOutOfVocab`] — one bad request must not
+//!   poison the shared worker) *before* they reach the worker, and fails
+//!   fast with [`EngineError::Closed`] when the worker is gone (the old
+//!   server dropped the send error and left clients blocked forever);
+//! - owns a [`KvArena`]: per-sequence cache slots decoded **in place**
+//!   through the widened `Module::decode_step` seam — zero per-token
+//!   assemble/scatter bytes on the native backend (metrics-asserted).
+//!
+//! Dropping a `Session` (or calling [`Session::cancel`]) cancels the
+//! request; the worker retires it with [`FinishReason::Cancelled`] at the
+//! next step boundary and frees its cache slot.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::util::error::{Error, Result};
+
+use crate::runtime::{BackendKind, KvArena, KvSlot, ModelBundle, Runtime, ServeShapes};
+use crate::util::rng::Rng;
+use crate::util::tensorio::HostTensor;
+
+use super::metrics::Metrics;
+
+/// Per-session sampling configuration.  The default is greedy argmax
+/// (temperature 0), which reproduces the old server's decoding exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Stop after this many generated tokens (>= 1; the prefill token
+    /// counts).
+    pub max_tokens: usize,
+    /// 0.0 = greedy argmax; > 0 samples from softmax(logits / temperature).
+    pub temperature: f32,
+    /// Restrict sampling to the k highest logits; 0 = no cutoff.
+    pub top_k: usize,
+    /// Seed for the per-session RNG (only consulted when temperature > 0).
+    pub seed: u64,
+    /// Generation finishes (reason `Stop`) when one of these is sampled;
+    /// the stop token is included in the output.
+    pub stop_tokens: Vec<i32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            max_tokens: 16,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding for `max_tokens` tokens — the old `GenRequest`
+    /// semantics.
+    pub fn greedy(max_tokens: usize) -> SamplingParams {
+        SamplingParams { max_tokens: max_tokens.max(1), ..Default::default() }
+    }
+}
+
+/// Why a session finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_tokens` tokens.
+    MaxTokens,
+    /// Sampled a token from `stop_tokens`.
+    Stop,
+    /// The KV cache reached the compiled `max_seq` window.
+    ContextFull,
+    /// The client cancelled (dropped the `Session` or called `cancel`).
+    Cancelled,
+}
+
+/// One streamed event on a session's channel.  Events arrive strictly in
+/// order: `First` (index 0), then `Delta`s with consecutive indices, then
+/// exactly one `Done`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenEvent {
+    /// The first generated token (produced by prefill), with
+    /// time-to-first-token.
+    First { token: i32, ttft_secs: f64 },
+    /// A subsequent decode token; `index` counts all generated tokens, so
+    /// deltas start at 1.
+    Delta { index: usize, token: i32 },
+    /// Terminal event: the finish reason plus the complete token list and
+    /// latency accounting.
+    Done { finish: FinishReason, tokens: Vec<i32>, latency_secs: f64, ttft_secs: f64 },
+}
+
+impl TokenEvent {
+    /// The generation index this event carries, if any (`First` is 0).
+    pub fn index(&self) -> Option<usize> {
+        match self {
+            TokenEvent::First { .. } => Some(0),
+            TokenEvent::Delta { index, .. } => Some(*index),
+            TokenEvent::Done { .. } => None,
+        }
+    }
+
+    pub fn token(&self) -> Option<i32> {
+        match self {
+            TokenEvent::First { token, .. } | TokenEvent::Delta { token, .. } => Some(*token),
+            TokenEvent::Done { .. } => None,
+        }
+    }
+}
+
+/// The drained result of a finished session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// end-to-end latency (submit -> done), seconds
+    pub latency: f64,
+    /// time to first token (prefill), seconds
+    pub ttft: f64,
+}
+
+/// Typed submission errors — the conditions a client can act on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The prompt exceeds the compiled prompt window.  The old server
+    /// silently dropped the excess tokens and padded with token 0 (which
+    /// attends as real context); the engine refuses instead.
+    PromptTooLong { len: usize, max: usize },
+    /// A prompt token is outside the model's vocabulary.  Rejected at
+    /// submission so one bad request cannot poison the shared worker
+    /// (backend modules treat out-of-range tokens as a fatal engine
+    /// error).
+    TokenOutOfVocab { token: i32, vocab: usize },
+    /// The worker thread has shut down (or died); nothing submitted now
+    /// can ever complete, so fail fast instead of blocking forever.
+    Closed,
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::PromptTooLong { len, max } => write!(
+                f,
+                "prompt has {len} tokens but the model's compiled prompt window is {max}"
+            ),
+            EngineError::TokenOutOfVocab { token, vocab } => {
+                write!(f, "prompt token {token} is outside the model vocabulary 0..{vocab}")
+            }
+            EngineError::Closed => write!(f, "engine is closed (worker thread has exited)"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// A live request handle: streamed events plus cancellation.
+pub struct Session {
+    events: Receiver<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+    /// Dropping the handle cancels the request unless detached (the
+    /// deprecated `Server` shim detaches to keep the old fire-and-forget
+    /// submit semantics).
+    cancel_on_drop: bool,
+}
+
+impl Session {
+    /// Blocking receive of the next event; `None` once the stream ends
+    /// (after `Done`, or if the engine died mid-generation).
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking receive: `Ok(None)` means no event *yet*;
+    /// `Err(Closed)` means the engine died and no event will ever arrive
+    /// (so pollers don't spin forever on a dead stream).
+    pub fn try_recv(&self) -> Result<Option<TokenEvent>, EngineError> {
+        match self.events.try_recv() {
+            Ok(ev) => Ok(Some(ev)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => Ok(None),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Err(EngineError::Closed),
+        }
+    }
+
+    /// Request cancellation; the worker retires the session with
+    /// `FinishReason::Cancelled` at the next step boundary.  (Dropping the
+    /// session does the same.)
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Disarm drop-cancellation: the request keeps generating (and is
+    /// counted in metrics) even if this handle is dropped.
+    pub fn detach(&mut self) {
+        self.cancel_on_drop = false;
+    }
+
+    /// Drain events to completion and return the final result.
+    pub fn wait(self) -> Result<Completion> {
+        self.drain()
+    }
+
+    /// Shared drain loop behind [`wait`](Self::wait) and the deprecated
+    /// shim's `GenHandle::recv`.
+    pub(crate) fn drain(&self) -> Result<Completion> {
+        loop {
+            match self.events.recv() {
+                Ok(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs }) => {
+                    return Ok(Completion {
+                        tokens,
+                        finish,
+                        latency: latency_secs,
+                        ttft: ttft_secs,
+                    })
+                }
+                Ok(_) => continue,
+                Err(_) => {
+                    return Err(Error::msg(
+                        "engine closed before the session finished (worker died)",
+                    ))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // dropping the handle cancels the request; harmless after Done
+        if self.cancel_on_drop {
+            self.cancel.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+struct Incoming {
+    prompt: Vec<i32>,
+    sampling: SamplingParams,
+    events_tx: Sender<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+    submitted: Instant,
+}
+
+/// The serving engine: typed submissions in, streamed sessions out.
+///
+/// The backend and executables are created INSIDE the worker thread: the
+/// `xla` crate's handles are `!Send` (Rc internals), so the worker owns
+/// the whole runtime and talks to clients only through channels.
+pub struct Engine {
+    tx: Sender<Incoming>,
+    shapes: ServeShapes,
+    handle: JoinHandle<Result<Metrics>>,
+}
+
+impl Engine {
+    /// Start the worker on an explicit backend (`BackendKind::Native`
+    /// needs no artifacts on disk).
+    pub fn start(artifact_dir: PathBuf, model: &str, backend: BackendKind) -> Result<Engine> {
+        let model = model.to_string();
+        let (tx, rx) = channel::<Incoming>();
+        let (ready_tx, ready_rx) = channel::<Result<ServeShapes>>();
+        let handle = std::thread::spawn(move || {
+            let setup = || -> Result<(ModelBundle, Vec<HostTensor>)> {
+                let rt = Runtime::with_backend(&artifact_dir, backend)?;
+                let bundle = ModelBundle::discover(&rt, &model)?;
+                // Materialize the weights once via the init artifact (seed
+                // 0): the flat param list is shared by prefill and decode.
+                let params = bundle.init.run(&[HostTensor::scalar_u32(0)])?;
+                Ok((bundle, params))
+            };
+            match setup() {
+                Ok((bundle, params)) => {
+                    let _ = ready_tx.send(Ok(bundle.shapes));
+                    worker(rx, bundle, params)
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    Ok(Metrics::new())
+                }
+            }
+        });
+        let shapes = ready_rx
+            .recv()
+            .map_err(|_| Error::msg("engine worker died during setup"))??;
+        Ok(Engine { tx, shapes, handle })
+    }
+
+    /// The serving model's compiled shapes (prompt window, vocab, ...).
+    pub fn shapes(&self) -> ServeShapes {
+        self.shapes
+    }
+
+    /// Open a session: validates the prompt against the compiled window
+    /// and enqueues it.  Fails fast with a typed error instead of
+    /// truncating prompts or blocking on a dead worker.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        sampling: SamplingParams,
+    ) -> Result<Session, EngineError> {
+        if prompt.len() > self.shapes.prompt_len {
+            return Err(EngineError::PromptTooLong {
+                len: prompt.len(),
+                max: self.shapes.prompt_len,
+            });
+        }
+        if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.shapes.vocab)
+        {
+            return Err(EngineError::TokenOutOfVocab { token: t, vocab: self.shapes.vocab });
+        }
+        let (events_tx, events) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let incoming = Incoming {
+            prompt,
+            sampling,
+            events_tx,
+            cancel: cancel.clone(),
+            submitted: Instant::now(),
+        };
+        self.tx.send(incoming).map_err(|_| EngineError::Closed)?;
+        Ok(Session { events, cancel, cancel_on_drop: true })
+    }
+
+    /// Close the queue, wait for in-flight sessions to finish, and return
+    /// the serving metrics.
+    pub fn shutdown(self) -> Result<Metrics> {
+        let Engine { tx, handle, .. } = self;
+        drop(tx);
+        handle.join().map_err(|_| Error::msg("engine worker panicked"))?
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sampling
+
+/// NaN-safe argmax: NaN entries never win; ties go to the first maximum.
+/// (The old server's `x > xs[best]` got stuck on index 0 whenever
+/// `xs[0]` was NaN.)
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_val = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_val {
+            best = i;
+            best_val = x;
+        }
+    }
+    best
+}
+
+fn nan_to_neg_inf(x: f32) -> f32 {
+    if x.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        x
+    }
+}
+
+/// Sample one token id from `logits` under `p` (greedy when temperature
+/// is 0).  Deterministic given the RNG state.
+fn sample_token(logits: &[f32], p: &SamplingParams, rng: &mut Rng) -> i32 {
+    if p.temperature <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    let n = logits.len();
+    let k = if p.top_k == 0 || p.top_k > n { n } else { p.top_k };
+    let by_logit_desc = |a: &usize, b: &usize| {
+        nan_to_neg_inf(logits[*b])
+            .partial_cmp(&nan_to_neg_inf(logits[*a]))
+            .expect("NaNs mapped to -inf")
+            .then(a.cmp(b))
+    };
+    let cand: Vec<usize> = if k == n {
+        (0..n).collect()
+    } else {
+        // hot path: select the top k in O(n), sort only the k survivors
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.select_nth_unstable_by(k - 1, by_logit_desc);
+        idx.truncate(k);
+        idx.sort_unstable_by(by_logit_desc);
+        idx
+    };
+    let m = cand
+        .iter()
+        .map(|&i| nan_to_neg_inf(logits[i]))
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return argmax(logits) as i32; // degenerate logits: fall back to greedy
+    }
+    let weights: Vec<f64> = cand
+        .iter()
+        .map(|&i| (((nan_to_neg_inf(logits[i]) - m) / p.temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let u = rng.next_f64() * total;
+    let mut acc = 0.0;
+    for (&i, &w) in cand.iter().zip(&weights) {
+        acc += w;
+        if u < acc {
+            return i as i32;
+        }
+    }
+    *cand.last().expect("candidate set is non-empty") as i32
+}
+
+struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    fn new(params: SamplingParams) -> Sampler {
+        let rng = Rng::seed_from(0x5E55_1014 ^ params.seed);
+        Sampler { params, rng }
+    }
+
+    fn next(&mut self, logits: &[f32]) -> i32 {
+        sample_token(logits, &self.params, &mut self.rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker
+
+/// One active sequence's server-side state.
+struct SeqState {
+    events_tx: Sender<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+    submitted: Instant,
+    ttft: f64,
+    /// True (pre-padding) prompt length, tracked per satellite fix: the
+    /// compiled prefill pads shorter prompts to `prompt_len` with token 0
+    /// (part of the fixed-shape artifact contract); over-long prompts are
+    /// rejected at `submit` instead of silently truncated.
+    prompt_len: usize,
+    generated: Vec<i32>,
+    sampler: Sampler,
+    /// Next KV write position (starts at the padded prompt window).
+    pos: i32,
+    slot: KvSlot,
+}
+
+fn finish_reason(s: &SeqState, shapes: &ServeShapes) -> Option<FinishReason> {
+    if s.cancel.load(Ordering::Relaxed) {
+        return Some(FinishReason::Cancelled);
+    }
+    let last = *s.generated.last().expect("admitted with >= 1 token");
+    if s.sampler.params.stop_tokens.contains(&last) {
+        return Some(FinishReason::Stop);
+    }
+    if s.generated.len() >= s.sampler.params.max_tokens {
+        return Some(FinishReason::MaxTokens);
+    }
+    if s.pos as usize >= shapes.max_seq {
+        return Some(FinishReason::ContextFull);
+    }
+    None
+}
+
+fn retire_finished(
+    active: &mut BTreeMap<u64, SeqState>,
+    arena: &mut KvArena,
+    metrics: &mut Metrics,
+    shapes: &ServeShapes,
+) {
+    let done: Vec<(u64, FinishReason)> = active
+        .iter()
+        .filter_map(|(id, s)| finish_reason(s, shapes).map(|r| (*id, r)))
+        .collect();
+    for (id, finish) in done {
+        let s = active.remove(&id).expect("id came from the map");
+        arena.free(s.slot);
+        let latency = s.submitted.elapsed().as_secs_f64();
+        // Cancelled sessions are counted separately — folding an aborted
+        // generation into the latency/TTFT percentiles would skew the
+        // numbers the serving report exists to measure.
+        if finish == FinishReason::Cancelled {
+            metrics.observe_cancelled();
+        } else {
+            metrics.observe_request(latency, s.ttft, s.generated.len());
+        }
+        let _ = s.events_tx.send(TokenEvent::Done {
+            finish,
+            tokens: s.generated,
+            latency_secs: latency,
+            ttft_secs: s.ttft,
+        });
+    }
+}
+
+/// Admit one request: prefill, adopt the cache pair into the arena, emit
+/// the `First` event.
+fn admit(
+    bundle: &ModelBundle,
+    params: &[HostTensor],
+    arena: &mut KvArena,
+    inc: Incoming,
+) -> Result<SeqState> {
+    let shapes = bundle.shapes;
+    let true_len = inc.prompt.len();
+    debug_assert!(true_len <= shapes.prompt_len, "submit() validates the prompt window");
+    // Pad the prompt to the compiled window (token 0); see `prompt_len`.
+    let mut prompt = inc.prompt;
+    prompt.resize(shapes.prompt_len, 0);
+    let tokens = HostTensor::from_i32(&[1, shapes.prompt_len], &prompt);
+    let mut inputs: Vec<HostTensor> = params.to_vec();
+    inputs.push(tokens);
+    let out = bundle.prefill.run(&inputs)?;
+    let mut sampler = Sampler::new(inc.sampling);
+    let first = sampler.next(&out[0].to_f32_vec());
+    let ttft = inc.submitted.elapsed().as_secs_f64();
+    let slot = arena.adopt(out[1].to_f32_vec(), out[2].to_f32_vec())?;
+    let _ = inc.events_tx.send(TokenEvent::First { token: first, ttft_secs: ttft });
+    Ok(SeqState {
+        events_tx: inc.events_tx,
+        cancel: inc.cancel,
+        submitted: inc.submitted,
+        ttft,
+        prompt_len: true_len,
+        generated: vec![first],
+        sampler,
+        pos: shapes.prompt_len as i32,
+        slot,
+    })
+}
+
+fn worker(
+    rx: Receiver<Incoming>,
+    bundle: ModelBundle,
+    params: Vec<HostTensor>,
+) -> Result<Metrics> {
+    let shapes = bundle.shapes;
+    let mut arena = KvArena::new(shapes.geometry());
+    let mut metrics = Metrics::new();
+    let mut active: BTreeMap<u64, SeqState> = BTreeMap::new();
+    let mut next_id = 0u64;
+    let mut closed = false;
+
+    while !closed || !active.is_empty() {
+        // Admission: drain the queue (block only when idle).
+        loop {
+            let msg = if active.is_empty() && !closed {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        closed = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        closed = true;
+                        None
+                    }
+                }
+            };
+            let Some(inc) = msg else { break };
+            if inc.cancel.load(Ordering::Relaxed) {
+                // cancelled before prefill: don't spend the compute
+                metrics.observe_cancelled();
+                let _ = inc.events_tx.send(TokenEvent::Done {
+                    finish: FinishReason::Cancelled,
+                    tokens: Vec::new(),
+                    latency_secs: inc.submitted.elapsed().as_secs_f64(),
+                    ttft_secs: 0.0,
+                });
+                continue;
+            }
+            // Backend/module failures here are deliberately engine-fatal
+            // (matching the old worker): submit() has already validated
+            // everything client-controllable (prompt window, token range),
+            // so an error at prefill or decode means the backend itself is
+            // broken and the engine should fail loudly, not limp on.
+            let state = admit(&bundle, &params, &mut arena, inc)?;
+            metrics.observe_prompt(state.prompt_len, shapes.prompt_len);
+            active.insert(next_id, state);
+            next_id += 1;
+        }
+
+        // Retire sessions that finished at prefill (max_tokens 1, stop on
+        // the first token) or were cancelled — before spending decode
+        // compute on them.
+        retire_finished(&mut active, &mut arena, &mut metrics, &shapes);
+        if active.is_empty() {
+            continue;
+        }
+
+        // One decode step over the active set, grouped by the discovered
+        // buckets: chunk by the largest bucket, pick the smallest bucket
+        // that fits each chunk.
+        let ids: Vec<u64> = active.keys().cloned().collect();
+        for group in ids.chunks(bundle.buckets.max()) {
+            let bucket = bundle.buckets.pick(group.len());
+            let exe = bundle.decode_for(bucket)?;
+            let slots: Vec<KvSlot> = group.iter().map(|id| active[id].slot).collect();
+            let mut tok = Vec::with_capacity(group.len());
+            let mut pos = Vec::with_capacity(group.len());
+            for id in group {
+                let s = &active[id];
+                tok.push(*s.generated.last().expect("admitted with >= 1 token"));
+                pos.push(s.pos);
+            }
+            let logits = {
+                let mut view = arena.batch_view(&slots, bucket);
+                exe.decode_step(&params, &mut view, &tok, &pos)?
+            };
+            metrics.observe_decode_step(group.len());
+            for (bi, id) in group.iter().enumerate() {
+                let s = active.get_mut(id).expect("id came from the map");
+                let row = &logits[bi * shapes.vocab..(bi + 1) * shapes.vocab];
+                let t = s.sampler.next(row);
+                s.generated.push(t);
+                s.pos += 1;
+                let _ = s
+                    .events_tx
+                    .send(TokenEvent::Delta { index: s.generated.len() - 1, token: t });
+            }
+        }
+
+        retire_finished(&mut active, &mut arena, &mut metrics, &shapes);
+    }
+    metrics.set_kv_copies(arena.stats());
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max_and_survives_nan() {
+        assert_eq!(argmax(&[0.1, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+        // NaN at the front no longer wedges the result at index 0
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let logits = [0.5, 2.0, -1.0, 1.9];
+        let mut rng = Rng::seed_from(1);
+        let p = SamplingParams::greedy(4);
+        assert_eq!(p.max_tokens, 4);
+        for _ in 0..5 {
+            assert_eq!(sample_token(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_is_seeded_and_in_top_k() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let p = SamplingParams {
+            max_tokens: 8,
+            temperature: 0.9,
+            top_k: 4,
+            seed: 11,
+            stop_tokens: vec![],
+        };
+        // top-4 indices by logit
+        let mut idx: Vec<usize> = (0..32).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let top4 = &idx[..4];
+        let draw = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::seed_from(seed);
+            (0..64).map(|_| sample_token(&logits, &p, &mut rng)).collect()
+        };
+        let a = draw(7);
+        assert_eq!(a, draw(7), "same RNG seed must reproduce the draw sequence");
+        assert!(a.iter().all(|t| top4.contains(&(*t as usize))), "draws escaped top-k");
+        // with 64 draws at temperature 0.9 over 4 candidates, more than one
+        // candidate appears (the distribution is not degenerate)
+        assert!(a.iter().any(|&t| t != a[0]), "temperature sampling collapsed to one token");
+    }
+
+    #[test]
+    fn degenerate_logits_fall_back_to_greedy() {
+        let mut rng = Rng::seed_from(3);
+        let p = SamplingParams { temperature: 0.7, ..Default::default() };
+        let all_neg_inf = [f32::NEG_INFINITY; 4];
+        assert_eq!(sample_token(&all_neg_inf, &p, &mut rng), 0);
+        let with_nan = [f32::NAN, f32::NAN, 5.0, f32::NAN];
+        assert_eq!(sample_token(&with_nan, &p, &mut rng), 2);
+    }
+
+    #[test]
+    fn submit_fails_fast_when_worker_is_gone() {
+        // Construct the dead-worker condition directly (private fields):
+        // the queue receiver is dropped, so send must fail with Closed —
+        // the old Server dropped this error and left clients blocked
+        // forever on a response that could never arrive.
+        let (tx, rx) = channel::<Incoming>();
+        drop(rx);
+        let shapes = ServeShapes {
+            n_layer: 1,
+            n_kv_head: 1,
+            max_seq: 8,
+            d_head: 2,
+            vocab: 16,
+            prompt_len: 4,
+        };
+        let handle = std::thread::spawn(|| -> Result<Metrics> { Ok(Metrics::new()) });
+        let engine = Engine { tx, shapes, handle };
+        let err = engine.submit(vec![1, 2], SamplingParams::greedy(1)).unwrap_err();
+        assert_eq!(err, EngineError::Closed);
+        // a session created against a dead engine reports Closed to
+        // pollers instead of an indistinguishable "no event yet"
+        let (events_tx, events) = channel();
+        drop(events_tx);
+        let session =
+            Session { events, cancel: Arc::new(AtomicBool::new(false)), cancel_on_drop: true };
+        assert_eq!(session.try_recv(), Err(EngineError::Closed));
+        assert!(session.wait().is_err());
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn engine_error_displays_actionable_messages() {
+        let e = EngineError::PromptTooLong { len: 20, max: 16 };
+        let s = format!("{e}");
+        assert!(s.contains("20") && s.contains("16"), "{s}");
+        assert!(format!("{}", EngineError::Closed).contains("closed"));
+        // converts into the crate error for `?` at CLI level
+        let ce: Error = e.into();
+        assert!(format!("{ce}").contains("prompt"));
+    }
+}

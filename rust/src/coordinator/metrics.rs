@@ -1,8 +1,11 @@
 //! Serving metrics: request latency distribution, time-to-first-token,
-//! token throughput.  Printed by `repro serve` and the serving example.
+//! token throughput, and the engine's decode-step/KV-copy accounting
+//! (`kv_*` must be zero on the native in-place path — DESIGN.md §8).
+//! Printed by `repro serve` and the serving example.
 
 use std::time::Instant;
 
+use crate::runtime::CopyStats;
 use crate::util::stats::{percentile, fmt_duration};
 
 #[derive(Debug)]
@@ -11,17 +14,94 @@ pub struct Metrics {
     latencies: Vec<f64>,
     ttfts: Vec<f64>,
     tokens: u64,
+    decode_steps: u64,
+    decode_rows: u64,
+    cancelled: u64,
+    prompt_tokens: u64,
+    prompt_pad_tokens: u64,
+    kv: CopyStats,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics { started: Instant::now(), latencies: Vec::new(), ttfts: Vec::new(), tokens: 0 }
+        Metrics {
+            started: Instant::now(),
+            latencies: Vec::new(),
+            ttfts: Vec::new(),
+            tokens: 0,
+            decode_steps: 0,
+            decode_rows: 0,
+            cancelled: 0,
+            prompt_tokens: 0,
+            prompt_pad_tokens: 0,
+            kv: CopyStats::default(),
+        }
     }
 
     pub fn observe_request(&mut self, latency: f64, ttft: f64, n_tokens: usize) {
         self.latencies.push(latency);
         self.ttfts.push(ttft);
         self.tokens += n_tokens as u64;
+    }
+
+    /// One batched decode step over `rows` real sequences.
+    pub fn observe_decode_step(&mut self, rows: usize) {
+        self.decode_steps += 1;
+        self.decode_rows += rows as u64;
+    }
+
+    /// Admission accounting: `true_len` is the client's prompt length,
+    /// `padded_len` the compiled window it was padded to (satellite fix:
+    /// true lengths are tracked, never silently truncated).
+    pub fn observe_prompt(&mut self, true_len: usize, padded_len: usize) {
+        self.prompt_tokens += true_len as u64;
+        self.prompt_pad_tokens += (padded_len - true_len.min(padded_len)) as u64;
+    }
+
+    /// Total true prompt tokens admitted.
+    pub fn prompt_tokens(&self) -> u64 {
+        self.prompt_tokens
+    }
+
+    /// Pad tokens spent filling prompts to the compiled window.
+    pub fn prompt_pad_tokens(&self) -> u64 {
+        self.prompt_pad_tokens
+    }
+
+    pub fn observe_cancelled(&mut self) {
+        self.cancelled += 1;
+    }
+
+    /// Install the arena's copy accounting at worker shutdown.
+    pub fn set_kv_copies(&mut self, kv: CopyStats) {
+        self.kv = kv;
+    }
+
+    pub fn decode_steps(&self) -> u64 {
+        self.decode_steps
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled
+    }
+
+    /// Bytes assembled into batch cache tensors (compat path only).
+    pub fn kv_gather_bytes(&self) -> u64 {
+        self.kv.gather_bytes
+    }
+
+    /// Bytes scattered back to per-sequence slots (compat path only).
+    pub fn kv_scatter_bytes(&self) -> u64 {
+        self.kv.scatter_bytes
+    }
+
+    /// KV bytes moved per decode step — 0 on the native in-place path.
+    pub fn kv_bytes_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.kv.total_bytes() as f64 / self.decode_steps as f64
+        }
     }
 
     pub fn requests(&self) -> usize {
@@ -55,13 +135,28 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} throughput={:.1} tok/s  \
-             latency p50={} p95={}  ttft p50={}",
+             latency p50={} p95={}  ttft p50={}\n\
+             decode steps={} (rows/step {:.2})  cancelled={}  \
+             prompt tokens={} (+{} pad)  \
+             kv moved/step={:.0} B (gather {} B, scatter {} B)",
             self.requests(),
             self.tokens(),
             self.tokens_per_sec(),
             fmt_duration(self.latency_percentile(0.5)),
             fmt_duration(self.latency_percentile(0.95)),
             fmt_duration(self.ttft_percentile(0.5)),
+            self.decode_steps,
+            if self.decode_steps == 0 {
+                0.0
+            } else {
+                self.decode_rows as f64 / self.decode_steps as f64
+            },
+            self.cancelled,
+            self.prompt_tokens,
+            self.prompt_pad_tokens,
+            self.kv_bytes_per_step(),
+            self.kv.gather_bytes,
+            self.kv.scatter_bytes,
         )
     }
 }
@@ -87,5 +182,33 @@ mod tests {
         assert!((m.latency_percentile(0.5) - 0.0505).abs() < 1e-3);
         assert!(m.latency_percentile(0.95) > m.latency_percentile(0.5));
         assert!(m.report().contains("requests=100"));
+    }
+
+    #[test]
+    fn kv_copy_accounting_per_step() {
+        let mut m = Metrics::new();
+        assert_eq!(m.kv_bytes_per_step(), 0.0);
+        for _ in 0..4 {
+            m.observe_decode_step(3);
+        }
+        m.observe_cancelled();
+        m.observe_prompt(12, 16);
+        m.observe_prompt(16, 16);
+        assert_eq!(m.prompt_tokens(), 28);
+        assert_eq!(m.prompt_pad_tokens(), 4);
+        m.set_kv_copies(CopyStats {
+            gathers: 4,
+            scatters: 4,
+            gather_bytes: 4000,
+            scatter_bytes: 1000,
+        });
+        assert_eq!(m.decode_steps(), 4);
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(m.kv_gather_bytes(), 4000);
+        assert_eq!(m.kv_scatter_bytes(), 1000);
+        assert!((m.kv_bytes_per_step() - 1250.0).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("decode steps=4"), "{r}");
+        assert!(r.contains("cancelled=1"), "{r}");
     }
 }

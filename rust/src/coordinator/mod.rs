@@ -1,8 +1,12 @@
-//! Serving coordinator: dynamic batcher policy, mini-vLLM decode server,
-//! and serving metrics.  The paper's kernel slots into serving as the
-//! prefill compute; the coordinator proves the artifacts compose into a
-//! request-driven system with Python off the request path.
+//! Serving coordinator: the session-based serving engine (typed
+//! `Engine`/`Session` API with streamed tokens and a zero-copy KV arena —
+//! DESIGN.md §8), the dynamic batcher policy, serving metrics, and the
+//! deprecated `Server` shim kept for one release.  The paper's kernel
+//! slots into serving as the prefill/decode compute; the coordinator
+//! proves the artifacts compose into a request-driven system with Python
+//! off the request path.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod server;

@@ -1,24 +1,31 @@
-//! The serving coordinator: a mini vLLM-style router that owns the AOT
-//! prefill/decode executables and serves generate() requests over channels
-//! with dynamic batching and per-sequence KV-cache state management.
+//! DEPRECATED compatibility shim: the pre-engine `Server` API, kept for
+//! one release as a thin layer over [`coordinator::engine::Engine`]
+//! (DESIGN.md §8).  New code should use `Engine`/`Session` directly —
+//! they add streamed `TokenEvent`s, typed sampling, cancellation, and the
+//! zero-copy KV arena.
 //!
-//! Topology: clients -> mpsc submit queue -> worker thread
-//!   worker: admit (prefill, bucket 1) -> decode loop (bucket 1 or 4,
-//!           padding with replicated rows when the active set is between
-//!           bucket sizes) -> per-request response channels.
+//! Behavior changes versus the original `Server`:
 //!
-//! Python never runs here: prefill/decode are compiled HLO artifacts.
+//! - `submit` now returns `Result`: a dead worker surfaces as a typed
+//!   `EngineError::Closed` immediately instead of leaving the client
+//!   blocked forever on a response channel that will never fire, and an
+//!   over-long prompt is rejected (`EngineError::PromptTooLong`) instead
+//!   of being silently truncated to the compiled window.
+//! - greedy decode output is byte-identical to the old worker: the shim
+//!   maps `GenRequest { prompt, n_new }` onto a greedy `Session` with
+//!   `max_tokens = n_new`.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::path::PathBuf;
 
-use crate::util::error::{Context, Error, Result};
+use crate::util::error::Result;
 
-use crate::runtime::{BackendKind, Executable, Runtime};
-use crate::util::tensorio::{DType, HostTensor};
+use crate::runtime::BackendKind;
 
+// Back-compat re-export: `ServeShapes` moved to the runtime's typed
+// bundle discovery (`runtime::bundle`).
+pub use crate::runtime::bundle::ServeShapes;
+
+use super::engine::{Engine, SamplingParams, Session};
 use super::metrics::Metrics;
 
 /// A generation request: prompt tokens + number of tokens to generate.
@@ -38,355 +45,63 @@ pub struct GenResponse {
     pub ttft: f64,
 }
 
-struct Inflight {
-    req: GenRequest,
-    resp_tx: Sender<GenResponse>,
-    submitted: Instant,
+/// Blocking handle for one shimmed request (replaces the old raw
+/// `Receiver<GenResponse>`).
+pub struct GenHandle {
+    session: Session,
 }
 
-/// One active sequence's server-side state.
-struct SeqState {
-    resp_tx: Sender<GenResponse>,
-    submitted: Instant,
-    ttft: f64,
-    generated: Vec<i32>,
-    n_new: usize,
-    pos: i32,
-    /// KV cache for this sequence: per (layer-major) f32 slab of shape
-    /// (L, 1, Hkv, S, dh) flattened.
-    k_cache: Vec<f32>,
-    v_cache: Vec<f32>,
-}
-
-/// Shapes of the serving model, read from artifact metadata.
-#[derive(Debug, Clone, Copy)]
-pub struct ServeShapes {
-    pub n_layer: usize,
-    pub n_kv_head: usize,
-    pub max_seq: usize,
-    pub d_head: usize,
-    pub vocab: usize,
-    pub prompt_len: usize,
-}
-
-impl ServeShapes {
-    pub fn cache_elems_per_seq(&self) -> usize {
-        self.n_layer * self.n_kv_head * self.max_seq * self.d_head
+impl GenHandle {
+    /// Block until the request completes, draining the streamed events.
+    pub fn recv(&self) -> Result<GenResponse> {
+        let c = self.session.drain()?;
+        Ok(GenResponse { tokens: c.tokens, latency: c.latency, ttft: c.ttft })
     }
 }
 
+#[deprecated(
+    note = "superseded by coordinator::engine::Engine (typed sessions, streamed \
+            tokens, sampling params, zero-copy KV arena); this shim will be \
+            removed next release"
+)]
 pub struct Server {
-    tx: Sender<Inflight>,
-    handle: Option<JoinHandle<Result<Metrics>>>,
+    engine: Engine,
 }
 
+#[allow(deprecated)]
 impl Server {
-    /// Start the worker on the default backend.  `model` is the artifact
-    /// prefix ("tiny").
-    pub fn start(artifact_dir: std::path::PathBuf, model: &str) -> Result<Server> {
+    /// Start the worker on the default backend.  `model` is the manifest
+    /// model name ("tiny").
+    pub fn start(artifact_dir: PathBuf, model: &str) -> Result<Server> {
         Self::start_with(artifact_dir, model, BackendKind::Auto)
     }
 
-    /// Start the worker on an explicit backend (`BackendKind::Native` needs
-    /// no artifacts on disk).
-    ///
-    /// The backend and executables are created INSIDE the worker thread:
-    /// the `xla` crate's handles are `!Send` (Rc internals), so the worker
-    /// owns the whole runtime and talks to clients only through channels —
-    /// which is the right shape for a serving leader anyway.
+    /// Start the worker on an explicit backend (`BackendKind::Native`
+    /// needs no artifacts on disk).
     pub fn start_with(
-        artifact_dir: std::path::PathBuf,
+        artifact_dir: PathBuf,
         model: &str,
         backend: BackendKind,
     ) -> Result<Server> {
-        let model = model.to_string();
-        let (tx, rx) = channel::<Inflight>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let handle = std::thread::spawn(move || {
-            let setup = || -> Result<_> {
-                let rt = Runtime::with_backend(&artifact_dir, backend)?;
-                let prefill1 = rt.load(&format!("{model}_prefill_b1"))?;
-                let decode1 = rt.load(&format!("{model}_decode_b1"))?;
-                let decode4 = rt.load(&format!("{model}_decode_b4"))?;
-                let init = rt.load(&format!("{model}_init"))?;
-                let spec = &prefill1.spec;
-                let shapes = ServeShapes {
-                    n_layer: spec.meta_i64("n_layer").context("n_layer")? as usize,
-                    n_kv_head: spec.meta_i64("n_kv_head").context("n_kv_head")? as usize,
-                    max_seq: spec.meta_i64("max_seq").context("max_seq")? as usize,
-                    d_head: (spec.meta_i64("d_model").context("d_model")?
-                        / spec.meta_i64("n_head").context("n_head")?) as usize,
-                    vocab: spec.meta_i64("vocab_size").context("vocab")? as usize,
-                    prompt_len: spec.meta_i64("prompt_len").context("prompt_len")?
-                        as usize,
-                };
-                // Materialize the weights once via the init artifact (seed
-                // 0): the flat param list is shared by prefill and decode.
-                let params = init.run(&[HostTensor::scalar_u32(0)])?;
-                Ok((rt, prefill1, decode1, decode4, params, shapes))
-            };
-            match setup() {
-                Ok((_rt, prefill1, decode1, decode4, params, shapes)) => {
-                    let _ = ready_tx.send(Ok(()));
-                    worker(rx, prefill1, decode1, decode4, params, shapes)
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    Ok(Metrics::new())
-                }
-            }
-        });
-        ready_rx
-            .recv()
-            .map_err(|_| Error::msg("server worker died during setup"))??;
-        Ok(Server { tx, handle: Some(handle) })
+        Ok(Server { engine: Engine::start(artifact_dir, model, backend)? })
     }
 
-    /// Submit a request; returns the response channel.
-    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
-        let (resp_tx, resp_rx) = channel();
-        let _ = self.tx.send(Inflight { req, resp_tx, submitted: Instant::now() });
-        resp_rx
+    /// Submit a request; returns a blocking response handle, or a typed
+    /// error if the prompt is invalid or the engine has closed.
+    ///
+    /// The session is detached so dropping the handle does NOT cancel the
+    /// request — the old `Server` completed (and counted) fire-and-forget
+    /// submissions, and the shim preserves that.
+    pub fn submit(&self, req: GenRequest) -> Result<GenHandle> {
+        let mut session = self
+            .engine
+            .submit(req.prompt, SamplingParams::greedy(req.n_new))?;
+        session.detach();
+        Ok(GenHandle { session })
     }
 
     /// Close the queue and wait for the worker; returns serving metrics.
-    pub fn shutdown(mut self) -> Result<Metrics> {
-        drop(self.tx);
-        self.handle
-            .take()
-            .unwrap()
-            .join()
-            .map_err(|_| Error::msg("server worker panicked"))?
-    }
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker(
-    rx: Receiver<Inflight>,
-    prefill1: std::sync::Arc<Executable>,
-    decode1: std::sync::Arc<Executable>,
-    decode4: std::sync::Arc<Executable>,
-    params: Vec<HostTensor>,
-    shapes: ServeShapes,
-) -> Result<Metrics> {
-    let mut metrics = Metrics::new();
-    let mut active: BTreeMap<u64, SeqState> = BTreeMap::new();
-    let mut next_id = 0u64;
-    let mut closed = false;
-
-    while !closed || !active.is_empty() {
-        // Admission: drain the queue (block only when idle).
-        loop {
-            let msg = if active.is_empty() && !closed {
-                match rx.recv() {
-                    Ok(m) => Some(m),
-                    Err(_) => {
-                        closed = true;
-                        None
-                    }
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => Some(m),
-                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                        closed = true;
-                        None
-                    }
-                }
-            };
-            let Some(inflight) = msg else { break };
-            let state = prefill(&prefill1, &params, &shapes, inflight)?;
-            active.insert(next_id, state);
-            next_id += 1;
-        }
-        if active.is_empty() {
-            continue;
-        }
-
-        // Decode step for the whole active set, in bucket-sized groups.
-        let ids: Vec<u64> = active.keys().cloned().collect();
-        for group in ids.chunks(4) {
-            let exe = if group.len() == 1 { &decode1 } else { &decode4 };
-            decode_group(exe, &params, &shapes, group, &mut active)?;
-        }
-
-        // Retire finished sequences.
-        let done: Vec<u64> = active
-            .iter()
-            .filter(|(_, s)| s.generated.len() >= s.n_new)
-            .map(|(id, _)| *id)
-            .collect();
-        for id in done {
-            let s = active.remove(&id).unwrap();
-            let latency = s.submitted.elapsed().as_secs_f64();
-            metrics.observe_request(latency, s.ttft, s.generated.len());
-            let _ = s.resp_tx.send(GenResponse {
-                tokens: s.generated,
-                latency,
-                ttft: s.ttft,
-            });
-        }
-    }
-    Ok(metrics)
-}
-
-fn prefill(
-    exe: &Executable,
-    params: &[HostTensor],
-    shapes: &ServeShapes,
-    inflight: Inflight,
-) -> Result<SeqState> {
-    // Pad/trim the prompt to the compiled prompt length.
-    let mut prompt = inflight.req.prompt.clone();
-    prompt.resize(shapes.prompt_len, 0);
-    let tokens = HostTensor::from_i32(&[1, shapes.prompt_len], &prompt);
-    let mut inputs: Vec<HostTensor> = params.to_vec();
-    inputs.push(tokens);
-    let out = exe.run(&inputs)?;
-    let logits = out[0].to_f32_vec();
-    let first = argmax(&logits) as i32;
-    let ttft = inflight.submitted.elapsed().as_secs_f64();
-    Ok(SeqState {
-        resp_tx: inflight.resp_tx,
-        submitted: inflight.submitted,
-        ttft,
-        generated: vec![first],
-        n_new: inflight.req.n_new.max(1),
-        pos: shapes.prompt_len as i32,
-        k_cache: out[1].to_f32_vec(),
-        v_cache: out[2].to_f32_vec(),
-    })
-}
-
-/// Assemble a batch-`b` cache tensor from per-sequence slabs.
-/// Layout: (L, B, H, S, dh); per-sequence slab is (L, 1, H, S, dh).
-fn assemble_cache(
-    seqs: &[&SeqState],
-    pick: fn(&SeqState) -> &Vec<f32>,
-    shapes: &ServeShapes,
-    b: usize,
-) -> HostTensor {
-    let per_layer = shapes.n_kv_head * shapes.max_seq * shapes.d_head;
-    let mut data = vec![0.0f32; shapes.n_layer * b * per_layer];
-    for l in 0..shapes.n_layer {
-        for (bi, s) in seqs.iter().enumerate() {
-            let src = &pick(s)[l * per_layer..(l + 1) * per_layer];
-            let dst = (l * b + bi) * per_layer;
-            data[dst..dst + per_layer].copy_from_slice(src);
-        }
-        // padding rows replicate sequence 0 (results discarded)
-        for bi in seqs.len()..b {
-            let src = &pick(seqs[0])[l * per_layer..(l + 1) * per_layer];
-            let dst = (l * b + bi) * per_layer;
-            data[dst..dst + per_layer].copy_from_slice(src);
-        }
-    }
-    HostTensor::from_f32(
-        &[shapes.n_layer, b, shapes.n_kv_head, shapes.max_seq, shapes.d_head],
-        &data,
-    )
-}
-
-fn decode_group(
-    exe: &Executable,
-    params: &[HostTensor],
-    shapes: &ServeShapes,
-    group: &[u64],
-    active: &mut BTreeMap<u64, SeqState>,
-) -> Result<()> {
-    let b = exe.spec.meta_i64("batch").unwrap_or(1) as usize;
-    let seqs: Vec<&SeqState> = group.iter().map(|id| &active[id]).collect();
-    let k = assemble_cache(&seqs, |s| &s.k_cache, shapes, b);
-    let v = assemble_cache(&seqs, |s| &s.v_cache, shapes, b);
-    let mut tok = vec![0i32; b];
-    let mut pos = vec![0i32; b];
-    for (i, s) in seqs.iter().enumerate() {
-        tok[i] = *s.generated.last().unwrap();
-        pos[i] = s.pos;
-    }
-    for i in seqs.len()..b {
-        tok[i] = tok[0];
-        pos[i] = pos[0];
-    }
-    let mut inputs: Vec<HostTensor> = params.to_vec();
-    inputs.push(k);
-    inputs.push(v);
-    inputs.push(HostTensor::from_i32(&[b], &tok));
-    inputs.push(HostTensor::from_i32(&[b], &pos));
-    let out = exe.run(&inputs)?;
-
-    let logits = out[0].to_f32_vec();
-    let per_layer = shapes.n_kv_head * shapes.max_seq * shapes.d_head;
-    let k_new = out[1].to_f32_vec();
-    let v_new = out[2].to_f32_vec();
-    for (bi, id) in group.iter().enumerate() {
-        let s = active.get_mut(id).unwrap();
-        let row = &logits[bi * shapes.vocab..(bi + 1) * shapes.vocab];
-        s.generated.push(argmax(row) as i32);
-        s.pos += 1;
-        // scatter the updated cache rows back to the per-sequence slabs
-        for l in 0..shapes.n_layer {
-            let src = (l * b + bi) * per_layer;
-            let dst = l * per_layer;
-            s.k_cache[dst..dst + per_layer]
-                .copy_from_slice(&k_new[src..src + per_layer]);
-            s.v_cache[dst..dst + per_layer]
-                .copy_from_slice(&v_new[src..src + per_layer]);
-        }
-        debug_assert_eq!(s.k_cache.len(), shapes.cache_elems_per_seq());
-    }
-    let _ = DType::F32; // (keep import used in all cfg combinations)
-    Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_picks_first_max() {
-        assert_eq!(argmax(&[0.1, 3.0, 3.0, -1.0]), 1);
-        assert_eq!(argmax(&[-5.0]), 0);
-    }
-
-    #[test]
-    fn cache_assembly_roundtrip_layout() {
-        let shapes = ServeShapes {
-            n_layer: 2, n_kv_head: 1, max_seq: 2, d_head: 2,
-            vocab: 4, prompt_len: 2,
-        };
-        let per_layer = 1 * 2 * 2;
-        let mk = |base: f32| SeqState {
-            resp_tx: channel().0,
-            submitted: Instant::now(),
-            ttft: 0.0,
-            generated: vec![1],
-            n_new: 1,
-            pos: 0,
-            k_cache: (0..2 * per_layer).map(|i| base + i as f32).collect(),
-            v_cache: vec![0.0; 2 * per_layer],
-        };
-        let s0 = mk(0.0);
-        let s1 = mk(100.0);
-        let t = assemble_cache(&[&s0, &s1], |s| &s.k_cache, &shapes, 4);
-        assert_eq!(t.dims, vec![2, 4, 1, 2, 2]);
-        let data = t.to_f32_vec();
-        // layer 0: [seq0 layer0][seq1 layer0][pad=seq0][pad=seq0]
-        assert_eq!(&data[0..4], &[0.0, 1.0, 2.0, 3.0]);
-        assert_eq!(&data[4..8], &[100.0, 101.0, 102.0, 103.0]);
-        assert_eq!(&data[8..12], &[0.0, 1.0, 2.0, 3.0]);
-        // layer 1 of seq1 starts at (1*4 + 1)*4
-        assert_eq!(&data[20..24], &[104.0, 105.0, 106.0, 107.0]);
+    pub fn shutdown(self) -> Result<Metrics> {
+        self.engine.shutdown()
     }
 }

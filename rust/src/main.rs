@@ -6,7 +6,8 @@
 //!   simulate  section 3.1/3.3 ablation reports (rescale, split-K, occupancy)
 //!   verify    execute every artifact with golden vectors and compare
 //!   train     run the AOT train_step loop on the synthetic corpus
-//!   serve     run the batched decode server on a synthetic workload
+//!   serve     run the session-based serving engine on a synthetic
+//!             workload (--stream, --temperature, --top-k)
 //!   attn-exec run the native flash-attention kernels (GFLOP/s + parity)
 //!   inspect   list artifacts in the manifest
 //!
@@ -26,7 +27,7 @@ use fa2::attn::exec::{parallel, reference, AttnDims, FlashParams};
 use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
 use fa2::bench::{figures, table1};
 use fa2::config::RunConfig;
-use fa2::coordinator::server::{GenRequest, Server};
+use fa2::coordinator::engine::{Completion, Engine, SamplingParams, TokenEvent};
 use fa2::gpusim::{simulate, Device};
 use fa2::runtime::{BackendKind, Runtime};
 use fa2::train::corpus::Corpus;
@@ -44,7 +45,7 @@ fn usage() -> ! {
            train     [--config FILE] [--model tiny|small] [--steps N]\n            \
                      [--variant ''|_refattn] [--loss-csv FILE] [--backend B]\n  \
            serve     [--config FILE] [--requests N] [--tokens N] [--rate R]\n            \
-                     [--backend B]\n  \
+                     [--backend B] [--stream] [--temperature T] [--top-k K]\n  \
            attn-exec [--batch B] [--heads H] [--seqlen N] [--head-dim D]\n            \
                      [--causal 0|1] [--threads T] [--check 0|1]\n  \
            inspect   [--artifact-dir DIR] [--backend B]\n\
@@ -53,7 +54,8 @@ fn usage() -> ! {
     std::process::exit(2)
 }
 
-/// Tiny flag parser: --key value pairs after the subcommand.
+/// Tiny flag parser: --key value pairs after the subcommand; a flag
+/// followed by another flag (or nothing) is valueless (e.g. `--stream`).
 struct Args {
     pairs: Vec<(String, String)>,
 }
@@ -66,9 +68,12 @@ impl Args {
             let k = argv[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
-            let v = argv.get(i + 1).cloned().unwrap_or_default();
+            let (v, step) = match argv.get(i + 1) {
+                Some(next) if !next.starts_with("--") => (next.clone(), 2),
+                _ => (String::new(), 1),
+            };
             pairs.push((k.to_string(), v));
-            i += 2;
+            i += step;
         }
         Ok(Args { pairs })
     }
@@ -350,37 +355,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(r) = args.get("rate") {
         cfg.arrival_rate = r.parse().context("--rate")?;
     }
+    if let Some(t) = args.get("temperature") {
+        cfg.temperature = t.parse().context("--temperature")?;
+    }
+    if let Some(k) = args.get_usize("top-k")? {
+        cfg.top_k = k;
+    }
+    if args.get("stream").is_some() {
+        cfg.stream = true;
+    }
     let backend = BackendKind::from_flag(args.get("backend").unwrap_or(&cfg.backend))?;
-    let server = Server::start_with(
+    let engine = Engine::start(
         std::path::PathBuf::from(args.get("artifact-dir").unwrap_or("artifacts")),
         &cfg.model,
         backend,
     )?;
+    let shapes = engine.shapes();
+    println!(
+        "engine up: model {} (prompt window {}, max_seq {}, vocab {})",
+        cfg.model, shapes.prompt_len, shapes.max_seq, shapes.vocab
+    );
     let mut rng = Rng::seed_from(cfg.seed);
     let mut corpus = Corpus::new(512, cfg.seed);
-    let mut rxs = Vec::new();
-    for _ in 0..cfg.num_requests {
+    let mut sessions = Vec::new();
+    for i in 0..cfg.num_requests {
         let prompt = corpus.next_batch(1, 16);
-        rxs.push(server.submit(GenRequest { prompt, n_new: cfg.tokens_per_request }));
+        let sampling = SamplingParams {
+            max_tokens: cfg.tokens_per_request,
+            temperature: cfg.temperature,
+            top_k: cfg.top_k,
+            seed: cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
+            stop_tokens: Vec::new(),
+        };
+        sessions.push(engine.submit(prompt, sampling)?);
         if cfg.arrival_rate > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(
                 rng.exponential(cfg.arrival_rate),
             ));
         }
     }
-    for (i, rx) in rxs.iter().enumerate() {
-        let resp = rx.recv().context("server dropped response")?;
+    for (i, session) in sessions.into_iter().enumerate() {
+        let comp: Completion = if cfg.stream && i == 0 {
+            // stream the first session's tokens as they are generated
+            use std::io::Write;
+            print!("session 0 stream:");
+            loop {
+                match session.recv() {
+                    Some(TokenEvent::First { token, ttft_secs }) => {
+                        print!(" {token} (ttft {:.1} ms)", ttft_secs * 1e3);
+                        std::io::stdout().flush().ok();
+                    }
+                    Some(TokenEvent::Delta { token, .. }) => {
+                        print!(" {token}");
+                        std::io::stdout().flush().ok();
+                    }
+                    Some(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs }) => {
+                        println!("  [{finish:?}]");
+                        break Completion {
+                            tokens,
+                            finish,
+                            latency: latency_secs,
+                            ttft: ttft_secs,
+                        };
+                    }
+                    None => bail!("engine closed mid-stream"),
+                }
+            }
+        } else {
+            session.wait()?
+        };
         if i < 3 {
             println!(
-                "req {i}: {} tokens, latency {:.1} ms, ttft {:.1} ms: {:?}",
-                resp.tokens.len(),
-                resp.latency * 1e3,
-                resp.ttft * 1e3,
-                &resp.tokens[..resp.tokens.len().min(8)]
+                "req {i}: {} tokens, latency {:.1} ms, ttft {:.1} ms, {:?}: {:?}",
+                comp.tokens.len(),
+                comp.latency * 1e3,
+                comp.ttft * 1e3,
+                comp.finish,
+                &comp.tokens[..comp.tokens.len().min(8)]
             );
         }
     }
-    let metrics = server.shutdown()?;
+    let metrics = engine.shutdown()?;
     println!("{}", metrics.report());
     Ok(())
 }

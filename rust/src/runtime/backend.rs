@@ -12,6 +12,7 @@
 
 use crate::bail;
 use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::kv::KvBatchView;
 use crate::util::error::Result;
 use crate::util::tensorio::HostTensor;
 
@@ -51,6 +52,44 @@ impl BackendKind {
 /// One loaded executable.
 pub trait Module {
     fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)>;
+
+    /// One batched decode step over the KV arena (serving hot path).
+    ///
+    /// `tok`/`pos` carry one entry per *real* row (`view.rows()`); the
+    /// returned logits hold at least `view.rows() * vocab` values with row
+    /// `i` at `i * vocab`.
+    ///
+    /// The default is the compatibility path for compiled-artifact
+    /// backends: gather the slots into the (L, B, H, S, dh) batch cache
+    /// pair the artifact signature expects (padding rows replicate row 0),
+    /// execute, scatter the updated rows back.  Every byte it moves is
+    /// accounted in the arena's `CopyStats`.  Backends that can mutate the
+    /// cache in place (native) override this and move zero bytes.
+    fn decode_step(
+        &self,
+        params: &[HostTensor],
+        view: &mut KvBatchView<'_>,
+        tok: &[i32],
+        pos: &[i32],
+    ) -> Result<(Vec<f32>, ExecTiming)> {
+        let b = view.batch();
+        let (k, v) = view.gather();
+        let mut tok_p = tok.to_vec();
+        let mut pos_p = pos.to_vec();
+        tok_p.resize(b, tok[0]);
+        pos_p.resize(b, pos[0]);
+        let mut inputs: Vec<HostTensor> = params.to_vec();
+        inputs.push(k);
+        inputs.push(v);
+        inputs.push(HostTensor::from_i32(&[b], &tok_p));
+        inputs.push(HostTensor::from_i32(&[b], &pos_p));
+        let (out, timing) = self.execute(&inputs)?;
+        if out.len() < 3 {
+            bail!("decode_step: executable returned {} outputs, need logits+k+v", out.len());
+        }
+        view.scatter(&out[1], &out[2])?;
+        Ok((out[0].to_f32_vec(), timing))
+    }
 }
 
 /// Synthesized golden vectors: run the module on `inputs`, expect

@@ -1,0 +1,212 @@
+//! Typed serving-model discovery (DESIGN.md §8): [`ModelBundle`] resolves a
+//! model's init/prefill/decode executables from the manifest by
+//! [`ArtifactKind`] + `meta.model`, replacing the old coordinator habit of
+//! guessing format-string names (`{model}_prefill_b1`, `{model}_decode_b4`).
+//!
+//! The decode bucket set ([`DecodeBuckets`]) is likewise *discovered* from
+//! the manifest's decode artifacts (`meta.batch`) instead of hardcoding the
+//! 1/4 pair, so adding a compiled `_decode_b8` artifact widens the serving
+//! batch ceiling with no coordinator change.
+
+use std::sync::Arc;
+
+use crate::bail;
+use crate::util::error::{Context, Result};
+
+use crate::runtime::artifact::{ArtifactKind, ArtifactSpec};
+use crate::runtime::kv::KvGeometry;
+use crate::runtime::{Executable, Runtime};
+
+/// Shapes of the serving model, read from artifact metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeShapes {
+    pub n_layer: usize,
+    pub n_kv_head: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    pub prompt_len: usize,
+}
+
+impl ServeShapes {
+    pub fn from_spec(spec: &ArtifactSpec) -> Result<ServeShapes> {
+        Ok(ServeShapes {
+            n_layer: spec.meta_i64("n_layer").context("n_layer")? as usize,
+            n_kv_head: spec.meta_i64("n_kv_head").context("n_kv_head")? as usize,
+            max_seq: spec.meta_i64("max_seq").context("max_seq")? as usize,
+            d_head: (spec.meta_i64("d_model").context("d_model")?
+                / spec.meta_i64("n_head").context("n_head")?) as usize,
+            vocab: spec.meta_i64("vocab_size").context("vocab")? as usize,
+            prompt_len: spec.meta_i64("prompt_len").context("prompt_len")? as usize,
+        })
+    }
+
+    pub fn cache_elems_per_seq(&self) -> usize {
+        self.geometry().slot_elems()
+    }
+
+    /// The KV-arena slot geometry this model serves with.
+    pub fn geometry(&self) -> KvGeometry {
+        KvGeometry {
+            n_layer: self.n_layer,
+            n_kv_head: self.n_kv_head,
+            max_seq: self.max_seq,
+            d_head: self.d_head,
+        }
+    }
+}
+
+/// The compiled decode batch sizes, sorted ascending.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeBuckets {
+    sizes: Vec<usize>,
+}
+
+impl DecodeBuckets {
+    pub fn new(mut sizes: Vec<usize>) -> Result<DecodeBuckets> {
+        if sizes.is_empty() {
+            bail!("no decode buckets discovered");
+        }
+        sizes.sort_unstable();
+        if sizes[0] == 0 {
+            bail!("decode bucket of size 0");
+        }
+        if sizes.windows(2).any(|w| w[0] == w[1]) {
+            bail!("duplicate decode bucket in {sizes:?}");
+        }
+        Ok(DecodeBuckets { sizes })
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Largest bucket — the decode group chunk size.
+    pub fn max(&self) -> usize {
+        *self.sizes.last().expect("buckets are non-empty")
+    }
+
+    /// Smallest bucket that fits `n` active rows (callers chunk by
+    /// [`max`](Self::max) first, so `n <= max` always holds in the worker).
+    pub fn pick(&self, n: usize) -> usize {
+        self.sizes.iter().copied().find(|&b| b >= n).unwrap_or_else(|| self.max())
+    }
+}
+
+/// A model's serving executables, discovered and loaded once.
+pub struct ModelBundle {
+    pub model: String,
+    pub init: Arc<Executable>,
+    pub prefill: Arc<Executable>,
+    /// (bucket, executable), ascending by bucket.
+    decodes: Vec<(usize, Arc<Executable>)>,
+    pub buckets: DecodeBuckets,
+    pub shapes: ServeShapes,
+}
+
+impl ModelBundle {
+    /// Typed manifest query: find `model`'s init, batch-1 prefill and every
+    /// decode bucket by `ArtifactKind` + `meta.model` and load them.
+    pub fn discover(rt: &Runtime, model: &str) -> Result<ModelBundle> {
+        let of_kind = |kind: ArtifactKind| -> Vec<&ArtifactSpec> {
+            rt.manifest
+                .by_kind(kind)
+                .into_iter()
+                .filter(|a| a.meta_str("model") == Some(model))
+                .collect()
+        };
+
+        let inits = of_kind(ArtifactKind::Init);
+        let [init_spec] = inits.as_slice() else {
+            bail!(
+                "model '{model}': expected exactly one init artifact, found {} \
+                 (manifest has {} artifacts)",
+                inits.len(),
+                rt.manifest.artifacts.len()
+            );
+        };
+
+        let prefill_spec = of_kind(ArtifactKind::Prefill)
+            .into_iter()
+            .find(|a| a.meta_i64("batch").unwrap_or(1) == 1)
+            .with_context(|| format!("model '{model}': no batch-1 prefill artifact"))?;
+        let shapes = ServeShapes::from_spec(prefill_spec)
+            .with_context(|| format!("{}: serving metadata", prefill_spec.name))?;
+
+        let mut decodes = Vec::new();
+        for spec in of_kind(ArtifactKind::Decode) {
+            let bucket = spec
+                .meta_i64("batch")
+                .with_context(|| format!("{}: decode artifact missing meta.batch", spec.name))?
+                as usize;
+            decodes.push((bucket, rt.load(&spec.name)?));
+        }
+        decodes.sort_by_key(|(b, _)| *b);
+        let buckets = DecodeBuckets::new(decodes.iter().map(|(b, _)| *b).collect())
+            .with_context(|| format!("model '{model}'"))?;
+
+        Ok(ModelBundle {
+            model: model.to_string(),
+            init: rt.load(&init_spec.name)?,
+            prefill: rt.load(&prefill_spec.name)?,
+            decodes,
+            buckets,
+            shapes,
+        })
+    }
+
+    /// The decode executable compiled for exactly `bucket` rows.
+    pub fn decode_for(&self, bucket: usize) -> Result<&Arc<Executable>> {
+        self.decodes
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, e)| e)
+            .with_context(|| {
+                format!(
+                    "model '{}': no decode artifact for bucket {bucket} (have {:?})",
+                    self.model,
+                    self.buckets.sizes()
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendKind;
+    use std::path::Path;
+
+    #[test]
+    fn buckets_pick_smallest_fitting() {
+        let b = DecodeBuckets::new(vec![4, 1]).unwrap();
+        assert_eq!(b.sizes(), &[1, 4]);
+        assert_eq!(b.max(), 4);
+        assert_eq!(b.pick(1), 1);
+        assert_eq!(b.pick(2), 4);
+        assert_eq!(b.pick(3), 4);
+        assert_eq!(b.pick(4), 4);
+        // callers chunk by max() first; past-max falls back to max
+        assert_eq!(b.pick(9), 4);
+        assert!(DecodeBuckets::new(vec![]).is_err());
+        assert!(DecodeBuckets::new(vec![2, 2]).is_err());
+        assert!(DecodeBuckets::new(vec![0, 1]).is_err());
+    }
+
+    #[test]
+    fn discovers_native_tiny_bundle_by_typed_query() {
+        let rt = Runtime::with_backend(Path::new("unused"), BackendKind::Native).unwrap();
+        let bundle = ModelBundle::discover(&rt, "tiny").unwrap();
+        assert_eq!(bundle.buckets.sizes(), &[1, 4]);
+        assert_eq!(bundle.shapes.n_layer, 2);
+        assert_eq!(bundle.shapes.vocab, 512);
+        assert_eq!(bundle.shapes.prompt_len, 16);
+        assert_eq!(bundle.shapes.geometry().slot_elems(), bundle.shapes.cache_elems_per_seq());
+        assert!(bundle.decode_for(4).is_ok());
+        assert!(bundle.decode_for(1).is_ok());
+        assert!(bundle.decode_for(2).is_err());
+        // unknown model is a typed discovery error, not a name-format guess
+        let err = ModelBundle::discover(&rt, "nonexistent").unwrap_err();
+        assert!(format!("{err:#}").contains("nonexistent"));
+    }
+}

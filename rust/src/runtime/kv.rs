@@ -1,0 +1,382 @@
+//! Zero-copy KV-cache arena for the serving engine (DESIGN.md §8).
+//!
+//! The pre-engine coordinator kept one `Vec<f32>` K/V slab per sequence and
+//! re-assembled the entire (L, B, H, S, dh) batch cache tensor on every
+//! decode step, then scattered the updated rows back — an O(cache) memcpy
+//! per generated token that dwarfs the attention math the paper optimizes.
+//!
+//! [`KvArena`] replaces that: a worker-owned pool of per-sequence slabs
+//! ([`KvSlot`] handles) in the *single-sequence* cache layout (L, 1, H, S,
+//! dh).  A decode step borrows a [`KvBatchView`] over the active slots and
+//! hands it through the widened [`Module::decode_step`] seam
+//! (`runtime::backend`):
+//!
+//! - the native backend mutates the slots **in place** — zero per-token
+//!   assemble/scatter bytes (asserted by `benches/coordinator_hotpath.rs`
+//!   and the tests below);
+//! - compiled-artifact backends (PJRT/stub) fall back to the view's
+//!   [`gather`](KvBatchView::gather)/[`scatter`](KvBatchView::scatter)
+//!   compatibility pair, which reproduces the old batch-tensor exchange
+//!   byte-for-byte and *accounts* every byte it moves in [`CopyStats`].
+
+use crate::bail;
+use crate::util::error::Result;
+use crate::util::tensorio::HostTensor;
+
+/// Per-sequence cache geometry: a slot holds (n_layer, 1, n_kv_head,
+/// max_seq, d_head) f32 elements, layer-major.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvGeometry {
+    pub n_layer: usize,
+    pub n_kv_head: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+}
+
+impl KvGeometry {
+    /// Elements in one layer of one sequence's cache: H * S * dh.
+    pub fn per_layer(&self) -> usize {
+        self.n_kv_head * self.max_seq * self.d_head
+    }
+
+    /// Elements in one sequence's full cache slab.
+    pub fn slot_elems(&self) -> usize {
+        self.n_layer * self.per_layer()
+    }
+
+    /// Dims of the batched cache tensor the compat path assembles.
+    pub fn batch_dims(&self, batch: usize) -> Vec<usize> {
+        vec![self.n_layer, batch, self.n_kv_head, self.max_seq, self.d_head]
+    }
+}
+
+/// Bytes moved by the compatibility gather/scatter path.  The native
+/// in-place path never touches these counters — "zero per-token KV copies"
+/// is `gather_bytes == 0 && scatter_bytes == 0` after a serve run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CopyStats {
+    pub gathers: u64,
+    pub scatters: u64,
+    pub gather_bytes: u64,
+    pub scatter_bytes: u64,
+}
+
+impl CopyStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.gather_bytes + self.scatter_bytes
+    }
+}
+
+/// Handle to one sequence's slab in the arena.  Only meaningful for the
+/// arena that issued it; freeing returns the slab to the pool for reuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvSlot(usize);
+
+impl KvSlot {
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// The worker-owned slab pool: one pair of K/V slabs per live sequence.
+#[derive(Debug)]
+pub struct KvArena {
+    geo: KvGeometry,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    free: Vec<usize>,
+    stats: CopyStats,
+}
+
+impl KvArena {
+    pub fn new(geo: KvGeometry) -> KvArena {
+        KvArena { geo, k: Vec::new(), v: Vec::new(), free: Vec::new(), stats: CopyStats::default() }
+    }
+
+    pub fn geometry(&self) -> KvGeometry {
+        self.geo
+    }
+
+    /// Slots currently live (allocated and not freed).
+    pub fn live(&self) -> usize {
+        self.k.len() - self.free.len()
+    }
+
+    /// Total slabs ever allocated (high-water mark of the pool).
+    pub fn capacity(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn stats(&self) -> CopyStats {
+        self.stats
+    }
+
+    /// Allocate a zeroed slot (reuses a freed slab when available).
+    pub fn alloc(&mut self) -> KvSlot {
+        let n = self.geo.slot_elems();
+        match self.free.pop() {
+            Some(i) => {
+                self.k[i].iter_mut().for_each(|x| *x = 0.0);
+                self.v[i].iter_mut().for_each(|x| *x = 0.0);
+                KvSlot(i)
+            }
+            None => {
+                self.k.push(vec![0.0; n]);
+                self.v.push(vec![0.0; n]);
+                KvSlot(self.k.len() - 1)
+            }
+        }
+    }
+
+    /// Adopt a prefill-produced cache pair by *moving* the vectors in — the
+    /// one-time admission cost; no per-token copies follow on the native
+    /// path.
+    pub fn adopt(&mut self, k: Vec<f32>, v: Vec<f32>) -> Result<KvSlot> {
+        let n = self.geo.slot_elems();
+        if k.len() != n || v.len() != n {
+            bail!(
+                "kv arena: adopted slab has {}/{} elements, geometry wants {n}",
+                k.len(),
+                v.len()
+            );
+        }
+        match self.free.pop() {
+            Some(i) => {
+                self.k[i] = k;
+                self.v[i] = v;
+                Ok(KvSlot(i))
+            }
+            None => {
+                self.k.push(k);
+                self.v.push(v);
+                Ok(KvSlot(self.k.len() - 1))
+            }
+        }
+    }
+
+    /// Return a slot's slab to the pool.
+    pub fn free(&mut self, slot: KvSlot) {
+        debug_assert!(!self.free.contains(&slot.0), "double free of kv slot");
+        self.free.push(slot.0);
+    }
+
+    /// This slot's (K, V) slabs, read-only.
+    pub fn slot(&self, slot: KvSlot) -> (&[f32], &[f32]) {
+        (&self.k[slot.0], &self.v[slot.0])
+    }
+
+    /// This slot's (K, V) slabs, mutable.
+    pub fn slot_mut(&mut self, slot: KvSlot) -> (&mut [f32], &mut [f32]) {
+        (&mut self.k[slot.0], &mut self.v[slot.0])
+    }
+
+    /// Borrow a decode-step view over `slots`, padded (virtually) to
+    /// `batch` rows.  `batch` is the compiled bucket size; `slots.len()`
+    /// may be smaller.
+    pub fn batch_view<'a>(&'a mut self, slots: &[KvSlot], batch: usize) -> KvBatchView<'a> {
+        assert!(!slots.is_empty() && slots.len() <= batch, "bad batch view shape");
+        KvBatchView { arena: self, slots: slots.to_vec(), batch }
+    }
+}
+
+/// A borrowed view of the active slots for one decode step, in batch-row
+/// order.  Rows `slots.len()..batch` are padding (replicas of row 0 on the
+/// compat path; simply absent on the native in-place path).
+pub struct KvBatchView<'a> {
+    arena: &'a mut KvArena,
+    slots: Vec<KvSlot>,
+    batch: usize,
+}
+
+impl KvBatchView<'_> {
+    /// Real (non-padding) rows in this view.
+    pub fn rows(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Compiled bucket size the compat path pads to.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn geometry(&self) -> KvGeometry {
+        self.arena.geo
+    }
+
+    /// Row `row`'s (K, V) slabs for in-place decode (native path).
+    pub fn slot_mut(&mut self, row: usize) -> (&mut [f32], &mut [f32]) {
+        self.arena.slot_mut(self.slots[row])
+    }
+
+    /// Compatibility path: assemble the (L, B, H, S, dh) batch cache pair
+    /// the compiled decode artifacts expect.  Padding rows replicate row 0
+    /// (their results are discarded).  Every byte is accounted in
+    /// [`CopyStats`].
+    pub fn gather(&mut self) -> (HostTensor, HostTensor) {
+        let geo = self.arena.geo;
+        let per_layer = geo.per_layer();
+        let b = self.batch;
+        let dims = geo.batch_dims(b);
+        let mut kd = vec![0.0f32; geo.n_layer * b * per_layer];
+        let mut vd = vec![0.0f32; geo.n_layer * b * per_layer];
+        for l in 0..geo.n_layer {
+            for bi in 0..b {
+                // padding rows replicate sequence 0 (results discarded)
+                let slot = if bi < self.slots.len() { self.slots[bi] } else { self.slots[0] };
+                let (ks, vs) = self.arena.slot(slot);
+                let src = l * per_layer..(l + 1) * per_layer;
+                let dst = (l * b + bi) * per_layer;
+                kd[dst..dst + per_layer].copy_from_slice(&ks[src.clone()]);
+                vd[dst..dst + per_layer].copy_from_slice(&vs[src]);
+            }
+        }
+        self.arena.stats.gathers += 1;
+        self.arena.stats.gather_bytes += 2 * (kd.len() as u64) * 4;
+        (HostTensor::from_f32(&dims, &kd), HostTensor::from_f32(&dims, &vd))
+    }
+
+    /// Compatibility path: scatter the updated batch cache pair back into
+    /// the per-sequence slots (real rows only).
+    pub fn scatter(&mut self, k_new: &HostTensor, v_new: &HostTensor) -> Result<()> {
+        let geo = self.arena.geo;
+        let per_layer = geo.per_layer();
+        let b = self.batch;
+        let want = geo.batch_dims(b);
+        if k_new.dims != want || v_new.dims != want {
+            bail!(
+                "kv scatter: decode returned cache dims {:?}/{:?}, expected {want:?}",
+                k_new.dims,
+                v_new.dims
+            );
+        }
+        let kd = k_new.to_f32_vec();
+        let vd = v_new.to_f32_vec();
+        let rows = self.slots.len();
+        for bi in 0..rows {
+            let (ks, vs) = self.arena.slot_mut(self.slots[bi]);
+            for l in 0..geo.n_layer {
+                let src = (l * b + bi) * per_layer;
+                let dst = l * per_layer;
+                ks[dst..dst + per_layer].copy_from_slice(&kd[src..src + per_layer]);
+                vs[dst..dst + per_layer].copy_from_slice(&vd[src..src + per_layer]);
+            }
+        }
+        self.arena.stats.scatters += 1;
+        self.arena.stats.scatter_bytes += 2 * (geo.n_layer * rows * per_layer * 4) as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> KvGeometry {
+        KvGeometry { n_layer: 2, n_kv_head: 1, max_seq: 2, d_head: 2 }
+    }
+
+    fn ramp(base: f32, n: usize) -> Vec<f32> {
+        (0..n).map(|i| base + i as f32).collect()
+    }
+
+    #[test]
+    fn alloc_adopt_free_reuses_slabs() {
+        let g = geo();
+        let mut a = KvArena::new(g);
+        let n = g.slot_elems();
+        assert_eq!(n, 2 * 4);
+        let s0 = a.adopt(ramp(0.0, n), vec![0.0; n]).unwrap();
+        let s1 = a.alloc();
+        assert_eq!(a.live(), 2);
+        assert_eq!(a.capacity(), 2);
+        a.free(s0);
+        assert_eq!(a.live(), 1);
+        // reuse: the freed slab index comes back, zeroed on alloc
+        let s2 = a.alloc();
+        assert_eq!(s2.index(), s0.index());
+        assert!(a.slot(s2).0.iter().all(|&x| x == 0.0));
+        assert_eq!(a.capacity(), 2);
+        a.free(s1);
+        a.free(s2);
+        assert_eq!(a.live(), 0);
+        // wrong-size adoption is a typed error, not a corrupted slab
+        assert!(a.adopt(vec![0.0; n + 1], vec![0.0; n]).is_err());
+    }
+
+    #[test]
+    fn gather_matches_legacy_assemble_layout() {
+        // Port of the old coordinator `cache_assembly_roundtrip_layout`
+        // test: same (L, B, H, S, dh) interleaving, same pad-row
+        // replication of sequence 0.
+        let g = geo();
+        let n = g.slot_elems();
+        let mut a = KvArena::new(g);
+        let s0 = a.adopt(ramp(0.0, n), vec![0.0; n]).unwrap();
+        let s1 = a.adopt(ramp(100.0, n), vec![0.0; n]).unwrap();
+        let mut view = a.batch_view(&[s0, s1], 4);
+        let (k, _v) = view.gather();
+        assert_eq!(k.dims, vec![2, 4, 1, 2, 2]);
+        let data = k.to_f32_vec();
+        // layer 0: [seq0 layer0][seq1 layer0][pad=seq0][pad=seq0]
+        assert_eq!(&data[0..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&data[4..8], &[100.0, 101.0, 102.0, 103.0]);
+        assert_eq!(&data[8..12], &[0.0, 1.0, 2.0, 3.0]);
+        // layer 1 of seq1 starts at (1*4 + 1)*4
+        assert_eq!(&data[20..24], &[104.0, 105.0, 106.0, 107.0]);
+        assert_eq!(a.stats().gathers, 1);
+        assert_eq!(a.stats().gather_bytes, 2u64 * (2 * 4 * 4) * 4);
+    }
+
+    #[test]
+    fn scatter_roundtrips_and_counts_real_rows_only() {
+        let g = geo();
+        let n = g.slot_elems();
+        let mut a = KvArena::new(g);
+        let s0 = a.adopt(ramp(0.0, n), ramp(50.0, n)).unwrap();
+        let s1 = a.adopt(ramp(100.0, n), ramp(150.0, n)).unwrap();
+        let mut view = a.batch_view(&[s0, s1], 4);
+        let (k, v) = view.gather();
+        // mutate one row of the batched tensor, write it back
+        let mut kd = k.to_f32_vec();
+        let per_layer = g.per_layer();
+        // (l=1, b=1) block
+        let off = (1 * 4 + 1) * per_layer;
+        for x in &mut kd[off..off + per_layer] {
+            *x += 1000.0;
+        }
+        let k2 = HostTensor::from_f32(&k.dims, &kd);
+        view.scatter(&k2, &v).unwrap();
+        let (ks1, vs1) = a.slot(s1);
+        assert_eq!(&ks1[per_layer..2 * per_layer], &[1104.0, 1105.0, 1106.0, 1107.0]);
+        assert_eq!(vs1, &ramp(150.0, n)[..]);
+        // stats: one gather of the padded batch, one scatter of 2 real rows
+        let st = a.stats();
+        assert_eq!(st.scatters, 1);
+        assert_eq!(st.scatter_bytes, 2 * (2 * 2 * per_layer as u64) * 4);
+        assert_eq!(st.total_bytes(), st.gather_bytes + st.scatter_bytes);
+        // dims mismatch is rejected
+        let mut view = a.batch_view(&[s0], 1);
+        assert!(view.scatter(&k2, &v).is_err());
+    }
+
+    #[test]
+    fn in_place_slot_access_moves_zero_bytes() {
+        let g = geo();
+        let n = g.slot_elems();
+        let mut a = KvArena::new(g);
+        let s0 = a.adopt(ramp(0.0, n), ramp(1.0, n)).unwrap();
+        {
+            let mut view = a.batch_view(&[s0], 4);
+            assert_eq!(view.rows(), 1);
+            assert_eq!(view.batch(), 4);
+            let (k, v) = view.slot_mut(0);
+            k[0] = 42.0;
+            v[0] = 43.0;
+        }
+        assert_eq!(a.slot(s0).0[0], 42.0);
+        assert_eq!(a.slot(s0).1[0], 43.0);
+        // the whole point: native in-place decode never bumps the counters
+        assert_eq!(a.stats(), CopyStats::default());
+        assert_eq!(a.stats().total_bytes(), 0);
+    }
+}

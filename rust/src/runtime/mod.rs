@@ -8,10 +8,15 @@
 //!   manifest — executes with no artifacts on disk at all.
 //!
 //! The runtime loads each module once, caches the executable, and
-//! exchanges host tensors with the backend.
+//! exchanges host tensors with the backend.  Serving additions (DESIGN.md
+//! §8): `bundle` discovers a model's serving set from the manifest by
+//! typed query, and `kv` provides the zero-copy KV arena behind the
+//! widened `Module::decode_step` seam.
 
 pub mod artifact;
 pub mod backend;
+pub mod bundle;
+pub mod kv;
 pub mod native;
 
 use std::collections::HashMap;
@@ -24,6 +29,8 @@ use crate::util::error::{Context, Result};
 
 pub use artifact::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};
 pub use backend::{Backend, BackendKind, ExecTiming, GoldenCase, Module};
+pub use bundle::{DecodeBuckets, ModelBundle, ServeShapes};
+pub use kv::{CopyStats, KvArena, KvBatchView, KvGeometry, KvSlot};
 pub use native::NativeBackend;
 
 use crate::util::tensorio::{DType, HostTensor};
@@ -81,6 +88,33 @@ impl Executable {
 
     pub fn stats(&self) -> ExecStats {
         *self.stats.lock().unwrap()
+    }
+
+    /// One batched decode step through the widened backend seam (see
+    /// `backend::Module::decode_step`).  `tok`/`pos` are per *real* row;
+    /// returns row-major logits with row `i` at `i * vocab`.
+    pub fn decode_step(
+        &self,
+        params: &[HostTensor],
+        view: &mut kv::KvBatchView<'_>,
+        tok: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<f32>> {
+        if tok.len() != view.rows() || pos.len() != view.rows() {
+            bail!(
+                "{}: decode_step wants {} tok/pos entries, got {}/{}",
+                self.spec.name,
+                view.rows(),
+                tok.len(),
+                pos.len()
+            );
+        }
+        let (logits, timing) = self.module.decode_step(params, view, tok, pos)?;
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.total_exec_secs += timing.exec_secs;
+        st.total_transfer_secs += timing.transfer_secs;
+        Ok(logits)
     }
 }
 

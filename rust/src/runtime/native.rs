@@ -30,6 +30,7 @@ use crate::util::error::Result;
 use crate::attn::exec::{parallel, reference, AttnDims, FlashParams};
 use crate::runtime::artifact::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};
 use crate::runtime::backend::{Backend, ExecTiming, GoldenCase, Module};
+use crate::runtime::kv::KvBatchView;
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::rng::Rng;
@@ -328,52 +329,92 @@ struct DecodeModule {
     batch: usize,
 }
 
-impl DecodeModule {
-    /// One-token forward for row `b`, reading and extending the caches.
-    fn decode_row(
-        &self,
-        params: &Params,
-        tok: i32,
-        pos: usize,
-        kc: &mut [f32],
-        vc: &mut [f32],
-        b: usize,
-    ) -> Result<Vec<f32>> {
-        let cfg = &self.cfg;
-        let (d, dh, hn) = (cfg.d_model, cfg.d_head(), cfg.n_head);
-        if pos >= cfg.max_seq {
-            bail!("decode position {pos} exceeds max_seq {}", cfg.max_seq);
-        }
-        let tok = check_token(cfg, tok)?;
-        let scale = 1.0 / (dh as f32).sqrt();
-        let mut x = embed(cfg, params, tok, pos);
-        for l in 0..cfg.n_layer {
-            let xn = rmsnorm(&x, d);
-            let qkv = matmul(&xn, params.wqkv(l), 1, d, 3 * d);
-            // append this token's K/V at `pos`
-            for h in 0..hn {
-                let dst = cfg.cache_offset(self.batch, l, b, h, pos);
-                kc[dst..dst + dh].copy_from_slice(&qkv[d + h * dh..d + (h + 1) * dh]);
-                vc[dst..dst + dh]
-                    .copy_from_slice(&qkv[2 * d + h * dh..2 * d + (h + 1) * dh]);
-            }
-            // split-KV attention over the 0..=pos history per head
-            let mut y = vec![0.0f32; d];
-            for h in 0..hn {
-                let off = cfg.cache_offset(self.batch, l, b, h, 0);
-                let kh = &kc[off..off + (pos + 1) * dh];
-                let vh = &vc[off..off + (pos + 1) * dh];
-                let qh = &qkv[h * dh..(h + 1) * dh];
-                let (oh, _lse) =
-                    parallel::decode_splitkv(qh, kh, vh, pos + 1, scale, DECODE_CHUNK);
-                y[h * dh..(h + 1) * dh].copy_from_slice(&oh);
-            }
-            let proj = matmul(&y, params.wo(l), 1, d, d);
-            add_inplace(&mut x, &proj);
-            layer_ffn(cfg, params, l, &mut x, 1);
-        }
-        Ok(lm_head(cfg, params, &x))
+/// Mutable access to one sequence's K/V cache rows: `kv_head(l, h)` is the
+/// (max_seq * d_head) K and V slice for layer `l`, head `h`.  Implemented
+/// over the legacy (L, B, H, S, dh) batch tensor *and* over a KV-arena slot
+/// so [`decode_row`] is the single decode kernel for both paths (which is
+/// what keeps the in-place path byte-identical to the batch-tensor path).
+trait CacheRows {
+    fn kv_head(&mut self, l: usize, h: usize) -> (&mut [f32], &mut [f32]);
+}
+
+/// Row `b` of a (L, B, H, S, dh) batch cache tensor pair.
+struct BatchRows<'a> {
+    cfg: &'a GptConfig,
+    batch: usize,
+    b: usize,
+    kc: &'a mut [f32],
+    vc: &'a mut [f32],
+}
+
+impl CacheRows for BatchRows<'_> {
+    fn kv_head(&mut self, l: usize, h: usize) -> (&mut [f32], &mut [f32]) {
+        let sdh = self.cfg.max_seq * self.cfg.d_head();
+        let off = self.cfg.cache_offset(self.batch, l, self.b, h, 0);
+        (&mut self.kc[off..off + sdh], &mut self.vc[off..off + sdh])
     }
+}
+
+/// One KV-arena slot: the (L, 1, H, S, dh) single-sequence slab pair.
+struct SlotRows<'a> {
+    cfg: &'a GptConfig,
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+}
+
+impl CacheRows for SlotRows<'_> {
+    fn kv_head(&mut self, l: usize, h: usize) -> (&mut [f32], &mut [f32]) {
+        let sdh = self.cfg.max_seq * self.cfg.d_head();
+        let off = self.cfg.cache_offset(1, l, 0, h, 0);
+        (&mut self.k[off..off + sdh], &mut self.v[off..off + sdh])
+    }
+}
+
+/// One-token forward for one sequence, reading and extending its cache.
+fn decode_row(
+    cfg: &GptConfig,
+    params: &Params,
+    tok: i32,
+    pos: usize,
+    cache: &mut dyn CacheRows,
+) -> Result<Vec<f32>> {
+    let (d, dh, hn) = (cfg.d_model, cfg.d_head(), cfg.n_head);
+    if pos >= cfg.max_seq {
+        bail!("decode position {pos} exceeds max_seq {}", cfg.max_seq);
+    }
+    let tok = check_token(cfg, tok)?;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut x = embed(cfg, params, tok, pos);
+    for l in 0..cfg.n_layer {
+        let xn = rmsnorm(&x, d);
+        let qkv = matmul(&xn, params.wqkv(l), 1, d, 3 * d);
+        // per head: append this token's K/V at `pos`, then split-KV
+        // attention over the 0..=pos history (each head reads only its own
+        // rows, so this order matches the old write-all-then-attend loop
+        // bit for bit)
+        let mut y = vec![0.0f32; d];
+        for h in 0..hn {
+            let (kh, vh) = cache.kv_head(l, h);
+            kh[pos * dh..(pos + 1) * dh]
+                .copy_from_slice(&qkv[d + h * dh..d + (h + 1) * dh]);
+            vh[pos * dh..(pos + 1) * dh]
+                .copy_from_slice(&qkv[2 * d + h * dh..2 * d + (h + 1) * dh]);
+            let qh = &qkv[h * dh..(h + 1) * dh];
+            let (oh, _lse) = parallel::decode_splitkv(
+                qh,
+                &kh[..(pos + 1) * dh],
+                &vh[..(pos + 1) * dh],
+                pos + 1,
+                scale,
+                DECODE_CHUNK,
+            );
+            y[h * dh..(h + 1) * dh].copy_from_slice(&oh);
+        }
+        let proj = matmul(&y, params.wo(l), 1, d, d);
+        add_inplace(&mut x, &proj);
+        layer_ffn(cfg, params, l, &mut x, 1);
+    }
+    Ok(lm_head(cfg, params, &x))
 }
 
 impl Module for DecodeModule {
@@ -392,8 +433,9 @@ impl Module for DecodeModule {
             if pos[b] < 0 {
                 bail!("negative decode position {}", pos[b]);
             }
-            let row =
-                self.decode_row(&params, tok[b], pos[b] as usize, &mut kc, &mut vc, b)?;
+            let mut rows =
+                BatchRows { cfg, batch: self.batch, b, kc: &mut kc, vc: &mut vc };
+            let row = decode_row(cfg, &params, tok[b], pos[b] as usize, &mut rows)?;
             logits[b * cfg.vocab..(b + 1) * cfg.vocab].copy_from_slice(&row);
         }
         let outputs = vec![
@@ -402,6 +444,48 @@ impl Module for DecodeModule {
             HostTensor::from_f32(&cfg.cache_dims(self.batch), &vc),
         ];
         Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
+    }
+
+    /// Serving hot path: decode every real row **in place** on its KV-arena
+    /// slot — no batch-tensor assemble, no scatter, zero bytes through the
+    /// arena's `CopyStats`.  Padding rows simply do not exist here, so
+    /// bucket padding costs nothing either.
+    fn decode_step(
+        &self,
+        params_t: &[HostTensor],
+        view: &mut KvBatchView<'_>,
+        tok: &[i32],
+        pos: &[i32],
+    ) -> Result<(Vec<f32>, ExecTiming)> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        if params_t.len() < cfg.n_params() {
+            bail!(
+                "native decode_step: got {} params, model wants {}",
+                params_t.len(),
+                cfg.n_params()
+            );
+        }
+        let geo = view.geometry();
+        if geo.slot_elems() != cfg.cache_dims(1).iter().product::<usize>() {
+            bail!(
+                "native decode_step: arena slot geometry {geo:?} does not match \
+                 model cache dims {:?}",
+                cfg.cache_dims(1)
+            );
+        }
+        let params = Params::parse(cfg, params_t);
+        let mut logits = vec![0.0f32; view.rows() * cfg.vocab];
+        for bi in 0..view.rows() {
+            if pos[bi] < 0 {
+                bail!("negative decode position {}", pos[bi]);
+            }
+            let (k, v) = view.slot_mut(bi);
+            let mut rows = SlotRows { cfg, k, v };
+            let row = decode_row(cfg, &params, tok[bi], pos[bi] as usize, &mut rows)?;
+            logits[bi * cfg.vocab..(bi + 1) * cfg.vocab].copy_from_slice(&row);
+        }
+        Ok((logits, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
     }
 }
 
@@ -843,6 +927,100 @@ mod tests {
             &solo_logits[..],
             "batched decode row 0 diverged from solo decode"
         );
+    }
+
+    #[test]
+    fn in_place_decode_step_is_byte_identical_to_batch_tensor_path() {
+        // The serving acceptance bar: for 1, 2 and 3 active sequences the
+        // KV-arena in-place decode must produce bitwise-identical logits
+        // AND cache contents to the legacy assemble/execute/scatter path,
+        // while moving zero assemble/scatter bytes.
+        use crate::runtime::kv::{KvArena, KvSlot};
+
+        let be = NativeBackend::new();
+        let m = manifest();
+        let cfg = GptConfig::tiny();
+        let init = be.load(m.get("tiny_init").unwrap()).unwrap();
+        let prefill = be.load(m.get("tiny_prefill_b1").unwrap()).unwrap();
+        let (params, _) = init.execute(&[HostTensor::scalar_u32(0)]).unwrap();
+
+        // three distinct sequences' caches via prefill
+        let mut slabs = Vec::new();
+        for j in 0..3 {
+            let tokens: Vec<i32> = (0..cfg.prompt_len as i32).map(|t| t + 1 + j).collect();
+            let mut inputs = params.clone();
+            inputs.push(HostTensor::from_i32(&[1, cfg.prompt_len], &tokens));
+            let (pre, _) = prefill.execute(&inputs).unwrap();
+            slabs.push((pre[1].to_f32_vec(), pre[2].to_f32_vec()));
+        }
+
+        let geo = crate::runtime::kv::KvGeometry {
+            n_layer: cfg.n_layer,
+            n_kv_head: cfg.n_head,
+            max_seq: cfg.max_seq,
+            d_head: cfg.d_head(),
+        };
+        for rows in [1usize, 2, 3] {
+            let bucket = if rows == 1 { 1 } else { 4 };
+            let decode = be
+                .load(m.get(&format!("tiny_decode_b{bucket}")).unwrap())
+                .unwrap();
+            let tok: Vec<i32> = (0..rows as i32).map(|t| 7 + t).collect();
+            let pos = vec![cfg.prompt_len as i32; rows];
+
+            // path A: legacy batch-tensor exchange through the DEFAULT
+            // seam impl (gather -> execute -> scatter)
+            let mut arena_a = KvArena::new(geo);
+            let slots_a: Vec<KvSlot> = slabs[..rows]
+                .iter()
+                .map(|(k, v)| arena_a.adopt(k.clone(), v.clone()).unwrap())
+                .collect();
+            let mut view = arena_a.batch_view(&slots_a, bucket);
+            // call the compat path explicitly (gather/execute/scatter),
+            // sidestepping the native override
+            let (kt, vt) = view.gather();
+            let mut inputs = params.clone();
+            inputs.push(kt);
+            inputs.push(vt);
+            let mut tok_p = tok.clone();
+            let mut pos_p = pos.clone();
+            tok_p.resize(bucket, tok[0]);
+            pos_p.resize(bucket, pos[0]);
+            inputs.push(HostTensor::from_i32(&[bucket], &tok_p));
+            inputs.push(HostTensor::from_i32(&[bucket], &pos_p));
+            let (out, _) = decode.execute(&inputs).unwrap();
+            view.scatter(&out[1], &out[2]).unwrap();
+            let logits_a = out[0].to_f32_vec();
+            assert!(arena_a.stats().total_bytes() > 0, "compat path must account copies");
+
+            // path B: in-place decode_step on the arena
+            let mut arena_b = KvArena::new(geo);
+            let slots_b: Vec<KvSlot> = slabs[..rows]
+                .iter()
+                .map(|(k, v)| arena_b.adopt(k.clone(), v.clone()).unwrap())
+                .collect();
+            let mut view = arena_b.batch_view(&slots_b, bucket);
+            let (logits_b, _) = decode
+                .decode_step(&params, &mut view, &tok, &pos)
+                .unwrap();
+            assert_eq!(
+                arena_b.stats().total_bytes(),
+                0,
+                "native decode_step must move zero assemble/scatter bytes"
+            );
+
+            for bi in 0..rows {
+                assert_eq!(
+                    &logits_a[bi * cfg.vocab..(bi + 1) * cfg.vocab],
+                    &logits_b[bi * cfg.vocab..(bi + 1) * cfg.vocab],
+                    "rows={rows} row {bi}: logits diverged"
+                );
+            }
+            for (sa, sb) in slots_a.iter().zip(&slots_b) {
+                assert_eq!(arena_a.slot(*sa).0, arena_b.slot(*sb).0, "k cache diverged");
+                assert_eq!(arena_a.slot(*sa).1, arena_b.slot(*sb).1, "v cache diverged");
+            }
+        }
     }
 
     #[test]

@@ -1,12 +1,19 @@
 //! Integration: the training driver and the serving coordinator over real
 //! compiled artifacts, plus the native (`attn::exec`) serving path.
 //!
+//! The `Server` tests intentionally keep using the deprecated shim (one
+//! release of back-compat over `coordinator::engine::Engine`) — they pin
+//! the old API's greedy outputs; `tests/native_engine.rs` covers the new
+//! Engine/Session surface.
+//!
 //! The artifact-backed tests require `make artifacts`
 //! (python/compile/aot.py) AND the `xla` execution backend; without
 //! either, they SKIP with a note instead of panicking, so a fresh offline
 //! checkout is green.  The `native_*` tests at the bottom run the same
 //! coordinator on `BackendKind::Native` and never skip — serving works on
 //! a fresh checkout with no artifacts at all.
+
+#![allow(deprecated)]
 
 mod common;
 
@@ -81,7 +88,7 @@ fn server_completes_all_requests_in_order() {
     let server = Server::start(dir, "tiny").unwrap();
     let mut rxs = Vec::new();
     for i in 0..5 {
-        rxs.push(server.submit(GenRequest { prompt: vec![i as i32 + 1; 8], n_new: 4 }));
+        rxs.push(server.submit(GenRequest { prompt: vec![i as i32 + 1; 8], n_new: 4 }).unwrap());
     }
     for rx in &rxs {
         let resp = rx.recv().expect("response");
@@ -104,6 +111,7 @@ fn greedy_decode_is_batch_invariant() {
     let prompt: Vec<i32> = (1..=8).collect();
     let solo = server
         .submit(GenRequest { prompt: prompt.clone(), n_new: 6 })
+        .unwrap()
         .recv()
         .unwrap();
     // now submit 4 at once so they decode as a batch
@@ -113,7 +121,7 @@ fn greedy_decode_is_batch_invariant() {
             if j > 0 {
                 p[0] = 100 + j; // make the other requests different
             }
-            server.submit(GenRequest { prompt: p, n_new: 6 })
+            server.submit(GenRequest { prompt: p, n_new: 6 }).unwrap()
         })
         .collect();
     let batched: Vec<_> = rxs.iter().map(|rx| rx.recv().unwrap()).collect();
@@ -136,7 +144,7 @@ fn native_server_answers_generate_requests() {
     let server = native_server();
     let mut rxs = Vec::new();
     for i in 0..5 {
-        rxs.push(server.submit(GenRequest { prompt: vec![i as i32 + 1; 8], n_new: 4 }));
+        rxs.push(server.submit(GenRequest { prompt: vec![i as i32 + 1; 8], n_new: 4 }).unwrap());
     }
     for rx in &rxs {
         let resp = rx.recv().expect("response");
@@ -157,6 +165,7 @@ fn native_greedy_decode_is_batch_invariant() {
     let prompt: Vec<i32> = (1..=8).collect();
     let solo = server
         .submit(GenRequest { prompt: prompt.clone(), n_new: 6 })
+        .unwrap()
         .recv()
         .unwrap();
     let rxs: Vec<_> = (0..4)
@@ -165,7 +174,7 @@ fn native_greedy_decode_is_batch_invariant() {
             if j > 0 {
                 p[0] = 100 + j;
             }
-            server.submit(GenRequest { prompt: p, n_new: 6 })
+            server.submit(GenRequest { prompt: p, n_new: 6 }).unwrap()
         })
         .collect();
     let batched: Vec<_> = rxs.iter().map(|rx| rx.recv().unwrap()).collect();
@@ -177,11 +186,25 @@ fn native_greedy_decode_is_batch_invariant() {
 }
 
 #[test]
+fn native_shim_fire_and_forget_submissions_still_complete() {
+    // Old `Server` semantics the shim must preserve: dropping the response
+    // handle does NOT cancel the request — it still decodes to completion
+    // and is counted in the serving metrics (sessions are detached).
+    let server = native_server();
+    drop(server.submit(GenRequest { prompt: vec![5; 8], n_new: 3 }).unwrap());
+    let kept = server.submit(GenRequest { prompt: vec![6; 8], n_new: 3 }).unwrap();
+    assert_eq!(kept.recv().unwrap().tokens.len(), 3);
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests(), 2, "dropped handle must not cancel its request");
+}
+
+#[test]
 fn native_generation_is_deterministic() {
     let run = || {
         let server = native_server();
         let resp = server
             .submit(GenRequest { prompt: (10..26).collect(), n_new: 5 })
+            .unwrap()
             .recv()
             .unwrap();
         server.shutdown().unwrap();

@@ -1,0 +1,217 @@
+//! Integration: the session-based serving engine (Engine/Session,
+//! streamed TokenEvents, SamplingParams, KV arena) on the native backend —
+//! runs on a fresh checkout with no artifacts on disk.
+
+use std::path::PathBuf;
+
+use fa2::coordinator::engine::{
+    Engine, EngineError, FinishReason, SamplingParams, TokenEvent,
+};
+use fa2::runtime::BackendKind;
+
+fn engine() -> Engine {
+    // the directory is never read: the native backend synthesizes its
+    // manifest in memory
+    Engine::start(PathBuf::from("artifacts"), "tiny", BackendKind::Native)
+        .expect("native engine must start with no artifacts on disk")
+}
+
+#[test]
+fn streamed_events_arrive_in_order_and_match_done() {
+    let e = engine();
+    let session = e.submit((1..=8).collect(), SamplingParams::greedy(5)).unwrap();
+    let mut events = Vec::new();
+    loop {
+        let ev = session.recv().expect("stream ended without Done");
+        let done = matches!(ev, TokenEvent::Done { .. });
+        events.push(ev);
+        if done {
+            break;
+        }
+    }
+    // First (index 0), then deltas with strictly consecutive indices
+    let TokenEvent::First { token: first, ttft_secs } = &events[0] else {
+        panic!("first event was {:?}", events[0]);
+    };
+    assert!(*ttft_secs >= 0.0);
+    let mut streamed = vec![*first];
+    for (i, ev) in events[1..events.len() - 1].iter().enumerate() {
+        let TokenEvent::Delta { index, token } = ev else {
+            panic!("mid-stream event was {ev:?}");
+        };
+        assert_eq!(*index, i + 1, "delta indices must be monotone");
+        assert_eq!(ev.index(), Some(i + 1));
+        streamed.push(*token);
+    }
+    let TokenEvent::Done { finish, tokens, latency_secs, ttft_secs: done_ttft } =
+        events.last().unwrap()
+    else {
+        panic!("missing Done");
+    };
+    assert_eq!(*finish, FinishReason::MaxTokens);
+    assert_eq!(tokens, &streamed, "Done tokens must equal the streamed sequence");
+    assert_eq!(tokens.len(), 5);
+    assert!(*latency_secs >= *done_ttft);
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn grouped_decode_matches_solo_for_2_3_and_5_sequences() {
+    // Exercises pad-row handling and bucket selection: 2 and 3 active
+    // sequences ride the bucket-4 executable with padding, 5 splits into
+    // groups of 4 + 1.  Greedy output must match each prompt served alone.
+    let prompts: Vec<Vec<i32>> = (0..5)
+        .map(|j| {
+            let mut p: Vec<i32> = (1..=8).collect();
+            p[0] = 10 + j;
+            p
+        })
+        .collect();
+    let solo: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let e = engine();
+            let c = e.submit(p.clone(), SamplingParams::greedy(6)).unwrap().wait().unwrap();
+            e.shutdown().unwrap();
+            c.tokens
+        })
+        .collect();
+    for n in [2usize, 3, 5] {
+        let e = engine();
+        let sessions: Vec<_> = prompts[..n]
+            .iter()
+            .map(|p| e.submit(p.clone(), SamplingParams::greedy(6)).unwrap())
+            .collect();
+        for (i, s) in sessions.into_iter().enumerate() {
+            let c = s.wait().unwrap();
+            assert_eq!(c.finish, FinishReason::MaxTokens);
+            assert_eq!(c.tokens, solo[i], "n={n} seq {i}: grouped decode diverged");
+        }
+        let metrics = e.shutdown().unwrap();
+        assert_eq!(metrics.requests(), n);
+    }
+}
+
+#[test]
+fn native_decode_moves_zero_kv_bytes() {
+    // The acceptance bar: a full multi-request serve on the native backend
+    // performs ZERO per-token KV assemble/scatter copies.
+    let e = engine();
+    let sessions: Vec<_> = (0..5)
+        .map(|i| e.submit(vec![i + 1; 8], SamplingParams::greedy(4)).unwrap())
+        .collect();
+    for s in sessions {
+        s.wait().unwrap();
+    }
+    let m = e.shutdown().unwrap();
+    assert!(m.decode_steps() > 0, "workload must have decoded");
+    assert_eq!(m.kv_gather_bytes(), 0, "native path assembled KV bytes");
+    assert_eq!(m.kv_scatter_bytes(), 0, "native path scattered KV bytes");
+    assert_eq!(m.kv_bytes_per_step(), 0.0);
+}
+
+#[test]
+fn prompt_too_long_is_a_typed_error_not_silent_truncation() {
+    let e = engine();
+    let max = e.shapes().prompt_len;
+    let err = e.submit(vec![1; max + 1], SamplingParams::greedy(2)).unwrap_err();
+    assert_eq!(err, EngineError::PromptTooLong { len: max + 1, max });
+    // an exactly-window prompt and a short prompt still serve fine
+    let full = e.submit(vec![1; max], SamplingParams::greedy(2)).unwrap();
+    let short = e.submit(vec![1; 4], SamplingParams::greedy(2)).unwrap();
+    assert_eq!(full.wait().unwrap().tokens.len(), 2);
+    assert_eq!(short.wait().unwrap().tokens.len(), 2);
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn out_of_vocab_tokens_are_rejected_at_submit_not_fatal() {
+    // One bad request must not poison the shared worker: the range check
+    // happens at submit (typed error), and the engine keeps serving.
+    let e = engine();
+    let vocab = e.shapes().vocab;
+    let err = e.submit(vec![100_000], SamplingParams::greedy(2)).unwrap_err();
+    assert_eq!(err, EngineError::TokenOutOfVocab { token: 100_000, vocab });
+    let err = e.submit(vec![1, -3, 2], SamplingParams::greedy(2)).unwrap_err();
+    assert_eq!(err, EngineError::TokenOutOfVocab { token: -3, vocab });
+    // the engine is still healthy after the rejections
+    let c = e.submit(vec![1, 2, 3], SamplingParams::greedy(2)).unwrap().wait().unwrap();
+    assert_eq!(c.tokens.len(), 2);
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn stop_tokens_finish_generation_early() {
+    let prompt: Vec<i32> = (1..=8).collect();
+    let e = engine();
+    let full = e.submit(prompt.clone(), SamplingParams::greedy(8)).unwrap().wait().unwrap();
+    assert_eq!(full.tokens.len(), 8);
+    // stop on a token we know greedy decoding will emit
+    let stop = full.tokens[2];
+    let stopped = e
+        .submit(
+            prompt,
+            SamplingParams { stop_tokens: vec![stop], ..SamplingParams::greedy(8) },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    e.shutdown().unwrap();
+    assert_eq!(stopped.finish, FinishReason::Stop);
+    assert_eq!(*stopped.tokens.last().unwrap(), stop, "stop token is included");
+    assert!(stopped.tokens.len() <= 3);
+    assert_eq!(
+        stopped.tokens[..],
+        full.tokens[..stopped.tokens.len()],
+        "greedy prefix must be preserved up to the stop"
+    );
+}
+
+#[test]
+fn temperature_sampling_is_deterministic_given_seed() {
+    let run = |seed: u64| -> Vec<i32> {
+        let e = engine();
+        let c = e
+            .submit(
+                (1..=8).collect(),
+                SamplingParams {
+                    max_tokens: 6,
+                    temperature: 0.8,
+                    top_k: 40,
+                    seed,
+                    stop_tokens: vec![],
+                },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        e.shutdown().unwrap();
+        c.tokens
+    };
+    let a = run(7);
+    assert_eq!(a, run(7), "same seed must reproduce the sampled sequence");
+    assert_eq!(a.len(), 6);
+    assert!(a.iter().all(|&t| (0..512).contains(&t)), "tokens within vocab");
+}
+
+#[test]
+fn cancellation_retires_the_session_with_cancelled() {
+    let e = engine();
+    // ballast sessions queue ahead of the target, so the worker must
+    // prefill them before it can even admit the target — by then the
+    // cancel flag below is long since set (no race on the flag landing)
+    let ballast: Vec<_> = (0..3)
+        .map(|i| e.submit(vec![i + 1; 8], SamplingParams::greedy(10_000)).unwrap())
+        .collect();
+    let target = e.submit(vec![42; 8], SamplingParams::greedy(10_000)).unwrap();
+    target.cancel();
+    // cancel lands either before prefill (empty tokens) or at a decode
+    // step boundary (partial tokens); both retire as Cancelled
+    let comp = target.wait().unwrap();
+    assert_eq!(comp.finish, FinishReason::Cancelled);
+    assert!(comp.tokens.len() < 10_000);
+    // dropping un-detached sessions cancels them too, releasing the worker
+    drop(ballast);
+    let m = e.shutdown().unwrap();
+    assert!(m.cancelled() >= 1, "at least the explicit cancel must be counted");
+}
