@@ -1,23 +1,95 @@
 //! Bench: L3 coordinator hot paths — batcher enqueue/dispatch, split-K
-//! combine merge, gpusim sweep throughput, and the serving decode step
-//! before/after the KV arena (DESIGN.md §8).  Perf targets from DESIGN.md
-//! §6: batcher > 1M ops/s, full figure sweep < 50 ms; the native decode
-//! hot path must move ZERO per-token KV assemble/scatter bytes (asserted
-//! here and recorded in reports/coordinator_hotpath.csv).
+//! combine merge, gpusim sweep throughput, the serving decode step
+//! before/after the KV arena (DESIGN.md §8), and the mixed-arrival
+//! gang-vs-continuous scheduling trace (DESIGN.md §9).  Perf targets from
+//! DESIGN.md §6: batcher > 1M ops/s, full figure sweep < 50 ms; the native
+//! decode hot path must move ZERO per-token KV assemble/scatter bytes;
+//! continuous scheduling must beat gang scheduling on straggler
+//! time-to-first-token while producing byte-identical greedy tokens.
+//!
+//! Writes reports/coordinator_hotpath.csv and records the headline
+//! numbers in reports/bench_summary.json for the ci.sh regression gate.
 
-use std::path::Path;
-use std::time::Duration;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use fa2::attn::combine::{merge_all, Partial};
 use fa2::bench::figures;
+use fa2::bench::summary;
 use fa2::coordinator::batcher::{BatchPolicy, Batcher};
+use fa2::coordinator::engine::{Engine, SamplingParams};
+use fa2::coordinator::scheduler::{SchedMode, SchedulerConfig};
 use fa2::runtime::{BackendKind, KvArena, KvSlot, ModelBundle, Runtime};
 use fa2::util::rng::Rng;
 use fa2::util::stats::Bencher;
 use fa2::util::tensorio::HostTensor;
 
+/// One mixed-arrival serving trace: a wave of 4 long sessions, then 4
+/// short stragglers submitted once the wave is demonstrably decoding.
+struct TraceOutcome {
+    /// Greedy tokens per session, submit order (wave then stragglers).
+    tokens: Vec<Vec<i32>>,
+    wave_ttft_mean: f64,
+    straggler_ttft_mean: f64,
+    tokens_per_sec: f64,
+}
+
+fn run_trace(mode: SchedMode) -> TraceOutcome {
+    let cfg = SchedulerConfig { mode, ..Default::default() };
+    let engine = Engine::start_with(
+        PathBuf::from("artifacts"),
+        "tiny",
+        BackendKind::Native,
+        cfg,
+    )
+    .expect("native engine needs no artifacts");
+    let prompt = |tag: i32| -> Vec<i32> {
+        let mut p: Vec<i32> = (1..=8).collect();
+        p[0] = tag;
+        p
+    };
+    let t0 = Instant::now();
+    let wave: Vec<_> = (0..4)
+        .map(|j| engine.submit(prompt(20 + j), SamplingParams::greedy(48)).unwrap())
+        .collect();
+    // Arrive mid-flight, deterministically: wait until wave session 0 has
+    // streamed a few decode tokens (works identically in both modes).
+    loop {
+        let ev = wave[0].recv().expect("wave session died");
+        if ev.index().map_or(true, |i| i >= 3) {
+            break;
+        }
+    }
+    let stragglers: Vec<_> = (0..4)
+        .map(|j| engine.submit(prompt(40 + j), SamplingParams::greedy(8)).unwrap())
+        .collect();
+    let mut tokens = Vec::new();
+    let mut wave_ttft = 0.0;
+    for s in wave {
+        let c = s.wait().expect("wave completion");
+        wave_ttft += c.ttft / 4.0;
+        tokens.push(c.tokens);
+    }
+    let mut straggler_ttft = 0.0;
+    for s in stragglers {
+        let c = s.wait().expect("straggler completion");
+        straggler_ttft += c.ttft / 4.0;
+        tokens.push(c.tokens);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let n_tokens: usize = tokens.iter().map(|t| t.len()).sum();
+    engine.shutdown().expect("engine shutdown");
+    TraceOutcome {
+        tokens,
+        wave_ttft_mean: wave_ttft,
+        straggler_ttft_mean: straggler_ttft,
+        tokens_per_sec: n_tokens as f64 / wall,
+    }
+}
+
 fn main() {
     let b = Bencher::default();
+    let mut records = Vec::new();
 
     // --- batcher throughput ---
     let ops = 100_000usize;
@@ -38,6 +110,14 @@ fn main() {
     let ops_per_sec = ops as f64 / s.p50;
     println!("batcher throughput: {:.2} M ops/s", ops_per_sec / 1e6);
     assert!(ops_per_sec > 1e6, "batcher below 1M ops/s: {ops_per_sec:.0}");
+    records.push(summary::record(
+        "coordinator_hotpath",
+        "batcher_x100k",
+        "mops_per_sec",
+        ops_per_sec / 1e6,
+        "M ops/s",
+        true,
+    ));
 
     // --- combine merge throughput (flash-decoding reduction path) ---
     let mut rng = Rng::seed_from(3);
@@ -54,6 +134,14 @@ fn main() {
         "combine: {:.1} merges/ms",
         64.0 / (s.p50 * 1e3)
     );
+    records.push(summary::record(
+        "coordinator_hotpath",
+        "combine_64_partials_d64",
+        "merges_per_ms",
+        64.0 / (s.p50 * 1e3),
+        "merges/ms",
+        true,
+    ));
 
     // --- gpusim sweep (all four figures) ---
     let s = b.run("gpusim all-figure sweep (4x4 panels x 4 methods x 6 n)", || {
@@ -61,6 +149,14 @@ fn main() {
     });
     assert!(s.p50 < 0.2, "gpusim sweep too slow: {}s", s.p50);
     println!("gpusim full sweep p50: {:.2} ms", s.p50 * 1e3);
+    records.push(summary::record(
+        "coordinator_hotpath",
+        "gpusim_all_figures",
+        "sweep_ms",
+        s.p50 * 1e3,
+        "ms",
+        false,
+    ));
 
     // --- serving decode step: legacy assemble/scatter vs KV arena ---
     // Per-token overhead comparison on the native backend (4 active
@@ -121,6 +217,73 @@ fn main() {
         s_legacy.p50 * 1e6,
         s_arena.p50 * 1e6
     );
+    records.push(summary::record(
+        "coordinator_hotpath",
+        "decode_b4_legacy",
+        "us_per_step",
+        s_legacy.p50 * 1e6,
+        "µs/step",
+        false,
+    ));
+    records.push(summary::record(
+        "coordinator_hotpath",
+        "decode_b4_arena",
+        "us_per_step",
+        s_arena.p50 * 1e6,
+        "µs/step",
+        false,
+    ));
+
+    // --- mixed-arrival trace: gang vs continuous scheduling ---
+    // 4 long sessions, then 4 short stragglers submitted once the wave is
+    // decoding.  Gang (wave) scheduling makes stragglers wait for the
+    // whole wave; the continuous scheduler admits them at the next step
+    // and chunk-prefills between decode steps.  The scheduler changes
+    // *when* work runs, never *what* it computes: greedy tokens must be
+    // byte-identical across modes.
+    let gang = run_trace(SchedMode::Gang);
+    let cont = run_trace(SchedMode::Continuous);
+    assert_eq!(
+        gang.tokens, cont.tokens,
+        "scheduling mode changed greedy decode output"
+    );
+    println!(
+        "mixed arrivals: straggler ttft gang {:.2} ms -> continuous {:.2} ms \
+         ({:.1}x better); wave ttft {:.2} -> {:.2} ms; tokens/s {:.0} -> {:.0}",
+        gang.straggler_ttft_mean * 1e3,
+        cont.straggler_ttft_mean * 1e3,
+        gang.straggler_ttft_mean / cont.straggler_ttft_mean.max(1e-9),
+        gang.wave_ttft_mean * 1e3,
+        cont.wave_ttft_mean * 1e3,
+        gang.tokens_per_sec,
+        cont.tokens_per_sec,
+    );
+    assert!(
+        cont.straggler_ttft_mean < gang.straggler_ttft_mean * 0.8,
+        "continuous scheduling must beat gang on straggler mean TTFT \
+         (continuous {:.2} ms vs gang {:.2} ms)",
+        cont.straggler_ttft_mean * 1e3,
+        gang.straggler_ttft_mean * 1e3,
+    );
+    for (mode, t) in [("gang", &gang), ("continuous", &cont)] {
+        records.push(summary::record(
+            "coordinator_hotpath",
+            &format!("mixed_arrival_{mode}"),
+            "straggler_ttft_ms",
+            t.straggler_ttft_mean * 1e3,
+            "ms",
+            false,
+        ));
+        records.push(summary::record(
+            "coordinator_hotpath",
+            &format!("mixed_arrival_{mode}"),
+            "tokens_per_sec",
+            t.tokens_per_sec,
+            "tok/s",
+            true,
+        ));
+    }
+
     std::fs::create_dir_all("reports").expect("reports dir");
     let csv = format!(
         "path,decode_batch,kv_bytes_per_step,us_per_step\n\
@@ -131,4 +294,5 @@ fn main() {
     );
     std::fs::write("reports/coordinator_hotpath.csv", csv).expect("write csv");
     println!("wrote reports/coordinator_hotpath.csv");
+    summary::merge_and_announce(&records);
 }

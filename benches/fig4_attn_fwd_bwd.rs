@@ -29,4 +29,12 @@ fn main() {
     std::fs::write("reports/fig4.csv", figures::to_csv(&results)).unwrap();
     assert!(bad.is_empty(), "{} band checks failed", bad.len());
     println!("figure 4: {}/{} bands ok; wrote reports/fig4.csv", checks.len(), checks.len());
+    fa2::bench::summary::merge_and_announce(&[fa2::bench::summary::record(
+        "fig4_attn_fwd_bwd",
+        "full_sweep",
+        "sweep_ms",
+        s.p50 * 1e3,
+        "ms",
+        false,
+    )]);
 }

@@ -31,4 +31,13 @@ fn main() {
         }
     }
     println!("figure 7 ok; wrote reports/fig7.csv");
+    // deterministic cost-model output: a drift here means the model changed
+    fa2::bench::summary::merge_and_announce(&[fa2::bench::summary::record(
+        "fig7_h100",
+        "fa2_fwd_bwd_best",
+        "tflops",
+        best,
+        "TFLOPs/s",
+        true,
+    )]);
 }

@@ -7,11 +7,13 @@
 //!   (the same order-preserving fan-out contract as PR 1's sweeps);
 //! - with ≥ 4 host cores, 4 workers beat serial on the forward pass.
 //!
-//! Writes reports/native_attn.csv:
+//! Writes reports/native_attn.csv (and the GFLOP/s headline numbers into
+//! reports/bench_summary.json for the ci.sh regression gate):
 //!   pass,threads,p50_secs,gflops,speedup_vs_serial
 
 use fa2::attn::exec::{parallel, AttnDims, FlashParams};
 use fa2::attn::Pass;
+use fa2::bench::summary;
 use fa2::util::rng::Rng;
 use fa2::util::stats::Bencher;
 
@@ -28,6 +30,7 @@ fn main() {
     let base_bwd = parallel::backward_with(1, &q, &k, &v, &base_fwd, &dout, dims, p);
 
     let mut csv = String::from("pass,threads,p50_secs,gflops,speedup_vs_serial\n");
+    let mut records = Vec::new();
     let mut fwd_serial_p50 = 0.0f64;
     let mut bwd_serial_p50 = 0.0f64;
     let mut fwd_speedup4 = 0.0f64;
@@ -51,6 +54,14 @@ fn main() {
         let gflops = dims.flops(Pass::Fwd) / s.p50 / 1e9;
         println!("fwd  {threads} threads: {gflops:>7.2} GFLOP/s  speedup {speedup:.2}x");
         csv.push_str(&format!("fwd,{threads},{:.6},{gflops:.2},{speedup:.3}\n", s.p50));
+        records.push(summary::record(
+            "native_attn",
+            &format!("fwd_b2h8n256d64_t{threads}"),
+            "gflops",
+            gflops,
+            "GFLOP/s",
+            true,
+        ));
 
         let s = b.run(&format!("flash bwd B2 H8 N256 d64 ({threads} thr)"), || {
             parallel::backward_with(threads, &q, &k, &v, &base_fwd, &dout, dims, p)
@@ -67,6 +78,14 @@ fn main() {
         let gflops = dims.flops(Pass::Bwd) / s.p50 / 1e9;
         println!("bwd  {threads} threads: {gflops:>7.2} GFLOP/s  speedup {speedup:.2}x");
         csv.push_str(&format!("bwd,{threads},{:.6},{gflops:.2},{speedup:.3}\n", s.p50));
+        records.push(summary::record(
+            "native_attn",
+            &format!("bwd_b2h8n256d64_t{threads}"),
+            "gflops",
+            gflops,
+            "GFLOP/s",
+            true,
+        ));
     }
 
     // split-KV decode: one row over a long history, streamed vs fanned
@@ -80,6 +99,14 @@ fn main() {
     });
     println!("decode (streamed): {:.1} µs/token", s.p50 * 1e6);
     csv.push_str(&format!("decode_streamed,1,{:.6},,\n", s.p50));
+    records.push(summary::record(
+        "native_attn",
+        "decode_splitkv_n4096_d64",
+        "us_per_token",
+        s.p50 * 1e6,
+        "µs/token",
+        false,
+    ));
     let s = b.run("split-KV decode n=4096 d=64 chunk=256 (fanned x4)", || {
         parallel::decode_splitkv_fanned(4, &qrow, &kh, &vh, hist, scale, 256)
     });
@@ -89,6 +116,7 @@ fn main() {
     std::fs::create_dir_all("reports").unwrap();
     std::fs::write("reports/native_attn.csv", &csv).unwrap();
     println!("wrote reports/native_attn.csv");
+    summary::merge_and_announce(&records);
 
     let host = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
     if host >= 4 {

@@ -71,4 +71,12 @@ fn main() {
         fmt_duration(st.total_transfer_secs),
         st.executions
     );
+    fa2::bench::summary::merge_and_announce(&[fa2::bench::summary::record(
+        "runtime_exec",
+        "dispatch_b4h4n512d64",
+        "transfer_fraction",
+        overhead,
+        "fraction of wall",
+        false,
+    )]);
 }

@@ -30,6 +30,17 @@ fn main() {
     }
     std::fs::create_dir_all("reports").unwrap();
     std::fs::write("reports/table1.csv", table1::to_csv(&cells)).unwrap();
+    // deterministic cost-model output: a drift here means the model changed
+    let mean_tflops =
+        cells.iter().map(|c| c.tflops_per_gpu).sum::<f64>() / cells.len() as f64;
+    fa2::bench::summary::merge_and_announce(&[fa2::bench::summary::record(
+        "table1_e2e_training",
+        "simulated_a100_mean",
+        "tflops",
+        mean_tflops,
+        "TFLOPs/s",
+        true,
+    )]);
 
     // --- real CPU analogue (requires `make artifacts`) ---
     if !Path::new("artifacts/manifest.json").exists() {

@@ -3,4 +3,5 @@
 //! CLI both call into here.
 
 pub mod figures;
+pub mod summary;
 pub mod table1;

@@ -1,0 +1,373 @@
+//! Machine-readable bench summaries and the CI regression gate.
+//!
+//! Every bench target under `benches/` records its headline numbers
+//! (GFLOP/s, tokens/s, µs/step, ...) into one unified
+//! `reports/bench_summary.json` via [`merge_into`] — each bench replaces
+//! its *own* entries and preserves everyone else's, so running the suite
+//! piecewise still converges on a complete summary.  `repro bench-gate`
+//! (main.rs) then compares the summary against the checked-in
+//! `benches/baseline.json` and fails CI when any metric regressed by more
+//! than the tolerance (default 15%); `./ci.sh --update-baseline` re-pins.
+//!
+//! `FA2_BENCH_INJECT_SLOWDOWN=<factor>` worsens every recorded value by
+//! `factor` (divides higher-is-better metrics, multiplies lower-is-better
+//! ones).  It exists so the gate itself can be exercised end to end:
+//! `FA2_BENCH_INJECT_SLOWDOWN=1.2 ./ci.sh` must fail the bench-gate step.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Where benches accumulate the current run's summary (workspace-root
+/// relative; resolve with [`summary_path`]).
+pub const SUMMARY_PATH: &str = "reports/bench_summary.json";
+/// The checked-in reference the gate compares against (workspace-root
+/// relative; resolve with [`baseline_path`]).
+pub const BASELINE_PATH: &str = "benches/baseline.json";
+
+/// The workspace root, independent of who is running: cargo sets the cwd
+/// of bench/test binaries to the *package* root (rust/), while `cargo
+/// run`/ci.sh inherit the invoker's cwd (the workspace root).  Anchor on
+/// ci.sh so both sides read and write the SAME summary/baseline files.
+pub fn workspace_root() -> PathBuf {
+    if Path::new("ci.sh").exists() {
+        PathBuf::from(".")
+    } else if Path::new("../ci.sh").exists() {
+        PathBuf::from("..")
+    } else {
+        PathBuf::from(".")
+    }
+}
+
+/// `SUMMARY_PATH` anchored to the workspace root.
+pub fn summary_path() -> PathBuf {
+    workspace_root().join(SUMMARY_PATH)
+}
+
+/// `BASELINE_PATH` anchored to the workspace root.
+pub fn baseline_path() -> PathBuf {
+    workspace_root().join(BASELINE_PATH)
+}
+
+/// One (bench, config, metric) measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Bench target, e.g. "coordinator_hotpath".
+    pub bench: String,
+    /// Case within the bench, e.g. "decode_b4" or "fwd_t4".
+    pub config: String,
+    /// Metric name, e.g. "gflops" or "tokens_per_sec".
+    pub metric: String,
+    pub value: f64,
+    pub unit: String,
+    /// Direction: true for throughput-like metrics, false for latencies.
+    pub higher_is_better: bool,
+}
+
+impl BenchRecord {
+    pub fn key(&self) -> String {
+        format!("{}/{}/{}", self.bench, self.config, self.metric)
+    }
+}
+
+/// The injected-slowdown test hook (1.0 = off).
+pub fn slowdown_factor() -> f64 {
+    std::env::var("FA2_BENCH_INJECT_SLOWDOWN")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|f| f.is_finite() && *f > 0.0)
+        .unwrap_or(1.0)
+}
+
+fn apply_slowdown(value: f64, higher_is_better: bool, factor: f64) -> f64 {
+    if factor == 1.0 {
+        value
+    } else if higher_is_better {
+        value / factor
+    } else {
+        value * factor
+    }
+}
+
+/// Build a record, applying `FA2_BENCH_INJECT_SLOWDOWN` — benches must
+/// construct their entries through here so the gate's failure path stays
+/// testable end to end.
+pub fn record(
+    bench: &str,
+    config: &str,
+    metric: &str,
+    value: f64,
+    unit: &str,
+    higher_is_better: bool,
+) -> BenchRecord {
+    BenchRecord {
+        bench: bench.to_string(),
+        config: config.to_string(),
+        metric: metric.to_string(),
+        value: apply_slowdown(value, higher_is_better, slowdown_factor()),
+        unit: unit.to_string(),
+        higher_is_better,
+    }
+}
+
+fn to_json(records: &[BenchRecord]) -> Json {
+    let mut sorted: Vec<&BenchRecord> = records.iter().collect();
+    sorted.sort_by_key(|r| r.key());
+    Json::Obj(vec![
+        ("version".into(), Json::Num(1.0)),
+        (
+            "benches".into(),
+            Json::Arr(
+                sorted
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(vec![
+                            ("bench".into(), Json::Str(r.bench.clone())),
+                            ("config".into(), Json::Str(r.config.clone())),
+                            ("metric".into(), Json::Str(r.metric.clone())),
+                            ("value".into(), Json::Num(r.value)),
+                            ("unit".into(), Json::Str(r.unit.clone())),
+                            ("higher_is_better".into(), Json::Bool(r.higher_is_better)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn from_json(j: &Json) -> Result<Vec<BenchRecord>> {
+    let arr = j
+        .get("benches")
+        .and_then(|b| b.as_arr())
+        .context("bench summary: missing 'benches' array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let field = |k: &str| -> Result<&Json> {
+            e.get(k).with_context(|| format!("bench summary entry {i}: missing '{k}'"))
+        };
+        out.push(BenchRecord {
+            bench: field("bench")?.as_str().context("'bench' not a string")?.to_string(),
+            config: field("config")?.as_str().context("'config' not a string")?.to_string(),
+            metric: field("metric")?.as_str().context("'metric' not a string")?.to_string(),
+            value: field("value")?.as_f64().context("'value' not a number")?,
+            unit: field("unit")?.as_str().context("'unit' not a string")?.to_string(),
+            higher_is_better: field("higher_is_better")?
+                .as_bool()
+                .context("'higher_is_better' not a bool")?,
+        });
+    }
+    Ok(out)
+}
+
+/// Load a summary/baseline file; a missing file is an empty record set
+/// (callers that care distinguish via `path.exists()`).
+pub fn load(path: &Path) -> Result<Vec<BenchRecord>> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    from_json(&j)
+}
+
+/// Write `records` (sorted by key, deterministic bytes).
+pub fn save(path: &Path, records: &[BenchRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, to_json(records).to_string() + "\n")
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Merge this bench run into the unified summary: entries from the benches
+/// named in `records` are replaced wholesale; other benches' entries are
+/// preserved.
+pub fn merge_into(path: &Path, records: &[BenchRecord]) -> Result<()> {
+    let mut all = load(path)?;
+    all.retain(|old| !records.iter().any(|r| r.bench == old.bench));
+    all.extend(records.iter().cloned());
+    save(path, &all)
+}
+
+/// The gate's verdict over one baseline/current comparison.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    pub compared: usize,
+    pub improvements: usize,
+    /// Human-readable regression lines — non-empty fails CI.
+    pub regressions: Vec<String>,
+    /// Metrics measured now but not pinned (warn: re-pin the baseline).
+    pub missing_in_baseline: Vec<String>,
+    /// Pinned metrics that did not run (warn: a bench silently dropped).
+    pub missing_in_current: Vec<String>,
+}
+
+/// Compare `current` against `baseline`: a metric regresses when it is
+/// worse by strictly more than `tolerance` (0.15 = 15%) in its own
+/// direction.  The comparison is on the relative change with a tiny
+/// epsilon, so a measurement at exactly the tolerance never flaps on
+/// floating-point representation.
+pub fn gate(baseline: &[BenchRecord], current: &[BenchRecord], tolerance: f64) -> GateReport {
+    const EPS: f64 = 1e-9;
+    let mut report = GateReport::default();
+    for base in baseline {
+        let Some(cur) = current.iter().find(|c| c.key() == base.key()) else {
+            report.missing_in_current.push(base.key());
+            continue;
+        };
+        report.compared += 1;
+        let change = cur.value / base.value - 1.0;
+        let worse = if cur.higher_is_better {
+            change < -(tolerance + EPS)
+        } else {
+            change > tolerance + EPS
+        };
+        if worse {
+            report.regressions.push(format!(
+                "{}: {:.4} -> {:.4} {} ({:+.1}%, tolerance {:.0}%)",
+                base.key(),
+                base.value,
+                cur.value,
+                cur.unit,
+                change * 100.0,
+                tolerance * 100.0
+            ));
+        } else if (cur.higher_is_better && cur.value > base.value)
+            || (!cur.higher_is_better && cur.value < base.value)
+        {
+            report.improvements += 1;
+        }
+    }
+    for cur in current {
+        if !baseline.iter().any(|b| b.key() == cur.key()) {
+            report.missing_in_baseline.push(cur.key());
+        }
+    }
+    report
+}
+
+/// Convenience for bench mains: merge into the workspace-root summary and
+/// report where it went.  Benches must not fail the run over a
+/// summary-file problem (the gate will complain about the hole instead),
+/// so this only prints on error.
+pub fn merge_and_announce(records: &[BenchRecord]) {
+    let path = summary_path();
+    match merge_into(&path, records) {
+        Ok(()) => println!(
+            "recorded {} bench summary entries -> {}",
+            records.len(),
+            path.display()
+        ),
+        Err(e) => eprintln!("WARNING: could not write {}: {e:#}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(bench: &str, config: &str, metric: &str, value: f64, hib: bool) -> BenchRecord {
+        BenchRecord {
+            bench: bench.into(),
+            config: config.into(),
+            metric: metric.into(),
+            value,
+            unit: "u".into(),
+            higher_is_better: hib,
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_json_deterministically() {
+        let dir = std::env::temp_dir().join("fa2_bench_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.json");
+        let records =
+            vec![rec("b", "cfg2", "m", 2.5, false), rec("a", "cfg1", "gflops", 10.0, true)];
+        save(&path, &records).unwrap();
+        let loaded = load(&path).unwrap();
+        // sorted by key on save
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].key(), "a/cfg1/gflops");
+        assert_eq!(loaded[1].key(), "b/cfg2/m");
+        assert!(loaded[0].higher_is_better && !loaded[1].higher_is_better);
+        let first = std::fs::read(&path).unwrap();
+        save(&path, &loaded).unwrap();
+        assert_eq!(first, std::fs::read(&path).unwrap(), "bytes must be deterministic");
+        // missing file loads as empty; garbage is a typed error
+        assert!(load(&dir.join("absent.json")).unwrap().is_empty());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn merge_replaces_own_bench_and_preserves_others() {
+        let dir = std::env::temp_dir().join("fa2_bench_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merge.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[rec("attn", "fwd", "gflops", 10.0, true)]).unwrap();
+        merge_into(&path, &[rec("hotpath", "decode", "us", 5.0, false)]).unwrap();
+        // re-running attn replaces its stale entry (old config dropped)
+        merge_into(&path, &[rec("attn", "fwd_v2", "gflops", 12.0, true)]).unwrap();
+        let all = load(&path).unwrap();
+        let keys: Vec<String> = all.iter().map(|r| r.key()).collect();
+        assert_eq!(keys, vec!["attn/fwd_v2/gflops", "hotpath/decode/us"]);
+    }
+
+    #[test]
+    fn gate_flags_regressions_in_the_right_direction() {
+        let baseline = vec![
+            rec("a", "c", "thru", 100.0, true),
+            rec("a", "c", "lat", 100.0, false),
+        ];
+        // exactly at tolerance: NOT a regression (strictly-worse rule)
+        let r = gate(
+            &baseline,
+            &[rec("a", "c", "thru", 85.0, true), rec("a", "c", "lat", 115.0, false)],
+            0.15,
+        );
+        assert_eq!(r.compared, 2);
+        assert!(r.regressions.is_empty(), "{:?}", r.regressions);
+        // past tolerance in each direction: both fail
+        let r = gate(
+            &baseline,
+            &[rec("a", "c", "thru", 80.0, true), rec("a", "c", "lat", 120.0, false)],
+            0.15,
+        );
+        assert_eq!(r.regressions.len(), 2, "{:?}", r.regressions);
+        assert!(r.regressions[0].contains("a/c"), "{:?}", r.regressions);
+        // improvements counted, never flagged
+        let r = gate(
+            &baseline,
+            &[rec("a", "c", "thru", 130.0, true), rec("a", "c", "lat", 70.0, false)],
+            0.15,
+        );
+        assert!(r.regressions.is_empty());
+        assert_eq!(r.improvements, 2);
+    }
+
+    #[test]
+    fn gate_reports_coverage_holes_both_ways() {
+        let baseline = vec![rec("a", "c", "m", 1.0, true), rec("b", "c", "m", 1.0, true)];
+        let current = vec![rec("a", "c", "m", 1.0, true), rec("n", "c", "m", 1.0, true)];
+        let r = gate(&baseline, &current, 0.15);
+        assert_eq!(r.compared, 1);
+        assert_eq!(r.missing_in_current, vec!["b/c/m".to_string()]);
+        assert_eq!(r.missing_in_baseline, vec!["n/c/m".to_string()]);
+    }
+
+    #[test]
+    fn injected_slowdown_worsens_both_directions() {
+        // the pure core of the FA2_BENCH_INJECT_SLOWDOWN hook
+        assert_eq!(apply_slowdown(100.0, true, 1.25), 80.0, "throughput divided");
+        assert_eq!(apply_slowdown(100.0, false, 1.25), 125.0, "latency multiplied");
+        assert_eq!(apply_slowdown(100.0, true, 1.0), 100.0);
+    }
+}

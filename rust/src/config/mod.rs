@@ -34,10 +34,18 @@ pub struct ServeConfig {
     pub top_k: usize,
     /// Stream the first session's `TokenEvent`s to stdout (`--stream`).
     pub stream: bool,
+    /// Scheduler mode: "continuous" (default) | "gang" (wave baseline).
+    pub sched: String,
+    /// Concurrently admitted sessions; sizes the KV arena (admission is
+    /// reserved against real slab availability).
+    pub max_in_flight: usize,
+    /// Prompt tokens a prefilling session advances per scheduler step.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
+        let sched = crate::coordinator::scheduler::SchedulerConfig::default();
         ServeConfig {
             model: "tiny".into(),
             backend: "auto".into(),
@@ -48,6 +56,9 @@ impl Default for ServeConfig {
             temperature: 0.0,
             top_k: 0,
             stream: false,
+            sched: "continuous".into(),
+            max_in_flight: sched.max_in_flight,
+            prefill_chunk: sched.prefill_chunk,
         }
     }
 }
@@ -113,6 +124,13 @@ impl RunConfig {
                     as f32,
                 top_k: doc.i64_or("serve.top_k", d.serve.top_k as i64) as usize,
                 stream: doc.bool_or("serve.stream", d.serve.stream),
+                sched: doc.str_or("serve.sched", &d.serve.sched).to_string(),
+                max_in_flight: doc
+                    .i64_or("serve.max_in_flight", d.serve.max_in_flight as i64)
+                    as usize,
+                prefill_chunk: doc
+                    .i64_or("serve.prefill_chunk", d.serve.prefill_chunk as i64)
+                    as usize,
             },
             bench: BenchConfig {
                 out_dir: doc.str_or("bench.out_dir", &d.bench.out_dir).to_string(),
@@ -139,7 +157,8 @@ mod tests {
             "artifact_dir = \"a\"\n[train]\nmodel = \"small\"\nsteps = 7\n\
              checkpoint = \"ckpt.fat1\"\n[serve]\narrival_rate = 3.5\n\
              backend = \"native\"\ntemperature = 0.8\ntop_k = 40\n\
-             stream = true\n",
+             stream = true\nsched = \"gang\"\nmax_in_flight = 3\n\
+             prefill_chunk = 2\n",
         )
         .unwrap();
         let c = RunConfig::from_doc(&doc);
@@ -152,6 +171,9 @@ mod tests {
         assert!((c.serve.temperature - 0.8).abs() < 1e-6);
         assert_eq!(c.serve.top_k, 40);
         assert!(c.serve.stream);
+        assert_eq!(c.serve.sched, "gang");
+        assert_eq!(c.serve.max_in_flight, 3);
+        assert_eq!(c.serve.prefill_chunk, 2);
     }
 
     #[test]
@@ -160,5 +182,10 @@ mod tests {
         assert_eq!(c.serve.temperature, 0.0);
         assert_eq!(c.serve.top_k, 0);
         assert!(!c.serve.stream);
+        // scheduler defaults mirror SchedulerConfig::default()
+        let s = crate::coordinator::scheduler::SchedulerConfig::default();
+        assert_eq!(c.serve.sched, "continuous");
+        assert_eq!(c.serve.max_in_flight, s.max_in_flight);
+        assert_eq!(c.serve.prefill_chunk, s.prefill_chunk);
     }
 }

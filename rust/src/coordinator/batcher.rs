@@ -138,6 +138,48 @@ mod tests {
     }
 
     #[test]
+    fn deadline_exactly_at_now_dispatches() {
+        // boundary: `now - enqueued_at >= max_wait` is inclusive, so a
+        // request is ready at EXACTLY its deadline, not one tick later
+        let mut b = Batcher::new(policy(4, 10));
+        b.push(1u32, 1.0);
+        assert!(!b.ready(1.009_999));
+        assert!(b.ready(1.010), "deadline exactly at now must dispatch");
+        assert_eq!(b.time_to_deadline(1.010).unwrap(), Duration::ZERO);
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn max_batch_one_degenerates_to_fifo_singletons() {
+        let mut b = Batcher::new(policy(1, 100));
+        for i in 0..3 {
+            b.push(i, 0.0);
+        }
+        // every queued item makes a full batch of one, immediately
+        for expect in 0..3 {
+            assert!(b.ready(0.0));
+            let batch = b.take_batch();
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].item, expect, "FIFO order preserved at max_batch=1");
+        }
+        assert!(!b.ready(1000.0), "drained queue never becomes ready");
+        assert_eq!((b.enqueued, b.dispatched), (3, 3));
+    }
+
+    #[test]
+    fn empty_take_batch_is_a_harmless_noop() {
+        let mut b = Batcher::new(policy(4, 10));
+        assert!(b.take_batch().is_empty());
+        assert_eq!(b.dispatched, 0);
+        assert!(b.is_empty());
+        // still works normally afterwards
+        b.push(7u8, 0.0);
+        assert_eq!(b.take_batch()[0].item, 7);
+        assert!(b.take_batch().is_empty());
+        assert_eq!(b.dispatched, 1);
+    }
+
+    #[test]
     fn deadline_countdown() {
         let mut b = Batcher::new(policy(8, 10));
         assert!(b.time_to_deadline(0.0).is_none());

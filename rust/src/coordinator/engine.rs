@@ -1,26 +1,33 @@
-//! The session-based serving engine (DESIGN.md §8): a typed
-//! [`Engine`]/[`Session`] API over the coordinator worker.
+//! The session-based serving engine (DESIGN.md §8/§9): a typed
+//! [`Engine`]/[`Session`] API over a continuously-batched worker.
 //!
-//! Where the old `Server` took a `GenRequest` and answered with one final
-//! `GenResponse`, the engine:
+//! The engine:
 //!
 //! - discovers a [`ModelBundle`] from the manifest by typed query
-//!   (`ArtifactKind` + `meta.model`) instead of format-string name
-//!   guessing, and drives decode grouping from the discovered
-//!   [`DecodeBuckets`] rather than a hardcoded 1/4 pair;
+//!   (`ArtifactKind` + `meta.model`) and drives decode grouping from the
+//!   discovered [`DecodeBuckets`];
 //! - hands each request a [`Session`] carrying [`SamplingParams`] (greedy
 //!   by default; temperature/top-k with the seeded in-tree RNG) and
 //!   **streams** [`TokenEvent`]s — first token, per-token deltas, and a
-//!   final finish reason — instead of buffering the whole generation;
-//! - rejects over-long prompts ([`EngineError::PromptTooLong`] — the old
-//!   server silently truncated and padded with token 0) and out-of-vocab
-//!   tokens ([`EngineError::TokenOutOfVocab`] — one bad request must not
-//!   poison the shared worker) *before* they reach the worker, and fails
-//!   fast with [`EngineError::Closed`] when the worker is gone (the old
-//!   server dropped the send error and left clients blocked forever);
-//! - owns a [`KvArena`]: per-sequence cache slots decoded **in place**
-//!   through the widened `Module::decode_step` seam — zero per-token
-//!   assemble/scatter bytes on the native backend (metrics-asserted).
+//!   final finish reason;
+//! - schedules work with a **continuous batching scheduler**
+//!   (`coordinator::scheduler`, DESIGN.md §9): per-step FCFS admission
+//!   into in-flight decode groups, prompt prefill *chunked through the
+//!   same `decode_step` seam* (each prompt token is replayed in place on
+//!   the session's KV slot, so prefill rows ride the same buckets as
+//!   decode rows and a long prompt cannot stall the token cadence of
+//!   running sessions), KV-pressure-aware admission against the bounded
+//!   [`KvArena`], slot refill as sessions retire, and recompute-style
+//!   preemption under the anti-starvation bound.  The scheduler changes
+//!   *when* work runs, never *what* it computes: per-session greedy
+//!   output is byte-identical to solo decode (asserted in
+//!   `tests/native_engine.rs`);
+//! - rejects over-long prompts ([`EngineError::PromptTooLong`]),
+//!   out-of-vocab tokens ([`EngineError::TokenOutOfVocab`]), and — new
+//!   with the scheduler — applies typed backpressure
+//!   ([`EngineError::Saturated`]) once `max_queue` submissions are
+//!   waiting, instead of growing the channel without bound; a dead worker
+//!   still fails fast with [`EngineError::Closed`].
 //!
 //! Dropping a `Session` (or calling [`Session::cancel`]) cancels the
 //! request; the worker retires it with [`FinishReason::Cancelled`] at the
@@ -29,7 +36,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -42,9 +49,10 @@ use crate::util::rng::Rng;
 use crate::util::tensorio::HostTensor;
 
 use super::metrics::Metrics;
+use super::scheduler::{SchedMode, Scheduler, SchedulerConfig};
 
 /// Per-session sampling configuration.  The default is greedy argmax
-/// (temperature 0), which reproduces the old server's decoding exactly.
+/// (temperature 0) — deterministic, and invariant to scheduling.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SamplingParams {
     /// Stop after this many generated tokens (>= 1; the prefill token
@@ -151,6 +159,10 @@ pub enum EngineError {
     /// (backend modules treat out-of-range tokens as a fatal engine
     /// error).
     TokenOutOfVocab { token: i32, vocab: usize },
+    /// `max_queue` submissions are already waiting for admission.  Typed
+    /// backpressure: the client can retry/shed instead of the old
+    /// behavior of growing the worker channel without bound.
+    Saturated { max_queue: usize },
     /// The worker thread has shut down (or died); nothing submitted now
     /// can ever complete, so fail fast instead of blocking forever.
     Closed,
@@ -166,6 +178,11 @@ impl fmt::Display for EngineError {
             EngineError::TokenOutOfVocab { token, vocab } => {
                 write!(f, "prompt token {token} is outside the model vocabulary 0..{vocab}")
             }
+            EngineError::Saturated { max_queue } => write!(
+                f,
+                "engine is saturated ({max_queue} submissions already waiting for \
+                 admission); retry later or raise max_queue/max_in_flight"
+            ),
             EngineError::Closed => write!(f, "engine is closed (worker thread has exited)"),
         }
     }
@@ -268,16 +285,36 @@ struct Incoming {
 pub struct Engine {
     tx: Sender<Incoming>,
     shapes: ServeShapes,
+    /// Submissions not yet admitted to a KV slot — the bounded queue depth
+    /// behind [`EngineError::Saturated`].
+    queued: Arc<AtomicUsize>,
+    max_queue: usize,
     handle: JoinHandle<Result<Metrics>>,
 }
 
 impl Engine {
-    /// Start the worker on an explicit backend (`BackendKind::Native`
-    /// needs no artifacts on disk).
+    /// Start the worker on an explicit backend with the default
+    /// (continuous) scheduler (`BackendKind::Native` needs no artifacts on
+    /// disk).
     pub fn start(artifact_dir: PathBuf, model: &str, backend: BackendKind) -> Result<Engine> {
+        Self::start_with(artifact_dir, model, backend, SchedulerConfig::default())
+    }
+
+    /// Start the worker with an explicit scheduler policy (`max_in_flight`
+    /// sizes the KV arena; `SchedMode::Gang` is the wave-scheduling
+    /// baseline kept for benchmarks).
+    pub fn start_with(
+        artifact_dir: PathBuf,
+        model: &str,
+        backend: BackendKind,
+        cfg: SchedulerConfig,
+    ) -> Result<Engine> {
+        let cfg = cfg.sanitized();
         let model = model.to_string();
         let (tx, rx) = channel::<Incoming>();
         let (ready_tx, ready_rx) = channel::<Result<ServeShapes>>();
+        let queued = Arc::new(AtomicUsize::new(0));
+        let worker_queued = queued.clone();
         let handle = std::thread::spawn(move || {
             let setup = || -> Result<(ModelBundle, Vec<HostTensor>)> {
                 let rt = Runtime::with_backend(&artifact_dir, backend)?;
@@ -290,7 +327,7 @@ impl Engine {
             match setup() {
                 Ok((bundle, params)) => {
                     let _ = ready_tx.send(Ok(bundle.shapes));
-                    worker(rx, bundle, params)
+                    worker(rx, bundle, params, cfg, worker_queued)
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -301,7 +338,7 @@ impl Engine {
         let shapes = ready_rx
             .recv()
             .map_err(|_| Error::msg("engine worker died during setup"))??;
-        Ok(Engine { tx, shapes, handle })
+        Ok(Engine { tx, shapes, queued, max_queue: cfg.max_queue, handle })
     }
 
     /// The serving model's compiled shapes (prompt window, vocab, ...).
@@ -309,9 +346,15 @@ impl Engine {
         self.shapes
     }
 
+    /// Submissions currently waiting for admission.
+    pub fn queue_depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
     /// Open a session: validates the prompt against the compiled window
-    /// and enqueues it.  Fails fast with a typed error instead of
-    /// truncating prompts or blocking on a dead worker.
+    /// and the bounded queue, then enqueues it.  Fails fast with a typed
+    /// error instead of truncating prompts, growing the queue without
+    /// bound, or blocking on a dead worker.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
@@ -327,6 +370,23 @@ impl Engine {
         {
             return Err(EngineError::TokenOutOfVocab { token: t, vocab: self.shapes.vocab });
         }
+        // Claim a queue slot (typed backpressure instead of unbounded
+        // channel growth); the worker releases it at admission.
+        let mut depth = self.queued.load(Ordering::Relaxed);
+        loop {
+            if depth >= self.max_queue {
+                return Err(EngineError::Saturated { max_queue: self.max_queue });
+            }
+            match self.queued.compare_exchange_weak(
+                depth,
+                depth + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => depth = now,
+            }
+        }
         let (events_tx, events) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let incoming = Incoming {
@@ -336,7 +396,10 @@ impl Engine {
             cancel: cancel.clone(),
             submitted: Instant::now(),
         };
-        self.tx.send(incoming).map_err(|_| EngineError::Closed)?;
+        if self.tx.send(incoming).is_err() {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+            return Err(EngineError::Closed);
+        }
         Ok(Session { events, cancel, cancel_on_drop: true })
     }
 
@@ -441,124 +504,134 @@ impl Sampler {
 // ---------------------------------------------------------------------------
 // worker
 
-/// One active sequence's server-side state.
+/// One session's server-side state (pending, active, or preempted).
+///
+/// The prompt is not prefilled by the fixed-shape prefill artifact any
+/// more: it is **replayed** token by token through the same `decode_step`
+/// seam as generation, writing the KV cache in place at true positions
+/// (no window padding — pad tokens used to attend as real context).
+/// `replay`/`cursor` drive that: while `cursor < replay.len()` the session
+/// contributes its next replay token to a batch row and the resulting
+/// logits are discarded, except for the *last* replay row of a
+/// never-sampled session, which yields the first generated token.  A
+/// preempted session rebuilds `replay` as `prompt ++ generated[..k-1]`
+/// (everything it had fed) and recomputes its cache the same way — the
+/// per-token math is deterministic and row-independent, so the resumed
+/// stream is byte-identical to an uninterrupted run.
 struct SeqState {
     events_tx: Sender<TokenEvent>,
     cancel: Arc<AtomicBool>,
     submitted: Instant,
     ttft: f64,
-    /// True (pre-padding) prompt length, tracked per satellite fix: the
-    /// compiled prefill pads shorter prompts to `prompt_len` with token 0
-    /// (part of the fixed-shape artifact contract); over-long prompts are
-    /// rejected at `submit` instead of silently truncated.
+    /// True client prompt length (metrics; `prompt` itself is normalized
+    /// so it is never empty).
     prompt_len: usize,
+    /// Normalized prompt, kept verbatim for preemption replay.
+    prompt: Vec<i32>,
+    /// Tokens to feed before sampling (re)starts.
+    replay: Vec<i32>,
+    /// Next replay index; `cursor == replay.len()` means decoding.
+    cursor: usize,
     generated: Vec<i32>,
     sampler: Sampler,
-    /// Next KV write position (starts at the padded prompt window).
+    /// Next KV write position == tokens fed so far.
     pos: i32,
-    slot: KvSlot,
+    /// Present iff the session is admitted (holds an arena slab).
+    slot: Option<KvSlot>,
+    /// First admission already happened (queue-depth + metrics are
+    /// observed once; preemption re-admissions skip them).
+    admitted_once: bool,
+}
+
+impl SeqState {
+    fn replaying(&self) -> bool {
+        self.cursor < self.replay.len()
+    }
 }
 
 fn finish_reason(s: &SeqState, shapes: &ServeShapes) -> Option<FinishReason> {
     if s.cancel.load(Ordering::Relaxed) {
         return Some(FinishReason::Cancelled);
     }
-    let last = *s.generated.last().expect("admitted with >= 1 token");
+    if s.generated.is_empty() {
+        return None; // still prefilling: nothing to judge yet
+    }
+    let last = *s.generated.last().expect("checked non-empty");
     if s.sampler.params.stop_tokens.contains(&last) {
         return Some(FinishReason::Stop);
     }
     if s.generated.len() >= s.sampler.params.max_tokens {
         return Some(FinishReason::MaxTokens);
     }
-    if s.pos as usize >= shapes.max_seq {
+    if !s.replaying() && s.pos as usize >= shapes.max_seq {
         return Some(FinishReason::ContextFull);
     }
     None
 }
 
+fn send_done(s: SeqState, finish: FinishReason, metrics: &mut Metrics) {
+    let latency = s.submitted.elapsed().as_secs_f64();
+    // Cancelled sessions are counted separately — folding an aborted
+    // generation into the latency/TTFT percentiles would skew the
+    // numbers the serving report exists to measure.
+    if finish == FinishReason::Cancelled {
+        metrics.observe_cancelled();
+    } else {
+        metrics.observe_request(latency, s.ttft, s.generated.len());
+    }
+    let _ = s.events_tx.send(TokenEvent::Done {
+        finish,
+        tokens: s.generated,
+        latency_secs: latency,
+        ttft_secs: s.ttft,
+    });
+}
+
+/// Retire every *admitted* session with a finish reason, freeing its slot
+/// for the next refill.
 fn retire_finished(
-    active: &mut BTreeMap<u64, SeqState>,
+    sessions: &mut BTreeMap<u64, SeqState>,
+    sched: &mut Scheduler,
     arena: &mut KvArena,
     metrics: &mut Metrics,
     shapes: &ServeShapes,
 ) {
-    let done: Vec<(u64, FinishReason)> = active
+    let done: Vec<(u64, FinishReason)> = sessions
         .iter()
+        .filter(|(_, s)| s.slot.is_some())
         .filter_map(|(id, s)| finish_reason(s, shapes).map(|r| (*id, r)))
         .collect();
     for (id, finish) in done {
-        let s = active.remove(&id).expect("id came from the map");
-        arena.free(s.slot);
-        let latency = s.submitted.elapsed().as_secs_f64();
-        // Cancelled sessions are counted separately — folding an aborted
-        // generation into the latency/TTFT percentiles would skew the
-        // numbers the serving report exists to measure.
-        if finish == FinishReason::Cancelled {
-            metrics.observe_cancelled();
-        } else {
-            metrics.observe_request(latency, s.ttft, s.generated.len());
-        }
-        let _ = s.events_tx.send(TokenEvent::Done {
-            finish,
-            tokens: s.generated,
-            latency_secs: latency,
-            ttft_secs: s.ttft,
-        });
+        let mut s = sessions.remove(&id).expect("id came from the map");
+        sched.retire(id);
+        arena.free(s.slot.take().expect("retiring an admitted session"));
+        send_done(s, finish, metrics);
     }
-}
-
-/// Admit one request: prefill, adopt the cache pair into the arena, emit
-/// the `First` event.
-fn admit(
-    bundle: &ModelBundle,
-    params: &[HostTensor],
-    arena: &mut KvArena,
-    inc: Incoming,
-) -> Result<SeqState> {
-    let shapes = bundle.shapes;
-    let true_len = inc.prompt.len();
-    debug_assert!(true_len <= shapes.prompt_len, "submit() validates the prompt window");
-    // Pad the prompt to the compiled window (token 0); see `prompt_len`.
-    let mut prompt = inc.prompt;
-    prompt.resize(shapes.prompt_len, 0);
-    let tokens = HostTensor::from_i32(&[1, shapes.prompt_len], &prompt);
-    let mut inputs: Vec<HostTensor> = params.to_vec();
-    inputs.push(tokens);
-    let out = bundle.prefill.run(&inputs)?;
-    let mut sampler = Sampler::new(inc.sampling);
-    let first = sampler.next(&out[0].to_f32_vec());
-    let ttft = inc.submitted.elapsed().as_secs_f64();
-    let slot = arena.adopt(out[1].to_f32_vec(), out[2].to_f32_vec())?;
-    let _ = inc.events_tx.send(TokenEvent::First { token: first, ttft_secs: ttft });
-    Ok(SeqState {
-        events_tx: inc.events_tx,
-        cancel: inc.cancel,
-        submitted: inc.submitted,
-        ttft,
-        prompt_len: true_len,
-        generated: vec![first],
-        sampler,
-        pos: shapes.prompt_len as i32,
-        slot,
-    })
 }
 
 fn worker(
     rx: Receiver<Incoming>,
     bundle: ModelBundle,
     params: Vec<HostTensor>,
+    cfg: SchedulerConfig,
+    queued: Arc<AtomicUsize>,
 ) -> Result<Metrics> {
     let shapes = bundle.shapes;
-    let mut arena = KvArena::new(shapes.geometry());
+    // max_in_flight sizes the arena: admission decisions below are made
+    // against real slab availability (`arena.available()`).
+    let mut arena = KvArena::with_capacity(shapes.geometry(), cfg.max_in_flight);
+    let mut sched = Scheduler::new(cfg);
+    let cfg = sched.config();
     let mut metrics = Metrics::new();
-    let mut active: BTreeMap<u64, SeqState> = BTreeMap::new();
+    let mut sessions: BTreeMap<u64, SeqState> = BTreeMap::new();
     let mut next_id = 0u64;
     let mut closed = false;
 
-    while !closed || !active.is_empty() {
-        // Admission: drain the queue (block only when idle).
+    while !closed || !sessions.is_empty() {
+        // Intake: drain the channel into the scheduler's pending queue
+        // (block only when completely idle).
         loop {
-            let msg = if active.is_empty() && !closed {
+            let msg = if sessions.is_empty() && !closed {
                 match rx.recv() {
                     Ok(m) => Some(m),
                     Err(_) => {
@@ -577,69 +650,170 @@ fn worker(
                 }
             };
             let Some(inc) = msg else { break };
-            if inc.cancel.load(Ordering::Relaxed) {
-                // cancelled before prefill: don't spend the compute
-                metrics.observe_cancelled();
-                let _ = inc.events_tx.send(TokenEvent::Done {
-                    finish: FinishReason::Cancelled,
-                    tokens: Vec::new(),
-                    latency_secs: inc.submitted.elapsed().as_secs_f64(),
-                    ttft_secs: 0.0,
-                });
-                continue;
+            let prompt_len = inc.prompt.len();
+            let mut prompt = inc.prompt;
+            if prompt.is_empty() {
+                // token 0 stands in for the empty prompt (the old engine
+                // padded the whole window with zeros)
+                prompt.push(0);
             }
-            // Backend/module failures here are deliberately engine-fatal
-            // (matching the old worker): submit() has already validated
-            // everything client-controllable (prompt window, token range),
-            // so an error at prefill or decode means the backend itself is
-            // broken and the engine should fail loudly, not limp on.
-            let state = admit(&bundle, &params, &mut arena, inc)?;
-            metrics.observe_prompt(state.prompt_len, shapes.prompt_len);
-            active.insert(next_id, state);
+            let state = SeqState {
+                events_tx: inc.events_tx,
+                cancel: inc.cancel,
+                submitted: inc.submitted,
+                ttft: 0.0,
+                prompt_len,
+                replay: prompt.clone(),
+                prompt,
+                cursor: 0,
+                generated: Vec::new(),
+                sampler: Sampler::new(inc.sampling),
+                pos: 0,
+                slot: None,
+                admitted_once: false,
+            };
+            sessions.insert(next_id, state);
+            sched.enqueue(next_id);
             next_id += 1;
         }
 
-        // Retire sessions that finished at prefill (max_tokens 1, stop on
-        // the first token) or were cancelled — before spending decode
-        // compute on them.
-        retire_finished(&mut active, &mut arena, &mut metrics, &shapes);
-        if active.is_empty() {
+        // Cancelled while waiting (pending or preempted): retire without
+        // spending a slot or any compute.
+        let waiting_cancelled: Vec<u64> = sessions
+            .iter()
+            .filter(|(_, s)| s.slot.is_none() && s.cancel.load(Ordering::Relaxed))
+            .map(|(id, _)| *id)
+            .collect();
+        for id in waiting_cancelled {
+            sched.remove_pending(id);
+            let s = sessions.remove(&id).expect("id came from the map");
+            if !s.admitted_once {
+                queued.fetch_sub(1, Ordering::AcqRel);
+            }
+            send_done(s, FinishReason::Cancelled, &mut metrics);
+        }
+
+        // Retire sessions that finished last step (stop token, max_tokens,
+        // context, cancel) — their slots feed this step's refill.
+        retire_finished(&mut sessions, &mut sched, &mut arena, &mut metrics, &shapes);
+        if sessions.is_empty() {
             continue;
         }
 
-        // One decode step over the active set, grouped by the discovered
-        // buckets: chunk by the largest bucket, pick the smallest bucket
-        // that fits each chunk.
-        let ids: Vec<u64> = active.keys().cloned().collect();
-        for group in ids.chunks(bundle.buckets.max()) {
-            let bucket = bundle.buckets.pick(group.len());
-            let exe = bundle.decode_for(bucket)?;
-            let slots: Vec<KvSlot> = group.iter().map(|id| active[id].slot).collect();
-            let mut tok = Vec::with_capacity(group.len());
-            let mut pos = Vec::with_capacity(group.len());
-            for id in group {
-                let s = &active[id];
-                tok.push(*s.generated.last().expect("admitted with >= 1 token"));
-                pos.push(s.pos);
+        // Scheduler step: preemptions free slots first, admissions then
+        // allocate against real arena availability.
+        let plan = sched.plan(arena.available());
+        for &id in &plan.preempted {
+            let s = sessions.get_mut(&id).expect("preempted id is live");
+            arena.free(s.slot.take().expect("preempted session held a slot"));
+            // Rebuild the replay from everything it had fed: the prompt
+            // plus all generated tokens except the last (which has been
+            // sampled but not yet fed).
+            s.replay = s.prompt.clone();
+            if s.generated.len() > 1 {
+                s.replay.extend_from_slice(&s.generated[..s.generated.len() - 1]);
             }
-            let logits = {
-                let mut view = arena.batch_view(&slots, bucket);
-                exe.decode_step(&params, &mut view, &tok, &pos)?
-            };
-            metrics.observe_decode_step(group.len());
-            for (bi, id) in group.iter().enumerate() {
-                let s = active.get_mut(id).expect("id came from the map");
-                let row = &logits[bi * shapes.vocab..(bi + 1) * shapes.vocab];
-                let t = s.sampler.next(row);
-                s.generated.push(t);
-                s.pos += 1;
-                let _ = s
-                    .events_tx
-                    .send(TokenEvent::Delta { index: s.generated.len() - 1, token: t });
+            s.cursor = 0;
+            s.pos = 0;
+            metrics.observe_preemption();
+        }
+        for &id in &plan.admitted {
+            let s = sessions.get_mut(&id).expect("admitted id is live");
+            let slot = arena.try_alloc().expect("plan respects arena availability");
+            s.slot = Some(slot);
+            if !s.admitted_once {
+                s.admitted_once = true;
+                queued.fetch_sub(1, Ordering::AcqRel);
+                metrics.observe_queue_wait(s.submitted.elapsed().as_secs_f64());
+                metrics.observe_prompt(s.prompt_len, s.prompt_len);
             }
         }
 
-        retire_finished(&mut active, &mut arena, &mut metrics, &shapes);
+        // Sub-steps: sub-batch 0 carries one token for EVERY admitted
+        // session (decode rows feed their last sampled token, prefill rows
+        // their next replay token); sub-batches 1..prefill_chunk advance
+        // only the still-replaying sessions.  Gang mode replays whole
+        // prompts (unbounded chunk) — the wave baseline.
+        let chunk = match cfg.mode {
+            SchedMode::Gang => usize::MAX,
+            SchedMode::Continuous => cfg.prefill_chunk,
+        };
+        let mut sub = 0usize;
+        loop {
+            let rows: Vec<u64> = sessions
+                .iter()
+                .filter(|(_, s)| s.slot.is_some() && (sub == 0 || s.replaying()))
+                .map(|(id, _)| *id)
+                .collect();
+            if rows.is_empty() {
+                break;
+            }
+            for group in rows.chunks(bundle.buckets.max()) {
+                let bucket = bundle.buckets.pick(group.len());
+                let exe = bundle.decode_for(bucket)?;
+                let slots: Vec<KvSlot> = group
+                    .iter()
+                    .map(|id| sessions[id].slot.expect("row is admitted"))
+                    .collect();
+                let mut tok = Vec::with_capacity(group.len());
+                let mut pos = Vec::with_capacity(group.len());
+                let mut prefill_rows = 0usize;
+                for id in group {
+                    let s = &sessions[id];
+                    if s.replaying() {
+                        prefill_rows += 1;
+                        tok.push(s.replay[s.cursor]);
+                    } else {
+                        tok.push(*s.generated.last().expect("decoding session has tokens"));
+                    }
+                    pos.push(s.pos);
+                }
+                // Backend/module failures are deliberately engine-fatal:
+                // submit() validated everything client-controllable, so an
+                // error here means the backend itself is broken.
+                let logits = {
+                    let mut view = arena.batch_view(&slots, bucket);
+                    exe.decode_step(&params, &mut view, &tok, &pos)?
+                };
+                metrics.observe_decode_step(group.len());
+                metrics.observe_prefill_rows(prefill_rows);
+                for (bi, id) in group.iter().enumerate() {
+                    let s = sessions.get_mut(id).expect("id came from the map");
+                    let row = &logits[bi * shapes.vocab..(bi + 1) * shapes.vocab];
+                    s.pos += 1;
+                    if s.replaying() {
+                        s.cursor += 1;
+                        // Mid-replay logits are discarded; so is the last
+                        // replay row of a *resumed* session (its next token
+                        // was sampled before preemption).  Only a session
+                        // that has never sampled takes its first token
+                        // here.
+                        if s.cursor == s.replay.len() && s.generated.is_empty() {
+                            let t = s.sampler.next(row);
+                            s.generated.push(t);
+                            s.ttft = s.submitted.elapsed().as_secs_f64();
+                            let _ = s
+                                .events_tx
+                                .send(TokenEvent::First { token: t, ttft_secs: s.ttft });
+                            sched.note_progress(*id);
+                        }
+                    } else {
+                        let t = s.sampler.next(row);
+                        s.generated.push(t);
+                        let _ = s
+                            .events_tx
+                            .send(TokenEvent::Delta { index: s.generated.len() - 1, token: t });
+                        sched.note_progress(*id);
+                    }
+                }
+            }
+            sub += 1;
+            if sub >= chunk {
+                break;
+            }
+        }
+
+        retire_finished(&mut sessions, &mut sched, &mut arena, &mut metrics, &shapes);
     }
     metrics.set_kv_copies(arena.stats());
     Ok(metrics)
@@ -707,26 +881,42 @@ mod tests {
         assert_eq!(sample_token(&with_nan, &p, &mut rng), 2);
     }
 
-    #[test]
-    fn submit_fails_fast_when_worker_is_gone() {
-        // Construct the dead-worker condition directly (private fields):
-        // the queue receiver is dropped, so send must fail with Closed —
-        // the old Server dropped this error and left clients blocked
-        // forever on a response that could never arrive.
-        let (tx, rx) = channel::<Incoming>();
-        drop(rx);
-        let shapes = ServeShapes {
+    fn test_shapes() -> ServeShapes {
+        ServeShapes {
             n_layer: 1,
             n_kv_head: 1,
             max_seq: 8,
             d_head: 2,
             vocab: 16,
             prompt_len: 4,
-        };
+        }
+    }
+
+    fn dead_engine(max_queue: usize, queued: usize) -> (Engine, Receiver<Incoming>) {
+        let (tx, rx) = channel::<Incoming>();
         let handle = std::thread::spawn(|| -> Result<Metrics> { Ok(Metrics::new()) });
-        let engine = Engine { tx, shapes, handle };
+        let engine = Engine {
+            tx,
+            shapes: test_shapes(),
+            queued: Arc::new(AtomicUsize::new(queued)),
+            max_queue,
+            handle,
+        };
+        (engine, rx)
+    }
+
+    #[test]
+    fn submit_fails_fast_when_worker_is_gone() {
+        // Construct the dead-worker condition directly (private fields):
+        // the queue receiver is dropped, so send must fail with Closed —
+        // the old Server dropped this error and left clients blocked
+        // forever on a response that could never arrive.
+        let (engine, rx) = dead_engine(64, 0);
+        drop(rx);
         let err = engine.submit(vec![1, 2], SamplingParams::greedy(1)).unwrap_err();
         assert_eq!(err, EngineError::Closed);
+        // the failed submit released its queue-depth claim
+        assert_eq!(engine.queue_depth(), 0);
         // a session created against a dead engine reports Closed to
         // pollers instead of an indistinguishable "no event yet"
         let (events_tx, events) = channel();
@@ -739,11 +929,27 @@ mod tests {
     }
 
     #[test]
+    fn submit_saturates_at_the_bounded_queue_depth() {
+        // queue already at its bound -> typed backpressure, not unbounded
+        // channel growth; the queue depth is not consumed further
+        let (engine, _rx) = dead_engine(2, 2);
+        let err = engine.submit(vec![1], SamplingParams::greedy(1)).unwrap_err();
+        assert_eq!(err, EngineError::Saturated { max_queue: 2 });
+        assert_eq!(engine.queue_depth(), 2);
+        // prompt validation still runs first (it needs no queue slot)
+        let err = engine.submit(vec![1; 99], SamplingParams::greedy(1)).unwrap_err();
+        assert!(matches!(err, EngineError::PromptTooLong { .. }));
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
     fn engine_error_displays_actionable_messages() {
         let e = EngineError::PromptTooLong { len: 20, max: 16 };
         let s = format!("{e}");
         assert!(s.contains("20") && s.contains("16"), "{s}");
         assert!(format!("{}", EngineError::Closed).contains("closed"));
+        let s = format!("{}", EngineError::Saturated { max_queue: 64 });
+        assert!(s.contains("64") && s.contains("saturated"), "{s}");
         // converts into the crate error for `?` at CLI level
         let ce: Error = e.into();
         assert!(format!("{ce}").contains("prompt"));

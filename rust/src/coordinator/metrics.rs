@@ -8,14 +8,27 @@ use std::time::Instant;
 use crate::runtime::CopyStats;
 use crate::util::stats::{percentile, fmt_duration};
 
+/// Percentile over an unsorted sample set (0.0 when empty).
+fn sorted_percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&s, q)
+}
+
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
     latencies: Vec<f64>,
     ttfts: Vec<f64>,
+    queue_waits: Vec<f64>,
     tokens: u64,
     decode_steps: u64,
     decode_rows: u64,
+    prefill_rows: u64,
+    preemptions: u64,
     cancelled: u64,
     prompt_tokens: u64,
     prompt_pad_tokens: u64,
@@ -28,9 +41,12 @@ impl Metrics {
             started: Instant::now(),
             latencies: Vec::new(),
             ttfts: Vec::new(),
+            queue_waits: Vec::new(),
             tokens: 0,
             decode_steps: 0,
             decode_rows: 0,
+            prefill_rows: 0,
+            preemptions: 0,
             cancelled: 0,
             prompt_tokens: 0,
             prompt_pad_tokens: 0,
@@ -48,6 +64,24 @@ impl Metrics {
     pub fn observe_decode_step(&mut self, rows: usize) {
         self.decode_steps += 1;
         self.decode_rows += rows as u64;
+    }
+
+    /// `rows` of the last decode step carried chunked-prefill (replay)
+    /// tokens rather than sampled decode tokens.
+    pub fn observe_prefill_rows(&mut self, rows: usize) {
+        self.prefill_rows += rows as u64;
+    }
+
+    /// Scheduler admission: time a session waited in the pending queue
+    /// before it got a KV slot (first admission only).
+    pub fn observe_queue_wait(&mut self, secs: f64) {
+        self.queue_waits.push(secs);
+    }
+
+    /// The anti-starvation policy evicted an active session (its cache is
+    /// recomputed by replay on re-admission).
+    pub fn observe_preemption(&mut self) {
+        self.preemptions += 1;
     }
 
     /// Admission accounting: `true_len` is the client's prompt length,
@@ -79,6 +113,18 @@ impl Metrics {
 
     pub fn decode_steps(&self) -> u64 {
         self.decode_steps
+    }
+
+    pub fn prefill_rows(&self) -> u64 {
+        self.prefill_rows
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    pub fn queue_wait_percentile(&self, q: f64) -> f64 {
+        sorted_percentile(&self.queue_waits, q)
     }
 
     pub fn cancelled(&self) -> u64 {
@@ -121,22 +167,19 @@ impl Metrics {
     }
 
     pub fn latency_percentile(&self, q: f64) -> f64 {
-        let mut s = self.latencies.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        if s.is_empty() { 0.0 } else { percentile(&s, q) }
+        sorted_percentile(&self.latencies, q)
     }
 
     pub fn ttft_percentile(&self, q: f64) -> f64 {
-        let mut s = self.ttfts.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        if s.is_empty() { 0.0 } else { percentile(&s, q) }
+        sorted_percentile(&self.ttfts, q)
     }
 
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} throughput={:.1} tok/s  \
-             latency p50={} p95={}  ttft p50={}\n\
-             decode steps={} (rows/step {:.2})  cancelled={}  \
+             latency p50={} p95={}  ttft p50={}  queue wait p50={}\n\
+             decode steps={} (rows/step {:.2}, {} prefill rows)  \
+             preemptions={}  cancelled={}  \
              prompt tokens={} (+{} pad)  \
              kv moved/step={:.0} B (gather {} B, scatter {} B)",
             self.requests(),
@@ -145,12 +188,15 @@ impl Metrics {
             fmt_duration(self.latency_percentile(0.5)),
             fmt_duration(self.latency_percentile(0.95)),
             fmt_duration(self.ttft_percentile(0.5)),
+            fmt_duration(self.queue_wait_percentile(0.5)),
             self.decode_steps,
             if self.decode_steps == 0 {
                 0.0
             } else {
                 self.decode_rows as f64 / self.decode_steps as f64
             },
+            self.prefill_rows,
+            self.preemptions,
             self.cancelled,
             self.prompt_tokens,
             self.prompt_pad_tokens,
@@ -191,11 +237,19 @@ mod tests {
         for _ in 0..4 {
             m.observe_decode_step(3);
         }
+        m.observe_prefill_rows(2);
+        m.observe_prefill_rows(3);
+        m.observe_preemption();
+        m.observe_queue_wait(0.25);
+        m.observe_queue_wait(0.75);
         m.observe_cancelled();
         m.observe_prompt(12, 16);
         m.observe_prompt(16, 16);
         assert_eq!(m.prompt_tokens(), 28);
         assert_eq!(m.prompt_pad_tokens(), 4);
+        assert_eq!(m.prefill_rows(), 5);
+        assert_eq!(m.preemptions(), 1);
+        assert!((m.queue_wait_percentile(0.5) - 0.5).abs() < 1e-9);
         m.set_kv_copies(CopyStats {
             gathers: 4,
             scatters: 4,
@@ -210,5 +264,7 @@ mod tests {
         let r = m.report();
         assert!(r.contains("decode steps=4"), "{r}");
         assert!(r.contains("cancelled=1"), "{r}");
+        assert!(r.contains("preemptions=1"), "{r}");
+        assert!(r.contains("5 prefill rows"), "{r}");
     }
 }

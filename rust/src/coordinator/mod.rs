@@ -1,12 +1,15 @@
 //! Serving coordinator: the session-based serving engine (typed
 //! `Engine`/`Session` API with streamed tokens and a zero-copy KV arena —
-//! DESIGN.md §8), the dynamic batcher policy, serving metrics, and the
-//! deprecated `Server` shim kept for one release.  The paper's kernel
-//! slots into serving as the prefill/decode compute; the coordinator
-//! proves the artifacts compose into a request-driven system with Python
-//! off the request path.
+//! DESIGN.md §8) driven by the continuous-batching scheduler (per-step
+//! admission, chunked prefill, KV-pressure backpressure and anti-starvation
+//! preemption — DESIGN.md §9), the dynamic batcher policy, serving
+//! metrics, and the deprecated `Server` shim kept for one release.  The
+//! paper's kernel slots into serving as the prefill/decode compute; the
+//! coordinator proves the artifacts compose into a request-driven system
+//! with Python off the request path.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod scheduler;
 pub mod server;

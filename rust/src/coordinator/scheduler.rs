@@ -1,0 +1,512 @@
+//! Continuous-batching scheduler policy (DESIGN.md §9): the pure,
+//! property-testable admission/fairness core behind the engine worker.
+//!
+//! The pre-scheduler worker gang-scheduled: it prefilled whatever was
+//! queued and then decoded that wave, so a request arriving mid-wave waited
+//! for the slowest session and decode buckets ran under-filled as sessions
+//! retired.  The scheduler replaces that with per-step decisions, in the
+//! FA2 spirit of work partitioning — keep every slot busy by refilling
+//! along whatever axis has slack:
+//!
+//! - **Admission** is FCFS from a bounded pending queue, gated on *real*
+//!   capacity: a session is admitted only when the caller can grant it a
+//!   KV-arena slot ([`Scheduler::plan`] is told `free_slots`, the arena's
+//!   live availability) and the in-flight cap has headroom.
+//! - **Anti-starvation preemption**: when the head of the pending queue has
+//!   waited `starvation_bound` steps and admission is blocked, the
+//!   youngest active session is preempted (its slot is freed; the engine
+//!   rebuilds its cache later by replaying its tokens — recompute-style
+//!   preemption) and the starving head takes the slot.  Preempted sessions
+//!   re-enter at the *front* of the queue: FCFS admission means every
+//!   active session arrived before every pending one, so the front
+//!   preserves arrival order.  Under sustained oversubscription this
+//!   degrades gracefully into round-robin with quantum `starvation_bound`.
+//! - **Refill**: retiring sessions free slots that the next `plan` hands to
+//!   the queue, so decode groups stay at the largest fitting bucket
+//!   instead of draining with the wave.
+//!
+//! The scheduler is deliberately *only* policy: it tracks ids, arrival
+//! order, waits and progress flags — never tokens, channels or slots.  The engine
+//! owns the data plane (KV slots, chunked prefill cursors, sampling) and
+//! consumes [`StepPlan`]s.  That split is what the property tests below
+//! exploit: random arrival/length traces drive the policy with a simulated
+//! engine and check FCFS order, the starvation bound and conservation
+//! without touching a model.
+
+use std::collections::VecDeque;
+
+/// How the worker schedules admissions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Per-step admission, chunked prefill, preemption — the default.
+    Continuous,
+    /// Wave scheduling: admit only when the active set is empty, prefill
+    /// whole prompts at admission, decode the wave to completion.  Kept as
+    /// the measurable baseline for `benches/coordinator_hotpath.rs`.
+    Gang,
+}
+
+impl SchedMode {
+    /// Parse a `--sched` flag / config value.
+    pub fn from_flag(s: &str) -> Option<SchedMode> {
+        match s {
+            "continuous" | "" => Some(SchedMode::Continuous),
+            "gang" => Some(SchedMode::Gang),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduler policy knobs (serve config: `max_in_flight`, `prefill_chunk`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    pub mode: SchedMode,
+    /// Cap on concurrently admitted sessions; also sizes the KV arena, so
+    /// admission decisions are made against real slab availability.
+    pub max_in_flight: usize,
+    /// Prompt tokens a prefilling session may advance per step.  Sub-step 0
+    /// of every step carries one token for *every* active session (decode
+    /// or prefill), so a long prompt can stall running sessions by at most
+    /// `prefill_chunk - 1` extra sub-batches per step.
+    pub prefill_chunk: usize,
+    /// Bound on submitted-but-not-admitted depth; beyond it `submit` fails
+    /// fast with `EngineError::Saturated` instead of growing the channel.
+    pub max_queue: usize,
+    /// Steps the pending head may starve before it preempts the youngest
+    /// active session.
+    pub starvation_bound: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            mode: SchedMode::Continuous,
+            max_in_flight: 8,
+            prefill_chunk: 4,
+            max_queue: 64,
+            starvation_bound: 64,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// The gang-scheduling baseline with the same capacity knobs.
+    pub fn gang() -> SchedulerConfig {
+        SchedulerConfig { mode: SchedMode::Gang, ..Default::default() }
+    }
+
+    /// Clamp degenerate values (zero caps would deadlock the worker).
+    pub fn sanitized(mut self) -> SchedulerConfig {
+        self.max_in_flight = self.max_in_flight.max(1);
+        self.prefill_chunk = self.prefill_chunk.max(1);
+        self.max_queue = self.max_queue.max(1);
+        self.starvation_bound = self.starvation_bound.max(1);
+        self
+    }
+}
+
+#[derive(Debug)]
+struct Pending {
+    id: u64,
+    /// Steps spent waiting since (re-)enqueue; resets on preemption
+    /// re-entry so a session that just ran cannot instantly starve-claim.
+    waited: usize,
+}
+
+#[derive(Debug)]
+struct Active {
+    id: u64,
+    /// Whether the session generated at least one token since this
+    /// admission ([`Scheduler::note_progress`]).  Only progressed sessions
+    /// are preemptible: a recompute victim whose replay outgrew the
+    /// starvation quantum would otherwise be evicted before it produced
+    /// anything, and the system would livelock replaying forever.
+    progressed: bool,
+}
+
+/// One step's scheduling decisions.  The engine must process `preempted`
+/// (free those slots) *before* `admitted` (allocate slots): a starvation
+/// admission reuses the slot its preemption freed.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct StepPlan {
+    pub admitted: Vec<u64>,
+    pub preempted: Vec<u64>,
+}
+
+/// The policy state: a bounded FCFS pending queue plus the active set in
+/// admission order.
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    pending: VecDeque<Pending>,
+    active: Vec<Active>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler { cfg: cfg.sanitized(), pending: VecDeque::new(), active: Vec::new() }
+    }
+
+    pub fn config(&self) -> SchedulerConfig {
+        self.cfg
+    }
+
+    /// Sessions waiting for admission.
+    pub fn queue_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Sessions currently holding a slot.
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty()
+    }
+
+    /// Enqueue a new arrival at the back (FCFS).
+    pub fn enqueue(&mut self, id: u64) {
+        self.pending.push_back(Pending { id, waited: 0 });
+    }
+
+    /// Drop a not-yet-admitted session (client cancelled while queued).
+    /// Returns false if the id is not pending.
+    pub fn remove_pending(&mut self, id: u64) -> bool {
+        match self.pending.iter().position(|p| p.id == id) {
+            Some(i) => {
+                self.pending.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// An active session finished (or was cancelled); its slot is free for
+    /// the next `plan`.
+    pub fn retire(&mut self, id: u64) {
+        self.active.retain(|a| a.id != id);
+    }
+
+    /// The engine observed `id` generating a token this step.  Marks the
+    /// session preemptible: eviction always costs a replay, so a session
+    /// must get at least one token out of each admission before the
+    /// anti-starvation policy may take its slot back (this is what makes
+    /// preemption ping-pong converge instead of livelocking on replays).
+    pub fn note_progress(&mut self, id: u64) {
+        if let Some(a) = self.active.iter_mut().find(|a| a.id == id) {
+            a.progressed = true;
+        }
+    }
+
+    /// One step of policy: admissions (and, in continuous mode, at most one
+    /// starvation preemption) given `free_slots` actually available in the
+    /// KV arena.
+    pub fn plan(&mut self, free_slots: usize) -> StepPlan {
+        for p in &mut self.pending {
+            p.waited += 1;
+        }
+        let mut plan = StepPlan::default();
+        let mut free = free_slots;
+
+        let gate_closed =
+            self.cfg.mode == SchedMode::Gang && !self.active.is_empty();
+        while !gate_closed
+            && free > 0
+            && self.active.len() < self.cfg.max_in_flight
+            && !self.pending.is_empty()
+        {
+            let p = self.pending.pop_front().expect("checked non-empty");
+            self.active.push(Active { id: p.id, progressed: false });
+            plan.admitted.push(p.id);
+            free -= 1;
+        }
+
+        // Anti-starvation (continuous only): the head has waited out its
+        // bound and admission is blocked -> swap it with the youngest
+        // *progressed* active session.  At most one swap per step, so a
+        // burst of starvers drains one per step instead of churning the
+        // whole set.
+        if self.cfg.mode == SchedMode::Continuous {
+            let blocked = free == 0 || self.active.len() >= self.cfg.max_in_flight;
+            let starving = self
+                .pending
+                .front()
+                .map_or(false, |p| p.waited >= self.cfg.starvation_bound);
+            let victim_at = if blocked && starving {
+                // youngest-first among sessions that yielded a token since
+                // admission (none progressed -> wait, never livelock)
+                self.active.iter().rposition(|a| a.progressed)
+            } else {
+                None
+            };
+            if let Some(vi) = victim_at {
+                let victim = self.active.remove(vi);
+                let head = self.pending.pop_front().expect("checked starving head");
+                self.active.push(Active { id: head.id, progressed: false });
+                plan.admitted.push(head.id);
+                plan.preempted.push(victim.id);
+                // FCFS: every active arrived before every pending, so the
+                // victim re-enters at the front.
+                self.pending.push_front(Pending { id: victim.id, waited: 0 });
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn cont(max_in_flight: usize, bound: usize) -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            mode: SchedMode::Continuous,
+            max_in_flight,
+            starvation_bound: bound,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn admits_fcfs_up_to_capacity_and_refills_on_retire() {
+        let mut s = cont(2, 8);
+        for id in 0..4 {
+            s.enqueue(id);
+        }
+        let plan = s.plan(8);
+        assert_eq!(plan.admitted, vec![0, 1], "FCFS admission up to max_in_flight");
+        assert!(plan.preempted.is_empty());
+        assert_eq!(s.in_flight(), 2);
+        assert_eq!(s.queue_len(), 2);
+        // no capacity -> no admission
+        assert_eq!(s.plan(8), StepPlan::default());
+        // retiring one refills from the queue head
+        s.retire(0);
+        assert_eq!(s.plan(8).admitted, vec![2]);
+        // arena pressure gates admission even with in-flight headroom
+        s.retire(1);
+        assert_eq!(s.plan(0), StepPlan::default(), "no free slab, no admission");
+        assert_eq!(s.plan(1).admitted, vec![3]);
+    }
+
+    #[test]
+    fn starving_head_preempts_youngest_progressed_active() {
+        let mut s = cont(2, 3);
+        s.enqueue(10);
+        s.enqueue(11);
+        assert_eq!(s.plan(2).admitted, vec![10, 11]);
+        s.note_progress(10);
+        s.note_progress(11);
+        s.enqueue(12);
+        // waited 1, 2 -> nothing; waited 3 == bound -> swap in
+        assert_eq!(s.plan(0), StepPlan::default());
+        assert_eq!(s.plan(0), StepPlan::default());
+        let plan = s.plan(0);
+        assert_eq!(plan.admitted, vec![12]);
+        assert_eq!(plan.preempted, vec![11], "youngest progressed active is the victim");
+        // the victim is back at the front, ahead of later arrivals
+        s.enqueue(13);
+        s.retire(10);
+        assert_eq!(s.plan(1).admitted, vec![11]);
+        assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn unprogressed_sessions_are_never_preempted() {
+        // a session that has not produced a token since admission is
+        // replaying — evicting it would livelock on recompute
+        let mut s = cont(1, 2);
+        s.enqueue(0);
+        assert_eq!(s.plan(1).admitted, vec![0]);
+        s.enqueue(1);
+        for _ in 0..10 {
+            assert_eq!(s.plan(0), StepPlan::default(), "victim has made no progress");
+        }
+        // first token out -> preemptible at the (long-passed) bound
+        s.note_progress(0);
+        let plan = s.plan(0);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(plan.preempted, vec![0]);
+    }
+
+    #[test]
+    fn gang_mode_admits_only_into_an_empty_active_set() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_in_flight: 4,
+            ..SchedulerConfig::gang()
+        });
+        s.enqueue(0);
+        s.enqueue(1);
+        assert_eq!(s.plan(4).admitted, vec![0, 1]);
+        // mid-wave arrivals wait, no matter how long (no preemption in gang)
+        s.enqueue(2);
+        for _ in 0..200 {
+            assert_eq!(s.plan(4), StepPlan::default());
+        }
+        s.retire(0);
+        assert_eq!(s.plan(4), StepPlan::default(), "wave not yet drained");
+        s.retire(1);
+        assert_eq!(s.plan(4).admitted, vec![2], "next wave starts when empty");
+    }
+
+    #[test]
+    fn sanitized_config_never_zero() {
+        let c = SchedulerConfig {
+            mode: SchedMode::Continuous,
+            max_in_flight: 0,
+            prefill_chunk: 0,
+            max_queue: 0,
+            starvation_bound: 0,
+        }
+        .sanitized();
+        assert_eq!(
+            (c.max_in_flight, c.prefill_chunk, c.max_queue, c.starvation_bound),
+            (1, 1, 1, 1)
+        );
+        assert_eq!(SchedMode::from_flag("gang"), Some(SchedMode::Gang));
+        assert_eq!(SchedMode::from_flag("continuous"), Some(SchedMode::Continuous));
+        assert_eq!(SchedMode::from_flag("wave"), None);
+    }
+
+    /// The tentpole property (ISSUE 4): under random arrival/length traces,
+    /// no session waits more than the anti-starvation bound while others
+    /// make progress — concretely, whenever the queue is non-empty some
+    /// admission happens within `starvation_bound + 1` steps — and
+    /// admissions are strictly FCFS by original arrival (preemption
+    /// victims resume ahead of later arrivals), with capacity never
+    /// exceeded and every session eventually retired.
+    #[test]
+    fn prop_fcfs_starvation_bound_and_conservation() {
+        check("scheduler-continuous", PropConfig::default(), |rng: &mut Rng| {
+            let cap = rng.range_usize(1, 4); // simulated arena slots
+            let cfg = SchedulerConfig {
+                mode: SchedMode::Continuous,
+                max_in_flight: rng.range_usize(1, 5),
+                prefill_chunk: rng.range_usize(1, 5),
+                max_queue: 64,
+                starvation_bound: rng.range_usize(1, 10),
+            };
+            let bound = cfg.starvation_bound;
+            let mut sched = Scheduler::new(cfg);
+
+            let n = rng.range_usize(1, 24);
+            // (arrival step, remaining work) per id, arrivals sorted
+            let mut arrive_at: Vec<usize> = (0..n)
+                .map(|_| rng.range_usize(0, 30))
+                .collect();
+            arrive_at.sort_unstable();
+            let mut remaining: Vec<usize> =
+                (0..n).map(|_| rng.range_usize(1, 12)).collect();
+
+            let mut next_arrival = 0usize;
+            let mut waiting: Vec<u64> = Vec::new(); // ids awaiting admission
+            let mut running: Vec<u64> = Vec::new();
+            let mut slots_held = 0usize;
+            let mut first_admission: Vec<Option<usize>> = vec![None; n];
+            let mut admission_order: Vec<u64> = Vec::new();
+            let mut retired = 0usize;
+            let mut steps_since_progress = 0usize;
+
+            let mut step = 0usize;
+            while retired < n {
+                crate::prop_assert!(
+                    step < 20_000,
+                    "liveness: {retired}/{n} retired after {step} steps"
+                );
+                while next_arrival < n && arrive_at[next_arrival] <= step {
+                    sched.enqueue(next_arrival as u64);
+                    waiting.push(next_arrival as u64);
+                    next_arrival += 1;
+                }
+                let free = cap - slots_held;
+                let had_waiters = !waiting.is_empty();
+                let plan = sched.plan(free);
+
+                for &id in &plan.preempted {
+                    crate::prop_assert!(
+                        running.contains(&id),
+                        "preempted {id} was not running"
+                    );
+                    running.retain(|&r| r != id);
+                    waiting.push(id);
+                    slots_held -= 1;
+                }
+                for &id in &plan.admitted {
+                    // FCFS: the admitted id is the earliest original
+                    // arrival among everyone still waiting — excluding this
+                    // plan's own victim, which by construction arrived
+                    // earlier than the starving head it just yielded to and
+                    // resumes at the queue front on the NEXT admission
+                    let min_waiting = waiting
+                        .iter()
+                        .copied()
+                        .filter(|w| !plan.preempted.contains(w))
+                        .min()
+                        .expect("admitted someone not waiting");
+                    crate::prop_assert!(
+                        id == min_waiting,
+                        "admission {id} overtook waiting {min_waiting}"
+                    );
+                    crate::prop_assert!(slots_held < cap, "slot over-allocated");
+                    waiting.retain(|&w| w != id);
+                    running.push(id);
+                    slots_held += 1;
+                    if first_admission[id as usize].is_none() {
+                        first_admission[id as usize] = Some(step);
+                        admission_order.push(id);
+                    }
+                }
+                crate::prop_assert!(
+                    running.len() <= cfg.max_in_flight && slots_held <= cap,
+                    "capacity exceeded: {} in flight, {} slots",
+                    running.len(),
+                    slots_held
+                );
+
+                // anti-starvation: with waiters present, admissions may lag
+                // by at most the bound
+                if had_waiters && plan.admitted.is_empty() {
+                    steps_since_progress += 1;
+                    crate::prop_assert!(
+                        steps_since_progress <= bound,
+                        "queue stalled {steps_since_progress} steps (bound {bound})"
+                    );
+                } else {
+                    steps_since_progress = 0;
+                }
+
+                // the simulated engine: every running session advances one
+                // unit (and reports the progress, making it preemptible);
+                // finished sessions retire and free their slot
+                let done: Vec<u64> = running
+                    .iter()
+                    .copied()
+                    .filter(|&id| {
+                        sched.note_progress(id);
+                        remaining[id as usize] -= 1;
+                        remaining[id as usize] == 0
+                    })
+                    .collect();
+                for id in done {
+                    running.retain(|&r| r != id);
+                    sched.retire(id);
+                    slots_held -= 1;
+                    retired += 1;
+                }
+                step += 1;
+            }
+            crate::prop_assert!(
+                admission_order == (0..n as u64).collect::<Vec<_>>(),
+                "first admissions out of arrival order: {admission_order:?}"
+            );
+            crate::prop_assert!(
+                sched.is_idle(),
+                "scheduler retained state after all sessions retired"
+            );
+            Ok(())
+        });
+    }
+}

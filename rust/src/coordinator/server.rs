@@ -11,9 +11,12 @@
 //!   blocked forever on a response channel that will never fire, and an
 //!   over-long prompt is rejected (`EngineError::PromptTooLong`) instead
 //!   of being silently truncated to the compiled window.
-//! - greedy decode output is byte-identical to the old worker: the shim
-//!   maps `GenRequest { prompt, n_new }` onto a greedy `Session` with
-//!   `max_tokens = n_new`.
+//! - the shim maps `GenRequest { prompt, n_new }` onto a greedy `Session`
+//!   with `max_tokens = n_new`.  Since the continuous scheduler
+//!   (DESIGN.md §9), prompts are prefilled at true positions instead of
+//!   padded to the compiled window with token 0 — greedy output remains
+//!   deterministic and batch-invariant, but differs numerically from the
+//!   old padded worker (pad tokens used to attend as real context).
 
 use std::path::PathBuf;
 

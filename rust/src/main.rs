@@ -7,8 +7,11 @@
 //!   verify    execute every artifact with golden vectors and compare
 //!   train     run the AOT train_step loop on the synthetic corpus
 //!   serve     run the session-based serving engine on a synthetic
-//!             workload (--stream, --temperature, --top-k)
+//!             workload (--stream, --temperature, --top-k, --sched
+//!             continuous|gang, --max-in-flight, --prefill-chunk)
 //!   attn-exec run the native flash-attention kernels (GFLOP/s + parity)
+//!   bench-gate compare reports/bench_summary.json against the pinned
+//!             benches/baseline.json; nonzero exit on >tolerance regression
 //!   inspect   list artifacts in the manifest
 //!
 //! `verify`, `train`, `serve` and `inspect` take `--backend
@@ -26,8 +29,10 @@ use fa2::util::error::{Context, Result};
 use fa2::attn::exec::{parallel, reference, AttnDims, FlashParams};
 use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
 use fa2::bench::{figures, table1};
+use fa2::bench::summary;
 use fa2::config::RunConfig;
 use fa2::coordinator::engine::{Completion, Engine, SamplingParams, TokenEvent};
+use fa2::coordinator::scheduler::{SchedMode, SchedulerConfig};
 use fa2::gpusim::{simulate, Device};
 use fa2::runtime::{BackendKind, Runtime};
 use fa2::train::corpus::Corpus;
@@ -45,9 +50,13 @@ fn usage() -> ! {
            train     [--config FILE] [--model tiny|small] [--steps N]\n            \
                      [--variant ''|_refattn] [--loss-csv FILE] [--backend B]\n  \
            serve     [--config FILE] [--requests N] [--tokens N] [--rate R]\n            \
-                     [--backend B] [--stream] [--temperature T] [--top-k K]\n  \
+                     [--backend B] [--stream] [--temperature T] [--top-k K]\n            \
+                     [--sched continuous|gang] [--max-in-flight N]\n            \
+                     [--prefill-chunk N]\n  \
            attn-exec [--batch B] [--heads H] [--seqlen N] [--head-dim D]\n            \
                      [--causal 0|1] [--threads T] [--check 0|1]\n  \
+           bench-gate [--summary FILE] [--baseline FILE] [--tolerance F]\n            \
+                     [--update-baseline]\n  \
            inspect   [--artifact-dir DIR] [--backend B]\n\
          backends (B): auto (default) | native | xla | stub"
     );
@@ -101,6 +110,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "attn-exec" => cmd_attn_exec(&args),
+        "bench-gate" => cmd_bench_gate(&args),
         "inspect" => cmd_inspect(&args),
         _ => usage(),
     }
@@ -364,16 +374,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("stream").is_some() {
         cfg.stream = true;
     }
+    if let Some(s) = args.get("sched") {
+        cfg.sched = s.to_string();
+    }
+    if let Some(n) = args.get_usize("max-in-flight")? {
+        cfg.max_in_flight = n;
+    }
+    if let Some(n) = args.get_usize("prefill-chunk")? {
+        cfg.prefill_chunk = n;
+    }
+    let mode = SchedMode::from_flag(&cfg.sched)
+        .with_context(|| format!("--sched {}: expected continuous|gang", cfg.sched))?;
+    let sched_cfg = SchedulerConfig {
+        mode,
+        max_in_flight: cfg.max_in_flight,
+        prefill_chunk: cfg.prefill_chunk,
+        // the CLI drives its own closed-loop workload: size the queue so
+        // the synthetic burst is never rejected by its own backpressure
+        max_queue: SchedulerConfig::default().max_queue.max(cfg.num_requests),
+        ..SchedulerConfig::default()
+    }
+    .sanitized();
     let backend = BackendKind::from_flag(args.get("backend").unwrap_or(&cfg.backend))?;
-    let engine = Engine::start(
+    let engine = Engine::start_with(
         std::path::PathBuf::from(args.get("artifact-dir").unwrap_or("artifacts")),
         &cfg.model,
         backend,
+        sched_cfg,
     )?;
     let shapes = engine.shapes();
     println!(
         "engine up: model {} (prompt window {}, max_seq {}, vocab {})",
         cfg.model, shapes.prompt_len, shapes.max_seq, shapes.vocab
+    );
+    println!(
+        "scheduler: {:?}, max_in_flight {} ({} KiB of KV slabs reserved at peak), \
+         prefill_chunk {}",
+        sched_cfg.mode,
+        sched_cfg.max_in_flight,
+        sched_cfg.max_in_flight * shapes.slot_bytes() / 1024,
+        sched_cfg.prefill_chunk
     );
     let mut rng = Rng::seed_from(cfg.seed);
     let mut corpus = Corpus::new(512, cfg.seed);
@@ -507,6 +547,88 @@ fn cmd_attn_exec(args: &Args) -> Result<()> {
         if worst >= tol {
             bail!("native flash forward diverged from reference ({worst:.2e} >= {tol:.1e})");
         }
+    }
+    Ok(())
+}
+
+/// The bench-regression CI gate (ci.sh step): compare the current
+/// `reports/bench_summary.json` against the pinned `benches/baseline.json`
+/// and fail on any metric worse by more than the tolerance.
+/// `--update-baseline` re-pins instead of comparing.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    // Defaults resolve against the workspace root (where ci.sh lives):
+    // cargo runs bench binaries with cwd = rust/, so the summary they
+    // write and the file read here must anchor the same way.
+    let summary_path = args
+        .get("summary")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(summary::summary_path);
+    let baseline_path = args
+        .get("baseline")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(summary::baseline_path);
+    let (summary_path, baseline_path) = (summary_path.as_path(), baseline_path.as_path());
+    let tolerance: f64 = match args.get("tolerance") {
+        Some(t) => t.parse().context("--tolerance must be a fraction (0.15 = 15%)")?,
+        None => 0.15,
+    };
+    let current = summary::load(summary_path)?;
+    if args.get("update-baseline").is_some() {
+        if summary::slowdown_factor() != 1.0 {
+            bail!(
+                "refusing to pin a baseline while FA2_BENCH_INJECT_SLOWDOWN={} is set: \
+                 the recorded values are synthetically worsened (unset it and re-run)",
+                summary::slowdown_factor()
+            );
+        }
+        if current.is_empty() {
+            bail!(
+                "refusing to pin an empty baseline: no entries in {} (run the benches \
+                 first, e.g. ./ci.sh --update-baseline)",
+                summary_path.display()
+            );
+        }
+        summary::save(baseline_path, &current)?;
+        println!(
+            "pinned {} bench metrics from {} -> {}",
+            current.len(),
+            summary_path.display(),
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let baseline = summary::load(baseline_path)?;
+    if baseline.is_empty() {
+        println!(
+            "bench-gate: baseline {} has no pinned metrics yet — gate is VACUOUS.\n\
+             Pin the first real numbers on a quiet machine with `./ci.sh --update-baseline`.",
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let report = summary::gate(&baseline, &current, tolerance);
+    println!(
+        "bench-gate: {} metrics compared against {} (tolerance {:.0}%), {} improved",
+        report.compared,
+        baseline_path.display(),
+        tolerance * 100.0,
+        report.improvements
+    );
+    for k in &report.missing_in_baseline {
+        println!("  WARN new metric not pinned (re-pin with --update-baseline): {k}");
+    }
+    for k in &report.missing_in_current {
+        println!("  WARN pinned metric did not run this time: {k}");
+    }
+    for r in &report.regressions {
+        println!("  REGRESSION {r}");
+    }
+    if !report.regressions.is_empty() {
+        bail!(
+            "{} bench metric(s) regressed past the {:.0}% tolerance",
+            report.regressions.len(),
+            tolerance * 100.0
+        );
     }
     Ok(())
 }

@@ -45,6 +45,13 @@ impl ServeShapes {
         self.geometry().slot_elems()
     }
 
+    /// Bytes one KV-arena slot pins (K + V slabs, f32) — what an admission
+    /// decision actually reserves, surfaced by `repro serve` so operators
+    /// can size `max_in_flight` against memory.
+    pub fn slot_bytes(&self) -> usize {
+        2 * self.geometry().slot_elems() * std::mem::size_of::<f32>()
+    }
+
     /// The KV-arena slot geometry this model serves with.
     pub fn geometry(&self) -> KvGeometry {
         KvGeometry {
@@ -202,6 +209,8 @@ mod tests {
         assert_eq!(bundle.shapes.vocab, 512);
         assert_eq!(bundle.shapes.prompt_len, 16);
         assert_eq!(bundle.shapes.geometry().slot_elems(), bundle.shapes.cache_elems_per_seq());
+        // slot_bytes = K + V slabs in f32: 2 * L*H*S*dh * 4
+        assert_eq!(bundle.shapes.slot_bytes(), 2 * 4 * bundle.shapes.cache_elems_per_seq());
         assert!(bundle.decode_for(4).is_ok());
         assert!(bundle.decode_for(1).is_ok());
         assert!(bundle.decode_for(2).is_err());

@@ -78,19 +78,39 @@ impl KvSlot {
     }
 }
 
-/// The worker-owned slab pool: one pair of K/V slabs per live sequence.
+/// The worker-owned slab pool: one pair of K/V slabs per live sequence,
+/// optionally bounded so admission control can reserve against *real*
+/// availability (DESIGN.md §9: the engine sizes the arena to
+/// `max_in_flight` and admits only while [`try_alloc`](Self::try_alloc)
+/// can succeed).
 #[derive(Debug)]
 pub struct KvArena {
     geo: KvGeometry,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     free: Vec<usize>,
+    /// Slot cap (`None` = unbounded legacy pool).
+    cap: Option<usize>,
     stats: CopyStats,
 }
 
 impl KvArena {
+    /// An unbounded pool (benches and the compat paths).
     pub fn new(geo: KvGeometry) -> KvArena {
-        KvArena { geo, k: Vec::new(), v: Vec::new(), free: Vec::new(), stats: CopyStats::default() }
+        KvArena {
+            geo,
+            k: Vec::new(),
+            v: Vec::new(),
+            free: Vec::new(),
+            cap: None,
+            stats: CopyStats::default(),
+        }
+    }
+
+    /// A pool bounded to `cap` live slots — the reservation substrate for
+    /// KV-pressure-aware admission.
+    pub fn with_capacity(geo: KvGeometry, cap: usize) -> KvArena {
+        KvArena { cap: Some(cap.max(1)), ..KvArena::new(geo) }
     }
 
     pub fn geometry(&self) -> KvGeometry {
@@ -107,23 +127,49 @@ impl KvArena {
         self.k.len()
     }
 
+    /// The configured slot cap (`None` = unbounded).
+    pub fn capacity_slots(&self) -> Option<usize> {
+        self.cap
+    }
+
+    /// Slots an admission decision may still claim right now.  Unbounded
+    /// arenas report `usize::MAX` (the scheduler clamps with its own
+    /// in-flight cap).
+    pub fn available(&self) -> usize {
+        match self.cap {
+            Some(cap) => cap.saturating_sub(self.live()),
+            None => usize::MAX,
+        }
+    }
+
     pub fn stats(&self) -> CopyStats {
         self.stats
     }
 
     /// Allocate a zeroed slot (reuses a freed slab when available).
+    /// Panics past the cap — bounded callers must reserve via
+    /// [`try_alloc`](Self::try_alloc).
     pub fn alloc(&mut self) -> KvSlot {
+        self.try_alloc().expect("kv arena exhausted (admission must check available())")
+    }
+
+    /// Reserve a zeroed slot, or `None` when the pool is at capacity —
+    /// the admission-control primitive.
+    pub fn try_alloc(&mut self) -> Option<KvSlot> {
+        if self.available() == 0 {
+            return None;
+        }
         let n = self.geo.slot_elems();
         match self.free.pop() {
             Some(i) => {
                 self.k[i].iter_mut().for_each(|x| *x = 0.0);
                 self.v[i].iter_mut().for_each(|x| *x = 0.0);
-                KvSlot(i)
+                Some(KvSlot(i))
             }
             None => {
                 self.k.push(vec![0.0; n]);
                 self.v.push(vec![0.0; n]);
-                KvSlot(self.k.len() - 1)
+                Some(KvSlot(self.k.len() - 1))
             }
         }
     }
@@ -138,6 +184,12 @@ impl KvArena {
                 "kv arena: adopted slab has {}/{} elements, geometry wants {n}",
                 k.len(),
                 v.len()
+            );
+        }
+        if self.available() == 0 {
+            bail!(
+                "kv arena: at capacity ({} live slots); admission must reserve first",
+                self.live()
             );
         }
         match self.free.pop() {
@@ -301,6 +353,36 @@ mod tests {
         assert_eq!(a.live(), 0);
         // wrong-size adoption is a typed error, not a corrupted slab
         assert!(a.adopt(vec![0.0; n + 1], vec![0.0; n]).is_err());
+    }
+
+    #[test]
+    fn bounded_arena_reserves_against_real_availability() {
+        let g = geo();
+        let n = g.slot_elems();
+        let mut a = KvArena::with_capacity(g, 2);
+        assert_eq!(a.capacity_slots(), Some(2));
+        assert_eq!(a.available(), 2);
+        let s0 = a.try_alloc().expect("slot 0");
+        let s1 = a.try_alloc().expect("slot 1");
+        assert_eq!(a.available(), 0);
+        // at capacity: reservation fails, adoption is a typed error
+        assert!(a.try_alloc().is_none());
+        assert!(a.adopt(vec![0.0; n], vec![0.0; n]).is_err());
+        // freeing restores availability; the recycled slab comes back zeroed
+        {
+            let (k, _) = a.slot_mut(s0);
+            k[0] = 7.0;
+        }
+        a.free(s0);
+        assert_eq!(a.available(), 1);
+        let s2 = a.try_alloc().expect("recycled slot");
+        assert_eq!(s2.index(), s0.index());
+        assert!(a.slot(s2).0.iter().all(|&x| x == 0.0), "recycled slab not zeroed");
+        a.free(s1);
+        a.free(s2);
+        assert_eq!(a.available(), 2);
+        // the unbounded pool reports effectively infinite availability
+        assert_eq!(KvArena::new(g).available(), usize::MAX);
     }
 
     #[test]

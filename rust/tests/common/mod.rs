@@ -1,10 +1,40 @@
 //! Shared skip/discovery helpers for the artifact-dependent integration
 //! tests.  (Files under tests/common/ are not compiled as test crates;
 //! each test file pulls this in with `mod common;`.)
+//!
+//! Skips are REGISTERED, not just printed: `cargo test` swallows stderr of
+//! passing tests, so a green run used to hide which suites never actually
+//! exercised anything.  When `CI_SKIP_LOG` is set (ci.sh exports it), each
+//! skip appends a `<test>: <reason>` line there and ci.sh prints a
+//! `SKIPPED:` summary at the end of the run.
 
 #![allow(dead_code)] // not every test crate uses every helper
 
+use std::io::Write;
 use std::path::PathBuf;
+
+/// Record that the calling test skipped (with the reason), both to stderr
+/// (visible under `cargo test -- --nocapture`) and to the `CI_SKIP_LOG`
+/// file when ci.sh is driving.  The test name comes from the test thread's
+/// name, which the harness sets to the test path.
+pub fn register_skip(reason: &str) {
+    let test = std::thread::current()
+        .name()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| "unknown-test".to_string());
+    eprintln!("skipping {test}: {reason}");
+    let Ok(path) = std::env::var("CI_SKIP_LOG") else { return };
+    if path.is_empty() {
+        return;
+    }
+    // appends are line-buffered and tiny; concurrent test processes
+    // interleave whole lines, which is all the summary needs
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open(&path)
+    {
+        let _ = writeln!(f, "{test}: {reason}");
+    }
+}
 
 /// artifacts/ relative to the test cwd (the package root, rust/) or the
 /// workspace root.
@@ -15,11 +45,11 @@ pub fn artifact_dir() -> Option<PathBuf> {
         .find(|d| d.join("manifest.json").exists())
 }
 
-/// Like [`artifact_dir`], but prints a skip note when absent.
+/// Like [`artifact_dir`], but registers a skip when absent.
 pub fn artifact_dir_or_skip() -> Option<PathBuf> {
     let found = artifact_dir();
     if found.is_none() {
-        eprintln!("skipping: no artifacts/manifest.json (run `make artifacts`)");
+        register_skip("no artifacts/manifest.json (run `make artifacts`)");
     }
     found
 }
@@ -28,7 +58,7 @@ pub fn artifact_dir_or_skip() -> Option<PathBuf> {
 /// just inspecting) artifacts needs the real `xla` backend.
 pub fn exec_artifact_dir_or_skip() -> Option<PathBuf> {
     if cfg!(not(feature = "xla")) {
-        eprintln!("skipping: built without the `xla` execution backend");
+        register_skip("built without the `xla` execution backend");
         return None;
     }
     artifact_dir_or_skip()

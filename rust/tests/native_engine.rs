@@ -1,12 +1,15 @@
 //! Integration: the session-based serving engine (Engine/Session,
-//! streamed TokenEvents, SamplingParams, KV arena) on the native backend —
-//! runs on a fresh checkout with no artifacts on disk.
+//! streamed TokenEvents, SamplingParams, KV arena) and its continuous
+//! batching scheduler (chunked prefill, Saturated backpressure,
+//! anti-starvation preemption) on the native backend — runs on a fresh
+//! checkout with no artifacts on disk.
 
 use std::path::PathBuf;
 
 use fa2::coordinator::engine::{
     Engine, EngineError, FinishReason, SamplingParams, TokenEvent,
 };
+use fa2::coordinator::scheduler::SchedulerConfig;
 use fa2::runtime::BackendKind;
 
 fn engine() -> Engine {
@@ -14,6 +17,24 @@ fn engine() -> Engine {
     // manifest in memory
     Engine::start(PathBuf::from("artifacts"), "tiny", BackendKind::Native)
         .expect("native engine must start with no artifacts on disk")
+}
+
+fn engine_with(cfg: SchedulerConfig) -> Engine {
+    Engine::start_with(PathBuf::from("artifacts"), "tiny", BackendKind::Native, cfg)
+        .expect("native engine must start with no artifacts on disk")
+}
+
+/// Greedy tokens for one prompt served alone on a fresh engine — the
+/// byte-identity reference for every scheduling scenario below.
+fn solo_tokens(prompt: &[i32], max_tokens: usize) -> Vec<i32> {
+    let e = engine();
+    let c = e
+        .submit(prompt.to_vec(), SamplingParams::greedy(max_tokens))
+        .unwrap()
+        .wait()
+        .unwrap();
+    e.shutdown().unwrap();
+    c.tokens
 }
 
 #[test]
@@ -168,6 +189,119 @@ fn stop_tokens_finish_generation_early() {
 }
 
 #[test]
+fn continuous_mixed_arrivals_stay_byte_identical_to_solo() {
+    // The tentpole acceptance bar: the continuous scheduler changes WHEN
+    // work runs (stragglers admitted mid-flight, prefill chunked between
+    // decode steps), never WHAT it computes — every session's greedy
+    // tokens must equal its solo run.
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|j| {
+            let mut p: Vec<i32> = (1..=8).collect();
+            p[0] = 30 + j;
+            p
+        })
+        .collect();
+    let budgets = [12usize, 9, 7, 5];
+    let solo: Vec<Vec<i32>> = prompts
+        .iter()
+        .zip(budgets)
+        .map(|(p, n)| solo_tokens(p, n))
+        .collect();
+
+    let e = engine();
+    // two sessions up front...
+    let first: Vec<_> = (0..2)
+        .map(|i| e.submit(prompts[i].clone(), SamplingParams::greedy(budgets[i])).unwrap())
+        .collect();
+    // ...and two stragglers submitted only once session 0 is demonstrably
+    // decoding (its deltas are streaming), i.e. genuinely mid-flight
+    loop {
+        let ev = first[0].recv().expect("stream ended early");
+        if ev.index().map_or(true, |i| i >= 2) {
+            break;
+        }
+    }
+    let late: Vec<_> = (2..4)
+        .map(|i| e.submit(prompts[i].clone(), SamplingParams::greedy(budgets[i])).unwrap())
+        .collect();
+    for (i, s) in first.into_iter().chain(late).enumerate() {
+        let c = s.wait().unwrap();
+        assert_eq!(c.finish, FinishReason::MaxTokens);
+        assert_eq!(c.tokens, solo[i], "session {i}: mixed-arrival decode diverged from solo");
+    }
+    let m = e.shutdown().unwrap();
+    assert_eq!(m.requests(), 4);
+    assert_eq!(m.kv_bytes_per_step(), 0.0, "chunked prefill must stay in-place");
+}
+
+#[test]
+fn saturated_backpressure_is_typed_and_recovers() {
+    // max_in_flight 1 pins the only KV slot on a long-running session;
+    // max_queue 2 then bounds how many submissions may wait.  The huge
+    // starvation bound keeps preemption out of this test's way.
+    let e = engine_with(SchedulerConfig {
+        max_in_flight: 1,
+        max_queue: 2,
+        starvation_bound: 1_000_000,
+        ..SchedulerConfig::default()
+    });
+    let hog = e.submit(vec![9; 8], SamplingParams::greedy(10_000)).unwrap();
+    // once the hog's first token streams it has been ADMITTED, so the
+    // queue depth is exactly 0 before the fill-up below
+    assert!(matches!(hog.recv(), Some(TokenEvent::First { .. })));
+    let q1 = e.submit(vec![1; 8], SamplingParams::greedy(2)).unwrap();
+    let q2 = e.submit(vec![2; 8], SamplingParams::greedy(2)).unwrap();
+    let err = e.submit(vec![3; 8], SamplingParams::greedy(2)).unwrap_err();
+    assert_eq!(err, EngineError::Saturated { max_queue: 2 });
+    // backpressure is pressure, not failure: cancelling the hog frees the
+    // slot, the queue drains FCFS, and new submissions are accepted again
+    hog.cancel();
+    assert_eq!(hog.wait().unwrap().finish, FinishReason::Cancelled);
+    assert_eq!(q1.wait().unwrap().tokens.len(), 2);
+    assert_eq!(q2.wait().unwrap().tokens.len(), 2);
+    let q3 = e.submit(vec![3; 8], SamplingParams::greedy(2)).unwrap();
+    assert_eq!(q3.wait().unwrap().tokens.len(), 2);
+    let m = e.shutdown().unwrap();
+    assert_eq!(m.requests(), 3);
+    assert_eq!(m.cancelled(), 1);
+}
+
+#[test]
+fn preemption_resumes_byte_identically_to_an_uninterrupted_run() {
+    // One slot, a tight anti-starvation bound: the late short session must
+    // evict the long one (recompute-style preemption), run, and hand the
+    // slot back — and the long session's resumed stream must be
+    // byte-identical to its solo run (the replay rebuilds the same cache
+    // bit for bit).
+    let long_prompt = vec![7; 8];
+    let short_prompt = vec![11; 8];
+    let long_solo = solo_tokens(&long_prompt, 48);
+    let short_solo = solo_tokens(&short_prompt, 4);
+
+    let e = engine_with(SchedulerConfig {
+        max_in_flight: 1,
+        starvation_bound: 6,
+        prefill_chunk: 4,
+        ..SchedulerConfig::default()
+    });
+    let long = e.submit(long_prompt, SamplingParams::greedy(48)).unwrap();
+    // ensure the long session holds the slot before the starver arrives
+    assert!(matches!(long.recv(), Some(TokenEvent::First { .. })));
+    let short = e.submit(short_prompt, SamplingParams::greedy(4)).unwrap();
+    let short_c = short.wait().unwrap();
+    let long_c = long.wait().unwrap();
+    let m = e.shutdown().unwrap();
+    assert_eq!(short_c.tokens, short_solo, "preempting session diverged");
+    assert_eq!(long_c.tokens, long_solo, "preempted session resumed differently");
+    assert_eq!(long_c.tokens.len(), 48);
+    assert!(
+        m.preemptions() >= 1,
+        "the starving session should have evicted the long one at the bound"
+    );
+    assert_eq!(m.requests(), 2);
+}
+
+#[test]
 fn temperature_sampling_is_deterministic_given_seed() {
     let run = |seed: u64| -> Vec<i32> {
         let e = engine();
@@ -197,9 +331,9 @@ fn temperature_sampling_is_deterministic_given_seed() {
 #[test]
 fn cancellation_retires_the_session_with_cancelled() {
     let e = engine();
-    // ballast sessions queue ahead of the target, so the worker must
-    // prefill them before it can even admit the target — by then the
-    // cancel flag below is long since set (no race on the flag landing)
+    // ballast sessions keep the worker busy; whether the cancel flag lands
+    // while the target is still pending, mid-prefill, or decoding, the
+    // session must retire as Cancelled at the next step boundary
     let ballast: Vec<_> = (0..3)
         .map(|i| e.submit(vec![i + 1; 8], SamplingParams::greedy(10_000)).unwrap())
         .collect();
