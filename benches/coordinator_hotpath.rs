@@ -174,7 +174,7 @@ fn main() {
     inputs.push(HostTensor::from_i32(&[1, shapes.prompt_len], &prompt));
     let pre = bundle.prefill.run(&inputs).expect("prefill");
 
-    let mut arena = KvArena::new(shapes.geometry());
+    let mut arena = KvArena::new(shapes.geometry(fa2::runtime::DEFAULT_KV_BLOCK));
     let slots: Vec<KvSlot> = (0..4)
         .map(|_| arena.adopt(pre[1].to_f32_vec(), pre[2].to_f32_vec()).unwrap())
         .collect();

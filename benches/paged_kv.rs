@@ -1,0 +1,192 @@
+//! Bench: paged vs contiguous KV decode (DESIGN.md §11).
+//!
+//! Three claims the paged block-table arena must hold on to:
+//!
+//! 1. **No kernel regression** — split-KV decode through a `Paged` block
+//!    table must cost about the same as the contiguous run (the table
+//!    indirection is once per chunk, not per row), and be **bit-identical**
+//!    to it (asserted here, not just in tests).
+//! 2. **Window block skipping pays** — a sliding-window decode touches
+//!    only the in-window blocks, so its cost tracks the window, not the
+//!    history length.
+//! 3. **Block reservation frees memory** — a mixed short/long session mix
+//!    pins a fraction of the blocks the old slab-per-sequence arena
+//!    pinned; the fragmentation stats quantify what's left on the table.
+//!
+//! Records paged/contiguous throughput and block-fragmentation stats into
+//! reports/bench_summary.json for the ci.sh regression gate, and writes
+//! reports/paged_kv.csv.
+
+use fa2::attn::exec::parallel;
+use fa2::attn::spec::{BlockTable, KvLayout};
+use fa2::bench::summary;
+use fa2::runtime::{KvArena, KvGeometry};
+use fa2::util::rng::Rng;
+use fa2::util::stats::Bencher;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+    let mut records = Vec::new();
+
+    // --- kernel-level: contiguous vs paged split-KV decode ---
+    let (n, d, bt) = (4096usize, 64usize, 16usize);
+    let mut rng = Rng::seed_from(0x9A6E);
+    let q = rand_vec(&mut rng, d);
+    let k = rand_vec(&mut rng, n * d);
+    let v = rand_vec(&mut rng, n * d);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // paged copy: same rows in shuffled physical blocks
+    let n_blocks = n / bt;
+    let block_elems = bt * d;
+    let mut phys: Vec<u32> = (0..n_blocks as u32).collect();
+    rng.shuffle(&mut phys);
+    let mut k_pool = vec![0.0f32; n_blocks * block_elems];
+    let mut v_pool = vec![0.0f32; n_blocks * block_elems];
+    for (logical, &pb) in phys.iter().enumerate() {
+        let (src, dst) = (logical * block_elems, pb as usize * block_elems);
+        k_pool[dst..dst + block_elems].copy_from_slice(&k[src..src + block_elems]);
+        v_pool[dst..dst + block_elems].copy_from_slice(&v[src..src + block_elems]);
+    }
+    let contig = KvLayout::Contiguous { k: &k, v: &v };
+    let paged = KvLayout::Paged(BlockTable {
+        k_pool: &k_pool,
+        v_pool: &v_pool,
+        blocks: &phys,
+        block_elems,
+        plane: 0,
+        block_tokens: bt,
+    });
+
+    let s_contig = b.run("decode contiguous n=4096", || {
+        parallel::decode_splitkv_spec(&q, &contig, 0, n, scale, bt)
+    });
+    let s_paged = b.run("decode paged n=4096", || {
+        parallel::decode_splitkv_spec(&q, &paged, 0, n, scale, bt)
+    });
+    // identical chunk boundaries -> identical bits, by construction
+    let (oc, lc) = parallel::decode_splitkv_spec(&q, &contig, 0, n, scale, bt);
+    let (op, lp) = parallel::decode_splitkv_spec(&q, &paged, 0, n, scale, bt);
+    assert!(
+        oc.iter().zip(&op).all(|(a, x)| a.to_bits() == x.to_bits())
+            && lc.to_bits() == lp.to_bits(),
+        "paged decode must be bit-identical to contiguous"
+    );
+    let overhead = s_paged.p50 / s_contig.p50.max(1e-12);
+    println!(
+        "decode n={n} d={d} block={bt}: contiguous {:.1} µs -> paged {:.1} µs \
+         ({overhead:.3}x, bit-identical)",
+        s_contig.p50 * 1e6,
+        s_paged.p50 * 1e6,
+    );
+    records.push(summary::record(
+        "paged_kv",
+        "decode_contig_n4096_d64",
+        "us_per_token",
+        s_contig.p50 * 1e6,
+        "µs/token",
+        false,
+    ));
+    records.push(summary::record(
+        "paged_kv",
+        "decode_paged_n4096_d64",
+        "us_per_token",
+        s_paged.p50 * 1e6,
+        "µs/token",
+        false,
+    ));
+
+    // --- sliding window: out-of-window blocks are never touched ---
+    let w = 512usize;
+    let s_window = b.run("decode paged window=512", || {
+        parallel::decode_splitkv_spec(&q, &paged, n - w, n, scale, bt)
+    });
+    println!(
+        "windowed decode (w={w} of {n}): {:.1} µs ({:.1}x cheaper than full history)",
+        s_window.p50 * 1e6,
+        s_paged.p50 / s_window.p50.max(1e-12)
+    );
+    assert!(
+        s_window.p50 < s_paged.p50,
+        "window decode must cost less than full-history decode"
+    );
+    records.push(summary::record(
+        "paged_kv",
+        "decode_paged_window512_n4096",
+        "us_per_token",
+        s_window.p50 * 1e6,
+        "µs/token",
+        false,
+    ));
+
+    // --- arena fragmentation: mixed short/long sessions ---
+    // tiny-model geometry; 8 chat-sized sessions (12-token reach -> 1
+    // block) + 2 window-filling ones (8 blocks each)
+    let geo = KvGeometry {
+        n_layer: 2,
+        n_kv_head: 4,
+        max_seq: 128,
+        d_head: 16,
+        block_tokens: 16,
+    };
+    let mut arena = KvArena::new(geo);
+    let mut used_tokens = 0usize;
+    let mut slots = Vec::new();
+    for _ in 0..8 {
+        slots.push(arena.try_alloc_seq(geo.blocks_for(12)).unwrap());
+        used_tokens += 12;
+    }
+    for _ in 0..2 {
+        slots.push(arena.try_alloc_seq(geo.blocks_for(128)).unwrap());
+        used_tokens += 128;
+    }
+    let slab_blocks = slots.len() * geo.blocks_per_seq();
+    let reserved_blocks = arena.blocks_in_use();
+    let reserved_tokens = reserved_blocks * geo.block_tokens;
+    let pinned_ratio = reserved_blocks as f64 / slab_blocks as f64;
+    let internal_frag =
+        100.0 * (1.0 - used_tokens as f64 / reserved_tokens as f64);
+    println!(
+        "mixed arena (8 short + 2 long): {reserved_blocks}/{slab_blocks} blocks \
+         vs slab-per-seq ({:.0}% pinned), internal fragmentation {internal_frag:.1}%",
+        pinned_ratio * 100.0
+    );
+    assert!(
+        pinned_ratio < 0.5,
+        "block reservation should pin under half the slab-design blocks here"
+    );
+    records.push(summary::record(
+        "paged_kv",
+        "mixed_8short_2long",
+        "blocks_pinned_ratio",
+        pinned_ratio,
+        "frac of slab design",
+        false,
+    ));
+    records.push(summary::record(
+        "paged_kv",
+        "mixed_8short_2long",
+        "internal_frag_pct",
+        internal_frag,
+        "%",
+        false,
+    ));
+
+    std::fs::create_dir_all("reports").expect("reports dir");
+    let csv = format!(
+        "path,n,d,block,us,note\n\
+         contiguous,{n},{d},{bt},{:.2},bitwise-baseline\n\
+         paged,{n},{d},{bt},{:.2},bit-identical\n\
+         paged_window512,{n},{d},{bt},{:.2},block-skipped\n",
+        s_contig.p50 * 1e6,
+        s_paged.p50 * 1e6,
+        s_window.p50 * 1e6,
+    );
+    std::fs::write("reports/paged_kv.csv", csv).expect("write csv");
+    println!("wrote reports/paged_kv.csv");
+    summary::merge_and_announce(&records);
+}

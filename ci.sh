@@ -18,6 +18,10 @@
 #   ./ci.sh --quick            tier-1 only (fast local iteration)
 #   ./ci.sh --update-baseline  full gate, then re-pin benches/baseline.json
 #                              from this run's bench_summary.json
+#   ./ci.sh --verify-gate      one-command failure-path check: re-runs the
+#                              bench suite with FA2_BENCH_INJECT_SLOWDOWN=1.2
+#                              and PASSES only if the bench gate FAILS
+#                              (requires a pinned non-empty baseline)
 #
 # Run from anywhere; CHANGES.md convention: every PR's entry should note
 # that `./ci.sh` is green (or which step it knowingly skips).
@@ -26,13 +30,40 @@ cd "$(dirname "$0")"
 
 QUICK=0
 UPDATE_BASELINE=0
+VERIFY_GATE=0
 for arg in "$@"; do
     case "$arg" in
         --quick) QUICK=1 ;;
         --update-baseline) UPDATE_BASELINE=1 ;;
-        *) echo "usage: ./ci.sh [--quick] [--update-baseline]" >&2; exit 2 ;;
+        --verify-gate) VERIFY_GATE=1 ;;
+        *) echo "usage: ./ci.sh [--quick] [--update-baseline] [--verify-gate]" >&2; exit 2 ;;
     esac
 done
+
+if [ "$VERIFY_GATE" = 1 ]; then
+    # The documented one-time verification that the bench gate actually
+    # fails on a regression: worsen every recorded value by 20% and expect
+    # a nonzero exit from bench-gate.
+    if ! grep -q '"metric"' benches/baseline.json 2>/dev/null; then
+        echo "verify-gate: benches/baseline.json has no pinned metrics yet;" >&2
+        echo "run ./ci.sh --update-baseline on a quiet machine first" >&2
+        exit 2
+    fi
+    export FA2_BENCH_INJECT_SLOWDOWN=1.2
+    cargo build --release --benches
+    rm -f reports/bench_summary.json
+    for bench in coordinator_hotpath native_attn paged_kv fig4_attn_fwd_bwd \
+                 fig5_attn_fwd fig6_attn_bwd fig7_h100 table1_e2e_training \
+                 runtime_exec; do
+        cargo bench --bench "$bench"
+    done
+    if cargo run --release --quiet --bin repro -- bench-gate; then
+        echo "FAIL: bench gate passed despite an injected 20% slowdown" >&2
+        exit 1
+    fi
+    echo "verify-gate: bench gate correctly FAILED under the injected slowdown"
+    exit 0
+fi
 
 # Integration tests register skips here (tests/common/mod.rs); start clean
 # so the summary reflects THIS run.
@@ -61,8 +92,9 @@ if [ "$QUICK" = 1 ]; then
     exit 0
 fi
 
-echo "== native exec: parity + gradcheck suites (release) =="
-cargo test -q --release --test prop_native_attn --test gradcheck_native_attn
+echo "== native exec: parity + gradcheck + AttnSpec suites (release) =="
+cargo test -q --release --test prop_native_attn --test gradcheck_native_attn \
+    --test prop_attn_spec
 
 echo "== wiring: benches + examples build (includes native_attn) =="
 cargo build --release --benches --examples
@@ -78,8 +110,11 @@ rm -f reports/bench_summary.json
 # records its headline metrics for the regression gate.  runtime_exec
 # self-skips without AOT artifacts (its pinned entries then show up as
 # warn-only missing_in_current).
-for bench in coordinator_hotpath native_attn fig4_attn_fwd_bwd fig5_attn_fwd \
-             fig6_attn_bwd fig7_h100 table1_e2e_training runtime_exec; do
+# paged_kv asserts paged decode is bit-identical to contiguous and records
+# block-fragmentation stats next to the throughput numbers.
+for bench in coordinator_hotpath native_attn paged_kv fig4_attn_fwd_bwd \
+             fig5_attn_fwd fig6_attn_bwd fig7_h100 table1_e2e_training \
+             runtime_exec; do
     echo "-- cargo bench --bench $bench"
     cargo bench --bench "$bench"
 done

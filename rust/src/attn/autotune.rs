@@ -77,6 +77,19 @@ pub fn best(dev: &Device, p: &AttnProblem, method: Method, pass: Pass) -> TunedS
     tune(dev, p, method, pass)[0]
 }
 
+/// The tile the tuner would hand the *executing* engine for this problem:
+/// the cost-model winner's (block_q, block_k), as `attn::exec` tile sizes.
+/// This is the one seam through which exec call sites pick FlashParams —
+/// they used to hardcode the 64×64 default, so the executing engine and
+/// the cost model disagreed on tiling (ISSUE 5 bugfix).
+pub fn exec_params(p: &AttnProblem, pass: Pass) -> crate::attn::exec::FlashParams {
+    let t = best(&Device::a100(), p, Method::Flash2, pass);
+    crate::attn::exec::FlashParams {
+        block_q: t.block_q as usize,
+        block_k: t.block_k as usize,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +146,15 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn exec_params_mirror_the_cost_model_winner() {
+        let p = AttnProblem::paper_setting(4096, 64, false);
+        let fp = exec_params(&p, Pass::Fwd);
+        let b = best(&Device::a100(), &p, Method::Flash2, Pass::Fwd);
+        assert_eq!((fp.block_q as u64, fp.block_k as u64), (b.block_q, b.block_k));
+        assert!(fp.block_q > 0 && fp.block_k > 0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Tiled backward — the paper's Algorithm 2, the 5-matmul pass.
+//! Tiled backward — the paper's Algorithm 2, the 5-matmul pass,
+//! dispatched on [`AttnSpec`].
 //!
 //! P is *recomputed* from the saved logsumexp (`Pᵢⱼ = exp(scale·qᵢ·kⱼ −
 //! LSEᵢ)`), never stored: the five tile matmuls are S = QKᵀ, dV = PᵀdO,
@@ -6,19 +7,26 @@
 //! and `Dᵢ = Σₜ dOᵢₜOᵢₜ` precomputed once per tensor.
 //!
 //! Work partitioning mirrors the paper's backward: one task per
-//! (b, h, K-block) owns that block's dK/dV exclusively and emits a partial
-//! dQ covering the rows it touched; [`super::parallel::backward_with`]
-//! sums those partials in task order, so the reduction is deterministic at
-//! any worker count (no atomics — the host-side stand-in for the paper's
-//! atomic-add on dQ).
+//! (b, KV-head, K-block) owns that block's dK/dV exclusively — under GQA
+//! it accumulates every query head of its group, so no two tasks ever
+//! write the same dK/dV rows — and emits per-group dQ partials covering
+//! only the rows the mask lets this block touch (below `j0`, and past the
+//! sliding window's reach `j1 − 1 + w`, rows provably receive nothing);
+//! [`super::parallel::backward_spec_with`] sums those partials in task
+//! order, so the reduction is deterministic at any worker count (no
+//! atomics — the host-side stand-in for the paper's atomic-add on dQ).
+
+use crate::attn::spec::{AttnSpec, Mask};
 
 use super::TensorView;
 
-/// One (b, h, K-block) backward tile over columns `j0..j1`.
+/// One (b, kv-head, K-block) backward tile over columns `j0..j1`.
 ///
-/// Returns `(dk_tile, dv_tile, q_start, dq_partial)`: dK/dV rows for
-/// `j0..j1`, and a dQ contribution for rows `q_start..seq` (rows below
-/// `q_start` provably receive nothing from this block under the mask).
+/// Returns `(dk_tile, dv_tile, q_start, dq_partials)`: dK/dV rows for
+/// `j0..j1` (summed over the query-head group), and one dQ contribution
+/// per query head of the group, each covering rows `q_start..q_end(j1)`
+/// (`dq_partials.len() == group_size * (q_end - q_start) * d`, head-major).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn backward_tile(
     q: TensorView,
     k: TensorView,
@@ -26,61 +34,83 @@ pub(crate) fn backward_tile(
     lse: &[f32],
     dout: TensorView,
     dvec: &[f32],
+    spec: AttnSpec,
     b: usize,
-    h: usize,
+    kvh: usize,
     j0: usize,
     j1: usize,
 ) -> (Vec<f32>, Vec<f32>, usize, Vec<f32>) {
-    let dims = q.dims;
-    let (n, d) = (dims.seq, dims.head_dim);
-    let scale = dims.scale();
+    let (n, d) = (spec.seq, spec.head_dim);
+    let qd = spec.q_dims();
+    let scale = spec.scale();
     let w = j1 - j0;
 
     let mut dk = vec![0.0f32; w * d];
     let mut dv = vec![0.0f32; w * d];
-    let q_start = if dims.causal { j0 } else { 0 };
-    let mut dq = vec![0.0f32; (n - q_start) * d];
+    let (q_start, q_end) = q_row_span(spec.mask, n, j0, j1);
+    let span = q_end - q_start;
+    let group = spec.heads.group_size();
+    let mut dq = vec![0.0f32; group * span * d];
 
-    for i in q_start..n {
-        // columns of this block row i attends to (j ≤ i when causal)
-        let cols = if dims.causal { (i - j0 + 1).min(w) } else { w };
-        let qi = q.row(b, h, i);
-        let doi = dout.row(b, h, i);
-        let lse_i = lse[dims.lse_offset(b, h, i)];
-        let d_i = dvec[dims.lse_offset(b, h, i)];
-        let dqrow = &mut dq[(i - q_start) * d..(i - q_start + 1) * d];
-        for cj in 0..cols {
-            let j = j0 + cj;
-            let kj = k.row(b, h, j);
-            let vj = v.row(b, h, j);
-            // S then P from the saved LSE (recomputation, not storage)
-            let mut s = 0.0f32;
-            for t in 0..d {
-                s += qi[t] * kj[t];
+    for (gi, h) in spec.heads.q_heads_of(kvh).enumerate() {
+        for i in q_start..q_end {
+            // columns of this block row i attends to under the mask
+            let (lo, hi) = spec.mask.row_bounds(i, n);
+            let (start, end) = (lo.max(j0), hi.min(j1));
+            if start >= end {
+                continue;
             }
-            let pij = (s * scale - lse_i).exp();
-            // dP = dO·Vⱼ ;  dS = P(dP − D)·scale
-            let mut dp = 0.0f32;
-            for t in 0..d {
-                dp += doi[t] * vj[t];
-            }
-            let ds = pij * (dp - d_i) * scale;
-            let dkrow = &mut dk[cj * d..(cj + 1) * d];
-            let dvrow = &mut dv[cj * d..(cj + 1) * d];
-            for t in 0..d {
-                dkrow[t] += ds * qi[t];
-                dvrow[t] += pij * doi[t];
-                dqrow[t] += ds * kj[t];
+            let qi = q.row(b, h, i);
+            let doi = dout.row(b, h, i);
+            let lse_i = lse[qd.lse_offset(b, h, i)];
+            let d_i = dvec[qd.lse_offset(b, h, i)];
+            let dqrow_at = (gi * span + (i - q_start)) * d;
+            let dqrow = &mut dq[dqrow_at..dqrow_at + d];
+            for j in start..end {
+                let cj = j - j0;
+                let kj = k.row(b, kvh, j);
+                let vj = v.row(b, kvh, j);
+                // S then P from the saved LSE (recomputation, not storage)
+                let mut s = 0.0f32;
+                for t in 0..d {
+                    s += qi[t] * kj[t];
+                }
+                let pij = (s * scale - lse_i).exp();
+                // dP = dO·Vⱼ ;  dS = P(dP − D)·scale
+                let mut dp = 0.0f32;
+                for t in 0..d {
+                    dp += doi[t] * vj[t];
+                }
+                let ds = pij * (dp - d_i) * scale;
+                let dkrow = &mut dk[cj * d..(cj + 1) * d];
+                let dvrow = &mut dv[cj * d..(cj + 1) * d];
+                for t in 0..d {
+                    dkrow[t] += ds * qi[t];
+                    dvrow[t] += pij * doi[t];
+                    dqrow[t] += ds * kj[t];
+                }
             }
         }
     }
     (dk, dv, q_start, dq)
 }
 
+/// The Q rows the K-block `[j0, j1)` can contribute to under `mask`:
+/// `Full` touches every row; causal-like masks touch nothing above `j0`;
+/// a sliding window additionally touches nothing past `j1 − 1 + w`.
+pub(crate) fn q_row_span(mask: Mask, n: usize, j0: usize, j1: usize) -> (usize, usize) {
+    match mask {
+        Mask::Full => (0, n),
+        Mask::Causal => (j0, n),
+        Mask::SlidingWindow(w) => (j0, n.min(j1 - 1 + w)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{parallel, reference, AttnDims, FlashParams};
     use super::*;
+    use crate::attn::spec::HeadMap;
     use crate::util::rng::Rng;
 
     fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -89,6 +119,27 @@ mod tests {
 
     fn max_diff(a: &[f32], b: &[f32]) -> f32 {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn q_row_span_is_tight() {
+        // brute force: the span must contain exactly the rows with any
+        // live column in the block
+        let n = 24;
+        for mask in [Mask::Full, Mask::Causal, Mask::SlidingWindow(3), Mask::SlidingWindow(9)]
+        {
+            for j0 in (0..n).step_by(5) {
+                let j1 = (j0 + 5).min(n);
+                let (s, e) = q_row_span(mask, n, j0, j1);
+                for i in 0..n {
+                    let live = (j0..j1).any(|j| mask.allows(i, j));
+                    assert!(
+                        !live || (s..e).contains(&i),
+                        "{mask:?} block [{j0},{j1}): live row {i} outside span [{s},{e})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -110,6 +161,30 @@ mod tests {
             assert!(max_diff(&g.dq, &r.dq) < 1e-4, "dQ seq={seq} causal={causal}");
             assert!(max_diff(&g.dk, &r.dk) < 1e-4, "dK seq={seq} causal={causal}");
             assert!(max_diff(&g.dv, &r.dv) < 1e-4, "dV seq={seq} causal={causal}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_gradients_gqa_and_window() {
+        let mut rng = Rng::seed_from(32);
+        for (heads, mask) in [
+            (HeadMap { n_q_heads: 4, n_kv_heads: 2 }, Mask::Causal),
+            (HeadMap { n_q_heads: 4, n_kv_heads: 1 }, Mask::SlidingWindow(5)),
+            (HeadMap::mha(2), Mask::SlidingWindow(3)),
+            (HeadMap { n_q_heads: 6, n_kv_heads: 2 }, Mask::Full),
+        ] {
+            let spec = AttnSpec { batch: 1, heads, seq: 19, head_dim: 6, mask };
+            let q = rand_vec(&mut rng, spec.q_elems());
+            let k = rand_vec(&mut rng, spec.kv_elems());
+            let v = rand_vec(&mut rng, spec.kv_elems());
+            let dout = rand_vec(&mut rng, spec.q_elems());
+            let p = FlashParams { block_q: 8, block_k: 4 };
+            let fwd = parallel::forward_spec_with(1, &q, &k, &v, spec, p);
+            let g = parallel::backward_spec_with(1, &q, &k, &v, &fwd, &dout, spec, p);
+            let r = reference::backward_spec(&q, &k, &v, &dout, spec);
+            assert!(max_diff(&g.dq, &r.dq) < 1e-4, "dQ {heads:?} {mask:?}");
+            assert!(max_diff(&g.dk, &r.dk) < 1e-4, "dK {heads:?} {mask:?}");
+            assert!(max_diff(&g.dv, &r.dv) < 1e-4, "dV {heads:?} {mask:?}");
         }
     }
 }

@@ -1,33 +1,44 @@
-//! Tiled online-softmax forward — the paper's Algorithm 1.
+//! Tiled online-softmax forward — the paper's Algorithm 1, dispatched on
+//! [`AttnSpec`].
 //!
-//! One call to [`forward_tile`] computes a (b, h, Q-block) tile: it streams
-//! K/V blocks through a running (m, l, õ) state, rescales the accumulator
-//! once per block instead of once per iteration (§3.1), skips K blocks that
-//! are entirely above the causal diagonal, and masks only the blocks the
-//! diagonal actually crosses.  Only the logsumexp is saved for the backward
-//! pass — not m and l separately, and never the N×N score matrix.
+//! One call to [`forward_tile`] computes a (b, q-head, Q-block) tile: it
+//! streams K/V blocks of the spec's KV head (grouped-query broadcast)
+//! through a running (m, l, õ) state, rescales the accumulator once per
+//! block instead of once per iteration (§3.1), and classifies every
+//! K block against the spec's mask ([`Mask::cover`]): `Skip` blocks —
+//! above the causal diagonal *or* left of the sliding window — are never
+//! read, `Full` blocks need no per-row masking, and only the blocks the
+//! mask boundary actually crosses pay per-row column bounds.  Only the
+//! logsumexp is saved for the backward pass — not m and l separately, and
+//! never the N×N score matrix.
 //!
 //! The whole-tensor entry point lives in [`super::parallel`]; `forward`
 //! here is the serial spelling (worker count 1 through the same fan-out),
 //! so serial and parallel runs are byte-identical by construction.
+//!
+//! [`Mask::cover`]: crate::attn::spec::Mask::cover
+
+use crate::attn::spec::{AttnSpec, Cover};
 
 use super::{AttnDims, FlashOut, FlashParams, TensorView};
 
-/// Compute rows `q0..q1` of head (b, h).  Returns the tile's output rows
-/// (`(q1-q0)·head_dim` values) and logsumexps (`q1-q0` values).
+/// Compute rows `q0..q1` of query head (b, h).  Returns the tile's output
+/// rows (`(q1-q0)·head_dim` values) and logsumexps (`q1-q0` values).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn forward_tile(
     q: TensorView,
     k: TensorView,
     v: TensorView,
+    spec: AttnSpec,
     p: FlashParams,
     b: usize,
     h: usize,
     q0: usize,
     q1: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    let dims = q.dims;
-    let (n, d) = (dims.seq, dims.head_dim);
-    let scale = dims.scale();
+    let (n, d) = (spec.seq, spec.head_dim);
+    let g = spec.heads.kv_head(h);
+    let scale = spec.scale();
     let rows = q1 - q0;
     let bk = p.block_k.max(1);
 
@@ -36,36 +47,40 @@ pub(crate) fn forward_tile(
     let mut l = vec![0.0f32; rows];
     let mut s = vec![0.0f32; rows * bk]; // score tile scratch
 
-    let mut j0 = 0;
+    // Start at the first block any row of this tile can see (left-edge
+    // block skipping for sliding windows; 0 for full/causal), and stop
+    // after the diagonal for causal-like masks.
+    let first_col = spec.mask.row_bounds(q0, n).0;
+    let mut j0 = (first_col / bk) * bk;
     while j0 < n {
         let j1 = (j0 + bk).min(n);
-        if dims.causal && j0 > q1 - 1 {
-            break; // this and all later K blocks are fully masked
+        let cover = spec.mask.cover(q0, q1, j0, j1);
+        if cover == Cover::Skip {
+            if spec.mask.is_causal_like() && j0 > q1 - 1 {
+                break; // this and all later K blocks are above the diagonal
+            }
+            j0 = j1;
+            continue; // left of the window: never read, move right
         }
-        let w = j1 - j0;
-        // A block is "full" when the causal diagonal does not cross it;
-        // then no per-row masking is needed (§3.1: mask only where needed).
-        let full = !dims.causal || j1 - 1 <= q0;
         for (ri, i) in (q0..q1).enumerate() {
-            // columns of this block row i may attend to (j ≤ i when
-            // causal); masked columns are never computed, not computed
-            // then discarded
-            let lim = if full {
-                w
-            } else if i < j0 {
-                0
+            // columns of this block row i may attend to; masked columns
+            // are never computed, not computed then discarded
+            let (start, end) = if cover == Cover::Full {
+                (j0, j1)
             } else {
-                (i - j0 + 1).min(w)
+                let (lo, hi) = spec.mask.row_bounds(i, n);
+                (lo.max(j0), hi.min(j1))
             };
-            if lim == 0 {
+            if start >= end {
                 continue;
             }
-            // S[ri, ..lim] = scale · qᵢ Kᵀ
+            let w = end - start;
+            // S[ri, ..w] = scale · qᵢ Kᵀ
             let qi = q.row(b, h, i);
             {
-                let srow = &mut s[ri * bk..ri * bk + lim];
+                let srow = &mut s[ri * bk..ri * bk + w];
                 for (cj, sv) in srow.iter_mut().enumerate() {
-                    let kj = k.row(b, h, j0 + cj);
+                    let kj = k.row(b, g, start + cj);
                     let mut acc = 0.0f32;
                     for t in 0..d {
                         acc += qi[t] * kj[t];
@@ -73,7 +88,7 @@ pub(crate) fn forward_tile(
                     *sv = acc * scale;
                 }
             }
-            let srow = &s[ri * bk..ri * bk + lim];
+            let srow = &s[ri * bk..ri * bk + w];
             let mut mb = f32::NEG_INFINITY;
             for &x in srow {
                 mb = mb.max(x);
@@ -92,7 +107,7 @@ pub(crate) fn forward_tile(
             for (cj, &sj) in srow.iter().enumerate() {
                 let pij = (sj - mnew).exp();
                 l[ri] += pij;
-                let vj = v.row(b, h, j0 + cj);
+                let vj = v.row(b, g, start + cj);
                 for t in 0..d {
                     orow[t] += pij * vj[t];
                 }
@@ -113,23 +128,37 @@ pub(crate) fn forward_tile(
             lse[ri] = m[ri] + l[ri].ln();
         } else {
             // a row that attended to nothing (cannot happen for square
-            // causal/full attention, but keep the contract total)
+            // full/causal/window attention, but keep the contract total)
             lse[ri] = f32::NEG_INFINITY;
         }
     }
     (o, lse)
 }
 
-/// Algorithm 1 over the whole tensor, serially (worker count 1 through the
-/// same order-preserving fan-out `parallel::forward` uses).
+/// Algorithm 1 over the whole tensor under a full [`AttnSpec`], serially
+/// (worker count 1 through the same order-preserving fan-out
+/// `parallel::forward_spec` uses).
+pub fn forward_spec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    spec: AttnSpec,
+    p: FlashParams,
+) -> FlashOut {
+    super::parallel::forward_spec_with(1, q, k, v, spec, p)
+}
+
+/// Algorithm 1 in the seed-era equal-heads API (wrapper over
+/// [`forward_spec`] with `AttnSpec::from_dims`).
 pub fn forward(q: &[f32], k: &[f32], v: &[f32], dims: AttnDims, p: FlashParams) -> FlashOut {
-    super::parallel::forward_with(1, q, k, v, dims, p)
+    forward_spec(q, k, v, crate::attn::spec::AttnSpec::from_dims(dims), p)
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::reference;
     use super::*;
+    use crate::attn::spec::{HeadMap, Mask};
     use crate::util::rng::Rng;
 
     fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -189,5 +218,59 @@ mod tests {
             let rf = reference::forward(&q, &k, &v, dims);
             assert!(max_diff(&fl.o, &rf.o) < 1e-4, "seq={seq}");
         }
+    }
+
+    #[test]
+    fn sliding_window_matches_reference_across_block_geometries() {
+        // windows smaller than / equal to / larger than the K block, with
+        // seqlens that leave remainders, and GQA/MQA head maps
+        let mut rng = Rng::seed_from(9);
+        for &(seq, w, bq, bk) in &[
+            (33usize, 5usize, 8usize, 8usize),
+            (64, 16, 16, 16),
+            (40, 1, 8, 8),
+            (21, 100, 4, 8), // window wider than seq == causal
+            (48, 7, 16, 4),
+        ] {
+            for heads in [HeadMap::mha(2), HeadMap { n_q_heads: 4, n_kv_heads: 2 }] {
+                let spec = AttnSpec {
+                    batch: 1,
+                    heads,
+                    seq,
+                    head_dim: 8,
+                    mask: Mask::SlidingWindow(w),
+                };
+                let q = rand_vec(&mut rng, spec.q_elems());
+                let k = rand_vec(&mut rng, spec.kv_elems());
+                let v = rand_vec(&mut rng, spec.kv_elems());
+                let p = FlashParams { block_q: bq, block_k: bk };
+                let fl = forward_spec(&q, &k, &v, spec, p);
+                let rf = reference::forward_spec(&q, &k, &v, spec);
+                assert!(
+                    max_diff(&fl.o, &rf.o) < 1e-4,
+                    "O mismatch seq={seq} w={w} bq={bq} bk={bk} {heads:?}"
+                );
+                assert!(max_diff(&fl.lse, &rf.lse) < 1e-4, "LSE mismatch w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_wider_than_seq_is_bitwise_causal() {
+        // SlidingWindow(w >= seq) visits exactly the blocks Causal visits,
+        // in the same order — the outputs must be bit-identical.
+        let mut rng = Rng::seed_from(10);
+        let dims = AttnDims { batch: 1, heads: 2, seq: 37, head_dim: 8, causal: true };
+        let n = dims.elems();
+        let (q, k, v) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+        let p = FlashParams { block_q: 8, block_k: 8 };
+        let causal = forward(&q, &k, &v, dims, p);
+        let spec = AttnSpec {
+            mask: Mask::SlidingWindow(64),
+            ..AttnSpec::from_dims(dims)
+        };
+        let windowed = forward_spec(&q, &k, &v, spec, p);
+        assert_eq!(causal.o, windowed.o);
+        assert_eq!(causal.lse, windowed.lse);
     }
 }

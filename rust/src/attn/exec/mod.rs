@@ -5,9 +5,16 @@
 //! `serve`/`verify` end-to-end with no AOT artifacts (see
 //! `runtime::native`).  DESIGN.md §7 is the architecture note.
 //!
+//! Every kernel dispatches on one [`AttnSpec`](crate::attn::spec::AttnSpec)
+//! (DESIGN.md §11): grouped-query head maps, full/causal/sliding-window
+//! masks, and contiguous-vs-paged KV layouts all flow through the same
+//! entry points — the seed-era `AttnDims` functions survive as thin
+//! equal-heads wrappers.
+//!
 //! Layout contract: every tensor is a flat `Vec<f32>`/`&[f32]` in row-major
 //! `(batch, heads, seq, head_dim)` order with the last dim contiguous,
-//! wrapped in a [`TensorView`] shared by all kernels.  Modules:
+//! wrapped in a [`TensorView`]; under GQA the Q-shaped tensors carry
+//! `n_q_heads` and the KV-shaped tensors `n_kv_heads`.  Modules:
 //!
 //! - [`reference`]: naive O(N²) forward + backward, the correctness oracle
 //!   (f64 accumulation, f32 in/out).
@@ -62,11 +69,9 @@ impl AttnDims {
         (b * self.heads + h) * self.seq + i
     }
 
-    /// Executed FLOPs under the paper's §4.1 accounting — delegates to
-    /// [`AttnProblem::reported_flops`] so the formula lives in one place.
-    ///
-    /// [`AttnProblem::reported_flops`]: crate::attn::AttnProblem::reported_flops
-    pub fn flops(&self, pass: Pass) -> f64 {
+    /// The cost-model form of this problem (f32 dtype) — what the
+    /// autotuner prices when choosing tiles for the executing kernels.
+    pub fn problem(&self) -> crate::attn::AttnProblem {
         crate::attn::AttnProblem {
             batch: self.batch as u64,
             heads: self.heads as u64,
@@ -75,7 +80,14 @@ impl AttnDims {
             causal: self.causal,
             dtype_bytes: 4, // f32 (irrelevant to the FLOP count)
         }
-        .reported_flops(pass)
+    }
+
+    /// Executed FLOPs under the paper's §4.1 accounting — delegates to
+    /// [`AttnProblem::reported_flops`] so the formula lives in one place.
+    ///
+    /// [`AttnProblem::reported_flops`]: crate::attn::AttnProblem::reported_flops
+    pub fn flops(&self, pass: Pass) -> f64 {
+        self.problem().reported_flops(pass)
     }
 }
 
@@ -125,6 +137,15 @@ pub struct FlashParams {
 impl Default for FlashParams {
     fn default() -> Self {
         FlashParams { block_q: 64, block_k: 64 }
+    }
+}
+
+impl FlashParams {
+    /// The tile `attn::autotune` picks for this problem on the cost model
+    /// — the executing engine and the cost model agree on tiling instead
+    /// of the exec call sites hardcoding the 64×64 default.
+    pub fn tuned(dims: AttnDims, pass: Pass) -> FlashParams {
+        crate::attn::autotune::exec_params(&dims.problem(), pass)
     }
 }
 

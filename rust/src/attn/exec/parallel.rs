@@ -1,35 +1,50 @@
-//! §3.2 work partitioning for the native kernels, on `util::pool`.
+//! §3.2 work partitioning for the native kernels, on `util::pool`,
+//! dispatched on [`AttnSpec`].
 //!
-//! Forward fans one task per (batch, head, Q-block); backward fans one per
-//! (batch, head, K-block) — exactly the grid dimensions the paper adds over
-//! FlashAttention-1 to fill the machine when batch·heads alone is too
-//! small.  `par_map` returns results in input order, and dQ partials are
-//! summed in fixed task order, so any worker count produces byte-identical
-//! outputs (`FA2_POOL_THREADS=1` is the serial A/B switch, as for the
-//! sweeps).
+//! Forward fans one task per (batch, Q-head, Q-block); backward fans one
+//! per (batch, KV-head, K-block) — exactly the grid dimensions the paper
+//! adds over FlashAttention-1 to fill the machine when batch·heads alone
+//! is too small, and under GQA the backward grid naturally owns each KV
+//! head's dK/dV exclusively (every query head of the group accumulates
+//! inside one task).  `par_map` returns results in input order, and dQ
+//! partials are summed in fixed task order, so any worker count produces
+//! byte-identical outputs (`FA2_POOL_THREADS=1` is the serial A/B switch,
+//! as for the sweeps).
 //!
 //! The split-KV decode path is the flash-decoding shape: one query row
 //! against a long KV history, cut into chunks whose partial softmax states
 //! reduce through `attn::combine` — the same associative merge the warp
-//! split-K exchange (§3.3) relies on.  The streaming variant
-//! ([`decode_splitkv`]) reuses two `Partial`s and never allocates per
-//! chunk; the fanned variant ([`decode_splitkv_fanned`]) computes chunk
+//! split-K exchange (§3.3) relies on.  [`decode_splitkv_spec`] is the
+//! layout-polymorphic core: it streams a [`KvLayout`] (contiguous run or
+//! paged block table) over an absolute row range with chunk boundaries
+//! aligned to absolute multiples of the chunk size, so paged and
+//! contiguous decode of the same history are **bit-identical** whenever
+//! their chunk sizes agree, and a sliding window's out-of-range blocks
+//! are never touched.  The streaming variants reuse two `Partial`s and
+//! never allocate per chunk; [`decode_splitkv_fanned`] computes chunk
 //! partials on the pool and reduces them with `merge_all`.
 
 use crate::attn::combine::{merge_all, Partial};
+use crate::attn::spec::{AttnSpec, KvLayout};
 use crate::util::pool;
 
 use super::{flash_bwd, flash_fwd, AttnDims, FlashGrads, FlashOut, FlashParams, TensorView};
 
-/// One task per (b, h, block) where `block` tiles `0..seq` by `step`.
-fn block_tasks(dims: AttnDims, step: usize) -> Vec<(usize, usize, usize, usize)> {
+/// One task per (b, h, block) where `h` counts `heads` and `block` tiles
+/// `0..seq` by `step`.
+fn block_tasks(
+    batch: usize,
+    heads: usize,
+    seq: usize,
+    step: usize,
+) -> Vec<(usize, usize, usize, usize)> {
     let step = step.max(1);
     let mut tasks = Vec::new();
-    for b in 0..dims.batch {
-        for h in 0..dims.heads {
+    for b in 0..batch {
+        for h in 0..heads {
             let mut lo = 0;
-            while lo < dims.seq {
-                let hi = (lo + step).min(dims.seq);
+            while lo < seq {
+                let hi = (lo + step).min(seq);
                 tasks.push((b, h, lo, hi));
                 lo = hi;
             }
@@ -38,13 +53,54 @@ fn block_tasks(dims: AttnDims, step: usize) -> Vec<(usize, usize, usize, usize)>
     tasks
 }
 
-/// Flash forward over the whole tensor, fanned across the pool.
+/// Flash forward over the whole tensor under the spec, fanned across the
+/// pool.
+pub fn forward_spec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    spec: AttnSpec,
+    p: FlashParams,
+) -> FlashOut {
+    forward_spec_with(pool::threads(), q, k, v, spec, p)
+}
+
+/// [`forward_spec`] with an explicit worker count (1 = serial; benches
+/// and the byte-identical A/B tests pin this).
+pub fn forward_spec_with(
+    workers: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    spec: AttnSpec,
+    p: FlashParams,
+) -> FlashOut {
+    let qd = spec.q_dims();
+    let kd = spec.kv_dims();
+    let qv = TensorView::new(qd, q);
+    let kv = TensorView::new(kd, k);
+    let vv = TensorView::new(kd, v);
+    let tasks = block_tasks(spec.batch, spec.heads.n_q_heads, spec.seq, p.block_q);
+    let tiles = pool::par_map_with(workers, tasks.clone(), |(b, h, q0, q1)| {
+        flash_fwd::forward_tile(qv, kv, vv, spec, p, b, h, q0, q1)
+    });
+    let d = spec.head_dim;
+    let mut out = FlashOut { o: vec![0.0; spec.q_elems()], lse: vec![0.0; spec.q_rows()] };
+    for ((b, h, q0, q1), (ot, lt)) in tasks.into_iter().zip(tiles) {
+        let ro = qd.row_offset(b, h, q0);
+        out.o[ro..ro + (q1 - q0) * d].copy_from_slice(&ot);
+        let lo = qd.lse_offset(b, h, q0);
+        out.lse[lo..lo + (q1 - q0)].copy_from_slice(&lt);
+    }
+    out
+}
+
+/// Flash forward in the seed-era equal-heads API.
 pub fn forward(q: &[f32], k: &[f32], v: &[f32], dims: AttnDims, p: FlashParams) -> FlashOut {
     forward_with(pool::threads(), q, k, v, dims, p)
 }
 
-/// [`forward`] with an explicit worker count (1 = serial; benches and the
-/// byte-identical A/B tests pin this).
+/// [`forward`] with an explicit worker count.
 pub fn forward_with(
     workers: usize,
     q: &[f32],
@@ -53,26 +109,96 @@ pub fn forward_with(
     dims: AttnDims,
     p: FlashParams,
 ) -> FlashOut {
-    let qv = TensorView::new(dims, q);
-    let kv = TensorView::new(dims, k);
-    let vv = TensorView::new(dims, v);
-    let tasks = block_tasks(dims, p.block_q);
-    let tiles = pool::par_map_with(workers, tasks.clone(), |(b, h, q0, q1)| {
-        flash_fwd::forward_tile(qv, kv, vv, p, b, h, q0, q1)
-    });
-    let d = dims.head_dim;
-    let mut out = FlashOut { o: vec![0.0; dims.elems()], lse: vec![0.0; dims.rows()] };
-    for ((b, h, q0, q1), (ot, lt)) in tasks.into_iter().zip(tiles) {
-        let ro = dims.row_offset(b, h, q0);
-        out.o[ro..ro + (q1 - q0) * d].copy_from_slice(&ot);
-        let lo = dims.lse_offset(b, h, q0);
-        out.lse[lo..lo + (q1 - q0)].copy_from_slice(&lt);
-    }
-    out
+    forward_spec_with(workers, q, k, v, AttnSpec::from_dims(dims), p)
 }
 
-/// Flash backward over the whole tensor, fanned across the pool.
-/// `fwd` is the forward's output (O for the D vector, LSE to recompute P).
+/// Flash backward over the whole tensor under the spec, fanned across the
+/// pool.  `fwd` is the forward's output (O for the D vector, LSE to
+/// recompute P).  `dq` is Q-shaped; `dk`/`dv` are KV-shaped.
+pub fn backward_spec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    fwd: &FlashOut,
+    dout: &[f32],
+    spec: AttnSpec,
+    p: FlashParams,
+) -> FlashGrads {
+    backward_spec_with(pool::threads(), q, k, v, fwd, dout, spec, p)
+}
+
+/// [`backward_spec`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_spec_with(
+    workers: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    fwd: &FlashOut,
+    dout: &[f32],
+    spec: AttnSpec,
+    p: FlashParams,
+) -> FlashGrads {
+    let qd = spec.q_dims();
+    let kd = spec.kv_dims();
+    let qv = TensorView::new(qd, q);
+    let kv = TensorView::new(kd, k);
+    let vv = TensorView::new(kd, v);
+    let dov = TensorView::new(qd, dout);
+    assert_eq!(fwd.o.len(), spec.q_elems(), "forward O length mismatch");
+    assert_eq!(fwd.lse.len(), spec.q_rows(), "forward LSE length mismatch");
+
+    // D_i = Σ_t dO_it · O_it, once per tensor (Algorithm 2 line 1)
+    let d = spec.head_dim;
+    let mut dvec = vec![0.0f32; spec.q_rows()];
+    for (r, dv) in dvec.iter_mut().enumerate() {
+        let (orow, dorow) = (&fwd.o[r * d..(r + 1) * d], &dout[r * d..(r + 1) * d]);
+        let mut acc = 0.0f32;
+        for t in 0..d {
+            acc += orow[t] * dorow[t];
+        }
+        *dv = acc;
+    }
+
+    let tasks = block_tasks(spec.batch, spec.heads.n_kv_heads, spec.seq, p.block_k);
+    let lse = &fwd.lse;
+    let dvec_ref = &dvec;
+
+    let mut g = FlashGrads {
+        dq: vec![0.0; spec.q_elems()],
+        dk: vec![0.0; spec.kv_elems()],
+        dv: vec![0.0; spec.kv_elems()],
+    };
+    // Fan tasks in bounded waves: each task's dQ partial spans up to the
+    // whole seqlen per group head, so holding every tile at once would
+    // cost O(group·seq²·d/block_k) transient memory on long sequences.
+    // dK/dV rows are owned by exactly one task; dQ partials are summed in
+    // ascending task order — the order is the same for ANY worker or wave
+    // size, so outputs stay byte-identical to serial.
+    let wave = workers.max(1) * 4;
+    for wave_tasks in tasks.chunks(wave) {
+        let tiles = pool::par_map_with(workers, wave_tasks.to_vec(), |(b, kvh, j0, j1)| {
+            flash_bwd::backward_tile(qv, kv, vv, lse, dov, dvec_ref, spec, b, kvh, j0, j1)
+        });
+        for (&(b, kvh, j0, j1), (dk_t, dv_t, q_start, dq_t)) in wave_tasks.iter().zip(tiles) {
+            let ro = kd.row_offset(b, kvh, j0);
+            g.dk[ro..ro + (j1 - j0) * d].copy_from_slice(&dk_t);
+            g.dv[ro..ro + (j1 - j0) * d].copy_from_slice(&dv_t);
+            let group = spec.heads.group_size();
+            let span = dq_t.len() / (group * d);
+            for (gi, h) in spec.heads.q_heads_of(kvh).enumerate() {
+                let base = qd.row_offset(b, h, q_start);
+                let part = &dq_t[gi * span * d..(gi + 1) * span * d];
+                for (x, acc) in part.iter().zip(&mut g.dq[base..base + part.len()]) {
+                    *acc += *x;
+                }
+            }
+        }
+    }
+    g
+}
+
+/// Flash backward in the seed-era equal-heads API.
 pub fn backward(
     q: &[f32],
     k: &[f32],
@@ -97,58 +223,7 @@ pub fn backward_with(
     dims: AttnDims,
     p: FlashParams,
 ) -> FlashGrads {
-    let qv = TensorView::new(dims, q);
-    let kv = TensorView::new(dims, k);
-    let vv = TensorView::new(dims, v);
-    let dov = TensorView::new(dims, dout);
-    assert_eq!(fwd.o.len(), dims.elems(), "forward O length mismatch");
-    assert_eq!(fwd.lse.len(), dims.rows(), "forward LSE length mismatch");
-
-    // D_i = Σ_t dO_it · O_it, once per tensor (Algorithm 2 line 1)
-    let d = dims.head_dim;
-    let mut dvec = vec![0.0f32; dims.rows()];
-    for (r, dv) in dvec.iter_mut().enumerate() {
-        let (orow, dorow) = (&fwd.o[r * d..(r + 1) * d], &dout[r * d..(r + 1) * d]);
-        let mut acc = 0.0f32;
-        for t in 0..d {
-            acc += orow[t] * dorow[t];
-        }
-        *dv = acc;
-    }
-
-    let tasks = block_tasks(dims, p.block_k);
-    let lse = &fwd.lse;
-    let dvec_ref = &dvec;
-
-    let mut g = FlashGrads {
-        dq: vec![0.0; dims.elems()],
-        dk: vec![0.0; dims.elems()],
-        dv: vec![0.0; dims.elems()],
-    };
-    // Fan tasks in bounded waves: each task's dQ partial spans up to the
-    // whole seqlen, so holding every tile at once would cost
-    // O(seq²·d/block_k) transient memory on long sequences.  dK/dV rows
-    // are owned by exactly one task; dQ partials are summed in ascending
-    // task order — the order is the same for ANY worker or wave size, so
-    // outputs stay byte-identical to serial.
-    let wave = workers.max(1) * 4;
-    for wave_tasks in tasks.chunks(wave) {
-        let tiles = pool::par_map_with(workers, wave_tasks.to_vec(), |(b, h, j0, j1)| {
-            flash_bwd::backward_tile(qv, kv, vv, lse, dov, dvec_ref, b, h, j0, j1)
-        });
-        for (&(b, h, j0, j1), (dk_t, dv_t, q_start, dq_t)) in
-            wave_tasks.iter().zip(tiles)
-        {
-            let ro = dims.row_offset(b, h, j0);
-            g.dk[ro..ro + (j1 - j0) * d].copy_from_slice(&dk_t);
-            g.dv[ro..ro + (j1 - j0) * d].copy_from_slice(&dv_t);
-            let base = dims.row_offset(b, h, q_start);
-            for (x, acc) in dq_t.iter().zip(&mut g.dq[base..base + dq_t.len()]) {
-                *acc += *x;
-            }
-        }
-    }
-    g
+    backward_spec_with(workers, q, k, v, fwd, dout, AttnSpec::from_dims(dims), p)
 }
 
 /// Fill `out` with the partial softmax state of one KV chunk (`rows`
@@ -185,9 +260,41 @@ fn partial_from_chunk(out: &mut Partial, qrow: &[f32], kc: &[f32], vc: &[f32], s
     }
 }
 
-/// Streaming split-KV decode: one query row against `n` cached KV rows,
-/// reduced chunk by chunk with `Partial::merge_from` — zero allocations
-/// per chunk (the serving decode hot loop).  Returns (O row, LSE).
+/// Layout-polymorphic streaming split-KV decode: one query row against
+/// the history rows `[lo, hi)` of `kv`, reduced chunk by chunk with
+/// `Partial::merge_from` — zero allocations per chunk (the serving decode
+/// hot loop).  Chunk boundaries sit at absolute multiples of `chunk`, so
+/// a paged layout (chunk = block size) and a contiguous layout chunked
+/// the same way produce **bit-identical** results, and rows left of `lo`
+/// (a sliding window's expired history) are never read.  Returns
+/// (O row, LSE).
+pub fn decode_splitkv_spec(
+    qrow: &[f32],
+    kv: &KvLayout<'_>,
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    chunk: usize,
+) -> (Vec<f32>, f32) {
+    let d = qrow.len();
+    let chunk = kv.chunk_tokens(chunk);
+    let mut acc = Partial::empty(d);
+    let mut tmp = Partial::empty(d);
+    let mut t0 = lo;
+    while t0 < hi {
+        let t1 = hi.min((t0 / chunk + 1) * chunk);
+        let (kc, vc) = kv.rows(t0, t1, d);
+        partial_from_chunk(&mut tmp, qrow, kc, vc, scale);
+        acc.merge_from(&tmp);
+        t0 = t1;
+    }
+    let (o, lse) = acc.finalize();
+    (o.into_iter().map(|x| x as f32).collect(), lse as f32)
+}
+
+/// Streaming split-KV decode over a contiguous history: one query row
+/// against `n` cached KV rows ([`decode_splitkv_spec`] over
+/// `KvLayout::Contiguous`, full range).  Returns (O row, LSE).
 pub fn decode_splitkv(
     qrow: &[f32],
     k_hist: &[f32],
@@ -198,18 +305,8 @@ pub fn decode_splitkv(
 ) -> (Vec<f32>, f32) {
     let d = qrow.len();
     assert!(k_hist.len() >= n * d && v_hist.len() >= n * d, "history too short");
-    let chunk = chunk.max(1);
-    let mut acc = Partial::empty(d);
-    let mut tmp = Partial::empty(d);
-    let mut c0 = 0;
-    while c0 < n {
-        let c1 = (c0 + chunk).min(n);
-        partial_from_chunk(&mut tmp, qrow, &k_hist[c0 * d..c1 * d], &v_hist[c0 * d..c1 * d], scale);
-        acc.merge_from(&tmp);
-        c0 = c1;
-    }
-    let (o, lse) = acc.finalize();
-    (o.into_iter().map(|x| x as f32).collect(), lse as f32)
+    let kv = KvLayout::Contiguous { k: &k_hist[..n * d], v: &v_hist[..n * d] };
+    decode_splitkv_spec(qrow, &kv, 0, n, scale, chunk)
 }
 
 /// Fanned split-KV decode: chunk partials computed on the pool, reduced
@@ -246,6 +343,7 @@ pub fn decode_splitkv_fanned(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attn::spec::{HeadMap, Mask};
     use crate::util::rng::Rng;
 
     fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -283,6 +381,35 @@ mod tests {
         assert_eq!(serial.dq, par.dq, "parallel dQ diverged from serial");
         assert_eq!(serial.dk, par.dk);
         assert_eq!(serial.dv, par.dv);
+    }
+
+    #[test]
+    fn parallel_spec_paths_are_bitwise_equal_to_serial() {
+        // GQA + sliding window through the fan-out: the §3.2 partitioning
+        // must stay deterministic on the new axes too.
+        let mut rng = Rng::seed_from(79);
+        let spec = AttnSpec {
+            batch: 2,
+            heads: HeadMap { n_q_heads: 4, n_kv_heads: 2 },
+            seq: 29,
+            head_dim: 8,
+            mask: Mask::SlidingWindow(7),
+        };
+        let q = rand_vec(&mut rng, spec.q_elems());
+        let k = rand_vec(&mut rng, spec.kv_elems());
+        let v = rand_vec(&mut rng, spec.kv_elems());
+        let dout = rand_vec(&mut rng, spec.q_elems());
+        let p = FlashParams { block_q: 8, block_k: 8 };
+        let serial = forward_spec_with(1, &q, &k, &v, spec, p);
+        let par = forward_spec_with(4, &q, &k, &v, spec, p);
+        assert_eq!(serial.o, par.o);
+        assert_eq!(serial.lse, par.lse);
+        let gs = backward_spec_with(1, &q, &k, &v, &serial, &dout, spec, p);
+        let gp = backward_spec_with(4, &q, &k, &v, &serial, &dout, spec, p);
+        assert_eq!(gs.dq, gp.dq);
+        assert_eq!(gs.dk, gp.dk);
+        assert_eq!(gs.dv, gp.dv);
+        assert_eq!(gs.dk.len(), spec.kv_elems(), "dK is KV-shaped");
     }
 
     #[test]
@@ -334,5 +461,27 @@ mod tests {
             assert!((o[t] as f64 - want).abs() < 1e-6, "dim {t}");
         }
         assert!((lse as f64 - (m + l.ln())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn windowed_decode_matches_reference_tail_softmax() {
+        // decode over [lo, hi) must equal the plain softmax over exactly
+        // the window's rows — expired history never contributes
+        let mut rng = Rng::seed_from(81);
+        let (n, d, w) = (40usize, 8usize, 11usize);
+        let q = rand_vec(&mut rng, d);
+        let k = rand_vec(&mut rng, n * d);
+        let v = rand_vec(&mut rng, n * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let lo = n - w;
+        let kv = KvLayout::Contiguous { k: &k, v: &v };
+        let (o, lse) = decode_splitkv_spec(&q, &kv, lo, n, scale, 16);
+        let (o_tail, lse_tail) =
+            decode_splitkv(&q, &k[lo * d..], &v[lo * d..], w, scale, w);
+        // same math, different chunk boundaries — close, not bitwise
+        for (a, b) in o.iter().zip(&o_tail) {
+            assert!((a - b).abs() < 1e-5, "windowed decode diverged");
+        }
+        assert!((lse - lse_tail).abs() < 1e-5);
     }
 }

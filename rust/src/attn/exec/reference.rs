@@ -3,9 +3,16 @@
 //! Materializes each score row, computes the softmax the straightforward
 //! way, and accumulates in f64 so the flash kernels' f32 results can be
 //! held to a tight tolerance (DESIGN.md §7: parity within 1e-4).  Inputs
-//! and outputs are f32 in the shared (batch, heads, seq, head_dim) layout;
-//! the softmax scale is the same f32 `1/sqrt(d)` the flash kernels use so
-//! the two paths compute the *same* math, not merely similar math.
+//! and outputs are f32; the softmax scale is the same f32 `1/sqrt(d)` the
+//! flash kernels use so the two paths compute the *same* math, not merely
+//! similar math.
+//!
+//! The oracle is extended FIRST for every axis of [`AttnSpec`]
+//! (DESIGN.md §11): grouped-query head broadcast and the full/causal/
+//! sliding-window masks are all spelled out here in the obvious row-wise
+//! form, and the flash paths are verified against it.
+
+use crate::attn::spec::AttnSpec;
 
 use super::{AttnDims, FlashGrads, FlashOut, TensorView};
 
@@ -13,102 +20,118 @@ fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
 }
 
-/// Standard attention forward: O = softmax(scale·QKᵀ + mask)·V, plus the
-/// per-row logsumexp (what the flash forward saves for the backward).
-pub fn forward(q: &[f32], k: &[f32], v: &[f32], dims: AttnDims) -> FlashOut {
+/// Standard attention forward under the spec: O = softmax(scale·QKᵀ +
+/// mask)·V with grouped-query broadcast, plus the per-Q-row logsumexp.
+/// `q` is `(B, n_q_heads, N, d)`; `k`/`v` are `(B, n_kv_heads, N, d)`.
+pub fn forward_spec(q: &[f32], k: &[f32], v: &[f32], spec: AttnSpec) -> FlashOut {
+    let qd = spec.q_dims();
+    let kd = spec.kv_dims();
     let (qv, kv, vv) = (
-        TensorView::new(dims, q),
-        TensorView::new(dims, k),
-        TensorView::new(dims, v),
+        TensorView::new(qd, q),
+        TensorView::new(kd, k),
+        TensorView::new(kd, v),
     );
-    let (n, d) = (dims.seq, dims.head_dim);
-    let scale = dims.scale() as f64;
+    let (n, d) = (spec.seq, spec.head_dim);
+    let scale = spec.scale() as f64;
     let mut out = FlashOut {
-        o: vec![0.0; dims.elems()],
-        lse: vec![0.0; dims.rows()],
+        o: vec![0.0; spec.q_elems()],
+        lse: vec![0.0; spec.q_rows()],
     };
     let mut scores = vec![0.0f64; n];
-    for b in 0..dims.batch {
-        for h in 0..dims.heads {
+    for b in 0..spec.batch {
+        for h in 0..spec.heads.n_q_heads {
+            let g = spec.heads.kv_head(h);
             for i in 0..n {
                 let qi = qv.row(b, h, i);
-                let lim = if dims.causal { i + 1 } else { n };
+                let (lo, hi) = spec.mask.row_bounds(i, n);
                 let mut m = f64::NEG_INFINITY;
-                for (j, s) in scores[..lim].iter_mut().enumerate() {
-                    *s = scale * dot_f64(qi, kv.row(b, h, j));
-                    m = m.max(*s);
+                for j in lo..hi {
+                    scores[j] = scale * dot_f64(qi, kv.row(b, g, j));
+                    m = m.max(scores[j]);
                 }
                 let mut l = 0.0f64;
                 let mut acc = vec![0.0f64; d];
-                for j in 0..lim {
+                for j in lo..hi {
                     let w = (scores[j] - m).exp();
                     l += w;
-                    for (a, &x) in acc.iter_mut().zip(vv.row(b, h, j)) {
+                    for (a, &x) in acc.iter_mut().zip(vv.row(b, g, j)) {
                         *a += w * x as f64;
                     }
                 }
-                let orow = dims.row_offset(b, h, i);
+                let orow = qd.row_offset(b, h, i);
                 for (t, a) in acc.iter().enumerate() {
                     out.o[orow + t] = (a / l) as f32;
                 }
-                out.lse[dims.lse_offset(b, h, i)] = (m + l.ln()) as f32;
+                out.lse[qd.lse_offset(b, h, i)] = (m + l.ln()) as f32;
             }
         }
     }
     out
 }
 
-/// Standard attention backward: recomputes P row by row and applies the
-/// softmax chain rule.  `dout` is dL/dO shaped like Q.
-pub fn backward(q: &[f32], k: &[f32], v: &[f32], dout: &[f32], dims: AttnDims) -> FlashGrads {
+/// Standard attention backward under the spec: recomputes P row by row
+/// and applies the softmax chain rule.  `dout` is dL/dO shaped like Q;
+/// `dq` is Q-shaped, `dk`/`dv` are KV-shaped (each KV head accumulates
+/// the gradients of every query head in its group).
+pub fn backward_spec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
+    spec: AttnSpec,
+) -> FlashGrads {
+    let qd = spec.q_dims();
+    let kd = spec.kv_dims();
     let (qv, kv, vv, dov) = (
-        TensorView::new(dims, q),
-        TensorView::new(dims, k),
-        TensorView::new(dims, v),
-        TensorView::new(dims, dout),
+        TensorView::new(qd, q),
+        TensorView::new(kd, k),
+        TensorView::new(kd, v),
+        TensorView::new(qd, dout),
     );
-    let (n, d) = (dims.seq, dims.head_dim);
-    let scale = dims.scale() as f64;
-    let elems = dims.elems();
-    let mut dq = vec![0.0f64; elems];
-    let mut dk = vec![0.0f64; elems];
-    let mut dv = vec![0.0f64; elems];
+    let (n, d) = (spec.seq, spec.head_dim);
+    let scale = spec.scale() as f64;
+    let mut dq = vec![0.0f64; spec.q_elems()];
+    let mut dk = vec![0.0f64; spec.kv_elems()];
+    let mut dv = vec![0.0f64; spec.kv_elems()];
     let mut p = vec![0.0f64; n];
     let mut dp = vec![0.0f64; n];
-    for b in 0..dims.batch {
-        for h in 0..dims.heads {
+    for b in 0..spec.batch {
+        for h in 0..spec.heads.n_q_heads {
+            let g = spec.heads.kv_head(h);
             for i in 0..n {
                 let qi = qv.row(b, h, i);
                 let doi = dov.row(b, h, i);
-                let lim = if dims.causal { i + 1 } else { n };
+                let (lo, hi) = spec.mask.row_bounds(i, n);
+                let cols = hi - lo;
                 let mut m = f64::NEG_INFINITY;
-                for (j, s) in p[..lim].iter_mut().enumerate() {
-                    *s = scale * dot_f64(qi, kv.row(b, h, j));
+                for (j, s) in p[..cols].iter_mut().enumerate() {
+                    *s = scale * dot_f64(qi, kv.row(b, g, lo + j));
                     m = m.max(*s);
                 }
                 let mut l = 0.0f64;
-                for s in p[..lim].iter_mut() {
+                for s in p[..cols].iter_mut() {
                     *s = (*s - m).exp();
                     l += *s;
                 }
-                for s in p[..lim].iter_mut() {
+                for s in p[..cols].iter_mut() {
                     *s /= l;
                 }
                 // dP_j = dO·V_j ;  D = Σ_j P_j dP_j ;  dS_j = P_j (dP_j − D)
                 let mut dsum = 0.0f64;
-                for j in 0..lim {
-                    dp[j] = dot_f64(doi, vv.row(b, h, j));
-                    dsum += p[j] * dp[j];
+                for c in 0..cols {
+                    dp[c] = dot_f64(doi, vv.row(b, g, lo + c));
+                    dsum += p[c] * dp[c];
                 }
-                for j in 0..lim {
-                    let ds = p[j] * (dp[j] - dsum) * scale;
-                    let kj = kv.row(b, h, j);
-                    let qrow = dims.row_offset(b, h, i);
-                    let krow = dims.row_offset(b, h, j);
+                for c in 0..cols {
+                    let j = lo + c;
+                    let ds = p[c] * (dp[c] - dsum) * scale;
+                    let kj = kv.row(b, g, j);
+                    let qrow = qd.row_offset(b, h, i);
+                    let krow = kd.row_offset(b, g, j);
                     for t in 0..d {
                         dq[qrow + t] += ds * kj[t] as f64;
                         dk[krow + t] += ds * qi[t] as f64;
-                        dv[krow + t] += p[j] * doi[t] as f64;
+                        dv[krow + t] += p[c] * doi[t] as f64;
                     }
                 }
             }
@@ -121,9 +144,21 @@ pub fn backward(q: &[f32], k: &[f32], v: &[f32], dout: &[f32], dims: AttnDims) -
     }
 }
 
+/// Standard attention forward in the seed-era equal-heads API (wrapper
+/// over [`forward_spec`] with `AttnSpec::from_dims`).
+pub fn forward(q: &[f32], k: &[f32], v: &[f32], dims: AttnDims) -> FlashOut {
+    forward_spec(q, k, v, AttnSpec::from_dims(dims))
+}
+
+/// Standard attention backward in the seed-era equal-heads API.
+pub fn backward(q: &[f32], k: &[f32], v: &[f32], dout: &[f32], dims: AttnDims) -> FlashGrads {
+    backward_spec(q, k, v, dout, AttnSpec::from_dims(dims))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attn::spec::{HeadMap, Mask};
 
     #[test]
     fn uniform_scores_average_values() {
@@ -148,6 +183,87 @@ mod tests {
         let out = forward(&q, &k, &v, dims);
         assert!((out.o[0] - 7.0).abs() < 1e-6);
         assert!((out.o[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn window_one_copies_own_value_row() {
+        // w = 1: every row attends only to itself, so O = V exactly.
+        let spec = AttnSpec {
+            batch: 1,
+            heads: HeadMap::mha(2),
+            seq: 4,
+            head_dim: 3,
+            mask: Mask::SlidingWindow(1),
+        };
+        let mut rng = crate::util::rng::Rng::seed_from(5);
+        let n = spec.q_elems();
+        let gen = |rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32).collect()
+        };
+        let (q, k, v) = (gen(&mut rng), gen(&mut rng), gen(&mut rng));
+        let out = forward_spec(&q, &k, &v, spec);
+        for (o, x) in out.o.iter().zip(&v) {
+            assert!((o - x).abs() < 1e-6, "window-1 must copy V");
+        }
+    }
+
+    #[test]
+    fn gqa_broadcast_equals_replicated_kv_heads() {
+        // GQA with n_kv = 1 must equal MHA where the single KV head is
+        // replicated across all query heads.
+        let spec = AttnSpec {
+            batch: 1,
+            heads: HeadMap { n_q_heads: 4, n_kv_heads: 1 },
+            seq: 6,
+            head_dim: 4,
+            mask: Mask::Causal,
+        };
+        let mut rng = crate::util::rng::Rng::seed_from(6);
+        let gen = |rng: &mut crate::util::rng::Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32).collect()
+        };
+        let q = gen(&mut rng, spec.q_elems());
+        let k1 = gen(&mut rng, spec.kv_elems());
+        let v1 = gen(&mut rng, spec.kv_elems());
+        let gqa = forward_spec(&q, &k1, &v1, spec);
+        // replicate the KV head 4× and run equal-heads
+        let rep = |x: &[f32]| -> Vec<f32> { x.repeat(4) };
+        let dense = AttnSpec { heads: HeadMap::mha(4), ..spec };
+        let mha = forward_spec(&q, &rep(&k1), &rep(&v1), dense);
+        assert_eq!(gqa.o, mha.o, "GQA broadcast must equal replicated KV");
+        assert_eq!(gqa.lse, mha.lse);
+    }
+
+    #[test]
+    fn gqa_backward_accumulates_the_group() {
+        // dK/dV of the shared KV head must equal the SUM over the
+        // replicated-head gradients.
+        let spec = AttnSpec {
+            batch: 1,
+            heads: HeadMap { n_q_heads: 2, n_kv_heads: 1 },
+            seq: 4,
+            head_dim: 3,
+            mask: Mask::SlidingWindow(2),
+        };
+        let mut rng = crate::util::rng::Rng::seed_from(7);
+        let gen = |rng: &mut crate::util::rng::Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32).collect()
+        };
+        let q = gen(&mut rng, spec.q_elems());
+        let k1 = gen(&mut rng, spec.kv_elems());
+        let v1 = gen(&mut rng, spec.kv_elems());
+        let dout = gen(&mut rng, spec.q_elems());
+        let g = backward_spec(&q, &k1, &v1, &dout, spec);
+        let dense = AttnSpec { heads: HeadMap::mha(2), ..spec };
+        let gm = backward_spec(&q, &k1.repeat(2), &v1.repeat(2), &dout, dense);
+        assert_eq!(g.dq, gm.dq);
+        let per = spec.kv_elems();
+        for t in 0..per {
+            let want = gm.dk[t] + gm.dk[per + t];
+            assert!((g.dk[t] - want).abs() < 1e-5, "dK[{t}]");
+            let want = gm.dv[t] + gm.dv[per + t];
+            assert!((g.dv[t] - want).abs() < 1e-5, "dV[{t}]");
+        }
     }
 
     #[test]

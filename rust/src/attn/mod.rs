@@ -7,7 +7,9 @@ pub mod combine;
 pub mod exec;
 pub mod problem;
 pub mod schedule;
+pub mod spec;
 
 pub use autotune::{best as autotune_best, tune as autotune_tune, TunedSchedule};
 pub use problem::{AttnProblem, Pass};
 pub use schedule::{kernels_for, simulate_tflops, simulate_time, Method, ScheduleSpec};
+pub use spec::{AttnSpec, BlockTable, Cover, HeadMap, KvLayout, Mask};

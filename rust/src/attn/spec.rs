@@ -1,0 +1,452 @@
+//! `AttnSpec` — the one attention-problem descriptor every executing
+//! kernel dispatches on (DESIGN.md §11).
+//!
+//! FlashAttention-2 (§4) treats MQA/GQA head sharing and non-trivial
+//! masking (causal, local) as first-class kernel variants.  The seed-era
+//! `attn::exec` API hardcoded the opposite: equal Q/KV heads, a bare
+//! causal flag, and one contiguous KV slab per sequence.  This module
+//! moves those three axes into the *type* the kernels take:
+//!
+//! - [`HeadMap`] — grouped-query head sharing: `n_q_heads` query heads
+//!   read `n_kv_heads` K/V heads (`n_kv_heads == n_q_heads` is classic
+//!   MHA, `n_kv_heads == 1` is MQA, anything dividing in between is GQA).
+//! - [`Mask`] — `Full`, `Causal`, or `SlidingWindow(w)` (causal local
+//!   attention: row *i* sees columns `j ≤ i` with `i − j < w`).  The mask
+//!   classifies whole tiles ([`Mask::cover`]) so the flash kernels skip
+//!   out-of-window K blocks exactly like they already skip above-diagonal
+//!   causal blocks — skipped blocks are never read.
+//! - [`KvLayout`] — where the K/V rows live: one `Contiguous` run, or
+//!   `Paged` behind a [`BlockTable`] into the serving arena's block pool
+//!   (`runtime::kv`).  The split-KV decode kernel consumes either through
+//!   the same chunk iterator, so paged and contiguous decode are
+//!   *bit-identical* when their chunk boundaries agree.
+//!
+//! Every executing entry point — reference oracle, tiled forward/backward,
+//! the parallel fan-outs, and split-KV decode — takes the spec; serving,
+//! verification and the CLI all describe their scenario here instead of
+//! growing per-scenario entry points.
+
+use crate::bail;
+use crate::util::error::Result;
+
+use super::exec::AttnDims;
+
+/// Grouped-query head mapping: `n_q_heads` query heads share `n_kv_heads`
+/// K/V heads in contiguous groups of `n_q_heads / n_kv_heads`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeadMap {
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+}
+
+impl HeadMap {
+    /// Equal Q/KV heads (classic multi-head attention).
+    pub fn mha(heads: usize) -> HeadMap {
+        HeadMap { n_q_heads: heads, n_kv_heads: heads }
+    }
+
+    /// Query heads per KV head.
+    pub fn group_size(&self) -> usize {
+        debug_assert!(self.n_kv_heads > 0 && self.n_q_heads % self.n_kv_heads == 0);
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// The KV head query head `q` reads (grouped broadcast).
+    pub fn kv_head(&self, q: usize) -> usize {
+        q / self.group_size()
+    }
+
+    /// The query heads of KV head `kv`: `kv * g .. (kv + 1) * g`.
+    pub fn q_heads_of(&self, kv: usize) -> std::ops::Range<usize> {
+        let g = self.group_size();
+        kv * g..(kv + 1) * g
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_kv_heads == 0 || self.n_q_heads == 0 {
+            bail!("head map needs at least one head: {self:?}");
+        }
+        if self.n_q_heads % self.n_kv_heads != 0 {
+            bail!(
+                "GQA needs n_kv_heads ({}) to divide n_q_heads ({})",
+                self.n_kv_heads,
+                self.n_q_heads
+            );
+        }
+        Ok(())
+    }
+}
+
+/// How a tile of the score matrix relates to the mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cover {
+    /// Every (row, col) in the tile is masked — skip, never read K/V.
+    Skip,
+    /// The mask boundary crosses the tile — per-row column bounds apply.
+    Partial,
+    /// Every (row, col) in the tile is live — no per-row masking needed.
+    Full,
+}
+
+/// The mask axis: full (bidirectional), causal, or causal sliding-window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mask {
+    /// Every row attends to every column.
+    Full,
+    /// Row `i` attends to columns `j ≤ i`.
+    Causal,
+    /// Row `i` attends to columns `j ≤ i` with `i − j < w` (so `w = 1`
+    /// is attend-to-self only; `w ≥ seq` degenerates to `Causal`).
+    SlidingWindow(usize),
+}
+
+impl Mask {
+    pub fn validate(&self) -> Result<()> {
+        if let Mask::SlidingWindow(0) = self {
+            bail!("sliding window must be at least 1 token");
+        }
+        Ok(())
+    }
+
+    /// Whether row `i` may attend to column `j`.
+    pub fn allows(&self, i: usize, j: usize) -> bool {
+        match *self {
+            Mask::Full => true,
+            Mask::Causal => j <= i,
+            Mask::SlidingWindow(w) => j <= i && i - j < w,
+        }
+    }
+
+    /// The half-open column range `[lo, hi)` row `i` attends to, clipped
+    /// to a history of `kv_len` columns.
+    pub fn row_bounds(&self, i: usize, kv_len: usize) -> (usize, usize) {
+        match *self {
+            Mask::Full => (0, kv_len),
+            Mask::Causal => (0, (i + 1).min(kv_len)),
+            Mask::SlidingWindow(w) => ((i + 1).saturating_sub(w), (i + 1).min(kv_len)),
+        }
+    }
+
+    /// Classify the tile rows `[q0, q1) ×` cols `[j0, j1)` (both
+    /// non-empty).  `Skip` tiles are provably all-masked: the kernels
+    /// never touch their K/V blocks — the same block-skipping treatment
+    /// causal attention already gets, extended to the window's left edge.
+    pub fn cover(&self, q0: usize, q1: usize, j0: usize, j1: usize) -> Cover {
+        debug_assert!(q0 < q1 && j0 < j1);
+        match *self {
+            Mask::Full => Cover::Full,
+            Mask::Causal => {
+                if j0 > q1 - 1 {
+                    Cover::Skip // entirely above the diagonal
+                } else if j1 - 1 <= q0 {
+                    Cover::Full // entirely at-or-below for every row
+                } else {
+                    Cover::Partial
+                }
+            }
+            Mask::SlidingWindow(w) => {
+                if j0 > q1 - 1 {
+                    Cover::Skip // above the diagonal
+                } else if j1 <= (q0 + 1).saturating_sub(w) {
+                    Cover::Skip // left of every row's window
+                } else if j1 - 1 <= q0 && j0 + w >= q1 {
+                    // top row covers the right edge, bottom row's window
+                    // reaches the left edge
+                    Cover::Full
+                } else {
+                    Cover::Partial
+                }
+            }
+        }
+    }
+
+    /// True for masks where later K blocks can be skipped once the
+    /// diagonal is passed (everything but `Full`).
+    pub fn is_causal_like(&self) -> bool {
+        !matches!(self, Mask::Full)
+    }
+}
+
+/// One executing attention problem: batch/shape, head sharing, and mask.
+/// Q is `(batch, n_q_heads, seq, head_dim)`; K/V are
+/// `(batch, n_kv_heads, seq, head_dim)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnSpec {
+    pub batch: usize,
+    pub heads: HeadMap,
+    pub seq: usize,
+    pub head_dim: usize,
+    pub mask: Mask,
+}
+
+impl AttnSpec {
+    /// The spec the seed-era `AttnDims` API described: equal heads, full
+    /// or causal mask.
+    pub fn from_dims(dims: AttnDims) -> AttnSpec {
+        AttnSpec {
+            batch: dims.batch,
+            heads: HeadMap::mha(dims.heads),
+            seq: dims.seq,
+            head_dim: dims.head_dim,
+            mask: if dims.causal { Mask::Causal } else { Mask::Full },
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.heads.validate()?;
+        self.mask.validate()?;
+        if self.batch == 0 || self.seq == 0 || self.head_dim == 0 {
+            bail!("degenerate attention spec {self:?}");
+        }
+        Ok(())
+    }
+
+    /// Layout of the Q-shaped tensors (Q, O, dO, dQ).  The `causal` flag
+    /// is only FLOP-accounting metadata here; kernels consult `mask`.
+    pub fn q_dims(&self) -> AttnDims {
+        AttnDims {
+            batch: self.batch,
+            heads: self.heads.n_q_heads,
+            seq: self.seq,
+            head_dim: self.head_dim,
+            causal: self.mask.is_causal_like(),
+        }
+    }
+
+    /// Layout of the KV-shaped tensors (K, V, dK, dV).
+    pub fn kv_dims(&self) -> AttnDims {
+        AttnDims { heads: self.heads.n_kv_heads, ..self.q_dims() }
+    }
+
+    /// Softmax scale 1/sqrt(d).
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+
+    /// Element count of a Q-shaped tensor.
+    pub fn q_elems(&self) -> usize {
+        self.q_dims().elems()
+    }
+
+    /// Element count of a KV-shaped tensor.
+    pub fn kv_elems(&self) -> usize {
+        self.kv_dims().elems()
+    }
+
+    /// Rows of per-Q-row statistics (the LSE).
+    pub fn q_rows(&self) -> usize {
+        self.q_dims().rows()
+    }
+}
+
+/// Block-table view of one `(layer, head)` plane of a paged KV cache
+/// (`runtime::kv`): logical token block `b` lives in physical pool block
+/// `blocks[b]`; within a block, this plane's rows sit at `plane` and are
+/// contiguous — which is exactly what the split-KV decode kernel streams.
+#[derive(Clone, Copy)]
+pub struct BlockTable<'a> {
+    pub k_pool: &'a [f32],
+    pub v_pool: &'a [f32],
+    /// Physical pool block index per logical token block.
+    pub blocks: &'a [u32],
+    /// Elements per physical block (all planes).
+    pub block_elems: usize,
+    /// Element offset of this plane's rows inside a block.
+    pub plane: usize,
+    /// Token rows per block.
+    pub block_tokens: usize,
+}
+
+impl BlockTable<'_> {
+    /// The contiguous K/V rows `[t0, t1)` of width `d`.  The range must
+    /// not cross a block boundary (the decode kernel chunks at block
+    /// boundaries, so it never asks for one that does).
+    pub fn rows(&self, t0: usize, t1: usize, d: usize) -> (&[f32], &[f32]) {
+        debug_assert!(t0 < t1);
+        debug_assert_eq!(
+            t0 / self.block_tokens,
+            (t1 - 1) / self.block_tokens,
+            "paged row range [{t0}, {t1}) crosses a block boundary"
+        );
+        let blk = self.blocks[t0 / self.block_tokens] as usize;
+        let start =
+            blk * self.block_elems + self.plane + (t0 % self.block_tokens) * d;
+        let len = (t1 - t0) * d;
+        (&self.k_pool[start..start + len], &self.v_pool[start..start + len])
+    }
+}
+
+/// Where one sequence's K/V history lives — the layout axis of the spec.
+#[derive(Clone, Copy)]
+pub enum KvLayout<'a> {
+    /// Rows `0..n` stored contiguously (`n * d` elements each).
+    Contiguous { k: &'a [f32], v: &'a [f32] },
+    /// Rows scattered across fixed-size token blocks via a block table.
+    Paged(BlockTable<'a>),
+}
+
+impl KvLayout<'_> {
+    /// The K/V rows `[t0, t1)` of width `d`; for `Paged` the range must
+    /// stay within one token block.
+    pub fn rows(&self, t0: usize, t1: usize, d: usize) -> (&[f32], &[f32]) {
+        match self {
+            KvLayout::Contiguous { k, v } => (&k[t0 * d..t1 * d], &v[t0 * d..t1 * d]),
+            KvLayout::Paged(table) => table.rows(t0, t1, d),
+        }
+    }
+
+    /// Natural chunk size for split-KV streaming: the block size for
+    /// `Paged` (chunks must not cross blocks), or `fallback` rows for
+    /// `Contiguous`.  Using a paged layout's block size for the matching
+    /// contiguous run makes the two decodes bit-identical.
+    pub fn chunk_tokens(&self, fallback: usize) -> usize {
+        match self {
+            KvLayout::Contiguous { .. } => fallback.max(1),
+            KvLayout::Paged(t) => t.block_tokens.max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_map_groups_and_validates() {
+        let m = HeadMap { n_q_heads: 8, n_kv_heads: 2 };
+        assert!(m.validate().is_ok());
+        assert_eq!(m.group_size(), 4);
+        assert_eq!(m.kv_head(0), 0);
+        assert_eq!(m.kv_head(3), 0);
+        assert_eq!(m.kv_head(4), 1);
+        assert_eq!(m.q_heads_of(1), 4..8);
+        let mqa = HeadMap { n_q_heads: 8, n_kv_heads: 1 };
+        assert_eq!(mqa.kv_head(7), 0);
+        assert!(HeadMap { n_q_heads: 8, n_kv_heads: 3 }.validate().is_err());
+        assert!(HeadMap { n_q_heads: 0, n_kv_heads: 0 }.validate().is_err());
+        assert_eq!(HeadMap::mha(4), HeadMap { n_q_heads: 4, n_kv_heads: 4 });
+    }
+
+    #[test]
+    fn mask_row_bounds_match_allows() {
+        let n = 12;
+        for mask in [Mask::Full, Mask::Causal, Mask::SlidingWindow(1), Mask::SlidingWindow(4)]
+        {
+            for i in 0..n {
+                let (lo, hi) = mask.row_bounds(i, n);
+                for j in 0..n {
+                    assert_eq!(
+                        mask.allows(i, j),
+                        (lo..hi).contains(&j),
+                        "{mask:?} row {i} col {j}"
+                    );
+                }
+            }
+        }
+        assert!(Mask::SlidingWindow(0).validate().is_err());
+        assert!(Mask::SlidingWindow(1).validate().is_ok());
+    }
+
+    #[test]
+    fn cover_classification_is_exact() {
+        // brute-force: a tile's cover must equal the element-wise truth
+        let n = 20;
+        for mask in [Mask::Full, Mask::Causal, Mask::SlidingWindow(3), Mask::SlidingWindow(7)]
+        {
+            for q0 in (0..n).step_by(4) {
+                let q1 = (q0 + 4).min(n);
+                for j0 in (0..n).step_by(5) {
+                    let j1 = (j0 + 5).min(n);
+                    let mut any = false;
+                    let mut all = true;
+                    for i in q0..q1 {
+                        for j in j0..j1 {
+                            if mask.allows(i, j) {
+                                any = true;
+                            } else {
+                                all = false;
+                            }
+                        }
+                    }
+                    let want = if !any {
+                        Cover::Skip
+                    } else if all {
+                        Cover::Full
+                    } else {
+                        Cover::Partial
+                    };
+                    assert_eq!(
+                        mask.cover(q0, q1, j0, j1),
+                        want,
+                        "{mask:?} tile ({q0},{q1})x({j0},{j1})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_dims_split_q_and_kv_heads() {
+        let spec = AttnSpec {
+            batch: 2,
+            heads: HeadMap { n_q_heads: 4, n_kv_heads: 2 },
+            seq: 8,
+            head_dim: 16,
+            mask: Mask::SlidingWindow(4),
+        };
+        assert!(spec.validate().is_ok());
+        assert_eq!(spec.q_dims().heads, 4);
+        assert_eq!(spec.kv_dims().heads, 2);
+        assert_eq!(spec.q_elems(), 2 * 4 * 8 * 16);
+        assert_eq!(spec.kv_elems(), 2 * 2 * 8 * 16);
+        assert_eq!(spec.q_rows(), 2 * 4 * 8);
+        assert!(spec.q_dims().causal, "window masks account as causal-like");
+        let dense = AttnSpec::from_dims(AttnDims {
+            batch: 1,
+            heads: 3,
+            seq: 5,
+            head_dim: 4,
+            causal: true,
+        });
+        assert_eq!(dense.heads, HeadMap::mha(3));
+        assert_eq!(dense.mask, Mask::Causal);
+    }
+
+    #[test]
+    fn paged_and_contiguous_layouts_serve_the_same_rows() {
+        // two planes (l=0 h=0/1), block_tokens 2, 2 logical blocks in
+        // REVERSED physical order to prove the table indirection
+        let d = 2;
+        let block_tokens = 2;
+        let planes = 2;
+        let block_elems = planes * block_tokens * d;
+        // pool: phys block 0 holds logical block 1, phys 1 holds logical 0
+        let mut k_pool = vec![0.0f32; 2 * block_elems];
+        let mut v_pool = vec![0.0f32; 2 * block_elems];
+        let flat: Vec<f32> = (0..8).map(|x| x as f32).collect(); // plane 1, rows 0..4
+        for t in 0..4 {
+            let (phys, tin) = (if t < 2 { 1 } else { 0 }, t % 2);
+            let off = phys * block_elems + 1 * block_tokens * d + tin * d;
+            k_pool[off..off + d].copy_from_slice(&flat[t * d..(t + 1) * d]);
+            v_pool[off..off + d].copy_from_slice(&flat[t * d..(t + 1) * d]);
+        }
+        let table = BlockTable {
+            k_pool: &k_pool,
+            v_pool: &v_pool,
+            blocks: &[1, 0],
+            block_elems,
+            plane: 1 * block_tokens * d,
+            block_tokens,
+        };
+        let paged = KvLayout::Paged(table);
+        let contig = KvLayout::Contiguous { k: &flat, v: &flat };
+        for (t0, t1) in [(0usize, 2usize), (2, 4), (1, 2), (3, 4)] {
+            let (pk, pv) = paged.rows(t0, t1, d);
+            let (ck, cv) = contig.rows(t0, t1, d);
+            assert_eq!(pk, ck, "k rows [{t0},{t1})");
+            assert_eq!(pv, cv, "v rows [{t0},{t1})");
+        }
+        assert_eq!(paged.chunk_tokens(64), 2);
+        assert_eq!(contig.chunk_tokens(64), 64);
+    }
+}

@@ -14,7 +14,20 @@ pub struct RunConfig {
     pub artifact_dir: String,
     pub train: TrainConfig,
     pub serve: ServeConfig,
+    pub model: ModelConfig,
     pub bench: BenchConfig,
+}
+
+/// Model-shape overrides for the native backend (`[model]` section).
+/// Compiled-artifact backends ignore these — their shapes are baked into
+/// the manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ModelConfig {
+    /// KV heads for grouped-query attention (None = equal to n_head;
+    /// 1 = MQA; must divide n_head).
+    pub n_kv_heads: Option<usize>,
+    /// Sliding attention window in tokens (None = full causal).
+    pub window: Option<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -36,11 +49,16 @@ pub struct ServeConfig {
     pub stream: bool,
     /// Scheduler mode: "continuous" (default) | "gang" (wave baseline).
     pub sched: String,
-    /// Concurrently admitted sessions; sizes the KV arena (admission is
-    /// reserved against real slab availability).
+    /// Concurrently admitted sessions.
     pub max_in_flight: usize,
     /// Prompt tokens a prefilling session advances per scheduler step.
     pub prefill_chunk: usize,
+    /// KV paging granularity in tokens (`--kv-block`); admission reserves
+    /// blocks of this size against real arena availability.
+    pub kv_block: usize,
+    /// Total KV blocks the arena holds (`--kv-blocks`); 0 = enough for
+    /// `max_in_flight` full windows.
+    pub kv_blocks: usize,
 }
 
 impl Default for ServeConfig {
@@ -59,6 +77,8 @@ impl Default for ServeConfig {
             sched: "continuous".into(),
             max_in_flight: sched.max_in_flight,
             prefill_chunk: sched.prefill_chunk,
+            kv_block: sched.kv_block,
+            kv_blocks: 0,
         }
     }
 }
@@ -80,6 +100,7 @@ impl Default for RunConfig {
             artifact_dir: "artifacts".into(),
             train: TrainConfig::default(),
             serve: ServeConfig::default(),
+            model: ModelConfig::default(),
             bench: BenchConfig::default(),
         }
     }
@@ -131,6 +152,15 @@ impl RunConfig {
                 prefill_chunk: doc
                     .i64_or("serve.prefill_chunk", d.serve.prefill_chunk as i64)
                     as usize,
+                kv_block: doc.i64_or("serve.kv_block", d.serve.kv_block as i64) as usize,
+                kv_blocks: doc.i64_or("serve.kv_blocks", d.serve.kv_blocks as i64) as usize,
+            },
+            model: ModelConfig {
+                n_kv_heads: doc
+                    .get("model.n_kv_heads")
+                    .and_then(|v| v.as_i64())
+                    .map(|n| n as usize),
+                window: doc.get("model.window").and_then(|v| v.as_i64()).map(|n| n as usize),
             },
             bench: BenchConfig {
                 out_dir: doc.str_or("bench.out_dir", &d.bench.out_dir).to_string(),
@@ -158,7 +188,8 @@ mod tests {
              checkpoint = \"ckpt.fat1\"\n[serve]\narrival_rate = 3.5\n\
              backend = \"native\"\ntemperature = 0.8\ntop_k = 40\n\
              stream = true\nsched = \"gang\"\nmax_in_flight = 3\n\
-             prefill_chunk = 2\n",
+             prefill_chunk = 2\nkv_block = 8\nkv_blocks = 24\n\
+             [model]\nn_kv_heads = 2\nwindow = 48\n",
         )
         .unwrap();
         let c = RunConfig::from_doc(&doc);
@@ -174,6 +205,10 @@ mod tests {
         assert_eq!(c.serve.sched, "gang");
         assert_eq!(c.serve.max_in_flight, 3);
         assert_eq!(c.serve.prefill_chunk, 2);
+        assert_eq!(c.serve.kv_block, 8);
+        assert_eq!(c.serve.kv_blocks, 24);
+        assert_eq!(c.model.n_kv_heads, Some(2));
+        assert_eq!(c.model.window, Some(48));
     }
 
     #[test]
@@ -187,5 +222,9 @@ mod tests {
         assert_eq!(c.serve.sched, "continuous");
         assert_eq!(c.serve.max_in_flight, s.max_in_flight);
         assert_eq!(c.serve.prefill_chunk, s.prefill_chunk);
+        assert_eq!(c.serve.kv_block, s.kv_block);
+        assert_eq!(c.serve.kv_blocks, 0, "0 = derive from max_in_flight");
+        assert_eq!(c.model.n_kv_heads, None);
+        assert_eq!(c.model.window, None);
     }
 }

@@ -17,8 +17,11 @@
 //!   the session's KV slot, so prefill rows ride the same buckets as
 //!   decode rows and a long prompt cannot stall the token cadence of
 //!   running sessions), KV-pressure-aware admission against the bounded
-//!   [`KvArena`], slot refill as sessions retire, and recompute-style
-//!   preemption under the anti-starvation bound.  The scheduler changes
+//!   **paged** [`KvArena`] — a session reserves only the KV *blocks* its
+//!   `prompt + max_tokens` can touch, so short sequences no longer pin
+//!   window-sized slabs (DESIGN.md §11) — block refill as sessions
+//!   retire, and recompute-style preemption under the anti-starvation
+//!   bound.  The scheduler changes
 //!   *when* work runs, never *what* it computes: per-session greedy
 //!   output is byte-identical to solo decode (asserted in
 //!   `tests/native_engine.rs`);
@@ -44,7 +47,9 @@ use std::time::Instant;
 
 use crate::util::error::{Error, Result};
 
-use crate::runtime::{BackendKind, KvArena, KvSlot, ModelBundle, Runtime, ServeShapes};
+use crate::runtime::{
+    BackendKind, KvArena, KvGeometry, KvSlot, ModelBundle, Runtime, RuntimeOptions, ServeShapes,
+};
 use crate::util::rng::Rng;
 use crate::util::tensorio::HostTensor;
 
@@ -159,6 +164,10 @@ pub enum EngineError {
     /// (backend modules treat out-of-range tokens as a fatal engine
     /// error).
     TokenOutOfVocab { token: i32, vocab: usize },
+    /// The session's `prompt + max_tokens` needs more KV blocks than the
+    /// whole arena holds — it could never be admitted, so fail at submit
+    /// instead of queueing it forever.
+    ExceedsKvCapacity { need_blocks: usize, capacity_blocks: usize },
     /// `max_queue` submissions are already waiting for admission.  Typed
     /// backpressure: the client can retry/shed instead of the old
     /// behavior of growing the worker channel without bound.
@@ -178,6 +187,11 @@ impl fmt::Display for EngineError {
             EngineError::TokenOutOfVocab { token, vocab } => {
                 write!(f, "prompt token {token} is outside the model vocabulary 0..{vocab}")
             }
+            EngineError::ExceedsKvCapacity { need_blocks, capacity_blocks } => write!(
+                f,
+                "request needs {need_blocks} KV blocks but the arena only holds \
+                 {capacity_blocks}; shorten the prompt/max_tokens or raise kv_blocks"
+            ),
             EngineError::Saturated { max_queue } => write!(
                 f,
                 "engine is saturated ({max_queue} submissions already waiting for \
@@ -194,9 +208,8 @@ impl std::error::Error for EngineError {}
 pub struct Session {
     events: Receiver<TokenEvent>,
     cancel: Arc<AtomicBool>,
-    /// Dropping the handle cancels the request unless detached (the
-    /// deprecated `Server` shim detaches to keep the old fire-and-forget
-    /// submit semantics).
+    /// Dropping the handle cancels the request unless detached
+    /// ([`Session::detach`] keeps fire-and-forget submissions running).
     cancel_on_drop: bool,
 }
 
@@ -236,9 +249,8 @@ impl Session {
         self.drain()
     }
 
-    /// Shared drain loop behind [`wait`](Self::wait) and the deprecated
-    /// shim's `GenHandle::recv`.
-    pub(crate) fn drain(&self) -> Result<Completion> {
+    /// Shared drain loop behind [`wait`](Self::wait).
+    fn drain(&self) -> Result<Completion> {
         loop {
             match self.events.recv() {
                 Ok(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs }) => {
@@ -285,8 +297,13 @@ struct Incoming {
 pub struct Engine {
     tx: Sender<Incoming>,
     shapes: ServeShapes,
-    /// Submissions not yet admitted to a KV slot — the bounded queue depth
-    /// behind [`EngineError::Saturated`].
+    /// KV paging granularity (tokens per block).
+    kv_block: usize,
+    /// Total blocks the worker's arena holds — the submit-side feasibility
+    /// bound behind [`EngineError::ExceedsKvCapacity`].
+    kv_blocks: usize,
+    /// Submissions not yet admitted to a KV reservation — the bounded
+    /// queue depth behind [`EngineError::Saturated`].
     queued: Arc<AtomicUsize>,
     max_queue: usize,
     handle: JoinHandle<Result<Metrics>>,
@@ -300,14 +317,26 @@ impl Engine {
         Self::start_with(artifact_dir, model, backend, SchedulerConfig::default())
     }
 
-    /// Start the worker with an explicit scheduler policy (`max_in_flight`
-    /// sizes the KV arena; `SchedMode::Gang` is the wave-scheduling
-    /// baseline kept for benchmarks).
+    /// Start the worker with an explicit scheduler policy (`kv_block` /
+    /// `kv_blocks` size the paged KV arena; `SchedMode::Gang` is the
+    /// wave-scheduling baseline kept for benchmarks).
     pub fn start_with(
         artifact_dir: PathBuf,
         model: &str,
         backend: BackendKind,
         cfg: SchedulerConfig,
+    ) -> Result<Engine> {
+        Self::start_full(artifact_dir, model, backend, cfg, RuntimeOptions::default())
+    }
+
+    /// [`start_with`](Self::start_with) plus [`RuntimeOptions`] — the full
+    /// spelling, with the native model's GQA/window configuration.
+    pub fn start_full(
+        artifact_dir: PathBuf,
+        model: &str,
+        backend: BackendKind,
+        cfg: SchedulerConfig,
+        opts: RuntimeOptions,
     ) -> Result<Engine> {
         let cfg = cfg.sanitized();
         let model = model.to_string();
@@ -317,7 +346,7 @@ impl Engine {
         let worker_queued = queued.clone();
         let handle = std::thread::spawn(move || {
             let setup = || -> Result<(ModelBundle, Vec<HostTensor>)> {
-                let rt = Runtime::with_backend(&artifact_dir, backend)?;
+                let rt = Runtime::with_backend_opts(&artifact_dir, backend, opts)?;
                 let bundle = ModelBundle::discover(&rt, &model)?;
                 // Materialize the weights once via the init artifact (seed
                 // 0): the flat param list is shared by prefill and decode.
@@ -338,7 +367,16 @@ impl Engine {
         let shapes = ready_rx
             .recv()
             .map_err(|_| Error::msg("engine worker died during setup"))??;
-        Ok(Engine { tx, shapes, queued, max_queue: cfg.max_queue, handle })
+        let kv_blocks = arena_blocks(&cfg, &shapes);
+        Ok(Engine {
+            tx,
+            shapes,
+            kv_block: cfg.kv_block,
+            kv_blocks,
+            queued,
+            max_queue: cfg.max_queue,
+            handle,
+        })
     }
 
     /// The serving model's compiled shapes (prompt window, vocab, ...).
@@ -351,10 +389,22 @@ impl Engine {
         self.queued.load(Ordering::Relaxed)
     }
 
-    /// Open a session: validates the prompt against the compiled window
-    /// and the bounded queue, then enqueues it.  Fails fast with a typed
-    /// error instead of truncating prompts, growing the queue without
-    /// bound, or blocking on a dead worker.
+    /// Total KV blocks the worker's arena holds (the capacity behind
+    /// [`EngineError::ExceedsKvCapacity`]).
+    pub fn kv_capacity_blocks(&self) -> usize {
+        self.kv_blocks
+    }
+
+    /// KV paging granularity (tokens per block).
+    pub fn kv_block_tokens(&self) -> usize {
+        self.kv_block
+    }
+
+    /// Open a session: validates the prompt against the compiled window,
+    /// the arena's block capacity, and the bounded queue, then enqueues
+    /// it.  Fails fast with a typed error instead of truncating prompts,
+    /// queueing unadmittable sessions, growing the queue without bound, or
+    /// blocking on a dead worker.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
@@ -369,6 +419,17 @@ impl Engine {
         if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.shapes.vocab)
         {
             return Err(EngineError::TokenOutOfVocab { token: t, vocab: self.shapes.vocab });
+        }
+        let need = blocks_needed(
+            &self.shapes.geometry(self.kv_block),
+            prompt.len(),
+            sampling.max_tokens,
+        );
+        if need > self.kv_blocks {
+            return Err(EngineError::ExceedsKvCapacity {
+                need_blocks: need,
+                capacity_blocks: self.kv_blocks,
+            });
         }
         // Claim a queue slot (typed backpressure instead of unbounded
         // channel growth); the worker releases it at admission.
@@ -410,6 +471,24 @@ impl Engine {
         drop(tx);
         handle.join().map_err(|_| Error::msg("engine worker panicked"))?
     }
+}
+
+/// Total KV blocks the worker's arena holds under `cfg`: the explicit
+/// `kv_blocks` knob, or enough for `max_in_flight` full windows (the
+/// pre-paging worst case, so default capacity is unchanged — the paging
+/// win is that short sessions RESERVE less of it).
+fn arena_blocks(cfg: &SchedulerConfig, shapes: &ServeShapes) -> usize {
+    let per_seq = shapes.geometry(cfg.kv_block).blocks_per_seq();
+    cfg.kv_blocks.unwrap_or(cfg.max_in_flight * per_seq).max(1)
+}
+
+/// KV blocks a session must reserve: one row for every token it can ever
+/// feed (`prompt + max_tokens`, clamped to the window; an empty prompt is
+/// normalized to one stand-in token).  The ONE formula both `submit`'s
+/// feasibility gate and the worker's reservation use — they must agree,
+/// or an accepted session could queue forever.
+fn blocks_needed(geo: &KvGeometry, prompt_len: usize, max_tokens: usize) -> usize {
+    geo.blocks_for(prompt_len.max(1) + max_tokens.max(1))
 }
 
 // ---------------------------------------------------------------------------
@@ -536,7 +615,11 @@ struct SeqState {
     sampler: Sampler,
     /// Next KV write position == tokens fed so far.
     pos: i32,
-    /// Present iff the session is admitted (holds an arena slab).
+    /// KV blocks this session reserves at (re-)admission — sized once at
+    /// intake for `prompt + max_tokens`, so the reservation never grows
+    /// mid-flight and preemption replay fits the same blocks.
+    need_blocks: usize,
+    /// Present iff the session is admitted (holds an arena reservation).
     slot: Option<KvSlot>,
     /// First admission already happened (queue-depth + metrics are
     /// observed once; preemption re-admissions skip them).
@@ -617,9 +700,12 @@ fn worker(
     queued: Arc<AtomicUsize>,
 ) -> Result<Metrics> {
     let shapes = bundle.shapes;
-    // max_in_flight sizes the arena: admission decisions below are made
-    // against real slab availability (`arena.available()`).
-    let mut arena = KvArena::with_capacity(shapes.geometry(), cfg.max_in_flight);
+    // The paged arena: capacity in BLOCKS, so admission decisions below
+    // are made against real block availability (`arena.available()`) and
+    // a short session reserves only the blocks its `prompt + max_tokens`
+    // can touch instead of a full window.
+    let geo = shapes.geometry(cfg.kv_block);
+    let mut arena = KvArena::with_block_capacity(geo, arena_blocks(&cfg, &shapes));
     let mut sched = Scheduler::new(cfg);
     let cfg = sched.config();
     let mut metrics = Metrics::new();
@@ -657,6 +743,7 @@ fn worker(
                 // padded the whole window with zeros)
                 prompt.push(0);
             }
+            let need_blocks = blocks_needed(&geo, prompt.len(), inc.sampling.max_tokens);
             let state = SeqState {
                 events_tx: inc.events_tx,
                 cancel: inc.cancel,
@@ -669,11 +756,12 @@ fn worker(
                 generated: Vec::new(),
                 sampler: Sampler::new(inc.sampling),
                 pos: 0,
+                need_blocks,
                 slot: None,
                 admitted_once: false,
             };
             sessions.insert(next_id, state);
-            sched.enqueue(next_id);
+            sched.enqueue(next_id, need_blocks);
             next_id += 1;
         }
 
@@ -700,12 +788,12 @@ fn worker(
             continue;
         }
 
-        // Scheduler step: preemptions free slots first, admissions then
-        // allocate against real arena availability.
+        // Scheduler step: preemptions free blocks first, admissions then
+        // reserve against real arena availability.
         let plan = sched.plan(arena.available());
         for &id in &plan.preempted {
             let s = sessions.get_mut(&id).expect("preempted id is live");
-            arena.free(s.slot.take().expect("preempted session held a slot"));
+            arena.free(s.slot.take().expect("preempted session held a reservation"));
             // Rebuild the replay from everything it had fed: the prompt
             // plus all generated tokens except the last (which has been
             // sampled but not yet fed).
@@ -719,7 +807,9 @@ fn worker(
         }
         for &id in &plan.admitted {
             let s = sessions.get_mut(&id).expect("admitted id is live");
-            let slot = arena.try_alloc().expect("plan respects arena availability");
+            let slot = arena
+                .try_alloc_seq(s.need_blocks)
+                .expect("plan respects arena availability");
             s.slot = Some(slot);
             if !s.admitted_once {
                 s.admitted_once = true;
@@ -898,11 +988,35 @@ mod tests {
         let engine = Engine {
             tx,
             shapes: test_shapes(),
+            kv_block: 2,
+            kv_blocks: 32,
             queued: Arc::new(AtomicUsize::new(queued)),
             max_queue,
             handle,
         };
         (engine, rx)
+    }
+
+    #[test]
+    fn submit_rejects_sessions_that_could_never_fit_the_arena() {
+        // max_seq 8, kv_block 2 -> a full window is 4 blocks; an arena of
+        // 2 blocks can never admit an 8-token reach
+        let (engine, rx) = dead_engine(64, 0);
+        drop(rx);
+        let tight = Engine { kv_blocks: 2, ..engine };
+        let err = tight
+            .submit(vec![1; 4], SamplingParams::greedy(4))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            EngineError::ExceedsKvCapacity { need_blocks: 4, capacity_blocks: 2 }
+        );
+        // a short request passes the capacity check: 1 prompt + 1 token
+        // -> 1 block (the dead worker then surfaces as Closed, proving
+        // validation got past the capacity gate)
+        let err = tight.submit(vec![1], SamplingParams::greedy(1)).unwrap_err();
+        assert_eq!(err, EngineError::Closed);
+        tight.shutdown().unwrap();
     }
 
     #[test]
@@ -950,6 +1064,11 @@ mod tests {
         assert!(format!("{}", EngineError::Closed).contains("closed"));
         let s = format!("{}", EngineError::Saturated { max_queue: 64 });
         assert!(s.contains("64") && s.contains("saturated"), "{s}");
+        let s = format!(
+            "{}",
+            EngineError::ExceedsKvCapacity { need_blocks: 9, capacity_blocks: 8 }
+        );
+        assert!(s.contains('9') && s.contains('8') && s.contains("KV blocks"), "{s}");
         // converts into the crate error for `?` at CLI level
         let ce: Error = e.into();
         assert!(format!("{ce}").contains("prompt"));

@@ -1,15 +1,17 @@
 //! Serving coordinator: the session-based serving engine (typed
-//! `Engine`/`Session` API with streamed tokens and a zero-copy KV arena —
-//! DESIGN.md §8) driven by the continuous-batching scheduler (per-step
-//! admission, chunked prefill, KV-pressure backpressure and anti-starvation
-//! preemption — DESIGN.md §9), the dynamic batcher policy, serving
-//! metrics, and the deprecated `Server` shim kept for one release.  The
-//! paper's kernel slots into serving as the prefill/decode compute; the
-//! coordinator proves the artifacts compose into a request-driven system
-//! with Python off the request path.
+//! `Engine`/`Session` API with streamed tokens and a zero-copy **paged**
+//! KV arena — DESIGN.md §8/§11) driven by the continuous-batching
+//! scheduler (per-step admission with block-level KV reservation, chunked
+//! prefill, typed backpressure and anti-starvation preemption —
+//! DESIGN.md §9), the dynamic batcher policy, and serving metrics.  (The
+//! deprecated pre-engine `Server` shim shipped its one release of
+//! back-compat in PR 3/4 and is now gone; `Engine::submit` +
+//! `Session::wait` is the replacement.)  The paper's kernel slots into
+//! serving as the prefill/decode compute; the coordinator proves the
+//! artifacts compose into a request-driven system with Python off the
+//! request path.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod scheduler;
-pub mod server;

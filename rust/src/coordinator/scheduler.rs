@@ -1,4 +1,4 @@
-//! Continuous-batching scheduler policy (DESIGN.md §9): the pure,
+//! Continuous-batching scheduler policy (DESIGN.md §9/§11): the pure,
 //! property-testable admission/fairness core behind the engine worker.
 //!
 //! The pre-scheduler worker gang-scheduled: it prefilled whatever was
@@ -6,34 +6,43 @@
 //! for the slowest session and decode buckets ran under-filled as sessions
 //! retired.  The scheduler replaces that with per-step decisions, in the
 //! FA2 spirit of work partitioning — keep every slot busy by refilling
-//! along whatever axis has slack:
+//! along whatever axis has slack.  Since the paged KV arena, capacity is
+//! counted in **blocks, not slots**: each session declares at enqueue how
+//! many KV blocks its `prompt + max_tokens` can touch, so a short chat
+//! turn no longer pins a window-sized slab's worth of admission capacity.
 //!
 //! - **Admission** is FCFS from a bounded pending queue, gated on *real*
-//!   capacity: a session is admitted only when the caller can grant it a
-//!   KV-arena slot ([`Scheduler::plan`] is told `free_slots`, the arena's
-//!   live availability) and the in-flight cap has headroom.
+//!   capacity: the head is admitted only when the caller can grant its
+//!   whole block reservation ([`Scheduler::plan`] is told `free_blocks`,
+//!   the arena's live availability) and the in-flight cap has headroom.
+//!   The queue never skips ahead — a big head blocks smaller followers,
+//!   which is what keeps admission strictly arrival-ordered.
 //! - **Anti-starvation preemption**: when the head of the pending queue has
 //!   waited `starvation_bound` steps and admission is blocked, the
-//!   youngest active session is preempted (its slot is freed; the engine
-//!   rebuilds its cache later by replaying its tokens — recompute-style
-//!   preemption) and the starving head takes the slot.  Preempted sessions
-//!   re-enter at the *front* of the queue: FCFS admission means every
-//!   active session arrived before every pending one, so the front
-//!   preserves arrival order.  Under sustained oversubscription this
-//!   degrades gracefully into round-robin with quantum `starvation_bound`.
-//! - **Refill**: retiring sessions free slots that the next `plan` hands to
-//!   the queue, so decode groups stay at the largest fitting bucket
+//!   youngest *progressed* active sessions are preempted — youngest first,
+//!   as many as the head's reservation needs, and only if that is enough
+//!   (otherwise nothing is evicted and the head keeps waiting) — and the
+//!   starving head takes their blocks (recompute-style preemption: the
+//!   engine frees the victims' blocks and replays their tokens later).
+//!   Victims re-enter at the *front* of the queue in arrival order: FCFS
+//!   admission means every active session arrived before every pending
+//!   one.  Under sustained oversubscription this degrades gracefully into
+//!   round-robin with quantum `starvation_bound`.
+//! - **Refill**: retiring sessions free blocks that the next `plan` hands
+//!   to the queue, so decode groups stay at the largest fitting bucket
 //!   instead of draining with the wave.
 //!
 //! The scheduler is deliberately *only* policy: it tracks ids, arrival
-//! order, waits and progress flags — never tokens, channels or slots.  The engine
-//! owns the data plane (KV slots, chunked prefill cursors, sampling) and
-//! consumes [`StepPlan`]s.  That split is what the property tests below
-//! exploit: random arrival/length traces drive the policy with a simulated
-//! engine and check FCFS order, the starvation bound and conservation
-//! without touching a model.
+//! order, block demands, waits and progress flags — never tokens, channels
+//! or blocks themselves.  The engine owns the data plane (block tables,
+//! chunked prefill cursors, sampling) and consumes [`StepPlan`]s.  That
+//! split is what the property tests below exploit: random arrival/length
+//! traces drive the policy with a simulated engine and check FCFS order,
+//! the starvation bound and block conservation without touching a model.
 
 use std::collections::VecDeque;
+
+use crate::runtime::DEFAULT_KV_BLOCK;
 
 /// How the worker schedules admissions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,12 +66,12 @@ impl SchedMode {
     }
 }
 
-/// Scheduler policy knobs (serve config: `max_in_flight`, `prefill_chunk`).
+/// Scheduler policy knobs (serve config: `max_in_flight`, `prefill_chunk`,
+/// `kv_block`, `kv_blocks`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SchedulerConfig {
     pub mode: SchedMode,
-    /// Cap on concurrently admitted sessions; also sizes the KV arena, so
-    /// admission decisions are made against real slab availability.
+    /// Cap on concurrently admitted sessions.
     pub max_in_flight: usize,
     /// Prompt tokens a prefilling session may advance per step.  Sub-step 0
     /// of every step carries one token for *every* active session (decode
@@ -73,8 +82,14 @@ pub struct SchedulerConfig {
     /// fast with `EngineError::Saturated` instead of growing the channel.
     pub max_queue: usize,
     /// Steps the pending head may starve before it preempts the youngest
-    /// active session.
+    /// progressed active session(s).
     pub starvation_bound: usize,
+    /// KV paging granularity in tokens — admission reserves blocks of this
+    /// size against the arena.
+    pub kv_block: usize,
+    /// Total KV blocks the arena is sized to (None = enough for
+    /// `max_in_flight` full windows, the pre-paging worst case).
+    pub kv_blocks: Option<usize>,
 }
 
 impl Default for SchedulerConfig {
@@ -85,6 +100,8 @@ impl Default for SchedulerConfig {
             prefill_chunk: 4,
             max_queue: 64,
             starvation_bound: 64,
+            kv_block: DEFAULT_KV_BLOCK,
+            kv_blocks: None,
         }
     }
 }
@@ -101,6 +118,10 @@ impl SchedulerConfig {
         self.prefill_chunk = self.prefill_chunk.max(1);
         self.max_queue = self.max_queue.max(1);
         self.starvation_bound = self.starvation_bound.max(1);
+        self.kv_block = self.kv_block.max(1);
+        if let Some(b) = self.kv_blocks {
+            self.kv_blocks = Some(b.max(1));
+        }
         self
     }
 }
@@ -108,6 +129,8 @@ impl SchedulerConfig {
 #[derive(Debug)]
 struct Pending {
     id: u64,
+    /// KV blocks this session's admission must reserve.
+    need: usize,
     /// Steps spent waiting since (re-)enqueue; resets on preemption
     /// re-entry so a session that just ran cannot instantly starve-claim.
     waited: usize,
@@ -116,6 +139,10 @@ struct Pending {
 #[derive(Debug)]
 struct Active {
     id: u64,
+    /// The block reservation granted at admission (freed whole on
+    /// retire/preempt — reservations are for the session's full
+    /// `prompt + max_tokens` reach, so they never grow mid-flight).
+    need: usize,
     /// Whether the session generated at least one token since this
     /// admission ([`Scheduler::note_progress`]).  Only progressed sessions
     /// are preemptible: a recompute victim whose replay outgrew the
@@ -125,8 +152,8 @@ struct Active {
 }
 
 /// One step's scheduling decisions.  The engine must process `preempted`
-/// (free those slots) *before* `admitted` (allocate slots): a starvation
-/// admission reuses the slot its preemption freed.
+/// (free those blocks) *before* `admitted` (reserve blocks): a starvation
+/// admission reuses the blocks its preemptions freed.
 #[derive(Debug, Default, PartialEq, Eq)]
 pub struct StepPlan {
     pub admitted: Vec<u64>,
@@ -156,7 +183,7 @@ impl Scheduler {
         self.pending.len()
     }
 
-    /// Sessions currently holding a slot.
+    /// Sessions currently holding a reservation.
     pub fn in_flight(&self) -> usize {
         self.active.len()
     }
@@ -165,9 +192,9 @@ impl Scheduler {
         self.pending.is_empty() && self.active.is_empty()
     }
 
-    /// Enqueue a new arrival at the back (FCFS).
-    pub fn enqueue(&mut self, id: u64) {
-        self.pending.push_back(Pending { id, waited: 0 });
+    /// Enqueue a new arrival at the back (FCFS) with its block demand.
+    pub fn enqueue(&mut self, id: u64, need_blocks: usize) {
+        self.pending.push_back(Pending { id, need: need_blocks.max(1), waited: 0 });
     }
 
     /// Drop a not-yet-admitted session (client cancelled while queued).
@@ -182,8 +209,8 @@ impl Scheduler {
         }
     }
 
-    /// An active session finished (or was cancelled); its slot is free for
-    /// the next `plan`.
+    /// An active session finished (or was cancelled); its blocks are free
+    /// for the next `plan`.
     pub fn retire(&mut self, id: u64) {
         self.active.retain(|a| a.id != id);
     }
@@ -191,7 +218,7 @@ impl Scheduler {
     /// The engine observed `id` generating a token this step.  Marks the
     /// session preemptible: eviction always costs a replay, so a session
     /// must get at least one token out of each admission before the
-    /// anti-starvation policy may take its slot back (this is what makes
+    /// anti-starvation policy may take its blocks back (this is what makes
     /// preemption ping-pong converge instead of livelocking on replays).
     pub fn note_progress(&mut self, id: u64) {
         if let Some(a) = self.active.iter_mut().find(|a| a.id == id) {
@@ -199,56 +226,81 @@ impl Scheduler {
         }
     }
 
-    /// One step of policy: admissions (and, in continuous mode, at most one
-    /// starvation preemption) given `free_slots` actually available in the
-    /// KV arena.
-    pub fn plan(&mut self, free_slots: usize) -> StepPlan {
+    /// One step of policy: FCFS admissions (and, in continuous mode, a
+    /// starvation preemption batch) given `free_blocks` actually available
+    /// in the KV arena.
+    pub fn plan(&mut self, free_blocks: usize) -> StepPlan {
         for p in &mut self.pending {
             p.waited += 1;
         }
         let mut plan = StepPlan::default();
-        let mut free = free_slots;
+        let mut free = free_blocks;
 
-        let gate_closed =
-            self.cfg.mode == SchedMode::Gang && !self.active.is_empty();
+        let gate_closed = self.cfg.mode == SchedMode::Gang && !self.active.is_empty();
         while !gate_closed
-            && free > 0
             && self.active.len() < self.cfg.max_in_flight
-            && !self.pending.is_empty()
+            && self.pending.front().map_or(false, |p| p.need <= free)
         {
             let p = self.pending.pop_front().expect("checked non-empty");
-            self.active.push(Active { id: p.id, progressed: false });
+            free -= p.need;
+            self.active.push(Active { id: p.id, need: p.need, progressed: false });
             plan.admitted.push(p.id);
-            free -= 1;
         }
 
         // Anti-starvation (continuous only): the head has waited out its
-        // bound and admission is blocked -> swap it with the youngest
-        // *progressed* active session.  At most one swap per step, so a
-        // burst of starvers drains one per step instead of churning the
-        // whole set.
+        // bound and admission is blocked -> evict the youngest progressed
+        // actives, as many as the head's reservation needs — but only if
+        // that is actually enough (eviction costs a replay; evicting
+        // without unblocking the head would be pure waste).  A burst of
+        // starvers drains one head per step instead of churning the whole
+        // active set.
         if self.cfg.mode == SchedMode::Continuous {
-            let blocked = free == 0 || self.active.len() >= self.cfg.max_in_flight;
-            let starving = self
-                .pending
-                .front()
-                .map_or(false, |p| p.waited >= self.cfg.starvation_bound);
-            let victim_at = if blocked && starving {
+            let (head_id, head_need, starving) = match self.pending.front() {
+                Some(p) => (p.id, p.need, p.waited >= self.cfg.starvation_bound),
+                None => (0, 0, false),
+            };
+            let blocked =
+                self.active.len() >= self.cfg.max_in_flight || head_need > free;
+            if starving && blocked {
                 // youngest-first among sessions that yielded a token since
                 // admission (none progressed -> wait, never livelock)
-                self.active.iter().rposition(|a| a.progressed)
-            } else {
-                None
-            };
-            if let Some(vi) = victim_at {
-                let victim = self.active.remove(vi);
-                let head = self.pending.pop_front().expect("checked starving head");
-                self.active.push(Active { id: head.id, progressed: false });
-                plan.admitted.push(head.id);
-                plan.preempted.push(victim.id);
-                // FCFS: every active arrived before every pending, so the
-                // victim re-enters at the front.
-                self.pending.push_front(Pending { id: victim.id, waited: 0 });
+                let mut picked: Vec<usize> = Vec::new();
+                let mut freed = free;
+                for (i, a) in self.active.iter().enumerate().rev() {
+                    let enough = freed >= head_need
+                        && self.active.len() - picked.len() < self.cfg.max_in_flight;
+                    if enough {
+                        break;
+                    }
+                    if a.progressed {
+                        picked.push(i);
+                        freed += a.need;
+                    }
+                }
+                let feasible = freed >= head_need
+                    && self.active.len() - picked.len() < self.cfg.max_in_flight;
+                if feasible && !picked.is_empty() {
+                    // remove victims (indices collected descending), oldest
+                    // last so push_front leaves arrival order intact
+                    let mut victims: Vec<Active> = picked
+                        .into_iter()
+                        .map(|i| self.active.remove(i))
+                        .collect();
+                    let head = self.pending.pop_front().expect("checked starving head");
+                    self.active.push(Active {
+                        id: head.id,
+                        need: head.need,
+                        progressed: false,
+                    });
+                    debug_assert_eq!(head.id, head_id);
+                    plan.admitted.push(head.id);
+                    // victims re-enter at the front: youngest pushed first
+                    // so the oldest arrival ends up closest to the head
+                    for v in victims.drain(..) {
+                        plan.preempted.push(v.id);
+                        self.pending.push_front(Pending { id: v.id, need: v.need, waited: 0 });
+                    }
+                }
             }
         }
         plan
@@ -274,33 +326,54 @@ mod tests {
     fn admits_fcfs_up_to_capacity_and_refills_on_retire() {
         let mut s = cont(2, 8);
         for id in 0..4 {
-            s.enqueue(id);
+            s.enqueue(id, 1);
         }
         let plan = s.plan(8);
         assert_eq!(plan.admitted, vec![0, 1], "FCFS admission up to max_in_flight");
         assert!(plan.preempted.is_empty());
         assert_eq!(s.in_flight(), 2);
         assert_eq!(s.queue_len(), 2);
-        // no capacity -> no admission
+        // no in-flight headroom -> no admission
         assert_eq!(s.plan(8), StepPlan::default());
         // retiring one refills from the queue head
         s.retire(0);
         assert_eq!(s.plan(8).admitted, vec![2]);
         // arena pressure gates admission even with in-flight headroom
         s.retire(1);
-        assert_eq!(s.plan(0), StepPlan::default(), "no free slab, no admission");
+        assert_eq!(s.plan(0), StepPlan::default(), "no free blocks, no admission");
         assert_eq!(s.plan(1).admitted, vec![3]);
+    }
+
+    #[test]
+    fn block_demand_gates_admission_without_skipping_fcfs() {
+        // head needs 4 blocks, follower needs 1: with only 3 free the head
+        // blocks and the follower must NOT overtake (strict FCFS)
+        let mut s = cont(4, 1000);
+        s.enqueue(0, 4);
+        s.enqueue(1, 1);
+        assert_eq!(s.plan(3), StepPlan::default(), "big head blocks, no skip-ahead");
+        let plan = s.plan(5);
+        assert_eq!(plan.admitted, vec![0, 1], "both fit once blocks free up");
+        assert_eq!(s.in_flight(), 2);
+        // short sessions pack: 3 one-block sessions fit where one window
+        // (4 blocks) used to pin everything
+        s.retire(0);
+        s.retire(1);
+        for id in 10..13 {
+            s.enqueue(id, 1);
+        }
+        assert_eq!(s.plan(3).admitted, vec![10, 11, 12]);
     }
 
     #[test]
     fn starving_head_preempts_youngest_progressed_active() {
         let mut s = cont(2, 3);
-        s.enqueue(10);
-        s.enqueue(11);
+        s.enqueue(10, 1);
+        s.enqueue(11, 1);
         assert_eq!(s.plan(2).admitted, vec![10, 11]);
         s.note_progress(10);
         s.note_progress(11);
-        s.enqueue(12);
+        s.enqueue(12, 1);
         // waited 1, 2 -> nothing; waited 3 == bound -> swap in
         assert_eq!(s.plan(0), StepPlan::default());
         assert_eq!(s.plan(0), StepPlan::default());
@@ -308,10 +381,54 @@ mod tests {
         assert_eq!(plan.admitted, vec![12]);
         assert_eq!(plan.preempted, vec![11], "youngest progressed active is the victim");
         // the victim is back at the front, ahead of later arrivals
-        s.enqueue(13);
+        s.enqueue(13, 1);
         s.retire(10);
         assert_eq!(s.plan(1).admitted, vec![11]);
         assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn starving_big_head_takes_as_many_victims_as_it_needs() {
+        // head needs 3 blocks; two active 1-block + one active 2-block
+        // sessions: evicting the youngest progressed two (2 + 1 blocks)
+        // suffices, the oldest survives
+        let mut s = cont(4, 2);
+        s.enqueue(0, 1);
+        s.enqueue(1, 1);
+        s.enqueue(2, 2);
+        assert_eq!(s.plan(4).admitted, vec![0, 1, 2]);
+        for id in 0..3 {
+            s.note_progress(id);
+        }
+        s.enqueue(3, 3);
+        assert_eq!(s.plan(0), StepPlan::default(), "bound not reached");
+        let plan = s.plan(0);
+        assert_eq!(plan.admitted, vec![3]);
+        assert_eq!(plan.preempted, vec![2, 1], "youngest evicted first, just enough");
+        assert_eq!(s.in_flight(), 2, "session 0 survives");
+        // victims resume in arrival order from the front: 1 then 2
+        s.retire(0);
+        s.retire(3);
+        assert_eq!(s.plan(4).admitted, vec![1, 2]);
+    }
+
+    #[test]
+    fn infeasible_starvation_evicts_nobody() {
+        // the head wants more blocks than every progressed active holds
+        // combined — evicting would be pure replay waste, so nothing moves
+        let mut s = cont(4, 1);
+        s.enqueue(0, 1);
+        assert_eq!(s.plan(4).admitted, vec![0]);
+        s.note_progress(0);
+        s.enqueue(1, 4);
+        for _ in 0..5 {
+            let plan = s.plan(0);
+            assert!(plan.preempted.is_empty(), "eviction cannot satisfy the head");
+            assert!(plan.admitted.is_empty());
+        }
+        assert_eq!(s.in_flight(), 1);
+        // once enough blocks free up elsewhere, the head admits normally
+        assert_eq!(s.plan(4).admitted, vec![1]);
     }
 
     #[test]
@@ -319,9 +436,9 @@ mod tests {
         // a session that has not produced a token since admission is
         // replaying — evicting it would livelock on recompute
         let mut s = cont(1, 2);
-        s.enqueue(0);
+        s.enqueue(0, 1);
         assert_eq!(s.plan(1).admitted, vec![0]);
-        s.enqueue(1);
+        s.enqueue(1, 1);
         for _ in 0..10 {
             assert_eq!(s.plan(0), StepPlan::default(), "victim has made no progress");
         }
@@ -338,11 +455,11 @@ mod tests {
             max_in_flight: 4,
             ..SchedulerConfig::gang()
         });
-        s.enqueue(0);
-        s.enqueue(1);
+        s.enqueue(0, 1);
+        s.enqueue(1, 1);
         assert_eq!(s.plan(4).admitted, vec![0, 1]);
         // mid-wave arrivals wait, no matter how long (no preemption in gang)
-        s.enqueue(2);
+        s.enqueue(2, 1);
         for _ in 0..200 {
             assert_eq!(s.plan(4), StepPlan::default());
         }
@@ -360,51 +477,57 @@ mod tests {
             prefill_chunk: 0,
             max_queue: 0,
             starvation_bound: 0,
+            kv_block: 0,
+            kv_blocks: Some(0),
         }
         .sanitized();
         assert_eq!(
             (c.max_in_flight, c.prefill_chunk, c.max_queue, c.starvation_bound),
             (1, 1, 1, 1)
         );
+        assert_eq!(c.kv_block, 1);
+        assert_eq!(c.kv_blocks, Some(1));
         assert_eq!(SchedMode::from_flag("gang"), Some(SchedMode::Gang));
         assert_eq!(SchedMode::from_flag("continuous"), Some(SchedMode::Continuous));
         assert_eq!(SchedMode::from_flag("wave"), None);
     }
 
-    /// The tentpole property (ISSUE 4): under random arrival/length traces,
-    /// no session waits more than the anti-starvation bound while others
-    /// make progress — concretely, whenever the queue is non-empty some
-    /// admission happens within `starvation_bound + 1` steps — and
-    /// admissions are strictly FCFS by original arrival (preemption
-    /// victims resume ahead of later arrivals), with capacity never
-    /// exceeded and every session eventually retired.
+    /// The tentpole property (ISSUE 4, extended for block demands in
+    /// ISSUE 5): under random arrival/length/demand traces, whenever the
+    /// queue is non-empty the scheduler makes progress (an admission or a
+    /// preemption batch) within `starvation_bound + 1` steps; admissions
+    /// are strictly FCFS by original arrival (preemption victims resume
+    /// ahead of later arrivals); block capacity is never exceeded; and
+    /// every session eventually retires.
     #[test]
     fn prop_fcfs_starvation_bound_and_conservation() {
         check("scheduler-continuous", PropConfig::default(), |rng: &mut Rng| {
-            let cap = rng.range_usize(1, 4); // simulated arena slots
+            let cap = rng.range_usize(2, 7); // simulated arena blocks
             let cfg = SchedulerConfig {
                 mode: SchedMode::Continuous,
                 max_in_flight: rng.range_usize(1, 5),
                 prefill_chunk: rng.range_usize(1, 5),
                 max_queue: 64,
                 starvation_bound: rng.range_usize(1, 10),
+                kv_block: 16,
+                kv_blocks: Some(cap),
             };
             let bound = cfg.starvation_bound;
             let mut sched = Scheduler::new(cfg);
 
             let n = rng.range_usize(1, 24);
-            // (arrival step, remaining work) per id, arrivals sorted
-            let mut arrive_at: Vec<usize> = (0..n)
-                .map(|_| rng.range_usize(0, 30))
-                .collect();
+            // (arrival step, remaining work, block demand) per id
+            let mut arrive_at: Vec<usize> =
+                (0..n).map(|_| rng.range_usize(0, 30)).collect();
             arrive_at.sort_unstable();
             let mut remaining: Vec<usize> =
                 (0..n).map(|_| rng.range_usize(1, 12)).collect();
+            let need: Vec<usize> = (0..n).map(|_| rng.range_usize(1, cap + 1)).collect();
 
             let mut next_arrival = 0usize;
             let mut waiting: Vec<u64> = Vec::new(); // ids awaiting admission
             let mut running: Vec<u64> = Vec::new();
-            let mut slots_held = 0usize;
+            let mut blocks_held = 0usize;
             let mut first_admission: Vec<Option<usize>> = vec![None; n];
             let mut admission_order: Vec<u64> = Vec::new();
             let mut retired = 0usize;
@@ -413,15 +536,15 @@ mod tests {
             let mut step = 0usize;
             while retired < n {
                 crate::prop_assert!(
-                    step < 20_000,
+                    step < 50_000,
                     "liveness: {retired}/{n} retired after {step} steps"
                 );
                 while next_arrival < n && arrive_at[next_arrival] <= step {
-                    sched.enqueue(next_arrival as u64);
+                    sched.enqueue(next_arrival as u64, need[next_arrival]);
                     waiting.push(next_arrival as u64);
                     next_arrival += 1;
                 }
-                let free = cap - slots_held;
+                let free = cap - blocks_held;
                 let had_waiters = !waiting.is_empty();
                 let plan = sched.plan(free);
 
@@ -432,14 +555,14 @@ mod tests {
                     );
                     running.retain(|&r| r != id);
                     waiting.push(id);
-                    slots_held -= 1;
+                    blocks_held -= need[id as usize];
                 }
                 for &id in &plan.admitted {
                     // FCFS: the admitted id is the earliest original
                     // arrival among everyone still waiting — excluding this
-                    // plan's own victim, which by construction arrived
-                    // earlier than the starving head it just yielded to and
-                    // resumes at the queue front on the NEXT admission
+                    // plan's own victims, which by construction arrived
+                    // earlier than the starving head they just yielded to
+                    // and resume at the queue front on the NEXT admission
                     let min_waiting = waiting
                         .iter()
                         .copied()
@@ -450,25 +573,28 @@ mod tests {
                         id == min_waiting,
                         "admission {id} overtook waiting {min_waiting}"
                     );
-                    crate::prop_assert!(slots_held < cap, "slot over-allocated");
+                    crate::prop_assert!(
+                        blocks_held + need[id as usize] <= cap,
+                        "blocks over-allocated"
+                    );
                     waiting.retain(|&w| w != id);
                     running.push(id);
-                    slots_held += 1;
+                    blocks_held += need[id as usize];
                     if first_admission[id as usize].is_none() {
                         first_admission[id as usize] = Some(step);
                         admission_order.push(id);
                     }
                 }
                 crate::prop_assert!(
-                    running.len() <= cfg.max_in_flight && slots_held <= cap,
-                    "capacity exceeded: {} in flight, {} slots",
+                    running.len() <= cfg.max_in_flight && blocks_held <= cap,
+                    "capacity exceeded: {} in flight, {} blocks",
                     running.len(),
-                    slots_held
+                    blocks_held
                 );
 
-                // anti-starvation: with waiters present, admissions may lag
-                // by at most the bound
-                if had_waiters && plan.admitted.is_empty() {
+                // anti-starvation: with waiters present, the scheduler may
+                // stall (neither admit nor preempt) for at most the bound
+                if had_waiters && plan.admitted.is_empty() && plan.preempted.is_empty() {
                     steps_since_progress += 1;
                     crate::prop_assert!(
                         steps_since_progress <= bound,
@@ -480,7 +606,7 @@ mod tests {
 
                 // the simulated engine: every running session advances one
                 // unit (and reports the progress, making it preemptible);
-                // finished sessions retire and free their slot
+                // finished sessions retire and free their blocks
                 let done: Vec<u64> = running
                     .iter()
                     .copied()
@@ -493,7 +619,7 @@ mod tests {
                 for id in done {
                     running.retain(|&r| r != id);
                     sched.retire(id);
-                    slots_held -= 1;
+                    blocks_held -= need[id as usize];
                     retired += 1;
                 }
                 step += 1;

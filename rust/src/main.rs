@@ -26,7 +26,8 @@ use std::sync::Arc;
 use fa2::bail;
 use fa2::util::error::{Context, Result};
 
-use fa2::attn::exec::{parallel, reference, AttnDims, FlashParams};
+use fa2::attn::exec::{parallel, reference, FlashParams};
+use fa2::attn::spec::{AttnSpec, HeadMap, Mask};
 use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
 use fa2::bench::{figures, table1};
 use fa2::bench::summary;
@@ -34,7 +35,7 @@ use fa2::config::RunConfig;
 use fa2::coordinator::engine::{Completion, Engine, SamplingParams, TokenEvent};
 use fa2::coordinator::scheduler::{SchedMode, SchedulerConfig};
 use fa2::gpusim::{simulate, Device};
-use fa2::runtime::{BackendKind, Runtime};
+use fa2::runtime::{BackendKind, Runtime, RuntimeOptions};
 use fa2::train::corpus::Corpus;
 use fa2::train::trainer::{TrainConfig, Trainer};
 use fa2::util::rng::Rng;
@@ -52,9 +53,11 @@ fn usage() -> ! {
            serve     [--config FILE] [--requests N] [--tokens N] [--rate R]\n            \
                      [--backend B] [--stream] [--temperature T] [--top-k K]\n            \
                      [--sched continuous|gang] [--max-in-flight N]\n            \
-                     [--prefill-chunk N]\n  \
-           attn-exec [--batch B] [--heads H] [--seqlen N] [--head-dim D]\n            \
-                     [--causal 0|1] [--threads T] [--check 0|1]\n  \
+                     [--prefill-chunk N] [--kv-block T] [--kv-blocks N]\n            \
+                     [--kv-heads H] [--window W]\n  \
+           attn-exec [--batch B] [--heads H] [--kv-heads H] [--seqlen N]\n            \
+                     [--head-dim D] [--causal 0|1] [--window W]\n            \
+                     [--threads T] [--check 0|1]\n  \
            bench-gate [--summary FILE] [--baseline FILE] [--tolerance F]\n            \
                      [--update-baseline]\n  \
            inspect   [--artifact-dir DIR] [--backend B]\n\
@@ -352,9 +355,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let mut cfg = match args.get("config") {
-        Some(p) => RunConfig::load(Path::new(p))?.serve,
-        None => fa2::config::ServeConfig::default(),
+    let (mut cfg, mut model_cfg) = match args.get("config") {
+        Some(p) => {
+            let rc = RunConfig::load(Path::new(p))?;
+            (rc.serve, rc.model)
+        }
+        None => (fa2::config::ServeConfig::default(), fa2::config::ModelConfig::default()),
     };
     if let Some(n) = args.get_usize("requests")? {
         cfg.num_requests = n;
@@ -383,36 +389,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(n) = args.get_usize("prefill-chunk")? {
         cfg.prefill_chunk = n;
     }
+    if let Some(n) = args.get_usize("kv-block")? {
+        cfg.kv_block = n;
+    }
+    if let Some(n) = args.get_usize("kv-blocks")? {
+        cfg.kv_blocks = n;
+    }
+    if let Some(n) = args.get_usize("kv-heads")? {
+        model_cfg.n_kv_heads = Some(n);
+    }
+    if let Some(w) = args.get_usize("window")? {
+        model_cfg.window = Some(w);
+    }
     let mode = SchedMode::from_flag(&cfg.sched)
         .with_context(|| format!("--sched {}: expected continuous|gang", cfg.sched))?;
     let sched_cfg = SchedulerConfig {
         mode,
         max_in_flight: cfg.max_in_flight,
         prefill_chunk: cfg.prefill_chunk,
+        kv_block: cfg.kv_block,
+        kv_blocks: if cfg.kv_blocks == 0 { None } else { Some(cfg.kv_blocks) },
         // the CLI drives its own closed-loop workload: size the queue so
         // the synthetic burst is never rejected by its own backpressure
         max_queue: SchedulerConfig::default().max_queue.max(cfg.num_requests),
         ..SchedulerConfig::default()
     }
     .sanitized();
+    let opts = RuntimeOptions { n_kv_heads: model_cfg.n_kv_heads, window: model_cfg.window };
     let backend = BackendKind::from_flag(args.get("backend").unwrap_or(&cfg.backend))?;
-    let engine = Engine::start_with(
+    let engine = Engine::start_full(
         std::path::PathBuf::from(args.get("artifact-dir").unwrap_or("artifacts")),
         &cfg.model,
         backend,
         sched_cfg,
+        opts,
     )?;
     let shapes = engine.shapes();
     println!(
-        "engine up: model {} (prompt window {}, max_seq {}, vocab {})",
-        cfg.model, shapes.prompt_len, shapes.max_seq, shapes.vocab
+        "engine up: model {} (prompt window {}, max_seq {}, vocab {}, kv heads {}{})",
+        cfg.model,
+        shapes.prompt_len,
+        shapes.max_seq,
+        shapes.vocab,
+        shapes.n_kv_head,
+        match model_cfg.window {
+            Some(w) => format!(", window {w}"),
+            None => String::new(),
+        }
     );
+    // capacity as the ENGINE derived it, not re-computed here
+    let total_blocks = engine.kv_capacity_blocks();
+    let kv_block = engine.kv_block_tokens();
     println!(
-        "scheduler: {:?}, max_in_flight {} ({} KiB of KV slabs reserved at peak), \
-         prefill_chunk {}",
+        "scheduler: {:?}, max_in_flight {}, kv arena {} blocks x {} tokens \
+         ({} KiB; a full window reserves {} blocks), prefill_chunk {}",
         sched_cfg.mode,
         sched_cfg.max_in_flight,
-        sched_cfg.max_in_flight * shapes.slot_bytes() / 1024,
+        total_blocks,
+        kv_block,
+        total_blocks * shapes.block_bytes(kv_block) / 1024,
+        shapes.geometry(kv_block).blocks_per_seq(),
         sched_cfg.prefill_chunk
     );
     let mut rng = Rng::seed_from(cfg.seed);
@@ -481,38 +517,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_attn_exec(args: &Args) -> Result<()> {
-    let dims = AttnDims {
+    let n_q_heads = args.get_usize("heads")?.unwrap_or(8);
+    let n_kv_heads = args.get_usize("kv-heads")?.unwrap_or(n_q_heads);
+    let causal = matches!(args.get("causal"), Some("1") | Some("true"));
+    let mask = match args.get_usize("window")? {
+        Some(w) => Mask::SlidingWindow(w.max(1)),
+        None if causal => Mask::Causal,
+        None => Mask::Full,
+    };
+    let spec = AttnSpec {
         batch: args.get_usize("batch")?.unwrap_or(2),
-        heads: args.get_usize("heads")?.unwrap_or(8),
+        heads: HeadMap { n_q_heads, n_kv_heads },
         seq: args.get_usize("seqlen")?.unwrap_or(512),
         head_dim: args.get_usize("head-dim")?.unwrap_or(64),
-        causal: matches!(args.get("causal"), Some("1") | Some("true")),
+        mask,
     };
+    spec.validate()?;
+    let dims = spec.q_dims();
     let threads = args
         .get_usize("threads")?
         .unwrap_or_else(fa2::util::pool::threads);
     let check = !matches!(args.get("check"), Some("0") | Some("false"));
+    // tiles from the autotuner: the executing engine runs what the cost
+    // model picked, instead of a hardcoded 64x64 default
+    let p = FlashParams::tuned(dims, Pass::FwdBwd);
     println!(
-        "native attn exec: B={} H={} N={} d={} causal={} threads={threads}",
-        dims.batch, dims.heads, dims.seq, dims.head_dim, dims.causal
+        "native attn exec: B={} Hq={} Hkv={} N={} d={} mask={:?} threads={threads} \
+         tile={}x{} (autotuned)",
+        spec.batch,
+        n_q_heads,
+        n_kv_heads,
+        spec.seq,
+        spec.head_dim,
+        spec.mask,
+        p.block_q,
+        p.block_k
     );
 
     let mut rng = Rng::seed_from(0xA77);
-    let n = dims.elems();
-    let mut draw = || -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
-    let (q, k, v, dout) = (draw(), draw(), draw(), draw());
-    let p = FlashParams::default();
+    let mut draw = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+    let q = draw(spec.q_elems());
+    let k = draw(spec.kv_elems());
+    let v = draw(spec.kv_elems());
+    let dout = draw(spec.q_elems());
 
     let b = fa2::util::stats::Bencher::quick();
-    let s = b.run("flash fwd", || parallel::forward_with(threads, &q, &k, &v, dims, p));
+    let s = b.run("flash fwd", || parallel::forward_spec_with(threads, &q, &k, &v, spec, p));
     println!(
         "fwd:  {:>8.2} ms  {:>7.2} GFLOP/s",
         s.p50 * 1e3,
         dims.flops(Pass::Fwd) / s.p50 / 1e9
     );
-    let fwd = parallel::forward_with(threads, &q, &k, &v, dims, p);
+    let fwd = parallel::forward_spec_with(threads, &q, &k, &v, spec, p);
     let s = b.run("flash bwd", || {
-        parallel::backward_with(threads, &q, &k, &v, &fwd, &dout, dims, p)
+        parallel::backward_spec_with(threads, &q, &k, &v, &fwd, &dout, spec, p)
     });
     println!(
         "bwd:  {:>8.2} ms  {:>7.2} GFLOP/s",
@@ -521,9 +579,9 @@ fn cmd_attn_exec(args: &Args) -> Result<()> {
     );
 
     // split-KV decode over one head's history
-    let dh = dims.head_dim;
-    let scale = dims.scale();
-    let hist = dims.seq;
+    let dh = spec.head_dim;
+    let scale = spec.scale();
+    let hist = spec.seq;
     let s = b.run("split-KV decode", || {
         parallel::decode_splitkv(&q[..dh], &k[..hist * dh], &v[..hist * dh], hist, scale, 64)
     });
@@ -533,7 +591,7 @@ fn cmd_attn_exec(args: &Args) -> Result<()> {
     );
 
     if check {
-        let rf = reference::forward(&q, &k, &v, dims);
+        let rf = reference::forward_spec(&q, &k, &v, spec);
         let worst = fwd
             .o
             .iter()
@@ -542,7 +600,7 @@ fn cmd_attn_exec(args: &Args) -> Result<()> {
             .fold(0.0f32, f32::max);
         // same 2e-4 gate as `verify`, relaxed mildly with seqlen (f32
         // accumulation error grows with the number of summed terms)
-        let tol = 2e-4f32 * (1.0 + dims.seq as f32 / 1024.0);
+        let tol = 2e-4f32 * (1.0 + spec.seq as f32 / 1024.0);
         println!("parity vs O(N²) reference: max|Δ| = {worst:.2e} (tol {tol:.1e})");
         if worst >= tol {
             bail!("native flash forward diverged from reference ({worst:.2e} >= {tol:.1e})");

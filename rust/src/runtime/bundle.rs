@@ -42,23 +42,33 @@ impl ServeShapes {
     }
 
     pub fn cache_elems_per_seq(&self) -> usize {
-        self.geometry().slot_elems()
+        self.n_layer * self.n_kv_head * self.max_seq * self.d_head
     }
 
-    /// Bytes one KV-arena slot pins (K + V slabs, f32) — what an admission
-    /// decision actually reserves, surfaced by `repro serve` so operators
-    /// can size `max_in_flight` against memory.
+    /// Bytes one KV block pins (K + V, f32) under `block_tokens`-token
+    /// paging — what a block-level admission decision actually reserves,
+    /// surfaced by `repro serve` so operators can size the arena against
+    /// memory.
+    pub fn block_bytes(&self, block_tokens: usize) -> usize {
+        2 * self.n_layer * self.n_kv_head * block_tokens.max(1) * self.d_head
+            * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes a full-window sequence pins (K + V, f32) — the worst case a
+    /// single session can reserve.
     pub fn slot_bytes(&self) -> usize {
-        2 * self.geometry().slot_elems() * std::mem::size_of::<f32>()
+        2 * self.cache_elems_per_seq() * std::mem::size_of::<f32>()
     }
 
-    /// The KV-arena slot geometry this model serves with.
-    pub fn geometry(&self) -> KvGeometry {
+    /// The paged KV-arena geometry this model serves with, under
+    /// `block_tokens`-token blocks.
+    pub fn geometry(&self, block_tokens: usize) -> KvGeometry {
         KvGeometry {
             n_layer: self.n_layer,
             n_kv_head: self.n_kv_head,
             max_seq: self.max_seq,
             d_head: self.d_head,
+            block_tokens: block_tokens.max(1),
         }
     }
 }
@@ -208,9 +218,17 @@ mod tests {
         assert_eq!(bundle.shapes.n_layer, 2);
         assert_eq!(bundle.shapes.vocab, 512);
         assert_eq!(bundle.shapes.prompt_len, 16);
-        assert_eq!(bundle.shapes.geometry().slot_elems(), bundle.shapes.cache_elems_per_seq());
+        let geo = bundle.shapes.geometry(16);
+        assert_eq!(geo.slot_elems(), bundle.shapes.cache_elems_per_seq());
+        assert_eq!(geo.block_tokens, 16);
+        assert_eq!(geo.blocks_per_seq(), 128 / 16);
         // slot_bytes = K + V slabs in f32: 2 * L*H*S*dh * 4
         assert_eq!(bundle.shapes.slot_bytes(), 2 * 4 * bundle.shapes.cache_elems_per_seq());
+        // a block pins 1/blocks_per_seq of that
+        assert_eq!(
+            bundle.shapes.block_bytes(16) * geo.blocks_per_seq(),
+            bundle.shapes.slot_bytes()
+        );
         assert!(bundle.decode_for(4).is_ok());
         assert!(bundle.decode_for(1).is_ok());
         assert!(bundle.decode_for(2).is_err());

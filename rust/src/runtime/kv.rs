@@ -1,45 +1,59 @@
-//! Zero-copy KV-cache arena for the serving engine (DESIGN.md §8).
+//! Paged KV-cache arena for the serving engine (DESIGN.md §8/§11).
 //!
-//! The pre-engine coordinator kept one `Vec<f32>` K/V slab per sequence and
-//! re-assembled the entire (L, B, H, S, dh) batch cache tensor on every
-//! decode step, then scattered the updated rows back — an O(cache) memcpy
-//! per generated token that dwarfs the attention math the paper optimizes.
+//! The PR-3 arena kept one window-sized `(L, 1, H, S, dh)` slab per
+//! sequence: a short chat turn pinned exactly as much cache memory as a
+//! window-filling one, and admission control could only count *slabs*.
+//! [`KvArena`] now stores K/V in fixed-size **token blocks**
+//! (`KvGeometry::block_tokens` rows per block, all layers/heads
+//! interleaved per block) behind per-sequence **block tables**:
 //!
-//! [`KvArena`] replaces that: a worker-owned pool of per-sequence slabs
-//! ([`KvSlot`] handles) in the *single-sequence* cache layout (L, 1, H, S,
-//! dh).  A decode step borrows a [`KvBatchView`] over the active slots and
-//! hands it through the widened [`Module::decode_step`] seam
-//! (`runtime::backend`):
-//!
-//! - the native backend mutates the slots **in place** — zero per-token
-//!   assemble/scatter bytes (asserted by `benches/coordinator_hotpath.rs`
-//!   and the tests below);
+//! - allocation, free and admission reservation are all in blocks —
+//!   [`try_alloc_seq`](KvArena::try_alloc_seq) reserves exactly the
+//!   blocks a session's `prompt + max_tokens` can touch, so short
+//!   sequences no longer pin window-sized slabs;
+//! - the native decode path mutates blocks **in place** through
+//!   [`PagedKvMut`], whose [`layout`](PagedKvMut::layout) hands the
+//!   attention kernel a [`KvLayout::Paged`] block-table view — zero
+//!   per-token assemble/scatter bytes, asserted by
+//!   `benches/coordinator_hotpath.rs` and the tests below;
 //! - compiled-artifact backends (PJRT/stub) fall back to the view's
 //!   [`gather`](KvBatchView::gather)/[`scatter`](KvBatchView::scatter)
-//!   compatibility pair, which reproduces the old batch-tensor exchange
-//!   byte-for-byte and *accounts* every byte it moves in [`CopyStats`].
+//!   compatibility pair, which materializes the legacy `(L, B, H, S, dh)`
+//!   batch tensor from the blocks and *accounts* every byte it moves in
+//!   [`CopyStats`].
+//!
+//! Within a physical block, rows are laid out `(layer, head, token,
+//! d_head)` — one `(layer, head)` plane's rows are contiguous, which is
+//! exactly the chunk shape the split-KV decode kernel streams.
 
+use crate::attn::spec::{BlockTable, KvLayout};
 use crate::bail;
 use crate::util::error::Result;
 use crate::util::tensorio::HostTensor;
 
-/// Per-sequence cache geometry: a slot holds (n_layer, 1, n_kv_head,
-/// max_seq, d_head) f32 elements, layer-major.
+/// Cache geometry: shapes from the model, block size from serving config.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvGeometry {
     pub n_layer: usize,
     pub n_kv_head: usize,
     pub max_seq: usize,
     pub d_head: usize,
+    /// Token rows per KV block (the paging granularity).
+    pub block_tokens: usize,
 }
 
+/// Default KV block size (tokens) — must match `runtime::native`'s legacy
+/// decode chunk so paged and batch-tensor decode stay bit-identical.
+pub const DEFAULT_KV_BLOCK: usize = 16;
+
 impl KvGeometry {
-    /// Elements in one layer of one sequence's cache: H * S * dh.
+    /// Elements in one layer of one sequence's *assembled* cache:
+    /// H · S · dh (the compat gather/scatter shape).
     pub fn per_layer(&self) -> usize {
         self.n_kv_head * self.max_seq * self.d_head
     }
 
-    /// Elements in one sequence's full cache slab.
+    /// Elements in one sequence's fully-assembled cache slab.
     pub fn slot_elems(&self) -> usize {
         self.n_layer * self.per_layer()
     }
@@ -47,6 +61,42 @@ impl KvGeometry {
     /// Dims of the batched cache tensor the compat path assembles.
     pub fn batch_dims(&self, batch: usize) -> Vec<usize> {
         vec![self.n_layer, batch, self.n_kv_head, self.max_seq, self.d_head]
+    }
+
+    /// Elements in one physical block (all layers and heads).
+    pub fn block_elems(&self) -> usize {
+        self.n_layer * self.n_kv_head * self.block_tokens * self.d_head
+    }
+
+    /// Element offset of the (layer, head) plane inside a block.
+    pub fn plane_offset(&self, l: usize, h: usize) -> usize {
+        (l * self.n_kv_head + h) * self.block_tokens * self.d_head
+    }
+
+    /// Blocks needed to back a full `max_seq` window.
+    pub fn blocks_per_seq(&self) -> usize {
+        self.max_seq.div_ceil(self.block_tokens).max(1)
+    }
+
+    /// Blocks a sequence that will touch at most `tokens` rows must
+    /// reserve (clamped into `[1 block, full window]`).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.clamp(1, self.max_seq).div_ceil(self.block_tokens)
+    }
+
+    /// The (physical block, first token, token rows) copy runs of a block
+    /// table, clipped to the window — the one place the per-block run
+    /// arithmetic lives (adopt/export/gather/scatter all iterate this).
+    fn runs<'a>(
+        &self,
+        table: &'a [u32],
+    ) -> impl Iterator<Item = (usize, usize, usize)> + 'a {
+        let (bt, max_seq) = (self.block_tokens, self.max_seq);
+        table.iter().enumerate().filter_map(move |(c, &pb)| {
+            let t0 = c * bt;
+            let rows = bt.min(max_seq.saturating_sub(t0));
+            (rows > 0).then_some((pb as usize, t0, rows))
+        })
     }
 }
 
@@ -67,8 +117,8 @@ impl CopyStats {
     }
 }
 
-/// Handle to one sequence's slab in the arena.  Only meaningful for the
-/// arena that issued it; freeing returns the slab to the pool for reuse.
+/// Handle to one sequence's block table in the arena.  Only meaningful
+/// for the arena that issued it; freeing returns the blocks to the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvSlot(usize);
 
@@ -78,66 +128,87 @@ impl KvSlot {
     }
 }
 
-/// The worker-owned slab pool: one pair of K/V slabs per live sequence,
-/// optionally bounded so admission control can reserve against *real*
-/// availability (DESIGN.md §9: the engine sizes the arena to
-/// `max_in_flight` and admits only while [`try_alloc`](Self::try_alloc)
-/// can succeed).
+#[derive(Debug)]
+struct Seq {
+    /// Physical pool block per logical token block (eagerly reserved).
+    blocks: Vec<u32>,
+}
+
+/// The worker-owned block pool + per-sequence block tables, optionally
+/// bounded so admission control can reserve against *real* availability
+/// (DESIGN.md §9/§11: the engine sizes the pool in blocks and admits a
+/// session only while [`try_alloc_seq`](Self::try_alloc_seq) can grant
+/// its whole reservation).
 #[derive(Debug)]
 pub struct KvArena {
     geo: KvGeometry,
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    free: Vec<usize>,
-    /// Slot cap (`None` = unbounded legacy pool).
-    cap: Option<usize>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Physical blocks currently materialized in `k`/`v`.
+    pool_blocks: usize,
+    free_blocks: Vec<u32>,
+    /// Block cap (`None` = unbounded pool that grows on demand).
+    cap_blocks: Option<usize>,
+    in_use_blocks: usize,
+    seqs: Vec<Option<Seq>>,
+    free_slots: Vec<usize>,
     stats: CopyStats,
 }
 
 impl KvArena {
     /// An unbounded pool (benches and the compat paths).
     pub fn new(geo: KvGeometry) -> KvArena {
+        assert!(geo.block_tokens > 0, "kv block size must be at least one token");
         KvArena {
             geo,
             k: Vec::new(),
             v: Vec::new(),
-            free: Vec::new(),
-            cap: None,
+            pool_blocks: 0,
+            free_blocks: Vec::new(),
+            cap_blocks: None,
+            in_use_blocks: 0,
+            seqs: Vec::new(),
+            free_slots: Vec::new(),
             stats: CopyStats::default(),
         }
     }
 
-    /// A pool bounded to `cap` live slots — the reservation substrate for
-    /// KV-pressure-aware admission.
-    pub fn with_capacity(geo: KvGeometry, cap: usize) -> KvArena {
-        KvArena { cap: Some(cap.max(1)), ..KvArena::new(geo) }
+    /// A pool bounded to `blocks` physical blocks — the reservation
+    /// substrate for KV-pressure-aware admission.
+    pub fn with_block_capacity(geo: KvGeometry, blocks: usize) -> KvArena {
+        KvArena { cap_blocks: Some(blocks.max(1)), ..KvArena::new(geo) }
     }
 
     pub fn geometry(&self) -> KvGeometry {
         self.geo
     }
 
-    /// Slots currently live (allocated and not freed).
+    /// Sequences currently live (allocated and not freed).
     pub fn live(&self) -> usize {
-        self.k.len() - self.free.len()
+        self.seqs.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Total slabs ever allocated (high-water mark of the pool).
-    pub fn capacity(&self) -> usize {
-        self.k.len()
+    /// Blocks currently reserved by live sequences.
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use_blocks
     }
 
-    /// The configured slot cap (`None` = unbounded).
-    pub fn capacity_slots(&self) -> Option<usize> {
-        self.cap
+    /// Physical blocks ever materialized (pool high-water mark).
+    pub fn pool_blocks(&self) -> usize {
+        self.pool_blocks
     }
 
-    /// Slots an admission decision may still claim right now.  Unbounded
+    /// The configured block cap (`None` = unbounded).
+    pub fn capacity_blocks(&self) -> Option<usize> {
+        self.cap_blocks
+    }
+
+    /// Blocks an admission decision may still claim right now.  Unbounded
     /// arenas report `usize::MAX` (the scheduler clamps with its own
     /// in-flight cap).
     pub fn available(&self) -> usize {
-        match self.cap {
-            Some(cap) => cap.saturating_sub(self.live()),
+        match self.cap_blocks {
+            Some(cap) => cap.saturating_sub(self.in_use_blocks),
             None => usize::MAX,
         }
     }
@@ -146,37 +217,53 @@ impl KvArena {
         self.stats
     }
 
-    /// Allocate a zeroed slot (reuses a freed slab when available).
-    /// Panics past the cap — bounded callers must reserve via
-    /// [`try_alloc`](Self::try_alloc).
-    pub fn alloc(&mut self) -> KvSlot {
-        self.try_alloc().expect("kv arena exhausted (admission must check available())")
-    }
-
-    /// Reserve a zeroed slot, or `None` when the pool is at capacity —
-    /// the admission-control primitive.
-    pub fn try_alloc(&mut self) -> Option<KvSlot> {
-        if self.available() == 0 {
-            return None;
-        }
-        let n = self.geo.slot_elems();
-        match self.free.pop() {
-            Some(i) => {
-                self.k[i].iter_mut().for_each(|x| *x = 0.0);
-                self.v[i].iter_mut().for_each(|x| *x = 0.0);
-                Some(KvSlot(i))
+    fn grab_block(&mut self) -> u32 {
+        let elems = self.geo.block_elems();
+        match self.free_blocks.pop() {
+            Some(b) => {
+                let at = b as usize * elems;
+                self.k[at..at + elems].iter_mut().for_each(|x| *x = 0.0);
+                self.v[at..at + elems].iter_mut().for_each(|x| *x = 0.0);
+                b
             }
             None => {
-                self.k.push(vec![0.0; n]);
-                self.v.push(vec![0.0; n]);
-                Some(KvSlot(self.k.len() - 1))
+                self.k.resize((self.pool_blocks + 1) * elems, 0.0);
+                self.v.resize((self.pool_blocks + 1) * elems, 0.0);
+                self.pool_blocks += 1;
+                (self.pool_blocks - 1) as u32
             }
         }
     }
 
-    /// Adopt a prefill-produced cache pair by *moving* the vectors in — the
-    /// one-time admission cost; no per-token copies follow on the native
-    /// path.
+    /// Reserve a sequence backed by `n_blocks` zeroed blocks, or `None`
+    /// when the pool cannot grant the whole reservation — the
+    /// block-level admission-control primitive.
+    pub fn try_alloc_seq(&mut self, n_blocks: usize) -> Option<KvSlot> {
+        let n_blocks = n_blocks.max(1);
+        if self.available() < n_blocks {
+            return None;
+        }
+        let blocks: Vec<u32> = (0..n_blocks).map(|_| self.grab_block()).collect();
+        self.in_use_blocks += n_blocks;
+        let seq = Seq { blocks };
+        let id = match self.free_slots.pop() {
+            Some(i) => {
+                self.seqs[i] = Some(seq);
+                i
+            }
+            None => {
+                self.seqs.push(Some(seq));
+                self.seqs.len() - 1
+            }
+        };
+        Some(KvSlot(id))
+    }
+
+    /// Adopt a legacy `(L, 1, H, S, dh)` cache slab pair by copying it
+    /// into a full-window block reservation — the one-time admission cost
+    /// for callers that prefill outside the arena (benches, tests); no
+    /// per-token copies follow on the native path, and these bytes are
+    /// NOT counted as gather/scatter traffic.
     pub fn adopt(&mut self, k: Vec<f32>, v: Vec<f32>) -> Result<KvSlot> {
         let n = self.geo.slot_elems();
         if k.len() != n || v.len() != n {
@@ -186,40 +273,85 @@ impl KvArena {
                 v.len()
             );
         }
-        if self.available() == 0 {
+        let blocks = self.geo.blocks_per_seq();
+        let Some(slot) = self.try_alloc_seq(blocks) else {
             bail!(
-                "kv arena: at capacity ({} live slots); admission must reserve first",
-                self.live()
+                "kv arena: {} blocks available, adoption needs {blocks}; \
+                 admission must reserve first",
+                self.available()
             );
-        }
-        match self.free.pop() {
-            Some(i) => {
-                self.k[i] = k;
-                self.v[i] = v;
-                Ok(KvSlot(i))
+        };
+        // slab (l, h, s, dh) rows -> block planes, run by run (the table
+        // read and the pool writes are disjoint fields)
+        let geo = self.geo;
+        let dh = geo.d_head;
+        let table = &self.seqs[slot.0].as_ref().expect("just allocated").blocks;
+        for l in 0..geo.n_layer {
+            for h in 0..geo.n_kv_head {
+                let plane = geo.plane_offset(l, h);
+                let src_base = (l * geo.n_kv_head + h) * geo.max_seq * dh;
+                for (pb, t0, rows) in geo.runs(table) {
+                    let src = src_base + t0 * dh..src_base + (t0 + rows) * dh;
+                    let dst = pb * geo.block_elems() + plane;
+                    self.k[dst..dst + rows * dh].copy_from_slice(&k[src.clone()]);
+                    self.v[dst..dst + rows * dh].copy_from_slice(&v[src]);
+                }
             }
-            None => {
-                self.k.push(k);
-                self.v.push(v);
-                Ok(KvSlot(self.k.len() - 1))
-            }
         }
+        Ok(slot)
     }
 
-    /// Return a slot's slab to the pool.
+    /// Return a sequence's blocks to the pool.
     pub fn free(&mut self, slot: KvSlot) {
-        debug_assert!(!self.free.contains(&slot.0), "double free of kv slot");
-        self.free.push(slot.0);
+        let seq = self.seqs[slot.0].take().expect("double free of kv slot");
+        self.in_use_blocks -= seq.blocks.len();
+        self.free_blocks.extend(seq.blocks);
+        self.free_slots.push(slot.0);
     }
 
-    /// This slot's (K, V) slabs, read-only.
-    pub fn slot(&self, slot: KvSlot) -> (&[f32], &[f32]) {
-        (&self.k[slot.0], &self.v[slot.0])
+    /// This sequence's block table (physical block per logical block).
+    pub fn table(&self, slot: KvSlot) -> &[u32] {
+        &self.seqs[slot.0].as_ref().expect("live slot").blocks
     }
 
-    /// This slot's (K, V) slabs, mutable.
-    pub fn slot_mut(&mut self, slot: KvSlot) -> (&mut [f32], &mut [f32]) {
-        (&mut self.k[slot.0], &mut self.v[slot.0])
+    /// Blocks reserved by this sequence.
+    pub fn reserved_blocks(&self, slot: KvSlot) -> usize {
+        self.table(slot).len()
+    }
+
+    /// Token rows this sequence's reservation can hold.
+    pub fn reserved_tokens(&self, slot: KvSlot) -> usize {
+        (self.reserved_blocks(slot) * self.geo.block_tokens).min(self.geo.max_seq)
+    }
+
+    /// In-place paged access to one sequence (the native decode seam).
+    pub fn paged_mut(&mut self, slot: KvSlot) -> PagedKvMut<'_> {
+        let table = &self.seqs[slot.0].as_ref().expect("live slot").blocks;
+        PagedKvMut { geo: self.geo, k: &mut self.k, v: &mut self.v, table }
+    }
+
+    /// Assemble this sequence's legacy `(L, 1, H, S, dh)` slab pair
+    /// (zeros beyond its reservation) — a test/bench convenience, not a
+    /// serving path; the bytes are not counted as gather traffic.
+    pub fn export_slab(&self, slot: KvSlot) -> (Vec<f32>, Vec<f32>) {
+        let geo = self.geo;
+        let dh = geo.d_head;
+        let table = self.table(slot);
+        let mut ks = vec![0.0f32; geo.slot_elems()];
+        let mut vs = vec![0.0f32; geo.slot_elems()];
+        for l in 0..geo.n_layer {
+            for h in 0..geo.n_kv_head {
+                let plane = geo.plane_offset(l, h);
+                let dst_base = (l * geo.n_kv_head + h) * geo.max_seq * dh;
+                for (pb, t0, rows) in geo.runs(table) {
+                    let src = pb * geo.block_elems() + plane;
+                    let dst = dst_base + t0 * dh..dst_base + (t0 + rows) * dh;
+                    ks[dst.clone()].copy_from_slice(&self.k[src..src + rows * dh]);
+                    vs[dst].copy_from_slice(&self.v[src..src + rows * dh]);
+                }
+            }
+        }
+        (ks, vs)
     }
 
     /// Borrow a decode-step view over `slots`, padded (virtually) to
@@ -228,6 +360,48 @@ impl KvArena {
     pub fn batch_view<'a>(&'a mut self, slots: &[KvSlot], batch: usize) -> KvBatchView<'a> {
         assert!(!slots.is_empty() && slots.len() <= batch, "bad batch view shape");
         KvBatchView { arena: self, slots: slots.to_vec(), batch }
+    }
+}
+
+/// Mutable paged access to one sequence: append rows in place, and hand
+/// the attention kernel a [`KvLayout::Paged`] view of any (layer, head)
+/// plane.  This is the zero-copy native decode seam.
+pub struct PagedKvMut<'a> {
+    pub geo: KvGeometry,
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+    table: &'a [u32],
+}
+
+impl PagedKvMut<'_> {
+    /// Token rows the reservation can hold (writes past this panic).
+    pub fn reserved_tokens(&self) -> usize {
+        (self.table.len() * self.geo.block_tokens).min(self.geo.max_seq)
+    }
+
+    /// Write the K/V row of (layer `l`, kv head `h`) at token position
+    /// `pos`, in place.
+    pub fn write_row(&mut self, l: usize, h: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        let geo = &self.geo;
+        debug_assert_eq!(krow.len(), geo.d_head);
+        debug_assert_eq!(vrow.len(), geo.d_head);
+        let (bt, dh) = (geo.block_tokens, geo.d_head);
+        let blk = self.table[pos / bt] as usize;
+        let at = blk * geo.block_elems() + geo.plane_offset(l, h) + (pos % bt) * dh;
+        self.k[at..at + dh].copy_from_slice(krow);
+        self.v[at..at + dh].copy_from_slice(vrow);
+    }
+
+    /// The (layer `l`, kv head `h`) plane as a paged attention layout.
+    pub fn layout(&self, l: usize, h: usize) -> KvLayout<'_> {
+        KvLayout::Paged(BlockTable {
+            k_pool: self.k,
+            v_pool: self.v,
+            blocks: self.table,
+            block_elems: self.geo.block_elems(),
+            plane: self.geo.plane_offset(l, h),
+            block_tokens: self.geo.block_tokens,
+        })
     }
 }
 
@@ -255,15 +429,16 @@ impl KvBatchView<'_> {
         self.arena.geo
     }
 
-    /// Row `row`'s (K, V) slabs for in-place decode (native path).
-    pub fn slot_mut(&mut self, row: usize) -> (&mut [f32], &mut [f32]) {
-        self.arena.slot_mut(self.slots[row])
+    /// Row `row`'s sequence for in-place paged decode (native path).
+    pub fn paged(&mut self, row: usize) -> PagedKvMut<'_> {
+        self.arena.paged_mut(self.slots[row])
     }
 
     /// Compatibility path: assemble the (L, B, H, S, dh) batch cache pair
-    /// the compiled decode artifacts expect.  Padding rows replicate row 0
-    /// (their results are discarded).  Every byte is accounted in
-    /// [`CopyStats`].
+    /// the compiled decode artifacts expect, reading each row's blocks
+    /// through its table (zeros beyond the reservation).  Padding rows
+    /// replicate row 0 (their results are discarded).  Every byte is
+    /// accounted in [`CopyStats`].
     pub fn gather(&mut self) -> (HostTensor, HostTensor) {
         let geo = self.arena.geo;
         let per_layer = geo.per_layer();
@@ -271,15 +446,24 @@ impl KvBatchView<'_> {
         let dims = geo.batch_dims(b);
         let mut kd = vec![0.0f32; geo.n_layer * b * per_layer];
         let mut vd = vec![0.0f32; geo.n_layer * b * per_layer];
+        let dh = geo.d_head;
         for l in 0..geo.n_layer {
             for bi in 0..b {
                 // padding rows replicate sequence 0 (results discarded)
                 let slot = if bi < self.slots.len() { self.slots[bi] } else { self.slots[0] };
-                let (ks, vs) = self.arena.slot(slot);
-                let src = l * per_layer..(l + 1) * per_layer;
-                let dst = (l * b + bi) * per_layer;
-                kd[dst..dst + per_layer].copy_from_slice(&ks[src.clone()]);
-                vd[dst..dst + per_layer].copy_from_slice(&vs[src]);
+                let table = self.arena.table(slot);
+                for h in 0..geo.n_kv_head {
+                    let plane = geo.plane_offset(l, h);
+                    let dst_base = (l * b + bi) * per_layer + h * geo.max_seq * dh;
+                    for (pb, t0, rows) in geo.runs(table) {
+                        let src = pb * geo.block_elems() + plane;
+                        let dst = dst_base + t0 * dh;
+                        kd[dst..dst + rows * dh]
+                            .copy_from_slice(&self.arena.k[src..src + rows * dh]);
+                        vd[dst..dst + rows * dh]
+                            .copy_from_slice(&self.arena.v[src..src + rows * dh]);
+                    }
+                }
             }
         }
         self.arena.stats.gathers += 1;
@@ -288,7 +472,8 @@ impl KvBatchView<'_> {
     }
 
     /// Compatibility path: scatter the updated batch cache pair back into
-    /// the per-sequence slots (real rows only).
+    /// the per-sequence blocks (real rows only, each only up to its
+    /// reservation — there is no storage past it).
     pub fn scatter(&mut self, k_new: &HostTensor, v_new: &HostTensor) -> Result<()> {
         let geo = self.arena.geo;
         let per_layer = geo.per_layer();
@@ -303,18 +488,34 @@ impl KvBatchView<'_> {
         }
         let kd = k_new.to_f32_vec();
         let vd = v_new.to_f32_vec();
-        let rows = self.slots.len();
-        for bi in 0..rows {
-            let (ks, vs) = self.arena.slot_mut(self.slots[bi]);
+        let dh = geo.d_head;
+        let mut moved_elems = 0u64;
+        for bi in 0..self.slots.len() {
+            // split borrows: the table lives in arena.seqs, the writes go
+            // to arena.k/arena.v — disjoint fields, no clone needed
+            let arena = &mut *self.arena;
+            let table = &arena.seqs[self.slots[bi].0]
+                .as_ref()
+                .expect("view slots are live")
+                .blocks;
             for l in 0..geo.n_layer {
-                let src = (l * b + bi) * per_layer;
-                let dst = l * per_layer;
-                ks[dst..dst + per_layer].copy_from_slice(&kd[src..src + per_layer]);
-                vs[dst..dst + per_layer].copy_from_slice(&vd[src..src + per_layer]);
+                for h in 0..geo.n_kv_head {
+                    let plane = geo.plane_offset(l, h);
+                    let src_base = (l * b + bi) * per_layer + h * geo.max_seq * dh;
+                    for (pb, t0, rows) in geo.runs(table) {
+                        let src = src_base + t0 * dh;
+                        let dst = pb * geo.block_elems() + plane;
+                        arena.k[dst..dst + rows * dh]
+                            .copy_from_slice(&kd[src..src + rows * dh]);
+                        arena.v[dst..dst + rows * dh]
+                            .copy_from_slice(&vd[src..src + rows * dh]);
+                        moved_elems += (rows * dh) as u64;
+                    }
+                }
             }
         }
         self.arena.stats.scatters += 1;
-        self.arena.stats.scatter_bytes += 2 * (geo.n_layer * rows * per_layer * 4) as u64;
+        self.arena.stats.scatter_bytes += 2 * moved_elems * 4;
         Ok(())
     }
 }
@@ -324,7 +525,7 @@ mod tests {
     use super::*;
 
     fn geo() -> KvGeometry {
-        KvGeometry { n_layer: 2, n_kv_head: 1, max_seq: 2, d_head: 2 }
+        KvGeometry { n_layer: 2, n_kv_head: 1, max_seq: 4, d_head: 2, block_tokens: 2 }
     }
 
     fn ramp(base: f32, n: usize) -> Vec<f32> {
@@ -332,64 +533,106 @@ mod tests {
     }
 
     #[test]
-    fn alloc_adopt_free_reuses_slabs() {
+    fn geometry_block_arithmetic() {
         let g = geo();
-        let mut a = KvArena::new(g);
-        let n = g.slot_elems();
-        assert_eq!(n, 2 * 4);
-        let s0 = a.adopt(ramp(0.0, n), vec![0.0; n]).unwrap();
-        let s1 = a.alloc();
-        assert_eq!(a.live(), 2);
-        assert_eq!(a.capacity(), 2);
-        a.free(s0);
-        assert_eq!(a.live(), 1);
-        // reuse: the freed slab index comes back, zeroed on alloc
-        let s2 = a.alloc();
-        assert_eq!(s2.index(), s0.index());
-        assert!(a.slot(s2).0.iter().all(|&x| x == 0.0));
-        assert_eq!(a.capacity(), 2);
-        a.free(s1);
-        a.free(s2);
-        assert_eq!(a.live(), 0);
-        // wrong-size adoption is a typed error, not a corrupted slab
-        assert!(a.adopt(vec![0.0; n + 1], vec![0.0; n]).is_err());
+        assert_eq!(g.slot_elems(), 2 * 1 * 4 * 2);
+        assert_eq!(g.block_elems(), 2 * 1 * 2 * 2);
+        assert_eq!(g.blocks_per_seq(), 2);
+        assert_eq!(g.plane_offset(1, 0), 1 * 2 * 2);
+        assert_eq!(g.blocks_for(1), 1);
+        assert_eq!(g.blocks_for(2), 1);
+        assert_eq!(g.blocks_for(3), 2);
+        assert_eq!(g.blocks_for(100), 2, "clamped to the window");
+        assert_eq!(g.blocks_for(0), 1, "at least one block");
+        let odd = KvGeometry { max_seq: 5, ..g };
+        assert_eq!(odd.blocks_per_seq(), 3, "tail block counts");
     }
 
     #[test]
-    fn bounded_arena_reserves_against_real_availability() {
+    fn alloc_free_reuses_blocks_and_zeroes_them() {
         let g = geo();
-        let n = g.slot_elems();
-        let mut a = KvArena::with_capacity(g, 2);
-        assert_eq!(a.capacity_slots(), Some(2));
-        assert_eq!(a.available(), 2);
-        let s0 = a.try_alloc().expect("slot 0");
-        let s1 = a.try_alloc().expect("slot 1");
-        assert_eq!(a.available(), 0);
-        // at capacity: reservation fails, adoption is a typed error
-        assert!(a.try_alloc().is_none());
-        assert!(a.adopt(vec![0.0; n], vec![0.0; n]).is_err());
-        // freeing restores availability; the recycled slab comes back zeroed
-        {
-            let (k, _) = a.slot_mut(s0);
-            k[0] = 7.0;
-        }
-        a.free(s0);
+        let mut a = KvArena::with_block_capacity(g, 3);
+        assert_eq!(a.available(), 3);
+        let s0 = a.try_alloc_seq(2).expect("2 blocks");
+        assert_eq!(a.reserved_blocks(s0), 2);
+        assert_eq!(a.reserved_tokens(s0), 4);
+        assert_eq!(a.blocks_in_use(), 2);
         assert_eq!(a.available(), 1);
-        let s2 = a.try_alloc().expect("recycled slot");
-        assert_eq!(s2.index(), s0.index());
-        assert!(a.slot(s2).0.iter().all(|&x| x == 0.0), "recycled slab not zeroed");
+        // the remaining block serves a short sequence
+        let s1 = a.try_alloc_seq(1).expect("1 block");
+        assert_eq!(a.available(), 0);
+        assert!(a.try_alloc_seq(1).is_none(), "pool exhausted");
+        // dirty a block, free, realloc: recycled block comes back zeroed
+        {
+            let mut p = a.paged_mut(s1);
+            p.write_row(0, 0, 0, &[7.0, 8.0], &[9.0, 10.0]);
+        }
         a.free(s1);
+        assert_eq!(a.available(), 1);
+        let s2 = a.try_alloc_seq(1).expect("recycled");
+        let (ks, vs) = a.export_slab(s2);
+        assert!(ks.iter().chain(&vs).all(|&x| x == 0.0), "recycled block not zeroed");
+        assert_eq!(a.live(), 2);
+        a.free(s0);
         a.free(s2);
-        assert_eq!(a.available(), 2);
+        assert_eq!(a.blocks_in_use(), 0);
+        assert_eq!(a.live(), 0);
         // the unbounded pool reports effectively infinite availability
         assert_eq!(KvArena::new(g).available(), usize::MAX);
     }
 
     #[test]
+    fn paged_writes_round_trip_through_the_table() {
+        let g = geo();
+        let mut a = KvArena::new(g);
+        let s = a.try_alloc_seq(g.blocks_per_seq()).unwrap();
+        {
+            let mut p = a.paged_mut(s);
+            assert_eq!(p.reserved_tokens(), 4);
+            for pos in 0..4 {
+                let base = 10.0 * pos as f32;
+                for l in 0..2 {
+                    p.write_row(l, 0, pos, &[base + l as f32, 1.0], &[base + 5.0, 2.0]);
+                }
+            }
+            // the layout view sees the rows in token order across blocks
+            let lay = p.layout(1, 0);
+            let (k01, _) = lay.rows(0, 2, 2);
+            assert_eq!(k01, &[1.0, 1.0, 11.0, 1.0]);
+            let (k23, v23) = lay.rows(2, 4, 2);
+            assert_eq!(k23, &[21.0, 1.0, 31.0, 1.0]);
+            assert_eq!(v23, &[25.0, 2.0, 35.0, 2.0]);
+        }
+        // export assembles the legacy slab layout
+        let (ks, _) = a.export_slab(s);
+        // layer 1 plane starts at per_layer = 8; row 3 of that plane
+        assert_eq!(&ks[8 + 3 * 2..8 + 4 * 2], &[31.0, 1.0]);
+    }
+
+    #[test]
+    fn adopt_scatters_the_slab_into_blocks() {
+        let g = geo();
+        let n = g.slot_elems();
+        let mut a = KvArena::new(g);
+        let s = a.adopt(ramp(0.0, n), ramp(100.0, n)).unwrap();
+        assert_eq!(a.reserved_blocks(s), g.blocks_per_seq());
+        let (ks, vs) = a.export_slab(s);
+        assert_eq!(ks, ramp(0.0, n), "adopt/export must round-trip the slab");
+        assert_eq!(vs, ramp(100.0, n));
+        // adoption is admission cost, not per-step gather/scatter traffic
+        assert_eq!(a.stats(), CopyStats::default());
+        // wrong-size adoption is a typed error, not a corrupted pool
+        assert!(a.adopt(vec![0.0; n + 1], vec![0.0; n]).is_err());
+        // bounded arena refuses adoption past its block budget
+        let mut b = KvArena::with_block_capacity(g, 1);
+        assert!(b.adopt(ramp(0.0, n), ramp(0.0, n)).is_err());
+    }
+
+    #[test]
     fn gather_matches_legacy_assemble_layout() {
-        // Port of the old coordinator `cache_assembly_roundtrip_layout`
-        // test: same (L, B, H, S, dh) interleaving, same pad-row
-        // replication of sequence 0.
+        // Same (L, B, H, S, dh) interleaving and pad-row replication as
+        // the PR-3 slab arena — the compat contract compiled artifacts
+        // rely on — now read through the block tables.
         let g = geo();
         let n = g.slot_elems();
         let mut a = KvArena::new(g);
@@ -397,16 +640,20 @@ mod tests {
         let s1 = a.adopt(ramp(100.0, n), vec![0.0; n]).unwrap();
         let mut view = a.batch_view(&[s0, s1], 4);
         let (k, _v) = view.gather();
-        assert_eq!(k.dims, vec![2, 4, 1, 2, 2]);
+        assert_eq!(k.dims, vec![2, 4, 1, 4, 2]);
         let data = k.to_f32_vec();
+        let per_layer = g.per_layer(); // 8
         // layer 0: [seq0 layer0][seq1 layer0][pad=seq0][pad=seq0]
-        assert_eq!(&data[0..4], &[0.0, 1.0, 2.0, 3.0]);
-        assert_eq!(&data[4..8], &[100.0, 101.0, 102.0, 103.0]);
-        assert_eq!(&data[8..12], &[0.0, 1.0, 2.0, 3.0]);
-        // layer 1 of seq1 starts at (1*4 + 1)*4
-        assert_eq!(&data[20..24], &[104.0, 105.0, 106.0, 107.0]);
+        assert_eq!(&data[0..per_layer], &ramp(0.0, per_layer)[..]);
+        assert_eq!(&data[per_layer..2 * per_layer], &ramp(100.0, per_layer)[..]);
+        assert_eq!(&data[2 * per_layer..3 * per_layer], &ramp(0.0, per_layer)[..]);
+        // layer 1 of seq1 starts at (1*4 + 1)*per_layer
+        assert_eq!(
+            &data[5 * per_layer..6 * per_layer],
+            &ramp(100.0 + per_layer as f32, per_layer)[..]
+        );
         assert_eq!(a.stats().gathers, 1);
-        assert_eq!(a.stats().gather_bytes, 2u64 * (2 * 4 * 4) * 4);
+        assert_eq!(a.stats().gather_bytes, 2u64 * (2 * 4 * per_layer as u64) * 4);
     }
 
     #[test]
@@ -428,10 +675,14 @@ mod tests {
         }
         let k2 = HostTensor::from_f32(&k.dims, &kd);
         view.scatter(&k2, &v).unwrap();
-        let (ks1, vs1) = a.slot(s1);
-        assert_eq!(&ks1[per_layer..2 * per_layer], &[1104.0, 1105.0, 1106.0, 1107.0]);
-        assert_eq!(vs1, &ramp(150.0, n)[..]);
-        // stats: one gather of the padded batch, one scatter of 2 real rows
+        let (ks1, vs1) = a.export_slab(s1);
+        assert_eq!(
+            &ks1[per_layer..2 * per_layer],
+            &ramp(1000.0 + 100.0 + per_layer as f32, per_layer)[..]
+        );
+        assert_eq!(vs1, ramp(150.0, n));
+        // stats: one gather of the padded batch, one scatter of 2 real
+        // rows' reserved regions (full window here)
         let st = a.stats();
         assert_eq!(st.scatters, 1);
         assert_eq!(st.scatter_bytes, 2 * (2 * 2 * per_layer as u64) * 4);
@@ -442,7 +693,34 @@ mod tests {
     }
 
     #[test]
-    fn in_place_slot_access_moves_zero_bytes() {
+    fn short_reservations_gather_zeros_past_their_blocks() {
+        let g = geo();
+        let mut a = KvArena::with_block_capacity(g, 2);
+        // one block = 2 of the 4 window tokens
+        let s = a.try_alloc_seq(1).unwrap();
+        {
+            let mut p = a.paged_mut(s);
+            p.write_row(0, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+            p.write_row(0, 0, 1, &[5.0, 6.0], &[7.0, 8.0]);
+        }
+        let mut view = a.batch_view(&[s], 1);
+        let (k, v) = view.gather();
+        let kd = k.to_f32_vec();
+        assert_eq!(&kd[0..4], &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(&kd[4..8], &[0.0; 4], "past the reservation is zeros");
+        // scatter writes back (and counts) only the reserved rows
+        let before = a.stats().scatter_bytes;
+        let mut view = a.batch_view(&[s], 1);
+        view.scatter(&k, &v).unwrap();
+        let per_block_rows = 2u64; // one block of 2 tokens per (l, h)
+        assert_eq!(
+            a.stats().scatter_bytes - before,
+            2 * (g.n_layer as u64 * per_block_rows * g.d_head as u64) * 4
+        );
+    }
+
+    #[test]
+    fn in_place_paged_access_moves_zero_bytes() {
         let g = geo();
         let n = g.slot_elems();
         let mut a = KvArena::new(g);
@@ -451,12 +729,12 @@ mod tests {
             let mut view = a.batch_view(&[s0], 4);
             assert_eq!(view.rows(), 1);
             assert_eq!(view.batch(), 4);
-            let (k, v) = view.slot_mut(0);
-            k[0] = 42.0;
-            v[0] = 43.0;
+            let mut p = view.paged(0);
+            p.write_row(0, 0, 0, &[42.0, 42.5], &[43.0, 43.5]);
         }
-        assert_eq!(a.slot(s0).0[0], 42.0);
-        assert_eq!(a.slot(s0).1[0], 43.0);
+        let (ks, vs) = a.export_slab(s0);
+        assert_eq!(ks[0], 42.0);
+        assert_eq!(vs[0], 43.0);
         // the whole point: native in-place decode never bumps the counters
         assert_eq!(a.stats(), CopyStats::default());
         assert_eq!(a.stats().total_bytes(), 0);

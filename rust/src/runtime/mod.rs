@@ -30,8 +30,20 @@ use crate::util::error::{Context, Result};
 pub use artifact::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};
 pub use backend::{Backend, BackendKind, ExecTiming, GoldenCase, Module};
 pub use bundle::{DecodeBuckets, ModelBundle, ServeShapes};
-pub use kv::{CopyStats, KvArena, KvBatchView, KvGeometry, KvSlot};
+pub use kv::{CopyStats, KvArena, KvBatchView, KvGeometry, KvSlot, PagedKvMut, DEFAULT_KV_BLOCK};
 pub use native::NativeBackend;
+
+/// Backend construction knobs that are not artifact-derivable — today the
+/// native backend's GQA/window model configuration (`model.n_kv_heads`,
+/// `--window`).  Compiled-artifact backends ignore them (their shapes are
+/// baked into the manifest).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RuntimeOptions {
+    /// Native tiny GPT: KV heads (None = equal to n_head; 1 = MQA).
+    pub n_kv_heads: Option<usize>,
+    /// Native tiny GPT: sliding attention window (None = full causal).
+    pub window: Option<usize>,
+}
 
 use crate::util::tensorio::{DType, HostTensor};
 
@@ -134,11 +146,27 @@ impl Runtime {
     /// Build a runtime on an explicit backend.  `Native` synthesizes its
     /// manifest in memory, so nothing needs to exist at `artifact_dir`.
     pub fn with_backend(artifact_dir: &Path, kind: BackendKind) -> Result<Runtime> {
-        let manifest = match kind {
-            BackendKind::Native => native::synth_manifest(artifact_dir),
-            _ => Manifest::load(artifact_dir)?,
+        Self::with_backend_opts(artifact_dir, kind, RuntimeOptions::default())
+    }
+
+    /// [`with_backend`](Self::with_backend) plus [`RuntimeOptions`]: for
+    /// the native backend, the GQA/window overrides shape the synthesized
+    /// model + manifest together so they can never disagree.
+    pub fn with_backend_opts(
+        artifact_dir: &Path,
+        kind: BackendKind,
+        opts: RuntimeOptions,
+    ) -> Result<Runtime> {
+        let (manifest, backend): (Manifest, Box<dyn backend::Backend>) = match kind {
+            BackendKind::Native => {
+                let cfg = native::GptConfig::tiny_with(opts)?;
+                (
+                    native::synth_manifest(artifact_dir, &cfg),
+                    Box::new(native::NativeBackend::with_cfg(cfg)),
+                )
+            }
+            _ => (Manifest::load(artifact_dir)?, backend::make(kind)?),
         };
-        let backend = backend::make(kind)?;
         Ok(Runtime { manifest, backend, cache: Mutex::new(HashMap::new()) })
     }
 

@@ -6,19 +6,30 @@
 //!
 //! - `tiny_init` — seeded parameter initialization for a tiny GPT
 //!   (tied-embedding, RMS-norm, GELU MLP; heads sized for `attn::exec`).
-//! - `tiny_prefill_b1` — full prompt forward; causal attention runs
-//!   through `attn::exec::parallel::forward` (Algorithm 1 on the pool),
-//!   and the per-layer K/V land in the serving cache layout.
+//!   The model is **GQA-configurable**: [`GptConfig::n_kv_head`] may be
+//!   any divisor of `n_head` (MQA at 1), and [`GptConfig::window`] turns
+//!   every layer into sliding-window attention — both flow into the
+//!   kernels as one [`AttnSpec`], never as special-cased entry points.
+//! - `tiny_prefill_b1` — full prompt forward; attention runs through
+//!   `attn::exec::parallel::forward_spec` (Algorithm 1 on the pool) under
+//!   the model's head map + mask, with tiles chosen by `attn::autotune`
+//!   (the exec engine and the cost model agree on tiling), and the
+//!   per-layer K/V land in the serving cache layout.
 //! - `tiny_decode_b1` / `tiny_decode_b4` — one-token steps over the KV
-//!   cache via the split-KV decode path (`parallel::decode_splitkv`, the
-//!   flash-decoding reduction through `attn::combine`).
-//! - `native_attn_*` — bare attention kernels whose golden vectors are
-//!   synthesized from `attn::exec::reference`, so `repro verify --backend
-//!   native` checks flash-vs-reference parity end to end through the
+//!   cache via the split-KV decode path
+//!   (`parallel::decode_splitkv_spec`, the flash-decoding reduction
+//!   through `attn::combine`), reading either the legacy batch cache
+//!   tensor or — on the serving hot path — the paged arena **in place**
+//!   through the same [`KvLayout`] seam, with identical chunk boundaries
+//!   so the two are bit-identical.
+//! - `native_attn_*` — bare attention kernels (equal-head, GQA, MQA and
+//!   sliding-window variants) whose golden vectors are synthesized from
+//!   `attn::exec::reference`, so `repro verify --backend native` checks
+//!   flash-vs-reference parity on every spec axis end to end through the
 //!   runtime with no files on disk.
 //!
-//! Input/output specs match what `coordinator::server` already exchanges
-//! with the AOT artifacts, so the serving path is backend-agnostic.
+//! Input/output specs match what the engine already exchanges with the
+//! AOT artifacts, so the serving path is backend-agnostic.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -27,27 +38,37 @@ use std::time::Instant;
 use crate::bail;
 use crate::util::error::Result;
 
-use crate::attn::exec::{parallel, reference, AttnDims, FlashParams};
+use crate::attn::exec::{parallel, reference, FlashParams};
+use crate::attn::spec::{AttnSpec, HeadMap, KvLayout, Mask};
+use crate::attn::Pass;
 use crate::runtime::artifact::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};
 use crate::runtime::backend::{Backend, ExecTiming, GoldenCase, Module};
-use crate::runtime::kv::KvBatchView;
+use crate::runtime::kv::{KvBatchView, PagedKvMut, DEFAULT_KV_BLOCK};
+use crate::runtime::RuntimeOptions;
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::tensorio::{DType, HostTensor};
 
-/// KV rows per split-KV chunk in the decode hot loop.
-const DECODE_CHUNK: usize = 64;
+/// KV rows per split-KV chunk when decoding over the legacy batch cache
+/// tensor.  MUST equal [`DEFAULT_KV_BLOCK`]: the paged path chunks at
+/// block boundaries, and equal chunk boundaries are what make paged and
+/// batch-tensor decode bit-identical.
+const DECODE_CHUNK: usize = DEFAULT_KV_BLOCK;
 
 /// Shape of the tiny native serving model.
 #[derive(Debug, Clone, Copy)]
 pub struct GptConfig {
     pub n_layer: usize,
     pub n_head: usize,
+    /// KV heads (GQA when < `n_head`, MQA at 1; must divide `n_head`).
+    pub n_kv_head: usize,
     pub d_model: usize,
     pub vocab: usize,
     pub max_seq: usize,
     pub prompt_len: usize,
+    /// Sliding attention window (None = full causal).
+    pub window: Option<usize>,
 }
 
 impl GptConfig {
@@ -55,30 +76,62 @@ impl GptConfig {
         GptConfig {
             n_layer: 2,
             n_head: 4,
+            n_kv_head: 4,
             d_model: 64,
             vocab: 512,
             max_seq: 128,
             prompt_len: 16,
+            window: None,
         }
+    }
+
+    /// The tiny model with the runtime's GQA/window overrides applied.
+    pub fn tiny_with(opts: RuntimeOptions) -> Result<GptConfig> {
+        let mut cfg = GptConfig::tiny();
+        if let Some(kv) = opts.n_kv_heads {
+            cfg.n_kv_head = kv;
+        }
+        cfg.window = opts.window;
+        cfg.heads().validate()?;
+        cfg.mask().validate()?;
+        Ok(cfg)
     }
 
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_head
     }
 
+    /// The model's head map (grouped-query broadcast).
+    pub fn heads(&self) -> HeadMap {
+        HeadMap { n_q_heads: self.n_head, n_kv_heads: self.n_kv_head }
+    }
+
+    /// The model's mask: sliding window when configured, else causal.
+    pub fn mask(&self) -> Mask {
+        match self.window {
+            Some(w) => Mask::SlidingWindow(w),
+            None => Mask::Causal,
+        }
+    }
+
+    /// Columns of the fused QKV projection: d (Q) + 2 · n_kv_head · dh.
+    fn qkv_cols(&self) -> usize {
+        self.d_model + 2 * self.n_kv_head * self.d_head()
+    }
+
     fn n_params(&self) -> usize {
         2 + 4 * self.n_layer
     }
 
-    /// Serving cache dims (L, B, H, S, dh) — the layout the coordinator
-    /// assembles and scatters.
+    /// Serving cache dims (L, B, H_kv, S, dh) — the layout the compat
+    /// path assembles and scatters.
     fn cache_dims(&self, batch: usize) -> Vec<usize> {
-        vec![self.n_layer, batch, self.n_head, self.max_seq, self.d_head()]
+        vec![self.n_layer, batch, self.n_kv_head, self.max_seq, self.d_head()]
     }
 
     /// Flat offset of cache row (l, b, h, s) under batch size `batch`.
     fn cache_offset(&self, batch: usize, l: usize, b: usize, h: usize, s: usize) -> usize {
-        (((l * batch + b) * self.n_head + h) * self.max_seq + s) * self.d_head()
+        (((l * batch + b) * self.n_kv_head + h) * self.max_seq + s) * self.d_head()
     }
 }
 
@@ -91,7 +144,7 @@ fn param_specs(cfg: &GptConfig) -> Vec<TensorSpec> {
         f32_spec("wpe".into(), vec![cfg.max_seq, d]),
     ];
     for l in 0..cfg.n_layer {
-        specs.push(f32_spec(format!("l{l}_wqkv"), vec![d, 3 * d]));
+        specs.push(f32_spec(format!("l{l}_wqkv"), vec![d, cfg.qkv_cols()]));
         specs.push(f32_spec(format!("l{l}_wo"), vec![d, d]));
         specs.push(f32_spec(format!("l{l}_wmlp1"), vec![d, 4 * d]));
         specs.push(f32_spec(format!("l{l}_wmlp2"), vec![4 * d, d]));
@@ -249,6 +302,8 @@ impl Module for InitModule {
 
 struct PrefillModule {
     cfg: GptConfig,
+    /// Tile sizes from `attn::autotune` for the prompt-sized problem.
+    tile: FlashParams,
 }
 
 impl Module for PrefillModule {
@@ -257,7 +312,8 @@ impl Module for PrefillModule {
         let cfg = &self.cfg;
         let params = Params::parse(cfg, inputs);
         let tokens = inputs[cfg.n_params()].to_i32_vec();
-        let (d, dh, hn, p_len) = (cfg.d_model, cfg.d_head(), cfg.n_head, cfg.prompt_len);
+        let (d, dh, hn, kvn, p_len) =
+            (cfg.d_model, cfg.d_head(), cfg.n_head, cfg.n_kv_head, cfg.prompt_len);
 
         // embed the prompt
         let mut x = vec![0.0f32; p_len * d];
@@ -269,33 +325,46 @@ impl Module for PrefillModule {
         let cache_len: usize = cfg.cache_dims(1).iter().product();
         let mut kc = vec![0.0f32; cache_len];
         let mut vc = vec![0.0f32; cache_len];
-        let adims = AttnDims { batch: 1, heads: hn, seq: p_len, head_dim: dh, causal: true };
+        let spec = AttnSpec {
+            batch: 1,
+            heads: cfg.heads(),
+            seq: p_len,
+            head_dim: dh,
+            mask: cfg.mask(),
+        };
+        let qd = spec.q_dims();
+        let kd = spec.kv_dims();
 
         for l in 0..cfg.n_layer {
             let xn = rmsnorm(&x, d);
-            let qkv = matmul(&xn, params.wqkv(l), p_len, d, 3 * d);
-            // repack (row, 3·d) into three (1, H, P, dh) tensors
-            let mut qb = vec![0.0f32; adims.elems()];
-            let mut kb = vec![0.0f32; adims.elems()];
-            let mut vb = vec![0.0f32; adims.elems()];
+            let qkv = matmul(&xn, params.wqkv(l), p_len, d, cfg.qkv_cols());
+            // repack (row, qkv_cols) into (1, Hq, P, dh) Q and
+            // (1, Hkv, P, dh) K/V tensors
+            let mut qb = vec![0.0f32; spec.q_elems()];
+            let mut kb = vec![0.0f32; spec.kv_elems()];
+            let mut vb = vec![0.0f32; spec.kv_elems()];
             for i in 0..p_len {
-                let src = i * 3 * d;
+                let src = i * cfg.qkv_cols();
                 for h in 0..hn {
-                    let ro = adims.row_offset(0, h, i);
-                    for t in 0..dh {
-                        qb[ro + t] = qkv[src + h * dh + t];
-                        kb[ro + t] = qkv[src + d + h * dh + t];
-                        vb[ro + t] = qkv[src + 2 * d + h * dh + t];
-                    }
+                    let ro = qd.row_offset(0, h, i);
+                    qb[ro..ro + dh].copy_from_slice(&qkv[src + h * dh..src + (h + 1) * dh]);
+                }
+                for g in 0..kvn {
+                    let ro = kd.row_offset(0, g, i);
+                    let ks = src + d + g * dh;
+                    let vs = src + d + kvn * dh + g * dh;
+                    kb[ro..ro + dh].copy_from_slice(&qkv[ks..ks + dh]);
+                    vb[ro..ro + dh].copy_from_slice(&qkv[vs..vs + dh]);
                 }
             }
-            // Algorithm 1 on the pool (prompt rows fan as Q-blocks)
-            let out = parallel::forward(&qb, &kb, &vb, adims, FlashParams::default());
-            // K/V into the serving cache layout (l, 0, h, s, ·)
-            for h in 0..hn {
+            // Algorithm 1 on the pool (prompt rows fan as Q-blocks),
+            // tiles from the autotuner
+            let out = parallel::forward_spec(&qb, &kb, &vb, spec, self.tile);
+            // K/V into the serving cache layout (l, 0, g, s, ·)
+            for g in 0..kvn {
                 for s in 0..p_len {
-                    let dst = cfg.cache_offset(1, l, 0, h, s);
-                    let src = adims.row_offset(0, h, s);
+                    let dst = cfg.cache_offset(1, l, 0, g, s);
+                    let src = kd.row_offset(0, g, s);
                     kc[dst..dst + dh].copy_from_slice(&kb[src..src + dh]);
                     vc[dst..dst + dh].copy_from_slice(&vb[src..src + dh]);
                 }
@@ -304,7 +373,7 @@ impl Module for PrefillModule {
             let mut y = vec![0.0f32; p_len * d];
             for i in 0..p_len {
                 for h in 0..hn {
-                    let src = adims.row_offset(0, h, i);
+                    let src = qd.row_offset(0, h, i);
                     y[i * d + h * dh..i * d + (h + 1) * dh]
                         .copy_from_slice(&out.o[src..src + dh]);
                 }
@@ -329,13 +398,19 @@ struct DecodeModule {
     batch: usize,
 }
 
-/// Mutable access to one sequence's K/V cache rows: `kv_head(l, h)` is the
-/// (max_seq * d_head) K and V slice for layer `l`, head `h`.  Implemented
-/// over the legacy (L, B, H, S, dh) batch tensor *and* over a KV-arena slot
-/// so [`decode_row`] is the single decode kernel for both paths (which is
-/// what keeps the in-place path byte-identical to the batch-tensor path).
+/// One sequence's K/V cache behind the decode kernel: write the new row
+/// in place, then hand attention a [`KvLayout`] over any (layer, kv-head)
+/// plane.  Implemented over the legacy (L, B, H, S, dh) batch tensor
+/// *and* over a paged arena sequence so [`decode_row`] is the single
+/// decode kernel for both paths; both chunk split-KV at the same
+/// boundaries, which is what keeps the in-place paged path byte-identical
+/// to the batch-tensor path.
 trait CacheRows {
-    fn kv_head(&mut self, l: usize, h: usize) -> (&mut [f32], &mut [f32]);
+    fn write(&mut self, l: usize, h: usize, pos: usize, krow: &[f32], vrow: &[f32]);
+    fn layout(&self, l: usize, h: usize) -> KvLayout<'_>;
+    /// Split-KV chunk size (token rows) — equal across impls for
+    /// bit-identical decode.
+    fn chunk_tokens(&self) -> usize;
 }
 
 /// Row `b` of a (L, B, H, S, dh) batch cache tensor pair.
@@ -348,25 +423,40 @@ struct BatchRows<'a> {
 }
 
 impl CacheRows for BatchRows<'_> {
-    fn kv_head(&mut self, l: usize, h: usize) -> (&mut [f32], &mut [f32]) {
+    fn write(&mut self, l: usize, h: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        let dh = self.cfg.d_head();
+        let at = self.cfg.cache_offset(self.batch, l, self.b, h, pos);
+        self.kc[at..at + dh].copy_from_slice(krow);
+        self.vc[at..at + dh].copy_from_slice(vrow);
+    }
+
+    fn layout(&self, l: usize, h: usize) -> KvLayout<'_> {
         let sdh = self.cfg.max_seq * self.cfg.d_head();
         let off = self.cfg.cache_offset(self.batch, l, self.b, h, 0);
-        (&mut self.kc[off..off + sdh], &mut self.vc[off..off + sdh])
+        KvLayout::Contiguous { k: &self.kc[off..off + sdh], v: &self.vc[off..off + sdh] }
+    }
+
+    fn chunk_tokens(&self) -> usize {
+        DECODE_CHUNK
     }
 }
 
-/// One KV-arena slot: the (L, 1, H, S, dh) single-sequence slab pair.
-struct SlotRows<'a> {
-    cfg: &'a GptConfig,
-    k: &'a mut [f32],
-    v: &'a mut [f32],
+/// One paged arena sequence (the serving hot path).
+struct PagedRows<'a> {
+    inner: PagedKvMut<'a>,
 }
 
-impl CacheRows for SlotRows<'_> {
-    fn kv_head(&mut self, l: usize, h: usize) -> (&mut [f32], &mut [f32]) {
-        let sdh = self.cfg.max_seq * self.cfg.d_head();
-        let off = self.cfg.cache_offset(1, l, 0, h, 0);
-        (&mut self.k[off..off + sdh], &mut self.v[off..off + sdh])
+impl CacheRows for PagedRows<'_> {
+    fn write(&mut self, l: usize, h: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        self.inner.write_row(l, h, pos, krow, vrow);
+    }
+
+    fn layout(&self, l: usize, h: usize) -> KvLayout<'_> {
+        self.inner.layout(l, h)
+    }
+
+    fn chunk_tokens(&self) -> usize {
+        self.inner.geo.block_tokens
     }
 }
 
@@ -378,36 +468,39 @@ fn decode_row(
     pos: usize,
     cache: &mut dyn CacheRows,
 ) -> Result<Vec<f32>> {
-    let (d, dh, hn) = (cfg.d_model, cfg.d_head(), cfg.n_head);
+    let (d, dh, hn, kvn) = (cfg.d_model, cfg.d_head(), cfg.n_head, cfg.n_kv_head);
     if pos >= cfg.max_seq {
         bail!("decode position {pos} exceeds max_seq {}", cfg.max_seq);
     }
     let tok = check_token(cfg, tok)?;
     let scale = 1.0 / (dh as f32).sqrt();
+    let group = hn / kvn;
+    // the history rows this token attends to: causal up to pos, clipped
+    // to the sliding window — out-of-window blocks are never read
+    let hi = pos + 1;
+    let lo = match cfg.window {
+        Some(w) => hi.saturating_sub(w),
+        None => 0,
+    };
     let mut x = embed(cfg, params, tok, pos);
     for l in 0..cfg.n_layer {
         let xn = rmsnorm(&x, d);
-        let qkv = matmul(&xn, params.wqkv(l), 1, d, 3 * d);
-        // per head: append this token's K/V at `pos`, then split-KV
-        // attention over the 0..=pos history (each head reads only its own
-        // rows, so this order matches the old write-all-then-attend loop
-        // bit for bit)
+        let qkv = matmul(&xn, params.wqkv(l), 1, d, cfg.qkv_cols());
+        // append this token's K/V per KV head, then split-KV attention
+        // per query head over its group's plane (each plane is written
+        // before any head reads it, so the order matches the old
+        // write-then-attend loop bit for bit)
+        for g in 0..kvn {
+            let ks = d + g * dh;
+            let vs = d + kvn * dh + g * dh;
+            cache.write(l, g, pos, &qkv[ks..ks + dh], &qkv[vs..vs + dh]);
+        }
         let mut y = vec![0.0f32; d];
+        let chunk = cache.chunk_tokens();
         for h in 0..hn {
-            let (kh, vh) = cache.kv_head(l, h);
-            kh[pos * dh..(pos + 1) * dh]
-                .copy_from_slice(&qkv[d + h * dh..d + (h + 1) * dh]);
-            vh[pos * dh..(pos + 1) * dh]
-                .copy_from_slice(&qkv[2 * d + h * dh..2 * d + (h + 1) * dh]);
+            let lay = cache.layout(l, h / group);
             let qh = &qkv[h * dh..(h + 1) * dh];
-            let (oh, _lse) = parallel::decode_splitkv(
-                qh,
-                &kh[..(pos + 1) * dh],
-                &vh[..(pos + 1) * dh],
-                pos + 1,
-                scale,
-                DECODE_CHUNK,
-            );
+            let (oh, _lse) = parallel::decode_splitkv_spec(qh, &lay, lo, hi, scale, chunk);
             y[h * dh..(h + 1) * dh].copy_from_slice(&oh);
         }
         let proj = matmul(&y, params.wo(l), 1, d, d);
@@ -446,10 +539,10 @@ impl Module for DecodeModule {
         Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
     }
 
-    /// Serving hot path: decode every real row **in place** on its KV-arena
-    /// slot — no batch-tensor assemble, no scatter, zero bytes through the
-    /// arena's `CopyStats`.  Padding rows simply do not exist here, so
-    /// bucket padding costs nothing either.
+    /// Serving hot path: decode every real row **in place** on its paged
+    /// KV-arena sequence — no batch-tensor assemble, no scatter, zero
+    /// bytes through the arena's `CopyStats`.  Padding rows simply do not
+    /// exist here, so bucket padding costs nothing either.
     fn decode_step(
         &self,
         params_t: &[HostTensor],
@@ -467,10 +560,14 @@ impl Module for DecodeModule {
             );
         }
         let geo = view.geometry();
-        if geo.slot_elems() != cfg.cache_dims(1).iter().product::<usize>() {
+        if geo.n_layer != cfg.n_layer
+            || geo.n_kv_head != cfg.n_kv_head
+            || geo.max_seq != cfg.max_seq
+            || geo.d_head != cfg.d_head()
+        {
             bail!(
-                "native decode_step: arena slot geometry {geo:?} does not match \
-                 model cache dims {:?}",
+                "native decode_step: arena geometry {geo:?} does not match model \
+                 cache dims {:?}",
                 cfg.cache_dims(1)
             );
         }
@@ -480,8 +577,16 @@ impl Module for DecodeModule {
             if pos[bi] < 0 {
                 bail!("negative decode position {}", pos[bi]);
             }
-            let (k, v) = view.slot_mut(bi);
-            let mut rows = SlotRows { cfg, k, v };
+            let paged = view.paged(bi);
+            if pos[bi] as usize >= paged.reserved_tokens() {
+                bail!(
+                    "native decode_step: position {} is beyond the sequence's \
+                     block reservation of {} tokens (admission under-reserved)",
+                    pos[bi],
+                    paged.reserved_tokens()
+                );
+            }
+            let mut rows = PagedRows { inner: paged };
             let row = decode_row(cfg, &params, tok[bi], pos[bi] as usize, &mut rows)?;
             logits[bi * cfg.vocab..(bi + 1) * cfg.vocab].copy_from_slice(&row);
         }
@@ -491,18 +596,19 @@ impl Module for DecodeModule {
 
 /// Bare flash attention forward (q, k, v) → (o, lse).
 struct AttnFwdModule {
-    dims: AttnDims,
+    spec: AttnSpec,
+    tile: FlashParams,
 }
 
 impl Module for AttnFwdModule {
     fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
         let t0 = Instant::now();
         let (q, k, v) = (inputs[0].to_f32_vec(), inputs[1].to_f32_vec(), inputs[2].to_f32_vec());
-        let out = parallel::forward(&q, &k, &v, self.dims, FlashParams::default());
-        let d = self.dims;
+        let out = parallel::forward_spec(&q, &k, &v, self.spec, self.tile);
+        let s = self.spec;
         let outputs = vec![
-            HostTensor::from_f32(&[d.batch, d.heads, d.seq, d.head_dim], &out.o),
-            HostTensor::from_f32(&[d.batch, d.heads, d.seq], &out.lse),
+            HostTensor::from_f32(&[s.batch, s.heads.n_q_heads, s.seq, s.head_dim], &out.o),
+            HostTensor::from_f32(&[s.batch, s.heads.n_q_heads, s.seq], &out.lse),
         ];
         Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
     }
@@ -510,7 +616,8 @@ impl Module for AttnFwdModule {
 
 /// Bare flash attention backward (q, k, v, do) → (dq, dk, dv).
 struct AttnBwdModule {
-    dims: AttnDims,
+    spec: AttnSpec,
+    tile: FlashParams,
 }
 
 impl Module for AttnBwdModule {
@@ -522,15 +629,15 @@ impl Module for AttnBwdModule {
             inputs[2].to_f32_vec(),
             inputs[3].to_f32_vec(),
         );
-        let p = FlashParams::default();
-        let fwd = parallel::forward(&q, &k, &v, self.dims, p);
-        let g = parallel::backward(&q, &k, &v, &fwd, &dout, self.dims, p);
-        let d = self.dims;
-        let tdims = [d.batch, d.heads, d.seq, d.head_dim];
+        let fwd = parallel::forward_spec(&q, &k, &v, self.spec, self.tile);
+        let g = parallel::backward_spec(&q, &k, &v, &fwd, &dout, self.spec, self.tile);
+        let s = self.spec;
+        let qdims = [s.batch, s.heads.n_q_heads, s.seq, s.head_dim];
+        let kdims = [s.batch, s.heads.n_kv_heads, s.seq, s.head_dim];
         let outputs = vec![
-            HostTensor::from_f32(&tdims, &g.dq),
-            HostTensor::from_f32(&tdims, &g.dk),
-            HostTensor::from_f32(&tdims, &g.dv),
+            HostTensor::from_f32(&qdims, &g.dq),
+            HostTensor::from_f32(&kdims, &g.dk),
+            HostTensor::from_f32(&kdims, &g.dv),
         ];
         Ok((outputs, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
     }
@@ -548,6 +655,12 @@ impl NativeBackend {
     pub fn new() -> NativeBackend {
         NativeBackend { cfg: GptConfig::tiny() }
     }
+
+    /// A backend serving an explicit (GQA/window-configured) tiny model —
+    /// pair it with `synth_manifest` over the same config.
+    pub fn with_cfg(cfg: GptConfig) -> NativeBackend {
+        NativeBackend { cfg }
+    }
 }
 
 impl Default for NativeBackend {
@@ -556,20 +669,46 @@ impl Default for NativeBackend {
     }
 }
 
-fn attn_dims_from(spec: &ArtifactSpec) -> Result<AttnDims> {
-    let Some(first) = spec.inputs.first() else {
+/// Parse a bare-attention artifact's spec: Q is `inputs[0]`
+/// (b, n_q, n, d), K is `inputs[1]` (b, n_kv, n, d); the mask comes from
+/// `meta.window` / `meta.causal`.
+fn attn_spec_from(spec: &ArtifactSpec) -> Result<AttnSpec> {
+    let Some(q) = spec.inputs.first() else {
         bail!("{}: attention artifact has no inputs", spec.name);
     };
-    if first.dims.len() != 4 {
-        bail!("{}: expected rank-4 (b, h, n, d) input, got {:?}", spec.name, first.dims);
+    let Some(k) = spec.inputs.get(1) else {
+        bail!("{}: attention artifact has no K input", spec.name);
+    };
+    if q.dims.len() != 4 || k.dims.len() != 4 {
+        bail!(
+            "{}: expected rank-4 (b, h, n, d) q/k inputs, got {:?} / {:?}",
+            spec.name,
+            q.dims,
+            k.dims
+        );
     }
-    Ok(AttnDims {
-        batch: first.dims[0],
-        heads: first.dims[1],
-        seq: first.dims[2],
-        head_dim: first.dims[3],
-        causal: spec.meta_bool("causal").unwrap_or(false),
-    })
+    if q.dims[0] != k.dims[0] || q.dims[2] != k.dims[2] || q.dims[3] != k.dims[3] {
+        bail!("{}: q/k shapes disagree beyond heads: {:?} vs {:?}", spec.name, q.dims, k.dims);
+    }
+    let mask = match spec.meta_i64("window") {
+        Some(w) if w > 0 => Mask::SlidingWindow(w as usize),
+        _ => {
+            if spec.meta_bool("causal").unwrap_or(false) {
+                Mask::Causal
+            } else {
+                Mask::Full
+            }
+        }
+    };
+    let out = AttnSpec {
+        batch: q.dims[0],
+        heads: HeadMap { n_q_heads: q.dims[1], n_kv_heads: k.dims[1] },
+        seq: q.dims[2],
+        head_dim: q.dims[3],
+        mask,
+    };
+    out.validate()?;
+    Ok(out)
 }
 
 impl Backend for NativeBackend {
@@ -580,16 +719,32 @@ impl Backend for NativeBackend {
     fn load(&self, spec: &ArtifactSpec) -> Result<Box<dyn Module>> {
         match spec.kind {
             ArtifactKind::Init => Ok(Box::new(InitModule { cfg: self.cfg })),
-            ArtifactKind::Prefill => Ok(Box::new(PrefillModule { cfg: self.cfg })),
+            ArtifactKind::Prefill => {
+                let cfg = self.cfg;
+                let dims = AttnSpec {
+                    batch: 1,
+                    heads: cfg.heads(),
+                    seq: cfg.prompt_len,
+                    head_dim: cfg.d_head(),
+                    mask: cfg.mask(),
+                }
+                .q_dims();
+                let tile = FlashParams::tuned(dims, Pass::Fwd);
+                Ok(Box::new(PrefillModule { cfg, tile }))
+            }
             ArtifactKind::Decode => {
                 let batch = spec.meta_i64("batch").unwrap_or(1) as usize;
                 Ok(Box::new(DecodeModule { cfg: self.cfg, batch }))
             }
             ArtifactKind::AttnFwd => {
-                Ok(Box::new(AttnFwdModule { dims: attn_dims_from(spec)? }))
+                let aspec = attn_spec_from(spec)?;
+                let tile = FlashParams::tuned(aspec.q_dims(), Pass::Fwd);
+                Ok(Box::new(AttnFwdModule { spec: aspec, tile }))
             }
             ArtifactKind::AttnGrad => {
-                Ok(Box::new(AttnBwdModule { dims: attn_dims_from(spec)? }))
+                let aspec = attn_spec_from(spec)?;
+                let tile = FlashParams::tuned(aspec.q_dims(), Pass::FwdBwd);
+                Ok(Box::new(AttnBwdModule { spec: aspec, tile }))
             }
             ArtifactKind::TrainStep | ArtifactKind::Other => bail!(
                 "{}: the native backend does not implement artifact kind {:?}",
@@ -607,42 +762,52 @@ impl Backend for NativeBackend {
         if !self.provides_golden(spec) {
             return Ok(None);
         }
-        let dims = attn_dims_from(spec)?;
+        let aspec = attn_spec_from(spec)?;
         let seed = spec.meta_i64("seed").unwrap_or(1) as u64;
         let mut rng = Rng::seed_from(seed);
-        let n = dims.elems();
-        let mut draw = || -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
-        let tdims = [dims.batch, dims.heads, dims.seq, dims.head_dim];
+        let mut draw = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32).collect()
+        };
+        let qdims = [aspec.batch, aspec.heads.n_q_heads, aspec.seq, aspec.head_dim];
+        let kdims = [aspec.batch, aspec.heads.n_kv_heads, aspec.seq, aspec.head_dim];
         let case = match spec.kind {
             ArtifactKind::AttnFwd => {
-                let (q, k, v) = (draw(), draw(), draw());
-                let r = reference::forward(&q, &k, &v, dims);
+                let q = draw(aspec.q_elems());
+                let k = draw(aspec.kv_elems());
+                let v = draw(aspec.kv_elems());
+                let r = reference::forward_spec(&q, &k, &v, aspec);
                 GoldenCase {
                     inputs: vec![
-                        HostTensor::from_f32(&tdims, &q),
-                        HostTensor::from_f32(&tdims, &k),
-                        HostTensor::from_f32(&tdims, &v),
+                        HostTensor::from_f32(&qdims, &q),
+                        HostTensor::from_f32(&kdims, &k),
+                        HostTensor::from_f32(&kdims, &v),
                     ],
                     outputs: vec![
-                        HostTensor::from_f32(&tdims, &r.o),
-                        HostTensor::from_f32(&[dims.batch, dims.heads, dims.seq], &r.lse),
+                        HostTensor::from_f32(&qdims, &r.o),
+                        HostTensor::from_f32(
+                            &[aspec.batch, aspec.heads.n_q_heads, aspec.seq],
+                            &r.lse,
+                        ),
                     ],
                 }
             }
             ArtifactKind::AttnGrad => {
-                let (q, k, v, dout) = (draw(), draw(), draw(), draw());
-                let r = reference::backward(&q, &k, &v, &dout, dims);
+                let q = draw(aspec.q_elems());
+                let k = draw(aspec.kv_elems());
+                let v = draw(aspec.kv_elems());
+                let dout = draw(aspec.q_elems());
+                let r = reference::backward_spec(&q, &k, &v, &dout, aspec);
                 GoldenCase {
                     inputs: vec![
-                        HostTensor::from_f32(&tdims, &q),
-                        HostTensor::from_f32(&tdims, &k),
-                        HostTensor::from_f32(&tdims, &v),
-                        HostTensor::from_f32(&tdims, &dout),
+                        HostTensor::from_f32(&qdims, &q),
+                        HostTensor::from_f32(&kdims, &k),
+                        HostTensor::from_f32(&kdims, &v),
+                        HostTensor::from_f32(&qdims, &dout),
                     ],
                     outputs: vec![
-                        HostTensor::from_f32(&tdims, &r.dq),
-                        HostTensor::from_f32(&tdims, &r.dk),
-                        HostTensor::from_f32(&tdims, &r.dv),
+                        HostTensor::from_f32(&qdims, &r.dq),
+                        HostTensor::from_f32(&kdims, &r.dk),
+                        HostTensor::from_f32(&kdims, &r.dv),
                     ],
                 }
             }
@@ -660,27 +825,31 @@ fn num(n: usize) -> Json {
     Json::Num(n as f64)
 }
 
-/// The in-memory manifest the native backend serves: the tiny GPT artifact
-/// set plus self-verifying attention kernels.  `dir` is only recorded for
-/// display — nothing is read from disk.
-pub fn synth_manifest(dir: &Path) -> Manifest {
-    let cfg = GptConfig::tiny();
-    let params = param_specs(&cfg);
+/// The in-memory manifest the native backend serves for `cfg`: the tiny
+/// GPT artifact set plus self-verifying attention kernels covering every
+/// `AttnSpec` axis.  `dir` is only recorded for display — nothing is read
+/// from disk.
+pub fn synth_manifest(dir: &Path, cfg: &GptConfig) -> Manifest {
+    let params = param_specs(cfg);
     let f32_spec = |name: &str, dims: Vec<usize>| TensorSpec {
         name: name.to_string(),
         dims,
         dtype: DType::F32,
     };
-    let model_meta = meta_obj(&[
+    let mut model_pairs = vec![
         ("model", Json::Str("tiny".into())),
         ("n_layer", num(cfg.n_layer)),
         ("n_head", num(cfg.n_head)),
-        ("n_kv_head", num(cfg.n_head)),
+        ("n_kv_head", num(cfg.n_kv_head)),
         ("d_model", num(cfg.d_model)),
         ("max_seq", num(cfg.max_seq)),
         ("vocab_size", num(cfg.vocab)),
         ("prompt_len", num(cfg.prompt_len)),
-    ]);
+    ];
+    if let Some(w) = cfg.window {
+        model_pairs.push(("window", num(w)));
+    }
+    let model_meta = meta_obj(&model_pairs);
     let mut specs: Vec<ArtifactSpec> = Vec::new();
 
     specs.push(ArtifactSpec {
@@ -764,28 +933,46 @@ pub fn synth_manifest(dir: &Path) -> Manifest {
     });
 
     // self-verifying attention kernels (golden = attn::exec::reference)
-    let attn_cases: [(&str, ArtifactKind, usize, usize, usize, usize, bool, usize); 3] = [
-        ("native_attn_fwd_full_b2h2n48d32", ArtifactKind::AttnFwd, 2, 2, 48, 32, false, 11),
-        ("native_attn_fwd_causal_b2h2n40d32", ArtifactKind::AttnFwd, 2, 2, 40, 32, true, 12),
-        ("native_attn_grad_causal_b1h2n24d16", ArtifactKind::AttnGrad, 1, 2, 24, 16, true, 13),
+    // covering every spec axis: equal heads, GQA, MQA; full, causal,
+    // sliding-window.  (name, kind, b, n_q, n_kv, n, d, causal, window, seed)
+    type AttnCase = (&'static str, ArtifactKind, usize, usize, usize, usize, usize, bool, usize, usize);
+    let attn_cases: [AttnCase; 6] = [
+        ("native_attn_fwd_full_b2h2n48d32", ArtifactKind::AttnFwd, 2, 2, 2, 48, 32, false, 0, 11),
+        ("native_attn_fwd_causal_b2h2n40d32", ArtifactKind::AttnFwd, 2, 2, 2, 40, 32, true, 0, 12),
+        ("native_attn_grad_causal_b1h2n24d16", ArtifactKind::AttnGrad, 1, 2, 2, 24, 16, true, 0, 13),
+        ("native_attn_fwd_gqa4x2_causal_b2n48d32", ArtifactKind::AttnFwd, 2, 4, 2, 48, 32, true, 0, 14),
+        ("native_attn_fwd_swa_w16_b2h2n40d32", ArtifactKind::AttnFwd, 2, 2, 2, 40, 32, true, 16, 15),
+        ("native_attn_grad_mqa_swa_w8_b1n24d16", ArtifactKind::AttnGrad, 1, 4, 1, 24, 16, true, 8, 16),
     ];
-    for (name, kind, b, h, n, d, causal, seed) in attn_cases {
-        let tdims = vec![b, h, n, d];
+    for (name, kind, b, nq, nkv, n, d, causal, window, seed) in attn_cases {
+        let qdims = vec![b, nq, n, d];
+        let kdims = vec![b, nkv, n, d];
         let mut inputs = vec![
-            f32_spec("q", tdims.clone()),
-            f32_spec("k", tdims.clone()),
-            f32_spec("v", tdims.clone()),
+            f32_spec("q", qdims.clone()),
+            f32_spec("k", kdims.clone()),
+            f32_spec("v", kdims.clone()),
         ];
         let outputs = if kind == ArtifactKind::AttnFwd {
-            vec![f32_spec("o", tdims.clone()), f32_spec("lse", vec![b, h, n])]
+            vec![f32_spec("o", qdims.clone()), f32_spec("lse", vec![b, nq, n])]
         } else {
-            inputs.push(f32_spec("do", tdims.clone()));
+            inputs.push(f32_spec("do", qdims.clone()));
             vec![
-                f32_spec("dq", tdims.clone()),
-                f32_spec("dk", tdims.clone()),
-                f32_spec("dv", tdims.clone()),
+                f32_spec("dq", qdims.clone()),
+                f32_spec("dk", kdims.clone()),
+                f32_spec("dv", kdims.clone()),
             ]
         };
+        let mut meta_pairs = vec![
+            ("seqlen", num(n)),
+            ("head_dim", num(d)),
+            ("n_kv_head", num(nkv)),
+            ("causal", Json::Bool(causal)),
+            ("seed", num(seed)),
+            ("impl", Json::Str("attn_exec".into())),
+        ];
+        if window > 0 {
+            meta_pairs.push(("window", num(window)));
+        }
         specs.push(ArtifactSpec {
             name: name.to_string(),
             kind,
@@ -793,13 +980,7 @@ pub fn synth_manifest(dir: &Path) -> Manifest {
             golden_path: None,
             inputs,
             outputs,
-            meta: meta_obj(&[
-                ("seqlen", num(n)),
-                ("head_dim", num(d)),
-                ("causal", Json::Bool(causal)),
-                ("seed", num(seed)),
-                ("impl", Json::Str("attn_exec".into())),
-            ]),
+            meta: meta_obj(&meta_pairs),
         });
     }
 
@@ -813,9 +994,20 @@ pub fn synth_manifest(dir: &Path) -> Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::kv::{KvArena, KvGeometry, KvSlot};
 
     fn manifest() -> Manifest {
-        synth_manifest(Path::new("unused"))
+        synth_manifest(Path::new("unused"), &GptConfig::tiny())
+    }
+
+    fn tiny_geo(cfg: &GptConfig) -> KvGeometry {
+        KvGeometry {
+            n_layer: cfg.n_layer,
+            n_kv_head: cfg.n_kv_head,
+            max_seq: cfg.max_seq,
+            d_head: cfg.d_head(),
+            block_tokens: DECODE_CHUNK,
+        }
     }
 
     #[test]
@@ -824,8 +1016,8 @@ mod tests {
         for name in ["tiny_init", "tiny_prefill_b1", "tiny_decode_b1", "tiny_decode_b4"] {
             assert!(m.artifacts.contains_key(name), "missing {name}");
         }
-        assert_eq!(m.by_kind(ArtifactKind::AttnFwd).len(), 2);
-        assert_eq!(m.by_kind(ArtifactKind::AttnGrad).len(), 1);
+        assert_eq!(m.by_kind(ArtifactKind::AttnFwd).len(), 4);
+        assert_eq!(m.by_kind(ArtifactKind::AttnGrad).len(), 2);
         let pre = m.get("tiny_prefill_b1").unwrap();
         for key in
             ["n_layer", "n_kv_head", "max_seq", "d_model", "n_head", "vocab_size", "prompt_len"]
@@ -839,6 +1031,51 @@ mod tests {
             .load(m.get("tiny_train_step").unwrap())
             .unwrap_err();
         assert!(format!("{err}").contains("does not implement"), "{err}");
+    }
+
+    #[test]
+    fn gqa_window_config_flows_into_manifest_and_specs() {
+        let cfg = GptConfig::tiny_with(RuntimeOptions {
+            n_kv_heads: Some(2),
+            window: Some(32),
+        })
+        .unwrap();
+        assert_eq!(cfg.heads(), HeadMap { n_q_heads: 4, n_kv_heads: 2 });
+        assert_eq!(cfg.mask(), Mask::SlidingWindow(32));
+        assert_eq!(cfg.qkv_cols(), 64 + 2 * 2 * 16);
+        let m = synth_manifest(Path::new("unused"), &cfg);
+        let pre = m.get("tiny_prefill_b1").unwrap();
+        assert_eq!(pre.meta_i64("n_kv_head"), Some(2));
+        assert_eq!(pre.meta_i64("window"), Some(32));
+        // cache tensors shrink with the KV head count
+        assert_eq!(pre.outputs[1].dims, vec![2, 1, 2, 128, 16]);
+        // invalid head maps are typed errors
+        assert!(GptConfig::tiny_with(RuntimeOptions {
+            n_kv_heads: Some(3),
+            window: None,
+        })
+        .is_err());
+        assert!(GptConfig::tiny_with(RuntimeOptions {
+            n_kv_heads: None,
+            window: Some(0),
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn attn_spec_from_reads_heads_and_masks() {
+        let m = manifest();
+        let s = attn_spec_from(m.get("native_attn_fwd_gqa4x2_causal_b2n48d32").unwrap())
+            .unwrap();
+        assert_eq!(s.heads, HeadMap { n_q_heads: 4, n_kv_heads: 2 });
+        assert_eq!(s.mask, Mask::Causal);
+        let s = attn_spec_from(m.get("native_attn_fwd_swa_w16_b2h2n40d32").unwrap()).unwrap();
+        assert_eq!(s.mask, Mask::SlidingWindow(16));
+        let s = attn_spec_from(m.get("native_attn_grad_mqa_swa_w8_b1n24d16").unwrap()).unwrap();
+        assert_eq!(s.heads, HeadMap { n_q_heads: 4, n_kv_heads: 1 });
+        assert_eq!(s.mask, Mask::SlidingWindow(8));
+        let s = attn_spec_from(m.get("native_attn_fwd_full_b2h2n48d32").unwrap()).unwrap();
+        assert_eq!(s.mask, Mask::Full);
     }
 
     #[test]
@@ -902,7 +1139,7 @@ mod tests {
         in1.push(HostTensor::from_i32(&[1], &[cfg.prompt_len as i32]));
         let (solo, _) = d1.execute(&in1).unwrap();
 
-        // replicate the row 4× (what the server's padding does)
+        // replicate the row 4× (what the compat padding does)
         let per = kc1.len();
         let mut kc4 = vec![0.0f32; 0];
         let mut vc4 = vec![0.0f32; 0];
@@ -931,94 +1168,102 @@ mod tests {
 
     #[test]
     fn in_place_decode_step_is_byte_identical_to_batch_tensor_path() {
-        // The serving acceptance bar: for 1, 2 and 3 active sequences the
-        // KV-arena in-place decode must produce bitwise-identical logits
-        // AND cache contents to the legacy assemble/execute/scatter path,
+        // The serving acceptance bar, on BOTH the classic MHA model and a
+        // GQA + sliding-window one: for 1, 2 and 3 active sequences the
+        // paged in-place decode must produce bitwise-identical logits AND
+        // cache contents to the legacy assemble/execute/scatter path,
         // while moving zero assemble/scatter bytes.
-        use crate::runtime::kv::{KvArena, KvSlot};
+        let configs = [
+            GptConfig::tiny(),
+            GptConfig::tiny_with(RuntimeOptions { n_kv_heads: Some(2), window: Some(24) })
+                .unwrap(),
+        ];
+        for cfg in configs {
+            let be = NativeBackend::with_cfg(cfg);
+            let m = synth_manifest(Path::new("unused"), &cfg);
+            let init = be.load(m.get("tiny_init").unwrap()).unwrap();
+            let prefill = be.load(m.get("tiny_prefill_b1").unwrap()).unwrap();
+            let (params, _) = init.execute(&[HostTensor::scalar_u32(0)]).unwrap();
 
-        let be = NativeBackend::new();
-        let m = manifest();
-        let cfg = GptConfig::tiny();
-        let init = be.load(m.get("tiny_init").unwrap()).unwrap();
-        let prefill = be.load(m.get("tiny_prefill_b1").unwrap()).unwrap();
-        let (params, _) = init.execute(&[HostTensor::scalar_u32(0)]).unwrap();
-
-        // three distinct sequences' caches via prefill
-        let mut slabs = Vec::new();
-        for j in 0..3 {
-            let tokens: Vec<i32> = (0..cfg.prompt_len as i32).map(|t| t + 1 + j).collect();
-            let mut inputs = params.clone();
-            inputs.push(HostTensor::from_i32(&[1, cfg.prompt_len], &tokens));
-            let (pre, _) = prefill.execute(&inputs).unwrap();
-            slabs.push((pre[1].to_f32_vec(), pre[2].to_f32_vec()));
-        }
-
-        let geo = crate::runtime::kv::KvGeometry {
-            n_layer: cfg.n_layer,
-            n_kv_head: cfg.n_head,
-            max_seq: cfg.max_seq,
-            d_head: cfg.d_head(),
-        };
-        for rows in [1usize, 2, 3] {
-            let bucket = if rows == 1 { 1 } else { 4 };
-            let decode = be
-                .load(m.get(&format!("tiny_decode_b{bucket}")).unwrap())
-                .unwrap();
-            let tok: Vec<i32> = (0..rows as i32).map(|t| 7 + t).collect();
-            let pos = vec![cfg.prompt_len as i32; rows];
-
-            // path A: legacy batch-tensor exchange through the DEFAULT
-            // seam impl (gather -> execute -> scatter)
-            let mut arena_a = KvArena::new(geo);
-            let slots_a: Vec<KvSlot> = slabs[..rows]
-                .iter()
-                .map(|(k, v)| arena_a.adopt(k.clone(), v.clone()).unwrap())
-                .collect();
-            let mut view = arena_a.batch_view(&slots_a, bucket);
-            // call the compat path explicitly (gather/execute/scatter),
-            // sidestepping the native override
-            let (kt, vt) = view.gather();
-            let mut inputs = params.clone();
-            inputs.push(kt);
-            inputs.push(vt);
-            let mut tok_p = tok.clone();
-            let mut pos_p = pos.clone();
-            tok_p.resize(bucket, tok[0]);
-            pos_p.resize(bucket, pos[0]);
-            inputs.push(HostTensor::from_i32(&[bucket], &tok_p));
-            inputs.push(HostTensor::from_i32(&[bucket], &pos_p));
-            let (out, _) = decode.execute(&inputs).unwrap();
-            view.scatter(&out[1], &out[2]).unwrap();
-            let logits_a = out[0].to_f32_vec();
-            assert!(arena_a.stats().total_bytes() > 0, "compat path must account copies");
-
-            // path B: in-place decode_step on the arena
-            let mut arena_b = KvArena::new(geo);
-            let slots_b: Vec<KvSlot> = slabs[..rows]
-                .iter()
-                .map(|(k, v)| arena_b.adopt(k.clone(), v.clone()).unwrap())
-                .collect();
-            let mut view = arena_b.batch_view(&slots_b, bucket);
-            let (logits_b, _) = decode
-                .decode_step(&params, &mut view, &tok, &pos)
-                .unwrap();
-            assert_eq!(
-                arena_b.stats().total_bytes(),
-                0,
-                "native decode_step must move zero assemble/scatter bytes"
-            );
-
-            for bi in 0..rows {
-                assert_eq!(
-                    &logits_a[bi * cfg.vocab..(bi + 1) * cfg.vocab],
-                    &logits_b[bi * cfg.vocab..(bi + 1) * cfg.vocab],
-                    "rows={rows} row {bi}: logits diverged"
-                );
+            // three distinct sequences' caches via prefill
+            let mut slabs = Vec::new();
+            for j in 0..3 {
+                let tokens: Vec<i32> =
+                    (0..cfg.prompt_len as i32).map(|t| t + 1 + j).collect();
+                let mut inputs = params.clone();
+                inputs.push(HostTensor::from_i32(&[1, cfg.prompt_len], &tokens));
+                let (pre, _) = prefill.execute(&inputs).unwrap();
+                slabs.push((pre[1].to_f32_vec(), pre[2].to_f32_vec()));
             }
-            for (sa, sb) in slots_a.iter().zip(&slots_b) {
-                assert_eq!(arena_a.slot(*sa).0, arena_b.slot(*sb).0, "k cache diverged");
-                assert_eq!(arena_a.slot(*sa).1, arena_b.slot(*sb).1, "v cache diverged");
+
+            let geo = tiny_geo(&cfg);
+            for rows in [1usize, 2, 3] {
+                let bucket = if rows == 1 { 1 } else { 4 };
+                let decode = be
+                    .load(m.get(&format!("tiny_decode_b{bucket}")).unwrap())
+                    .unwrap();
+                let tok: Vec<i32> = (0..rows as i32).map(|t| 7 + t).collect();
+                let pos = vec![cfg.prompt_len as i32; rows];
+
+                // path A: legacy batch-tensor exchange through the DEFAULT
+                // seam impl (gather -> execute -> scatter)
+                let mut arena_a = KvArena::new(geo);
+                let slots_a: Vec<KvSlot> = slabs[..rows]
+                    .iter()
+                    .map(|(k, v)| arena_a.adopt(k.clone(), v.clone()).unwrap())
+                    .collect();
+                let mut view = arena_a.batch_view(&slots_a, bucket);
+                // call the compat path explicitly (gather/execute/scatter),
+                // sidestepping the native override
+                let (kt, vt) = view.gather();
+                let mut inputs = params.clone();
+                inputs.push(kt);
+                inputs.push(vt);
+                let mut tok_p = tok.clone();
+                let mut pos_p = pos.clone();
+                tok_p.resize(bucket, tok[0]);
+                pos_p.resize(bucket, pos[0]);
+                inputs.push(HostTensor::from_i32(&[bucket], &tok_p));
+                inputs.push(HostTensor::from_i32(&[bucket], &pos_p));
+                let (out, _) = decode.execute(&inputs).unwrap();
+                view.scatter(&out[1], &out[2]).unwrap();
+                let logits_a = out[0].to_f32_vec();
+                assert!(
+                    arena_a.stats().total_bytes() > 0,
+                    "compat path must account copies"
+                );
+
+                // path B: in-place paged decode_step on the arena
+                let mut arena_b = KvArena::new(geo);
+                let slots_b: Vec<KvSlot> = slabs[..rows]
+                    .iter()
+                    .map(|(k, v)| arena_b.adopt(k.clone(), v.clone()).unwrap())
+                    .collect();
+                let mut view = arena_b.batch_view(&slots_b, bucket);
+                let (logits_b, _) = decode
+                    .decode_step(&params, &mut view, &tok, &pos)
+                    .unwrap();
+                assert_eq!(
+                    arena_b.stats().total_bytes(),
+                    0,
+                    "native decode_step must move zero assemble/scatter bytes"
+                );
+
+                for bi in 0..rows {
+                    assert_eq!(
+                        &logits_a[bi * cfg.vocab..(bi + 1) * cfg.vocab],
+                        &logits_b[bi * cfg.vocab..(bi + 1) * cfg.vocab],
+                        "rows={rows} row {bi}: logits diverged (n_kv={} window={:?})",
+                        cfg.n_kv_head,
+                        cfg.window
+                    );
+                }
+                for (sa, sb) in slots_a.iter().zip(&slots_b) {
+                    let (ka, va) = arena_a.export_slab(*sa);
+                    let (kb, vb) = arena_b.export_slab(*sb);
+                    assert_eq!(ka, kb, "k cache diverged");
+                    assert_eq!(va, vb, "v cache diverged");
+                }
             }
         }
     }
@@ -1031,6 +1276,9 @@ mod tests {
             "native_attn_fwd_full_b2h2n48d32",
             "native_attn_fwd_causal_b2h2n40d32",
             "native_attn_grad_causal_b1h2n24d16",
+            "native_attn_fwd_gqa4x2_causal_b2n48d32",
+            "native_attn_fwd_swa_w16_b2h2n40d32",
+            "native_attn_grad_mqa_swa_w8_b1n24d16",
         ] {
             let spec = m.get(name).unwrap();
             assert!(be.provides_golden(spec));

@@ -1,26 +1,26 @@
-//! Integration: the training driver and the serving coordinator over real
+//! Integration: the training driver and the serving engine over real
 //! compiled artifacts, plus the native (`attn::exec`) serving path.
 //!
-//! The `Server` tests intentionally keep using the deprecated shim (one
-//! release of back-compat over `coordinator::engine::Engine`) — they pin
-//! the old API's greedy outputs; `tests/native_engine.rs` covers the new
-//! Engine/Session surface.
+//! These suites used to pin the deprecated `Server` shim's behavior; the
+//! shim is gone (it shipped its one release of back-compat), so the same
+//! serving contracts — completion in order, batch-invariant greedy
+//! decode, fire-and-forget submissions, determinism — are now asserted
+//! directly against `Engine`/`Session`.  `tests/native_engine.rs` covers
+//! the streaming/scheduling surface in depth.
 //!
 //! The artifact-backed tests require `make artifacts`
 //! (python/compile/aot.py) AND the `xla` execution backend; without
 //! either, they SKIP with a note instead of panicking, so a fresh offline
 //! checkout is green.  The `native_*` tests at the bottom run the same
-//! coordinator on `BackendKind::Native` and never skip — serving works on
-//! a fresh checkout with no artifacts at all.
-
-#![allow(deprecated)]
+//! engine on `BackendKind::Native` and never skip — serving works on a
+//! fresh checkout with no artifacts at all.
 
 mod common;
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use fa2::coordinator::server::{GenRequest, Server};
+use fa2::coordinator::engine::{Engine, SamplingParams};
 use fa2::runtime::{BackendKind, Runtime};
 use fa2::train::trainer::{TrainConfig, Trainer};
 
@@ -83,20 +83,22 @@ fn training_checkpoint_is_written_and_readable() {
 }
 
 #[test]
-fn server_completes_all_requests_in_order() {
+fn engine_completes_all_requests_in_order() {
     let Some(dir) = artifact_dir() else { return };
-    let server = Server::start(dir, "tiny").unwrap();
-    let mut rxs = Vec::new();
+    let engine = Engine::start(dir, "tiny", BackendKind::Auto).unwrap();
+    let mut sessions = Vec::new();
     for i in 0..5 {
-        rxs.push(server.submit(GenRequest { prompt: vec![i as i32 + 1; 8], n_new: 4 }).unwrap());
+        sessions.push(
+            engine.submit(vec![i as i32 + 1; 8], SamplingParams::greedy(4)).unwrap(),
+        );
     }
-    for rx in &rxs {
-        let resp = rx.recv().expect("response");
-        assert_eq!(resp.tokens.len(), 4);
-        assert!(resp.latency >= resp.ttft);
-        assert!(resp.tokens.iter().all(|&t| (0..512).contains(&t)));
+    for s in sessions {
+        let c = s.wait().expect("completion");
+        assert_eq!(c.tokens.len(), 4);
+        assert!(c.latency >= c.ttft);
+        assert!(c.tokens.iter().all(|&t| (0..512).contains(&t)));
     }
-    let metrics = server.shutdown().unwrap();
+    let metrics = engine.shutdown().unwrap();
     assert_eq!(metrics.requests(), 5);
     assert_eq!(metrics.tokens(), 20);
 }
@@ -105,54 +107,56 @@ fn server_completes_all_requests_in_order() {
 fn greedy_decode_is_batch_invariant() {
     // The same prompt must produce the same tokens whether it is served
     // alone (decode_b1) or batched with others (decode_b4, with padding) —
-    // the KV-cache assembly/scatter must not leak state across rows.
+    // the KV-cache handling must not leak state across rows.
     let Some(dir) = artifact_dir() else { return };
-    let server = Server::start(dir, "tiny").unwrap();
+    let engine = Engine::start(dir, "tiny", BackendKind::Auto).unwrap();
     let prompt: Vec<i32> = (1..=8).collect();
-    let solo = server
-        .submit(GenRequest { prompt: prompt.clone(), n_new: 6 })
+    let solo = engine
+        .submit(prompt.clone(), SamplingParams::greedy(6))
         .unwrap()
-        .recv()
+        .wait()
         .unwrap();
     // now submit 4 at once so they decode as a batch
-    let rxs: Vec<_> = (0..4)
+    let sessions: Vec<_> = (0..4)
         .map(|j| {
             let mut p = prompt.clone();
             if j > 0 {
                 p[0] = 100 + j; // make the other requests different
             }
-            server.submit(GenRequest { prompt: p, n_new: 6 }).unwrap()
+            engine.submit(p, SamplingParams::greedy(6)).unwrap()
         })
         .collect();
-    let batched: Vec<_> = rxs.iter().map(|rx| rx.recv().unwrap()).collect();
-    server.shutdown().unwrap();
+    let batched: Vec<_> = sessions.into_iter().map(|s| s.wait().unwrap()).collect();
+    engine.shutdown().unwrap();
     assert_eq!(
         solo.tokens, batched[0].tokens,
         "batching changed greedy decode output"
     );
 }
 
-fn native_server() -> Server {
+fn native_engine() -> Engine {
     // the directory is never read: the native backend synthesizes its
     // manifest in memory
-    Server::start_with(PathBuf::from("artifacts"), "tiny", BackendKind::Native)
-        .expect("native server must start with no artifacts on disk")
+    Engine::start(PathBuf::from("artifacts"), "tiny", BackendKind::Native)
+        .expect("native engine must start with no artifacts on disk")
 }
 
 #[test]
-fn native_server_answers_generate_requests() {
-    let server = native_server();
-    let mut rxs = Vec::new();
+fn native_engine_answers_generate_requests() {
+    let engine = native_engine();
+    let mut sessions = Vec::new();
     for i in 0..5 {
-        rxs.push(server.submit(GenRequest { prompt: vec![i as i32 + 1; 8], n_new: 4 }).unwrap());
+        sessions.push(
+            engine.submit(vec![i as i32 + 1; 8], SamplingParams::greedy(4)).unwrap(),
+        );
     }
-    for rx in &rxs {
-        let resp = rx.recv().expect("response");
-        assert_eq!(resp.tokens.len(), 4);
-        assert!(resp.latency >= resp.ttft);
-        assert!(resp.tokens.iter().all(|&t| (0..512).contains(&t)));
+    for s in sessions {
+        let c = s.wait().expect("completion");
+        assert_eq!(c.tokens.len(), 4);
+        assert!(c.latency >= c.ttft);
+        assert!(c.tokens.iter().all(|&t| (0..512).contains(&t)));
     }
-    let metrics = server.shutdown().unwrap();
+    let metrics = engine.shutdown().unwrap();
     assert_eq!(metrics.requests(), 5);
     assert_eq!(metrics.tokens(), 20);
 }
@@ -161,24 +165,24 @@ fn native_server_answers_generate_requests() {
 fn native_greedy_decode_is_batch_invariant() {
     // same contract as the artifact-backed test: batching with padding must
     // not change a sequence's greedy tokens
-    let server = native_server();
+    let engine = native_engine();
     let prompt: Vec<i32> = (1..=8).collect();
-    let solo = server
-        .submit(GenRequest { prompt: prompt.clone(), n_new: 6 })
+    let solo = engine
+        .submit(prompt.clone(), SamplingParams::greedy(6))
         .unwrap()
-        .recv()
+        .wait()
         .unwrap();
-    let rxs: Vec<_> = (0..4)
+    let sessions: Vec<_> = (0..4)
         .map(|j| {
             let mut p = prompt.clone();
             if j > 0 {
                 p[0] = 100 + j;
             }
-            server.submit(GenRequest { prompt: p, n_new: 6 }).unwrap()
+            engine.submit(p, SamplingParams::greedy(6)).unwrap()
         })
         .collect();
-    let batched: Vec<_> = rxs.iter().map(|rx| rx.recv().unwrap()).collect();
-    server.shutdown().unwrap();
+    let batched: Vec<_> = sessions.into_iter().map(|s| s.wait().unwrap()).collect();
+    engine.shutdown().unwrap();
     assert_eq!(
         solo.tokens, batched[0].tokens,
         "batching changed native greedy decode output"
@@ -186,29 +190,31 @@ fn native_greedy_decode_is_batch_invariant() {
 }
 
 #[test]
-fn native_shim_fire_and_forget_submissions_still_complete() {
-    // Old `Server` semantics the shim must preserve: dropping the response
-    // handle does NOT cancel the request — it still decodes to completion
-    // and is counted in the serving metrics (sessions are detached).
-    let server = native_server();
-    drop(server.submit(GenRequest { prompt: vec![5; 8], n_new: 3 }).unwrap());
-    let kept = server.submit(GenRequest { prompt: vec![6; 8], n_new: 3 }).unwrap();
-    assert_eq!(kept.recv().unwrap().tokens.len(), 3);
-    let metrics = server.shutdown().unwrap();
-    assert_eq!(metrics.requests(), 2, "dropped handle must not cancel its request");
+fn native_detached_fire_and_forget_submissions_still_complete() {
+    // The old `Server` completed (and counted) fire-and-forget
+    // submissions; with the shim gone, `Session::detach` is the explicit
+    // spelling: a detached session keeps decoding after its handle drops.
+    let engine = native_engine();
+    let mut dropped = engine.submit(vec![5; 8], SamplingParams::greedy(3)).unwrap();
+    dropped.detach();
+    drop(dropped);
+    let kept = engine.submit(vec![6; 8], SamplingParams::greedy(3)).unwrap();
+    assert_eq!(kept.wait().unwrap().tokens.len(), 3);
+    let metrics = engine.shutdown().unwrap();
+    assert_eq!(metrics.requests(), 2, "dropped detached handle must not cancel its request");
 }
 
 #[test]
 fn native_generation_is_deterministic() {
     let run = || {
-        let server = native_server();
-        let resp = server
-            .submit(GenRequest { prompt: (10..26).collect(), n_new: 5 })
+        let engine = native_engine();
+        let c = engine
+            .submit((10..26).collect(), SamplingParams::greedy(5))
             .unwrap()
-            .recv()
+            .wait()
             .unwrap();
-        server.shutdown().unwrap();
-        resp.tokens
+        engine.shutdown().unwrap();
+        c.tokens
     };
     assert_eq!(run(), run(), "same prompt + seed 0 weights must repeat exactly");
 }
@@ -216,10 +222,11 @@ fn native_generation_is_deterministic() {
 #[test]
 fn native_runtime_verifies_flash_against_reference() {
     // `repro verify --backend native` in test form: golden vectors are
-    // synthesized from attn::exec::reference, executed through the runtime.
+    // synthesized from attn::exec::reference, executed through the
+    // runtime — now covering GQA, MQA and sliding-window kernels too.
     let rt = Runtime::with_backend(&PathBuf::from("artifacts"), BackendKind::Native).unwrap();
     let names = rt.golden_names();
-    assert!(names.len() >= 3, "native manifest should self-verify attention kernels");
+    assert!(names.len() >= 6, "native manifest should self-verify every spec axis");
     for name in names {
         let diffs = rt.verify_golden(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
         let worst = diffs.iter().cloned().fold(0.0f32, f32::max);

@@ -10,7 +10,7 @@ use fa2::coordinator::engine::{
     Engine, EngineError, FinishReason, SamplingParams, TokenEvent,
 };
 use fa2::coordinator::scheduler::SchedulerConfig;
-use fa2::runtime::BackendKind;
+use fa2::runtime::{BackendKind, RuntimeOptions};
 
 fn engine() -> Engine {
     // the directory is never read: the native backend synthesizes its
@@ -299,6 +299,89 @@ fn preemption_resumes_byte_identically_to_an_uninterrupted_run() {
         "the starving session should have evicted the long one at the bound"
     );
     assert_eq!(m.requests(), 2);
+}
+
+#[test]
+fn gqa_window_model_serves_with_zero_kv_copies() {
+    // The AttnSpec axes reach serving end to end: a GQA (4 query / 2 KV
+    // heads) sliding-window model decodes deterministically over the
+    // paged arena with zero assemble/scatter bytes.
+    let opts = RuntimeOptions { n_kv_heads: Some(2), window: Some(32) };
+    let run = || -> Vec<Vec<i32>> {
+        let e = Engine::start_full(
+            PathBuf::from("artifacts"),
+            "tiny",
+            BackendKind::Native,
+            SchedulerConfig::default(),
+            opts,
+        )
+        .expect("GQA+window native engine must start");
+        assert_eq!(e.shapes().n_kv_head, 2, "manifest reflects the GQA config");
+        let sessions: Vec<_> = (0..3)
+            .map(|i| e.submit(vec![i + 1; 8], SamplingParams::greedy(6)).unwrap())
+            .collect();
+        let tokens: Vec<Vec<i32>> =
+            sessions.into_iter().map(|s| s.wait().unwrap().tokens).collect();
+        let m = e.shutdown().unwrap();
+        assert_eq!(m.kv_bytes_per_step(), 0.0, "paged GQA decode must stay in-place");
+        tokens
+    };
+    let a = run();
+    assert_eq!(a, run(), "GQA+window generation must be deterministic");
+    assert_eq!(a.len(), 3);
+    assert!(a.iter().all(|t| t.len() == 6));
+    // MQA (1 KV head) must also serve
+    let e = Engine::start_full(
+        PathBuf::from("artifacts"),
+        "tiny",
+        BackendKind::Native,
+        SchedulerConfig::default(),
+        RuntimeOptions { n_kv_heads: Some(1), window: None },
+    )
+    .expect("MQA native engine must start");
+    let c = e.submit(vec![3; 8], SamplingParams::greedy(4)).unwrap().wait().unwrap();
+    assert_eq!(c.tokens.len(), 4);
+    e.shutdown().unwrap();
+    // a KV head count that does not divide n_head is a typed startup error
+    assert!(Engine::start_full(
+        PathBuf::from("artifacts"),
+        "tiny",
+        BackendKind::Native,
+        SchedulerConfig::default(),
+        RuntimeOptions { n_kv_heads: Some(3), window: None },
+    )
+    .is_err());
+}
+
+#[test]
+fn block_reservation_packs_short_sessions_where_slabs_could_not() {
+    // A 3-block arena cannot hold even ONE full 8-block window — under
+    // the old slab-per-sequence design nothing could serve.  Block-level
+    // reservation admits three short sessions concurrently (1 block each:
+    // 8 prompt + 4 generated = 12 tokens < 16-token block), and rejects a
+    // window-sized request with a typed error at submit.
+    let e = engine_with(SchedulerConfig {
+        max_in_flight: 4,
+        kv_block: 16,
+        kv_blocks: Some(3),
+        ..SchedulerConfig::default()
+    });
+    let err = e.submit(vec![1; 8], SamplingParams::greedy(10_000)).unwrap_err();
+    assert!(
+        matches!(err, EngineError::ExceedsKvCapacity { need_blocks: 8, capacity_blocks: 3 }),
+        "window-sized request must be rejected up front: {err:?}"
+    );
+    let sessions: Vec<_> = (0..3)
+        .map(|i| e.submit(vec![i + 1; 8], SamplingParams::greedy(4)).unwrap())
+        .collect();
+    for s in sessions {
+        let c = s.wait().unwrap();
+        assert_eq!(c.finish, FinishReason::MaxTokens);
+        assert_eq!(c.tokens.len(), 4);
+    }
+    let m = e.shutdown().unwrap();
+    assert_eq!(m.requests(), 3);
+    assert_eq!(m.kv_bytes_per_step(), 0.0);
 }
 
 #[test]

@@ -1,0 +1,287 @@
+//! Property tests for the unified `AttnSpec` API (DESIGN.md §11): the
+//! flash kernels must match the O(N²) reference oracle on EVERY axis
+//! combination — head maps (MHA / GQA / MQA) × masks (full / causal /
+//! sliding-window) × block geometries — and the paged KV layout must
+//! decode **bit-identically** to the contiguous one.
+//!
+//! - forward parity ≤ 1e-4 over random `n_q_heads/n_kv_heads` ratios
+//!   (incl. MQA `n_kv = 1`) and window sizes;
+//! - backward parity ≤ 1e-4 on the same axes, plus a central
+//!   finite-difference gradcheck ≤ 1e-3 on tiny GQA/window problems;
+//! - `decode_splitkv_spec` over a `Paged` block table is bitwise equal to
+//!   the `Contiguous` run (same chunk boundaries), for any block size,
+//!   history length, and window clip;
+//! - parallel execution stays byte-identical to serial on the spec paths.
+//!
+//! Replay failures with FA2_PROP_SEED / FA2_PROP_CASES (see util::prop).
+
+use fa2::attn::exec::{parallel, reference, FlashParams};
+use fa2::attn::spec::{AttnSpec, BlockTable, HeadMap, KvLayout, Mask};
+use fa2::prop_assert;
+use fa2::util::prop::{check, PropConfig};
+use fa2::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// A random spec: every head-ratio in {1, 2, 4, MQA}, every mask, awkward
+/// seqlens.
+fn rand_spec(rng: &mut Rng, max_seq: usize) -> AttnSpec {
+    let n_kv_heads = *rng.choice(&[1usize, 2, 4]);
+    let group = *rng.choice(&[1usize, 2, 4]);
+    let seq = rng.range_usize(1, max_seq + 1);
+    let mask = match rng.range_usize(0, 3) {
+        0 => Mask::Full,
+        1 => Mask::Causal,
+        _ => Mask::SlidingWindow(rng.range_usize(1, seq + 4)),
+    };
+    AttnSpec {
+        batch: rng.range_usize(1, 3),
+        heads: HeadMap { n_q_heads: n_kv_heads * group, n_kv_heads },
+        seq,
+        head_dim: *rng.choice(&[8usize, 16, 64]),
+        mask,
+    }
+}
+
+fn rand_params(rng: &mut Rng) -> FlashParams {
+    FlashParams {
+        block_q: *rng.choice(&[4usize, 8, 16, 33, 64]),
+        block_k: *rng.choice(&[4usize, 8, 16, 33, 64]),
+    }
+}
+
+#[test]
+fn prop_spec_forward_matches_reference() {
+    let cfg = PropConfig { cases: 40, ..PropConfig::default() };
+    check("spec-fwd-parity", cfg, |rng| {
+        let spec = rand_spec(rng, 48);
+        let p = rand_params(rng);
+        let q = rand_vec(rng, spec.q_elems());
+        let k = rand_vec(rng, spec.kv_elems());
+        let v = rand_vec(rng, spec.kv_elems());
+        let fl = parallel::forward_spec_with(1, &q, &k, &v, spec, p);
+        let rf = reference::forward_spec(&q, &k, &v, spec);
+        let od = max_diff(&fl.o, &rf.o);
+        prop_assert!(od < 1e-4, "O diff {od} for {spec:?} {p:?}");
+        let ld = max_diff(&fl.lse, &rf.lse);
+        prop_assert!(ld < 1e-4, "LSE diff {ld} for {spec:?} {p:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spec_backward_matches_reference() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("spec-bwd-parity", cfg, |rng| {
+        let mut spec = rand_spec(rng, 25);
+        spec.head_dim = *rng.choice(&[8usize, 16]);
+        let p = rand_params(rng);
+        let q = rand_vec(rng, spec.q_elems());
+        let k = rand_vec(rng, spec.kv_elems());
+        let v = rand_vec(rng, spec.kv_elems());
+        let dout = rand_vec(rng, spec.q_elems());
+        let fwd = parallel::forward_spec_with(1, &q, &k, &v, spec, p);
+        let g = parallel::backward_spec_with(1, &q, &k, &v, &fwd, &dout, spec, p);
+        let r = reference::backward_spec(&q, &k, &v, &dout, spec);
+        for (name, got, want) in
+            [("dQ", &g.dq, &r.dq), ("dK", &g.dk, &r.dk), ("dV", &g.dv, &r.dv)]
+        {
+            let d = max_diff(got, want);
+            prop_assert!(d < 1e-4, "{name} diff {d} for {spec:?} {p:?}");
+        }
+        prop_assert!(g.dk.len() == spec.kv_elems(), "dK must be KV-shaped");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spec_parallel_equals_serial_bitwise() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("spec-parallel-serial-identical", cfg, |rng| {
+        let spec = rand_spec(rng, 40);
+        let p = rand_params(rng);
+        let workers = rng.range_usize(2, 9);
+        let q = rand_vec(rng, spec.q_elems());
+        let k = rand_vec(rng, spec.kv_elems());
+        let v = rand_vec(rng, spec.kv_elems());
+        let dout = rand_vec(rng, spec.q_elems());
+        let serial = parallel::forward_spec_with(1, &q, &k, &v, spec, p);
+        let par = parallel::forward_spec_with(workers, &q, &k, &v, spec, p);
+        prop_assert!(serial.o == par.o, "forward O diverged at {workers} workers");
+        prop_assert!(serial.lse == par.lse, "forward LSE diverged");
+        let gs = parallel::backward_spec_with(1, &q, &k, &v, &serial, &dout, spec, p);
+        let gp = parallel::backward_spec_with(workers, &q, &k, &v, &serial, &dout, spec, p);
+        prop_assert!(gs.dq == gp.dq, "dQ diverged at {workers} workers");
+        prop_assert!(gs.dk == gp.dk, "dK diverged");
+        prop_assert!(gs.dv == gp.dv, "dV diverged");
+        Ok(())
+    });
+}
+
+/// Build a paged copy of `n` contiguous rows: blocks of `bt` rows at
+/// shuffled physical positions (plus a decoy plane to prove the plane
+/// offset is honored), returning the pools + table.
+fn paginate(
+    rng: &mut Rng,
+    flat_k: &[f32],
+    flat_v: &[f32],
+    n: usize,
+    d: usize,
+    bt: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<u32>, usize, usize) {
+    let n_blocks = (n + bt - 1) / bt;
+    let planes = 2; // plane 0 is a decoy filled with garbage
+    let block_elems = planes * bt * d;
+    let plane = bt * d; // our rows live in plane 1
+    let mut phys: Vec<u32> = (0..n_blocks as u32).collect();
+    rng.shuffle(&mut phys);
+    let mut k_pool = vec![f32::NAN; n_blocks * block_elems];
+    let mut v_pool = vec![f32::NAN; n_blocks * block_elems];
+    for (logical, &pb) in phys.iter().enumerate() {
+        let t0 = logical * bt;
+        let rows = bt.min(n - t0);
+        let dst = pb as usize * block_elems + plane;
+        k_pool[dst..dst + rows * d].copy_from_slice(&flat_k[t0 * d..(t0 + rows) * d]);
+        v_pool[dst..dst + rows * d].copy_from_slice(&flat_v[t0 * d..(t0 + rows) * d]);
+    }
+    (k_pool, v_pool, phys, block_elems, plane)
+}
+
+#[test]
+fn prop_paged_decode_is_bitwise_identical_to_contiguous() {
+    check("paged-vs-contiguous-decode", PropConfig::default(), |rng| {
+        let d = *rng.choice(&[8usize, 16, 64]);
+        let n = rng.range_usize(1, 160);
+        let bt = *rng.choice(&[1usize, 4, 16, 32]);
+        let q = rand_vec(rng, d);
+        let k = rand_vec(rng, n * d);
+        let v = rand_vec(rng, n * d);
+        let scale = 1.0 / (d as f32).sqrt();
+        // random window clip [lo, hi): hi is the current position + 1
+        let hi = rng.range_usize(1, n + 1);
+        let lo = rng.range_usize(0, hi);
+
+        let contig = KvLayout::Contiguous { k: &k, v: &v };
+        // the contiguous run chunked at the SAME block size...
+        let (oc, lc) = parallel::decode_splitkv_spec(&q, &contig, lo, hi, scale, bt);
+        // ...must be bit-identical to the paged run over a shuffled pool
+        let (k_pool, v_pool, table, block_elems, plane) =
+            paginate(rng, &k, &v, n, d, bt);
+        let paged = KvLayout::Paged(BlockTable {
+            k_pool: &k_pool,
+            v_pool: &v_pool,
+            blocks: &table,
+            block_elems,
+            plane,
+            block_tokens: bt,
+        });
+        let (op, lp) = parallel::decode_splitkv_spec(&q, &paged, lo, hi, scale, bt);
+        prop_assert!(
+            oc.iter().zip(&op).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "paged decode not bitwise equal (n={n} bt={bt} lo={lo} hi={hi})"
+        );
+        prop_assert!(lc.to_bits() == lp.to_bits(), "LSE not bitwise equal");
+        // and the full-range contiguous decode matches the legacy entry
+        let (ol, ll) = parallel::decode_splitkv(&q, &k, &v, n, scale, bt);
+        let (of, lf) = parallel::decode_splitkv_spec(&q, &contig, 0, n, scale, bt);
+        prop_assert!(
+            ol.iter().zip(&of).all(|(a, b)| a.to_bits() == b.to_bits())
+                && ll.to_bits() == lf.to_bits(),
+            "legacy decode_splitkv diverged from the spec entry point"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// gradcheck on the new axes (tiny problems; FD is O(elems²·N))
+
+/// L = Σ O ⊙ W under the reference forward.
+fn loss(q: &[f32], k: &[f32], v: &[f32], w: &[f32], spec: AttnSpec) -> f64 {
+    let out = reference::forward_spec(q, k, v, spec);
+    out.o.iter().zip(w).map(|(&o, &wi)| o as f64 * wi as f64).sum()
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn gradcheck_spec(spec: AttnSpec, seed: u64) {
+    assert!(spec.seq <= 16, "gradcheck is O(elems²·N) — keep problems tiny");
+    let mut rng = Rng::seed_from(seed);
+    let q = rand_vec(&mut rng, spec.q_elems());
+    let k = rand_vec(&mut rng, spec.kv_elems());
+    let v = rand_vec(&mut rng, spec.kv_elems());
+    let w = rand_vec(&mut rng, spec.q_elems());
+    let p = FlashParams { block_q: 8, block_k: 8 };
+    let fwd = parallel::forward_spec_with(1, &q, &k, &v, spec, p);
+    let g = parallel::backward_spec_with(1, &q, &k, &v, &fwd, &w, spec, p);
+    let h = 1e-2f32;
+    let mut bufs = [q.clone(), k.clone(), v.clone()];
+    for (name, which, grad) in [("dQ", 0usize, &g.dq), ("dK", 1, &g.dk), ("dV", 2, &g.dv)] {
+        for e in 0..grad.len() {
+            let orig = bufs[which][e];
+            bufs[which][e] = orig + h;
+            let up = loss(&bufs[0], &bufs[1], &bufs[2], &w, spec);
+            bufs[which][e] = orig - h;
+            let dn = loss(&bufs[0], &bufs[1], &bufs[2], &w, spec);
+            bufs[which][e] = orig;
+            let fd = (up - dn) / (2.0 * h as f64);
+            assert!(
+                close(grad[e] as f64, fd, 1e-3),
+                "{name}[{e}]: analytic {} vs FD {fd} ({spec:?})",
+                grad[e]
+            );
+        }
+    }
+}
+
+#[test]
+fn gradcheck_gqa_causal() {
+    gradcheck_spec(
+        AttnSpec {
+            batch: 1,
+            heads: HeadMap { n_q_heads: 4, n_kv_heads: 2 },
+            seq: 7,
+            head_dim: 3,
+            mask: Mask::Causal,
+        },
+        0xFD11,
+    );
+}
+
+#[test]
+fn gradcheck_mqa_sliding_window() {
+    gradcheck_spec(
+        AttnSpec {
+            batch: 1,
+            heads: HeadMap { n_q_heads: 2, n_kv_heads: 1 },
+            seq: 9,
+            head_dim: 3,
+            mask: Mask::SlidingWindow(4),
+        },
+        0xFD12,
+    );
+}
+
+#[test]
+fn gradcheck_window_crossing_blocks() {
+    // window boundary crosses the 8-wide K block so Skip, Partial and
+    // Full covers all occur in the backward tiling
+    gradcheck_spec(
+        AttnSpec {
+            batch: 1,
+            heads: HeadMap::mha(1),
+            seq: 14,
+            head_dim: 2,
+            mask: Mask::SlidingWindow(5),
+        },
+        0xFD13,
+    );
+}
