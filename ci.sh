@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verify plus the wiring checks that keep this repo honest:
-#   1. cargo build --release && cargo test -q   (the ROADMAP tier-1 gate)
+#   1. cargo build --release && repro lint      (static analysis over
+#      rust/src, benches/, examples/, Cargo.tomls — DESIGN.md §12)
+#      then cargo test -q                       (the ROADMAP tier-1 gate;
+#      includes the KvArena ShadowArena sanitizer suite, which is always
+#      on under debug_assertions)
 #   2. benches + examples still build           (their [[bench]]/[[example]]
 #      path entries in rust/Cargo.toml point outside the package dir and
 #      would otherwise rot silently)
@@ -8,14 +12,24 @@
 #      bench-regression gate compares it against benches/baseline.json
 #      (>15% worse on any pinned metric fails; verify the gate itself with
 #      FA2_BENCH_INJECT_SLOWDOWN=1.2 ./ci.sh)
-#   4. warnings gate over the perf-critical source trees
-#   5. dependency policy: `cargo tree` lists only `fa2`
-#   6. SKIPPED summary: integration suites that skipped (no AOT artifacts /
+#   4. kv-sanitizer feature build: the sanitizer suite re-runs in release
+#      with --features kv-sanitizer, proving the cfg gating compiles both
+#      ways and the shadow checks hold without debug_assertions
+#   5. warnings gate over ALL first-party sources (rust/src, benches/,
+#      examples/)
+#   6. dependency policy: `cargo tree` lists only `fa2`
+#   7. SKIPPED summary: integration suites that skipped (no AOT artifacts /
 #      no xla backend) are listed so a green run cannot hide them
 #
 # Usage:
 #   ./ci.sh                    full gate
-#   ./ci.sh --quick            tier-1 only (fast local iteration)
+#   ./ci.sh --quick            tier-1 + lint only (fast local iteration)
+#   ./ci.sh --lint-only        build the repro bin and run the lint gate,
+#                              nothing else
+#   ./ci.sh --verify-lint      one-command failure-path check: runs
+#                              `repro lint --inject-violation` and PASSES
+#                              only if lint FAILS on the injected hot-path
+#                              unwrap (and the un-injected run stays clean)
 #   ./ci.sh --update-baseline  full gate, then re-pin benches/baseline.json
 #                              from this run's bench_summary.json
 #   ./ci.sh --verify-gate      one-command failure-path check: re-runs the
@@ -31,14 +45,35 @@ cd "$(dirname "$0")"
 QUICK=0
 UPDATE_BASELINE=0
 VERIFY_GATE=0
+LINT_ONLY=0
+VERIFY_LINT=0
 for arg in "$@"; do
     case "$arg" in
         --quick) QUICK=1 ;;
         --update-baseline) UPDATE_BASELINE=1 ;;
         --verify-gate) VERIFY_GATE=1 ;;
-        *) echo "usage: ./ci.sh [--quick] [--update-baseline] [--verify-gate]" >&2; exit 2 ;;
+        --lint-only) LINT_ONLY=1 ;;
+        --verify-lint) VERIFY_LINT=1 ;;
+        *) echo "usage: ./ci.sh [--quick] [--lint-only] [--verify-lint] [--update-baseline] [--verify-gate]" >&2; exit 2 ;;
     esac
 done
+
+if [ "$LINT_ONLY" = 1 ] || [ "$VERIFY_LINT" = 1 ]; then
+    cargo build --release --bin repro
+    echo "== repro lint (static analysis gate) =="
+    cargo run --release --quiet --bin repro -- lint
+    if [ "$VERIFY_LINT" = 1 ]; then
+        # Failure-path check: a synthetic hot-path unwrap() fixture is
+        # injected into the scanned file set; lint must turn RED.
+        echo "== verify-lint: injected hot-path violation must fail =="
+        if cargo run --release --quiet --bin repro -- lint --inject-violation; then
+            echo "FAIL: lint passed despite the injected hot-path unwrap()" >&2
+            exit 1
+        fi
+        echo "verify-lint: lint correctly FAILED on the injected violation"
+    fi
+    exit 0
+fi
 
 if [ "$VERIFY_GATE" = 1 ]; then
     # The documented one-time verification that the bench gate actually
@@ -83,12 +118,15 @@ print_skips() {
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+echo "== repro lint (static analysis gate) =="
+cargo run --release --quiet --bin repro -- lint
+
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
 if [ "$QUICK" = 1 ]; then
     print_skips
-    echo "ci.sh --quick: tier-1 green (full gate: benches, warnings, deps skipped)"
+    echo "ci.sh --quick: lint + tier-1 green (full gate: benches, sanitizer-feature run, warnings, deps skipped)"
     exit 0
 fi
 
@@ -126,18 +164,23 @@ else
     cargo run --release --quiet --bin repro -- bench-gate
 fi
 
-echo "== warnings gate: attn/ runtime/ coordinator/ train/ must be warning-free =="
-# cargo re-emits cached warnings on `check`; any diagnostic naming these
-# paths fails CI (errors would already have failed the build steps above).
-# The pattern is anchored to rust/src/ file paths: the old bare
-# 'runtime/\|coordinator/' matched those substrings anywhere in compiler
-# output (e.g. a path fragment inside an unrelated note).
+echo "== kv-sanitizer: shadow-arena suite in release with the feature on =="
+# Debug builds already ran these under debug_assertions in tier-1; this
+# re-run proves the cfg(any(debug_assertions, feature)) gating compiles in
+# release and that the shadow checks still abort without debug asserts.
+cargo test -q --release --features kv-sanitizer --lib runtime::kv::
+
+echo "== warnings gate: rust/src/, benches/, examples/ must be warning-free =="
+# cargo re-emits cached warnings on `check`; any diagnostic naming a
+# first-party source path fails CI (errors would already have failed the
+# build steps above).  The pattern is anchored to workspace-relative file
+# paths so stray substrings in unrelated notes cannot trip it.
 check_out="$(cargo check --release --all-targets 2>&1)" \
     || { printf '%s\n' "$check_out"; exit 1; }
-gate='rust/src/\(attn\|runtime\|coordinator\|train\)/'
+gate='\(rust/src\|benches\|examples\)/[a-zA-Z0-9_/]*\.rs'
 if printf '%s\n' "$check_out" | grep -q "$gate"; then
     printf '%s\n' "$check_out" | grep -B3 -A1 "$gate"
-    echo "FAIL: compiler warnings under rust/src/{attn,runtime,coordinator,train}/" >&2
+    echo "FAIL: compiler warnings under rust/src/, benches/, or examples/" >&2
     exit 1
 fi
 

@@ -1,0 +1,132 @@
+//! In-tree static analysis: the `repro lint` pass (DESIGN.md §12).
+//!
+//! A zero-dependency lint layer the same spirit as the in-tree json/toml
+//! parsers: [`scan`] hand-rolls a Rust token scanner (no syn), [`rules`]
+//! is the registry of repo-invariant checks, [`report`] applies the
+//! `fa2lint: allow(...)` directives and renders `file:line: [rule-id]`
+//! diagnostics.  `ci.sh` runs the pass as a hard gate before the tests;
+//! `./ci.sh --verify-lint` proves the gate can actually fail by linting
+//! with an injected violation ([`lint_workspace`] with
+//! `inject_violation = true`).
+//!
+//! The pass scans the *workspace* (`rust/src`, `rust/tests`, `benches`,
+//! `examples`, the `Cargo.toml`s), not the compiler's view of the crate:
+//! it reads files off disk, so it also sees code behind disabled features.
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+
+pub use report::{Diagnostic, LintReport};
+pub use rules::RULES;
+use scan::{FileKind, ScannedFile};
+
+/// Run the full lint pass over the workspace at `root` (the directory
+/// holding `ci.sh`).  `inject_violation` adds a synthetic in-memory
+/// hot-path file containing an `unwrap()` — the `--verify-lint` fixture
+/// proving the gate fails when it should (the same pattern as
+/// `FA2_BENCH_INJECT_SLOWDOWN` for the bench gate).
+pub fn lint_workspace(root: &Path, inject_violation: bool) -> Result<LintReport> {
+    let mut files = collect_files(root)?;
+    if inject_violation {
+        files.push(injected_fixture());
+    }
+    let raw = rules::run_all(&files);
+    Ok(report::finish(&files, raw))
+}
+
+/// The synthetic violation used by `--verify-lint`.
+fn injected_fixture() -> ScannedFile {
+    scan::scan(
+        "rust/src/attn/exec/__lint_inject_fixture.rs",
+        FileKind::Src,
+        "pub fn poisoned(x: Option<u32>) -> u32 { x.unwrap() }\n",
+    )
+}
+
+/// Enumerate and scan the lintable files, sorted by path for
+/// deterministic reports.
+pub fn collect_files(root: &Path) -> Result<Vec<ScannedFile>> {
+    let mut files = Vec::new();
+    walk_rs(root, "rust/src", FileKind::Src, &mut files)?;
+    walk_rs(root, "rust/tests", FileKind::TestFile, &mut files)?;
+    walk_rs(root, "benches", FileKind::Bench, &mut files)?;
+    walk_rs(root, "examples", FileKind::Example, &mut files)?;
+    for manifest in ["Cargo.toml", "rust/Cargo.toml"] {
+        let p = root.join(manifest);
+        if p.exists() {
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            files.push(scan::scan(manifest, FileKind::Manifest, &text));
+        }
+    }
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(files)
+}
+
+/// Recursively scan `root/rel` for `.rs` files (sorted traversal).
+fn walk_rs(
+    root: &Path,
+    rel: &str,
+    kind: FileKind,
+    out: &mut Vec<ScannedFile>,
+) -> Result<()> {
+    let dir = root.join(rel);
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<(String, bool)> = std::fs::read_dir(&dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| {
+            let is_dir = e.file_type().map(|t| t.is_dir()).unwrap_or(false);
+            (e.file_name().to_string_lossy().into_owned(), is_dir)
+        })
+        .collect();
+    entries.sort();
+    for (name, is_dir) in entries {
+        let child_rel = format!("{rel}/{name}");
+        if is_dir {
+            walk_rs(root, &child_rel, kind, out)?;
+        } else if name.ends_with(".rs") {
+            let p = root.join(&child_rel);
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            out.push(scan::scan(&child_rel, kind, &text));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::summary;
+
+    #[test]
+    fn injected_fixture_trips_the_hotpath_rule() {
+        let f = injected_fixture();
+        let raw = rules::run_all(std::slice::from_ref(&f));
+        let r = report::finish(std::slice::from_ref(&f), raw);
+        assert!(!r.clean());
+        assert!(r.violations.iter().any(|d| d.rule == "no-hotpath-panic"
+            && d.path.contains("__lint_inject_fixture")));
+    }
+
+    #[test]
+    fn workspace_collection_sees_all_file_kinds() {
+        let root = summary::workspace_root();
+        let files = collect_files(&root).expect("workspace is readable");
+        let has = |k: FileKind| files.iter().any(|f| f.kind == k);
+        assert!(has(FileKind::Src));
+        assert!(has(FileKind::TestFile));
+        assert!(has(FileKind::Bench));
+        assert!(has(FileKind::Example));
+        assert!(has(FileKind::Manifest));
+        assert!(files.iter().any(|f| f.path == "rust/src/analysis/mod.rs"));
+    }
+}

@@ -1,0 +1,197 @@
+//! Diagnostics, allowlist application, and rendering for `repro lint`.
+//!
+//! Rules emit raw [`Diagnostic`]s; [`finish`] then applies the per-file
+//! `fa2lint: allow(...)` directives and folds the scanner's malformed
+//! directives into `allow-syntax` violations.  Suppression is exact: the
+//! directive must sit on (or directly above) the flagged line and name the
+//! flagged rule id.  An allow that suppresses nothing is reported as a
+//! warning so stale suppressions get cleaned up rather than rotting.
+
+use super::rules::known_rule;
+use super::scan::ScannedFile;
+
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diagnostic {
+    pub fn new(path: &str, line: u32, rule: &'static str, msg: String) -> Diagnostic {
+        Diagnostic { path: path.to_string(), line, rule, msg }
+    }
+
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// The outcome of a lint pass: `violations` non-empty fails the gate;
+/// `warnings` (unused allows) never do.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Diagnostic>,
+    pub warnings: Vec<Diagnostic>,
+    /// Diagnostics suppressed by a directive (kept for `--verbose`-style
+    /// introspection and for tests asserting suppression really happened).
+    pub suppressed: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Apply allowlists and directive hygiene to the raw rule output.
+pub fn finish(files: &[ScannedFile], raw: Vec<Diagnostic>) -> LintReport {
+    let mut report = LintReport::default();
+    // (file path, allow index) -> did it suppress anything
+    let mut used: Vec<Vec<bool>> =
+        files.iter().map(|f| vec![false; f.allows.len()]).collect();
+
+    for d in raw {
+        let suppressing = files.iter().enumerate().find_map(|(fi, f)| {
+            if f.path != d.path {
+                return None;
+            }
+            f.allows
+                .iter()
+                .position(|a| {
+                    a.applies_to == d.line && a.rules.iter().any(|r| r == d.rule)
+                })
+                .map(|ai| (fi, ai))
+        });
+        match suppressing {
+            Some((fi, ai)) => {
+                used[fi][ai] = true;
+                report.suppressed.push(d);
+            }
+            None => report.violations.push(d),
+        }
+    }
+
+    for (fi, f) in files.iter().enumerate() {
+        for (line, why) in &f.malformed_allows {
+            report.violations.push(Diagnostic::new(
+                &f.path,
+                *line,
+                "allow-syntax",
+                why.clone(),
+            ));
+        }
+        for (ai, a) in f.allows.iter().enumerate() {
+            for r in &a.rules {
+                if !known_rule(r) {
+                    report.violations.push(Diagnostic::new(
+                        &f.path,
+                        a.line,
+                        "allow-syntax",
+                        format!("allow names unknown rule id `{r}`"),
+                    ));
+                }
+            }
+            if !used[fi][ai] && a.rules.iter().all(|r| known_rule(r)) {
+                report.warnings.push(Diagnostic::new(
+                    &f.path,
+                    a.line,
+                    "allow-syntax",
+                    format!(
+                        "unused allow({}) — nothing on line {} trips that rule; \
+                         remove the stale directive",
+                        a.rules.join(", "),
+                        a.applies_to
+                    ),
+                ));
+            }
+        }
+    }
+
+    sort(&mut report.violations);
+    sort(&mut report.warnings);
+    sort(&mut report.suppressed);
+    report
+}
+
+fn sort(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules;
+    use crate::analysis::scan::{scan, FileKind};
+
+    fn lint_one(path: &str, kind: FileKind, src: &str) -> LintReport {
+        let f = scan(path, kind, src);
+        let raw = rules::run_all(std::slice::from_ref(&f));
+        finish(std::slice::from_ref(&f), raw)
+    }
+
+    #[test]
+    fn allow_suppresses_exactly_its_rule_and_line() {
+        let src = "fn hot(x: Option<u32>) {\n\
+                       // fa2lint: allow(no-hotpath-panic) -- slot liveness proven by caller\n\
+                       let _a = x.unwrap();\n\
+                       let _b = x.unwrap();\n\
+                   }\n";
+        let r = lint_one("rust/src/runtime/kv.rs", FileKind::Src, src);
+        assert_eq!(r.suppressed.len(), 1);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].line, 4, "only the un-allowed line fails");
+        assert!(r.warnings.is_empty());
+    }
+
+    #[test]
+    fn trailing_allow_and_multi_rule_list() {
+        let src = "fn f(x: f32) -> bool {\n\
+                       x == 1.0 // fa2lint: allow(no-float-eq, no-hotpath-panic) -- exact no-op sentinel\n\
+                   }\n";
+        let r = lint_one("rust/src/attn/combine.rs", FileKind::Src, src);
+        assert!(r.clean(), "{:?}", r.violations);
+        assert_eq!(r.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn unused_allow_warns_unknown_rule_fails() {
+        let src = "// fa2lint: allow(no-float-eq) -- nothing here actually\n\
+                   fn f() {}\n\
+                   // fa2lint: allow(no-such-rule) -- typo\n\
+                   fn g() {}\n";
+        let r = lint_one("rust/src/util/x.rs", FileKind::Src, src);
+        assert_eq!(r.warnings.len(), 1, "{:?}", r.warnings);
+        assert!(r.warnings[0].msg.contains("unused"));
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert!(r.violations[0].msg.contains("unknown rule id"));
+    }
+
+    #[test]
+    fn malformed_directive_is_a_violation() {
+        let src = "fn f(x: Option<u32>) { // fa2lint: allow(no-hotpath-panic)\n\
+                       let _ = x;\n\
+                   }\n";
+        let r = lint_one("rust/src/util/x.rs", FileKind::Src, src);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, "allow-syntax");
+    }
+
+    #[test]
+    fn manifest_allow_suppresses_dep_policy() {
+        let toml = "[dev-dependencies]\n\
+                    libc = \"0.2\" # fa2lint: allow(dep-policy) -- hypothetical escape hatch\n";
+        let r = lint_one("rust/Cargo.toml", FileKind::Manifest, toml);
+        assert!(r.clean(), "{:?}", r.violations);
+        assert_eq!(r.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn render_is_file_line_rule_message() {
+        let d = Diagnostic::new("rust/src/x.rs", 7, "no-float-eq", "msg".into());
+        assert_eq!(d.render(), "rust/src/x.rs:7: [no-float-eq] msg");
+    }
+}

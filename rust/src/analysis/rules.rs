@@ -1,0 +1,513 @@
+//! The `repro lint` rule registry (DESIGN.md §12).
+//!
+//! Each rule is a pure function from scanned files to raw diagnostics;
+//! allowlist directives are applied afterwards in [`super::report`], so a
+//! rule never needs to know about suppression.  Rules are deliberately
+//! token-level heuristics — see each rule's doc for exactly what it
+//! matches and what it cannot see.
+
+use super::report::Diagnostic;
+use super::scan::{FileKind, Kind, ScannedFile, Token};
+
+/// One entry in the rule catalog.
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// The catalog, in reporting order.  `allow-syntax` has no checker here —
+/// its diagnostics come from the scanner's malformed-directive list and
+/// from unknown rule ids in allow directives.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "no-hotpath-panic",
+        summary: "no unwrap()/expect()/panic!-family in hot-path modules \
+                  (attn/exec, runtime/kv, runtime/native, coordinator/scheduler) \
+                  outside #[cfg(test)]",
+    },
+    Rule {
+        id: "no-float-eq",
+        summary: "no ==/!= against a float literal outside tests \
+                  (exact comparison is almost always a masked tolerance bug)",
+    },
+    Rule {
+        id: "dep-policy",
+        summary: "Cargo.toml [*dependencies] sections must stay empty \
+                  (the tree is zero-dependency by policy)",
+    },
+    Rule {
+        id: "bench-summary-direction",
+        summary: "every benches/*.rs must register via summary::record \
+                  (which carries higher_is_better) and merge_and_announce, \
+                  so no bench escapes the regression gate",
+    },
+    Rule {
+        id: "error-variant-tested",
+        summary: "every variant of a pub *Error enum must be constructed \
+                  or matched somewhere under #[cfg(test)] or rust/tests/",
+    },
+    Rule {
+        id: "kernel-release-assert",
+        summary: "attn/exec uses debug_assert! in inner loops; release \
+                  assert! is only for once-per-call API-boundary checks \
+                  (allowlist those explicitly)",
+    },
+    Rule {
+        id: "allow-syntax",
+        summary: "fa2lint directives must parse: \
+                  `// fa2lint: allow(rule-id) -- reason`, known rule ids, \
+                  non-empty reason",
+    },
+];
+
+pub fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// Run every rule over the scanned set and return raw (pre-allowlist)
+/// diagnostics.
+pub fn run_all(files: &[ScannedFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in files {
+        no_hotpath_panic(f, &mut out);
+        no_float_eq(f, &mut out);
+        dep_policy(f, &mut out);
+        bench_summary_direction(f, &mut out);
+        kernel_release_assert(f, &mut out);
+    }
+    error_variant_tested(files, &mut out);
+    out
+}
+
+/// Hot-path modules where a panic aborts a serving step mid-batch.
+fn is_hot_path(path: &str) -> bool {
+    path.starts_with("rust/src/attn/exec")
+        || path.starts_with("rust/src/runtime/kv")
+        || path.starts_with("rust/src/runtime/native")
+        || path.starts_with("rust/src/coordinator/scheduler")
+}
+
+/// Rule `no-hotpath-panic`: in hot-path files, outside test regions, flag
+/// `unwrap(` / `expect(` (method position — `unwrap_or*` are distinct
+/// idents and never match) and the panicking macros `panic!` /
+/// `unreachable!` / `todo!` / `unimplemented!`.
+pub fn no_hotpath_panic(f: &ScannedFile, out: &mut Vec<Diagnostic>) {
+    if f.kind != FileKind::Src || !is_hot_path(&f.path) {
+        return;
+    }
+    let t = &f.tokens;
+    for j in 0..t.len() {
+        if f.in_test(t[j].line) {
+            continue;
+        }
+        let next = t.get(j + 1);
+        let flagged = if t[j].kind == Kind::Ident {
+            match t[j].text.as_str() {
+                "unwrap" | "expect" => next.map_or(false, |n| n.is_punct('(')),
+                "panic" | "unreachable" | "todo" | "unimplemented" => {
+                    next.map_or(false, |n| n.is_punct('!'))
+                }
+                _ => false,
+            }
+        } else {
+            false
+        };
+        if flagged {
+            let what = if next.map_or(false, |n| n.is_punct('!')) {
+                format!("{}!", t[j].text)
+            } else {
+                format!("{}()", t[j].text)
+            };
+            out.push(Diagnostic::new(
+                &f.path,
+                t[j].line,
+                "no-hotpath-panic",
+                format!("{what} in hot-path module — return a util::error Result \
+                         or carry an allow with justification"),
+            ));
+        }
+    }
+}
+
+/// Rule `no-float-eq`: flag `==`/`!=` where an adjacent operand token is a
+/// float literal (an optional unary `-` is looked through).  This is a
+/// heuristic: comparing two float *variables* is invisible at token level,
+/// but every such bug this tree has had involved a literal (`x == 0.0`,
+/// `alpha != 1.0`), which this catches.
+pub fn no_float_eq(f: &ScannedFile, out: &mut Vec<Diagnostic>) {
+    if f.kind != FileKind::Src {
+        return;
+    }
+    let t = &f.tokens;
+    for j in 0..t.len().saturating_sub(1) {
+        let is_eq = t[j].is_punct('=') && t[j + 1].is_punct('=');
+        let is_ne = t[j].is_punct('!') && t[j + 1].is_punct('=');
+        if !(is_eq || is_ne) || f.in_test(t[j].line) {
+            continue;
+        }
+        // `<=` / `>=` tokenize as ('<','=') / ('>','='), never reaching
+        // here; `a == b` can only produce the ('=','=') pair.
+        let before = j.checked_sub(1).map(|k| &t[k]);
+        let mut after = t.get(j + 2);
+        if after.map_or(false, |a| a.is_punct('-')) {
+            after = t.get(j + 3);
+        }
+        let float_operand = |tok: Option<&Token>| tok.map_or(false, |x| x.kind == Kind::Float);
+        if float_operand(before) || float_operand(after) {
+            let op = if is_eq { "==" } else { "!=" };
+            out.push(Diagnostic::new(
+                &f.path,
+                t[j].line,
+                "no-float-eq",
+                format!("`{op}` against a float literal — compare with a \
+                         tolerance, or allow with a reason why exactness is \
+                         intended"),
+            ));
+        }
+    }
+}
+
+/// Rule `dep-policy`: every `[*dependencies*]` section of a manifest must
+/// be empty.  Line-based over the TOML text (the scanner does not tokenize
+/// manifests).
+pub fn dep_policy(f: &ScannedFile, out: &mut Vec<Diagnostic>) {
+    if f.kind != FileKind::Manifest {
+        return;
+    }
+    let mut in_dep_section = false;
+    for (idx, raw) in f.text.lines().enumerate() {
+        let line = idx as u32 + 1;
+        let code = raw.split('#').next().unwrap_or("").trim();
+        if code.is_empty() {
+            continue;
+        }
+        if code.starts_with('[') {
+            // [dependencies], [dev-dependencies], [workspace.dependencies],
+            // [target.'cfg(..)'.dependencies] — anything naming dependencies
+            in_dep_section = code.contains("dependencies");
+            continue;
+        }
+        if in_dep_section {
+            out.push(Diagnostic::new(
+                &f.path,
+                line,
+                "dep-policy",
+                format!("external dependency declared: `{code}` — the tree \
+                         is zero-dependency (DESIGN.md §1); vendor the logic \
+                         under util/ instead"),
+            ));
+        }
+    }
+}
+
+/// Rule `bench-summary-direction`: a bench target must call
+/// `summary::record(...)` (whose signature forces a `higher_is_better`
+/// direction on every metric) and `merge_and_announce` so its numbers land
+/// in the gated summary file.
+pub fn bench_summary_direction(f: &ScannedFile, out: &mut Vec<Diagnostic>) {
+    if f.kind != FileKind::Bench {
+        return;
+    }
+    let t = &f.tokens;
+    let records = (0..t.len().saturating_sub(3)).any(|j| {
+        t[j].is_ident("summary")
+            && t[j + 1].is_punct(':')
+            && t[j + 2].is_punct(':')
+            && t[j + 3].is_ident("record")
+    });
+    let merges = t.iter().any(|tok| tok.is_ident("merge_and_announce"));
+    if !records || !merges {
+        let missing = match (records, merges) {
+            (false, false) => "summary::record(...) and summary::merge_and_announce(...)",
+            (false, true) => "summary::record(...)",
+            _ => "summary::merge_and_announce(...)",
+        };
+        out.push(Diagnostic::new(
+            &f.path,
+            1,
+            "bench-summary-direction",
+            format!("bench never calls {missing} — its numbers would \
+                     silently escape the ci.sh regression gate"),
+        ));
+    }
+}
+
+/// Rule `kernel-release-assert`: in attn/exec outside tests, `assert!` /
+/// `assert_eq!` / `assert_ne!` run in release builds and belong only at
+/// kernel API boundaries (once per call, allowlisted); inner-loop
+/// invariants must use the `debug_assert!` family.
+pub fn kernel_release_assert(f: &ScannedFile, out: &mut Vec<Diagnostic>) {
+    if f.kind != FileKind::Src || !f.path.starts_with("rust/src/attn/exec") {
+        return;
+    }
+    let t = &f.tokens;
+    for j in 0..t.len().saturating_sub(1) {
+        if f.in_test(t[j].line) {
+            continue;
+        }
+        if t[j].kind == Kind::Ident
+            && matches!(t[j].text.as_str(), "assert" | "assert_eq" | "assert_ne")
+            && t[j + 1].is_punct('!')
+        {
+            out.push(Diagnostic::new(
+                &f.path,
+                t[j].line,
+                "kernel-release-assert",
+                format!("release-mode {}! in a kernel module — use \
+                         debug_assert* for inner-loop invariants, or allow \
+                         with an API-boundary justification", t[j].text),
+            ));
+        }
+    }
+}
+
+/// Rule `error-variant-tested`: collect every variant of `pub enum *Error`
+/// in src files, then require each variant ident to appear on a test line
+/// somewhere in the tree (a `#[cfg(test)]` region or a `rust/tests/` file).
+pub fn error_variant_tested(files: &[ScannedFile], out: &mut Vec<Diagnostic>) {
+    let mut variants: Vec<(String, u32, String, String)> = Vec::new(); // path, line, enum, variant
+    for f in files {
+        if f.kind != FileKind::Src {
+            continue;
+        }
+        collect_error_variants(f, &mut variants);
+    }
+    if variants.is_empty() {
+        return;
+    }
+    for (path, line, enum_name, variant) in variants {
+        let covered = files.iter().any(|f| {
+            f.tokens
+                .iter()
+                .any(|t| t.is_ident(&variant) && f.in_test(t.line))
+        });
+        if !covered {
+            out.push(Diagnostic::new(
+                &path,
+                line,
+                "error-variant-tested",
+                format!("{enum_name}::{variant} is never constructed or \
+                         matched in any test — an unexercised error path is \
+                         an untested contract"),
+            ));
+        }
+    }
+}
+
+/// Find `pub enum <Name ending in Error> { ... }` and record each
+/// variant's name and line.  Variant position: an ident at brace depth 1
+/// (parens/brackets closed) right after `{` or `,`, skipping `#[...]`
+/// attribute groups.
+fn collect_error_variants(f: &ScannedFile, out: &mut Vec<(String, u32, String, String)>) {
+    let t = &f.tokens;
+    let mut i = 0usize;
+    while i + 2 < t.len() {
+        if !(t[i].is_ident("pub") && t[i + 1].is_ident("enum")) {
+            i += 1;
+            continue;
+        }
+        let name = &t[i + 2];
+        if name.kind != Kind::Ident || !name.text.ends_with("Error") {
+            i += 3;
+            continue;
+        }
+        // find the opening brace (skipping generics like <T>)
+        let mut j = i + 3;
+        while j < t.len() && !t[j].is_punct('{') {
+            j += 1;
+        }
+        let mut brace = 0i32;
+        let mut paren = 0i32;
+        let mut expecting = false;
+        while j < t.len() {
+            match t[j].kind {
+                Kind::Punct('{') => {
+                    brace += 1;
+                    if brace == 1 {
+                        expecting = true;
+                    }
+                }
+                Kind::Punct('}') => {
+                    brace -= 1;
+                    if brace == 0 {
+                        break;
+                    }
+                }
+                Kind::Punct('(') | Kind::Punct('[') => paren += 1,
+                Kind::Punct(')') | Kind::Punct(']') => paren -= 1,
+                Kind::Punct('#') if brace == 1 && paren == 0 => {
+                    // skip the attribute's [...] group
+                    let mut k = j + 1;
+                    let mut depth = 0i32;
+                    while k < t.len() {
+                        if t[k].is_punct('[') {
+                            depth += 1;
+                        } else if t[k].is_punct(']') {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    j = k;
+                }
+                Kind::Punct(',') if brace == 1 && paren == 0 => expecting = true,
+                Kind::Ident if brace == 1 && paren == 0 && expecting => {
+                    out.push((
+                        f.path.clone(),
+                        t[j].line,
+                        name.text.clone(),
+                        t[j].text.clone(),
+                    ));
+                    expecting = false;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        i = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan;
+
+    fn diags_for(path: &str, kind: FileKind, src: &str) -> Vec<Diagnostic> {
+        let f = scan(path, kind, src);
+        let mut out = Vec::new();
+        no_hotpath_panic(&f, &mut out);
+        no_float_eq(&f, &mut out);
+        dep_policy(&f, &mut out);
+        bench_summary_direction(&f, &mut out);
+        kernel_release_assert(&f, &mut out);
+        error_variant_tested(std::slice::from_ref(&f), &mut out);
+        out
+    }
+
+    fn rule_lines(diags: &[Diagnostic], rule: &str) -> Vec<u32> {
+        diags.iter().filter(|d| d.rule == rule).map(|d| d.line).collect()
+    }
+
+    #[test]
+    fn hotpath_panic_positive_negative_and_scope() {
+        let src = "fn hot(x: Option<u32>) -> u32 {\n\
+                       let a = x.unwrap();\n\
+                       let b = x.expect(\"msg\");\n\
+                       let c = x.unwrap_or(0);\n\
+                       if a > b { panic!(\"boom\") } else { unreachable!() }\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests { fn t() { None::<u32>.unwrap(); } }\n";
+        let d = diags_for("rust/src/runtime/kv.rs", FileKind::Src, src);
+        assert_eq!(rule_lines(&d, "no-hotpath-panic"), vec![2, 3, 5, 5]);
+        // same source outside a hot-path module: clean
+        let d = diags_for("rust/src/util/json.rs", FileKind::Src, src);
+        assert!(rule_lines(&d, "no-hotpath-panic").is_empty());
+    }
+
+    #[test]
+    fn float_eq_flags_literal_comparisons_only() {
+        let src = "fn f(x: f32, n: usize) -> bool {\n\
+                       let a = x == 0.0;\n\
+                       let b = x != -1.0;\n\
+                       let c = n == 0;\n\
+                       let d = x <= 1.0;\n\
+                       let e = x == y;\n\
+                       a && b && c && d && e\n\
+                   }\n";
+        let d = diags_for("rust/src/attn/combine.rs", FileKind::Src, src);
+        assert_eq!(rule_lines(&d, "no-float-eq"), vec![2, 3]);
+    }
+
+    #[test]
+    fn dep_policy_flags_entries_in_any_dependencies_section() {
+        let toml = "[package]\nname = \"fa2\"\n\n[dependencies]\n\
+                    serde = \"1\"\n\n[dev-dependencies]\n# just a comment\n\n\
+                    [features]\nkv-sanitizer = []\n";
+        let d = diags_for("rust/Cargo.toml", FileKind::Manifest, toml);
+        assert_eq!(rule_lines(&d, "dep-policy"), vec![5]);
+    }
+
+    #[test]
+    fn bench_must_record_and_merge() {
+        let good = "fn main() {\n  let r = summary::record(\"b\", \"c\", \"m\", 1.0, \"u\", true);\n\
+                    summary::merge_and_announce(&[r]);\n}\n";
+        let d = diags_for("benches/x.rs", FileKind::Bench, good);
+        assert!(rule_lines(&d, "bench-summary-direction").is_empty());
+        let bad = "fn main() { println!(\"{}\", 42); }\n";
+        let d = diags_for("benches/x.rs", FileKind::Bench, bad);
+        assert_eq!(rule_lines(&d, "bench-summary-direction"), vec![1]);
+        let half = "fn main() { let _ = summary::record(\"b\",\"c\",\"m\",1.0,\"u\",true); }\n";
+        let d = diags_for("benches/x.rs", FileKind::Bench, half);
+        assert_eq!(d.iter().filter(|d| d.rule == "bench-summary-direction").count(), 1);
+        assert!(d[0].msg.contains("merge_and_announce"));
+    }
+
+    #[test]
+    fn kernel_release_assert_flags_assert_family_not_debug() {
+        let src = "fn kernel(a: usize, b: usize) {\n\
+                       assert_eq!(a, b);\n\
+                       debug_assert!(a <= b);\n\
+                       for _ in 0..a { debug_assert_eq!(a, b); }\n\
+                   }\n";
+        let d = diags_for("rust/src/attn/exec/flash_fwd.rs", FileKind::Src, src);
+        assert_eq!(rule_lines(&d, "kernel-release-assert"), vec![2]);
+        // outside attn/exec the rule does not apply
+        let d = diags_for("rust/src/runtime/kv.rs", FileKind::Src, src);
+        assert!(rule_lines(&d, "kernel-release-assert").is_empty());
+    }
+
+    #[test]
+    fn error_variants_must_appear_in_tests() {
+        let src = "pub enum StoreError {\n\
+                       NotFound,\n\
+                       Corrupt { line: u32 },\n\
+                       Io(String),\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { let _ = StoreError::NotFound; }\n\
+                   }\n";
+        let f = scan("rust/src/util/store.rs", FileKind::Src, src);
+        let mut d = Vec::new();
+        error_variant_tested(std::slice::from_ref(&f), &mut d);
+        let missing: Vec<String> =
+            d.iter().map(|d| format!("{}@{}", d.msg.split(' ').next().unwrap_or(""), d.line)).collect();
+        assert_eq!(missing, vec!["StoreError::Corrupt@3", "StoreError::Io@4"]);
+        // coverage from a separate integration-test file also counts
+        let test_file = scan(
+            "rust/tests/store.rs",
+            FileKind::TestFile,
+            "fn t() { let _ = StoreError::Corrupt { line: 1 }; let _ = StoreError::Io(String::new()); }",
+        );
+        let mut d = Vec::new();
+        error_variant_tested(&[f, test_file], &mut d);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn enum_payloads_do_not_read_as_variants() {
+        let src = "pub enum WireError {\n\
+                       #[allow(dead_code)]\n\
+                       Framed(Vec<u8>, usize),\n\
+                       Nested { inner: Box<WireError>, depth: u32 },\n\
+                   }\n";
+        let f = scan("rust/src/util/wire.rs", FileKind::Src, src);
+        let mut d = Vec::new();
+        error_variant_tested(std::slice::from_ref(&f), &mut d);
+        let names: Vec<&str> = d
+            .iter()
+            .map(|d| {
+                d.msg
+                    .split("::")
+                    .nth(1)
+                    .and_then(|s| s.split(' ').next())
+                    .unwrap_or("")
+            })
+            .collect();
+        assert_eq!(names, vec!["Framed", "Nested"]);
+    }
+}

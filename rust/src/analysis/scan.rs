@@ -1,0 +1,674 @@
+//! The hand-rolled Rust source scanner under `repro lint` (DESIGN.md §12).
+//!
+//! The dependency policy keeps `syn` (and every other parser crate) out of
+//! the tree, so the lint rules run over a deliberately small token stream
+//! instead of an AST: identifiers, numeric literals (int vs float — the
+//! distinction `no-float-eq` needs), strings, and single-character
+//! punctuation, each tagged with its 1-based line.  Comments and string
+//! *contents* never become tokens, so a rule can match `unwrap (` without
+//! tripping on prose or fixture strings.
+//!
+//! On top of the token stream the scanner derives the two pieces of
+//! context every rule needs:
+//!
+//! - **test regions** — lines covered by an item whose attributes mention
+//!   the `test` cfg ident (`#[cfg(test)]`, `#[test]`,
+//!   `#[cfg(all(test, ...))]`); rules that exempt tests skip those lines.
+//!   Note the ident must be literally `test`: `debug_assertions`-gated
+//!   code is production code and stays linted.
+//! - **allowlist directives** — `// fa2lint: allow(rule-id) -- reason`
+//!   comments.  A trailing directive suppresses matching diagnostics on
+//!   its own line; a directive alone on a line suppresses them on the
+//!   next line that holds any code.  The `-- reason` is mandatory and
+//!   must be non-empty: an unexplained suppression is itself a violation
+//!   (rule `allow-syntax`).
+
+/// Token kinds the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Int,
+    /// A floating-point literal: has a fractional part, an exponent, or an
+    /// `f32`/`f64` suffix.
+    Float,
+    /// A string/char literal (contents dropped — no rule reads them).
+    Str,
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+}
+
+/// One `// fa2lint: allow(...) -- reason` directive.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the directive sits on.
+    pub line: u32,
+    /// The line whose diagnostics it suppresses (its own for a trailing
+    /// directive, the next code-bearing line for a standalone one).
+    pub applies_to: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+/// What part of the workspace a file is, which decides the rules that see
+/// it and whether the test exemption applies wholesale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileKind {
+    /// `rust/src/**` — the linted library/binary source.
+    Src,
+    /// `rust/tests/**` — integration tests (exempt from the code rules,
+    /// scanned for error-variant constructions).
+    TestFile,
+    /// `benches/**` — must register into `bench::summary`.
+    Bench,
+    /// `examples/**` — built by CI, no extra rules today.
+    Example,
+    /// `Cargo.toml` manifests — the dependency-policy rule.
+    Manifest,
+}
+
+/// A scanned source file: the token stream plus the derived rule context.
+#[derive(Debug)]
+pub struct ScannedFile {
+    /// Workspace-relative path with forward slashes (`rust/src/...`).
+    pub path: String,
+    pub kind: FileKind,
+    /// Raw text (the Manifest rule is line-based, not token-based).
+    pub text: String,
+    pub tokens: Vec<Token>,
+    /// `test_lines[line]` (1-based) — line is inside a test-cfg item.
+    pub test_lines: Vec<bool>,
+    pub allows: Vec<Allow>,
+    /// Malformed `fa2lint:` directives: (line, what is wrong).
+    pub malformed_allows: Vec<(u32, String)>,
+}
+
+impl ScannedFile {
+    pub fn in_test(&self, line: u32) -> bool {
+        self.kind == FileKind::TestFile
+            || self.test_lines.get(line as usize).copied().unwrap_or(false)
+    }
+}
+
+/// A raw comment, kept aside for directive parsing.
+struct Comment {
+    line: u32,
+    text: String,
+    /// Whether any token preceded it on the same line.
+    after_code: bool,
+}
+
+/// Scan `text` into tokens + rule context.  Never fails: unterminated
+/// constructs simply end the token stream at EOF (the compiler is the
+/// authority on well-formedness; the linter only needs to be safe).
+pub fn scan(path: &str, kind: FileKind, text: &str) -> ScannedFile {
+    if kind == FileKind::Manifest {
+        // TOML: no Rust tokens; directives ride on `#` comments instead.
+        let (allows, malformed_allows) = parse_manifest_directives(text);
+        return ScannedFile {
+            path: path.to_string(),
+            kind,
+            text: text.to_string(),
+            tokens: Vec::new(),
+            test_lines: Vec::new(),
+            allows,
+            malformed_allows,
+        };
+    }
+    let (tokens, comments) = tokenize(text);
+    let n_lines = text.lines().count() as u32;
+    let test_lines = test_regions(&tokens, n_lines);
+    let (allows, malformed_allows) = parse_directives(&comments, &tokens);
+    ScannedFile {
+        path: path.to_string(),
+        kind,
+        text: text.to_string(),
+        tokens,
+        test_lines,
+        allows,
+        malformed_allows,
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn tokenize(text: &str) -> (Vec<Token>, Vec<Comment>) {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: text[start..i].to_string(),
+                after_code: tokens.last().map_or(false, |t| t.line == line),
+            });
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // nested block comment
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            i = skip_string(b, i, &mut line);
+            tokens.push(Token { kind: Kind::Str, text: String::new(), line });
+        } else if c == b'\'' {
+            // char literal vs lifetime
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char: '\x', '\n', '\'' ...
+                i += 2; // past '\ and the backslash
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+                tokens.push(Token { kind: Kind::Str, text: String::new(), line });
+            } else if i + 2 < n && b[i + 2] == b'\'' {
+                // plain 'x' char literal
+                i += 3;
+                tokens.push(Token { kind: Kind::Str, text: String::new(), line });
+            } else {
+                // lifetime: consume the ident, emit nothing
+                i += 1;
+                while i < n && is_ident_char(b[i]) {
+                    i += 1;
+                }
+            }
+        } else if (c == b'r' || c == b'b')
+            && raw_or_byte_string_start(b, i).is_some()
+        {
+            i = skip_raw_or_byte_string(b, i, &mut line);
+            tokens.push(Token { kind: Kind::Str, text: String::new(), line });
+        } else if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            tokens.push(Token {
+                kind: Kind::Ident,
+                text: text[start..i].to_string(),
+                line,
+            });
+        } else if c.is_ascii_digit() {
+            let (tok, next) = lex_number(text, i, line);
+            tokens.push(tok);
+            i = next;
+        } else {
+            tokens.push(Token { kind: Kind::Punct(c as char), text: String::new(), line });
+            i += 1;
+        }
+    }
+    (tokens, comments)
+}
+
+/// `r"`, `r#`, `b"`, `br"`, `br#` — the prefixes that start a raw or byte
+/// string when sitting where an identifier could begin.
+fn raw_or_byte_string_start(b: &[u8], i: usize) -> Option<usize> {
+    let n = b.len();
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j < n && b[j] == b'r' {
+        j += 1;
+        while j < n && b[j] == b'#' {
+            j += 1;
+        }
+    }
+    (j > i && j < n && b[j] == b'"').then_some(j)
+}
+
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    i += 1; // opening quote
+    while i < n {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn skip_raw_or_byte_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    let mut raw = false;
+    if b[i] == b'b' {
+        i += 1;
+    }
+    let mut hashes = 0usize;
+    if i < n && b[i] == b'r' {
+        raw = true;
+        i += 1;
+        while i < n && b[i] == b'#' {
+            hashes += 1;
+            i += 1;
+        }
+    }
+    if !raw {
+        return skip_string(b, i, line);
+    }
+    i += 1; // opening quote
+    while i < n {
+        if b[i] == b'\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == b'"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes {
+            return i + 1 + hashes;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+fn lex_number(text: &str, start: usize, line: u32) -> (Token, usize) {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut i = start;
+    // 0x / 0b / 0o: always an integer (hex digits may contain 'e')
+    if b[i] == b'0' && i + 1 < n && matches!(b[i + 1], b'x' | b'b' | b'o') {
+        i += 2;
+        while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+            i += 1;
+        }
+        return (Token { kind: Kind::Int, text: text[start..i].to_string(), line }, i);
+    }
+    let mut is_float = false;
+    while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+        i += 1;
+    }
+    // fractional part — but not `..` (range) and not `.ident` (method/field)
+    if i < n && b[i] == b'.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+        is_float = true;
+        i += 1;
+        while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+            i += 1;
+        }
+    } else if i < n
+        && b[i] == b'.'
+        && (i + 1 == n || (!is_ident_start(b[i + 1]) && b[i + 1] != b'.'))
+    {
+        // trailing-dot float like `1.`
+        is_float = true;
+        i += 1;
+    }
+    // exponent
+    if i < n
+        && (b[i] == b'e' || b[i] == b'E')
+        && (i + 1 < n
+            && (b[i + 1].is_ascii_digit()
+                || ((b[i + 1] == b'+' || b[i + 1] == b'-')
+                    && i + 2 < n
+                    && b[i + 2].is_ascii_digit())))
+    {
+        is_float = true;
+        i += 1;
+        if b[i] == b'+' || b[i] == b'-' {
+            i += 1;
+        }
+        while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+            i += 1;
+        }
+    }
+    // suffix (f32 / f64 / u32 / usize ...)
+    let suf_start = i;
+    while i < n && is_ident_char(b[i]) {
+        i += 1;
+    }
+    let suffix = &text[suf_start..i];
+    if suffix == "f32" || suffix == "f64" {
+        is_float = true;
+    }
+    let kind = if is_float { Kind::Float } else { Kind::Int };
+    (Token { kind, text: text[start..i].to_string(), line }, i)
+}
+
+/// Mark the lines covered by items whose attributes contain the ident
+/// `test` (outer `#[...]` or inner `#![...]`).  An item's extent runs from
+/// its first attribute to the `}` closing its first brace group, or to the
+/// first `;` met before any `{`.
+fn test_regions(tokens: &[Token], n_lines: u32) -> Vec<bool> {
+    let mut test = vec![false; n_lines as usize + 2];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !tokens[i].is_punct('#') {
+            i += 1;
+            continue;
+        }
+        let attr_line = tokens[i].line;
+        let mut j = i + 1;
+        let inner = j < tokens.len() && tokens[j].is_punct('!');
+        if inner {
+            j += 1;
+        }
+        if j >= tokens.len() || !tokens[j].is_punct('[') {
+            i += 1;
+            continue;
+        }
+        // collect this attribute group
+        let (has_test, after_attr) = attr_mentions_test(tokens, j);
+        if !has_test {
+            i = after_attr;
+            continue;
+        }
+        if inner {
+            // #![cfg(test)] — the whole file is test code
+            for t in test.iter_mut() {
+                *t = true;
+            }
+            return test;
+        }
+        // skip any further outer attributes piled on the same item
+        let mut k = after_attr;
+        while k + 1 < tokens.len() && tokens[k].is_punct('#') && tokens[k + 1].is_punct('[') {
+            let (_, next) = attr_mentions_test(tokens, k + 1);
+            k = next;
+        }
+        // item extent: to `;` before any brace, else to the matching `}`
+        let mut brace = 0i32;
+        let mut end_line = n_lines;
+        while k < tokens.len() {
+            match tokens[k].kind {
+                Kind::Punct('{') => brace += 1,
+                Kind::Punct('}') => {
+                    brace -= 1;
+                    if brace <= 0 {
+                        end_line = tokens[k].line;
+                        k += 1;
+                        break;
+                    }
+                }
+                Kind::Punct(';') if brace == 0 => {
+                    end_line = tokens[k].line;
+                    k += 1;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for l in attr_line..=end_line.min(n_lines) {
+            test[l as usize] = true;
+        }
+        i = k;
+    }
+    test
+}
+
+/// From the `[` at `open`, scan the bracket group: does it contain the
+/// ident `test`?  Returns (found, index just past the closing `]`).
+fn attr_mentions_test(tokens: &[Token], open: usize) -> (bool, usize) {
+    let mut depth = 0i32;
+    let mut found = false;
+    let mut j = open;
+    while j < tokens.len() {
+        match tokens[j].kind {
+            Kind::Punct('[') => depth += 1,
+            Kind::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return (found, j + 1);
+                }
+            }
+            Kind::Ident if tokens[j].text == "test" => found = true,
+            _ => {}
+        }
+        j += 1;
+    }
+    (found, j)
+}
+
+/// Parse the part after a comment marker.  `None`: not a fa2lint
+/// directive.  `Some(Err(why))`: malformed.  `Some(Ok((rules, reason)))`.
+fn parse_directive_body(body: &str) -> Option<Result<(Vec<String>, String), String>> {
+    let rest = body.trim().strip_prefix("fa2lint:")?.trim();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Some(Err(format!("unknown fa2lint directive: {rest:?}")));
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(Err("unclosed allow( rule list".to_string()));
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(Err("allow() names no rules".to_string()));
+    }
+    let after = rest[close + 1..].trim();
+    let reason = after.strip_prefix("--").map(str::trim).unwrap_or("");
+    if !after.starts_with("--") || reason.is_empty() {
+        return Some(Err("allow(...) needs a justification: `-- reason`".to_string()));
+    }
+    Some(Ok((rules, reason.to_string())))
+}
+
+/// Parse `fa2lint:` directives out of the comment list.
+fn parse_directives(
+    comments: &[Comment],
+    tokens: &[Token],
+) -> (Vec<Allow>, Vec<(u32, String)>) {
+    let mut allows = Vec::new();
+    let mut malformed = Vec::new();
+    for c in comments {
+        let body = c.text.trim_start_matches('/');
+        match parse_directive_body(body) {
+            None => {}
+            Some(Err(why)) => malformed.push((c.line, why)),
+            Some(Ok((rules, reason))) => {
+                let applies_to = if c.after_code {
+                    c.line
+                } else {
+                    // first line after the directive that carries any token
+                    tokens
+                        .iter()
+                        .map(|t| t.line)
+                        .find(|&l| l > c.line)
+                        .unwrap_or(c.line)
+                };
+                allows.push(Allow { line: c.line, applies_to, rules, reason });
+            }
+        }
+    }
+    (allows, malformed)
+}
+
+/// Manifest (TOML) directives: `# fa2lint: allow(...) -- reason`, trailing
+/// on the line it covers or standalone above the next non-blank line.
+fn parse_manifest_directives(text: &str) -> (Vec<Allow>, Vec<(u32, String)>) {
+    let mut allows = Vec::new();
+    let mut malformed = Vec::new();
+    let lines: Vec<&str> = text.lines().collect();
+    for (idx, raw) in lines.iter().enumerate() {
+        let line = idx as u32 + 1;
+        let Some(hash) = raw.find('#') else { continue };
+        let body = raw[hash..].trim_start_matches('#');
+        match parse_directive_body(body) {
+            None => {}
+            Some(Err(why)) => malformed.push((line, why)),
+            Some(Ok((rules, reason))) => {
+                let standalone = raw[..hash].trim().is_empty();
+                let applies_to = if standalone {
+                    lines[idx + 1..]
+                        .iter()
+                        .position(|l| !l.trim().is_empty())
+                        .map(|off| line + 1 + off as u32)
+                        .unwrap_or(line)
+                } else {
+                    line
+                };
+                allows.push(Allow { line, applies_to, rules, reason });
+            }
+        }
+    }
+    (allows, malformed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Token> {
+        scan("rust/src/x.rs", FileKind::Src, src).tokens
+    }
+
+    #[test]
+    fn comments_and_strings_produce_no_idents() {
+        let t = toks("// unwrap()\n/* panic! */ let s = \"expect(\"; let c = 'u';\n");
+        assert!(!t.iter().any(|t| t.is_ident("unwrap") || t.is_ident("panic")));
+        assert!(t.iter().any(|t| t.is_ident("let")));
+        assert_eq!(t.iter().filter(|t| t.kind == Kind::Str).count(), 2);
+    }
+
+    #[test]
+    fn float_vs_int_classification() {
+        let t = toks("let a = 1.0; let b = 10; let c = 2e3; let d = 0x9E37_79B9; \
+                      let e = 3f64; let f = x.0; let g = 0..n; let h = 1.5e-3;");
+        let kinds: Vec<(&str, Kind)> = t
+            .iter()
+            .filter(|t| matches!(t.kind, Kind::Int | Kind::Float))
+            .map(|t| (t.text.as_str(), t.kind))
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ("1.0", Kind::Float),
+                ("10", Kind::Int),
+                ("2e3", Kind::Float),
+                ("0x9E37_79B9", Kind::Int),
+                ("3f64", Kind::Float),
+                ("0", Kind::Int),     // tuple index x.0
+                ("0", Kind::Int),     // range start 0..n
+                ("1.5e-3", Kind::Float),
+            ]
+        );
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let t = toks("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(!t.iter().any(|t| t.kind == Kind::Str));
+        assert!(t.iter().any(|t| t.is_ident("str")));
+    }
+
+    #[test]
+    fn raw_strings_skip_their_contents() {
+        let t = toks("let s = r#\"unwrap() \"quoted\" panic!\"#; let y = 1;");
+        assert!(!t.iter().any(|t| t.is_ident("unwrap")));
+        assert!(t.iter().any(|t| t.is_ident("y")));
+    }
+
+    #[test]
+    fn cfg_test_region_covers_the_mod() {
+        let src = "fn hot() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { y.unwrap(); }\n\
+                   }\n\
+                   fn hot2() {}\n";
+        let f = scan("rust/src/x.rs", FileKind::Src, src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(2) && f.in_test(3) && f.in_test(4) && f.in_test(5));
+        assert!(!f.in_test(6));
+    }
+
+    #[test]
+    fn cfg_any_with_test_counts_but_debug_assertions_alone_does_not() {
+        let src = "#[cfg(any(test, feature = \"kv-sanitizer\"))]\nfn a() {}\n\
+                   #[cfg(any(debug_assertions, feature = \"kv-sanitizer\"))]\nfn b() {}\n";
+        let f = scan("rust/src/x.rs", FileKind::Src, src);
+        assert!(f.in_test(1) && f.in_test(2));
+        assert!(!f.in_test(3) && !f.in_test(4));
+    }
+
+    #[test]
+    fn stacked_attrs_and_semicolon_items() {
+        let src = "#[test]\n#[ignore]\nfn t() {\n  body();\n}\n\
+                   #[cfg(test)]\nuse std::fmt;\nfn live() {}\n";
+        let f = scan("rust/src/x.rs", FileKind::Src, src);
+        for l in 1..=5 {
+            assert!(f.in_test(l), "line {l}");
+        }
+        assert!(f.in_test(6) && f.in_test(7));
+        assert!(!f.in_test(8));
+    }
+
+    #[test]
+    fn allow_directive_trailing_and_standalone() {
+        let src = "let a = x.unwrap(); // fa2lint: allow(no-hotpath-panic) -- checked above\n\
+                   // fa2lint: allow(no-float-eq) -- exact sentinel\n\
+                   if x == 1.0 {}\n";
+        let f = scan("rust/src/x.rs", FileKind::Src, src);
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].applies_to, 1);
+        assert_eq!(f.allows[0].rules, vec!["no-hotpath-panic"]);
+        assert_eq!(f.allows[0].reason, "checked above");
+        assert_eq!(f.allows[1].applies_to, 3, "standalone applies to next code line");
+        assert!(f.malformed_allows.is_empty());
+    }
+
+    #[test]
+    fn malformed_directives_are_reported() {
+        let src = "// fa2lint: allow(no-float-eq)\n\
+                   // fa2lint: allow() -- empty\n\
+                   // fa2lint: deny(x) -- nope\n\
+                   fn f() {}\n";
+        let f = scan("rust/src/x.rs", FileKind::Src, src);
+        assert!(f.allows.is_empty());
+        assert_eq!(f.malformed_allows.len(), 3);
+        assert!(f.malformed_allows[0].1.contains("justification"));
+    }
+}

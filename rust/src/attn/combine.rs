@@ -48,9 +48,11 @@ impl Partial {
     /// pass).  Allocation-free when both partials share `d` — this is the
     /// flash-decoding hot loop, which must not allocate per KV chunk.
     pub fn merge_from(&mut self, other: &Partial) {
+        // fa2lint: allow(no-float-eq) -- (l=0.0, m=-inf) is the exact empty-partial sentinel set by Partial::empty
         if other.l == 0.0 && other.m == f64::NEG_INFINITY {
             return;
         }
+        // fa2lint: allow(no-float-eq) -- same empty-partial sentinel, receiver side
         if self.l == 0.0 && self.m == f64::NEG_INFINITY {
             // clone_from reuses self.o's buffer when capacities allow.
             self.o.clone_from(&other.o);
@@ -79,6 +81,7 @@ impl Partial {
 
     /// Finalize: O = o_tilde / l, LSE = m + ln(l).
     pub fn finalize(&self) -> (Vec<f64>, f64) {
+        // fa2lint: allow(no-float-eq) -- l==0.0 only for the exact empty sentinel; avoids 0/0 in the division below
         let l = if self.l == 0.0 { 1.0 } else { self.l };
         (self.o.iter().map(|x| x / l).collect(), self.m + l.ln())
     }

@@ -98,6 +98,7 @@ pub(crate) fn forward_tile(
             // iteration — the §3.1 non-matmul-FLOP reduction)
             let alpha = (m[ri] - mnew).exp(); // exp(-inf)=0 on the first block
             let orow = &mut o[ri * d..(ri + 1) * d];
+            // fa2lint: allow(no-float-eq) -- exp(0)==1.0 exactly; skipping the rescale is the §3.1 non-matmul-FLOP saving
             if alpha != 1.0 {
                 for x in orow.iter_mut() {
                     *x *= alpha;

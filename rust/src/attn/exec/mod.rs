@@ -101,6 +101,7 @@ pub struct TensorView<'a> {
 
 impl<'a> TensorView<'a> {
     pub fn new(dims: AttnDims, data: &'a [f32]) -> TensorView<'a> {
+        // fa2lint: allow(kernel-release-assert) -- once-per-view API-boundary shape check, not an inner-loop invariant
         assert_eq!(
             data.len(),
             dims.elems(),

@@ -81,6 +81,7 @@ pub fn slowdown_factor() -> f64 {
 }
 
 fn apply_slowdown(value: f64, higher_is_better: bool, factor: f64) -> f64 {
+    // fa2lint: allow(no-float-eq) -- 1.0 is the exact "injection hook off" default from slowdown_factor()
     if factor == 1.0 {
         value
     } else if higher_is_better {

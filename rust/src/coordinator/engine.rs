@@ -818,6 +818,14 @@ fn worker(
                 metrics.observe_prompt(s.prompt_len, s.prompt_len);
             }
         }
+        // Block conservation, data-plane side (DESIGN.md §12): after the
+        // plan is applied, the arena's live reservations and the policy's
+        // accounting must agree block for block.
+        debug_assert_eq!(
+            arena.blocks_in_use(),
+            sched.reserved_blocks(),
+            "engine and scheduler disagree about reserved KV blocks"
+        );
 
         // Sub-steps: sub-batch 0 carries one token for EVERY admitted
         // session (decode rows feed their last sampled token, prefill rows
@@ -905,6 +913,11 @@ fn worker(
 
         retire_finished(&mut sessions, &mut sched, &mut arena, &mut metrics, &shapes);
     }
+    // Leak-at-retire check (DESIGN.md §12): every session path above —
+    // finish, cancel, preempt, shutdown drain — must have returned its
+    // blocks by the time the worker exits.
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    arena.check_quiescent();
     metrics.set_kv_copies(arena.stats());
     Ok(metrics)
 }

@@ -226,10 +226,29 @@ impl Scheduler {
         }
     }
 
+    /// Blocks currently reserved by the active set — the policy-side
+    /// mirror of the arena's `blocks_in_use`, and one side of the
+    /// conservation invariant checked at every [`plan`](Self::plan).
+    pub fn reserved_blocks(&self) -> usize {
+        self.active.iter().map(|a| a.need).sum()
+    }
+
     /// One step of policy: FCFS admissions (and, in continuous mode, a
     /// starvation preemption batch) given `free_blocks` actually available
     /// in the KV arena.
     pub fn plan(&mut self, free_blocks: usize) -> StepPlan {
+        // Block conservation (DESIGN.md §12): with a bounded arena, the
+        // caller's free count plus this policy's reservations must account
+        // for every block at every step — drift here means the engine and
+        // the policy disagree about who owns KV memory.
+        if let Some(total) = self.cfg.kv_blocks {
+            debug_assert_eq!(
+                free_blocks + self.reserved_blocks(),
+                total,
+                "kv block conservation violated: {free_blocks} free + {} reserved != {total} total",
+                self.reserved_blocks(),
+            );
+        }
         for p in &mut self.pending {
             p.waited += 1;
         }
@@ -237,11 +256,12 @@ impl Scheduler {
         let mut free = free_blocks;
 
         let gate_closed = self.cfg.mode == SchedMode::Gang && !self.active.is_empty();
-        while !gate_closed
-            && self.active.len() < self.cfg.max_in_flight
-            && self.pending.front().map_or(false, |p| p.need <= free)
-        {
-            let p = self.pending.pop_front().expect("checked non-empty");
+        while !gate_closed && self.active.len() < self.cfg.max_in_flight {
+            let head_fits = self.pending.front().map_or(false, |p| p.need <= free);
+            if !head_fits {
+                break;
+            }
+            let Some(p) = self.pending.pop_front() else { break };
             free -= p.need;
             self.active.push(Active { id: p.id, need: p.need, progressed: false });
             plan.admitted.push(p.id);
@@ -286,14 +306,15 @@ impl Scheduler {
                         .into_iter()
                         .map(|i| self.active.remove(i))
                         .collect();
-                    let head = self.pending.pop_front().expect("checked starving head");
-                    self.active.push(Active {
-                        id: head.id,
-                        need: head.need,
-                        progressed: false,
-                    });
-                    debug_assert_eq!(head.id, head_id);
-                    plan.admitted.push(head.id);
+                    if let Some(head) = self.pending.pop_front() {
+                        debug_assert_eq!(head.id, head_id);
+                        self.active.push(Active {
+                            id: head.id,
+                            need: head.need,
+                            progressed: false,
+                        });
+                        plan.admitted.push(head.id);
+                    }
                     // victims re-enter at the front: youngest pushed first
                     // so the oldest arrival ends up closest to the head
                     for v in victims.drain(..) {
@@ -467,6 +488,29 @@ mod tests {
         assert_eq!(s.plan(4), StepPlan::default(), "wave not yet drained");
         s.retire(1);
         assert_eq!(s.plan(4).admitted, vec![2], "next wave starts when empty");
+    }
+
+    #[test]
+    fn reserved_blocks_mirror_admissions_and_conservation_holds() {
+        // the caller must report free = total - reserved at every plan();
+        // the debug_assert inside plan() is the conservation gate itself
+        let mut s = Scheduler::new(SchedulerConfig {
+            kv_blocks: Some(4),
+            max_in_flight: 4,
+            ..Default::default()
+        });
+        assert_eq!(s.reserved_blocks(), 0);
+        s.enqueue(0, 2);
+        s.enqueue(1, 1);
+        assert_eq!(s.plan(4).admitted, vec![0, 1]);
+        assert_eq!(s.reserved_blocks(), 3);
+        assert_eq!(s.plan(1), StepPlan::default());
+        s.retire(0);
+        assert_eq!(s.reserved_blocks(), 1);
+        s.enqueue(2, 3);
+        assert_eq!(s.plan(3).admitted, vec![2]);
+        assert_eq!(s.reserved_blocks(), 4, "fully subscribed");
+        assert_eq!(s.plan(0), StepPlan::default());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! artifacts, plus the GPU cost-model substrate that regenerates the paper's
 //! figures.  See DESIGN.md for the system inventory.
 
+pub mod analysis;
 pub mod attn;
 pub mod bench;
 pub mod config;

@@ -12,6 +12,10 @@
 //!   attn-exec run the native flash-attention kernels (GFLOP/s + parity)
 //!   bench-gate compare reports/bench_summary.json against the pinned
 //!             benches/baseline.json; nonzero exit on >tolerance regression
+//!   lint      in-tree static analysis over the workspace (DESIGN.md §12);
+//!             nonzero exit on any violation; --inject-violation seeds a
+//!             synthetic hot-path unwrap so ci.sh --verify-lint can prove
+//!             the gate fails when it should
 //!   inspect   list artifacts in the manifest
 //!
 //! `verify`, `train`, `serve` and `inspect` take `--backend
@@ -60,6 +64,7 @@ fn usage() -> ! {
                      [--threads T] [--check 0|1]\n  \
            bench-gate [--summary FILE] [--baseline FILE] [--tolerance F]\n            \
                      [--update-baseline]\n  \
+           lint      [--root DIR] [--rules] [--inject-violation]\n  \
            inspect   [--artifact-dir DIR] [--backend B]\n\
          backends (B): auto (default) | native | xla | stub"
     );
@@ -114,6 +119,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "attn-exec" => cmd_attn_exec(&args),
         "bench-gate" => cmd_bench_gate(&args),
+        "lint" => cmd_lint(&args),
         "inspect" => cmd_inspect(&args),
         _ => usage(),
     }
@@ -632,6 +638,7 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
     };
     let current = summary::load(summary_path)?;
     if args.get("update-baseline").is_some() {
+        // fa2lint: allow(no-float-eq) -- 1.0 is the exact "hook off" sentinel, never computed
         if summary::slowdown_factor() != 1.0 {
             bail!(
                 "refusing to pin a baseline while FA2_BENCH_INJECT_SLOWDOWN={} is set: \
@@ -687,6 +694,42 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
             report.regressions.len(),
             tolerance * 100.0
         );
+    }
+    Ok(())
+}
+
+/// The in-tree static-analysis gate (DESIGN.md §12).  `ci.sh` runs this
+/// before the tests; any violation is a nonzero exit.  `--inject-violation`
+/// lints with a synthetic hot-path `unwrap()` fixture so `ci.sh
+/// --verify-lint` can assert the gate actually fails on a violation.
+fn cmd_lint(args: &Args) -> Result<()> {
+    if args.get("rules").is_some() {
+        println!("repro lint rule catalog:");
+        for r in fa2::analysis::RULES {
+            println!("  {:<24} {}", r.id, r.summary);
+        }
+        return Ok(());
+    }
+    let root = args
+        .get("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(summary::workspace_root);
+    let inject = args.get("inject-violation").is_some();
+    let report = fa2::analysis::lint_workspace(&root, inject)?;
+    for w in &report.warnings {
+        println!("warning: {}", w.render());
+    }
+    for v in &report.violations {
+        println!("{}", v.render());
+    }
+    println!(
+        "repro lint: {} violation(s), {} warning(s), {} suppressed by fa2lint allows",
+        report.violations.len(),
+        report.warnings.len(),
+        report.suppressed.len()
+    );
+    if !report.clean() {
+        bail!("{} lint violation(s)", report.violations.len());
     }
     Ok(())
 }

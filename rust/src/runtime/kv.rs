@@ -117,6 +117,172 @@ impl CopyStats {
     }
 }
 
+/// A block-accounting violation detected by the [`ShadowArena`] sanitizer.
+///
+/// The shadow is a pure state machine (every transition returns
+/// `Result<(), ShadowViolation>`, so the detector itself is testable
+/// without panics); the arena turns a violation into an abort through
+/// [`enforce`], because continuing past corrupted block accounting would
+/// silently serve one sequence's KV rows to another.
+#[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShadowViolation {
+    /// A slot id was granted while the shadow still thinks it is live.
+    SlotReused { slot: usize },
+    /// An allocation handed out a block some live sequence already owns.
+    AliasedGrant { block: u32, slot: usize, other: usize },
+    /// `free` on a slot the shadow does not consider live.
+    DoubleFree { slot: usize },
+    /// A write through a slot that was never allocated or already freed.
+    DeadSlotWrite { slot: usize },
+    /// A write at a token position past the slot's block table.
+    OutOfTable { slot: usize, pos: usize },
+    /// A write would land in a physical block the shadow says this slot
+    /// does not own at that table index — the cross-sequence aliasing bug
+    /// class copy-on-write prefix sharing will make reachable.
+    CrossSequenceAlias { slot: usize, pos: usize, block: u32, owner: Option<usize> },
+    /// Blocks or slots still live when the arena should be quiescent.
+    LeakAtRetire { live_slots: usize, owned_blocks: usize },
+}
+
+#[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+impl std::fmt::Display for ShadowViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShadowViolation::SlotReused { slot } => {
+                write!(f, "slot {slot} re-granted while still live")
+            }
+            ShadowViolation::AliasedGrant { block, slot, other } => write!(
+                f,
+                "block {block} granted to slot {slot} but already owned by slot {other}"
+            ),
+            ShadowViolation::DoubleFree { slot } => {
+                write!(f, "double free of slot {slot}")
+            }
+            ShadowViolation::DeadSlotWrite { slot } => {
+                write!(f, "write through dead slot {slot}")
+            }
+            ShadowViolation::OutOfTable { slot, pos } => {
+                write!(f, "slot {slot} write at token {pos} is out of its block table")
+            }
+            ShadowViolation::CrossSequenceAlias { slot, pos, block, owner } => write!(
+                f,
+                "slot {slot} write at token {pos} lands in block {block} owned by {}",
+                match owner {
+                    Some(o) => format!("slot {o}"),
+                    None => "no live sequence".to_string(),
+                }
+            ),
+            ShadowViolation::LeakAtRetire { live_slots, owned_blocks } => write!(
+                f,
+                "leak at retire: {live_slots} slot(s) still live holding {owned_blocks} block(s)"
+            ),
+        }
+    }
+}
+
+/// Shadow block-accounting state, mirrored on every alloc/free/write
+/// (DESIGN.md §12).  Compiled under `debug_assertions` or the
+/// `kv-sanitizer` feature; release serving builds pay nothing.
+#[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+#[derive(Debug, Default)]
+pub struct ShadowArena {
+    /// Mirror of the arena's slot table: block list per live slot.
+    slots: Vec<Option<Vec<u32>>>,
+    /// Physical block -> owning slot (exactly one owner while refcounts
+    /// stay out of the tree; COW sharing will generalize this map).
+    owner: std::collections::HashMap<u32, usize>,
+}
+
+#[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+impl ShadowArena {
+    /// Mirror a grant of `blocks` to `slot`.
+    pub fn on_alloc(&mut self, slot: usize, blocks: &[u32]) -> Result<(), ShadowViolation> {
+        if self.slots.len() <= slot {
+            self.slots.resize_with(slot + 1, || None);
+        }
+        if self.slots[slot].is_some() {
+            return Err(ShadowViolation::SlotReused { slot });
+        }
+        for &b in blocks {
+            if let Some(&other) = self.owner.get(&b) {
+                return Err(ShadowViolation::AliasedGrant { block: b, slot, other });
+            }
+        }
+        for &b in blocks {
+            self.owner.insert(b, slot);
+        }
+        self.slots[slot] = Some(blocks.to_vec());
+        Ok(())
+    }
+
+    /// Mirror a free of `slot`, releasing its block ownership.
+    pub fn on_free(&mut self, slot: usize) -> Result<(), ShadowViolation> {
+        match self.slots.get_mut(slot).and_then(Option::take) {
+            Some(blocks) => {
+                for b in blocks {
+                    self.owner.remove(&b);
+                }
+                Ok(())
+            }
+            None => Err(ShadowViolation::DoubleFree { slot }),
+        }
+    }
+
+    /// Validate a row write: `idx = pos / block_tokens` into the table,
+    /// `block` what the *real* table resolved there (`None` = index past
+    /// its end).  The write must stay inside the mirrored table and land
+    /// in the exact block the shadow granted this slot at that index.
+    pub fn check_write(
+        &self,
+        slot: usize,
+        pos: usize,
+        idx: usize,
+        block: Option<u32>,
+    ) -> Result<(), ShadowViolation> {
+        let Some(mine) = self.slots.get(slot).and_then(|s| s.as_ref()) else {
+            return Err(ShadowViolation::DeadSlotWrite { slot });
+        };
+        let Some(&granted) = mine.get(idx) else {
+            return Err(ShadowViolation::OutOfTable { slot, pos });
+        };
+        match block {
+            Some(b) if b == granted && self.owner.get(&b) == Some(&slot) => Ok(()),
+            Some(b) => Err(ShadowViolation::CrossSequenceAlias {
+                slot,
+                pos,
+                block: b,
+                owner: self.owner.get(&b).copied(),
+            }),
+            None => Err(ShadowViolation::OutOfTable { slot, pos }),
+        }
+    }
+
+    /// At retire, every sequence must have been freed and every block
+    /// returned.
+    pub fn check_quiescent(&self) -> Result<(), ShadowViolation> {
+        let live = self.slots.iter().filter(|s| s.is_some()).count();
+        if live > 0 || !self.owner.is_empty() {
+            return Err(ShadowViolation::LeakAtRetire {
+                live_slots: live,
+                owned_blocks: self.owner.len(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Abort on a sanitizer violation.  The one deliberate panic in this
+/// module: past this point block accounting is corrupt and any further
+/// decode step could read another sequence's KV rows.
+#[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+fn enforce(check: Result<(), ShadowViolation>) {
+    if let Err(v) = check {
+        // fa2lint: allow(no-hotpath-panic) -- sanitizer-only (debug/kv-sanitizer builds); aborting beats serving aliased KV rows
+        panic!("kv-sanitizer: {v}");
+    }
+}
+
 /// Handle to one sequence's block table in the arena.  Only meaningful
 /// for the arena that issued it; freeing returns the blocks to the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,6 +319,10 @@ pub struct KvArena {
     seqs: Vec<Option<Seq>>,
     free_slots: Vec<usize>,
     stats: CopyStats,
+    /// Shadow accounting mirrored on every alloc/free/write (DESIGN.md
+    /// §12); absent from release serving builds.
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    shadow: ShadowArena,
 }
 
 impl KvArena {
@@ -170,6 +340,8 @@ impl KvArena {
             seqs: Vec::new(),
             free_slots: Vec::new(),
             stats: CopyStats::default(),
+            #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+            shadow: ShadowArena::default(),
         }
     }
 
@@ -256,6 +428,11 @@ impl KvArena {
                 self.seqs.len() - 1
             }
         };
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_alloc(
+            id,
+            self.seqs[id].as_ref().map_or(&[][..], |s| &s.blocks),
+        ));
         Some(KvSlot(id))
     }
 
@@ -285,6 +462,7 @@ impl KvArena {
         // read and the pool writes are disjoint fields)
         let geo = self.geo;
         let dh = geo.d_head;
+        // fa2lint: allow(no-hotpath-panic) -- slot was allocated two lines up in this function; a miss is arena corruption
         let table = &self.seqs[slot.0].as_ref().expect("just allocated").blocks;
         for l in 0..geo.n_layer {
             for h in 0..geo.n_kv_head {
@@ -303,6 +481,9 @@ impl KvArena {
 
     /// Return a sequence's blocks to the pool.
     pub fn free(&mut self, slot: KvSlot) {
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_free(slot.0));
+        // fa2lint: allow(no-hotpath-panic) -- double free is unrecoverable accounting corruption; the sanitizer reports it first in debug builds
         let seq = self.seqs[slot.0].take().expect("double free of kv slot");
         self.in_use_blocks -= seq.blocks.len();
         self.free_blocks.extend(seq.blocks);
@@ -311,6 +492,7 @@ impl KvArena {
 
     /// This sequence's block table (physical block per logical block).
     pub fn table(&self, slot: KvSlot) -> &[u32] {
+        // fa2lint: allow(no-hotpath-panic) -- slot liveness is the KvSlot handle contract (slots are only freed through free())
         &self.seqs[slot.0].as_ref().expect("live slot").blocks
     }
 
@@ -326,8 +508,39 @@ impl KvArena {
 
     /// In-place paged access to one sequence (the native decode seam).
     pub fn paged_mut(&mut self, slot: KvSlot) -> PagedKvMut<'_> {
+        // fa2lint: allow(no-hotpath-panic) -- slot liveness is the handle contract; the shadow reports a dead slot with a typed violation first
         let table = &self.seqs[slot.0].as_ref().expect("live slot").blocks;
-        PagedKvMut { geo: self.geo, k: &mut self.k, v: &mut self.v, table }
+        PagedKvMut {
+            geo: self.geo,
+            k: &mut self.k,
+            v: &mut self.v,
+            table,
+            #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+            shadow: &self.shadow,
+            #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+            slot: slot.0,
+        }
+    }
+
+    /// Sanitizer: assert every sequence was freed and every block
+    /// returned — the engine worker calls this when it retires, so a
+    /// leaked reservation fails loudly instead of shrinking the pool
+    /// forever (DESIGN.md §12).
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    pub fn check_quiescent(&self) {
+        enforce(self.shadow.check_quiescent());
+    }
+
+    /// Test hook: corrupt `victim`'s block table to point at `donor`'s
+    /// first block WITHOUT telling the shadow — the next write through
+    /// `victim` must be caught as a cross-sequence alias.  Sanitizer
+    /// builds only; exists so the aliasing detector is itself testable.
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    pub fn corrupt_alias_for_test(&mut self, victim: KvSlot, donor: KvSlot) {
+        let donor_block = self.table(donor)[0];
+        if let Some(seq) = self.seqs[victim.0].as_mut() {
+            seq.blocks[0] = donor_block;
+        }
     }
 
     /// Assemble this sequence's legacy `(L, 1, H, S, dh)` slab pair
@@ -371,6 +584,10 @@ pub struct PagedKvMut<'a> {
     k: &'a mut [f32],
     v: &'a mut [f32],
     table: &'a [u32],
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    shadow: &'a ShadowArena,
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    slot: usize,
 }
 
 impl PagedKvMut<'_> {
@@ -386,6 +603,13 @@ impl PagedKvMut<'_> {
         debug_assert_eq!(krow.len(), geo.d_head);
         debug_assert_eq!(vrow.len(), geo.d_head);
         let (bt, dh) = (geo.block_tokens, geo.d_head);
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.check_write(
+            self.slot,
+            pos,
+            pos / bt,
+            self.table.get(pos / bt).copied(),
+        ));
         let blk = self.table[pos / bt] as usize;
         let at = blk * geo.block_elems() + geo.plane_offset(l, h) + (pos % bt) * dh;
         self.k[at..at + dh].copy_from_slice(krow);
@@ -496,6 +720,7 @@ impl KvBatchView<'_> {
             let arena = &mut *self.arena;
             let table = &arena.seqs[self.slots[bi].0]
                 .as_ref()
+                // fa2lint: allow(no-hotpath-panic) -- batch_view validated the slots when the view was built and holds the arena exclusively
                 .expect("view slots are live")
                 .blocks;
             for l in 0..geo.n_layer {
@@ -738,5 +963,150 @@ mod tests {
         // the whole point: native in-place decode never bumps the counters
         assert_eq!(a.stats(), CopyStats::default());
         assert_eq!(a.stats().total_bytes(), 0);
+    }
+}
+
+/// Sanitizer tests: drive the pure [`ShadowArena`] state machine, then
+/// inject real corruption into a [`KvArena`] and assert the abort paths
+/// fire with the right violation.  Gated exactly like the sanitizer so
+/// `cargo check --release --all-targets` (no debug_assertions, feature
+/// off) still compiles.
+#[cfg(all(test, any(debug_assertions, feature = "kv-sanitizer")))]
+mod sanitizer_tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn geo() -> KvGeometry {
+        KvGeometry { n_layer: 1, n_kv_head: 1, max_seq: 4, d_head: 2, block_tokens: 2 }
+    }
+
+    /// Run `f`, assert it panics, and return the panic message.
+    fn panic_message(f: impl FnOnce()) -> String {
+        let err = catch_unwind(AssertUnwindSafe(f)).expect_err("expected a sanitizer abort");
+        err.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("panic payload is a message")
+    }
+
+    // --- the pure state machine, violation by violation ---
+
+    #[test]
+    fn shadow_detects_double_free_and_slot_reuse() {
+        let mut s = ShadowArena::default();
+        s.on_alloc(0, &[3, 4]).unwrap();
+        assert_eq!(
+            s.on_alloc(0, &[5]),
+            Err(ShadowViolation::SlotReused { slot: 0 })
+        );
+        s.on_free(0).unwrap();
+        assert_eq!(s.on_free(0), Err(ShadowViolation::DoubleFree { slot: 0 }));
+        assert_eq!(s.on_free(9), Err(ShadowViolation::DoubleFree { slot: 9 }));
+    }
+
+    #[test]
+    fn shadow_detects_aliased_grant_and_leak() {
+        let mut s = ShadowArena::default();
+        s.on_alloc(0, &[1, 2]).unwrap();
+        assert_eq!(
+            s.on_alloc(1, &[2]),
+            Err(ShadowViolation::AliasedGrant { block: 2, slot: 1, other: 0 })
+        );
+        assert_eq!(
+            s.check_quiescent(),
+            Err(ShadowViolation::LeakAtRetire { live_slots: 1, owned_blocks: 2 })
+        );
+        s.on_free(0).unwrap();
+        s.check_quiescent().unwrap();
+    }
+
+    #[test]
+    fn shadow_validates_writes() {
+        let mut s = ShadowArena::default();
+        s.on_alloc(0, &[7, 8]).unwrap();
+        s.check_write(0, 3, 1, Some(8)).unwrap();
+        assert_eq!(
+            s.check_write(0, 4, 2, None),
+            Err(ShadowViolation::OutOfTable { slot: 0, pos: 4 })
+        );
+        // the real table disagrees with the shadow grant: aliasing
+        assert_eq!(
+            s.check_write(0, 0, 0, Some(9)),
+            Err(ShadowViolation::CrossSequenceAlias {
+                slot: 0,
+                pos: 0,
+                block: 9,
+                owner: None
+            })
+        );
+        assert_eq!(
+            s.check_write(5, 0, 0, Some(7)),
+            Err(ShadowViolation::DeadSlotWrite { slot: 5 })
+        );
+    }
+
+    // --- injected corruption through the real arena ---
+
+    #[test]
+    fn arena_double_free_aborts() {
+        let mut a = KvArena::with_block_capacity(geo(), 2);
+        let s = a.try_alloc_seq(1).unwrap();
+        a.free(s);
+        let msg = panic_message(move || a.free(s));
+        assert!(msg.contains("kv-sanitizer"), "{msg}");
+        assert!(msg.contains("double free"), "{msg}");
+    }
+
+    #[test]
+    fn arena_leak_at_retire_aborts() {
+        let mut a = KvArena::with_block_capacity(geo(), 2);
+        let _leaked = a.try_alloc_seq(2).unwrap();
+        let msg = panic_message(|| a.check_quiescent());
+        assert!(msg.contains("leak at retire"), "{msg}");
+        assert!(msg.contains("2 block"), "{msg}");
+    }
+
+    #[test]
+    fn arena_cross_sequence_alias_write_aborts() {
+        let mut a = KvArena::with_block_capacity(geo(), 2);
+        let victim = a.try_alloc_seq(1).unwrap();
+        let donor = a.try_alloc_seq(1).unwrap();
+        a.corrupt_alias_for_test(victim, donor);
+        let msg = panic_message(AssertUnwindSafe(|| {
+            let mut p = a.paged_mut(victim);
+            p.write_row(0, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        }));
+        assert!(msg.contains("kv-sanitizer"), "{msg}");
+        assert!(msg.contains("lands in block"), "{msg}");
+    }
+
+    #[test]
+    fn arena_out_of_table_write_aborts() {
+        let mut a = KvArena::with_block_capacity(geo(), 2);
+        // one block of 2 tokens reserved; token 2 is past the table
+        let s = a.try_alloc_seq(1).unwrap();
+        let msg = panic_message(AssertUnwindSafe(|| {
+            let mut p = a.paged_mut(s);
+            p.write_row(0, 0, 2, &[1.0, 2.0], &[3.0, 4.0]);
+        }));
+        assert!(msg.contains("out of its block table"), "{msg}");
+    }
+
+    #[test]
+    fn clean_lifecycle_stays_silent() {
+        let mut a = KvArena::with_block_capacity(geo(), 2);
+        let s0 = a.try_alloc_seq(1).unwrap();
+        let s1 = a.try_alloc_seq(1).unwrap();
+        {
+            let mut p = a.paged_mut(s0);
+            p.write_row(0, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+            p.write_row(0, 0, 1, &[5.0, 6.0], &[7.0, 8.0]);
+        }
+        a.free(s0);
+        // freed blocks may be re-granted immediately without tripping
+        let s2 = a.try_alloc_seq(1).unwrap();
+        a.free(s1);
+        a.free(s2);
+        a.check_quiescent();
     }
 }

@@ -283,9 +283,14 @@ struct InitModule {
 impl Module for InitModule {
     fn execute(&self, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecTiming)> {
         let t0 = Instant::now();
-        let seed = u32::from_le_bytes(
-            inputs[0].data[..4].try_into().expect("validated scalar seed"),
-        );
+        let seed_bytes = inputs
+            .first()
+            .and_then(|t| t.data.get(..4))
+            .and_then(|b| <[u8; 4]>::try_from(b).ok());
+        let Some(seed_bytes) = seed_bytes else {
+            bail!("init module expects a 4-byte scalar seed tensor as input 0");
+        };
+        let seed = u32::from_le_bytes(seed_bytes);
         let mut rng = Rng::seed_from(0xFA2_0002 ^ seed as u64);
         let outputs = param_specs(&self.cfg)
             .iter()
@@ -811,7 +816,7 @@ impl Backend for NativeBackend {
                     ],
                 }
             }
-            _ => unreachable!("provides_golden gated the kinds above"),
+            other => bail!("no golden generator for artifact kind {other:?}"),
         };
         Ok(Some(case))
     }

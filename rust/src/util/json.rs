@@ -94,6 +94,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
+                // fa2lint: allow(no-float-eq) -- fract()==0.0 is the exact integer test for compact serialization
                 if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {

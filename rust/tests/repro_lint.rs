@@ -1,0 +1,96 @@
+//! Self-application gate for the in-tree static analysis pass (DESIGN.md
+//! §12): the committed tree must lint clean, and the `--verify-lint`
+//! injection must turn the pass red.  This is the same honesty contract
+//! as the bench gate's FA2_BENCH_INJECT_SLOWDOWN check — a gate that
+//! cannot fail is not a gate.
+
+use fa2::analysis::{self, RULES};
+use fa2::bench::summary;
+
+/// The committed tree lints clean: every hot-path panic is either fixed
+/// or carries a justified `fa2lint: allow`, no float-literal equality
+/// outside tests, benches register their metrics, the dependency policy
+/// holds.  A violation here means a rule regressed or new code needs a
+/// fix/allow — read the rendered diagnostics in the panic message.
+#[test]
+fn committed_tree_is_lint_clean() {
+    let root = summary::workspace_root();
+    let report = analysis::lint_workspace(&root, false).expect("workspace is readable");
+    let rendered: Vec<String> = report.violations.iter().map(|d| d.render()).collect();
+    assert!(
+        report.clean(),
+        "repro lint found {} violation(s):\n{}",
+        report.violations.len(),
+        rendered.join("\n")
+    );
+}
+
+/// No stale suppressions: every `fa2lint: allow` in the tree must still
+/// be needed.  Unused allows are warnings, not violations — but letting
+/// them rot would make the allowlist meaningless, so the suite pins the
+/// tree to zero.
+#[test]
+fn committed_tree_has_no_unused_allows() {
+    let root = summary::workspace_root();
+    let report = analysis::lint_workspace(&root, false).expect("workspace is readable");
+    let rendered: Vec<String> = report.warnings.iter().map(|d| d.render()).collect();
+    assert!(
+        report.warnings.is_empty(),
+        "{} stale lint warning(s):\n{}",
+        report.warnings.len(),
+        rendered.join("\n")
+    );
+}
+
+/// The gate can actually fail: injecting the synthetic hot-path unwrap()
+/// fixture must produce a no-hotpath-panic violation (what
+/// `./ci.sh --verify-lint` checks end to end through the binary).
+#[test]
+fn injected_violation_turns_the_gate_red() {
+    let root = summary::workspace_root();
+    let clean = analysis::lint_workspace(&root, false).expect("workspace is readable");
+    let poisoned = analysis::lint_workspace(&root, true).expect("workspace is readable");
+    assert!(clean.clean());
+    assert!(!poisoned.clean());
+    assert_eq!(
+        poisoned.violations.len(),
+        clean.violations.len() + 1,
+        "injection must add exactly one violation"
+    );
+    assert!(poisoned.violations.iter().any(|d| {
+        d.rule == "no-hotpath-panic" && d.path.contains("__lint_inject_fixture")
+    }));
+}
+
+/// The tree actually exercises the allow grammar: suppression totals are
+/// non-zero (the justified hot-path expects in runtime/kv.rs et al), so
+/// the clean result above is not vacuous.
+#[test]
+fn allowlist_is_exercised_by_the_real_tree() {
+    let root = summary::workspace_root();
+    let report = analysis::lint_workspace(&root, false).expect("workspace is readable");
+    assert!(
+        !report.suppressed.is_empty(),
+        "expected at least one fa2lint allow to be live in the tree"
+    );
+}
+
+/// Rule registry sanity: ids are unique, kebab-case, and documented.
+#[test]
+fn rule_catalog_is_well_formed() {
+    let mut seen = std::collections::HashSet::new();
+    for rule in RULES {
+        assert!(seen.insert(rule.id), "duplicate rule id {}", rule.id);
+        assert!(!rule.summary.is_empty(), "{} has no summary", rule.id);
+        assert!(
+            rule.id
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'),
+            "{} is not kebab-case",
+            rule.id
+        );
+    }
+    assert!(seen.contains("no-hotpath-panic"));
+    assert!(seen.contains("no-float-eq"));
+    assert!(seen.contains("dep-policy"));
+}
