@@ -284,6 +284,56 @@ fn main() {
         ));
     }
 
+    // --- tracing overhead: span create/drop, disabled vs enabled ---
+    // The obs design rides on the disabled path being a single relaxed
+    // atomic load (DESIGN.md §13); measure it directly so the bench gate
+    // catches any accidental fat on the hot path.  The enabled path
+    // buffers into a thread-local ring and is allowed to be far slower.
+    assert!(!fa2::obs::trace::enabled(), "benches must start untraced");
+    let disabled_iters = 2_000_000u32;
+    let t0 = Instant::now();
+    for _ in 0..disabled_iters {
+        let g = fa2::obs_span!("bench_overhead_span");
+        drop(g);
+    }
+    let span_disabled_ns = t0.elapsed().as_nanos() as f64 / f64::from(disabled_iters);
+
+    fa2::obs::trace::set_enabled(true);
+    let enabled_iters = 100_000u32;
+    let t0 = Instant::now();
+    for _ in 0..enabled_iters {
+        let g = fa2::obs_span!("bench_overhead_span");
+        drop(g);
+    }
+    let span_enabled_ns = t0.elapsed().as_nanos() as f64 / f64::from(enabled_iters);
+    fa2::obs::trace::set_enabled(false);
+    fa2::obs::trace::reset();
+
+    println!(
+        "obs span create+drop: disabled {span_disabled_ns:.1} ns/op, \
+         enabled {span_enabled_ns:.1} ns/op"
+    );
+    records.push(summary::record(
+        "coordinator_hotpath",
+        "obs_span",
+        "disabled_ns_per_op",
+        span_disabled_ns,
+        "ns/op",
+        false,
+    ));
+    records.push(summary::record(
+        "coordinator_hotpath",
+        "obs_span",
+        "enabled_ns_per_op",
+        span_enabled_ns,
+        "ns/op",
+        false,
+    ));
+
+    // kernel GFLOP/s and tile-skip effectiveness, accumulated passively
+    // in the global obs registry by everything this bench ran above
+    summary::record_attn_obs(&mut records, "coordinator_hotpath", "process_totals");
+
     std::fs::create_dir_all("reports").expect("reports dir");
     let csv = format!(
         "path,decode_batch,kv_bytes_per_step,us_per_step\n\

@@ -36,6 +36,11 @@
 #                              bench suite with FA2_BENCH_INJECT_SLOWDOWN=1.2
 #                              and PASSES only if the bench gate FAILS
 #                              (requires a pinned non-empty baseline)
+#   ./ci.sh --verify-trace     one-command failure-path check for the obs
+#                              layer: a traced serve run must produce a
+#                              Chrome trace + Prometheus snapshot, and a
+#                              rerun with FA2_TRACE_INJECT_UNCLOSED=1 must
+#                              FAIL on the unclosed-span validator
 #
 # Run from anywhere; CHANGES.md convention: every PR's entry should note
 # that `./ci.sh` is green (or which step it knowingly skips).
@@ -47,6 +52,7 @@ UPDATE_BASELINE=0
 VERIFY_GATE=0
 LINT_ONLY=0
 VERIFY_LINT=0
+VERIFY_TRACE=0
 for arg in "$@"; do
     case "$arg" in
         --quick) QUICK=1 ;;
@@ -54,7 +60,8 @@ for arg in "$@"; do
         --verify-gate) VERIFY_GATE=1 ;;
         --lint-only) LINT_ONLY=1 ;;
         --verify-lint) VERIFY_LINT=1 ;;
-        *) echo "usage: ./ci.sh [--quick] [--lint-only] [--verify-lint] [--update-baseline] [--verify-gate]" >&2; exit 2 ;;
+        --verify-trace) VERIFY_TRACE=1 ;;
+        *) echo "usage: ./ci.sh [--quick] [--lint-only] [--verify-lint] [--update-baseline] [--verify-gate] [--verify-trace]" >&2; exit 2 ;;
     esac
 done
 
@@ -97,6 +104,31 @@ if [ "$VERIFY_GATE" = 1 ]; then
         exit 1
     fi
     echo "verify-gate: bench gate correctly FAILED under the injected slowdown"
+    exit 0
+fi
+
+if [ "$VERIFY_TRACE" = 1 ]; then
+    cargo build --release --bin repro
+    echo "== verify-trace: traced serve run must export trace + metrics =="
+    rm -f reports/trace.json reports/metrics.prom
+    cargo run --release --quiet --bin repro -- serve --backend native \
+        --requests 3 --tokens 4 --rate 0 \
+        --trace reports/trace.json --metrics-out reports/metrics.prom
+    grep -q '"engine_step"' reports/trace.json \
+        || { echo "FAIL: reports/trace.json has no engine_step spans" >&2; exit 1; }
+    grep -q '"sched_admit"' reports/trace.json \
+        || { echo "FAIL: reports/trace.json has no sched_admit events" >&2; exit 1; }
+    grep -q '^fa2_' reports/metrics.prom \
+        || { echo "FAIL: reports/metrics.prom has no fa2_ series" >&2; exit 1; }
+    echo "== verify-trace: unclosed-span fixture must turn the validator red =="
+    if FA2_TRACE_INJECT_UNCLOSED=1 cargo run --release --quiet --bin repro -- \
+        serve --backend native --requests 3 --tokens 4 --rate 0 \
+        --trace reports/trace_unclosed.json; then
+        echo "FAIL: traced serve passed despite an injected unclosed span" >&2
+        exit 1
+    fi
+    rm -f reports/trace_unclosed.json
+    echo "verify-trace: validator correctly FAILED on the unclosed span"
     exit 0
 fi
 

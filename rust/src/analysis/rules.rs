@@ -53,6 +53,13 @@ pub const RULES: &[Rule] = &[
                   (allowlist those explicitly)",
     },
     Rule {
+        id: "obs-name-registry",
+        summary: "every span/counter name used via the obs macros must be \
+                  snake_case and declared exactly once in \
+                  rust/src/obs/registry.rs (a typo would silently fork the \
+                  metric series)",
+    },
+    Rule {
         id: "allow-syntax",
         summary: "fa2lint directives must parse: \
                   `// fa2lint: allow(rule-id) -- reason`, known rule ids, \
@@ -76,6 +83,7 @@ pub fn run_all(files: &[ScannedFile]) -> Vec<Diagnostic> {
         kernel_release_assert(f, &mut out);
     }
     error_variant_tested(files, &mut out);
+    obs_name_registry(files, &mut out);
     out
 }
 
@@ -370,6 +378,125 @@ fn collect_error_variants(f: &ScannedFile, out: &mut Vec<(String, u32, String, S
     }
 }
 
+/// Rule `obs-name-registry`: every name passed to an obs macro must be
+/// snake_case and declared exactly once in `rust/src/obs/registry.rs`.
+/// `obs::counters` silently drops writes to unknown names (a hot-path
+/// panic would be worse), so a typo'd name forks the metric series
+/// without any runtime signal — this gate is the only thing that
+/// catches it.  Raw-text based: the token scanner blanks string-literal
+/// contents, so the macros' name arguments are invisible at token
+/// level.  The macro needles are assembled at runtime so this file's
+/// own non-test source never matches them.
+pub fn obs_name_registry(files: &[ScannedFile], out: &mut Vec<Diagnostic>) {
+    let registry_suffix = "obs/registry.rs";
+    let macros = ["obs_span", "obs_event", "obs_count", "obs_gauge_max", "obs_gauge"];
+    let needles: Vec<String> = macros.iter().map(|m| format!("{m}!(")).collect();
+
+    // Pass 1: declarations.  One `NameDef { .. name: ".." .. }` per line
+    // in the registry file, outside test regions.
+    let mut declared: Vec<(String, String, u32)> = Vec::new(); // path, name, line
+    for f in files {
+        if !f.path.ends_with(registry_suffix) {
+            continue;
+        }
+        for (idx, raw) in f.text.lines().enumerate() {
+            let line = idx as u32 + 1;
+            if f.in_test(line) || raw.trim_start().starts_with("//") {
+                continue;
+            }
+            if !raw.contains("NameDef") {
+                continue;
+            }
+            let Some(at) = raw.find("name: \"") else { continue };
+            let rest = &raw[at + "name: \"".len()..];
+            let Some(end) = rest.find('"') else { continue };
+            declared.push((f.path.clone(), rest[..end].to_string(), line));
+        }
+    }
+    let mut first_seen: std::collections::HashMap<&str, u32> =
+        std::collections::HashMap::new();
+    for (path, name, line) in &declared {
+        if let Some(first) = first_seen.insert(name.as_str(), *line) {
+            out.push(Diagnostic::new(
+                path,
+                *line,
+                "obs-name-registry",
+                format!("`{name}` is declared twice in the registry \
+                         (first at line {first}) — one metric series, \
+                         one declaration"),
+            ));
+        }
+    }
+
+    // Pass 2: usages.  Find each `<macro>!(` occurrence in non-test,
+    // non-comment source and check the first argument.
+    for f in files {
+        if f.kind == FileKind::Manifest {
+            continue;
+        }
+        let text = &f.text;
+        for needle in &needles {
+            let mut from = 0usize;
+            while let Some(pos) = text[from..].find(needle.as_str()) {
+                let at = from + pos;
+                from = at + needle.len();
+                // ident boundary on the left: skip `macro_rules!`-style
+                // or prefixed identifiers that merely end with the name
+                if at > 0 {
+                    let c = text.as_bytes()[at - 1];
+                    if c.is_ascii_alphanumeric() || c == b'_' {
+                        continue;
+                    }
+                }
+                let line = text[..at].bytes().filter(|&b| b == b'\n').count() as u32 + 1;
+                let line_start = text[..at].rfind('\n').map_or(0, |i| i + 1);
+                let before = &text[line_start..at];
+                if f.in_test(line) || before.contains("//") {
+                    continue;
+                }
+                // first argument: a string literal, possibly on the next
+                // line for multi-line event calls
+                let rest = text[from..].trim_start();
+                if !rest.starts_with('"') {
+                    out.push(Diagnostic::new(
+                        &f.path,
+                        line,
+                        "obs-name-registry",
+                        "obs macro name must be an inline string literal \
+                         (the registry gate cannot see computed names)"
+                            .to_string(),
+                    ));
+                    continue;
+                }
+                let body = &rest[1..];
+                let Some(end) = body.find('"') else { continue };
+                let name = &body[..end];
+                let snake = !name.is_empty()
+                    && name
+                        .bytes()
+                        .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+                if !snake {
+                    out.push(Diagnostic::new(
+                        &f.path,
+                        line,
+                        "obs-name-registry",
+                        format!("obs name `{name}` is not snake_case"),
+                    ));
+                } else if !first_seen.contains_key(name) {
+                    out.push(Diagnostic::new(
+                        &f.path,
+                        line,
+                        "obs-name-registry",
+                        format!("obs name `{name}` is not declared in \
+                                 rust/src/obs/registry.rs — writes to it are \
+                                 silently dropped"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -509,5 +636,87 @@ mod tests {
             })
             .collect();
         assert_eq!(names, vec!["Framed", "Nested"]);
+    }
+
+    // The obs fixtures assemble the macro needles with format! so this
+    // file's own source never contains `<macro>!(` outside a test region.
+
+    #[test]
+    fn obs_names_must_be_snake_case_and_declared() {
+        let reg = "pub const REGISTRY: &[NameDef] = &[\n\
+                   NameDef { kind: NameKind::Counter, name: \"good_total\", help: \"h\" },\n\
+                   NameDef { kind: NameKind::Counter, name: \"dup_total\", help: \"h\" },\n\
+                   NameDef { kind: NameKind::Counter, name: \"dup_total\", help: \"h\" },\n\
+                   ];\n";
+        let user = format!(
+            "fn f(id: u64) {{\n\
+                 crate::{c}!(\"good_total\", 1);\n\
+                 crate::{c}!(\"missing_total\", 1);\n\
+                 crate::{c}!(\"Bad-Name\", 1);\n\
+                 crate::{e}!(\n\
+                     \"good_total\",\n\
+                     \"session\" => id,\n\
+                 );\n\
+                 crate::{c}!(COMPUTED, 1);\n\
+             }}\n",
+            c = "obs_count",
+            e = "obs_event",
+        );
+        let files = vec![
+            scan("rust/src/obs/registry.rs", FileKind::Src, reg),
+            scan("rust/src/coordinator/engine.rs", FileKind::Src, &user),
+        ];
+        let mut d = Vec::new();
+        obs_name_registry(&files, &mut d);
+        let mut hits: Vec<(String, u32)> = d
+            .iter()
+            .filter(|d| d.rule == "obs-name-registry")
+            .map(|d| (d.path.clone(), d.line))
+            .collect();
+        hits.sort();
+        assert_eq!(
+            hits,
+            vec![
+                ("rust/src/coordinator/engine.rs".to_string(), 3), // undeclared
+                ("rust/src/coordinator/engine.rs".to_string(), 4), // not snake_case
+                ("rust/src/coordinator/engine.rs".to_string(), 9), // computed name
+                ("rust/src/obs/registry.rs".to_string(), 4),       // duplicate decl
+            ],
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn obs_rule_skips_comments_and_test_regions() {
+        let reg = "pub const REGISTRY: &[NameDef] = &[\n\
+                   NameDef { kind: NameKind::Span, name: \"real_span\", help: \"h\" },\n\
+                   ];\n";
+        let user = format!(
+            "fn f() {{\n\
+                 // crate::{s}!(\"commented_out\");\n\
+                 let _sp = crate::{s}!(\"real_span\"); // crate::{s}!(\"trailing\")\n\
+             }}\n\
+             #[cfg(test)]\n\
+             mod tests {{\n\
+                 fn t() {{ let _ = crate::{s}!(\"test_only_name\"); }}\n\
+             }}\n",
+            s = "obs_span",
+        );
+        let files = vec![
+            scan("rust/src/obs/registry.rs", FileKind::Src, reg),
+            scan("rust/src/runtime/kv.rs", FileKind::Src, &user),
+        ];
+        let mut d = Vec::new();
+        obs_name_registry(&files, &mut d);
+        assert!(d.is_empty(), "{d:?}");
+        // integration-test files are entirely test scope
+        let tf = scan(
+            "rust/tests/obs_trace.rs",
+            FileKind::TestFile,
+            &format!("fn t() {{ let _ = fa2::{s}!(\"anything_goes\"); }}\n", s = "obs_span"),
+        );
+        let mut d = Vec::new();
+        obs_name_registry(&[files.into_iter().next().unwrap(), tf], &mut d);
+        assert!(d.is_empty(), "{d:?}");
     }
 }

@@ -52,6 +52,10 @@ pub(crate) fn forward_tile(
     // after the diagonal for causal-like masks.
     let first_col = spec.mask.row_bounds(q0, n).0;
     let mut j0 = (first_col / bk) * bk;
+    // tiles visited vs skipped (§3 work partitioning made observable):
+    // blocks before first_col and after the causal break never iterate,
+    // so skipped = ceil(n/bk) − full − partial at the end
+    let (mut tiles_full, mut tiles_partial) = (0u64, 0u64);
     while j0 < n {
         let j1 = (j0 + bk).min(n);
         let cover = spec.mask.cover(q0, q1, j0, j1);
@@ -61,6 +65,11 @@ pub(crate) fn forward_tile(
             }
             j0 = j1;
             continue; // left of the window: never read, move right
+        }
+        if cover == Cover::Full {
+            tiles_full += 1;
+        } else {
+            tiles_partial += 1;
         }
         for (ri, i) in (q0..q1).enumerate() {
             // columns of this block row i may attend to; masked columns
@@ -117,6 +126,12 @@ pub(crate) fn forward_tile(
         }
         j0 = j1;
     }
+    crate::obs_count!("attn_tiles_full_total", tiles_full);
+    crate::obs_count!("attn_tiles_partial_total", tiles_partial);
+    crate::obs_count!(
+        "attn_tiles_skipped_total",
+        n.div_ceil(bk) as u64 - tiles_full - tiles_partial
+    );
 
     // finalize: O = õ / l, LSE = m + ln l (the single statistic saved)
     let mut lse = vec![0.0f32; rows];

@@ -75,6 +75,8 @@ pub fn forward_spec_with(
     spec: AttnSpec,
     p: FlashParams,
 ) -> FlashOut {
+    let _sp = crate::obs_span!("attn_flash_fwd");
+    let t0 = std::time::Instant::now();
     let qd = spec.q_dims();
     let kd = spec.kv_dims();
     let qv = TensorView::new(qd, q);
@@ -92,6 +94,8 @@ pub fn forward_spec_with(
         let lo = qd.lse_offset(b, h, q0);
         out.lse[lo..lo + (q1 - q0)].copy_from_slice(&lt);
     }
+    crate::obs_count!("flash_fwd_flops_total", qd.flops(crate::attn::Pass::Fwd));
+    crate::obs_count!("flash_fwd_ns_total", t0.elapsed().as_nanos());
     out
 }
 
@@ -139,6 +143,8 @@ pub fn backward_spec_with(
     spec: AttnSpec,
     p: FlashParams,
 ) -> FlashGrads {
+    let _sp = crate::obs_span!("attn_flash_bwd");
+    let t0 = std::time::Instant::now();
     let qd = spec.q_dims();
     let kd = spec.kv_dims();
     let qv = TensorView::new(qd, q);
@@ -197,6 +203,8 @@ pub fn backward_spec_with(
             }
         }
     }
+    crate::obs_count!("flash_bwd_flops_total", qd.flops(crate::attn::Pass::Bwd));
+    crate::obs_count!("flash_bwd_ns_total", t0.elapsed().as_nanos());
     g
 }
 

@@ -196,6 +196,20 @@ pub fn merge_into(path: &Path, records: &[BenchRecord]) -> Result<()> {
     save(path, &all)
 }
 
+/// Append observability-derived kernel metrics to a bench's record set:
+/// per-kernel GFLOP/s and the `Mask::cover` tile-skip rate, read from the
+/// global obs counter registry (populated passively whenever kernels run
+/// in this process).  Counters that never moved contribute nothing, so a
+/// bench that exercises only the forward kernel records only
+/// `flash_fwd_gflops`.  Shares `obs::expo::derived` with the Prometheus
+/// exposition so the two layers can never disagree on the arithmetic.
+pub fn record_attn_obs(records: &mut Vec<BenchRecord>, bench: &str, config: &str) {
+    for (name, _help, value) in crate::obs::expo::derived(crate::obs::counters::global()) {
+        let unit = if name.ends_with("_rate") { "ratio" } else { "gflops" };
+        records.push(record(bench, config, name, value, unit, true));
+    }
+}
+
 /// The gate's verdict over one baseline/current comparison.
 #[derive(Debug, Default)]
 pub struct GateReport {
@@ -362,6 +376,24 @@ mod tests {
         assert_eq!(r.compared, 1);
         assert_eq!(r.missing_in_current, vec!["b/c/m".to_string()]);
         assert_eq!(r.missing_in_baseline, vec!["n/c/m".to_string()]);
+    }
+
+    #[test]
+    fn record_attn_obs_reads_the_global_registry() {
+        // seed the global decode counters; other tests may add on top
+        // concurrently, which only moves the ratio — never removes it
+        let c = crate::obs::counters::global();
+        c.add("decode_flops_total", 2_000);
+        c.add("decode_ns_total", 1_000);
+        let mut recs = Vec::new();
+        record_attn_obs(&mut recs, "hotpath", "obs");
+        let g = recs
+            .iter()
+            .find(|r| r.metric == "decode_gflops")
+            .expect("decode_gflops recorded once the counters moved");
+        assert!(g.value > 0.0, "ratio of positive totals: {}", g.value);
+        assert!(g.higher_is_better && g.unit == "gflops");
+        assert!(recs.iter().all(|r| r.bench == "hotpath" && r.config == "obs"));
     }
 
     #[test]

@@ -436,6 +436,8 @@ impl Engine {
         let mut depth = self.queued.load(Ordering::Relaxed);
         loop {
             if depth >= self.max_queue {
+                crate::obs_count!("sched_saturations_total", 1);
+                crate::obs_event!("sched_saturate", "need" => need);
                 return Err(EngineError::Saturated { max_queue: self.max_queue });
             }
             match self.queued.compare_exchange_weak(
@@ -787,6 +789,12 @@ fn worker(
         if sessions.is_empty() {
             continue;
         }
+        // One traced step: the plan decision and every sub-step batch
+        // below ride under this span (DESIGN.md §13).  Idle loop
+        // iterations above never reach it, so an enabled trace holds
+        // only steps that did work.
+        let _step = crate::obs_span!("engine_step");
+        crate::obs_count!("engine_steps_total", 1);
 
         // Scheduler step: preemptions free blocks first, admissions then
         // reserve against real arena availability.
@@ -804,6 +812,14 @@ fn worker(
             s.cursor = 0;
             s.pos = 0;
             metrics.observe_preemption();
+            // Audit-log row: who was evicted, how many blocks it gave
+            // back, and which admission (the FCFS head) it made room for.
+            crate::obs_event!(
+                "sched_preempt",
+                "session" => id,
+                "need" => s.need_blocks,
+                "victim_of" => plan.admitted.first().copied().unwrap_or(u64::MAX),
+            );
         }
         for &id in &plan.admitted {
             let s = sessions.get_mut(&id).expect("admitted id is live");
@@ -811,6 +827,8 @@ fn worker(
                 .try_alloc_seq(s.need_blocks)
                 .expect("plan respects arena availability");
             s.slot = Some(slot);
+            metrics.observe_admission();
+            crate::obs_event!("sched_admit", "session" => id, "need" => s.need_blocks);
             if !s.admitted_once {
                 s.admitted_once = true;
                 queued.fetch_sub(1, Ordering::AcqRel);
@@ -875,6 +893,11 @@ fn worker(
                 };
                 metrics.observe_decode_step(group.len());
                 metrics.observe_prefill_rows(prefill_rows);
+                crate::obs_event!(
+                    "engine_rows",
+                    "decode" => group.len() - prefill_rows,
+                    "prefill" => prefill_rows,
+                );
                 for (bi, id) in group.iter().enumerate() {
                     let s = sessions.get_mut(id).expect("id came from the map");
                     let row = &logits[bi * shapes.vocab..(bi + 1) * shapes.vocab];

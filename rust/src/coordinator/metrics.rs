@@ -2,19 +2,31 @@
 //! token throughput, and the engine's decode-step/KV-copy accounting
 //! (`kv_*` must be zero on the native in-place path — DESIGN.md §8).
 //! Printed by `repro serve` and the serving example.
+//!
+//! The scalar books live in a **local** [`Counters`] instance keyed by
+//! the `obs::registry` names (DESIGN.md §13) — `Metrics` is a reader
+//! over that registry rather than a bag of ad-hoc fields.  Every
+//! increment is mirrored into `obs::counters::global()` so the
+//! exposition layer (`repro serve --metrics-out`, future `/metrics`)
+//! sees engine activity without holding a reference to any `Metrics`;
+//! the local instance is what keeps concurrent engines in one test
+//! binary from reading each other's counts.
 
 use std::time::Instant;
 
+use crate::obs::counters::{self, Counters};
 use crate::runtime::CopyStats;
 use crate::util::stats::{percentile, fmt_duration};
 
-/// Percentile over an unsorted sample set (0.0 when empty).
+/// Percentile over an unsorted sample set (0.0 when empty).  `total_cmp`
+/// gives NaN a fixed sort position (after +inf) instead of panicking the
+/// metrics path on a single corrupt latency sample.
 fn sorted_percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     percentile(&s, q)
 }
 
@@ -24,14 +36,7 @@ pub struct Metrics {
     latencies: Vec<f64>,
     ttfts: Vec<f64>,
     queue_waits: Vec<f64>,
-    tokens: u64,
-    decode_steps: u64,
-    decode_rows: u64,
-    prefill_rows: u64,
-    preemptions: u64,
-    cancelled: u64,
-    prompt_tokens: u64,
-    prompt_pad_tokens: u64,
+    counters: Counters,
     kv: CopyStats,
 }
 
@@ -42,34 +47,33 @@ impl Metrics {
             latencies: Vec::new(),
             ttfts: Vec::new(),
             queue_waits: Vec::new(),
-            tokens: 0,
-            decode_steps: 0,
-            decode_rows: 0,
-            prefill_rows: 0,
-            preemptions: 0,
-            cancelled: 0,
-            prompt_tokens: 0,
-            prompt_pad_tokens: 0,
+            counters: Counters::new(),
             kv: CopyStats::default(),
         }
+    }
+
+    /// Count locally and mirror into the process-wide registry.
+    fn bump(&self, name: &'static str, v: u64) {
+        self.counters.add(name, v);
+        counters::global().add(name, v);
     }
 
     pub fn observe_request(&mut self, latency: f64, ttft: f64, n_tokens: usize) {
         self.latencies.push(latency);
         self.ttfts.push(ttft);
-        self.tokens += n_tokens as u64;
+        self.bump("engine_tokens_total", n_tokens as u64);
     }
 
     /// One batched decode step over `rows` real sequences.
     pub fn observe_decode_step(&mut self, rows: usize) {
-        self.decode_steps += 1;
-        self.decode_rows += rows as u64;
+        self.bump("engine_decode_steps_total", 1);
+        self.bump("engine_decode_rows_total", rows as u64);
     }
 
     /// `rows` of the last decode step carried chunked-prefill (replay)
     /// tokens rather than sampled decode tokens.
     pub fn observe_prefill_rows(&mut self, rows: usize) {
-        self.prefill_rows += rows as u64;
+        self.bump("engine_prefill_rows_total", rows as u64);
     }
 
     /// Scheduler admission: time a session waited in the pending queue
@@ -78,32 +82,41 @@ impl Metrics {
         self.queue_waits.push(secs);
     }
 
+    /// The scheduler granted a session KV blocks (initial admission or
+    /// resume after preemption).
+    pub fn observe_admission(&mut self) {
+        self.bump("sched_admissions_total", 1);
+    }
+
     /// The anti-starvation policy evicted an active session (its cache is
     /// recomputed by replay on re-admission).
     pub fn observe_preemption(&mut self) {
-        self.preemptions += 1;
+        self.bump("sched_preemptions_total", 1);
     }
 
     /// Admission accounting: `true_len` is the client's prompt length,
     /// `padded_len` the compiled window it was padded to (satellite fix:
     /// true lengths are tracked, never silently truncated).
     pub fn observe_prompt(&mut self, true_len: usize, padded_len: usize) {
-        self.prompt_tokens += true_len as u64;
-        self.prompt_pad_tokens += (padded_len - true_len.min(padded_len)) as u64;
+        self.bump("engine_prompt_tokens_total", true_len as u64);
+        self.bump(
+            "engine_prompt_pad_tokens_total",
+            (padded_len - true_len.min(padded_len)) as u64,
+        );
     }
 
     /// Total true prompt tokens admitted.
     pub fn prompt_tokens(&self) -> u64 {
-        self.prompt_tokens
+        self.counters.get("engine_prompt_tokens_total")
     }
 
     /// Pad tokens spent filling prompts to the compiled window.
     pub fn prompt_pad_tokens(&self) -> u64 {
-        self.prompt_pad_tokens
+        self.counters.get("engine_prompt_pad_tokens_total")
     }
 
     pub fn observe_cancelled(&mut self) {
-        self.cancelled += 1;
+        self.bump("engine_cancelled_total", 1);
     }
 
     /// Install the arena's copy accounting at worker shutdown.
@@ -112,15 +125,19 @@ impl Metrics {
     }
 
     pub fn decode_steps(&self) -> u64 {
-        self.decode_steps
+        self.counters.get("engine_decode_steps_total")
     }
 
     pub fn prefill_rows(&self) -> u64 {
-        self.prefill_rows
+        self.counters.get("engine_prefill_rows_total")
+    }
+
+    pub fn admissions(&self) -> u64 {
+        self.counters.get("sched_admissions_total")
     }
 
     pub fn preemptions(&self) -> u64 {
-        self.preemptions
+        self.counters.get("sched_preemptions_total")
     }
 
     pub fn queue_wait_percentile(&self, q: f64) -> f64 {
@@ -128,7 +145,7 @@ impl Metrics {
     }
 
     pub fn cancelled(&self) -> u64 {
-        self.cancelled
+        self.counters.get("engine_cancelled_total")
     }
 
     /// Bytes assembled into batch cache tensors (compat path only).
@@ -143,10 +160,11 @@ impl Metrics {
 
     /// KV bytes moved per decode step — 0 on the native in-place path.
     pub fn kv_bytes_per_step(&self) -> f64 {
-        if self.decode_steps == 0 {
+        let steps = self.decode_steps();
+        if steps == 0 {
             0.0
         } else {
-            self.kv.total_bytes() as f64 / self.decode_steps as f64
+            self.kv.total_bytes() as f64 / steps as f64
         }
     }
 
@@ -155,7 +173,7 @@ impl Metrics {
     }
 
     pub fn tokens(&self) -> u64 {
-        self.tokens
+        self.counters.get("engine_tokens_total")
     }
 
     pub fn elapsed(&self) -> f64 {
@@ -163,7 +181,7 @@ impl Metrics {
     }
 
     pub fn tokens_per_sec(&self) -> f64 {
-        self.tokens as f64 / self.elapsed()
+        self.tokens() as f64 / self.elapsed()
     }
 
     pub fn latency_percentile(&self, q: f64) -> f64 {
@@ -175,6 +193,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        let steps = self.decode_steps();
         format!(
             "requests={} tokens={} throughput={:.1} tok/s  \
              latency p50={} p95={}  ttft p50={}  queue wait p50={}\n\
@@ -189,17 +208,17 @@ impl Metrics {
             fmt_duration(self.latency_percentile(0.95)),
             fmt_duration(self.ttft_percentile(0.5)),
             fmt_duration(self.queue_wait_percentile(0.5)),
-            self.decode_steps,
-            if self.decode_steps == 0 {
+            steps,
+            if steps == 0 {
                 0.0
             } else {
-                self.decode_rows as f64 / self.decode_steps as f64
+                self.counters.get("engine_decode_rows_total") as f64 / steps as f64
             },
-            self.prefill_rows,
-            self.preemptions,
-            self.cancelled,
-            self.prompt_tokens,
-            self.prompt_pad_tokens,
+            self.prefill_rows(),
+            self.preemptions(),
+            self.cancelled(),
+            self.prompt_tokens(),
+            self.prompt_pad_tokens(),
             self.kv_bytes_per_step(),
             self.kv.gather_bytes,
             self.kv.scatter_bytes,
@@ -240,6 +259,8 @@ mod tests {
         m.observe_prefill_rows(2);
         m.observe_prefill_rows(3);
         m.observe_preemption();
+        m.observe_admission();
+        m.observe_admission();
         m.observe_queue_wait(0.25);
         m.observe_queue_wait(0.75);
         m.observe_cancelled();
@@ -249,6 +270,7 @@ mod tests {
         assert_eq!(m.prompt_pad_tokens(), 4);
         assert_eq!(m.prefill_rows(), 5);
         assert_eq!(m.preemptions(), 1);
+        assert_eq!(m.admissions(), 2);
         assert!((m.queue_wait_percentile(0.5) - 0.5).abs() < 1e-9);
         m.set_kv_copies(CopyStats {
             gathers: 4,
@@ -266,5 +288,36 @@ mod tests {
         assert!(r.contains("cancelled=1"), "{r}");
         assert!(r.contains("preemptions=1"), "{r}");
         assert!(r.contains("5 prefill rows"), "{r}");
+    }
+
+    #[test]
+    fn two_engines_keep_independent_books() {
+        // the regression the per-Metrics local registry instance guards:
+        // two live Metrics (concurrent engines in one test binary) must
+        // not bleed counts into each other, whatever the global mirror
+        // accumulates.
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.observe_decode_step(2);
+        a.observe_decode_step(2);
+        b.observe_decode_step(7);
+        assert_eq!(a.decode_steps(), 2);
+        assert_eq!(b.decode_steps(), 1);
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_the_percentiles() {
+        // regression: sorted_percentile used partial_cmp().unwrap(), so a
+        // single NaN sample panicked the shutdown report.
+        let mut m = Metrics::new();
+        m.observe_request(0.5, 0.1, 1);
+        m.observe_request(f64::NAN, f64::NAN, 1);
+        m.observe_request(0.25, 0.05, 1);
+        m.observe_queue_wait(f64::NAN);
+        let p50 = m.latency_percentile(0.5);
+        assert!(p50.is_finite(), "median of {{0.25, 0.5, NaN}} picked {p50}");
+        assert!((p50 - 0.5).abs() < 1e-9, "NaN sorts after +inf, median is 0.5");
+        // the report renders without panicking even with NaN samples
+        assert!(m.report().contains("requests=3"));
     }
 }

@@ -237,6 +237,7 @@ impl Scheduler {
     /// starvation preemption batch) given `free_blocks` actually available
     /// in the KV arena.
     pub fn plan(&mut self, free_blocks: usize) -> StepPlan {
+        let _sp = crate::obs_span!("sched_plan");
         // Block conservation (DESIGN.md §12): with a bounded arena, the
         // caller's free count plus this policy's reservations must account
         // for every block at every step — drift here means the engine and

@@ -8,6 +8,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod gpusim;
+pub mod obs;
 pub mod runtime;
 pub mod train;
 pub mod util;

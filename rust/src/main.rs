@@ -58,7 +58,8 @@ fn usage() -> ! {
                      [--backend B] [--stream] [--temperature T] [--top-k K]\n            \
                      [--sched continuous|gang] [--max-in-flight N]\n            \
                      [--prefill-chunk N] [--kv-block T] [--kv-blocks N]\n            \
-                     [--kv-heads H] [--window W]\n  \
+                     [--kv-heads H] [--window W]\n            \
+                     [--trace FILE] [--metrics-out FILE]  (env: FA2_TRACE=FILE)\n  \
            attn-exec [--batch B] [--heads H] [--kv-heads H] [--seqlen N]\n            \
                      [--head-dim D] [--causal 0|1] [--window W]\n            \
                      [--threads T] [--check 0|1]\n  \
@@ -407,6 +408,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = args.get_usize("window")? {
         model_cfg.window = Some(w);
     }
+    // Observability wiring (DESIGN.md §13): --trace (or FA2_TRACE) turns
+    // the span/event recorder on for the whole run and exports Chrome
+    // trace JSON at the end; --metrics-out snapshots the global counter
+    // registry as Prometheus text.  Neither flag set: the recorder stays
+    // at its one-atomic-load disabled path.
+    let trace_path: Option<String> = args
+        .get("trace")
+        .map(str::to_string)
+        .or_else(|| std::env::var("FA2_TRACE").ok().filter(|p| !p.is_empty()));
+    if trace_path.is_some() {
+        fa2::obs::trace::set_enabled(true);
+        // ci.sh --verify-trace: leak one span so the export validator
+        // must fail — proving the unclosed-span check can turn red.
+        if std::env::var("FA2_TRACE_INJECT_UNCLOSED").is_ok() {
+            fa2::obs::trace::inject_unclosed();
+        }
+    }
+    let serve_span = fa2::obs_span!("serve_run");
     let mode = SchedMode::from_flag(&cfg.sched)
         .with_context(|| format!("--sched {}: expected continuous|gang", cfg.sched))?;
     let sched_cfg = SchedulerConfig {
@@ -519,6 +538,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let metrics = engine.shutdown()?;
     println!("{}", metrics.report());
+    // the run span must close before the exporter's unclosed-span check
+    drop(serve_span);
+    if let Some(p) = &trace_path {
+        let n = fa2::obs::trace::export_to(Path::new(p))?;
+        println!("trace: {n} events -> {p} (load in Perfetto or chrome://tracing)");
+    }
+    if let Some(p) = args.get("metrics-out") {
+        fa2::obs::expo::write_prometheus(Path::new(p), fa2::obs::counters::global())?;
+        println!("metrics -> {p}");
+    }
     Ok(())
 }
 

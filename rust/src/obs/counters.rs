@@ -1,0 +1,141 @@
+//! The counter/gauge registry instance (DESIGN.md §13): one `AtomicU64`
+//! cell per declared name, addressed by the [`super::registry`] table.
+//!
+//! Counters are **always on** — a relaxed `fetch_add` per increment is
+//! cheap enough to leave in the hot path unconditionally (the expensive
+//! machinery, the trace stream, is what hides behind the enable gate).
+//! Two instances matter:
+//!
+//! - the process-wide [`global()`] instance, which the kernels, the KV
+//!   arena, and the scheduler write into and the exposition layer
+//!   (`obs::expo`) snapshots;
+//! - per-[`crate::coordinator::metrics::Metrics`] **local** instances, so
+//!   concurrent engines in one test binary keep independent books (each
+//!   `Metrics` mirrors its increments into the global instance).
+//!
+//! Writes against names missing from the registry are silently dropped —
+//! the `obs-name-registry` lint rule makes that unreachable for committed
+//! code, and a lint gate beats a runtime panic in a serving hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::registry::{self, NameDef, REGISTRY};
+
+/// A full set of cells, one per registry entry (spans/events included so
+/// indices line up; only Counter/Gauge entries are ever written).
+#[derive(Debug)]
+pub struct Counters {
+    cells: Vec<AtomicU64>,
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters { cells: (0..REGISTRY.len()).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    fn cell(&self, name: &str) -> Option<&AtomicU64> {
+        registry::lookup(name).and_then(|i| self.cells.get(i))
+    }
+
+    /// Monotonic increment (counter semantics).
+    pub fn add(&self, name: &str, v: u64) {
+        if let Some(c) = self.cell(name) {
+            c.fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Overwrite (gauge semantics).
+    pub fn set(&self, name: &str, v: u64) {
+        if let Some(c) = self.cell(name) {
+            c.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Raise-only overwrite (high-water gauge semantics).
+    pub fn set_max(&self, name: &str, v: u64) {
+        if let Some(c) = self.cell(name) {
+            c.fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.cell(name).map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Every Counter/Gauge entry with its current value, in registry
+    /// (= deterministic exposition) order.
+    pub fn snapshot(&self) -> Vec<(&'static NameDef, u64)> {
+        REGISTRY
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| {
+                matches!(d.kind, registry::NameKind::Counter | registry::NameKind::Gauge)
+            })
+            .map(|(i, d)| (d, self.cells[i].load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Zero every cell — test isolation for the global instance.
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for Counters {
+    fn default() -> Counters {
+        Counters::new()
+    }
+}
+
+/// The process-wide instance the `obs_count!`/`obs_gauge!` macros target.
+pub fn global() -> &'static Counters {
+    static GLOBAL: OnceLock<Counters> = OnceLock::new();
+    GLOBAL.get_or_init(Counters::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_set_and_max_on_a_local_instance() {
+        let c = Counters::new();
+        c.add("engine_tokens_total", 3);
+        c.add("engine_tokens_total", 4);
+        assert_eq!(c.get("engine_tokens_total"), 7);
+        c.set("kv_blocks_in_use", 5);
+        c.set("kv_blocks_in_use", 2);
+        assert_eq!(c.get("kv_blocks_in_use"), 2);
+        c.set_max("kv_blocks_high_water", 9);
+        c.set_max("kv_blocks_high_water", 4);
+        assert_eq!(c.get("kv_blocks_high_water"), 9);
+        c.reset();
+        assert_eq!(c.get("engine_tokens_total"), 0);
+    }
+
+    #[test]
+    fn unknown_names_are_dropped_not_panicked() {
+        let c = Counters::new();
+        c.add("no_such_metric_total", 1);
+        assert_eq!(c.get("no_such_metric_total"), 0);
+    }
+
+    #[test]
+    fn snapshot_is_registry_ordered_and_skips_trace_names() {
+        let c = Counters::new();
+        c.add("sched_admissions_total", 2);
+        let snap = c.snapshot();
+        assert!(snap.iter().all(|(d, _)| matches!(
+            d.kind,
+            registry::NameKind::Counter | registry::NameKind::Gauge
+        )));
+        let names: Vec<&str> = snap.iter().map(|(d, _)| d.name).collect();
+        let mut sorted_by_registry = names.clone();
+        sorted_by_registry.sort_by_key(|n| registry::lookup(n));
+        assert_eq!(names, sorted_by_registry);
+        assert!(snap.iter().any(|(d, v)| d.name == "sched_admissions_total" && *v == 2));
+    }
+}

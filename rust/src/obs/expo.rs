@@ -1,0 +1,170 @@
+//! Metrics exposition (DESIGN.md §13): render a [`Counters`] snapshot as
+//! Prometheus text format or a JSON object, in deterministic registry
+//! order, so a future HTTP front-end (ROADMAP item 1) serves `/metrics`
+//! by calling [`prometheus`] on the global instance — no new bookkeeping.
+//!
+//! After the declared counters/gauges, [`prometheus`] appends a small set
+//! of **derived** gauges (achieved GFLOP/s per kernel, tile skip rate)
+//! computed from the raw counters — the FlashAttention-2 headline
+//! numbers, precomputed so scrapers need no PromQL.
+
+use std::path::Path;
+
+use super::counters::Counters;
+use super::registry::NameKind;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// All names carry this prefix on the wire, leaving the in-tree registry
+/// names short.
+const PREFIX: &str = "fa2";
+
+fn fmt_value(v: f64) -> String {
+    // fa2lint: allow(no-float-eq) -- exact integrality test picks the integer rendering
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// GFLOP/s from FLOP and nanosecond totals (identical units cancel).
+fn gflops(flops: u64, ns: u64) -> Option<f64> {
+    (ns > 0).then(|| flops as f64 / ns as f64)
+}
+
+/// The derived gauges appended after the registry entries:
+/// (name, help, value) in fixed order.  Also consumed by
+/// `bench::summary::record_attn_obs` so benches and the exposition
+/// layer can never disagree on how GFLOP/s is computed.
+pub(crate) fn derived(c: &Counters) -> Vec<(&'static str, &'static str, f64)> {
+    let mut out = Vec::new();
+    if let Some(g) = gflops(c.get("flash_fwd_flops_total"), c.get("flash_fwd_ns_total")) {
+        out.push(("flash_fwd_gflops", "achieved flash forward GFLOP/s (derived)", g));
+    }
+    if let Some(g) = gflops(c.get("flash_bwd_flops_total"), c.get("flash_bwd_ns_total")) {
+        out.push(("flash_bwd_gflops", "achieved flash backward GFLOP/s (derived)", g));
+    }
+    if let Some(g) = gflops(c.get("decode_flops_total"), c.get("decode_ns_total")) {
+        out.push(("decode_gflops", "achieved split-KV decode GFLOP/s (derived)", g));
+    }
+    let visited = c.get("attn_tiles_full_total") + c.get("attn_tiles_partial_total");
+    let skipped = c.get("attn_tiles_skipped_total");
+    if visited + skipped > 0 {
+        out.push((
+            "attn_tile_skip_rate",
+            "fraction of K-block tiles Mask::cover skipped (derived)",
+            skipped as f64 / (visited + skipped) as f64,
+        ));
+    }
+    out
+}
+
+/// Prometheus text exposition format, deterministically ordered.
+pub fn prometheus(c: &Counters) -> String {
+    let mut out = String::new();
+    for (def, v) in c.snapshot() {
+        let ty = match def.kind {
+            NameKind::Counter => "counter",
+            NameKind::Gauge => "gauge",
+            // snapshot() never yields these
+            NameKind::Span | NameKind::Event => continue,
+        };
+        out.push_str(&format!(
+            "# HELP {p}_{n} {h}\n# TYPE {p}_{n} {t}\n{p}_{n} {v}\n",
+            p = PREFIX,
+            n = def.name,
+            h = def.help,
+            t = ty,
+            v = v,
+        ));
+    }
+    for (name, help, v) in derived(c) {
+        out.push_str(&format!(
+            "# HELP {p}_{n} {h}\n# TYPE {p}_{n} gauge\n{p}_{n} {v}\n",
+            p = PREFIX,
+            n = name,
+            h = help,
+            v = fmt_value(v),
+        ));
+    }
+    out
+}
+
+/// The same snapshot as a JSON object (registry order, derived gauges
+/// last) — the shape a `/metrics?format=json` endpoint would serve.
+pub fn json_snapshot(c: &Counters) -> Json {
+    let mut fields: Vec<(String, Json)> = c
+        .snapshot()
+        .into_iter()
+        .map(|(def, v)| (format!("{PREFIX}_{}", def.name), Json::Num(v as f64)))
+        .collect();
+    for (name, _, v) in derived(c) {
+        fields.push((format!("{PREFIX}_{name}"), Json::Num(v)));
+    }
+    Json::Obj(fields)
+}
+
+/// Write the Prometheus rendering to `path` (parents created).
+pub fn write_prometheus(path: &Path, c: &Counters) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, prometheus(c))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_rendering_is_deterministic_and_prefixed() {
+        let c = Counters::new();
+        c.add("sched_admissions_total", 3);
+        c.set("kv_blocks_in_use", 5);
+        let a = prometheus(&c);
+        let b = prometheus(&c);
+        assert_eq!(a, b, "same snapshot must render byte-identically");
+        assert!(a.contains("# TYPE fa2_sched_admissions_total counter\n"));
+        assert!(a.contains("\nfa2_sched_admissions_total 3\n"));
+        assert!(a.contains("# TYPE fa2_kv_blocks_in_use gauge\n"));
+        assert!(a.contains("\nfa2_kv_blocks_in_use 5\n"));
+        // no derived gauges without kernel activity
+        assert!(!a.contains("gflops"));
+    }
+
+    #[test]
+    fn derived_gauges_appear_with_kernel_activity() {
+        let c = Counters::new();
+        c.add("flash_fwd_flops_total", 200);
+        c.add("flash_fwd_ns_total", 100);
+        c.add("attn_tiles_full_total", 3);
+        c.add("attn_tiles_skipped_total", 1);
+        let p = prometheus(&c);
+        assert!(p.contains("\nfa2_flash_fwd_gflops 2\n"));
+        assert!(p.contains("\nfa2_attn_tile_skip_rate 0.25\n"));
+        let j = json_snapshot(&c);
+        let skip = j.get("fa2_attn_tile_skip_rate").and_then(Json::as_f64);
+        assert!(skip.is_some_and(|v| (v - 0.25).abs() < 1e-12));
+    }
+
+    #[test]
+    fn json_snapshot_matches_prometheus_values() {
+        let c = Counters::new();
+        c.add("engine_tokens_total", 42);
+        let j = json_snapshot(&c);
+        assert_eq!(j.get("fa2_engine_tokens_total").and_then(Json::as_i64), Some(42));
+        // every non-comment prometheus line appears in the json object
+        for line in prometheus(&c).lines().filter(|l| !l.starts_with('#')) {
+            let mut it = line.split_whitespace();
+            let (name, val) = (it.next().unwrap(), it.next().unwrap());
+            let got = j.get(name).and_then(Json::as_f64).unwrap();
+            let want: f64 = val.parse().unwrap();
+            assert!((got - want).abs() < 1e-9, "{name}: {got} != {want}");
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! End-to-end observability (DESIGN.md §13): structured tracing, a named
+//! counter/gauge registry, and a metrics exposition layer — all in-tree,
+//! zero dependencies.
+//!
+//! Three layers:
+//!
+//! - [`trace`] — span/event recorder with a Chrome trace-event JSON
+//!   exporter (`repro serve --trace reports/trace.json`, load the file in
+//!   Perfetto or `chrome://tracing`).  Disabled, a call site costs one
+//!   relaxed atomic load.
+//! - [`counters`] — one `AtomicU64` per name declared in [`registry`];
+//!   always on.  `coordinator::metrics::Metrics` reads its books from a
+//!   local instance of this registry and mirrors into the global one.
+//! - [`expo`] — Prometheus-text / JSON snapshot rendering
+//!   (`--metrics-out reports/metrics.prom`), deterministic ordering.
+//!
+//! Every name must be declared in [`registry::REGISTRY`]; the
+//! `obs-name-registry` lint rule (DESIGN.md §12) cross-checks all
+//! `obs_*!` call sites against it, which is why instrumentation goes
+//! through these macros rather than the module functions: the macro call
+//! shape `obs_xxx!("name"` is what the rule greps for.
+
+pub mod counters;
+pub mod expo;
+pub mod registry;
+pub mod trace;
+
+/// Open a span; returns a guard recording a trace event on drop.
+/// `let _sp = obs_span!("engine_step");` — name must be registered.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:literal) => {
+        $crate::obs::trace::span($name)
+    };
+}
+
+/// Record an instant event with numeric args:
+/// `obs_event!("sched_admit", "session" => id, "need" => n);`
+/// Args are not evaluated while tracing is disabled.
+#[macro_export]
+macro_rules! obs_event {
+    ($name:literal $(, $k:literal => $v:expr)* $(,)?) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::event($name, &[$(($k, ($v) as u64)),*]);
+        }
+    };
+}
+
+/// Increment a registered counter on the global registry instance.
+#[macro_export]
+macro_rules! obs_count {
+    ($name:literal, $v:expr) => {
+        $crate::obs::counters::global().add($name, ($v) as u64)
+    };
+}
+
+/// Set a registered gauge on the global registry instance.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:literal, $v:expr) => {
+        $crate::obs::counters::global().set($name, ($v) as u64)
+    };
+}
+
+/// Raise-only gauge update (high-water marks).
+#[macro_export]
+macro_rules! obs_gauge_max {
+    ($name:literal, $v:expr) => {
+        $crate::obs::counters::global().set_max($name, ($v) as u64)
+    };
+}

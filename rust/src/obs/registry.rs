@@ -1,0 +1,145 @@
+//! The single source of truth for every observable name in the tree
+//! (DESIGN.md §13).
+//!
+//! Every span, event, counter, and gauge name used through the `obs_*!`
+//! macros must be declared here **exactly once** — the `obs-name-registry`
+//! lint rule cross-checks the macro call sites in the whole workspace
+//! against this table, so a typo'd name fails CI instead of silently
+//! forking a metric series.  Declarations are one `NameDef` per line on
+//! purpose: the lint rule extracts the `name: "..."` field line-by-line.
+//!
+//! Naming convention: `snake_case`, `<subsystem>_<what>[_total]` —
+//! `_total` marks monotonic counters (Prometheus convention); gauges are
+//! instantaneous levels.  The subsystem prefix (`engine`, `sched`, `kv`,
+//! `attn`/`flash`/`decode`, `serve`, `trace`, `bench`, `test`) doubles as
+//! the Chrome trace category.
+
+/// What kind of observable a registry entry names — decides which
+/// exposition surface (trace stream vs. metrics snapshot) it appears on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NameKind {
+    /// A duration: recorded as a Chrome `"X"` (complete) trace event.
+    Span,
+    /// A point-in-time fact: recorded as a Chrome `"i"` (instant) event.
+    Event,
+    /// A monotonically increasing count (Prometheus `counter`).
+    Counter,
+    /// An instantaneous level (Prometheus `gauge`).
+    Gauge,
+}
+
+/// One declared observable name.
+#[derive(Debug)]
+pub struct NameDef {
+    pub kind: NameKind,
+    pub name: &'static str,
+    /// One-line help text, emitted as the Prometheus `# HELP` line.
+    pub help: &'static str,
+}
+
+use NameKind::{Counter, Event, Gauge, Span};
+
+/// The registry, in exposition order.  Keep each entry on one line.
+pub const REGISTRY: &[NameDef] = &[
+    // --- spans (trace only) ---
+    NameDef { kind: Span, name: "serve_run", help: "one whole repro serve workload" },
+    NameDef { kind: Span, name: "engine_step", help: "one engine worker scheduling+decode step" },
+    NameDef { kind: Span, name: "sched_plan", help: "one Scheduler::plan admission/preemption decision" },
+    NameDef { kind: Span, name: "attn_flash_fwd", help: "one flash forward kernel invocation (whole tensor)" },
+    NameDef { kind: Span, name: "attn_flash_bwd", help: "one flash backward kernel invocation (whole tensor)" },
+    NameDef { kind: Span, name: "attn_decode_step", help: "one in-place paged decode step over a batch of rows" },
+    NameDef { kind: Span, name: "bench_overhead_span", help: "no-op span used by the tracing-overhead bench" },
+    NameDef { kind: Span, name: "test_span_outer", help: "golden-trace fixture: outer span" },
+    NameDef { kind: Span, name: "test_span_inner", help: "golden-trace fixture: inner span" },
+    // --- events (trace only; the scheduler rows form the audit log) ---
+    NameDef { kind: Event, name: "sched_admit", help: "session admitted: args session, need (blocks)" },
+    NameDef { kind: Event, name: "sched_preempt", help: "session preempted: args session, need, victim_of" },
+    NameDef { kind: Event, name: "sched_saturate", help: "submit rejected by bounded queue: args need" },
+    NameDef { kind: Event, name: "engine_rows", help: "per sub-step row mix: args decode, prefill" },
+    NameDef { kind: Event, name: "kv_alloc", help: "arena block grant: args slot, blocks" },
+    NameDef { kind: Event, name: "kv_free", help: "arena block release: args slot, blocks" },
+    NameDef { kind: Event, name: "test_event", help: "golden-trace fixture: instant event" },
+    // --- counters (metrics snapshot) ---
+    NameDef { kind: Counter, name: "engine_steps_total", help: "engine worker steps that did scheduling or decode work" },
+    NameDef { kind: Counter, name: "engine_tokens_total", help: "tokens generated across completed sessions" },
+    NameDef { kind: Counter, name: "engine_decode_steps_total", help: "decode sub-steps executed" },
+    NameDef { kind: Counter, name: "engine_decode_rows_total", help: "decode rows summed over sub-steps" },
+    NameDef { kind: Counter, name: "engine_prefill_rows_total", help: "chunked-prefill rows ridden through the decode seam" },
+    NameDef { kind: Counter, name: "engine_cancelled_total", help: "sessions cancelled by the client" },
+    NameDef { kind: Counter, name: "engine_prompt_tokens_total", help: "true prompt tokens admitted" },
+    NameDef { kind: Counter, name: "engine_prompt_pad_tokens_total", help: "prompt tokens after bucket padding" },
+    NameDef { kind: Counter, name: "sched_admissions_total", help: "scheduler admissions granted (incl. resume after preemption)" },
+    NameDef { kind: Counter, name: "sched_preemptions_total", help: "sessions preempted by the anti-starvation policy" },
+    NameDef { kind: Counter, name: "sched_saturations_total", help: "submits rejected with EngineError::Saturated" },
+    NameDef { kind: Counter, name: "attn_tiles_full_total", help: "K-block tiles visited with a Full mask cover" },
+    NameDef { kind: Counter, name: "attn_tiles_partial_total", help: "K-block tiles visited with a Partial mask cover" },
+    NameDef { kind: Counter, name: "attn_tiles_skipped_total", help: "K-block tiles skipped outright by Mask::cover" },
+    NameDef { kind: Counter, name: "flash_fwd_flops_total", help: "FLOPs reported by flash forward invocations" },
+    NameDef { kind: Counter, name: "flash_fwd_ns_total", help: "wall nanoseconds inside flash forward invocations" },
+    NameDef { kind: Counter, name: "flash_bwd_flops_total", help: "FLOPs reported by flash backward invocations" },
+    NameDef { kind: Counter, name: "flash_bwd_ns_total", help: "wall nanoseconds inside flash backward invocations" },
+    NameDef { kind: Counter, name: "decode_flops_total", help: "FLOPs of split-KV decode attention (4*ctx*d_head per head)" },
+    NameDef { kind: Counter, name: "decode_ns_total", help: "wall nanoseconds inside paged decode steps" },
+    NameDef { kind: Counter, name: "kv_block_allocs_total", help: "arena blocks granted" },
+    NameDef { kind: Counter, name: "kv_block_frees_total", help: "arena blocks released" },
+    NameDef { kind: Counter, name: "trace_events_dropped_total", help: "trace events dropped at the sink capacity ceiling" },
+    // --- gauges (metrics snapshot) ---
+    NameDef { kind: Gauge, name: "kv_blocks_in_use", help: "arena blocks currently granted" },
+    NameDef { kind: Gauge, name: "kv_blocks_high_water", help: "max arena blocks ever simultaneously granted" },
+    NameDef { kind: Gauge, name: "kv_pool_blocks", help: "arena capacity in blocks" },
+    NameDef { kind: Gauge, name: "kv_free_blocks", help: "arena blocks on the free list" },
+];
+
+/// Index of `name` in [`REGISTRY`], if declared.
+pub fn lookup(name: &str) -> Option<usize> {
+    REGISTRY.iter().position(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_snake_case() {
+        let mut seen = std::collections::HashSet::new();
+        for def in REGISTRY {
+            assert!(seen.insert(def.name), "duplicate registry name {}", def.name);
+            assert!(
+                def.name
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "{} is not snake_case",
+                def.name
+            );
+            assert!(!def.help.is_empty(), "{} has no help text", def.name);
+        }
+    }
+
+    #[test]
+    fn lookup_finds_declared_names_only() {
+        assert_eq!(lookup("engine_steps_total"), Some(16));
+        assert!(lookup("engine_steps_totall").is_none());
+        for (i, def) in REGISTRY.iter().enumerate() {
+            assert_eq!(lookup(def.name), Some(i));
+        }
+    }
+
+    #[test]
+    fn counters_end_in_total_and_gauges_do_not() {
+        for def in REGISTRY {
+            match def.kind {
+                NameKind::Counter => assert!(
+                    def.name.ends_with("_total"),
+                    "counter {} must end in _total",
+                    def.name
+                ),
+                NameKind::Gauge => assert!(
+                    !def.name.ends_with("_total"),
+                    "gauge {} must not end in _total",
+                    def.name
+                ),
+                _ => {}
+            }
+        }
+    }
+}

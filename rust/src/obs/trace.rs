@@ -1,0 +1,342 @@
+//! Low-overhead span/event recorder with a Chrome trace-event JSON
+//! exporter (DESIGN.md §13).
+//!
+//! Disabled (the default), the entire cost of an `obs_span!` /
+//! `obs_event!` call site is **one relaxed atomic load** — no clock read,
+//! no allocation, no branch into recording code.  Enabled, events land in
+//! a thread-local buffer and spill to a global sink under a mutex only
+//! when the buffer fills (or the thread exits), so the serving hot path
+//! never takes a lock per event.
+//!
+//! Two clocks: the default monotonic clock stamps microseconds since the
+//! first enable (what Perfetto expects); **logical-clock mode**
+//! ([`set_logical`]) stamps a global tick per timestamp and pins every
+//! thread id to 0, making a single-threaded recording byte-deterministic —
+//! the golden-trace tests run on it.
+//!
+//! The exporter doubles as a validator: every span guard must have
+//! dropped before [`export_json`] — a nonzero open-span count fails the
+//! export (and `ci.sh --verify-trace` proves that failure path fires, via
+//! [`inject_unclosed`]).
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::bail;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Thread-local buffer capacity before spilling to the global sink.
+const RING_CAP: usize = 4096;
+/// Hard ceiling on retained events; beyond it new events are counted in
+/// `trace_events_dropped_total` and discarded (bounded memory beats an
+/// unbounded trace of a long serve).
+const SINK_CAP: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static LOGICAL: AtomicBool = AtomicBool::new(false);
+/// Logical-mode tick source.
+static TICK: AtomicU64 = AtomicU64::new(0);
+/// Span guards created minus span guards dropped — the unclosed-span
+/// validator the exporter checks.
+static OPEN_SPANS: AtomicI64 = AtomicI64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// The one load every disabled-path call site pays.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    if on {
+        // pin the epoch before the first event so ts=0 is the enable point
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Deterministic mode: timestamps become global ticks, thread ids 0.
+pub fn set_logical(on: bool) {
+    LOGICAL.store(on, Ordering::SeqCst);
+}
+
+/// Chrome trace phases this recorder emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    /// `"X"`: a complete event with a duration (a closed span).
+    Complete,
+    /// `"i"`: an instant event.
+    Instant,
+}
+
+/// One recorded trace event (µs or logical ticks in `ts`/`dur`).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub name: &'static str,
+    pub ph: Ph,
+    pub ts: u64,
+    pub dur: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, u64)>,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn sink() -> MutexGuard<'static, Vec<Event>> {
+    static SINK: OnceLock<Mutex<Vec<Event>>> = OnceLock::new();
+    match SINK.get_or_init(|| Mutex::new(Vec::new())).lock() {
+        Ok(g) => g,
+        // a panicking recorder thread must not wedge every later export
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn now_ts() -> u64 {
+    if LOGICAL.load(Ordering::Relaxed) {
+        TICK.fetch_add(1, Ordering::Relaxed)
+    } else {
+        epoch().elapsed().as_micros() as u64
+    }
+}
+
+fn this_tid() -> u64 {
+    if LOGICAL.load(Ordering::Relaxed) {
+        return 0;
+    }
+    thread_local! {
+        static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// Thread-local event buffer; spills on fill and on thread exit.
+struct Ring {
+    buf: Vec<Event>,
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        spill(&mut self.buf);
+    }
+}
+
+thread_local! {
+    static RING: RefCell<Ring> = RefCell::new(Ring { buf: Vec::new() });
+}
+
+fn spill(buf: &mut Vec<Event>) {
+    if buf.is_empty() {
+        return;
+    }
+    let mut g = sink();
+    let room = SINK_CAP.saturating_sub(g.len());
+    let take = room.min(buf.len());
+    let dropped = (buf.len() - take) as u64;
+    g.extend(buf.drain(..take));
+    buf.clear();
+    drop(g);
+    if dropped > 0 {
+        super::counters::global().add("trace_events_dropped_total", dropped);
+    }
+}
+
+fn push(ev: Event) {
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        if r.buf.len() >= RING_CAP {
+            spill(&mut r.buf);
+        }
+        r.buf.push(ev);
+    });
+}
+
+/// Move this thread's buffered events into the global sink.
+pub fn flush() {
+    RING.with(|r| spill(&mut r.borrow_mut().buf));
+}
+
+/// Drop every recorded event and re-arm the validator/clock — test
+/// isolation between recordings in one process.
+pub fn reset() {
+    flush();
+    sink().clear();
+    TICK.store(0, Ordering::SeqCst);
+    OPEN_SPANS.store(0, Ordering::SeqCst);
+}
+
+/// An open span: records a Complete event over its lifetime.  Inert (no
+/// clock read, nothing recorded) when tracing was disabled at creation.
+pub struct SpanGuard(Option<OpenSpan>);
+
+struct OpenSpan {
+    name: &'static str,
+    ts: u64,
+    tid: u64,
+}
+
+/// Open a span.  Prefer the [`crate::obs_span!`] macro, which the
+/// `obs-name-registry` lint rule can see.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard(None);
+    }
+    OPEN_SPANS.fetch_add(1, Ordering::Relaxed);
+    SpanGuard(Some(OpenSpan { name, ts: now_ts(), tid: this_tid() }))
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(open) = self.0.take() {
+            OPEN_SPANS.fetch_sub(1, Ordering::Relaxed);
+            let end = now_ts();
+            push(Event {
+                name: open.name,
+                ph: Ph::Complete,
+                ts: open.ts,
+                dur: end.saturating_sub(open.ts),
+                tid: open.tid,
+                args: Vec::new(),
+            });
+        }
+    }
+}
+
+/// Record an instant event.  Prefer the [`crate::obs_event!`] macro.
+pub fn event(name: &'static str, args: &[(&'static str, u64)]) {
+    if !enabled() {
+        return;
+    }
+    push(Event {
+        name,
+        ph: Ph::Instant,
+        ts: now_ts(),
+        dur: 0,
+        tid: this_tid(),
+        args: args.to_vec(),
+    });
+}
+
+/// Current open-span count (the validator's input).
+pub fn open_spans() -> i64 {
+    OPEN_SPANS.load(Ordering::SeqCst)
+}
+
+/// The `--verify-trace` fixture: leak one span guard so the export
+/// validator must fail.  No-op while tracing is disabled.
+pub fn inject_unclosed() {
+    std::mem::forget(span("engine_step"));
+}
+
+/// The `"cat"` field: the subsystem prefix of the name.
+fn category(name: &str) -> &str {
+    name.split('_').next().unwrap_or(name)
+}
+
+/// Render everything recorded so far as a Chrome trace-event JSON
+/// document (the `{"traceEvents": [...]}` object form), validating that
+/// every span closed.  Deterministic: events are sorted by
+/// (ts, tid, name) and the serializer is the in-tree compact writer.
+pub fn export_json() -> Result<String> {
+    flush();
+    let open = open_spans();
+    if open != 0 {
+        bail!(
+            "trace validator: {open} span(s) never closed — every obs_span! \
+             guard must drop before export"
+        );
+    }
+    let mut evs: Vec<Event> = sink().clone();
+    evs.sort_by(|a, b| {
+        (a.ts, a.tid, a.name).cmp(&(b.ts, b.tid, b.name))
+    });
+    let mut arr = Vec::with_capacity(evs.len());
+    for e in &evs {
+        let mut obj = vec![
+            ("name".to_string(), Json::Str(e.name.to_string())),
+            ("cat".to_string(), Json::Str(category(e.name).to_string())),
+            ("ph".to_string(), Json::Str(match e.ph {
+                Ph::Complete => "X".to_string(),
+                Ph::Instant => "i".to_string(),
+            })),
+            ("pid".to_string(), Json::Num(1.0)),
+            ("tid".to_string(), Json::Num(e.tid as f64)),
+            ("ts".to_string(), Json::Num(e.ts as f64)),
+        ];
+        match e.ph {
+            Ph::Complete => obj.push(("dur".to_string(), Json::Num(e.dur as f64))),
+            Ph::Instant => obj.push(("s".to_string(), Json::Str("t".to_string()))),
+        }
+        if !e.args.is_empty() {
+            let args = e
+                .args
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                .collect();
+            obj.push(("args".to_string(), Json::Obj(args)));
+        }
+        arr.push(Json::Obj(obj));
+    }
+    let root = Json::Obj(vec![
+        ("traceEvents".to_string(), Json::Arr(arr)),
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+    ]);
+    Ok(root.to_string())
+}
+
+/// Export to `path` (parent directories created); returns the event
+/// count.  Fails — nonzero exit from the CLI — on an unclosed span.
+pub fn export_to(path: &Path) -> Result<usize> {
+    let doc = export_json()?;
+    let n = sink().len();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, &doc).with_context(|| format!("writing {}", path.display()))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: tests that flip the global enable gate live in the dedicated
+    // integration binary rust/tests/obs_trace.rs (their own process,
+    // serialized there); the unit tests here only exercise the
+    // disabled path and pure helpers, so they cannot pollute parallel
+    // lib tests.
+
+    #[test]
+    fn disabled_span_and_event_record_nothing() {
+        assert!(!enabled());
+        let g = span("engine_step");
+        event("sched_admit", &[("session", 1)]);
+        drop(g);
+        assert_eq!(open_spans(), 0);
+        flush();
+        assert!(sink().is_empty());
+    }
+
+    #[test]
+    fn disabled_inject_is_a_noop() {
+        assert!(!enabled());
+        inject_unclosed();
+        assert_eq!(open_spans(), 0);
+    }
+
+    #[test]
+    fn categories_come_from_the_name_prefix() {
+        assert_eq!(category("engine_step"), "engine");
+        assert_eq!(category("sched_admit"), "sched");
+        assert_eq!(category("kv_alloc"), "kv");
+    }
+}

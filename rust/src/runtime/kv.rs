@@ -433,7 +433,25 @@ impl KvArena {
             id,
             self.seqs[id].as_ref().map_or(&[][..], |s| &s.blocks),
         ));
+        crate::obs_count!("kv_block_allocs_total", n_blocks);
+        crate::obs_event!("kv_alloc", "slot" => id, "blocks" => n_blocks);
+        self.publish_gauges();
         Some(KvSlot(id))
+    }
+
+    /// Mirror the arena's occupancy into the global obs gauge registry
+    /// (DESIGN.md §13) — called on every grant/release, so a metrics
+    /// snapshot always sees the latest levels and high-water mark.
+    fn publish_gauges(&self) {
+        crate::obs_gauge!("kv_blocks_in_use", self.in_use_blocks);
+        crate::obs_gauge_max!("kv_blocks_high_water", self.in_use_blocks);
+        crate::obs_gauge!("kv_pool_blocks", self.cap_blocks.unwrap_or(self.pool_blocks));
+        // unbounded arenas grow on demand: report the recycled free list
+        let free = match self.cap_blocks {
+            Some(cap) => cap.saturating_sub(self.in_use_blocks),
+            None => self.free_blocks.len(),
+        };
+        crate::obs_gauge!("kv_free_blocks", free);
     }
 
     /// Adopt a legacy `(L, 1, H, S, dh)` cache slab pair by copying it
@@ -486,8 +504,11 @@ impl KvArena {
         // fa2lint: allow(no-hotpath-panic) -- double free is unrecoverable accounting corruption; the sanitizer reports it first in debug builds
         let seq = self.seqs[slot.0].take().expect("double free of kv slot");
         self.in_use_blocks -= seq.blocks.len();
+        crate::obs_count!("kv_block_frees_total", seq.blocks.len());
+        crate::obs_event!("kv_free", "slot" => slot.0, "blocks" => seq.blocks.len());
         self.free_blocks.extend(seq.blocks);
         self.free_slots.push(slot.0);
+        self.publish_gauges();
     }
 
     /// This sequence's block table (physical block per logical block).

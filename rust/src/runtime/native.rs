@@ -512,6 +512,9 @@ fn decode_row(
         add_inplace(&mut x, &proj);
         layer_ffn(cfg, params, l, &mut x, 1);
     }
+    // attention FLOPs of this token: 2 matmuls (QKᵀ, PV) of ctx×dh per
+    // query head per layer — one relaxed add per decoded token-row
+    crate::obs_count!("decode_flops_total", 4 * (hi - lo) * dh * hn * cfg.n_layer);
     Ok(lm_head(cfg, params, &x))
 }
 
@@ -555,6 +558,7 @@ impl Module for DecodeModule {
         tok: &[i32],
         pos: &[i32],
     ) -> Result<(Vec<f32>, ExecTiming)> {
+        let _sp = crate::obs_span!("attn_decode_step");
         let t0 = Instant::now();
         let cfg = &self.cfg;
         if params_t.len() < cfg.n_params() {
@@ -595,6 +599,7 @@ impl Module for DecodeModule {
             let row = decode_row(cfg, &params, tok[bi], pos[bi] as usize, &mut rows)?;
             logits[bi * cfg.vocab..(bi + 1) * cfg.vocab].copy_from_slice(&row);
         }
+        crate::obs_count!("decode_ns_total", t0.elapsed().as_nanos());
         Ok((logits, ExecTiming { exec_secs: t0.elapsed().as_secs_f64(), transfer_secs: 0.0 }))
     }
 }

@@ -1,0 +1,198 @@
+//! Observability integration suite (DESIGN.md §13): golden deterministic
+//! trace, the unclosed-span validator failure path, Prometheus snapshot
+//! round-trips, and the scheduler audit-log replay.
+//!
+//! These tests flip the PROCESS-GLOBAL trace gate (`set_enabled`), which
+//! is exactly why they live in their own integration binary instead of
+//! the lib test runner: here a static mutex serializes them, and no lib
+//! unit test can observe the gate mid-flip.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use fa2::coordinator::engine::{Engine, SamplingParams};
+use fa2::obs::counters::Counters;
+use fa2::obs::{expo, trace};
+use fa2::runtime::BackendKind;
+use fa2::util::json::Json;
+use fa2::util::rng::Rng;
+
+/// Serializes every test in this binary: they all mutate the global
+/// trace recorder.  Poison recovery keeps one failed test from wedging
+/// the rest into opaque `PoisonError` noise.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    match GATE.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// A fixed single-threaded recording: an outer span, four inner spans,
+/// one event per inner with rng-derived args.  Under the logical clock
+/// this must serialize to the exact same bytes on every run.
+fn record_fixture(seed: u64) -> String {
+    trace::reset();
+    trace::set_logical(true);
+    trace::set_enabled(true);
+    let mut rng = Rng::seed_from(seed);
+    {
+        let _outer = fa2::obs_span!("test_span_outer");
+        for i in 0..4u64 {
+            let _inner = fa2::obs_span!("test_span_inner");
+            fa2::obs_event!("test_event", "i" => i, "draw" => rng.below(1000));
+        }
+    }
+    let doc = trace::export_json().expect("fixture trace must export");
+    trace::set_enabled(false);
+    trace::set_logical(false);
+    trace::reset();
+    doc
+}
+
+#[test]
+fn golden_trace_is_byte_deterministic() {
+    let _g = serialized();
+    let a = record_fixture(7);
+    let b = record_fixture(7);
+    assert_eq!(a, b, "logical-clock recordings must be byte-identical");
+    // different rng stream changes args, nothing else structural
+    let c = record_fixture(8);
+    assert_ne!(a, c, "the rng args must actually land in the trace");
+
+    let j = Json::parse(&a).expect("exporter emits valid JSON");
+    let evs = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    // 4 instants + 4 inner completes + 1 outer complete
+    assert_eq!(evs.len(), 9);
+    let field = |e: &Json, k: &str| e.get(k).and_then(|v| v.as_str().map(str::to_string));
+    let n = |e: &Json, k: &str| e.get(k).and_then(|v| v.as_f64());
+    for e in evs {
+        assert_eq!(n(e, "pid"), Some(1.0));
+        assert_eq!(n(e, "tid"), Some(0.0), "logical mode pins tids to 0");
+        let name = field(e, "name").expect("name");
+        let ph = field(e, "ph").expect("ph");
+        match name.as_str() {
+            "test_event" => {
+                assert_eq!(ph, "i");
+                assert!(e.get("args").and_then(|a| a.get("draw")).is_some());
+            }
+            "test_span_inner" | "test_span_outer" => {
+                assert_eq!(ph, "X");
+                assert!(n(e, "dur").expect("complete events carry dur") > 0.0);
+            }
+            other => panic!("unexpected event {other}"),
+        }
+        assert_eq!(field(e, "cat").as_deref(), Some("test"));
+    }
+    // exporter sorts by ts: the outer span (opened at tick 0) comes first
+    assert_eq!(field(&evs[0], "name").as_deref(), Some("test_span_outer"));
+}
+
+#[test]
+fn unclosed_span_turns_the_validator_red() {
+    let _g = serialized();
+    trace::reset();
+    trace::set_enabled(true);
+    trace::inject_unclosed();
+    let err = trace::export_json().expect_err("a leaked span guard must fail export");
+    assert!(format!("{err:#}").contains("never closed"), "{err:#}");
+    trace::set_enabled(false);
+    trace::reset();
+    assert!(trace::export_json().is_ok(), "reset must re-arm the validator");
+}
+
+#[test]
+fn prometheus_snapshot_roundtrips_through_a_file() {
+    let _g = serialized();
+    let c = Counters::new();
+    c.add("engine_steps_total", 42);
+    c.add("flash_fwd_flops_total", 3_000);
+    c.add("flash_fwd_ns_total", 1_500);
+    c.set("kv_blocks_in_use", 7);
+    let text = expo::prometheus(&c);
+    assert_eq!(text, expo::prometheus(&c), "rendering must be deterministic");
+    assert!(text.contains("\nfa2_engine_steps_total 42\n"), "{text}");
+    assert!(text.contains("\nfa2_flash_fwd_gflops 2\n"), "derived gauge:\n{text}");
+
+    let dir = std::env::temp_dir().join("fa2_obs_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.prom");
+    expo::write_prometheus(&path, &c).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+
+    // every exposed sample agrees with the JSON snapshot
+    let snap = expo::json_snapshot(&c);
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let (name, value) = line.split_once(' ').expect("sample line");
+        assert!(name.starts_with("fa2_"), "unprefixed series {name}");
+        let from_json = snap
+            .get(name)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("{name} missing from the JSON snapshot"));
+        let want: f64 = value.parse().unwrap();
+        assert!((from_json - want).abs() < 1e-9, "{name}: {from_json} != {want}");
+    }
+}
+
+#[test]
+fn audit_log_replays_fcfs_admission_order() {
+    let _g = serialized();
+    trace::reset();
+    trace::set_logical(true);
+    trace::set_enabled(true);
+
+    let engine = Engine::start(PathBuf::from("artifacts"), "tiny", BackendKind::Native)
+        .expect("native engine needs no artifacts");
+    let sessions: Vec<_> = (0..5)
+        .map(|j| {
+            let mut prompt: Vec<i32> = (1..=6).collect();
+            prompt[0] = 10 + j;
+            engine.submit(prompt, SamplingParams::greedy(4)).expect("submit")
+        })
+        .collect();
+    for s in sessions {
+        s.wait().expect("session completes");
+    }
+    engine.shutdown().expect("shutdown joins the worker, spilling its ring");
+
+    let doc = trace::export_json().expect("engine run must leave no open spans");
+    trace::set_enabled(false);
+    trace::set_logical(false);
+    trace::reset();
+
+    let j = Json::parse(&doc).expect("valid trace JSON");
+    let evs = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+    let names: Vec<&str> = evs
+        .iter()
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .collect();
+    for required in ["engine_step", "sched_plan", "attn_decode_step", "sched_admit"] {
+        assert!(names.contains(&required), "trace is missing {required}: {names:?}");
+    }
+
+    // Replay the admission audit log: traceEvents are ts-sorted, so the
+    // FIRST sched_admit per session id must appear in submit order —
+    // exactly the FCFS contract the scheduler property test promises.
+    let mut first_admissions = Vec::new();
+    for e in evs {
+        if e.get("name").and_then(|n| n.as_str()) != Some("sched_admit") {
+            continue;
+        }
+        let id = e
+            .get("args")
+            .and_then(|a| a.get("session"))
+            .and_then(|v| v.as_i64())
+            .expect("sched_admit carries the session id");
+        if !first_admissions.contains(&id) {
+            first_admissions.push(id);
+        }
+    }
+    assert_eq!(first_admissions.len(), 5, "every session admits exactly once");
+    let mut sorted = first_admissions.clone();
+    sorted.sort_unstable();
+    assert_eq!(
+        first_admissions, sorted,
+        "admission order diverged from FCFS submit order"
+    );
+}
