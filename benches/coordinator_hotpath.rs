@@ -10,6 +10,8 @@
 //! Writes reports/coordinator_hotpath.csv and records the headline
 //! numbers in reports/bench_summary.json for the ci.sh regression gate.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
@@ -20,6 +22,7 @@ use fa2::coordinator::batcher::{BatchPolicy, Batcher};
 use fa2::coordinator::engine::{Engine, SamplingParams};
 use fa2::coordinator::scheduler::{SchedMode, SchedulerConfig};
 use fa2::runtime::{BackendKind, KvArena, KvSlot, ModelBundle, Runtime};
+use fa2::srv::{HttpServer, HttpServerConfig};
 use fa2::util::rng::Rng;
 use fa2::util::stats::Bencher;
 use fa2::util::tensorio::HostTensor;
@@ -283,6 +286,87 @@ fn main() {
             true,
         ));
     }
+
+    // --- HTTP front-end: per-route latency / TTFT / TPOT percentiles ---
+    // Boot the std-only HTTP server (DESIGN.md §14) on a fresh native
+    // engine and replay a short closed-loop wire workload.  The router
+    // samples per-request latency, time-to-first-token, and
+    // time-per-output-token, and publishes the percentiles as gauges on
+    // every /metrics scrape; the bench pins the p50s so the regression
+    // gate covers the whole parse→validate→admit→drain path, not just
+    // the in-process engine.
+    let engine = Engine::start_with(
+        PathBuf::from("artifacts"),
+        "tiny",
+        BackendKind::Native,
+        SchedulerConfig::default(),
+    )
+    .expect("native engine needs no artifacts");
+    let server = HttpServer::start("127.0.0.1:0", engine.handle(), HttpServerConfig::default())
+        .expect("http server on an ephemeral port");
+    let addr = server.local_addr();
+
+    let roundtrip = |req: String| -> String {
+        let mut stream = TcpStream::connect(addr).expect("connect to bench server");
+        stream.write_all(req.as_bytes()).expect("write request");
+        stream.shutdown(std::net::Shutdown::Write).expect("half-close");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).expect("read response");
+        out
+    };
+    let post = |path: &str, body: &str| -> String {
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        )
+    };
+    let gen_body = r#"{"prompt":[1,2,3,4,5,6,7,8],"max_tokens":8}"#;
+    for _ in 0..12 {
+        let resp = roundtrip(post("/generate", gen_body));
+        assert!(resp.contains(" 200 "), "bench /generate failed:\n{resp}");
+    }
+    for _ in 0..12 {
+        let resp = roundtrip(post("/generate_stream", gen_body));
+        assert!(resp.contains("event: done"), "bench /generate_stream failed:\n{resp}");
+    }
+    let metrics =
+        roundtrip("GET /metrics HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n".into());
+    let prom = |name: &str| -> f64 {
+        metrics
+            .lines()
+            .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.strip_prefix(' ')))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or_else(|| panic!("{name} missing from /metrics scrape"))
+    };
+    println!(
+        "http routes (p50 via /metrics): generate {:.0} µs (ttft {:.0}), \
+         stream {:.0} µs (ttft {:.0}, tpot {:.0})",
+        prom("fa2_http_generate_latency_p50_us"),
+        prom("fa2_http_generate_ttft_p50_us"),
+        prom("fa2_http_stream_latency_p50_us"),
+        prom("fa2_http_stream_ttft_p50_us"),
+        prom("fa2_http_stream_tpot_p50_us"),
+    );
+    for (route, metric) in [
+        ("http_generate", "latency_p50_us"),
+        ("http_generate", "ttft_p50_us"),
+        ("http_generate", "tpot_p50_us"),
+        ("http_stream", "latency_p50_us"),
+        ("http_stream", "ttft_p50_us"),
+        ("http_stream", "tpot_p50_us"),
+    ] {
+        records.push(summary::record(
+            "coordinator_hotpath",
+            route,
+            metric,
+            prom(&format!("fa2_{route}_{metric}")),
+            "µs",
+            false,
+        ));
+    }
+    server.shutdown();
+    engine.shutdown().expect("bench http engine shutdown");
 
     // --- tracing overhead: span create/drop, disabled vs enabled ---
     // The obs design rides on the disabled path being a single relaxed

@@ -41,6 +41,13 @@
 #                              Chrome trace + Prometheus snapshot, and a
 #                              rerun with FA2_TRACE_INJECT_UNCLOSED=1 must
 #                              FAIL on the unclosed-span validator
+#   ./ci.sh --verify-http      one-command check of the HTTP front-end: boots
+#                              `repro serve --http 127.0.0.1:0` on an
+#                              ephemeral port, probes /health, /generate,
+#                              /generate_stream, and a malformed body (must
+#                              4xx), then drains via POST /admin/shutdown;
+#                              a second boot with FA2_HTTP_INJECT_SATURATE=1
+#                              must shed /generate with 429 + Retry-After
 #
 # Run from anywhere; CHANGES.md convention: every PR's entry should note
 # that `./ci.sh` is green (or which step it knowingly skips).
@@ -53,6 +60,7 @@ VERIFY_GATE=0
 LINT_ONLY=0
 VERIFY_LINT=0
 VERIFY_TRACE=0
+VERIFY_HTTP=0
 for arg in "$@"; do
     case "$arg" in
         --quick) QUICK=1 ;;
@@ -61,7 +69,8 @@ for arg in "$@"; do
         --lint-only) LINT_ONLY=1 ;;
         --verify-lint) VERIFY_LINT=1 ;;
         --verify-trace) VERIFY_TRACE=1 ;;
-        *) echo "usage: ./ci.sh [--quick] [--lint-only] [--verify-lint] [--update-baseline] [--verify-gate] [--verify-trace]" >&2; exit 2 ;;
+        --verify-http) VERIFY_HTTP=1 ;;
+        *) echo "usage: ./ci.sh [--quick] [--lint-only] [--verify-lint] [--update-baseline] [--verify-gate] [--verify-trace] [--verify-http]" >&2; exit 2 ;;
     esac
 done
 
@@ -129,6 +138,89 @@ if [ "$VERIFY_TRACE" = 1 ]; then
     fi
     rm -f reports/trace_unclosed.json
     echo "verify-trace: validator correctly FAILED on the unclosed span"
+    exit 0
+fi
+
+if [ "$VERIFY_HTTP" = 1 ]; then
+    cargo build --release --bin repro
+
+    # Minimal HTTP/1.1 client over bash's /dev/tcp: the server closes every
+    # connection after one response, so reading to EOF yields the full reply.
+    http_req() { # ADDR METHOD PATH [BODY] -> raw response on stdout
+        local addr="$1" method="$2" path="$3" body="${4-}"
+        exec 3<>"/dev/tcp/${addr%:*}/${addr##*:}"
+        printf '%s %s HTTP/1.1\r\nHost: %s\r\nContent-Length: %s\r\nConnection: close\r\n\r\n%s' \
+            "$method" "$path" "$addr" "${#body}" "$body" >&3
+        cat <&3
+        exec 3<&- 3>&-
+    }
+
+    wait_addr_file() { # FILE -> prints the bound address once it appears
+        local file="$1" i
+        for i in $(seq 1 300); do
+            if [ -s "$file" ]; then head -n1 "$file"; return 0; fi
+            sleep 0.2
+        done
+        echo "FAIL: server never wrote $file" >&2
+        return 1
+    }
+
+    mkdir -p target
+    ADDR_FILE="$PWD/target/http-addr.txt"
+
+    echo "== verify-http: boot serve --http on an ephemeral port =="
+    rm -f "$ADDR_FILE"
+    cargo run --release --quiet --bin repro -- serve --backend native \
+        --http 127.0.0.1:0 --http-addr-file "$ADDR_FILE" &
+    SRV=$!
+    trap '{ kill "$SRV" 2>/dev/null || true; }' EXIT
+    ADDR="$(wait_addr_file "$ADDR_FILE")"
+    echo "-- serving on $ADDR"
+
+    resp="$(http_req "$ADDR" GET /health)"
+    grep -q " 200 " <<<"$resp" || { echo "FAIL: /health: $resp" >&2; exit 1; }
+
+    resp="$(http_req "$ADDR" POST /generate '{"prompt":[1,2,3,4],"max_tokens":4}')"
+    grep -q " 200 " <<<"$resp" && grep -q '"tokens"' <<<"$resp" \
+        || { echo "FAIL: /generate: $resp" >&2; exit 1; }
+
+    resp="$(http_req "$ADDR" POST /generate_stream '{"prompt":[5,6,7],"max_tokens":3}')"
+    grep -q "event: first" <<<"$resp" && grep -q "event: done" <<<"$resp" \
+        || { echo "FAIL: /generate_stream: $resp" >&2; exit 1; }
+
+    resp="$(http_req "$ADDR" POST /generate 'this is not json')"
+    grep -q " 400 " <<<"$resp" || { echo "FAIL: malformed body not 400: $resp" >&2; exit 1; }
+
+    resp="$(http_req "$ADDR" POST /generate '{"prompt":[1],"max_tokens":0}')"
+    grep -q " 422 " <<<"$resp" || { echo "FAIL: bad max_tokens not 422: $resp" >&2; exit 1; }
+
+    resp="$(http_req "$ADDR" GET /metrics)"
+    grep -q "fa2_http_requests_total" <<<"$resp" \
+        || { echo "FAIL: /metrics has no fa2_http series: $resp" >&2; exit 1; }
+
+    http_req "$ADDR" POST /admin/shutdown >/dev/null
+    wait "$SRV" || { echo "FAIL: serve exited nonzero after drain" >&2; exit 1; }
+    trap - EXIT
+    echo "verify-http: generate + stream + health + malformed-4xx + drain OK"
+
+    echo "== verify-http: FA2_HTTP_INJECT_SATURATE must shed with 429 =="
+    rm -f "$ADDR_FILE"
+    FA2_HTTP_INJECT_SATURATE=1 cargo run --release --quiet --bin repro -- \
+        serve --backend native --http 127.0.0.1:0 --http-addr-file "$ADDR_FILE" &
+    SRV=$!
+    trap '{ kill "$SRV" 2>/dev/null || true; }' EXIT
+    ADDR="$(wait_addr_file "$ADDR_FILE")"
+
+    resp="$(http_req "$ADDR" POST /generate '{"prompt":[1,2],"max_tokens":2}')"
+    grep -q " 429 " <<<"$resp" && grep -qi "retry-after" <<<"$resp" \
+        || { echo "FAIL: injected saturation not shed with 429: $resp" >&2; exit 1; }
+    resp="$(http_req "$ADDR" GET /health)"
+    grep -q " 200 " <<<"$resp" || { echo "FAIL: /health wedged after shed: $resp" >&2; exit 1; }
+
+    http_req "$ADDR" POST /admin/shutdown >/dev/null
+    wait "$SRV" || { echo "FAIL: saturated serve exited nonzero after drain" >&2; exit 1; }
+    trap - EXIT
+    echo "verify-http: load shedding correctly returned 429 without wedging"
     exit 0
 fi
 

@@ -22,8 +22,8 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: "no-hotpath-panic",
         summary: "no unwrap()/expect()/panic!-family in hot-path modules \
-                  (attn/exec, runtime/kv, runtime/native, coordinator/scheduler) \
-                  outside #[cfg(test)]",
+                  (attn/exec, runtime/kv, runtime/native, coordinator/scheduler, \
+                  srv) outside #[cfg(test)]",
     },
     Rule {
         id: "no-float-eq",
@@ -93,6 +93,7 @@ fn is_hot_path(path: &str) -> bool {
         || path.starts_with("rust/src/runtime/kv")
         || path.starts_with("rust/src/runtime/native")
         || path.starts_with("rust/src/coordinator/scheduler")
+        || path.starts_with("rust/src/srv")
 }
 
 /// Rule `no-hotpath-panic`: in hot-path files, outside test regions, flag
@@ -529,6 +530,9 @@ mod tests {
                    #[cfg(test)]\n\
                    mod tests { fn t() { None::<u32>.unwrap(); } }\n";
         let d = diags_for("rust/src/runtime/kv.rs", FileKind::Src, src);
+        assert_eq!(rule_lines(&d, "no-hotpath-panic"), vec![2, 3, 5, 5]);
+        // the serving front-end is request-handling hot path too
+        let d = diags_for("rust/src/srv/router.rs", FileKind::Src, src);
         assert_eq!(rule_lines(&d, "no-hotpath-panic"), vec![2, 3, 5, 5]);
         // same source outside a hot-path module: clean
         let d = diags_for("rust/src/util/json.rs", FileKind::Src, src);

@@ -59,11 +59,22 @@ pub struct ServeConfig {
     /// Total KV blocks the arena holds (`--kv-blocks`); 0 = enough for
     /// `max_in_flight` full windows.
     pub kv_blocks: usize,
+    /// HTTP listen address (`--http ADDR`); "" = no HTTP front-end, run
+    /// the synthetic in-process workload instead.
+    pub http: String,
+    /// Router admission: max in-flight prompt tokens (0 = unlimited).
+    pub max_batch_prefill_tokens: usize,
+    /// Router admission: max in-flight prompt+max_tokens (0 = unlimited).
+    pub max_batch_total_tokens: usize,
+    /// Router admission: admit while queue depth < ratio * max_in_flight
+    /// (0.0 = no queue-depth gate).
+    pub waiting_served_ratio: f64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         let sched = crate::coordinator::scheduler::SchedulerConfig::default();
+        let admission = crate::srv::admission::AdmissionConfig::default();
         ServeConfig {
             model: "tiny".into(),
             backend: "auto".into(),
@@ -79,6 +90,10 @@ impl Default for ServeConfig {
             prefill_chunk: sched.prefill_chunk,
             kv_block: sched.kv_block,
             kv_blocks: 0,
+            http: String::new(),
+            max_batch_prefill_tokens: admission.max_batch_prefill_tokens,
+            max_batch_total_tokens: admission.max_batch_total_tokens,
+            waiting_served_ratio: admission.waiting_served_ratio,
         }
     }
 }
@@ -154,6 +169,19 @@ impl RunConfig {
                     as usize,
                 kv_block: doc.i64_or("serve.kv_block", d.serve.kv_block as i64) as usize,
                 kv_blocks: doc.i64_or("serve.kv_blocks", d.serve.kv_blocks as i64) as usize,
+                http: doc.str_or("serve.http", &d.serve.http).to_string(),
+                max_batch_prefill_tokens: doc
+                    .i64_or(
+                        "serve.max_batch_prefill_tokens",
+                        d.serve.max_batch_prefill_tokens as i64,
+                    ) as usize,
+                max_batch_total_tokens: doc
+                    .i64_or(
+                        "serve.max_batch_total_tokens",
+                        d.serve.max_batch_total_tokens as i64,
+                    ) as usize,
+                waiting_served_ratio: doc
+                    .f64_or("serve.waiting_served_ratio", d.serve.waiting_served_ratio),
             },
             model: ModelConfig {
                 n_kv_heads: doc
@@ -189,6 +217,8 @@ mod tests {
              backend = \"native\"\ntemperature = 0.8\ntop_k = 40\n\
              stream = true\nsched = \"gang\"\nmax_in_flight = 3\n\
              prefill_chunk = 2\nkv_block = 8\nkv_blocks = 24\n\
+             http = \"127.0.0.1:8080\"\nmax_batch_prefill_tokens = 512\n\
+             max_batch_total_tokens = 2048\nwaiting_served_ratio = 1.5\n\
              [model]\nn_kv_heads = 2\nwindow = 48\n",
         )
         .unwrap();
@@ -207,6 +237,10 @@ mod tests {
         assert_eq!(c.serve.prefill_chunk, 2);
         assert_eq!(c.serve.kv_block, 8);
         assert_eq!(c.serve.kv_blocks, 24);
+        assert_eq!(c.serve.http, "127.0.0.1:8080");
+        assert_eq!(c.serve.max_batch_prefill_tokens, 512);
+        assert_eq!(c.serve.max_batch_total_tokens, 2048);
+        assert!((c.serve.waiting_served_ratio - 1.5).abs() < 1e-12);
         assert_eq!(c.model.n_kv_heads, Some(2));
         assert_eq!(c.model.window, Some(48));
     }
@@ -224,6 +258,12 @@ mod tests {
         assert_eq!(c.serve.prefill_chunk, s.prefill_chunk);
         assert_eq!(c.serve.kv_block, s.kv_block);
         assert_eq!(c.serve.kv_blocks, 0, "0 = derive from max_in_flight");
+        // HTTP is off by default; admission knobs mirror AdmissionConfig
+        let a = crate::srv::admission::AdmissionConfig::default();
+        assert!(c.serve.http.is_empty());
+        assert_eq!(c.serve.max_batch_prefill_tokens, a.max_batch_prefill_tokens);
+        assert_eq!(c.serve.max_batch_total_tokens, a.max_batch_total_tokens);
+        assert!((c.serve.waiting_served_ratio - a.waiting_served_ratio).abs() < 1e-12);
         assert_eq!(c.model.n_kv_heads, None);
         assert_eq!(c.model.window, None);
     }

@@ -295,6 +295,20 @@ struct Incoming {
 /// `xla` crate's handles are `!Send` (Rc internals), so the worker owns
 /// the whole runtime and talks to clients only through channels.
 pub struct Engine {
+    shared: EngineHandle,
+    handle: JoinHandle<Result<Metrics>>,
+}
+
+/// A cloneable, thread-safe submission handle onto a running engine
+/// worker.  [`Engine`] owns one alongside the worker's `JoinHandle`; the
+/// HTTP router (`crate::srv`) clones one per connection-handling thread.
+/// All submit-side validation and queue accounting lives here, so every
+/// caller — in-process or over the wire — goes through the same gates.
+///
+/// Outstanding clones keep the worker's queue open: [`Engine::shutdown`]
+/// only drains once every `EngineHandle` has been dropped.
+#[derive(Clone)]
+pub struct EngineHandle {
     tx: Sender<Incoming>,
     shapes: ServeShapes,
     /// KV paging granularity (tokens per block).
@@ -306,79 +320,9 @@ pub struct Engine {
     /// queue depth behind [`EngineError::Saturated`].
     queued: Arc<AtomicUsize>,
     max_queue: usize,
-    handle: JoinHandle<Result<Metrics>>,
 }
 
-impl Engine {
-    /// Start the worker on an explicit backend with the default
-    /// (continuous) scheduler (`BackendKind::Native` needs no artifacts on
-    /// disk).
-    pub fn start(artifact_dir: PathBuf, model: &str, backend: BackendKind) -> Result<Engine> {
-        Self::start_with(artifact_dir, model, backend, SchedulerConfig::default())
-    }
-
-    /// Start the worker with an explicit scheduler policy (`kv_block` /
-    /// `kv_blocks` size the paged KV arena; `SchedMode::Gang` is the
-    /// wave-scheduling baseline kept for benchmarks).
-    pub fn start_with(
-        artifact_dir: PathBuf,
-        model: &str,
-        backend: BackendKind,
-        cfg: SchedulerConfig,
-    ) -> Result<Engine> {
-        Self::start_full(artifact_dir, model, backend, cfg, RuntimeOptions::default())
-    }
-
-    /// [`start_with`](Self::start_with) plus [`RuntimeOptions`] — the full
-    /// spelling, with the native model's GQA/window configuration.
-    pub fn start_full(
-        artifact_dir: PathBuf,
-        model: &str,
-        backend: BackendKind,
-        cfg: SchedulerConfig,
-        opts: RuntimeOptions,
-    ) -> Result<Engine> {
-        let cfg = cfg.sanitized();
-        let model = model.to_string();
-        let (tx, rx) = channel::<Incoming>();
-        let (ready_tx, ready_rx) = channel::<Result<ServeShapes>>();
-        let queued = Arc::new(AtomicUsize::new(0));
-        let worker_queued = queued.clone();
-        let handle = std::thread::spawn(move || {
-            let setup = || -> Result<(ModelBundle, Vec<HostTensor>)> {
-                let rt = Runtime::with_backend_opts(&artifact_dir, backend, opts)?;
-                let bundle = ModelBundle::discover(&rt, &model)?;
-                // Materialize the weights once via the init artifact (seed
-                // 0): the flat param list is shared by prefill and decode.
-                let params = bundle.init.run(&[HostTensor::scalar_u32(0)])?;
-                Ok((bundle, params))
-            };
-            match setup() {
-                Ok((bundle, params)) => {
-                    let _ = ready_tx.send(Ok(bundle.shapes));
-                    worker(rx, bundle, params, cfg, worker_queued)
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    Ok(Metrics::new())
-                }
-            }
-        });
-        let shapes = ready_rx
-            .recv()
-            .map_err(|_| Error::msg("engine worker died during setup"))??;
-        let kv_blocks = arena_blocks(&cfg, &shapes);
-        Ok(Engine {
-            tx,
-            shapes,
-            kv_block: cfg.kv_block,
-            kv_blocks,
-            queued,
-            max_queue: cfg.max_queue,
-            handle,
-        })
-    }
-
+impl EngineHandle {
     /// The serving model's compiled shapes (prompt window, vocab, ...).
     pub fn shapes(&self) -> ServeShapes {
         self.shapes
@@ -398,6 +342,11 @@ impl Engine {
     /// KV paging granularity (tokens per block).
     pub fn kv_block_tokens(&self) -> usize {
         self.kv_block
+    }
+
+    /// The bounded admission-queue depth behind [`EngineError::Saturated`].
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
     }
 
     /// Open a session: validates the prompt against the compiled window,
@@ -465,12 +414,123 @@ impl Engine {
         }
         Ok(Session { events, cancel, cancel_on_drop: true })
     }
+}
+
+impl Engine {
+    /// Start the worker on an explicit backend with the default
+    /// (continuous) scheduler (`BackendKind::Native` needs no artifacts on
+    /// disk).
+    pub fn start(artifact_dir: PathBuf, model: &str, backend: BackendKind) -> Result<Engine> {
+        Self::start_with(artifact_dir, model, backend, SchedulerConfig::default())
+    }
+
+    /// Start the worker with an explicit scheduler policy (`kv_block` /
+    /// `kv_blocks` size the paged KV arena; `SchedMode::Gang` is the
+    /// wave-scheduling baseline kept for benchmarks).
+    pub fn start_with(
+        artifact_dir: PathBuf,
+        model: &str,
+        backend: BackendKind,
+        cfg: SchedulerConfig,
+    ) -> Result<Engine> {
+        Self::start_full(artifact_dir, model, backend, cfg, RuntimeOptions::default())
+    }
+
+    /// [`start_with`](Self::start_with) plus [`RuntimeOptions`] — the full
+    /// spelling, with the native model's GQA/window configuration.
+    pub fn start_full(
+        artifact_dir: PathBuf,
+        model: &str,
+        backend: BackendKind,
+        cfg: SchedulerConfig,
+        opts: RuntimeOptions,
+    ) -> Result<Engine> {
+        let cfg = cfg.sanitized();
+        let model = model.to_string();
+        let (tx, rx) = channel::<Incoming>();
+        let (ready_tx, ready_rx) = channel::<Result<ServeShapes>>();
+        let queued = Arc::new(AtomicUsize::new(0));
+        let worker_queued = queued.clone();
+        let handle = std::thread::spawn(move || {
+            let setup = || -> Result<(ModelBundle, Vec<HostTensor>)> {
+                let rt = Runtime::with_backend_opts(&artifact_dir, backend, opts)?;
+                let bundle = ModelBundle::discover(&rt, &model)?;
+                // Materialize the weights once via the init artifact (seed
+                // 0): the flat param list is shared by prefill and decode.
+                let params = bundle.init.run(&[HostTensor::scalar_u32(0)])?;
+                Ok((bundle, params))
+            };
+            match setup() {
+                Ok((bundle, params)) => {
+                    let _ = ready_tx.send(Ok(bundle.shapes));
+                    worker(rx, bundle, params, cfg, worker_queued)
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    Ok(Metrics::new())
+                }
+            }
+        });
+        let shapes = ready_rx
+            .recv()
+            .map_err(|_| Error::msg("engine worker died during setup"))??;
+        let kv_blocks = arena_blocks(&cfg, &shapes);
+        Ok(Engine {
+            shared: EngineHandle {
+                tx,
+                shapes,
+                kv_block: cfg.kv_block,
+                kv_blocks,
+                queued,
+                max_queue: cfg.max_queue,
+            },
+            handle,
+        })
+    }
+
+    /// A cloneable submission handle for other threads (the HTTP router's
+    /// workers).  Clones keep the worker's queue open — drop them all
+    /// before [`shutdown`](Self::shutdown) is expected to return.
+    pub fn handle(&self) -> EngineHandle {
+        self.shared.clone()
+    }
+
+    /// The serving model's compiled shapes (prompt window, vocab, ...).
+    pub fn shapes(&self) -> ServeShapes {
+        self.shared.shapes()
+    }
+
+    /// Submissions currently waiting for admission.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue_depth()
+    }
+
+    /// Total KV blocks the worker's arena holds (the capacity behind
+    /// [`EngineError::ExceedsKvCapacity`]).
+    pub fn kv_capacity_blocks(&self) -> usize {
+        self.shared.kv_capacity_blocks()
+    }
+
+    /// KV paging granularity (tokens per block).
+    pub fn kv_block_tokens(&self) -> usize {
+        self.shared.kv_block_tokens()
+    }
+
+    /// See [`EngineHandle::submit`].
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        sampling: SamplingParams,
+    ) -> Result<Session, EngineError> {
+        self.shared.submit(prompt, sampling)
+    }
 
     /// Close the queue, wait for in-flight sessions to finish, and return
-    /// the serving metrics.
+    /// the serving metrics.  Blocks until every [`EngineHandle`] clone has
+    /// been dropped too (the worker drains while any sender is live).
     pub fn shutdown(self) -> Result<Metrics> {
-        let Engine { tx, handle, .. } = self;
-        drop(tx);
+        let Engine { shared, handle } = self;
+        drop(shared);
         handle.join().map_err(|_| Error::msg("engine worker panicked"))?
     }
 }
@@ -1022,12 +1082,14 @@ mod tests {
         let (tx, rx) = channel::<Incoming>();
         let handle = std::thread::spawn(|| -> Result<Metrics> { Ok(Metrics::new()) });
         let engine = Engine {
-            tx,
-            shapes: test_shapes(),
-            kv_block: 2,
-            kv_blocks: 32,
-            queued: Arc::new(AtomicUsize::new(queued)),
-            max_queue,
+            shared: EngineHandle {
+                tx,
+                shapes: test_shapes(),
+                kv_block: 2,
+                kv_blocks: 32,
+                queued: Arc::new(AtomicUsize::new(queued)),
+                max_queue,
+            },
             handle,
         };
         (engine, rx)
@@ -1039,7 +1101,8 @@ mod tests {
         // 2 blocks can never admit an 8-token reach
         let (engine, rx) = dead_engine(64, 0);
         drop(rx);
-        let tight = Engine { kv_blocks: 2, ..engine };
+        let mut tight = engine;
+        tight.shared.kv_blocks = 2;
         let err = tight
             .submit(vec![1; 4], SamplingParams::greedy(4))
             .unwrap_err();

@@ -10,5 +10,6 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod obs;
 pub mod runtime;
+pub mod srv;
 pub mod train;
 pub mod util;

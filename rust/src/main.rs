@@ -8,7 +8,9 @@
 //!   train     run the AOT train_step loop on the synthetic corpus
 //!   serve     run the session-based serving engine on a synthetic
 //!             workload (--stream, --temperature, --top-k, --sched
-//!             continuous|gang, --max-in-flight, --prefill-chunk)
+//!             continuous|gang, --max-in-flight, --prefill-chunk), or —
+//!             with --http ADDR — serve it over HTTP/1.1 + SSE
+//!             (srv router: validation, token-budget admission, shedding)
 //!   attn-exec run the native flash-attention kernels (GFLOP/s + parity)
 //!   bench-gate compare reports/bench_summary.json against the pinned
 //!             benches/baseline.json; nonzero exit on >tolerance regression
@@ -40,6 +42,8 @@ use fa2::coordinator::engine::{Completion, Engine, SamplingParams, TokenEvent};
 use fa2::coordinator::scheduler::{SchedMode, SchedulerConfig};
 use fa2::gpusim::{simulate, Device};
 use fa2::runtime::{BackendKind, Runtime, RuntimeOptions};
+use fa2::srv::admission::AdmissionConfig;
+use fa2::srv::{HttpServer, HttpServerConfig};
 use fa2::train::corpus::Corpus;
 use fa2::train::trainer::{TrainConfig, Trainer};
 use fa2::util::rng::Rng;
@@ -59,6 +63,9 @@ fn usage() -> ! {
                      [--sched continuous|gang] [--max-in-flight N]\n            \
                      [--prefill-chunk N] [--kv-block T] [--kv-blocks N]\n            \
                      [--kv-heads H] [--window W]\n            \
+                     [--http ADDR] [--http-addr-file FILE]\n            \
+                     [--max-batch-prefill-tokens N] [--max-batch-total-tokens N]\n            \
+                     [--waiting-served-ratio R]\n            \
                      [--trace FILE] [--metrics-out FILE]  (env: FA2_TRACE=FILE)\n  \
            attn-exec [--batch B] [--heads H] [--kv-heads H] [--seqlen N]\n            \
                      [--head-dim D] [--causal 0|1] [--window W]\n            \
@@ -476,64 +483,110 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shapes.geometry(kv_block).blocks_per_seq(),
         sched_cfg.prefill_chunk
     );
-    let mut rng = Rng::seed_from(cfg.seed);
-    let mut corpus = Corpus::new(512, cfg.seed);
-    let mut sessions = Vec::new();
-    for i in 0..cfg.num_requests {
-        let prompt = corpus.next_batch(1, 16);
-        let sampling = SamplingParams {
-            max_tokens: cfg.tokens_per_request,
-            temperature: cfg.temperature,
-            top_k: cfg.top_k,
-            seed: cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
-            stop_tokens: Vec::new(),
-        };
-        sessions.push(engine.submit(prompt, sampling)?);
-        if cfg.arrival_rate > 0.0 {
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                rng.exponential(cfg.arrival_rate),
-            ));
+    // --http ADDR (or serve.http in the config) puts the srv router in
+    // front of the engine instead of running the synthetic workload; the
+    // process then serves until a client POSTs /admin/shutdown.
+    let http_addr: Option<String> = match args.get("http") {
+        Some("") if cfg.http.is_empty() => Some("127.0.0.1:8080".to_string()),
+        Some("") => Some(cfg.http.clone()),
+        Some(a) => Some(a.to_string()),
+        None if !cfg.http.is_empty() => Some(cfg.http.clone()),
+        None => None,
+    };
+    if let Some(addr) = http_addr {
+        if let Some(n) = args.get_usize("max-batch-prefill-tokens")? {
+            cfg.max_batch_prefill_tokens = n;
         }
-    }
-    for (i, session) in sessions.into_iter().enumerate() {
-        let comp: Completion = if cfg.stream && i == 0 {
-            // stream the first session's tokens as they are generated
-            use std::io::Write;
-            print!("session 0 stream:");
-            loop {
-                match session.recv() {
-                    Some(TokenEvent::First { token, ttft_secs }) => {
-                        print!(" {token} (ttft {:.1} ms)", ttft_secs * 1e3);
-                        std::io::stdout().flush().ok();
-                    }
-                    Some(TokenEvent::Delta { token, .. }) => {
-                        print!(" {token}");
-                        std::io::stdout().flush().ok();
-                    }
-                    Some(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs }) => {
-                        println!("  [{finish:?}]");
-                        break Completion {
-                            tokens,
-                            finish,
-                            latency: latency_secs,
-                            ttft: ttft_secs,
-                        };
-                    }
-                    None => bail!("engine closed mid-stream"),
-                }
-            }
-        } else {
-            session.wait()?
+        if let Some(n) = args.get_usize("max-batch-total-tokens")? {
+            cfg.max_batch_total_tokens = n;
+        }
+        if let Some(r) = args.get("waiting-served-ratio") {
+            cfg.waiting_served_ratio = r.parse().context("--waiting-served-ratio")?;
+        }
+        let http_cfg = HttpServerConfig {
+            admission: AdmissionConfig {
+                max_batch_prefill_tokens: cfg.max_batch_prefill_tokens,
+                max_batch_total_tokens: cfg.max_batch_total_tokens,
+                waiting_served_ratio: cfg.waiting_served_ratio,
+                max_in_flight: sched_cfg.max_in_flight,
+            },
+            inject_saturate: std::env::var("FA2_HTTP_INJECT_SATURATE").is_ok(),
+            ..HttpServerConfig::default()
         };
-        if i < 3 {
-            println!(
-                "req {i}: {} tokens, latency {:.1} ms, ttft {:.1} ms, {:?}: {:?}",
-                comp.tokens.len(),
-                comp.latency * 1e3,
-                comp.ttft * 1e3,
-                comp.finish,
-                &comp.tokens[..comp.tokens.len().min(8)]
-            );
+        let server = HttpServer::start(&addr, engine.handle(), http_cfg)?;
+        let bound = server.local_addr();
+        println!(
+            "http: listening on {bound} (POST /generate | POST /generate_stream | \
+             GET /health | GET /metrics | POST /admin/shutdown)"
+        );
+        if let Some(p) = args.get("http-addr-file") {
+            // ephemeral-port handshake for scripts (ci.sh --verify-http)
+            std::fs::write(p, format!("{bound}\n"))
+                .with_context(|| format!("writing --http-addr-file {p}"))?;
+        }
+        server.wait_shutdown_requested();
+        println!("http: shutdown requested; draining in-flight sessions");
+        server.shutdown();
+    } else {
+        let mut rng = Rng::seed_from(cfg.seed);
+        let mut corpus = Corpus::new(512, cfg.seed);
+        let mut sessions = Vec::new();
+        for i in 0..cfg.num_requests {
+            let prompt = corpus.next_batch(1, 16);
+            let sampling = SamplingParams {
+                max_tokens: cfg.tokens_per_request,
+                temperature: cfg.temperature,
+                top_k: cfg.top_k,
+                seed: cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
+                stop_tokens: Vec::new(),
+            };
+            sessions.push(engine.submit(prompt, sampling)?);
+            if cfg.arrival_rate > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    rng.exponential(cfg.arrival_rate),
+                ));
+            }
+        }
+        for (i, session) in sessions.into_iter().enumerate() {
+            let comp: Completion = if cfg.stream && i == 0 {
+                // stream the first session's tokens as they are generated
+                use std::io::Write;
+                print!("session 0 stream:");
+                loop {
+                    match session.recv() {
+                        Some(TokenEvent::First { token, ttft_secs }) => {
+                            print!(" {token} (ttft {:.1} ms)", ttft_secs * 1e3);
+                            std::io::stdout().flush().ok();
+                        }
+                        Some(TokenEvent::Delta { token, .. }) => {
+                            print!(" {token}");
+                            std::io::stdout().flush().ok();
+                        }
+                        Some(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs }) => {
+                            println!("  [{finish:?}]");
+                            break Completion {
+                                tokens,
+                                finish,
+                                latency: latency_secs,
+                                ttft: ttft_secs,
+                            };
+                        }
+                        None => bail!("engine closed mid-stream"),
+                    }
+                }
+            } else {
+                session.wait()?
+            };
+            if i < 3 {
+                println!(
+                    "req {i}: {} tokens, latency {:.1} ms, ttft {:.1} ms, {:?}: {:?}",
+                    comp.tokens.len(),
+                    comp.latency * 1e3,
+                    comp.ttft * 1e3,
+                    comp.finish,
+                    &comp.tokens[..comp.tokens.len().min(8)]
+                );
+            }
         }
     }
     let metrics = engine.shutdown()?;

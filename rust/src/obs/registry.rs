@@ -11,8 +11,8 @@
 //! Naming convention: `snake_case`, `<subsystem>_<what>[_total]` —
 //! `_total` marks monotonic counters (Prometheus convention); gauges are
 //! instantaneous levels.  The subsystem prefix (`engine`, `sched`, `kv`,
-//! `attn`/`flash`/`decode`, `serve`, `trace`, `bench`, `test`) doubles as
-//! the Chrome trace category.
+//! `attn`/`flash`/`decode`, `serve`, `http`, `trace`, `bench`, `test`)
+//! doubles as the Chrome trace category.
 
 /// What kind of observable a registry entry names — decides which
 /// exposition surface (trace stream vs. metrics snapshot) it appears on.
@@ -49,6 +49,7 @@ pub const REGISTRY: &[NameDef] = &[
     NameDef { kind: Span, name: "attn_flash_bwd", help: "one flash backward kernel invocation (whole tensor)" },
     NameDef { kind: Span, name: "attn_decode_step", help: "one in-place paged decode step over a batch of rows" },
     NameDef { kind: Span, name: "bench_overhead_span", help: "no-op span used by the tracing-overhead bench" },
+    NameDef { kind: Span, name: "http_request", help: "one HTTP request, parse to last response byte" },
     NameDef { kind: Span, name: "test_span_outer", help: "golden-trace fixture: outer span" },
     NameDef { kind: Span, name: "test_span_inner", help: "golden-trace fixture: inner span" },
     // --- events (trace only; the scheduler rows form the audit log) ---
@@ -58,6 +59,7 @@ pub const REGISTRY: &[NameDef] = &[
     NameDef { kind: Event, name: "engine_rows", help: "per sub-step row mix: args decode, prefill" },
     NameDef { kind: Event, name: "kv_alloc", help: "arena block grant: args slot, blocks" },
     NameDef { kind: Event, name: "kv_free", help: "arena block release: args slot, blocks" },
+    NameDef { kind: Event, name: "http_shed", help: "request shed with 429: args status" },
     NameDef { kind: Event, name: "test_event", help: "golden-trace fixture: instant event" },
     // --- counters (metrics snapshot) ---
     NameDef { kind: Counter, name: "engine_steps_total", help: "engine worker steps that did scheduling or decode work" },
@@ -83,11 +85,36 @@ pub const REGISTRY: &[NameDef] = &[
     NameDef { kind: Counter, name: "kv_block_allocs_total", help: "arena blocks granted" },
     NameDef { kind: Counter, name: "kv_block_frees_total", help: "arena blocks released" },
     NameDef { kind: Counter, name: "trace_events_dropped_total", help: "trace events dropped at the sink capacity ceiling" },
+    NameDef { kind: Counter, name: "http_conns_total", help: "TCP connections accepted by the HTTP listener" },
+    NameDef { kind: Counter, name: "http_requests_total", help: "HTTP requests parsed (all routes)" },
+    NameDef { kind: Counter, name: "http_generate_requests_total", help: "POST /generate requests" },
+    NameDef { kind: Counter, name: "http_stream_requests_total", help: "POST /generate_stream requests" },
+    NameDef { kind: Counter, name: "http_health_requests_total", help: "GET /health requests" },
+    NameDef { kind: Counter, name: "http_metrics_requests_total", help: "GET /metrics scrapes" },
+    NameDef { kind: Counter, name: "http_validation_rejects_total", help: "requests rejected 4xx before touching the scheduler" },
+    NameDef { kind: Counter, name: "http_shed_total", help: "requests shed with 429 (budget, queue ratio, or engine saturation)" },
+    NameDef { kind: Counter, name: "http_5xx_total", help: "responses served with a 5xx status" },
+    NameDef { kind: Counter, name: "http_sse_events_total", help: "SSE events written on /generate_stream" },
+    NameDef { kind: Counter, name: "http_accept_rejects_total", help: "connections refused 503 at the bounded accept queue" },
     // --- gauges (metrics snapshot) ---
     NameDef { kind: Gauge, name: "kv_blocks_in_use", help: "arena blocks currently granted" },
     NameDef { kind: Gauge, name: "kv_blocks_high_water", help: "max arena blocks ever simultaneously granted" },
     NameDef { kind: Gauge, name: "kv_pool_blocks", help: "arena capacity in blocks" },
     NameDef { kind: Gauge, name: "kv_free_blocks", help: "arena blocks on the free list" },
+    NameDef { kind: Gauge, name: "http_inflight_requests", help: "HTTP requests currently being handled" },
+    NameDef { kind: Gauge, name: "http_budget_prefill_tokens", help: "prompt tokens currently reserved by router admission" },
+    NameDef { kind: Gauge, name: "http_budget_total_tokens", help: "prompt+max_tokens currently reserved by router admission" },
+    NameDef { kind: Gauge, name: "http_budget_total_tokens_peak", help: "max total tokens ever simultaneously reserved" },
+    NameDef { kind: Gauge, name: "http_generate_latency_p50_us", help: "/generate latency p50 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_generate_latency_p95_us", help: "/generate latency p95 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_generate_ttft_p50_us", help: "/generate time-to-first-token p50 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_generate_ttft_p95_us", help: "/generate time-to-first-token p95 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_generate_tpot_p50_us", help: "/generate time-per-output-token p50 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_stream_latency_p50_us", help: "/generate_stream latency p50 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_stream_latency_p95_us", help: "/generate_stream latency p95 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_stream_ttft_p50_us", help: "/generate_stream time-to-first-token p50 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_stream_ttft_p95_us", help: "/generate_stream time-to-first-token p95 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "http_stream_tpot_p50_us", help: "/generate_stream time-per-output-token p50 (µs, sampled)" },
 ];
 
 /// Index of `name` in [`REGISTRY`], if declared.
@@ -117,7 +144,7 @@ mod tests {
 
     #[test]
     fn lookup_finds_declared_names_only() {
-        assert_eq!(lookup("engine_steps_total"), Some(16));
+        assert_eq!(lookup("engine_steps_total"), Some(18));
         assert!(lookup("engine_steps_totall").is_none());
         for (i, def) in REGISTRY.iter().enumerate() {
             assert_eq!(lookup(def.name), Some(i));

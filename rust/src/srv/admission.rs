@@ -1,0 +1,285 @@
+//! Token-budget admission (DESIGN.md §14): TGI's
+//! `max_batch_prefill_tokens` / `max_batch_total_tokens` /
+//! `waiting_served_ratio` knobs layered *above* the engine's block-level
+//! FCFS scheduler.  The scheduler admits whatever fits in KV blocks and
+//! preempts when it guessed wrong; the router's job is to stop admitting
+//! *before* that happens, so saturation surfaces as a cheap 429 at the
+//! socket instead of preemption churn inside the batch.
+//!
+//! The budget is token-denominated (prompt tokens for prefill, prompt +
+//! max_tokens for total residency) because that is what the client
+//! declares up front; the engine then enforces the exact block-level
+//! truth underneath.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::{obs_gauge, obs_gauge_max};
+
+/// Router-level admission knobs.  Zero disables the corresponding check.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// Max sum of in-flight *prompt* tokens (prefill compute budget).
+    pub max_batch_prefill_tokens: usize,
+    /// Max sum of in-flight `prompt + max_tokens` (KV residency budget).
+    pub max_batch_total_tokens: usize,
+    /// Admit while `queue_depth < ceil(ratio * max_in_flight)`; 0.0 turns
+    /// the check off.  Ratios above 1.0 allow a bounded waiting line.
+    pub waiting_served_ratio: f64,
+    /// The engine's concurrent-session ceiling (`SchedulerConfig`
+    /// max_in_flight), used to scale `waiting_served_ratio`.
+    pub max_in_flight: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_batch_prefill_tokens: 4096,
+            max_batch_total_tokens: 16384,
+            waiting_served_ratio: 1.2,
+            max_in_flight: 8,
+        }
+    }
+}
+
+/// Why the router refused to admit a request.  Every variant maps to 429
+/// (`crate::srv::router`): the request is well-formed, the server is busy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Admitting would push in-flight prompt tokens past the prefill budget.
+    PrefillBudget { need: usize, in_flight: usize, cap: usize },
+    /// Admitting would push in-flight prompt+max_tokens past the total budget.
+    TotalBudget { need: usize, in_flight: usize, cap: usize },
+    /// The waiting line is already `waiting_served_ratio` × max_in_flight deep.
+    QueueFull { depth: usize, allowed: usize },
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitError::PrefillBudget { need, in_flight, cap } => write!(
+                f,
+                "prefill budget exhausted: need {need} tokens, {in_flight} in flight, cap {cap}"
+            ),
+            AdmitError::TotalBudget { need, in_flight, cap } => write!(
+                f,
+                "total token budget exhausted: need {need} tokens, {in_flight} in flight, cap {cap}"
+            ),
+            AdmitError::QueueFull { depth, allowed } => {
+                write!(f, "queue depth {depth} at waiting-served limit {allowed}")
+            }
+        }
+    }
+}
+
+impl AdmitError {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AdmitError::PrefillBudget { .. } => "prefill_budget",
+            AdmitError::TotalBudget { .. } => "total_budget",
+            AdmitError::QueueFull { .. } => "queue_full",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct BudgetState {
+    prefill_tokens: usize,
+    total_tokens: usize,
+}
+
+/// Shared token-budget ledger.  `try_admit` reserves, the returned
+/// [`Admitted`] guard releases on drop — so a handler that errors out
+/// mid-request can never leak budget.
+#[derive(Clone)]
+pub struct TokenBudget {
+    cfg: AdmissionConfig,
+    state: Arc<Mutex<BudgetState>>,
+}
+
+impl TokenBudget {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        TokenBudget { cfg, state: Arc::new(Mutex::new(BudgetState::default())) }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BudgetState> {
+        // A poisoned ledger is still a correct ledger: every mutation is a
+        // saturating add/sub completed before any code that could panic.
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Queue slots the waiting-served ratio allows (0 = check disabled).
+    pub fn allowed_queue_depth(&self) -> usize {
+        if self.cfg.waiting_served_ratio <= 0.0 {
+            return 0;
+        }
+        let allowed = (self.cfg.waiting_served_ratio * self.cfg.max_in_flight as f64).ceil();
+        (allowed as usize).max(1)
+    }
+
+    /// Reserve budget for a request with `prefill` prompt tokens and
+    /// `total` worst-case resident tokens (`prompt + max_tokens`), given
+    /// the engine's current queue depth.
+    pub fn try_admit(
+        &self,
+        prefill: usize,
+        total: usize,
+        queue_depth: usize,
+    ) -> Result<Admitted, AdmitError> {
+        let allowed = self.allowed_queue_depth();
+        if allowed > 0 && queue_depth >= allowed {
+            return Err(AdmitError::QueueFull { depth: queue_depth, allowed });
+        }
+        let mut st = self.lock();
+        let cap_p = self.cfg.max_batch_prefill_tokens;
+        // A single request larger than the whole budget must still be
+        // admissible when the ledger is empty, or it could never run.
+        if cap_p > 0 && st.prefill_tokens > 0 && st.prefill_tokens + prefill > cap_p {
+            return Err(AdmitError::PrefillBudget {
+                need: prefill,
+                in_flight: st.prefill_tokens,
+                cap: cap_p,
+            });
+        }
+        let cap_t = self.cfg.max_batch_total_tokens;
+        if cap_t > 0 && st.total_tokens > 0 && st.total_tokens + total > cap_t {
+            return Err(AdmitError::TotalBudget {
+                need: total,
+                in_flight: st.total_tokens,
+                cap: cap_t,
+            });
+        }
+        st.prefill_tokens += prefill;
+        st.total_tokens += total;
+        obs_gauge!("http_budget_prefill_tokens", st.prefill_tokens);
+        obs_gauge!("http_budget_total_tokens", st.total_tokens);
+        obs_gauge_max!("http_budget_total_tokens_peak", st.total_tokens);
+        drop(st);
+        Ok(Admitted { budget: self.clone(), prefill, total })
+    }
+
+    /// Current in-flight (prefill, total) token reservations.
+    pub fn in_flight(&self) -> (usize, usize) {
+        let st = self.lock();
+        (st.prefill_tokens, st.total_tokens)
+    }
+
+    fn release(&self, prefill: usize, total: usize) {
+        let mut st = self.lock();
+        st.prefill_tokens = st.prefill_tokens.saturating_sub(prefill);
+        st.total_tokens = st.total_tokens.saturating_sub(total);
+        obs_gauge!("http_budget_prefill_tokens", st.prefill_tokens);
+        obs_gauge!("http_budget_total_tokens", st.total_tokens);
+    }
+}
+
+/// RAII budget reservation: dropping it returns the tokens to the ledger.
+pub struct Admitted {
+    budget: TokenBudget,
+    prefill: usize,
+    total: usize,
+}
+
+impl Drop for Admitted {
+    fn drop(&mut self) {
+        self.budget.release(self.prefill, self.total);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(prefill: usize, total: usize, ratio: f64) -> AdmissionConfig {
+        AdmissionConfig {
+            max_batch_prefill_tokens: prefill,
+            max_batch_total_tokens: total,
+            waiting_served_ratio: ratio,
+            max_in_flight: 4,
+        }
+    }
+
+    #[test]
+    fn admit_and_release_round_trip() {
+        let b = TokenBudget::new(cfg(100, 200, 0.0));
+        let g = b.try_admit(60, 120, 0).unwrap();
+        assert_eq!(b.in_flight(), (60, 120));
+        drop(g);
+        assert_eq!(b.in_flight(), (0, 0));
+    }
+
+    #[test]
+    fn prefill_budget_sheds_second_request() {
+        let b = TokenBudget::new(cfg(100, 0, 0.0));
+        let _g = b.try_admit(80, 90, 0).unwrap();
+        let err = b.try_admit(30, 30, 0).unwrap_err();
+        assert_eq!(err, AdmitError::PrefillBudget { need: 30, in_flight: 80, cap: 100 });
+        assert_eq!(err.kind(), "prefill_budget");
+    }
+
+    #[test]
+    fn total_budget_sheds_second_request() {
+        let b = TokenBudget::new(cfg(0, 200, 0.0));
+        let _g = b.try_admit(10, 150, 0).unwrap();
+        let err = b.try_admit(10, 60, 0).unwrap_err();
+        assert_eq!(err, AdmitError::TotalBudget { need: 60, in_flight: 150, cap: 200 });
+        assert_eq!(err.kind(), "total_budget");
+    }
+
+    #[test]
+    fn oversized_request_admits_into_empty_ledger() {
+        // A request bigger than the whole budget must not deadlock forever.
+        let b = TokenBudget::new(cfg(100, 100, 0.0));
+        let g = b.try_admit(500, 600, 0).unwrap();
+        // ...but blocks everything else until it drains.
+        assert!(b.try_admit(1, 1, 0).is_err());
+        drop(g);
+        assert!(b.try_admit(1, 1, 0).is_ok());
+    }
+
+    #[test]
+    fn queue_depth_gate_uses_waiting_served_ratio() {
+        let b = TokenBudget::new(cfg(0, 0, 1.5));
+        assert_eq!(b.allowed_queue_depth(), 6); // ceil(1.5 * 4)
+        assert!(b.try_admit(1, 1, 5).is_ok());
+        let err = b.try_admit(1, 1, 6).unwrap_err();
+        assert_eq!(err, AdmitError::QueueFull { depth: 6, allowed: 6 });
+        assert_eq!(err.kind(), "queue_full");
+    }
+
+    #[test]
+    fn zero_knobs_disable_every_check() {
+        let b = TokenBudget::new(cfg(0, 0, 0.0));
+        let mut guards = Vec::new();
+        for _ in 0..64 {
+            guards.push(b.try_admit(1000, 2000, 999).unwrap());
+        }
+        assert_eq!(b.in_flight(), (64 * 1000, 64 * 2000));
+    }
+
+    #[test]
+    fn release_saturates_rather_than_underflows() {
+        let b = TokenBudget::new(cfg(0, 0, 0.0));
+        b.release(10, 10);
+        assert_eq!(b.in_flight(), (0, 0));
+    }
+
+    #[test]
+    fn every_admit_error_variant_has_a_message() {
+        for e in [
+            AdmitError::PrefillBudget { need: 1, in_flight: 2, cap: 3 },
+            AdmitError::TotalBudget { need: 1, in_flight: 2, cap: 3 },
+            AdmitError::QueueFull { depth: 1, allowed: 1 },
+        ] {
+            assert!(!format!("{e}").is_empty());
+            assert!(!e.kind().is_empty());
+        }
+    }
+}

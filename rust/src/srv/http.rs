@@ -1,0 +1,472 @@
+//! Minimal HTTP/1.1 wire codec for the serving front-end (DESIGN.md §14):
+//! request parsing with hard size bounds, response serialization, and the
+//! SSE framing `/generate_stream` uses.  Std-only by policy — no hyper,
+//! no httparse — and deliberately small: one request per connection
+//! (`Connection: close` on every response), identity bodies sized by
+//! `Content-Length`, no chunked transfer coding.  That subset is all the
+//! router needs and keeps the parser honest enough to fuzz by hand.
+//!
+//! This file is request-handling hot path (the `no-hotpath-panic` lint
+//! rule covers `srv/`): every malformed input is a typed
+//! [`HttpParseError`], never a panic.
+
+use std::fmt;
+use std::io::{BufRead, Write};
+
+use crate::util::json::Json;
+
+/// Hard cap on request bodies; beyond it the router answers 413 instead
+/// of buffering an attacker-sized payload.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Cap on the request line and each header line.
+const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Cap on the number of header lines.
+const MAX_HEADERS: usize = 64;
+
+/// Why a request could not be parsed off the wire.  `status()` decides
+/// the response (or silence, for connections that never sent a request).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HttpParseError {
+    /// EOF before any request bytes — a probe or a closed keep-alive;
+    /// nothing to answer.
+    ConnectionClosed,
+    /// The request line exceeded [`MAX_LINE_BYTES`].
+    RequestLineTooLong { max: usize },
+    /// The request line was not `METHOD TARGET HTTP/1.x`.
+    BadRequestLine { line: String },
+    /// An HTTP version this one-request-per-connection codec does not
+    /// speak (e.g. `HTTP/2.0`).
+    BadVersion { version: String },
+    /// More than [`MAX_HEADERS`] header lines.
+    TooManyHeaders { max: usize },
+    /// A header line without a `:` separator.
+    BadHeader { line: String },
+    /// A `Content-Length` that is not a base-10 integer.
+    BadContentLength { value: String },
+    /// A declared body larger than [`MAX_BODY_BYTES`].
+    BodyTooLarge { len: usize, max: usize },
+    /// The socket failed mid-request (timeout, reset, truncated body).
+    Io { what: String },
+}
+
+impl fmt::Display for HttpParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpParseError::ConnectionClosed => write!(f, "connection closed before a request"),
+            HttpParseError::RequestLineTooLong { max } => {
+                write!(f, "request line exceeds {max} bytes")
+            }
+            HttpParseError::BadRequestLine { line } => {
+                write!(f, "malformed request line {line:?} (want METHOD TARGET HTTP/1.x)")
+            }
+            HttpParseError::BadVersion { version } => {
+                write!(f, "unsupported HTTP version {version:?} (this server speaks HTTP/1.x)")
+            }
+            HttpParseError::TooManyHeaders { max } => write!(f, "more than {max} header lines"),
+            HttpParseError::BadHeader { line } => {
+                write!(f, "malformed header line {line:?} (missing ':')")
+            }
+            HttpParseError::BadContentLength { value } => {
+                write!(f, "Content-Length {value:?} is not a non-negative integer")
+            }
+            HttpParseError::BodyTooLarge { len, max } => {
+                write!(f, "request body of {len} bytes exceeds the {max} byte cap")
+            }
+            HttpParseError::Io { what } => write!(f, "i/o error mid-request: {what}"),
+        }
+    }
+}
+
+impl HttpParseError {
+    /// The 4xx status this parse failure maps to, or `None` when the peer
+    /// is gone and writing a response is pointless.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpParseError::ConnectionClosed | HttpParseError::Io { .. } => None,
+            HttpParseError::BodyTooLarge { .. } => Some(413),
+            HttpParseError::RequestLineTooLong { .. }
+            | HttpParseError::BadRequestLine { .. }
+            | HttpParseError::BadVersion { .. }
+            | HttpParseError::TooManyHeaders { .. }
+            | HttpParseError::BadHeader { .. }
+            | HttpParseError::BadContentLength { .. } => Some(400),
+        }
+    }
+}
+
+/// One parsed request.  Header names are lowercased at parse time so
+/// lookups are case-insensitive, per RFC 9110.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// The raw request target (path plus any query string).
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// The target with any query string stripped — what the router
+    /// matches on.
+    pub fn path(&self) -> &str {
+        match self.target.split_once('?') {
+            Some((p, _)) => p,
+            None => &self.target,
+        }
+    }
+
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Read one request off a buffered stream.
+    pub fn read_from(r: &mut impl BufRead) -> Result<Request, HttpParseError> {
+        let line = read_line(r, true)?;
+        let mut parts = line.split_ascii_whitespace();
+        let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => return Err(HttpParseError::BadRequestLine { line: truncate_for_msg(&line) }),
+        };
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpParseError::BadVersion { version: version.to_string() });
+        }
+        let (method, target) = (method.to_string(), target.to_string());
+        let mut headers = Vec::new();
+        loop {
+            let line = read_line(r, false)?;
+            if line.is_empty() {
+                break;
+            }
+            if headers.len() >= MAX_HEADERS {
+                return Err(HttpParseError::TooManyHeaders { max: MAX_HEADERS });
+            }
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(HttpParseError::BadHeader { line: truncate_for_msg(&line) });
+            };
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let body = match headers.iter().find(|(k, _)| k == "content-length") {
+            None => Vec::new(),
+            Some((_, v)) => {
+                let len: usize = v
+                    .parse()
+                    .map_err(|_| HttpParseError::BadContentLength { value: v.clone() })?;
+                if len > MAX_BODY_BYTES {
+                    return Err(HttpParseError::BodyTooLarge { len, max: MAX_BODY_BYTES });
+                }
+                let mut body = vec![0u8; len];
+                std::io::Read::read_exact(r, &mut body)
+                    .map_err(|e| HttpParseError::Io { what: e.to_string() })?;
+                body
+            }
+        };
+        Ok(Request { method, target, headers, body })
+    }
+}
+
+/// Read one CRLF (or bare-LF) terminated line, bounded by
+/// [`MAX_LINE_BYTES`].  `first` distinguishes "peer never spoke"
+/// (ConnectionClosed) from "stream truncated mid-request" (Io).
+fn read_line(r: &mut impl BufRead, first: bool) -> Result<String, HttpParseError> {
+    let mut buf = Vec::new();
+    let mut taken = 0usize;
+    loop {
+        let chunk = r
+            .fill_buf()
+            .map_err(|e| HttpParseError::Io { what: e.to_string() })?;
+        if chunk.is_empty() {
+            return if first && buf.is_empty() {
+                Err(HttpParseError::ConnectionClosed)
+            } else {
+                Err(HttpParseError::Io { what: "eof mid-line".to_string() })
+            };
+        }
+        let nl = chunk.iter().position(|&b| b == b'\n');
+        let take = nl.map(|i| i + 1).unwrap_or(chunk.len());
+        taken += take;
+        if taken > MAX_LINE_BYTES {
+            return Err(if first {
+                HttpParseError::RequestLineTooLong { max: MAX_LINE_BYTES }
+            } else {
+                HttpParseError::BadHeader { line: "(header line too long)".to_string() }
+            });
+        }
+        buf.extend_from_slice(&chunk[..take]);
+        let done = nl.is_some();
+        r.consume(take);
+        if done {
+            while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+                buf.pop();
+            }
+            return Ok(String::from_utf8_lossy(&buf).into_owned());
+        }
+    }
+}
+
+/// Bound the echoed input in error messages (it came off the network).
+fn truncate_for_msg(s: &str) -> String {
+    const CAP: usize = 120;
+    if s.len() <= CAP {
+        s.to_string()
+    } else {
+        let mut end = CAP;
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        format!("{}...", &s[..end])
+    }
+}
+
+/// The canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Content Too Large",
+        422 => "Unprocessable Content",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// One buffered response.  Every response closes the connection — the
+/// codec serves exactly one request per TCP connection.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers, e.g. `Retry-After` on 429s.
+    pub extra: Vec<(&'static str, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.extra.push((name, value));
+        self
+    }
+
+    /// Serialize status line, headers, and body.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        for (k, v) in &self.extra {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Start a Server-Sent Events response: the body is an open-ended event
+/// stream delimited by connection close (valid HTTP/1.1: no
+/// Content-Length + `Connection: close` means read-to-EOF).
+pub fn write_sse_headers(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One SSE frame: `event: <name>\ndata: <data>\n\n`, flushed so the
+/// client sees each token as it is generated.
+pub fn write_sse_event(w: &mut impl Write, event: &str, data: &str) -> std::io::Result<()> {
+    write!(w, "event: {event}\ndata: {data}\n\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8]) -> Result<Request, HttpParseError> {
+        Request::read_from(&mut BufReader::new(raw))
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_case_insensitive_headers() {
+        let raw = b"POST /generate?debug=1 HTTP/1.1\r\nHost: x\r\nCoNtEnT-LeNgTh: 4\r\n\r\nabcd";
+        let req = parse(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/generate?debug=1");
+        assert_eq!(req.path(), "/generate");
+        assert_eq!(req.header("content-length"), Some("4"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.header("absent"), None);
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_a_get_without_body_and_bare_lf_lines() {
+        let req = parse(b"GET /health HTTP/1.0\nAccept: */*\n\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path(), "/health");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_request_lines_and_versions() {
+        assert!(matches!(parse(b""), Err(HttpParseError::ConnectionClosed)));
+        assert!(matches!(
+            parse(b"GET /\r\n\r\n"),
+            Err(HttpParseError::BadRequestLine { .. })
+        ));
+        assert!(matches!(
+            parse(b"GET / HTTP/2.0\r\n\r\n"),
+            Err(HttpParseError::BadVersion { .. })
+        ));
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1 extra\r\n\r\n"),
+            Err(HttpParseError::BadRequestLine { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_headers_and_content_lengths() {
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(HttpParseError::BadHeader { .. })
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: ten\r\n\r\n"),
+            Err(HttpParseError::BadContentLength { .. })
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n"),
+            Err(HttpParseError::BadContentLength { .. })
+        ));
+    }
+
+    #[test]
+    fn bounds_line_length_header_count_body_size_and_truncated_bodies() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE_BYTES));
+        assert_eq!(
+            parse(long.as_bytes()),
+            Err(HttpParseError::RequestLineTooLong { max: MAX_LINE_BYTES })
+        );
+        let mut many = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..=MAX_HEADERS {
+            many.push_str(&format!("h{i}: v\r\n"));
+        }
+        many.push_str("\r\n");
+        assert_eq!(
+            parse(many.as_bytes()),
+            Err(HttpParseError::TooManyHeaders { max: MAX_HEADERS })
+        );
+        let big = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert_eq!(
+            parse(big.as_bytes()),
+            Err(HttpParseError::BodyTooLarge { len: MAX_BODY_BYTES + 1, max: MAX_BODY_BYTES })
+        );
+        // declared 10 bytes, sent 2: truncated body is an Io error
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nab"),
+            Err(HttpParseError::Io { .. })
+        ));
+    }
+
+    #[test]
+    fn parse_error_statuses_cover_every_variant() {
+        // the silent (no-response) variants
+        assert_eq!(HttpParseError::ConnectionClosed.status(), None);
+        assert_eq!(HttpParseError::Io { what: "reset".into() }.status(), None);
+        // the 4xx variants
+        assert_eq!(HttpParseError::RequestLineTooLong { max: 1 }.status(), Some(400));
+        assert_eq!(HttpParseError::BadRequestLine { line: "x".into() }.status(), Some(400));
+        assert_eq!(HttpParseError::BadVersion { version: "HTTP/9".into() }.status(), Some(400));
+        assert_eq!(HttpParseError::TooManyHeaders { max: 64 }.status(), Some(400));
+        assert_eq!(HttpParseError::BadHeader { line: "x".into() }.status(), Some(400));
+        assert_eq!(HttpParseError::BadContentLength { value: "x".into() }.status(), Some(400));
+        assert_eq!(HttpParseError::BodyTooLarge { len: 2, max: 1 }.status(), Some(413));
+        // every variant renders a message
+        for e in [
+            HttpParseError::ConnectionClosed,
+            HttpParseError::RequestLineTooLong { max: 1 },
+            HttpParseError::BadRequestLine { line: "x".into() },
+            HttpParseError::BadVersion { version: "h".into() },
+            HttpParseError::TooManyHeaders { max: 2 },
+            HttpParseError::BadHeader { line: "y".into() },
+            HttpParseError::BadContentLength { value: "z".into() },
+            HttpParseError::BodyTooLarge { len: 2, max: 1 },
+            HttpParseError::Io { what: "w".into() },
+        ] {
+            assert!(!format!("{e}").is_empty());
+        }
+    }
+
+    #[test]
+    fn response_serialization_is_exact() {
+        let mut out = Vec::new();
+        Response::json(422, &Json::Obj(vec![("error".into(), Json::Str("no".into()))]))
+            .write_to(&mut out)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 422 Unprocessable Content\r\n"), "{s}");
+        assert!(s.contains("Content-Type: application/json\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("\r\n\r\n{\"error\":\"no\"}"), "{s}");
+
+        let mut out = Vec::new();
+        Response::text(429, "slow down".into())
+            .with_header("Retry-After", "1".into())
+            .write_to(&mut out)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Retry-After: 1\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 9\r\n"), "{s}");
+    }
+
+    #[test]
+    fn sse_framing_is_flushable_per_event() {
+        let mut out = Vec::new();
+        write_sse_headers(&mut out).unwrap();
+        write_sse_event(&mut out, "first", "{\"token\":5}").unwrap();
+        write_sse_event(&mut out, "done", "{}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Content-Type: text/event-stream\r\n"));
+        assert!(s.contains("\r\n\r\nevent: first\ndata: {\"token\":5}\n\nevent: done\ndata: {}\n\n"));
+    }
+
+    #[test]
+    fn reason_phrases_and_truncation() {
+        assert_eq!(reason(200), "OK");
+        assert_eq!(reason(418), "Status");
+        let long = "x".repeat(500);
+        assert!(truncate_for_msg(&long).len() < 130);
+        assert_eq!(truncate_for_msg("short"), "short");
+    }
+}

@@ -1,0 +1,293 @@
+//! `srv` — the network serving front-end (DESIGN.md §14): a std-only
+//! HTTP/1.1 + SSE server in front of the [`Engine`](crate::coordinator::engine::Engine),
+//! modeled on TGI's `Infer` stack (ROADMAP item 1):
+//!
+//! ```text
+//!   TcpListener ── accept thread ── bounded handoff ── worker pool
+//!                                                         │
+//!            parse (http) → validate (validate) → admit (admission)
+//!                                   │
+//!                       EngineHandle::submit → Session events
+//!                                   │
+//!              JSON (/generate) or SSE (/generate_stream) response
+//! ```
+//!
+//! Zero dependencies by policy: the wire codec, JSON, thread pool, and
+//! metrics exposition are all in-tree.  Routes:
+//!
+//! - `POST /generate`        — buffered JSON completion
+//! - `POST /generate_stream` — SSE, one event per `TokenEvent`
+//! - `GET  /health`          — queue/budget/drain status
+//! - `GET  /metrics`         — Prometheus text (`obs::expo`)
+//! - `POST /admin/shutdown`  — ask the process to drain and exit
+//!
+//! The accept thread sheds with 503 when the bounded handoff queue is
+//! full, so slow handlers surface as fast refusals instead of an
+//! unbounded backlog — the same fail-fast shape as
+//! [`EngineError::Saturated`](crate::coordinator::engine::EngineError).
+
+pub mod admission;
+pub mod http;
+pub mod router;
+pub mod validate;
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::engine::EngineHandle;
+use crate::srv::admission::{AdmissionConfig, TokenBudget};
+use crate::srv::http::Response;
+use crate::srv::router::Router;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::{obs_count, obs_gauge};
+
+/// A one-shot latch the router raises on `POST /admin/shutdown` and the
+/// serve command parks on — the wire-level analogue of Ctrl-C.
+#[derive(Clone, Default)]
+pub struct ShutdownSignal(Arc<(Mutex<bool>, Condvar)>);
+
+impl ShutdownSignal {
+    pub fn new() -> ShutdownSignal {
+        ShutdownSignal::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, bool> {
+        match self.0 .0.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    pub fn notify(&self) {
+        *self.lock() = true;
+        self.0 .1.notify_all();
+    }
+
+    pub fn is_set(&self) -> bool {
+        *self.lock()
+    }
+
+    /// Block until [`notify`](Self::notify) has been called.
+    pub fn wait(&self) {
+        let mut set = self.lock();
+        while !*set {
+            set = match self.0 .1.wait(set) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+/// Server knobs; `serve.http*` config plus flags feed this.
+#[derive(Debug, Clone)]
+pub struct HttpServerConfig {
+    /// Worker threads handling parsed connections; 0 = derive from
+    /// [`crate::util::pool::threads`], clamped to 2..=8 (handlers block on
+    /// token generation, so more threads than the engine can feed just
+    /// adds queueing).
+    pub workers: usize,
+    /// Bounded accept→worker handoff depth; beyond it new connections are
+    /// refused with 503.
+    pub accept_queue: usize,
+    /// Router-level token-budget admission knobs.
+    pub admission: AdmissionConfig,
+    /// `FA2_HTTP_INJECT_SATURATE` failure-path hook: shed every generate
+    /// with 429 as if the engine queue were full.
+    pub inject_saturate: bool,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> Self {
+        HttpServerConfig {
+            workers: 0,
+            accept_queue: 64,
+            admission: AdmissionConfig::default(),
+            inject_saturate: false,
+        }
+    }
+}
+
+impl HttpServerConfig {
+    fn worker_count(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            crate::util::pool::threads().clamp(2, 8)
+        }
+    }
+}
+
+/// The running server: an accept thread, a bounded handoff queue, and a
+/// worker pool of [`Router`] clones.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    drain: ShutdownSignal,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start serving
+    /// requests against `engine`.
+    pub fn start(addr: &str, engine: EngineHandle, cfg: HttpServerConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding http listener on {addr}"))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let drain = ShutdownSignal::new();
+        let mut admission = cfg.admission;
+        if admission.max_in_flight == 0 {
+            admission.max_in_flight = AdmissionConfig::default().max_in_flight;
+        }
+        let budget = TokenBudget::new(admission);
+        let router = Router::new(
+            engine,
+            budget,
+            shutdown.clone(),
+            drain.clone(),
+            cfg.inject_saturate,
+        );
+
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.accept_queue.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.worker_count() {
+            let rx = conn_rx.clone();
+            let r = router.clone();
+            workers.push(std::thread::spawn(move || worker_loop(r, rx)));
+        }
+
+        let accept_shutdown = shutdown.clone();
+        let accept = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if accept_shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = stream else {
+                    continue;
+                };
+                obs_count!("http_conns_total", 1);
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(mut stream)) => {
+                        // Every worker is busy and the handoff is full:
+                        // refuse now rather than queue without bound.
+                        obs_count!("http_accept_rejects_total", 1);
+                        let body = Json::Obj(vec![
+                            ("error".to_string(), Json::Str("overloaded".to_string())),
+                            (
+                                "message".to_string(),
+                                Json::Str("all workers busy; retry".to_string()),
+                            ),
+                        ]);
+                        let resp = Response::json(503, &body)
+                            .with_header("Retry-After", "1".to_string());
+                        let _ = resp.write_to(&mut stream);
+                    }
+                    Err(TrySendError::Disconnected(_)) => break,
+                }
+            }
+            // conn_tx drops here: workers drain the queue and exit.
+        });
+
+        Ok(HttpServer {
+            local_addr,
+            shutdown,
+            drain,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Block until a client POSTs `/admin/shutdown`.
+    pub fn wait_shutdown_requested(&self) {
+        self.drain.wait();
+    }
+
+    /// True once a drain has been requested (by wire or by `shutdown`).
+    pub fn shutdown_requested(&self) -> bool {
+        self.drain.is_set()
+    }
+
+    /// Graceful shutdown: stop accepting, cancel in-flight sessions (the
+    /// drain loops in [`Router`] see the flag and call `Session::cancel`),
+    /// finish writing their responses, and join every thread.  After this
+    /// returns, no `EngineHandle` clone owned by the server remains, so
+    /// `Engine::shutdown` can drain.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.drain.notify();
+        // The accept thread is parked in `listener.incoming()`; poke it
+        // with a throwaway connection so it observes the flag.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        obs_gauge!("http_inflight_requests", 0);
+    }
+}
+
+fn worker_loop(router: Router, rx: Arc<Mutex<Receiver<TcpStream>>>) {
+    loop {
+        // Hold the lock only to take the next connection, not to serve it.
+        let next = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.recv()
+        };
+        match next {
+            Ok(stream) => router.handle_conn(stream),
+            Err(_) => return, // accept thread gone and queue drained
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shutdown_signal_latches_and_releases_waiters() {
+        let s = ShutdownSignal::new();
+        assert!(!s.is_set());
+        let waiter = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                s.wait();
+                true
+            })
+        };
+        s.notify();
+        assert!(s.is_set());
+        assert!(waiter.join().unwrap());
+        // waiting after the latch is set returns immediately
+        s.wait();
+    }
+
+    #[test]
+    fn worker_count_derives_from_pool_threads_with_clamp() {
+        let mut cfg = HttpServerConfig::default();
+        cfg.workers = 3;
+        assert_eq!(cfg.worker_count(), 3);
+        cfg.workers = 0;
+        let derived = cfg.worker_count();
+        assert!((2..=8).contains(&derived), "derived {derived}");
+    }
+}

@@ -1,0 +1,608 @@
+//! Request routing and the HTTP error-mapping matrix (DESIGN.md §14).
+//!
+//! One [`Router`] clone runs per worker thread; clones share the token
+//! budget, the shutdown flags, and the per-route latency samples through
+//! `Arc`s, while each holds its own [`EngineHandle`] clone (the engine's
+//! submission sender is cheap to clone and the handle re-runs the same
+//! validation gates as in-process callers).
+//!
+//! The shed policy, end to end:
+//!
+//! | failure                               | status | source              |
+//! |---------------------------------------|--------|---------------------|
+//! | unparseable HTTP                      | 400/413| `HttpParseError`    |
+//! | body not JSON / not an object        | 400    | `ValidationError`   |
+//! | well-formed but invalid field         | 422    | `ValidationError`   |
+//! | router token budget / queue ratio     | 429    | `AdmitError`        |
+//! | `EngineError::Saturated`              | 429    | engine queue        |
+//! | `EngineError::{PromptTooLong, TokenOutOfVocab, ExceedsKvCapacity}` | 422 | engine validation |
+//! | `EngineError::Closed`                 | 503    | dead worker         |
+//!
+//! Every 429 carries `Retry-After: 1` — the engine drains in token-time,
+//! so "soon" is the only honest answer.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::engine::{
+    EngineError, EngineHandle, FinishReason, Session, TokenEvent,
+};
+use crate::srv::admission::{AdmitError, Admitted, TokenBudget};
+use crate::srv::http::{write_sse_event, write_sse_headers, Request, Response};
+use crate::srv::validate::{parse_generate, GenerateRequest, ValidationError};
+use crate::srv::ShutdownSignal;
+use crate::util::json::Json;
+use crate::{obs_count, obs_event, obs_gauge, obs_span};
+
+/// How long a drain loop sleeps between `try_recv` polls.  The engine
+/// pushes events over an mpsc channel; 200µs keeps added TTFT well under
+/// a decode step without burning a core per connection.
+const POLL_SLEEP: Duration = Duration::from_micros(200);
+
+/// Per-route latency sample cap (ring overwrite beyond it).
+const SAMPLE_CAP: usize = 4096;
+
+/// The JSON error envelope every non-200 carries:
+/// `{"error": <kind>, "message": <human text>}`.
+fn error_body(kind: &str, message: String) -> Json {
+    Json::Obj(vec![
+        ("error".to_string(), Json::Str(kind.to_string())),
+        ("message".to_string(), Json::Str(message)),
+    ])
+}
+
+/// The wire spelling of a finish reason.
+pub fn finish_str(f: &FinishReason) -> &'static str {
+    match f {
+        FinishReason::MaxTokens => "max_tokens",
+        FinishReason::Stop => "stop",
+        FinishReason::ContextFull => "context_full",
+        FinishReason::Cancelled => "cancelled",
+    }
+}
+
+/// Map a validation failure to its response: body-shape failures are 400
+/// (not HTTP-usable as JSON), field-level failures are 422 (well-formed,
+/// semantically invalid).
+pub fn validation_error_response(e: &ValidationError) -> Response {
+    let status = match e {
+        ValidationError::BodyNotJson { .. } | ValidationError::BodyNotObject => 400,
+        _ => 422,
+    };
+    Response::json(status, &error_body(e.kind(), format!("{e}")))
+}
+
+/// Map an engine submission failure to its response (the load-shedding
+/// half of the matrix).
+pub fn engine_error_response(e: &EngineError) -> Response {
+    match e {
+        EngineError::Saturated { .. } => {
+            Response::json(429, &error_body("saturated", format!("{e}")))
+                .with_header("Retry-After", "1".to_string())
+        }
+        EngineError::PromptTooLong { .. } => {
+            Response::json(422, &error_body("prompt_too_long", format!("{e}")))
+        }
+        EngineError::TokenOutOfVocab { .. } => {
+            Response::json(422, &error_body("token_out_of_vocab", format!("{e}")))
+        }
+        EngineError::ExceedsKvCapacity { .. } => {
+            Response::json(422, &error_body("exceeds_kv_capacity", format!("{e}")))
+        }
+        EngineError::Closed => Response::json(503, &error_body("engine_closed", format!("{e}"))),
+    }
+}
+
+/// Map a router admission refusal to its response — always 429: the
+/// request is fine, the server is busy.
+pub fn admit_error_response(e: &AdmitError) -> Response {
+    Response::json(429, &error_body(e.kind(), format!("{e}")))
+        .with_header("Retry-After", "1".to_string())
+}
+
+/// A bounded latency-sample ring (µs) with nearest-rank percentiles.
+#[derive(Default)]
+struct Ring {
+    buf: Vec<u64>,
+    next: usize,
+}
+
+impl Ring {
+    fn push(&mut self, v: u64) {
+        if self.buf.len() < SAMPLE_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next % SAMPLE_CAP] = v;
+            self.next = self.next.wrapping_add(1);
+        }
+    }
+
+    fn percentile(&self, p: usize) -> u64 {
+        if self.buf.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_unstable();
+        sorted[(sorted.len() - 1) * p.min(100) / 100]
+    }
+}
+
+/// One route's latency/TTFT/TPOT samples.
+#[derive(Default)]
+struct Samples {
+    latency_us: Ring,
+    ttft_us: Ring,
+    tpot_us: Ring,
+}
+
+impl Samples {
+    fn record(&mut self, latency_secs: f64, ttft_secs: f64, n_tokens: usize) {
+        self.latency_us.push((latency_secs * 1e6) as u64);
+        self.ttft_us.push((ttft_secs * 1e6) as u64);
+        if n_tokens > 1 {
+            let tpot = (latency_secs - ttft_secs).max(0.0) / (n_tokens - 1) as f64;
+            self.tpot_us.push((tpot * 1e6) as u64);
+        }
+    }
+}
+
+#[derive(Default)]
+struct RouteStats {
+    generate: Mutex<Samples>,
+    stream: Mutex<Samples>,
+}
+
+fn lock_samples(m: &Mutex<Samples>) -> std::sync::MutexGuard<'_, Samples> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Per-worker request handler; see the module docs for the shared/owned
+/// split.  `Clone` hands each worker thread its own copy.
+#[derive(Clone)]
+pub struct Router {
+    engine: EngineHandle,
+    budget: TokenBudget,
+    /// Set by `HttpServer::shutdown`: drain loops cancel their session and
+    /// finish the in-flight response.
+    shutdown: Arc<AtomicBool>,
+    /// Raised by `POST /admin/shutdown` for `wait_shutdown_requested`.
+    drain: ShutdownSignal,
+    /// `FA2_HTTP_INJECT_SATURATE`: shed every generate as if the engine
+    /// queue were full — the failure-path hook `ci.sh --verify-http` uses
+    /// to prove 429s without having to race a real saturation.
+    inject_saturate: bool,
+    inflight: Arc<AtomicUsize>,
+    stats: Arc<RouteStats>,
+}
+
+impl Router {
+    pub fn new(
+        engine: EngineHandle,
+        budget: TokenBudget,
+        shutdown: Arc<AtomicBool>,
+        drain: ShutdownSignal,
+        inject_saturate: bool,
+    ) -> Router {
+        Router {
+            engine,
+            budget,
+            shutdown,
+            drain,
+            inject_saturate,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            stats: Arc::new(RouteStats::default()),
+        }
+    }
+
+    /// Serve exactly one request off `stream` and close it.
+    pub fn handle_conn(&self, stream: TcpStream) {
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+        let Ok(read_half) = stream.try_clone() else {
+            return;
+        };
+        let mut reader = std::io::BufReader::new(read_half);
+        let mut writer = stream;
+        match Request::read_from(&mut reader) {
+            Ok(req) => self.dispatch(&req, &mut writer),
+            Err(e) => {
+                // Silent variants (peer gone) get no response; the rest
+                // get their 4xx so curl users see why.
+                if let Some(status) = e.status() {
+                    obs_count!("http_requests_total", 1);
+                    obs_count!("http_validation_rejects_total", 1);
+                    let resp = Response::json(status, &error_body("bad_http", format!("{e}")));
+                    let _ = resp.write_to(&mut writer);
+                }
+            }
+        }
+    }
+
+    fn dispatch(&self, req: &Request, w: &mut impl Write) {
+        let _span = obs_span!("http_request");
+        obs_count!("http_requests_total", 1);
+        let _inflight = self.enter_inflight();
+        match (req.method.as_str(), req.path()) {
+            ("GET", "/health") => {
+                obs_count!("http_health_requests_total", 1);
+                let _ = self.health_response().write_to(w);
+            }
+            ("GET", "/metrics") => {
+                obs_count!("http_metrics_requests_total", 1);
+                self.publish_route_gauges();
+                let text = crate::obs::expo::prometheus(crate::obs::counters::global());
+                let _ = Response::text(200, text).write_to(w);
+            }
+            ("POST", "/generate") => self.generate(req, w),
+            ("POST", "/generate_stream") => self.generate_stream(req, w),
+            ("POST", "/admin/shutdown") => {
+                self.drain.notify();
+                let body = Json::Obj(vec![(
+                    "status".to_string(),
+                    Json::Str("draining".to_string()),
+                )]);
+                let _ = Response::json(200, &body).write_to(w);
+            }
+            (_, "/health") | (_, "/metrics") => {
+                let _ = self.method_not_allowed("GET").write_to(w);
+            }
+            (_, "/generate") | (_, "/generate_stream") | (_, "/admin/shutdown") => {
+                let _ = self.method_not_allowed("POST").write_to(w);
+            }
+            (_, path) => {
+                let body = error_body("not_found", format!("no route for {path:?}"));
+                let _ = Response::json(404, &body).write_to(w);
+            }
+        }
+    }
+
+    fn method_not_allowed(&self, allow: &'static str) -> Response {
+        Response::json(
+            405,
+            &error_body("method_not_allowed", format!("use {allow} for this route")),
+        )
+        .with_header("Allow", allow.to_string())
+    }
+
+    fn health_response(&self) -> Response {
+        let shapes = self.engine.shapes();
+        let draining = self.drain.is_set() || self.shutdown.load(Ordering::Relaxed);
+        let status = if draining { "draining" } else { "ok" };
+        let (prefill, total) = self.budget.in_flight();
+        let body = Json::Obj(vec![
+            ("status".to_string(), Json::Str(status.to_string())),
+            ("queue_depth".to_string(), Json::Num(self.engine.queue_depth() as f64)),
+            (
+                "kv_capacity_blocks".to_string(),
+                Json::Num(self.engine.kv_capacity_blocks() as f64),
+            ),
+            ("prompt_window".to_string(), Json::Num(shapes.prompt_len as f64)),
+            ("vocab".to_string(), Json::Num(shapes.vocab as f64)),
+            ("inflight_requests".to_string(), Json::Num(self.inflight.load(Ordering::Relaxed) as f64)),
+            ("budget_prefill_tokens".to_string(), Json::Num(prefill as f64)),
+            ("budget_total_tokens".to_string(), Json::Num(total as f64)),
+        ]);
+        Response::json(200, &body)
+    }
+
+    /// The shared front half of both generate routes: validate, check the
+    /// injected-saturation hook, reserve token budget, submit.  Returns
+    /// the live session plus the RAII budget reservation, or the response
+    /// to shed with.
+    fn submit_request(&self, req: &Request) -> Result<(Session, Admitted, GenerateRequest), Response> {
+        let parsed = match parse_generate(&req.body, &self.engine.shapes()) {
+            Ok(p) => p,
+            Err(e) => {
+                obs_count!("http_validation_rejects_total", 1);
+                return Err(validation_error_response(&e));
+            }
+        };
+        if self.inject_saturate {
+            obs_count!("http_shed_total", 1);
+            obs_event!("http_shed", "status" => 429);
+            let e = EngineError::Saturated { max_queue: self.engine.max_queue() };
+            return Err(engine_error_response(&e));
+        }
+        let prefill = parsed.prompt.len();
+        let total = prefill + parsed.sampling.max_tokens;
+        let admitted =
+            match self.budget.try_admit(prefill, total, self.engine.queue_depth()) {
+                Ok(a) => a,
+                Err(e) => {
+                    obs_count!("http_shed_total", 1);
+                    obs_event!("http_shed", "status" => 429);
+                    return Err(admit_error_response(&e));
+                }
+            };
+        let session = match self.engine.submit(parsed.prompt.clone(), parsed.sampling.clone()) {
+            Ok(s) => s,
+            Err(e) => {
+                match &e {
+                    EngineError::Saturated { .. } => {
+                        obs_count!("http_shed_total", 1);
+                        obs_event!("http_shed", "status" => 429);
+                    }
+                    EngineError::Closed => obs_count!("http_5xx_total", 1),
+                    _ => obs_count!("http_validation_rejects_total", 1),
+                }
+                return Err(engine_error_response(&e));
+            }
+        };
+        Ok((session, admitted, parsed))
+    }
+
+    fn generate(&self, req: &Request, w: &mut impl Write) {
+        obs_count!("http_generate_requests_total", 1);
+        let (session, _admitted, _parsed) = match self.submit_request(req) {
+            Ok(x) => x,
+            Err(resp) => {
+                let _ = resp.write_to(w);
+                return;
+            }
+        };
+        let mut cancelled = false;
+        loop {
+            if !cancelled && self.shutdown.load(Ordering::Relaxed) {
+                session.cancel();
+                cancelled = true;
+            }
+            match session.try_recv() {
+                Ok(Some(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs })) => {
+                    lock_samples(&self.stats.generate).record(
+                        latency_secs,
+                        ttft_secs,
+                        tokens.len(),
+                    );
+                    let body = Json::Obj(vec![
+                        (
+                            "tokens".to_string(),
+                            Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                        ),
+                        ("n_tokens".to_string(), Json::Num(tokens.len() as f64)),
+                        ("finish".to_string(), Json::Str(finish_str(&finish).to_string())),
+                        ("latency_ms".to_string(), Json::Num(latency_secs * 1e3)),
+                        ("ttft_ms".to_string(), Json::Num(ttft_secs * 1e3)),
+                    ]);
+                    let _ = Response::json(200, &body).write_to(w);
+                    return;
+                }
+                Ok(Some(_)) => {}
+                Ok(None) => std::thread::sleep(POLL_SLEEP),
+                Err(e) => {
+                    obs_count!("http_5xx_total", 1);
+                    let _ = engine_error_response(&e).write_to(w);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn generate_stream(&self, req: &Request, w: &mut impl Write) {
+        obs_count!("http_stream_requests_total", 1);
+        let (session, _admitted, _parsed) = match self.submit_request(req) {
+            Ok(x) => x,
+            Err(resp) => {
+                let _ = resp.write_to(w);
+                return;
+            }
+        };
+        if write_sse_headers(w).is_err() {
+            session.cancel();
+            return;
+        }
+        let mut cancelled = false;
+        loop {
+            if !cancelled && self.shutdown.load(Ordering::Relaxed) {
+                session.cancel();
+                cancelled = true;
+            }
+            let ev = match session.try_recv() {
+                Ok(Some(ev)) => ev,
+                Ok(None) => {
+                    std::thread::sleep(POLL_SLEEP);
+                    continue;
+                }
+                Err(e) => {
+                    obs_count!("http_5xx_total", 1);
+                    let data = error_body("engine_closed", format!("{e}")).to_string();
+                    let _ = write_sse_event(w, "error", &data);
+                    return;
+                }
+            };
+            obs_count!("http_sse_events_total", 1);
+            let ok = match &ev {
+                TokenEvent::First { token, ttft_secs } => {
+                    let data = Json::Obj(vec![
+                        ("index".to_string(), Json::Num(0.0)),
+                        ("token".to_string(), Json::Num(*token as f64)),
+                        ("ttft_ms".to_string(), Json::Num(ttft_secs * 1e3)),
+                    ]);
+                    write_sse_event(w, "first", &data.to_string()).is_ok()
+                }
+                TokenEvent::Delta { index, token } => {
+                    let data = Json::Obj(vec![
+                        ("index".to_string(), Json::Num(*index as f64)),
+                        ("token".to_string(), Json::Num(*token as f64)),
+                    ]);
+                    write_sse_event(w, "delta", &data.to_string()).is_ok()
+                }
+                TokenEvent::Done { finish, tokens, latency_secs, ttft_secs } => {
+                    lock_samples(&self.stats.stream).record(
+                        *latency_secs,
+                        *ttft_secs,
+                        tokens.len(),
+                    );
+                    let data = Json::Obj(vec![
+                        (
+                            "tokens".to_string(),
+                            Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                        ),
+                        ("n_tokens".to_string(), Json::Num(tokens.len() as f64)),
+                        ("finish".to_string(), Json::Str(finish_str(finish).to_string())),
+                        ("latency_ms".to_string(), Json::Num(latency_secs * 1e3)),
+                        ("ttft_ms".to_string(), Json::Num(ttft_secs * 1e3)),
+                    ]);
+                    let _ = write_sse_event(w, "done", &data.to_string());
+                    return;
+                }
+            };
+            if !ok {
+                // Client went away mid-stream: cancel so the engine stops
+                // generating tokens nobody will read.
+                session.cancel();
+                return;
+            }
+        }
+    }
+
+    /// Push the per-route nearest-rank percentiles into their gauges —
+    /// called on every `/metrics` scrape so the exposition is current.
+    pub fn publish_route_gauges(&self) {
+        obs_gauge!("http_inflight_requests", self.inflight.load(Ordering::Relaxed));
+        {
+            let g = lock_samples(&self.stats.generate);
+            obs_gauge!("http_generate_latency_p50_us", g.latency_us.percentile(50));
+            obs_gauge!("http_generate_latency_p95_us", g.latency_us.percentile(95));
+            obs_gauge!("http_generate_ttft_p50_us", g.ttft_us.percentile(50));
+            obs_gauge!("http_generate_ttft_p95_us", g.ttft_us.percentile(95));
+            obs_gauge!("http_generate_tpot_p50_us", g.tpot_us.percentile(50));
+        }
+        {
+            let s = lock_samples(&self.stats.stream);
+            obs_gauge!("http_stream_latency_p50_us", s.latency_us.percentile(50));
+            obs_gauge!("http_stream_latency_p95_us", s.latency_us.percentile(95));
+            obs_gauge!("http_stream_ttft_p50_us", s.ttft_us.percentile(50));
+            obs_gauge!("http_stream_ttft_p95_us", s.ttft_us.percentile(95));
+            obs_gauge!("http_stream_tpot_p50_us", s.tpot_us.percentile(50));
+        }
+    }
+
+    fn enter_inflight(&self) -> InflightGuard {
+        let now = self.inflight.fetch_add(1, Ordering::AcqRel) + 1;
+        obs_gauge!("http_inflight_requests", now);
+        InflightGuard(self.inflight.clone())
+    }
+}
+
+struct InflightGuard(Arc<AtomicUsize>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        let now = self.0.fetch_sub(1, Ordering::AcqRel).saturating_sub(1);
+        obs_gauge!("http_inflight_requests", now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn status_of(r: &Response) -> u16 {
+        r.status
+    }
+
+    #[test]
+    fn engine_error_matrix_covers_every_variant() {
+        // Saturated -> 429 with Retry-After
+        let r = engine_error_response(&EngineError::Saturated { max_queue: 4 });
+        assert_eq!(status_of(&r), 429);
+        assert!(r.extra.iter().any(|(k, v)| *k == "Retry-After" && v == "1"));
+        // PromptTooLong -> 422
+        let r = engine_error_response(&EngineError::PromptTooLong { len: 20, max: 16 });
+        assert_eq!(status_of(&r), 422);
+        // TokenOutOfVocab -> 422
+        let r = engine_error_response(&EngineError::TokenOutOfVocab { token: 999, vocab: 512 });
+        assert_eq!(status_of(&r), 422);
+        // ExceedsKvCapacity -> 422
+        let r = engine_error_response(&EngineError::ExceedsKvCapacity {
+            need_blocks: 9,
+            capacity_blocks: 4,
+        });
+        assert_eq!(status_of(&r), 422);
+        // Closed -> 503
+        let r = engine_error_response(&EngineError::Closed);
+        assert_eq!(status_of(&r), 503);
+    }
+
+    #[test]
+    fn validation_error_matrix_covers_every_variant() {
+        let cases: Vec<(ValidationError, u16)> = vec![
+            (ValidationError::BodyNotJson { why: "w".into() }, 400),
+            (ValidationError::BodyNotObject, 400),
+            (ValidationError::UnknownField { field: "f".into() }, 422),
+            (ValidationError::MissingPrompt, 422),
+            (ValidationError::PromptNotArray, 422),
+            (ValidationError::BadPromptToken { index: 1 }, 422),
+            (ValidationError::EmptyPrompt, 422),
+            (ValidationError::PromptTooLong { len: 20, max: 16 }, 422),
+            (ValidationError::TokenOutOfVocab { token: 999, vocab: 512 }, 422),
+            (ValidationError::BadMaxTokens { got: "0".into() }, 422),
+            (ValidationError::BadTemperature { got: "x".into() }, 422),
+            (ValidationError::BadTopK { got: "-1".into() }, 422),
+            (ValidationError::BadSeed { got: "-1".into() }, 422),
+            (ValidationError::BadStopTokens { why: "w".into() }, 422),
+        ];
+        for (e, want) in cases {
+            let r = validation_error_response(&e);
+            assert_eq!(status_of(&r), want, "variant {:?}", e.kind());
+            // the envelope names the machine-readable kind
+            let body = String::from_utf8(r.body.clone()).unwrap();
+            assert!(body.contains(e.kind()), "{body}");
+        }
+    }
+
+    #[test]
+    fn admit_error_matrix_is_always_429_with_retry_after() {
+        for e in [
+            AdmitError::PrefillBudget { need: 1, in_flight: 2, cap: 3 },
+            AdmitError::TotalBudget { need: 1, in_flight: 2, cap: 3 },
+            AdmitError::QueueFull { depth: 4, allowed: 4 },
+        ] {
+            let r = admit_error_response(&e);
+            assert_eq!(status_of(&r), 429);
+            assert!(r.extra.iter().any(|(k, v)| *k == "Retry-After" && v == "1"));
+        }
+    }
+
+    #[test]
+    fn finish_strings_cover_every_reason() {
+        assert_eq!(finish_str(&FinishReason::MaxTokens), "max_tokens");
+        assert_eq!(finish_str(&FinishReason::Stop), "stop");
+        assert_eq!(finish_str(&FinishReason::ContextFull), "context_full");
+        assert_eq!(finish_str(&FinishReason::Cancelled), "cancelled");
+    }
+
+    #[test]
+    fn ring_percentiles_are_nearest_rank_and_bounded() {
+        let mut r = Ring::default();
+        assert_eq!(r.percentile(50), 0);
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            r.push(v);
+        }
+        assert_eq!(r.percentile(0), 10);
+        assert_eq!(r.percentile(50), 50);
+        assert_eq!(r.percentile(95), 90);
+        assert_eq!(r.percentile(100), 100);
+        // ring overwrite keeps the buffer at the cap
+        for v in 0..(SAMPLE_CAP as u64 * 2) {
+            r.push(v);
+        }
+        assert_eq!(r.buf.len(), SAMPLE_CAP);
+    }
+
+    #[test]
+    fn samples_record_derives_tpot_only_for_multi_token_completions() {
+        let mut s = Samples::default();
+        s.record(0.010, 0.010, 1); // single token: no TPOT sample
+        assert!(s.tpot_us.buf.is_empty());
+        s.record(0.030, 0.010, 5); // 20ms over 4 decode steps = 5ms
+        assert_eq!(s.tpot_us.buf, vec![5000]);
+        assert_eq!(s.latency_us.buf.len(), 2);
+    }
+}

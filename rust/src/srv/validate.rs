@@ -1,0 +1,397 @@
+//! The validation stage (DESIGN.md §14): turn a raw `/generate` body into
+//! a typed [`GenerateRequest`] or a typed [`ValidationError`] — *before*
+//! anything touches the scheduler.  This is TGI's `ValidationError` split
+//! (ROADMAP item 1): a malformed request must cost one JSON parse, never
+//! a queue slot, a KV reservation, or a worker wake-up.
+//!
+//! The checks deliberately duplicate the prompt-window / vocab gates that
+//! `Engine::submit` re-applies — defense in depth: the router rejects with
+//! a field-level message, and the engine's own typed errors remain the
+//! backstop for any caller that bypasses the router.
+
+use std::fmt;
+
+use crate::coordinator::engine::SamplingParams;
+use crate::runtime::ServeShapes;
+use crate::util::json::Json;
+
+/// Cap on requested generation length, independent of the model window
+/// (the engine additionally bounds `prompt + max_tokens` by KV capacity).
+pub const MAX_MAX_TOKENS: usize = 4096;
+
+/// A validated generation request, ready for admission + submit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+}
+
+/// Why a request body was rejected.  Body-shape failures map to 400,
+/// field-level failures to 422 (`crate::srv::router::validation_response`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValidationError {
+    /// The body is not JSON at all.
+    BodyNotJson { why: String },
+    /// The body parsed but is not a JSON object.
+    BodyNotObject,
+    /// A field this schema does not define (typos must not silently
+    /// no-op: `max_token` misspelled would otherwise serve 16 tokens).
+    UnknownField { field: String },
+    /// No `prompt` field.
+    MissingPrompt,
+    /// `prompt` is not an array.
+    PromptNotArray,
+    /// `prompt[index]` is not an integer token id.
+    BadPromptToken { index: usize },
+    /// `prompt` is empty.
+    EmptyPrompt,
+    /// More prompt tokens than the model's compiled prompt window.
+    PromptTooLong { len: usize, max: usize },
+    /// A prompt token outside `0..vocab`.
+    TokenOutOfVocab { token: i64, vocab: usize },
+    /// `max_tokens` is not an integer in `1..=MAX_MAX_TOKENS`.
+    BadMaxTokens { got: String },
+    /// `temperature` is not a finite number >= 0.
+    BadTemperature { got: String },
+    /// `top_k` is not a non-negative integer.
+    BadTopK { got: String },
+    /// `seed` is not a non-negative integer.
+    BadSeed { got: String },
+    /// `stop_tokens` is not an array of integer token ids.
+    BadStopTokens { why: String },
+}
+
+impl fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ValidationError::BodyNotJson { why } => write!(f, "request body is not JSON: {why}"),
+            ValidationError::BodyNotObject => write!(f, "request body must be a JSON object"),
+            ValidationError::UnknownField { field } => {
+                write!(
+                    f,
+                    "unknown field {field:?} (expected prompt, max_tokens, temperature, \
+                     top_k, seed, stop_tokens)"
+                )
+            }
+            ValidationError::MissingPrompt => write!(f, "missing required field \"prompt\""),
+            ValidationError::PromptNotArray => {
+                write!(f, "\"prompt\" must be an array of integer token ids")
+            }
+            ValidationError::BadPromptToken { index } => {
+                write!(f, "prompt[{index}] is not an integer token id")
+            }
+            ValidationError::EmptyPrompt => write!(f, "\"prompt\" must not be empty"),
+            ValidationError::PromptTooLong { len, max } => write!(
+                f,
+                "prompt has {len} tokens but the model's prompt window is {max}"
+            ),
+            ValidationError::TokenOutOfVocab { token, vocab } => {
+                write!(f, "prompt token {token} is outside the vocabulary 0..{vocab}")
+            }
+            ValidationError::BadMaxTokens { got } => write!(
+                f,
+                "\"max_tokens\" must be an integer in 1..={MAX_MAX_TOKENS} (got {got})"
+            ),
+            ValidationError::BadTemperature { got } => {
+                write!(f, "\"temperature\" must be a finite number >= 0 (got {got})")
+            }
+            ValidationError::BadTopK { got } => {
+                write!(f, "\"top_k\" must be a non-negative integer (got {got})")
+            }
+            ValidationError::BadSeed { got } => {
+                write!(f, "\"seed\" must be a non-negative integer (got {got})")
+            }
+            ValidationError::BadStopTokens { why } => {
+                write!(f, "\"stop_tokens\" must be an array of integer token ids: {why}")
+            }
+        }
+    }
+}
+
+impl ValidationError {
+    /// A stable machine-readable slug for the JSON error body.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ValidationError::BodyNotJson { .. } => "body_not_json",
+            ValidationError::BodyNotObject => "body_not_object",
+            ValidationError::UnknownField { .. } => "unknown_field",
+            ValidationError::MissingPrompt => "missing_prompt",
+            ValidationError::PromptNotArray => "prompt_not_array",
+            ValidationError::BadPromptToken { .. } => "bad_prompt_token",
+            ValidationError::EmptyPrompt => "empty_prompt",
+            ValidationError::PromptTooLong { .. } => "prompt_too_long",
+            ValidationError::TokenOutOfVocab { .. } => "token_out_of_vocab",
+            ValidationError::BadMaxTokens { .. } => "bad_max_tokens",
+            ValidationError::BadTemperature { .. } => "bad_temperature",
+            ValidationError::BadTopK { .. } => "bad_top_k",
+            ValidationError::BadSeed { .. } => "bad_seed",
+            ValidationError::BadStopTokens { .. } => "bad_stop_tokens",
+        }
+    }
+}
+
+/// True for a finite float with no fractional part — the only numbers the
+/// integer fields accept (`Json` stores all numbers as f64).
+fn integral(v: f64) -> bool {
+    v.is_finite() && v == v.trunc()
+}
+
+fn int_field(v: &Json) -> Option<i64> {
+    match v {
+        Json::Num(n) if integral(*n) && n.abs() < 9e15 => Some(*n as i64),
+        _ => None,
+    }
+}
+
+/// Render the offending value back into an error message, bounded
+/// (cut on a char boundary so arbitrary strings cannot panic the slice).
+fn show(v: &Json) -> String {
+    let s = v.to_string();
+    if s.len() <= 60 {
+        return s;
+    }
+    let mut cut = 60;
+    while cut > 0 && !s.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    format!("{}...", &s[..cut])
+}
+
+/// Parse and validate a `/generate` body against the serving model's
+/// compiled shapes.  Defaults mirror [`SamplingParams::default`] (greedy,
+/// 16 tokens).
+pub fn parse_generate(
+    body: &[u8],
+    shapes: &ServeShapes,
+) -> Result<GenerateRequest, ValidationError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ValidationError::BodyNotJson { why: "invalid utf-8".to_string() })?;
+    let doc = Json::parse(text)
+        .map_err(|e| ValidationError::BodyNotJson { why: e.to_string() })?;
+    let Json::Obj(fields) = &doc else {
+        return Err(ValidationError::BodyNotObject);
+    };
+    for (key, _) in fields {
+        match key.as_str() {
+            "prompt" | "max_tokens" | "temperature" | "top_k" | "seed" | "stop_tokens" => {}
+            other => return Err(ValidationError::UnknownField { field: other.to_string() }),
+        }
+    }
+
+    let prompt_field = doc.get("prompt").ok_or(ValidationError::MissingPrompt)?;
+    let arr = prompt_field
+        .as_arr()
+        .ok_or(ValidationError::PromptNotArray)?;
+    if arr.is_empty() {
+        return Err(ValidationError::EmptyPrompt);
+    }
+    if arr.len() > shapes.prompt_len {
+        return Err(ValidationError::PromptTooLong { len: arr.len(), max: shapes.prompt_len });
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let t = int_field(v).ok_or(ValidationError::BadPromptToken { index: i })?;
+        if t < 0 || t as usize >= shapes.vocab {
+            return Err(ValidationError::TokenOutOfVocab { token: t, vocab: shapes.vocab });
+        }
+        prompt.push(t as i32);
+    }
+
+    let defaults = SamplingParams::default();
+    let max_tokens = match doc.get("max_tokens") {
+        None => defaults.max_tokens,
+        Some(v) => match int_field(v) {
+            Some(n) if n >= 1 && (n as usize) <= MAX_MAX_TOKENS => n as usize,
+            _ => return Err(ValidationError::BadMaxTokens { got: show(v) }),
+        },
+    };
+    let temperature = match doc.get("temperature") {
+        None => defaults.temperature,
+        Some(v) => match v.as_f64() {
+            Some(t) if t.is_finite() && t >= 0.0 => t as f32,
+            _ => return Err(ValidationError::BadTemperature { got: show(v) }),
+        },
+    };
+    let top_k = match doc.get("top_k") {
+        None => defaults.top_k,
+        Some(v) => match int_field(v) {
+            Some(k) if k >= 0 => k as usize,
+            _ => return Err(ValidationError::BadTopK { got: show(v) }),
+        },
+    };
+    let seed = match doc.get("seed") {
+        None => defaults.seed,
+        Some(v) => match int_field(v) {
+            Some(s) if s >= 0 => s as u64,
+            _ => return Err(ValidationError::BadSeed { got: show(v) }),
+        },
+    };
+    let stop_tokens = match doc.get("stop_tokens") {
+        None => Vec::new(),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| ValidationError::BadStopTokens { why: "not an array".to_string() })?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, t) in arr.iter().enumerate() {
+                match int_field(t) {
+                    Some(s) if (i32::MIN as i64..=i32::MAX as i64).contains(&s) => {
+                        out.push(s as i32)
+                    }
+                    _ => {
+                        return Err(ValidationError::BadStopTokens {
+                            why: format!("element {i} is not an integer token id"),
+                        })
+                    }
+                }
+            }
+            out
+        }
+    };
+
+    Ok(GenerateRequest {
+        prompt,
+        sampling: SamplingParams { max_tokens, temperature, top_k, seed, stop_tokens },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> ServeShapes {
+        ServeShapes { n_layer: 2, n_kv_head: 2, max_seq: 128, d_head: 8, vocab: 512, prompt_len: 16 }
+    }
+
+    fn parse(body: &str) -> Result<GenerateRequest, ValidationError> {
+        parse_generate(body.as_bytes(), &shapes())
+    }
+
+    #[test]
+    fn minimal_request_gets_greedy_defaults() {
+        let r = parse(r#"{"prompt":[1,2,3]}"#).unwrap();
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.sampling, SamplingParams::default());
+    }
+
+    #[test]
+    fn full_request_round_trips_every_field() {
+        let r = parse(
+            r#"{"prompt":[5],"max_tokens":9,"temperature":0.7,"top_k":40,"seed":11,"stop_tokens":[2,3]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.prompt, vec![5]);
+        assert_eq!(r.sampling.max_tokens, 9);
+        assert!((r.sampling.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(r.sampling.top_k, 40);
+        assert_eq!(r.sampling.seed, 11);
+        assert_eq!(r.sampling.stop_tokens, vec![2, 3]);
+    }
+
+    #[test]
+    fn body_shape_failures() {
+        assert!(matches!(parse("not json"), Err(ValidationError::BodyNotJson { .. })));
+        assert_eq!(
+            parse_generate(&[0xff, 0xfe], &shapes()),
+            Err(ValidationError::BodyNotJson { why: "invalid utf-8".to_string() })
+        );
+        assert_eq!(parse("[1,2]"), Err(ValidationError::BodyNotObject));
+        assert_eq!(
+            parse(r#"{"prompt":[1],"max_token":4}"#),
+            Err(ValidationError::UnknownField { field: "max_token".to_string() })
+        );
+    }
+
+    #[test]
+    fn prompt_failures() {
+        assert_eq!(parse("{}"), Err(ValidationError::MissingPrompt));
+        assert_eq!(parse(r#"{"prompt":"hi"}"#), Err(ValidationError::PromptNotArray));
+        assert_eq!(
+            parse(r#"{"prompt":[1,2.5]}"#),
+            Err(ValidationError::BadPromptToken { index: 1 })
+        );
+        assert_eq!(
+            parse(r#"{"prompt":[1,"x"]}"#),
+            Err(ValidationError::BadPromptToken { index: 1 })
+        );
+        assert_eq!(parse(r#"{"prompt":[]}"#), Err(ValidationError::EmptyPrompt));
+        let long: Vec<String> = (0..17).map(|i| i.to_string()).collect();
+        assert_eq!(
+            parse(&format!(r#"{{"prompt":[{}]}}"#, long.join(","))),
+            Err(ValidationError::PromptTooLong { len: 17, max: 16 })
+        );
+        assert_eq!(
+            parse(r#"{"prompt":[512]}"#),
+            Err(ValidationError::TokenOutOfVocab { token: 512, vocab: 512 })
+        );
+        assert_eq!(
+            parse(r#"{"prompt":[-1]}"#),
+            Err(ValidationError::TokenOutOfVocab { token: -1, vocab: 512 })
+        );
+    }
+
+    #[test]
+    fn sampling_param_failures() {
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"max_tokens":0}"#),
+            Err(ValidationError::BadMaxTokens { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"max_tokens":5000}"#),
+            Err(ValidationError::BadMaxTokens { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"max_tokens":1.5}"#),
+            Err(ValidationError::BadMaxTokens { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"temperature":-0.1}"#),
+            Err(ValidationError::BadTemperature { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"temperature":"hot"}"#),
+            Err(ValidationError::BadTemperature { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"top_k":-2}"#),
+            Err(ValidationError::BadTopK { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"seed":-7}"#),
+            Err(ValidationError::BadSeed { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"stop_tokens":3}"#),
+            Err(ValidationError::BadStopTokens { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"prompt":[1],"stop_tokens":[1,"x"]}"#),
+            Err(ValidationError::BadStopTokens { .. })
+        ));
+    }
+
+    #[test]
+    fn every_variant_has_a_kind_and_message() {
+        let all = [
+            ValidationError::BodyNotJson { why: "w".into() },
+            ValidationError::BodyNotObject,
+            ValidationError::UnknownField { field: "f".into() },
+            ValidationError::MissingPrompt,
+            ValidationError::PromptNotArray,
+            ValidationError::BadPromptToken { index: 0 },
+            ValidationError::EmptyPrompt,
+            ValidationError::PromptTooLong { len: 2, max: 1 },
+            ValidationError::TokenOutOfVocab { token: 9, vocab: 4 },
+            ValidationError::BadMaxTokens { got: "0".into() },
+            ValidationError::BadTemperature { got: "-1".into() },
+            ValidationError::BadTopK { got: "-1".into() },
+            ValidationError::BadSeed { got: "-1".into() },
+            ValidationError::BadStopTokens { why: "w".into() },
+        ];
+        let mut kinds = std::collections::HashSet::new();
+        for e in &all {
+            assert!(!format!("{e}").is_empty());
+            assert!(kinds.insert(e.kind()), "duplicate kind {}", e.kind());
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! Integration: the srv HTTP/1.1 + SSE front-end against a live native
+//! engine over real TCP sockets — byte-identical tokens vs. in-process
+//! sessions, the wire error-mapping matrix, injected saturation, budget
+//! shedding, and graceful shutdown.  Runs on a fresh checkout with no
+//! artifacts on disk (native backend).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use fa2::coordinator::engine::{Engine, SamplingParams, TokenEvent};
+use fa2::runtime::BackendKind;
+use fa2::srv::admission::AdmissionConfig;
+use fa2::srv::{HttpServer, HttpServerConfig};
+
+fn engine() -> Engine {
+    // the directory is never read: the native backend synthesizes its
+    // manifest in memory
+    Engine::start(PathBuf::from("artifacts"), "tiny", BackendKind::Native)
+        .expect("native engine must start with no artifacts on disk")
+}
+
+fn server_with(cfg: HttpServerConfig) -> (Engine, HttpServer, SocketAddr) {
+    let e = engine();
+    let s = HttpServer::start("127.0.0.1:0", e.handle(), cfg).expect("bind ephemeral port");
+    let addr = s.local_addr();
+    (e, s, addr)
+}
+
+fn server() -> (Engine, HttpServer, SocketAddr) {
+    server_with(HttpServerConfig::default())
+}
+
+/// Send raw bytes, read the full response (Connection: close semantics).
+fn raw_request(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(raw).expect("send");
+    let _ = s.shutdown(Shutdown::Write);
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read response");
+    buf
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    raw_request(addr, raw.as_bytes())
+}
+
+fn get(addr: SocketAddr, path: &str) -> String {
+    raw_request(addr, format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {resp:?}"))
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("")
+}
+
+/// The canonical wire form of a token list (matches `Json::Num`
+/// integer serialization), for byte-level comparison inside bodies.
+fn tokens_json(tokens: &[i32]) -> String {
+    let items: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    format!("\"tokens\":[{}]", items.join(","))
+}
+
+/// Greedy tokens for one prompt served alone on a fresh in-process
+/// engine — the byte-identity reference.
+fn solo_tokens(prompt: &[i32], max_tokens: usize) -> Vec<i32> {
+    let e = engine();
+    let c = e
+        .submit(prompt.to_vec(), SamplingParams::greedy(max_tokens))
+        .unwrap()
+        .wait()
+        .unwrap();
+    e.shutdown().unwrap();
+    c.tokens
+}
+
+#[test]
+fn health_and_metrics_answer_over_tcp() {
+    let (e, s, addr) = server();
+    let health = get(addr, "/health");
+    assert_eq!(status_of(&health), 200, "{health}");
+    assert!(body_of(&health).contains("\"status\":\"ok\""), "{health}");
+    assert!(body_of(&health).contains("\"queue_depth\""), "{health}");
+
+    let metrics = get(addr, "/metrics");
+    assert_eq!(status_of(&metrics), 200);
+    // the Prometheus text includes the http counter series
+    assert!(body_of(&metrics).contains("http_requests_total"), "{metrics}");
+    assert!(body_of(&metrics).contains("# HELP"), "{metrics}");
+
+    s.shutdown();
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn generate_tokens_are_byte_identical_to_in_process_session() {
+    let prompt: Vec<i32> = (1..=8).collect();
+    let expected = solo_tokens(&prompt, 6);
+
+    let (e, s, addr) = server();
+    let resp = post(addr, "/generate", r#"{"prompt":[1,2,3,4,5,6,7,8],"max_tokens":6}"#);
+    assert_eq!(status_of(&resp), 200, "{resp}");
+    let body = body_of(&resp);
+    assert!(body.contains(&tokens_json(&expected)), "want {expected:?} in {body}");
+    assert!(body.contains("\"finish\":\"max_tokens\""), "{body}");
+    assert!(body.contains("\"n_tokens\":6"), "{body}");
+
+    s.shutdown();
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn sse_stream_is_byte_identical_to_in_process_events() {
+    let prompt: Vec<i32> = (3..=10).collect();
+    // in-process reference: the exact event sequence for the same request
+    let e = engine();
+    let session = e.submit(prompt.clone(), SamplingParams::greedy(5)).unwrap();
+    let mut ref_tokens = Vec::new();
+    let ref_done = loop {
+        match session.recv().expect("in-process stream ended early") {
+            TokenEvent::First { token, .. } => ref_tokens.push(token),
+            TokenEvent::Delta { token, .. } => ref_tokens.push(token),
+            TokenEvent::Done { tokens, .. } => break tokens,
+        }
+    };
+    assert_eq!(ref_tokens, ref_done, "streamed vs final tokens must agree");
+    e.shutdown().unwrap();
+
+    let (e, s, addr) = server();
+    let resp = post(addr, "/generate_stream", r#"{"prompt":[3,4,5,6,7,8,9,10],"max_tokens":5}"#);
+    assert_eq!(status_of(&resp), 200, "{resp}");
+    assert!(resp.contains("Content-Type: text/event-stream"), "{resp}");
+
+    // parse the SSE frames: first, then deltas, then exactly one done
+    let body = body_of(&resp);
+    let frames: Vec<&str> = body.split("\n\n").filter(|f| !f.trim().is_empty()).collect();
+    let mut wire_tokens: Vec<i32> = Vec::new();
+    for (i, frame) in frames.iter().enumerate() {
+        let mut event = "";
+        let mut data = "";
+        for line in frame.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = v;
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = v;
+            }
+        }
+        match (i, event) {
+            (0, "first") => {
+                assert!(data.contains("\"index\":0"), "{data}");
+                assert!(data.contains("\"ttft_ms\""), "{data}");
+            }
+            (_, "delta") => assert!(data.contains(&format!("\"index\":{i}")), "{data}"),
+            (_, "done") => {
+                assert_eq!(i, frames.len() - 1, "done must be the final frame");
+                // the done frame carries the full token list, byte-equal
+                // to the in-process completion
+                assert!(data.contains(&tokens_json(&ref_done)), "want {ref_done:?} in {data}");
+                assert!(data.contains("\"finish\":\"max_tokens\""), "{data}");
+                continue;
+            }
+            other => panic!("unexpected frame {other:?}: {frame}"),
+        }
+        // extract "token":N
+        let tok = data
+            .split("\"token\":")
+            .nth(1)
+            .and_then(|rest| rest.split([',', '}']).next())
+            .and_then(|s| s.trim().parse::<i32>().ok())
+            .unwrap_or_else(|| panic!("no token in {data}"));
+        wire_tokens.push(tok);
+    }
+    assert_eq!(wire_tokens, ref_tokens, "SSE token stream must match in-process events");
+
+    s.shutdown();
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn wire_error_matrix_maps_statuses() {
+    let (e, s, addr) = server();
+
+    // unparseable HTTP -> 400
+    let resp = raw_request(addr, b"NONSENSE\r\n\r\n");
+    assert_eq!(status_of(&resp), 400, "{resp}");
+    // body not JSON -> 400
+    let resp = post(addr, "/generate", "not json");
+    assert_eq!(status_of(&resp), 400, "{resp}");
+    assert!(body_of(&resp).contains("body_not_json"), "{resp}");
+    // missing prompt -> 422
+    let resp = post(addr, "/generate", "{}");
+    assert_eq!(status_of(&resp), 422, "{resp}");
+    assert!(body_of(&resp).contains("missing_prompt"), "{resp}");
+    // empty prompt -> 422
+    let resp = post(addr, "/generate", r#"{"prompt":[]}"#);
+    assert_eq!(status_of(&resp), 422, "{resp}");
+    // token out of vocab -> 422
+    let resp = post(addr, "/generate", r#"{"prompt":[99999]}"#);
+    assert_eq!(status_of(&resp), 422, "{resp}");
+    assert!(body_of(&resp).contains("token_out_of_vocab"), "{resp}");
+    // over-long prompt -> 422 (prompt window is 16 on the tiny model)
+    let long: Vec<String> = (0..64).map(|i| (i % 100).to_string()).collect();
+    let resp = post(addr, "/generate", &format!(r#"{{"prompt":[{}]}}"#, long.join(",")));
+    assert_eq!(status_of(&resp), 422, "{resp}");
+    assert!(body_of(&resp).contains("prompt_too_long"), "{resp}");
+    // bad sampling field -> 422; unknown field -> 422
+    let resp = post(addr, "/generate", r#"{"prompt":[1],"max_tokens":0}"#);
+    assert_eq!(status_of(&resp), 422, "{resp}");
+    let resp = post(addr, "/generate", r#"{"prompt":[1],"max_token":4}"#);
+    assert_eq!(status_of(&resp), 422, "{resp}");
+    assert!(body_of(&resp).contains("unknown_field"), "{resp}");
+    // unknown route -> 404; wrong method -> 405 with Allow
+    let resp = get(addr, "/nope");
+    assert_eq!(status_of(&resp), 404, "{resp}");
+    let resp = get(addr, "/generate");
+    assert_eq!(status_of(&resp), 405, "{resp}");
+    assert!(resp.contains("Allow: POST"), "{resp}");
+    let resp = post(addr, "/health", "{}");
+    assert_eq!(status_of(&resp), 405, "{resp}");
+
+    // the engine survived the whole gauntlet
+    let health = get(addr, "/health");
+    assert_eq!(status_of(&health), 200);
+    s.shutdown();
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn injected_saturation_sheds_429_without_wedging_the_engine() {
+    let cfg = HttpServerConfig { inject_saturate: true, ..HttpServerConfig::default() };
+    let (e, s, addr) = server_with(cfg);
+
+    let resp = post(addr, "/generate", r#"{"prompt":[1,2,3],"max_tokens":4}"#);
+    assert_eq!(status_of(&resp), 429, "{resp}");
+    assert!(resp.contains("Retry-After: 1"), "{resp}");
+    assert!(body_of(&resp).contains("saturated"), "{resp}");
+    let resp = post(addr, "/generate_stream", r#"{"prompt":[1,2,3],"max_tokens":4}"#);
+    assert_eq!(status_of(&resp), 429, "{resp}");
+
+    // health still answers, and the engine still serves in-process
+    assert_eq!(status_of(&get(addr, "/health")), 200);
+    let c = e
+        .submit(vec![1, 2, 3], SamplingParams::greedy(2))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(c.tokens.len(), 2);
+
+    s.shutdown();
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn token_budget_sheds_a_second_request_with_429() {
+    // total budget fits one stream (8 + 112 = 120 <= 128) but not a
+    // second request while the first is still generating
+    let cfg = HttpServerConfig {
+        admission: AdmissionConfig {
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 128,
+            waiting_served_ratio: 0.0,
+            max_in_flight: 8,
+        },
+        ..HttpServerConfig::default()
+    };
+    let (e, s, addr) = server_with(cfg);
+
+    // hold a long stream open: read only the first SSE frame, then keep
+    // the connection (and its budget reservation) alive
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let body = r#"{"prompt":[1,2,3,4,5,6,7,8],"max_tokens":112}"#;
+    stream
+        .write_all(
+            format!(
+                "POST /generate_stream HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .expect("send");
+    let mut first = [0u8; 64];
+    let n = stream.read(&mut first).expect("first sse bytes");
+    assert!(n > 0, "stream produced no bytes");
+
+    // while ~112 tokens are still decoding, a second request must shed
+    let resp = post(addr, "/generate", r#"{"prompt":[1,2],"max_tokens":16}"#);
+    assert_eq!(status_of(&resp), 429, "{resp}");
+    assert!(body_of(&resp).contains("total_budget"), "{resp}");
+    assert!(resp.contains("Retry-After: 1"), "{resp}");
+
+    // drain the held stream; after it completes the budget frees up
+    let mut rest = String::new();
+    stream.read_to_string(&mut rest).expect("drain stream");
+    assert!(rest.contains("event: done"), "{rest}");
+    let resp = post(addr, "/generate", r#"{"prompt":[1,2],"max_tokens":16}"#);
+    assert_eq!(status_of(&resp), 200, "{resp}");
+
+    s.shutdown();
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn graceful_shutdown_drains_an_in_flight_stream() {
+    let (e, s, addr) = server();
+
+    // open a long-running stream and read its first frame so we know the
+    // session is live before shutdown starts
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let body = r#"{"prompt":[1,2,3,4,5,6,7,8],"max_tokens":112}"#;
+    stream
+        .write_all(
+            format!(
+                "POST /generate_stream HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .expect("send");
+    let mut first = [0u8; 32];
+    assert!(stream.read(&mut first).expect("first sse bytes") > 0);
+
+    // shutdown drains: the handler cancels the session, the engine sends
+    // Done{Cancelled}, and the client still gets a terminal done frame
+    let reader = std::thread::spawn(move || {
+        let mut rest = String::new();
+        stream.read_to_string(&mut rest).expect("drain stream");
+        rest
+    });
+    s.shutdown();
+    let rest = reader.join().expect("reader thread");
+    assert!(rest.contains("event: done"), "no terminal frame after shutdown: {rest}");
+
+    // every server-held EngineHandle was released: shutdown completes
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn admin_shutdown_raises_the_drain_latch() {
+    let (e, s, addr) = server();
+    assert!(!s.shutdown_requested());
+    let resp = post(addr, "/admin/shutdown", "");
+    assert_eq!(status_of(&resp), 200, "{resp}");
+    assert!(body_of(&resp).contains("draining"), "{resp}");
+    // the latch is up: wait returns immediately instead of blocking
+    s.wait_shutdown_requested();
+    assert!(s.shutdown_requested());
+    // health reports draining once the latch is raised
+    let health = get(addr, "/health");
+    assert!(body_of(&health).contains("draining"), "{health}");
+    s.shutdown();
+    e.shutdown().unwrap();
+}
