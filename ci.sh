@@ -20,6 +20,8 @@
 #   6. dependency policy: `cargo tree` lists only `fa2`
 #   7. SKIPPED summary: integration suites that skipped (no AOT artifacts /
 #      no xla backend) are listed so a green run cannot hide them
+#   8. doc gate (also under --quick): every relative markdown link in
+#      README.md, DESIGN.md, and docs/*.md must resolve to a real file
 #
 # Usage:
 #   ./ci.sh                    full gate
@@ -103,9 +105,9 @@ if [ "$VERIFY_GATE" = 1 ]; then
     export FA2_BENCH_INJECT_SLOWDOWN=1.2
     cargo build --release --benches
     rm -f reports/bench_summary.json
-    for bench in coordinator_hotpath native_attn paged_kv fig4_attn_fwd_bwd \
-                 fig5_attn_fwd fig6_attn_bwd fig7_h100 table1_e2e_training \
-                 runtime_exec; do
+    for bench in coordinator_hotpath native_attn paged_kv prefix_cache \
+                 fig4_attn_fwd_bwd fig5_attn_fwd fig6_attn_bwd fig7_h100 \
+                 table1_e2e_training runtime_exec; do
         cargo bench --bench "$bench"
     done
     if cargo run --release --quiet --bin repro -- bench-gate; then
@@ -239,6 +241,33 @@ print_skips() {
     fi
 }
 
+echo "== doc gate: intra-repo markdown links must resolve =="
+# Zero-dependency link checker over the prose that documents this repo:
+# every relative `[text](path)` target in README.md, DESIGN.md, and
+# docs/*.md must exist on disk (anchors and absolute URLs are skipped, a
+# `#fragment` suffix is stripped before the check).  Keeps the
+# architecture docs from silently pointing at renamed or deleted files.
+doc_gate() {
+    local fail=0 file link target
+    while IFS=$'\t' read -r file link; do
+        target="${link%%#*}"
+        [ -z "$target" ] && continue                    # same-file anchor
+        case "$target" in
+            http://*|https://*|mailto:*) continue ;;    # external
+            *" "*|*::*) continue ;;                     # prose/rustdoc false match
+            */*|*.*) ;;                                 # path-shaped: check it
+            *) continue ;;                              # bare word (inline code)
+        esac
+        if [ ! -e "$(dirname "$file")/$target" ]; then
+            echo "FAIL: $file links to missing target: ($link)" >&2
+            fail=1
+        fi
+    done < <(grep -Ho '\[[^]]*\]([^)]*)' README.md DESIGN.md docs/*.md 2>/dev/null \
+             | sed -n 's/^\([^:]*\):.*\](\([^)]*\))$/\1\t\2/p')
+    return "$fail"
+}
+doc_gate || { echo "FAIL: broken intra-repo markdown links (see above)" >&2; exit 1; }
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
@@ -273,10 +302,12 @@ rm -f reports/bench_summary.json
 # self-skips without AOT artifacts (its pinned entries then show up as
 # warn-only missing_in_current).
 # paged_kv asserts paged decode is bit-identical to contiguous and records
-# block-fragmentation stats next to the throughput numbers.
-for bench in coordinator_hotpath native_attn paged_kv fig4_attn_fwd_bwd \
-             fig5_attn_fwd fig6_attn_bwd fig7_h100 table1_e2e_training \
-             runtime_exec; do
+# block-fragmentation stats next to the throughput numbers.  prefix_cache
+# asserts warm shared-prefix sessions are byte-identical to cold ones while
+# replaying strictly fewer prompt blocks.
+for bench in coordinator_hotpath native_attn paged_kv prefix_cache \
+             fig4_attn_fwd_bwd fig5_attn_fwd fig6_attn_bwd fig7_h100 \
+             table1_e2e_training runtime_exec; do
     echo "-- cargo bench --bench $bench"
     cargo bench --bench "$bench"
 done

@@ -22,8 +22,8 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: "no-hotpath-panic",
         summary: "no unwrap()/expect()/panic!-family in hot-path modules \
-                  (attn/exec, runtime/kv, runtime/native, coordinator/scheduler, \
-                  srv) outside #[cfg(test)]",
+                  (attn/exec, runtime/kv, runtime/prefix, runtime/native, \
+                  coordinator/scheduler, srv) outside #[cfg(test)]",
     },
     Rule {
         id: "no-float-eq",
@@ -91,6 +91,7 @@ pub fn run_all(files: &[ScannedFile]) -> Vec<Diagnostic> {
 fn is_hot_path(path: &str) -> bool {
     path.starts_with("rust/src/attn/exec")
         || path.starts_with("rust/src/runtime/kv")
+        || path.starts_with("rust/src/runtime/prefix")
         || path.starts_with("rust/src/runtime/native")
         || path.starts_with("rust/src/coordinator/scheduler")
         || path.starts_with("rust/src/srv")

@@ -59,6 +59,15 @@ pub struct ServeConfig {
     /// Total KV blocks the arena holds (`--kv-blocks`); 0 = enough for
     /// `max_in_flight` full windows.
     pub kv_blocks: usize,
+    /// Enable copy-on-write prefix caching over the KV arena
+    /// (`--prefix-cache`, DESIGN.md §15): sessions adopt the full KV
+    /// blocks their prompt shares with a cached prefix instead of
+    /// re-prefilling them.
+    pub prefix_cache: bool,
+    /// Max cached blocks retained after their publisher retires
+    /// (`--prefix-cache-blocks`; 0 = unbounded, evict only under arena
+    /// pressure).
+    pub prefix_cache_blocks: usize,
     /// HTTP listen address (`--http ADDR`); "" = no HTTP front-end, run
     /// the synthetic in-process workload instead.
     pub http: String,
@@ -90,6 +99,8 @@ impl Default for ServeConfig {
             prefill_chunk: sched.prefill_chunk,
             kv_block: sched.kv_block,
             kv_blocks: 0,
+            prefix_cache: sched.prefix_cache,
+            prefix_cache_blocks: sched.prefix_cache_blocks,
             http: String::new(),
             max_batch_prefill_tokens: admission.max_batch_prefill_tokens,
             max_batch_total_tokens: admission.max_batch_total_tokens,
@@ -169,6 +180,10 @@ impl RunConfig {
                     as usize,
                 kv_block: doc.i64_or("serve.kv_block", d.serve.kv_block as i64) as usize,
                 kv_blocks: doc.i64_or("serve.kv_blocks", d.serve.kv_blocks as i64) as usize,
+                prefix_cache: doc.bool_or("serve.prefix_cache", d.serve.prefix_cache),
+                prefix_cache_blocks: doc
+                    .i64_or("serve.prefix_cache_blocks", d.serve.prefix_cache_blocks as i64)
+                    as usize,
                 http: doc.str_or("serve.http", &d.serve.http).to_string(),
                 max_batch_prefill_tokens: doc
                     .i64_or(
@@ -217,6 +232,7 @@ mod tests {
              backend = \"native\"\ntemperature = 0.8\ntop_k = 40\n\
              stream = true\nsched = \"gang\"\nmax_in_flight = 3\n\
              prefill_chunk = 2\nkv_block = 8\nkv_blocks = 24\n\
+             prefix_cache = true\nprefix_cache_blocks = 12\n\
              http = \"127.0.0.1:8080\"\nmax_batch_prefill_tokens = 512\n\
              max_batch_total_tokens = 2048\nwaiting_served_ratio = 1.5\n\
              [model]\nn_kv_heads = 2\nwindow = 48\n",
@@ -237,6 +253,8 @@ mod tests {
         assert_eq!(c.serve.prefill_chunk, 2);
         assert_eq!(c.serve.kv_block, 8);
         assert_eq!(c.serve.kv_blocks, 24);
+        assert!(c.serve.prefix_cache);
+        assert_eq!(c.serve.prefix_cache_blocks, 12);
         assert_eq!(c.serve.http, "127.0.0.1:8080");
         assert_eq!(c.serve.max_batch_prefill_tokens, 512);
         assert_eq!(c.serve.max_batch_total_tokens, 2048);
@@ -258,6 +276,8 @@ mod tests {
         assert_eq!(c.serve.prefill_chunk, s.prefill_chunk);
         assert_eq!(c.serve.kv_block, s.kv_block);
         assert_eq!(c.serve.kv_blocks, 0, "0 = derive from max_in_flight");
+        assert!(!c.serve.prefix_cache, "prefix caching is opt-in");
+        assert_eq!(c.serve.prefix_cache_blocks, 0, "0 = unbounded retention");
         // HTTP is off by default; admission knobs mirror AdmissionConfig
         let a = crate::srv::admission::AdmissionConfig::default();
         assert!(c.serve.http.is_empty());

@@ -41,14 +41,15 @@ use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::util::error::{Error, Result};
 
 use crate::runtime::{
-    BackendKind, KvArena, KvGeometry, KvSlot, ModelBundle, Runtime, RuntimeOptions, ServeShapes,
+    BackendKind, KvArena, KvGeometry, KvSlot, ModelBundle, PrefixIndex, Runtime, RuntimeOptions,
+    ServeShapes,
 };
 use crate::util::rng::Rng;
 use crate::util::tensorio::HostTensor;
@@ -118,9 +119,16 @@ pub enum TokenEvent {
     /// A subsequent decode token; `index` counts all generated tokens, so
     /// deltas start at 1.
     Delta { index: usize, token: i32 },
-    /// Terminal event: the finish reason plus the complete token list and
-    /// latency accounting.
-    Done { finish: FinishReason, tokens: Vec<i32>, latency_secs: f64, ttft_secs: f64 },
+    /// Terminal event: the finish reason plus the complete token list,
+    /// latency accounting, and how many prompt tokens were adopted from
+    /// the prefix cache (their prefill was skipped; 0 with caching off).
+    Done {
+        finish: FinishReason,
+        tokens: Vec<i32>,
+        latency_secs: f64,
+        ttft_secs: f64,
+        cached_tokens: usize,
+    },
 }
 
 impl TokenEvent {
@@ -150,6 +158,8 @@ pub struct Completion {
     pub latency: f64,
     /// time to first token (prefill), seconds
     pub ttft: f64,
+    /// prompt tokens whose prefill was skipped via prefix-cache adoption
+    pub cached_tokens: usize,
 }
 
 /// Typed submission errors — the conditions a client can act on.
@@ -253,12 +263,13 @@ impl Session {
     fn drain(&self) -> Result<Completion> {
         loop {
             match self.events.recv() {
-                Ok(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs }) => {
+                Ok(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs, cached_tokens }) => {
                     return Ok(Completion {
                         tokens,
                         finish,
                         latency: latency_secs,
                         ttft: ttft_secs,
+                        cached_tokens,
                     })
                 }
                 Ok(_) => continue,
@@ -320,6 +331,12 @@ pub struct EngineHandle {
     /// queue depth behind [`EngineError::Saturated`].
     queued: Arc<AtomicUsize>,
     max_queue: usize,
+    /// Shared view of the worker's prefix-cache index (None with caching
+    /// off) — lets the submit side *probe* expected cache hits without a
+    /// round-trip to the worker ([`cached_prefix_tokens`]).
+    ///
+    /// [`cached_prefix_tokens`]: Self::cached_prefix_tokens
+    prefix: Option<Arc<Mutex<PrefixIndex>>>,
 }
 
 impl EngineHandle {
@@ -349,11 +366,40 @@ impl EngineHandle {
         self.max_queue
     }
 
-    /// Open a session: validates the prompt against the compiled window,
-    /// the arena's block capacity, and the bounded queue, then enqueues
-    /// it.  Fails fast with a typed error instead of truncating prompts,
-    /// queueing unadmittable sessions, growing the queue without bound, or
-    /// blocking on a dead worker.
+    /// How many of `prompt`'s tokens the prefix cache would serve right
+    /// now — an **advisory** count (DESIGN.md §15): the worker re-probes
+    /// at intake, so the true per-request number is the `cached_tokens`
+    /// field of [`TokenEvent::Done`] / [`Completion`].  The HTTP router
+    /// uses this to charge the admission token budget only for *uncached*
+    /// prefill work.  Always 0 when prefix caching is off.
+    pub fn cached_prefix_tokens(&self, prompt: &[i32]) -> usize {
+        let Some(ix) = &self.prefix else { return 0 };
+        // Same cap as `KvArena::acquire_prefix`: never adopt the block
+        // holding the last prompt token, so at least one replay row
+        // remains to produce the first sampled token.
+        let cap = prompt.len().saturating_sub(1) / self.kv_block;
+        let g = match ix.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.probe(prompt, cap) * self.kv_block
+    }
+
+    /// Open a session: validates the prompt against the compiled window
+    /// ([`EngineError::PromptTooLong`]), the model vocabulary
+    /// ([`EngineError::TokenOutOfVocab`]), the arena's block capacity
+    /// ([`EngineError::ExceedsKvCapacity`]), and the bounded queue
+    /// ([`EngineError::Saturated`]), then enqueues it.  Fails fast with a
+    /// typed error instead of truncating prompts, queueing unadmittable
+    /// sessions, growing the queue without bound, or blocking on a dead
+    /// worker ([`EngineError::Closed`]).
+    ///
+    /// The returned [`Session`] streams [`TokenEvent`]s in order (`First`,
+    /// `Delta`..., `Done`); dropping it cancels the request unless
+    /// [`Session::detach`] was called.  With prefix caching on, the worker
+    /// adopts every full KV block the prompt shares with a cached prefix —
+    /// the capacity gate here still charges the *full* reservation, since
+    /// cache hits are not guaranteed to survive until admission.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
@@ -451,6 +497,13 @@ impl Engine {
         let (ready_tx, ready_rx) = channel::<Result<ServeShapes>>();
         let queued = Arc::new(AtomicUsize::new(0));
         let worker_queued = queued.clone();
+        // The prefix-cache index is shared between the worker (which owns
+        // all mutation through the arena) and the handle (read-only
+        // probes for admission accounting).
+        let prefix = cfg.prefix_cache.then(|| {
+            Arc::new(Mutex::new(PrefixIndex::new(cfg.kv_block, cfg.prefix_cache_blocks)))
+        });
+        let worker_prefix = prefix.clone();
         let handle = std::thread::spawn(move || {
             let setup = || -> Result<(ModelBundle, Vec<HostTensor>)> {
                 let rt = Runtime::with_backend_opts(&artifact_dir, backend, opts)?;
@@ -463,7 +516,7 @@ impl Engine {
             match setup() {
                 Ok((bundle, params)) => {
                     let _ = ready_tx.send(Ok(bundle.shapes));
-                    worker(rx, bundle, params, cfg, worker_queued)
+                    worker(rx, bundle, params, cfg, worker_queued, worker_prefix)
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -483,6 +536,7 @@ impl Engine {
                 kv_blocks,
                 queued,
                 max_queue: cfg.max_queue,
+                prefix,
             },
             handle,
         })
@@ -678,9 +732,17 @@ struct SeqState {
     /// Next KV write position == tokens fed so far.
     pos: i32,
     /// KV blocks this session reserves at (re-)admission — sized once at
-    /// intake for `prompt + max_tokens`, so the reservation never grows
-    /// mid-flight and preemption replay fits the same blocks.
+    /// intake for `prompt + max_tokens` *minus* adopted cache blocks, so
+    /// the reservation never grows mid-flight and preemption replay fits
+    /// the same blocks (adopted blocks stay pinned across preemption).
     need_blocks: usize,
+    /// Physical KV blocks adopted from the prefix cache at intake — the
+    /// session's table starts with these, replay starts after them, and
+    /// `free`/preemption return the pins instead of the blocks.
+    adopted: Vec<u32>,
+    /// `adopted.len() * block_tokens`: prompt tokens whose prefill is
+    /// skipped (reported as `cached_tokens` on the Done event).
+    cached_tokens: usize,
     /// Present iff the session is admitted (holds an arena reservation).
     slot: Option<KvSlot>,
     /// First admission already happened (queue-depth + metrics are
@@ -729,6 +791,7 @@ fn send_done(s: SeqState, finish: FinishReason, metrics: &mut Metrics) {
         tokens: s.generated,
         latency_secs: latency,
         ttft_secs: s.ttft,
+        cached_tokens: s.cached_tokens,
     });
 }
 
@@ -760,6 +823,7 @@ fn worker(
     params: Vec<HostTensor>,
     cfg: SchedulerConfig,
     queued: Arc<AtomicUsize>,
+    prefix: Option<Arc<Mutex<PrefixIndex>>>,
 ) -> Result<Metrics> {
     let shapes = bundle.shapes;
     // The paged arena: capacity in BLOCKS, so admission decisions below
@@ -768,6 +832,9 @@ fn worker(
     // can touch instead of a full window.
     let geo = shapes.geometry(cfg.kv_block);
     let mut arena = KvArena::with_block_capacity(geo, arena_blocks(&cfg, &shapes));
+    if let Some(ix) = prefix {
+        arena.attach_prefix_index(ix);
+    }
     let mut sched = Scheduler::new(cfg);
     let cfg = sched.config();
     let mut metrics = Metrics::new();
@@ -805,7 +872,15 @@ fn worker(
                 // padded the whole window with zeros)
                 prompt.push(0);
             }
-            let need_blocks = blocks_needed(&geo, prompt.len(), inc.sampling.max_tokens);
+            // Prefix-cache adoption (DESIGN.md §15): pin every full block
+            // this prompt shares with a cached prefix NOW, at intake — the
+            // pins survive queueing, admission, and preemption, so the
+            // session's need never changes mid-flight.  `need_blocks`
+            // counts only the MISSING blocks (a cache hit shrinks it), and
+            // replay starts after the adopted positions.
+            let (adopted, cached_tokens) = arena.acquire_prefix(&prompt);
+            let need_blocks = blocks_needed(&geo, prompt.len(), inc.sampling.max_tokens)
+                - adopted.len();
             let state = SeqState {
                 events_tx: inc.events_tx,
                 cancel: inc.cancel,
@@ -814,11 +889,13 @@ fn worker(
                 prompt_len,
                 replay: prompt.clone(),
                 prompt,
-                cursor: 0,
+                cursor: cached_tokens,
                 generated: Vec::new(),
                 sampler: Sampler::new(inc.sampling),
-                pos: 0,
+                pos: cached_tokens as i32,
                 need_blocks,
+                adopted,
+                cached_tokens,
                 slot: None,
                 admitted_once: false,
             };
@@ -840,6 +917,9 @@ fn worker(
             if !s.admitted_once {
                 queued.fetch_sub(1, Ordering::AcqRel);
             }
+            // Waiting sessions hold no slot, but may hold cache pins from
+            // intake adoption — return those before retiring.
+            arena.release_prefix_blocks(&s.adopted);
             send_done(s, FinishReason::Cancelled, &mut metrics);
         }
 
@@ -861,16 +941,22 @@ fn worker(
         let plan = sched.plan(arena.available());
         for &id in &plan.preempted {
             let s = sessions.get_mut(&id).expect("preempted id is live");
+            // PIN BEFORE FREE: `free` releases the session's adoption pins
+            // (and may run cache eviction); re-pinning first keeps the
+            // adopted blocks' refcounts from ever touching zero, so the
+            // KV they hold is still valid when the session resumes.
+            arena.acquire_prefix_blocks(&s.adopted);
             arena.free(s.slot.take().expect("preempted session held a reservation"));
             // Rebuild the replay from everything it had fed: the prompt
             // plus all generated tokens except the last (which has been
-            // sampled but not yet fed).
+            // sampled but not yet fed).  Adopted cache blocks survive
+            // preemption, so replay restarts AFTER the cached positions.
             s.replay = s.prompt.clone();
             if s.generated.len() > 1 {
                 s.replay.extend_from_slice(&s.generated[..s.generated.len() - 1]);
             }
-            s.cursor = 0;
-            s.pos = 0;
+            s.cursor = s.cached_tokens;
+            s.pos = s.cached_tokens as i32;
             metrics.observe_preemption();
             // Audit-log row: who was evicted, how many blocks it gave
             // back, and which admission (the FCFS head) it made room for.
@@ -884,7 +970,7 @@ fn worker(
         for &id in &plan.admitted {
             let s = sessions.get_mut(&id).expect("admitted id is live");
             let slot = arena
-                .try_alloc_seq(s.need_blocks)
+                .try_alloc_seq_shared(&s.adopted, s.need_blocks)
                 .expect("plan respects arena availability");
             s.slot = Some(slot);
             metrics.observe_admission();
@@ -894,6 +980,7 @@ fn worker(
                 queued.fetch_sub(1, Ordering::AcqRel);
                 metrics.observe_queue_wait(s.submitted.elapsed().as_secs_f64());
                 metrics.observe_prompt(s.prompt_len, s.prompt_len);
+                metrics.observe_prefix(s.cached_tokens);
             }
         }
         // Block conservation, data-plane side (DESIGN.md §12): after the
@@ -944,6 +1031,14 @@ fn worker(
                     }
                     pos.push(s.pos);
                 }
+                // Defensive copy-on-write (DESIGN.md §15): serving-path
+                // adoption is capped below the write cursor, so these
+                // never trigger today — but any row about to write a
+                // *shared* block must get a private copy first, or the
+                // write would corrupt every other reader of that prefix.
+                for (slot, &p) in slots.iter().zip(&pos) {
+                    arena.ensure_writable(*slot, p as usize);
+                }
                 // Backend/module failures are deliberately engine-fatal:
                 // submit() validated everything client-controllable, so an
                 // error here means the backend itself is broken.
@@ -977,6 +1072,13 @@ fn worker(
                                 .events_tx
                                 .send(TokenEvent::First { token: t, ttft_secs: s.ttft });
                             sched.note_progress(*id);
+                            // Prefill is complete exactly once, here:
+                            // publish this prompt's full KV blocks into
+                            // the prefix cache for followers to adopt.
+                            arena.publish_prefix(
+                                s.slot.expect("row is admitted"),
+                                &s.prompt,
+                            );
                         }
                     } else {
                         let t = s.sampler.next(row);
@@ -1089,6 +1191,7 @@ mod tests {
                 kv_blocks: 32,
                 queued: Arc::new(AtomicUsize::new(queued)),
                 max_queue,
+                prefix: None,
             },
             handle,
         };

@@ -105,6 +105,20 @@ impl Metrics {
         );
     }
 
+    /// Prompt tokens served from the prefix cache (first admission only).
+    /// Local books only: the arena's `acquire_prefix` already mirrors
+    /// `kv_prefix_cached_tokens_total` into the global registry at the
+    /// moment of adoption, so bumping it globally here too would
+    /// double-count.
+    pub fn observe_prefix(&mut self, cached_tokens: usize) {
+        self.counters.add("kv_prefix_cached_tokens_total", cached_tokens as u64);
+    }
+
+    /// Prompt tokens whose prefill was skipped via prefix-cache adoption.
+    pub fn prefix_cached_tokens(&self) -> u64 {
+        self.counters.get("kv_prefix_cached_tokens_total")
+    }
+
     /// Total true prompt tokens admitted.
     pub fn prompt_tokens(&self) -> u64 {
         self.counters.get("engine_prompt_tokens_total")
@@ -199,7 +213,7 @@ impl Metrics {
              latency p50={} p95={}  ttft p50={}  queue wait p50={}\n\
              decode steps={} (rows/step {:.2}, {} prefill rows)  \
              preemptions={}  cancelled={}  \
-             prompt tokens={} (+{} pad)  \
+             prompt tokens={} (+{} pad, {} cached)  \
              kv moved/step={:.0} B (gather {} B, scatter {} B)",
             self.requests(),
             self.tokens(),
@@ -219,6 +233,7 @@ impl Metrics {
             self.cancelled(),
             self.prompt_tokens(),
             self.prompt_pad_tokens(),
+            self.prefix_cached_tokens(),
             self.kv_bytes_per_step(),
             self.kv.gather_bytes,
             self.kv.scatter_bytes,
@@ -266,8 +281,10 @@ mod tests {
         m.observe_cancelled();
         m.observe_prompt(12, 16);
         m.observe_prompt(16, 16);
+        m.observe_prefix(8);
         assert_eq!(m.prompt_tokens(), 28);
         assert_eq!(m.prompt_pad_tokens(), 4);
+        assert_eq!(m.prefix_cached_tokens(), 8);
         assert_eq!(m.prefill_rows(), 5);
         assert_eq!(m.preemptions(), 1);
         assert_eq!(m.admissions(), 2);
@@ -288,6 +305,7 @@ mod tests {
         assert!(r.contains("cancelled=1"), "{r}");
         assert!(r.contains("preemptions=1"), "{r}");
         assert!(r.contains("5 prefill rows"), "{r}");
+        assert!(r.contains("8 cached"), "{r}");
     }
 
     #[test]

@@ -90,6 +90,13 @@ pub struct SchedulerConfig {
     /// Total KV blocks the arena is sized to (None = enough for
     /// `max_in_flight` full windows, the pre-paging worst case).
     pub kv_blocks: Option<usize>,
+    /// Enable copy-on-write prefix caching over the arena (DESIGN.md
+    /// §15): sessions adopt cached prompt blocks, shrinking the `need`
+    /// they enqueue with.  Off by default.
+    pub prefix_cache: bool,
+    /// Max cached blocks retained after their publisher retires
+    /// (0 = unbounded); only meaningful with `prefix_cache`.
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -102,6 +109,8 @@ impl Default for SchedulerConfig {
             starvation_bound: 64,
             kv_block: DEFAULT_KV_BLOCK,
             kv_blocks: None,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         }
     }
 }
@@ -236,17 +245,27 @@ impl Scheduler {
     /// One step of policy: FCFS admissions (and, in continuous mode, a
     /// starvation preemption batch) given `free_blocks` actually available
     /// in the KV arena.
+    ///
+    /// `free_blocks` is the arena's live
+    /// [`available()`](crate::runtime::KvArena::available) count, so every
+    /// admission the plan grants is backed by blocks the engine can
+    /// really allocate.  With prefix caching on, a session's `need` (set
+    /// at [`enqueue`](Self::enqueue)) counts only its *missing* blocks —
+    /// adopted cache blocks are pinned outside this policy's ledger, so
+    /// a cache hit directly widens what fits per step.
     pub fn plan(&mut self, free_blocks: usize) -> StepPlan {
         let _sp = crate::obs_span!("sched_plan");
         // Block conservation (DESIGN.md §12): with a bounded arena, the
         // caller's free count plus this policy's reservations must account
-        // for every block at every step — drift here means the engine and
-        // the policy disagree about who owns KV memory.
+        // for every block at every step — drift above the total means the
+        // engine and the policy disagree about who owns KV memory.  The
+        // prefix cache may hold capacity *outside* both ledgers (pinned
+        // blocks whose publisher retired), so the invariant is <=, with
+        // equality whenever the cache holds no pinned owner-dead blocks.
         if let Some(total) = self.cfg.kv_blocks {
-            debug_assert_eq!(
-                free_blocks + self.reserved_blocks(),
-                total,
-                "kv block conservation violated: {free_blocks} free + {} reserved != {total} total",
+            debug_assert!(
+                free_blocks + self.reserved_blocks() <= total,
+                "kv block conservation violated: {free_blocks} free + {} reserved > {total} total",
                 self.reserved_blocks(),
             );
         }
@@ -524,6 +543,8 @@ mod tests {
             starvation_bound: 0,
             kv_block: 0,
             kv_blocks: Some(0),
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         }
         .sanitized();
         assert_eq!(
@@ -556,6 +577,8 @@ mod tests {
                 starvation_bound: rng.range_usize(1, 10),
                 kv_block: 16,
                 kv_blocks: Some(cap),
+                prefix_cache: false,
+                prefix_cache_blocks: 0,
             };
             let bound = cfg.starvation_bound;
             let mut sched = Scheduler::new(cfg);

@@ -62,6 +62,7 @@ fn usage() -> ! {
                      [--backend B] [--stream] [--temperature T] [--top-k K]\n            \
                      [--sched continuous|gang] [--max-in-flight N]\n            \
                      [--prefill-chunk N] [--kv-block T] [--kv-blocks N]\n            \
+                     [--prefix-cache] [--prefix-cache-blocks N]\n            \
                      [--kv-heads H] [--window W]\n            \
                      [--http ADDR] [--http-addr-file FILE]\n            \
                      [--max-batch-prefill-tokens N] [--max-batch-total-tokens N]\n            \
@@ -409,6 +410,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(n) = args.get_usize("kv-blocks")? {
         cfg.kv_blocks = n;
     }
+    if args.get("prefix-cache").is_some() {
+        cfg.prefix_cache = true;
+    }
+    if let Some(n) = args.get_usize("prefix-cache-blocks")? {
+        cfg.prefix_cache_blocks = n;
+    }
     if let Some(n) = args.get_usize("kv-heads")? {
         model_cfg.n_kv_heads = Some(n);
     }
@@ -441,6 +448,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prefill_chunk: cfg.prefill_chunk,
         kv_block: cfg.kv_block,
         kv_blocks: if cfg.kv_blocks == 0 { None } else { Some(cfg.kv_blocks) },
+        prefix_cache: cfg.prefix_cache,
+        prefix_cache_blocks: cfg.prefix_cache_blocks,
         // the CLI drives its own closed-loop workload: size the queue so
         // the synthetic burst is never rejected by its own backpressure
         max_queue: SchedulerConfig::default().max_queue.max(cfg.num_requests),
@@ -483,6 +492,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shapes.geometry(kv_block).blocks_per_seq(),
         sched_cfg.prefill_chunk
     );
+    if sched_cfg.prefix_cache {
+        println!(
+            "prefix cache: on (copy-on-write block sharing, retained-block cap {})",
+            match sched_cfg.prefix_cache_blocks {
+                0 => "unbounded".to_string(),
+                n => n.to_string(),
+            }
+        );
+    }
     // --http ADDR (or serve.http in the config) puts the srv router in
     // front of the engine instead of running the synthetic workload; the
     // process then serves until a client POSTs /admin/shutdown.
@@ -562,13 +580,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             print!(" {token}");
                             std::io::stdout().flush().ok();
                         }
-                        Some(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs }) => {
+                        Some(TokenEvent::Done {
+                            finish,
+                            tokens,
+                            latency_secs,
+                            ttft_secs,
+                            cached_tokens,
+                        }) => {
                             println!("  [{finish:?}]");
                             break Completion {
                                 tokens,
                                 finish,
                                 latency: latency_secs,
                                 ttft: ttft_secs,
+                                cached_tokens,
                             };
                         }
                         None => bail!("engine closed mid-stream"),

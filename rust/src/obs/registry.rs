@@ -96,6 +96,11 @@ pub const REGISTRY: &[NameDef] = &[
     NameDef { kind: Counter, name: "http_5xx_total", help: "responses served with a 5xx status" },
     NameDef { kind: Counter, name: "http_sse_events_total", help: "SSE events written on /generate_stream" },
     NameDef { kind: Counter, name: "http_accept_rejects_total", help: "connections refused 503 at the bounded accept queue" },
+    NameDef { kind: Counter, name: "kv_prefix_hits_total", help: "prompt blocks adopted from the prefix cache instead of re-prefilled" },
+    NameDef { kind: Counter, name: "kv_prefix_misses_total", help: "cacheable prompt blocks not found in the prefix cache" },
+    NameDef { kind: Counter, name: "kv_prefix_evictions_total", help: "zero-ref cached blocks reclaimed (LRU or retained-cap)" },
+    NameDef { kind: Counter, name: "kv_prefix_cow_total", help: "copy-on-write block copies triggered by a divergent write" },
+    NameDef { kind: Counter, name: "kv_prefix_cached_tokens_total", help: "prompt tokens whose prefill was skipped via cache adoption" },
     // --- gauges (metrics snapshot) ---
     NameDef { kind: Gauge, name: "kv_blocks_in_use", help: "arena blocks currently granted" },
     NameDef { kind: Gauge, name: "kv_blocks_high_water", help: "max arena blocks ever simultaneously granted" },
@@ -115,6 +120,7 @@ pub const REGISTRY: &[NameDef] = &[
     NameDef { kind: Gauge, name: "http_stream_ttft_p50_us", help: "/generate_stream time-to-first-token p50 (µs, sampled)" },
     NameDef { kind: Gauge, name: "http_stream_ttft_p95_us", help: "/generate_stream time-to-first-token p95 (µs, sampled)" },
     NameDef { kind: Gauge, name: "http_stream_tpot_p50_us", help: "/generate_stream time-per-output-token p50 (µs, sampled)" },
+    NameDef { kind: Gauge, name: "kv_prefix_cached_blocks", help: "blocks currently registered in the prefix cache index" },
 ];
 
 /// Index of `name` in [`REGISTRY`], if declared.

@@ -25,11 +25,33 @@
 //! Within a physical block, rows are laid out `(layer, head, token,
 //! d_head)` — one `(layer, head)` plane's rows are contiguous, which is
 //! exactly the chunk shape the split-KV decode kernel streams.
+//!
+//! With a [`PrefixIndex`] attached (DESIGN.md §15), the arena also serves
+//! as the **prefix cache**: fully-prefilled prompt blocks are published
+//! into a refcounted hash→block index, later sessions adopt the shared
+//! physical blocks instead of recomputing prefill
+//! ([`acquire_prefix`](KvArena::acquire_prefix) /
+//! [`try_alloc_seq_shared`](KvArena::try_alloc_seq_shared)), divergent
+//! writes copy-on-write through
+//! [`ensure_writable`](KvArena::ensure_writable), and zero-ref cached
+//! blocks are reclaimed LRU-first when allocation runs dry.
+
+use std::sync::{Arc, Mutex};
 
 use crate::attn::spec::{BlockTable, KvLayout};
 use crate::bail;
+use crate::runtime::prefix::PrefixIndex;
 use crate::util::error::Result;
 use crate::util::tensorio::HostTensor;
+
+/// Poison-safe lock on the shared prefix index: block accounting must
+/// keep working even if an unrelated holder panicked mid-lock.
+fn lock_prefix(ix: &Arc<Mutex<PrefixIndex>>) -> std::sync::MutexGuard<'_, PrefixIndex> {
+    match ix.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// Cache geometry: shapes from the model, block size from serving config.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -139,8 +161,16 @@ pub enum ShadowViolation {
     OutOfTable { slot: usize, pos: usize },
     /// A write would land in a physical block the shadow says this slot
     /// does not own at that table index — the cross-sequence aliasing bug
-    /// class copy-on-write prefix sharing will make reachable.
+    /// class copy-on-write prefix sharing makes reachable.
     CrossSequenceAlias { slot: usize, pos: usize, block: u32, owner: Option<usize> },
+    /// A write through a table entry that resolves to a *shared* (prefix
+    /// cache registered) block — the writer must copy-on-write first.
+    SharedBlockWrite { slot: usize, pos: usize, block: u32 },
+    /// A shared block's refcount was decremented past zero, or a refcount
+    /// operation named a block the shadow never saw published.
+    RefcountUnderflow { block: u32 },
+    /// A shared block was evicted while holders still pin it.
+    PrematureEvict { block: u32, refs: usize },
     /// Blocks or slots still live when the arena should be quiescent.
     LeakAtRetire { live_slots: usize, owned_blocks: usize },
 }
@@ -173,6 +203,17 @@ impl std::fmt::Display for ShadowViolation {
                     None => "no live sequence".to_string(),
                 }
             ),
+            ShadowViolation::SharedBlockWrite { slot, pos, block } => write!(
+                f,
+                "slot {slot} write at token {pos} targets shared block {block} without copy-on-write"
+            ),
+            ShadowViolation::RefcountUnderflow { block } => {
+                write!(f, "refcount underflow on shared block {block}")
+            }
+            ShadowViolation::PrematureEvict { block, refs } => write!(
+                f,
+                "premature evict of shared block {block} with {refs} live ref(s)"
+            ),
             ShadowViolation::LeakAtRetire { live_slots, owned_blocks } => write!(
                 f,
                 "leak at retire: {live_slots} slot(s) still live holding {owned_blocks} block(s)"
@@ -189,43 +230,169 @@ impl std::fmt::Display for ShadowViolation {
 pub struct ShadowArena {
     /// Mirror of the arena's slot table: block list per live slot.
     slots: Vec<Option<Vec<u32>>>,
-    /// Physical block -> owning slot (exactly one owner while refcounts
-    /// stay out of the tree; COW sharing will generalize this map).
+    /// Physical block -> owning slot, for blocks owned *exclusively* by
+    /// one live sequence (unpublished fresh blocks).
     owner: std::collections::HashMap<u32, usize>,
+    /// Physical block -> refcount, for blocks published into the prefix
+    /// cache.  The publishing sequence's pin counts as one ref while it
+    /// lives; each adopter adds one.  refs == 0 means cached-evictable.
+    shared: std::collections::HashMap<u32, usize>,
 }
 
 #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
 impl ShadowArena {
     /// Mirror a grant of `blocks` to `slot`.
     pub fn on_alloc(&mut self, slot: usize, blocks: &[u32]) -> Result<(), ShadowViolation> {
+        self.on_alloc_shared(slot, &[], blocks)
+    }
+
+    /// Mirror a cache-aware grant: `adopted` blocks were pinned in the
+    /// shared map earlier (at [`on_acquire`](Self::on_acquire) time);
+    /// only the `fresh` tail is newly owned by `slot`.
+    pub fn on_alloc_shared(
+        &mut self,
+        slot: usize,
+        adopted: &[u32],
+        fresh: &[u32],
+    ) -> Result<(), ShadowViolation> {
         if self.slots.len() <= slot {
             self.slots.resize_with(slot + 1, || None);
         }
         if self.slots[slot].is_some() {
             return Err(ShadowViolation::SlotReused { slot });
         }
-        for &b in blocks {
+        for &b in adopted {
+            if !self.shared.get(&b).is_some_and(|&r| r > 0) {
+                return Err(ShadowViolation::RefcountUnderflow { block: b });
+            }
+        }
+        for &b in fresh {
             if let Some(&other) = self.owner.get(&b) {
                 return Err(ShadowViolation::AliasedGrant { block: b, slot, other });
             }
+            if self.shared.contains_key(&b) {
+                return Err(ShadowViolation::AliasedGrant { block: b, slot, other: slot });
+            }
         }
-        for &b in blocks {
+        for &b in fresh {
             self.owner.insert(b, slot);
         }
-        self.slots[slot] = Some(blocks.to_vec());
+        let mut table = adopted.to_vec();
+        table.extend_from_slice(fresh);
+        self.slots[slot] = Some(table);
         Ok(())
     }
 
-    /// Mirror a free of `slot`, releasing its block ownership.
+    /// Mirror a free of `slot`: exclusive blocks lose their owner; every
+    /// shared block in the table (adopted or self-published) drops the
+    /// one pin this sequence held.
     pub fn on_free(&mut self, slot: usize) -> Result<(), ShadowViolation> {
         match self.slots.get_mut(slot).and_then(Option::take) {
             Some(blocks) => {
                 for b in blocks {
-                    self.owner.remove(&b);
+                    if self.owner.get(&b) == Some(&slot) {
+                        self.owner.remove(&b);
+                    } else {
+                        match self.shared.get_mut(&b) {
+                            Some(r) if *r > 0 => *r -= 1,
+                            _ => return Err(ShadowViolation::RefcountUnderflow { block: b }),
+                        }
+                    }
                 }
                 Ok(())
             }
             None => Err(ShadowViolation::DoubleFree { slot }),
+        }
+    }
+
+    /// Mirror a publish: `blocks` move from exclusive ownership by
+    /// `slot` into the shared map with one ref (the publisher's pin).
+    pub fn on_publish(&mut self, slot: usize, blocks: &[u32]) -> Result<(), ShadowViolation> {
+        for &b in blocks {
+            match self.owner.get(&b) {
+                Some(&o) if o == slot => {
+                    self.owner.remove(&b);
+                    self.shared.insert(b, 1);
+                }
+                Some(&other) => {
+                    return Err(ShadowViolation::AliasedGrant { block: b, slot, other })
+                }
+                None => return Err(ShadowViolation::RefcountUnderflow { block: b }),
+            }
+        }
+        Ok(())
+    }
+
+    /// Mirror a pin (cache adoption or preemption re-pin).
+    pub fn on_acquire(&mut self, blocks: &[u32]) -> Result<(), ShadowViolation> {
+        for &b in blocks {
+            match self.shared.get_mut(&b) {
+                Some(r) => *r += 1,
+                None => return Err(ShadowViolation::RefcountUnderflow { block: b }),
+            }
+        }
+        Ok(())
+    }
+
+    /// Mirror a pin release (cancel-before-admission or COW deref).
+    pub fn on_release(&mut self, blocks: &[u32]) -> Result<(), ShadowViolation> {
+        for &b in blocks {
+            match self.shared.get_mut(&b) {
+                Some(r) if *r > 0 => *r -= 1,
+                _ => return Err(ShadowViolation::RefcountUnderflow { block: b }),
+            }
+        }
+        Ok(())
+    }
+
+    /// Mirror an eviction: only zero-ref shared blocks may leave.
+    pub fn on_evict(&mut self, blocks: &[u32]) -> Result<(), ShadowViolation> {
+        for &b in blocks {
+            match self.shared.get(&b) {
+                Some(&0) => {
+                    self.shared.remove(&b);
+                }
+                Some(&refs) => return Err(ShadowViolation::PrematureEvict { block: b, refs }),
+                None => return Err(ShadowViolation::RefcountUnderflow { block: b }),
+            }
+        }
+        Ok(())
+    }
+
+    /// Mirror a copy-on-write: `slot`'s table index `idx` swaps the
+    /// shared block `old` for the freshly-owned copy `new`, dropping the
+    /// pin on `old`.
+    pub fn on_cow(
+        &mut self,
+        slot: usize,
+        idx: usize,
+        old: u32,
+        new: u32,
+    ) -> Result<(), ShadowViolation> {
+        if let Some(&other) = self.owner.get(&new) {
+            return Err(ShadowViolation::AliasedGrant { block: new, slot, other });
+        }
+        let Some(table) = self.slots.get_mut(slot).and_then(|s| s.as_mut()) else {
+            return Err(ShadowViolation::DeadSlotWrite { slot });
+        };
+        match table.get_mut(idx) {
+            Some(entry) if *entry == old => *entry = new,
+            _ => {
+                return Err(ShadowViolation::CrossSequenceAlias {
+                    slot,
+                    pos: idx,
+                    block: old,
+                    owner: self.owner.get(&old).copied(),
+                })
+            }
+        }
+        self.owner.insert(new, slot);
+        match self.shared.get_mut(&old) {
+            Some(r) if *r > 0 => {
+                *r -= 1;
+                Ok(())
+            }
+            _ => Err(ShadowViolation::RefcountUnderflow { block: old }),
         }
     }
 
@@ -248,6 +415,9 @@ impl ShadowArena {
         };
         match block {
             Some(b) if b == granted && self.owner.get(&b) == Some(&slot) => Ok(()),
+            Some(b) if b == granted && self.shared.contains_key(&b) => {
+                Err(ShadowViolation::SharedBlockWrite { slot, pos, block: b })
+            }
             Some(b) => Err(ShadowViolation::CrossSequenceAlias {
                 slot,
                 pos,
@@ -259,13 +429,16 @@ impl ShadowArena {
     }
 
     /// At retire, every sequence must have been freed and every block
-    /// returned.
+    /// returned or parked zero-ref in the cache.  Zero-ref cached blocks
+    /// are *not* a leak (they are the cache's working set); a shared
+    /// block still pinned at quiescence is.
     pub fn check_quiescent(&self) -> Result<(), ShadowViolation> {
         let live = self.slots.iter().filter(|s| s.is_some()).count();
-        if live > 0 || !self.owner.is_empty() {
+        let pinned = self.shared.values().filter(|&&r| r > 0).count();
+        if live > 0 || !self.owner.is_empty() || pinned > 0 {
             return Err(ShadowViolation::LeakAtRetire {
                 live_slots: live,
-                owned_blocks: self.owner.len(),
+                owned_blocks: self.owner.len() + pinned,
             });
         }
         Ok(())
@@ -298,6 +471,19 @@ impl KvSlot {
 struct Seq {
     /// Physical pool block per logical token block (eagerly reserved).
     blocks: Vec<u32>,
+    /// The leading blocks adopted from the prefix cache (a subset of
+    /// `blocks`): this sequence holds one index pin per entry and must
+    /// never write through them — copy-on-write swaps a block out of
+    /// this set.  Empty on the non-cached path.
+    adopted: Vec<u32>,
+}
+
+impl Seq {
+    /// Blocks granted fresh to this sequence (its own reservation, the
+    /// unit both `in_use_blocks` and the scheduler count).
+    fn fresh_blocks(&self) -> usize {
+        self.blocks.len() - self.adopted.len()
+    }
 }
 
 /// The worker-owned block pool + per-sequence block tables, optionally
@@ -305,6 +491,23 @@ struct Seq {
 /// (DESIGN.md §9/§11: the engine sizes the pool in blocks and admits a
 /// session only while [`try_alloc_seq`](Self::try_alloc_seq) can grant
 /// its whole reservation).
+///
+/// # Accounting model
+///
+/// Every physical block is in exactly one bucket:
+///
+/// - **free** — on `free_blocks`, grantable;
+/// - **exclusive** — fresh-granted to one live sequence; the sum of
+///   these is [`blocks_in_use`](Self::blocks_in_use), which the engine
+///   asserts equal to the scheduler's reservation ledger;
+/// - **cache** — published into the attached [`PrefixIndex`] and no
+///   longer owned by a live sequence: pinned while adopters hold refs,
+///   evictable (and counted by [`available`](Self::available) as
+///   reclaimable) once refs drop to zero.
+///
+/// Adoption never moves a block between buckets — a cache hit shrinks
+/// the *fresh* reservation a session needs, which is exactly how the
+/// scheduler's `need` estimate sees the cache.
 #[derive(Debug)]
 pub struct KvArena {
     geo: KvGeometry,
@@ -319,6 +522,9 @@ pub struct KvArena {
     seqs: Vec<Option<Seq>>,
     free_slots: Vec<usize>,
     stats: CopyStats,
+    /// The shared prefix-cache index (DESIGN.md §15); `None` = caching
+    /// off, every path degenerates to the plain block-table arena.
+    prefix: Option<Arc<Mutex<PrefixIndex>>>,
     /// Shadow accounting mirrored on every alloc/free/write (DESIGN.md
     /// §12); absent from release serving builds.
     #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
@@ -340,6 +546,7 @@ impl KvArena {
             seqs: Vec::new(),
             free_slots: Vec::new(),
             stats: CopyStats::default(),
+            prefix: None,
             #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
             shadow: ShadowArena::default(),
         }
@@ -349,6 +556,24 @@ impl KvArena {
     /// substrate for KV-pressure-aware admission.
     pub fn with_block_capacity(geo: KvGeometry, blocks: usize) -> KvArena {
         KvArena { cap_blocks: Some(blocks.max(1)), ..KvArena::new(geo) }
+    }
+
+    /// Attach a shared prefix-cache index: publishes, adoptions, COW and
+    /// eviction all go through it from here on.  The index's block size
+    /// must match this geometry's `block_tokens` (hashes are computed
+    /// over that granularity).
+    pub fn attach_prefix_index(&mut self, ix: Arc<Mutex<PrefixIndex>>) {
+        debug_assert_eq!(
+            lock_prefix(&ix).block_tokens(),
+            self.geo.block_tokens,
+            "prefix index block size must match the arena geometry"
+        );
+        self.prefix = Some(ix);
+    }
+
+    /// Whether a prefix-cache index is attached.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
     }
 
     pub fn geometry(&self) -> KvGeometry {
@@ -377,20 +602,51 @@ impl KvArena {
 
     /// Blocks an admission decision may still claim right now.  Unbounded
     /// arenas report `usize::MAX` (the scheduler clamps with its own
-    /// in-flight cap).
+    /// in-flight cap).  With a prefix cache attached, capacity held by
+    /// *pinned* owner-dead cache blocks (adopters alive, publisher gone)
+    /// is subtracted — zero-ref cached blocks still count as available
+    /// because [`grab_block`](Self::try_alloc_seq) reclaims them LRU-first
+    /// on demand.
     pub fn available(&self) -> usize {
-        match self.cap_blocks {
-            Some(cap) => cap.saturating_sub(self.in_use_blocks),
-            None => usize::MAX,
-        }
+        let Some(cap) = self.cap_blocks else { return usize::MAX };
+        let pinned_dead = match &self.prefix {
+            Some(ix) => lock_prefix(ix).pinned_dead(),
+            None => 0,
+        };
+        cap.saturating_sub(self.in_use_blocks).saturating_sub(pinned_dead)
     }
 
     pub fn stats(&self) -> CopyStats {
         self.stats
     }
 
+    /// Evict up to `max` zero-ref cached blocks back onto the free list
+    /// (LRU-first), mirroring the shadow.  Returns how many were
+    /// reclaimed.
+    fn reclaim_cached(&mut self, max: usize) -> usize {
+        let Some(ix) = self.prefix.clone() else { return 0 };
+        let evicted = lock_prefix(&ix).evict_lru(max);
+        if evicted.is_empty() {
+            return 0;
+        }
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_evict(&evicted));
+        crate::obs_count!("kv_prefix_evictions_total", evicted.len());
+        let n = evicted.len();
+        self.free_blocks.extend(evicted);
+        n
+    }
+
     fn grab_block(&mut self) -> u32 {
         let elems = self.geo.block_elems();
+        // under cache pressure the pool can be fully materialized while
+        // zero-ref cached blocks hold the capacity — reclaim before
+        // growing past the cap
+        if self.free_blocks.is_empty()
+            && self.cap_blocks.is_some_and(|cap| self.pool_blocks >= cap)
+        {
+            self.reclaim_cached(1);
+        }
         match self.free_blocks.pop() {
             Some(b) => {
                 let at = b as usize * elems;
@@ -407,18 +663,9 @@ impl KvArena {
         }
     }
 
-    /// Reserve a sequence backed by `n_blocks` zeroed blocks, or `None`
-    /// when the pool cannot grant the whole reservation — the
-    /// block-level admission-control primitive.
-    pub fn try_alloc_seq(&mut self, n_blocks: usize) -> Option<KvSlot> {
-        let n_blocks = n_blocks.max(1);
-        if self.available() < n_blocks {
-            return None;
-        }
-        let blocks: Vec<u32> = (0..n_blocks).map(|_| self.grab_block()).collect();
-        self.in_use_blocks += n_blocks;
-        let seq = Seq { blocks };
-        let id = match self.free_slots.pop() {
+    /// Park `seq` in a slot (recycling freed slot ids) and return it.
+    fn install_seq(&mut self, seq: Seq) -> usize {
+        match self.free_slots.pop() {
             Some(i) => {
                 self.seqs[i] = Some(seq);
                 i
@@ -427,14 +674,36 @@ impl KvArena {
                 self.seqs.push(Some(seq));
                 self.seqs.len() - 1
             }
-        };
+        }
+    }
+
+    /// Reserve a sequence backed by `n_blocks` zeroed blocks, or `None`
+    /// when the pool cannot grant the whole reservation — the
+    /// block-level admission-control primitive.
+    pub fn try_alloc_seq(&mut self, n_blocks: usize) -> Option<KvSlot> {
+        self.try_alloc_seq_shared(&[], n_blocks)
+    }
+
+    /// Cache-aware [`try_alloc_seq`](Self::try_alloc_seq): the sequence's
+    /// table opens with the already-pinned `adopted` cache blocks (from
+    /// [`acquire_prefix`](Self::acquire_prefix)) followed by `n_fresh`
+    /// zeroed fresh blocks.  Only the fresh tail counts against
+    /// availability and `blocks_in_use` — the adopted blocks stay in the
+    /// cache bucket, pinned by the refs taken at acquire time.
+    pub fn try_alloc_seq_shared(&mut self, adopted: &[u32], n_fresh: usize) -> Option<KvSlot> {
+        let n_fresh = n_fresh.max(1);
+        if self.available() < n_fresh {
+            return None;
+        }
+        let fresh: Vec<u32> = (0..n_fresh).map(|_| self.grab_block()).collect();
+        self.in_use_blocks += n_fresh;
+        let mut blocks = adopted.to_vec();
+        blocks.extend_from_slice(&fresh);
+        let id = self.install_seq(Seq { blocks, adopted: adopted.to_vec() });
         #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
-        enforce(self.shadow.on_alloc(
-            id,
-            self.seqs[id].as_ref().map_or(&[][..], |s| &s.blocks),
-        ));
-        crate::obs_count!("kv_block_allocs_total", n_blocks);
-        crate::obs_event!("kv_alloc", "slot" => id, "blocks" => n_blocks);
+        enforce(self.shadow.on_alloc_shared(id, adopted, &fresh));
+        crate::obs_count!("kv_block_allocs_total", n_fresh);
+        crate::obs_event!("kv_alloc", "slot" => id, "blocks" => n_fresh);
         self.publish_gauges();
         Some(KvSlot(id))
     }
@@ -452,6 +721,9 @@ impl KvArena {
             None => self.free_blocks.len(),
         };
         crate::obs_gauge!("kv_free_blocks", free);
+        if let Some(ix) = &self.prefix {
+            crate::obs_gauge!("kv_prefix_cached_blocks", lock_prefix(ix).len());
+        }
     }
 
     /// Adopt a legacy `(L, 1, H, S, dh)` cache slab pair by copying it
@@ -497,18 +769,151 @@ impl KvArena {
         Ok(slot)
     }
 
-    /// Return a sequence's blocks to the pool.
+    /// Return a sequence's blocks to the pool.  Adopted blocks drop
+    /// their cache pin instead of hitting the free list; fresh blocks
+    /// that were published stay parked in the cache (owner now dead);
+    /// everything else is recycled.  The owner-dead retention cap is
+    /// enforced afterwards, so a bounded cache sheds its LRU overflow
+    /// here.
     pub fn free(&mut self, slot: KvSlot) {
         #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
         enforce(self.shadow.on_free(slot.0));
         // fa2lint: allow(no-hotpath-panic) -- double free is unrecoverable accounting corruption; the sanitizer reports it first in debug builds
         let seq = self.seqs[slot.0].take().expect("double free of kv slot");
-        self.in_use_blocks -= seq.blocks.len();
-        crate::obs_count!("kv_block_frees_total", seq.blocks.len());
-        crate::obs_event!("kv_free", "slot" => slot.0, "blocks" => seq.blocks.len());
-        self.free_blocks.extend(seq.blocks);
+        let fresh = seq.fresh_blocks();
+        self.in_use_blocks -= fresh;
+        crate::obs_count!("kv_block_frees_total", fresh);
+        crate::obs_event!("kv_free", "slot" => slot.0, "blocks" => fresh);
+        match self.prefix.clone() {
+            Some(ix) => {
+                let mut g = lock_prefix(&ix);
+                for &b in &seq.blocks {
+                    if seq.adopted.contains(&b) {
+                        g.release_block(b);
+                    } else if !g.owner_free(b) {
+                        self.free_blocks.push(b);
+                    }
+                }
+                let evicted = g.enforce_cap();
+                drop(g);
+                if !evicted.is_empty() {
+                    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+                    enforce(self.shadow.on_evict(&evicted));
+                    crate::obs_count!("kv_prefix_evictions_total", evicted.len());
+                    self.free_blocks.extend(evicted);
+                }
+            }
+            None => self.free_blocks.extend(seq.blocks),
+        }
         self.free_slots.push(slot.0);
         self.publish_gauges();
+    }
+
+    /// Pin and adopt every leading full prompt block already in the
+    /// cache, capped so at least the final prompt token is always
+    /// replayed (the model needs it to produce first-token logits, and
+    /// the cap guarantees the serving path never writes into an adopted
+    /// shared block).  Returns `(adopted physical blocks, cached token
+    /// count)` — pass the blocks to
+    /// [`try_alloc_seq_shared`](Self::try_alloc_seq_shared), or return
+    /// them through [`release_prefix_blocks`](Self::release_prefix_blocks)
+    /// if the session dies before admission.
+    pub fn acquire_prefix(&mut self, prompt: &[i32]) -> (Vec<u32>, usize) {
+        let Some(ix) = self.prefix.clone() else { return (Vec::new(), 0) };
+        let bt = self.geo.block_tokens;
+        let cap = prompt.len().saturating_sub(1) / bt;
+        let full = (prompt.len() / bt).min(cap);
+        let adopted = lock_prefix(&ix).acquire(prompt, cap);
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_acquire(&adopted));
+        crate::obs_count!("kv_prefix_hits_total", adopted.len());
+        crate::obs_count!("kv_prefix_misses_total", full - adopted.len());
+        crate::obs_count!("kv_prefix_cached_tokens_total", adopted.len() * bt);
+        let cached_tokens = adopted.len() * bt;
+        self.publish_gauges();
+        (adopted, cached_tokens)
+    }
+
+    /// Re-pin already-adopted blocks by physical id — the preemption
+    /// path: pin *before* freeing the slot so the refs never touch zero
+    /// and the blocks cannot be evicted in between.
+    pub fn acquire_prefix_blocks(&mut self, blocks: &[u32]) {
+        if blocks.is_empty() {
+            return;
+        }
+        let Some(ix) = self.prefix.clone() else { return };
+        lock_prefix(&ix).acquire_blocks(blocks);
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_acquire(blocks));
+    }
+
+    /// Drop pins taken by [`acquire_prefix`](Self::acquire_prefix) for a
+    /// session that never reached admission (cancelled while pending).
+    pub fn release_prefix_blocks(&mut self, blocks: &[u32]) {
+        if blocks.is_empty() {
+            return;
+        }
+        let Some(ix) = self.prefix.clone() else { return };
+        lock_prefix(&ix).release_blocks(blocks);
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_release(blocks));
+        self.publish_gauges();
+    }
+
+    /// Publish this sequence's fully-prefilled prompt blocks into the
+    /// cache (every complete `block_tokens` block of `prompt`).  Called
+    /// once per sequence, after prefill wrote all prompt rows — from
+    /// here on those blocks are immutable (decode writes start past the
+    /// prompt).  Hashes already published by another sequence are
+    /// skipped.  Returns how many blocks this call registered.
+    pub fn publish_prefix(&mut self, slot: KvSlot, prompt: &[i32]) -> usize {
+        let Some(ix) = self.prefix.clone() else { return 0 };
+        let blocks = self.table(slot).to_vec();
+        let registered = lock_prefix(&ix).publish(prompt, &blocks);
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_publish(slot.0, &registered));
+        self.publish_gauges();
+        registered.len()
+    }
+
+    /// Copy-on-write guard: if `pos` resolves to a shared (cache
+    /// registered) block in `slot`'s table, copy it into a fresh
+    /// exclusive block, swap the table entry, and drop the pin on the
+    /// original.  Returns true when a copy was taken.  The adoption cap
+    /// in [`acquire_prefix`](Self::acquire_prefix) keeps the serving
+    /// path from ever needing this, but the engine calls it defensively
+    /// before every row write, and divergent-write tests drive it
+    /// directly.
+    pub fn ensure_writable(&mut self, slot: KvSlot, pos: usize) -> bool {
+        let Some(ix) = self.prefix.clone() else { return false };
+        let idx = pos / self.geo.block_tokens;
+        let old = match self.seqs[slot.0].as_ref().and_then(|s| s.blocks.get(idx)) {
+            Some(&b) => b,
+            None => return false,
+        };
+        if !lock_prefix(&ix).contains_block(old) {
+            return false;
+        }
+        let fresh = self.grab_block();
+        let elems = self.geo.block_elems();
+        let (src, dst) = (old as usize * elems, fresh as usize * elems);
+        self.k.copy_within(src..src + elems, dst);
+        self.v.copy_within(src..src + elems, dst);
+        if let Some(seq) = self.seqs[slot.0].as_mut() {
+            seq.blocks[idx] = fresh;
+            seq.adopted.retain(|&b| b != old);
+        }
+        self.in_use_blocks += 1;
+        {
+            let mut g = lock_prefix(&ix);
+            g.release_block(old);
+            g.note_cow();
+        }
+        #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+        enforce(self.shadow.on_cow(slot.0, idx, old, fresh));
+        crate::obs_count!("kv_prefix_cow_total", 1);
+        self.publish_gauges();
+        true
     }
 
     /// This sequence's block table (physical block per logical block).
@@ -564,6 +969,25 @@ impl KvArena {
         }
     }
 
+    /// Test hook: zero a shared block's refcount in the *real* index
+    /// WITHOUT telling the shadow — a subsequent eviction pass must be
+    /// caught as a premature evict of a still-pinned block.  Sanitizer
+    /// builds only; exists so the refcount detector is itself testable.
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    pub fn corrupt_prefix_refs_for_test(&mut self, block: u32) -> bool {
+        match self.prefix.clone() {
+            Some(ix) => lock_prefix(&ix).corrupt_refs_for_test(block),
+            None => false,
+        }
+    }
+
+    /// Test hook: force up to `max` LRU evictions through the shadow
+    /// mirror, as allocation pressure would.  Sanitizer builds only.
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    pub fn evict_cached_for_test(&mut self, max: usize) -> usize {
+        self.reclaim_cached(max)
+    }
+
     /// Assemble this sequence's legacy `(L, 1, H, S, dh)` slab pair
     /// (zeros beyond its reservation) — a test/bench convenience, not a
     /// serving path; the bytes are not counted as gather traffic.
@@ -600,6 +1024,15 @@ impl KvArena {
 /// Mutable paged access to one sequence: append rows in place, and hand
 /// the attention kernel a [`KvLayout::Paged`] view of any (layer, head)
 /// plane.  This is the zero-copy native decode seam.
+///
+/// With prefix caching on, a sequence's leading table entries may
+/// resolve to *shared* cache blocks.  Reading them (through
+/// [`layout`](Self::layout)) is always safe — that is the point of
+/// adoption — but [`write_row`](Self::write_row) into one is a
+/// [`ShadowViolation::SharedBlockWrite`]: callers must run
+/// [`KvArena::ensure_writable`] (copy-on-write) on the position first.
+/// The engine's adoption cap keeps serving writes out of shared blocks
+/// by construction.
 pub struct PagedKvMut<'a> {
     pub geo: KvGeometry,
     k: &'a mut [f32],
@@ -985,6 +1418,141 @@ mod tests {
         assert_eq!(a.stats(), CopyStats::default());
         assert_eq!(a.stats().total_bytes(), 0);
     }
+
+    // --- prefix cache over the arena (DESIGN.md §15) ---
+
+    fn cached_arena(cap: usize) -> KvArena {
+        let mut a = KvArena::with_block_capacity(geo(), cap);
+        a.attach_prefix_index(Arc::new(Mutex::new(PrefixIndex::new(
+            geo().block_tokens,
+            0,
+        ))));
+        a
+    }
+
+    /// Prefill both blocks of `slot` with rows derived from `base`.
+    fn fill_rows(a: &mut KvArena, slot: KvSlot, base: f32) {
+        let mut p = a.paged_mut(slot);
+        for pos in 0..4 {
+            for l in 0..2 {
+                let x = base + 10.0 * pos as f32 + l as f32;
+                p.write_row(l, 0, pos, &[x, x + 1.0], &[x + 2.0, x + 3.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn adoption_shares_published_blocks_and_shrinks_fresh_need() {
+        let mut a = cached_arena(8);
+        let prompt = [1, 2, 3, 4];
+        let s0 = a.try_alloc_seq(2).unwrap();
+        fill_rows(&mut a, s0, 0.0);
+        assert_eq!(a.publish_prefix(s0, &prompt), 2, "both full blocks published");
+        let s0_table = a.table(s0).to_vec();
+        a.free(s0);
+        // publisher gone; the blocks are parked zero-ref in the cache
+        assert_eq!(a.blocks_in_use(), 0);
+
+        // same prompt + decode headroom: adoption is capped below the
+        // last prompt token -> 1 of 2 blocks adopted
+        let (adopted, cached_tokens) = a.acquire_prefix(&prompt);
+        assert_eq!(adopted, vec![s0_table[0]], "adopts the first published block");
+        assert_eq!(cached_tokens, 2);
+        let before = a.blocks_in_use();
+        let s1 = a.try_alloc_seq_shared(&adopted, 1).unwrap();
+        // strictly fewer fresh blocks than a cold session would take
+        assert_eq!(a.blocks_in_use() - before, 1);
+        assert_eq!(a.table(s1).len(), 2, "adopted + fresh spans the window");
+        // the adopted block really is s0's bytes: layer 1 rows 0..2
+        {
+            let p = a.paged_mut(s1);
+            let lay = p.layout(1, 0);
+            let (k01, _) = lay.rows(0, 2, 2);
+            assert_eq!(k01, &[1.0, 2.0, 11.0, 12.0], "shared block holds s0's prefill");
+        }
+        a.free(s1);
+    }
+
+    #[test]
+    fn cow_copies_shared_block_and_drops_the_pin() {
+        let mut a = cached_arena(8);
+        let prompt = [1, 2, 3, 4];
+        let s0 = a.try_alloc_seq(2).unwrap();
+        fill_rows(&mut a, s0, 0.0);
+        a.publish_prefix(s0, &prompt);
+        a.free(s0);
+        let (adopted, _) = a.acquire_prefix(&prompt);
+        assert_eq!(adopted.len(), 1);
+        let s1 = a.try_alloc_seq_shared(&adopted, 1).unwrap();
+        let shared_block = a.table(s1)[0];
+        // divergence: the session wants to overwrite token 0
+        assert!(a.ensure_writable(s1, 0), "write into a shared block must COW");
+        let private = a.table(s1)[0];
+        assert_ne!(private, shared_block, "table entry swapped to a private copy");
+        // the copy carries the bytes, and is now writable without a trip
+        {
+            let mut p = a.paged_mut(s1);
+            let (k01, _) = p.layout(1, 0).rows(0, 2, 2);
+            assert_eq!(k01, &[1.0, 2.0, 11.0, 12.0], "COW preserved the contents");
+            p.write_row(1, 0, 0, &[9.0, 9.0], &[9.0, 9.0]);
+        }
+        assert!(!a.ensure_writable(s1, 0), "already private: no second copy");
+        // the COW grant is accounted: 1 adopted pin dropped, 2 fresh held
+        assert_eq!(a.blocks_in_use(), 2);
+        a.free(s1);
+        assert_eq!(a.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn allocation_pressure_evicts_only_unpinned_cache_blocks() {
+        let mut a = cached_arena(4);
+        let prompt = [1, 2, 3, 4];
+        let s0 = a.try_alloc_seq(2).unwrap();
+        fill_rows(&mut a, s0, 0.0);
+        a.publish_prefix(s0, &prompt);
+        a.free(s0);
+        // adopt block 0 (pinning it); block 1 stays zero-ref cached
+        let (adopted, _) = a.acquire_prefix(&prompt);
+        let s1 = a.try_alloc_seq_shared(&adopted, 1).unwrap();
+        // in_use = 1 fresh, 1 pinned cache block, 1 evictable, 1 free:
+        // available counts the evictable block but not the pinned one
+        assert_eq!(a.available(), 2);
+        // demanding both remaining blocks forces the LRU eviction of the
+        // unpinned cached block; the pinned one must survive
+        let s2 = a.try_alloc_seq(2).expect("eviction reclaims the zero-ref block");
+        assert_eq!(a.available(), 0);
+        let pinned = a.table(s1)[0];
+        assert!(
+            !a.table(s2).contains(&pinned),
+            "pinned shared block must never be re-granted"
+        );
+        // and the shared bytes are still intact
+        {
+            let p = a.paged_mut(s1);
+            let (k01, _) = p.layout(0, 0).rows(0, 2, 2);
+            assert_eq!(k01, &[0.0, 1.0, 10.0, 11.0]);
+        }
+        a.free(s1);
+        a.free(s2);
+    }
+
+    #[test]
+    fn cancel_before_admission_releases_pins() {
+        let mut a = cached_arena(4);
+        let prompt = [1, 2, 3, 4];
+        let s0 = a.try_alloc_seq(2).unwrap();
+        fill_rows(&mut a, s0, 0.0);
+        a.publish_prefix(s0, &prompt);
+        a.free(s0);
+        let (adopted, _) = a.acquire_prefix(&prompt);
+        assert_eq!(adopted.len(), 1);
+        // the session dies before try_alloc_seq_shared
+        a.release_prefix_blocks(&adopted);
+        // both cached blocks are zero-ref again: a full-pool claim works
+        assert_eq!(a.available(), 4);
+        let s = a.try_alloc_seq(4).expect("released pins make the pool reclaimable");
+        a.free(s);
+    }
 }
 
 /// Sanitizer tests: drive the pure [`ShadowArena`] state machine, then
@@ -1129,5 +1697,110 @@ mod sanitizer_tests {
         a.free(s1);
         a.free(s2);
         a.check_quiescent();
+    }
+
+    // --- refcounted sharing: the generalized state machine ---
+
+    #[test]
+    fn shadow_detects_shared_block_write() {
+        let mut s = ShadowArena::default();
+        s.on_alloc(0, &[3, 4]).unwrap();
+        s.on_publish(0, &[3]).unwrap();
+        // slot 0's table still maps idx 0 -> block 3, but 3 is shared now
+        assert_eq!(
+            s.check_write(0, 0, 0, Some(3)),
+            Err(ShadowViolation::SharedBlockWrite { slot: 0, pos: 0, block: 3 })
+        );
+        // the exclusive block stays writable
+        s.check_write(0, 2, 1, Some(4)).unwrap();
+    }
+
+    #[test]
+    fn shadow_detects_refcount_underflow_and_premature_evict() {
+        let mut s = ShadowArena::default();
+        s.on_alloc(0, &[3]).unwrap();
+        s.on_publish(0, &[3]).unwrap();
+        s.on_acquire(&[3]).unwrap(); // an adopter pins: refs = 2
+        assert_eq!(
+            s.on_evict(&[3]),
+            Err(ShadowViolation::PrematureEvict { block: 3, refs: 2 })
+        );
+        s.on_release(&[3]).unwrap();
+        s.on_free(0).unwrap(); // publisher's pin: refs = 0
+        assert_eq!(
+            s.on_release(&[3]),
+            Err(ShadowViolation::RefcountUnderflow { block: 3 })
+        );
+        s.on_evict(&[3]).unwrap();
+        assert_eq!(
+            s.on_acquire(&[3]),
+            Err(ShadowViolation::RefcountUnderflow { block: 3 })
+        );
+        s.check_quiescent().unwrap();
+    }
+
+    #[test]
+    fn shadow_cow_transfers_ownership_and_drops_the_pin() {
+        let mut s = ShadowArena::default();
+        s.on_alloc(0, &[3]).unwrap();
+        s.on_publish(0, &[3]).unwrap();
+        s.on_acquire(&[3]).unwrap();
+        s.on_alloc_shared(1, &[3], &[7]).unwrap();
+        // slot 1 diverges at idx 0: block 3 -> private copy 9
+        s.on_cow(1, 0, 3, 9).unwrap();
+        s.check_write(1, 0, 0, Some(9)).unwrap();
+        s.on_free(1).unwrap(); // releases 9 (owned) and 7; 3's pin went at COW
+        s.on_free(0).unwrap();
+        s.on_evict(&[3]).unwrap();
+        s.check_quiescent().unwrap();
+    }
+
+    #[test]
+    fn shadow_quiescence_tolerates_zero_ref_cache_but_not_pins() {
+        let mut s = ShadowArena::default();
+        s.on_alloc(0, &[3]).unwrap();
+        s.on_publish(0, &[3]).unwrap();
+        s.on_acquire(&[3]).unwrap();
+        s.on_free(0).unwrap();
+        // an adopter pin outlives every sequence: that is a leak
+        assert_eq!(
+            s.check_quiescent(),
+            Err(ShadowViolation::LeakAtRetire { live_slots: 0, owned_blocks: 1 })
+        );
+        s.on_release(&[3]).unwrap();
+        // zero-ref cached block: the cache's working set, not a leak
+        s.check_quiescent().unwrap();
+    }
+
+    // --- injected refcount corruption through the real arena ---
+
+    #[test]
+    fn arena_premature_evict_of_pinned_block_aborts() {
+        use std::sync::{Arc, Mutex};
+        let mut a = KvArena::with_block_capacity(geo(), 4);
+        a.attach_prefix_index(Arc::new(Mutex::new(PrefixIndex::new(
+            geo().block_tokens,
+            0,
+        ))));
+        let prompt = [1, 2, 3, 4];
+        let s0 = a.try_alloc_seq(2).unwrap();
+        {
+            let mut p = a.paged_mut(s0);
+            for pos in 0..4 {
+                p.write_row(0, 0, pos, &[1.0, 2.0], &[3.0, 4.0]);
+            }
+        }
+        a.publish_prefix(s0, &prompt);
+        a.free(s0);
+        let (adopted, _) = a.acquire_prefix(&prompt);
+        assert_eq!(adopted.len(), 1, "one block pinned");
+        // zero the real refcount behind the shadow's back: the pinned
+        // block now looks evictable to the index
+        assert!(a.corrupt_prefix_refs_for_test(adopted[0]));
+        let msg = panic_message(AssertUnwindSafe(|| {
+            a.evict_cached_for_test(4);
+        }));
+        assert!(msg.contains("kv-sanitizer"), "{msg}");
+        assert!(msg.contains("premature evict"), "{msg}");
     }
 }

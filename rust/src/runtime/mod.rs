@@ -10,14 +10,16 @@
 //! The runtime loads each module once, caches the executable, and
 //! exchanges host tensors with the backend.  Serving additions (DESIGN.md
 //! §8): `bundle` discovers a model's serving set from the manifest by
-//! typed query, and `kv` provides the zero-copy KV arena behind the
-//! widened `Module::decode_step` seam.
+//! typed query, `kv` provides the zero-copy KV arena behind the widened
+//! `Module::decode_step` seam, and `prefix` adds the refcounted
+//! prefix-cache index the arena shares KV blocks through (DESIGN.md §15).
 
 pub mod artifact;
 pub mod backend;
 pub mod bundle;
 pub mod kv;
 pub mod native;
+pub mod prefix;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -32,6 +34,7 @@ pub use backend::{Backend, BackendKind, ExecTiming, GoldenCase, Module};
 pub use bundle::{DecodeBuckets, ModelBundle, ServeShapes};
 pub use kv::{CopyStats, KvArena, KvBatchView, KvGeometry, KvSlot, PagedKvMut, DEFAULT_KV_BLOCK};
 pub use native::NativeBackend;
+pub use prefix::{PrefixIndex, PrefixStats};
 
 /// Backend construction knobs that are not artifact-derivable — today the
 /// native backend's GQA/window model configuration (`model.n_kv_heads`,

@@ -1,0 +1,429 @@
+//! Prefix-cache index over the paged KV arena (DESIGN.md §15).
+//!
+//! Maps *chain hashes* of fixed-size prompt token blocks to the physical
+//! KV blocks that already hold their keys/values, so a new session can
+//! adopt every full block it shares with a live or recently-retired
+//! prefix instead of recomputing prefill.  The index is pure bookkeeping:
+//! it never touches KV bytes and never allocates or frees pool blocks
+//! itself — [`KvArena`](super::kv::KvArena) drives it and moves the
+//! physical blocks between its free list and the cache.
+//!
+//! Entry lifecycle (the §15 refcount state machine):
+//!
+//! ```text
+//! free ──publish──▶ cached(owner live, refs=1)
+//!                      │ acquire            ▲ release
+//!                      ▼                    │
+//!                   shared(refs>1) ─────────┘
+//!                      │ owner_free (refs-=1, owner dead)
+//!                      ▼
+//!                   cached(owner dead) ──refs=0──▶ evictable ──evict──▶ free
+//!                      │ cow (divergent write on an adopter's copy)
+//!                      ▼
+//!                   release_block on the shared original
+//! ```
+//!
+//! Invariants the [`ShadowArena`](super::kv::ShadowArena) sanitizer
+//! cross-checks: a registered block is never written through a serving
+//! sequence's table (adoption is capped below the last prompt token, and
+//! copy-on-write swaps in a private copy first), refcounts never
+//! underflow, and eviction only ever takes `refs == 0` entries.
+
+use std::collections::HashMap;
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Chain hash of one prompt block: FNV-1a over the parent block's hash
+/// followed by this block's token bytes.  Folding the parent in makes a
+/// block's identity its content *and* its position in the prompt — the
+/// same 16 tokens after a different prefix hash differently, so a hash
+/// hit implies the whole leading prompt matches byte-for-byte.
+pub fn hash_block(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in parent.to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Chain hashes for every *complete* `block_tokens`-sized block of
+/// `tokens`, in order.  The tail partial block (if any) has no hash — it
+/// is never cacheable.
+pub fn chain_hashes(tokens: &[i32], block_tokens: usize) -> Vec<u64> {
+    if block_tokens == 0 {
+        return Vec::new();
+    }
+    let mut hashes = Vec::with_capacity(tokens.len() / block_tokens);
+    let mut parent = 0u64;
+    for block in tokens.chunks_exact(block_tokens) {
+        parent = hash_block(parent, block);
+        hashes.push(parent);
+    }
+    hashes
+}
+
+/// One cached block: the physical pool block holding its KV rows, how
+/// many holders pin it (the publishing sequence counts as one while it
+/// lives), and its LRU position once evictable.
+#[derive(Debug)]
+struct Entry {
+    block: u32,
+    refs: usize,
+    owner_live: bool,
+    lru_tick: u64,
+}
+
+/// Monotonic cache traffic counts, for benches and the metrics report.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Full prompt blocks adopted from the cache (prefill skipped).
+    pub hit_blocks: u64,
+    /// Full prompt blocks that had to be prefilled (no cache entry).
+    pub miss_blocks: u64,
+    /// Zero-ref cached blocks evicted back to the arena free list.
+    pub evictions: u64,
+    /// Copy-on-write block copies taken on a divergent write.
+    pub cows: u64,
+}
+
+/// The refcounted hash→block index.  All methods are O(blocks touched)
+/// and panic-free (this module is on the repro-lint hot-path list).
+#[derive(Debug)]
+pub struct PrefixIndex {
+    block_tokens: usize,
+    /// Max *owner-dead* (cache-held) entries retained; 0 = unbounded.
+    cap_blocks: usize,
+    entries: HashMap<u64, Entry>,
+    by_block: HashMap<u32, u64>,
+    tick: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixIndex {
+    /// New empty index for `block_tokens`-sized blocks.  `cap_blocks`
+    /// bounds how many blocks the cache may keep alive after their
+    /// publishing sequence retired (0 = unbounded; live-referenced
+    /// entries are pinned and never count against eviction).
+    pub fn new(block_tokens: usize, cap_blocks: usize) -> PrefixIndex {
+        PrefixIndex {
+            block_tokens: block_tokens.max(1),
+            cap_blocks,
+            entries: HashMap::new(),
+            by_block: HashMap::new(),
+            tick: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Number of leading full blocks of `tokens` present in the index,
+    /// capped at `max_blocks`.  Read-only: no ref bump, no stats — the
+    /// advisory probe used by router admission.
+    pub fn probe(&self, tokens: &[i32], max_blocks: usize) -> usize {
+        let mut n = 0;
+        for h in chain_hashes(tokens, self.block_tokens).iter().take(max_blocks) {
+            if self.entries.contains_key(h) {
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        n
+    }
+
+    /// Walk the chain of `tokens` and pin (ref-bump) every leading block
+    /// already cached, up to `max_blocks`; stops at the first miss.
+    /// Returns the physical blocks adopted, in table order.  Pinned
+    /// entries cannot be evicted until [`release_blocks`](Self::release_blocks).
+    pub fn acquire(&mut self, tokens: &[i32], max_blocks: usize) -> Vec<u32> {
+        let hashes = chain_hashes(tokens, self.block_tokens);
+        let full = hashes.len().min(max_blocks);
+        let mut adopted = Vec::new();
+        for h in hashes.iter().take(max_blocks) {
+            match self.entries.get_mut(h) {
+                Some(e) => {
+                    e.refs += 1;
+                    adopted.push(e.block);
+                }
+                None => break,
+            }
+        }
+        self.stats.hit_blocks += adopted.len() as u64;
+        self.stats.miss_blocks += (full - adopted.len()) as u64;
+        adopted
+    }
+
+    /// Re-pin already-known physical blocks (the preemption path, which
+    /// must not re-walk the chain: the blocks are pinned *before* the
+    /// sequence's table is freed, so their entries are guaranteed
+    /// present).  Returns false if any block was not registered.
+    pub fn acquire_blocks(&mut self, blocks: &[u32]) -> bool {
+        let mut all = true;
+        for b in blocks {
+            match self.by_block.get(b).and_then(|h| self.entries.get_mut(h)) {
+                Some(e) => e.refs += 1,
+                None => all = false,
+            }
+        }
+        all
+    }
+
+    /// Drop one pin from each block (adopter retiring or cancelling).
+    /// Entries whose refs reach 0 stay cached but become evictable;
+    /// their LRU position is the moment of last release.
+    pub fn release_blocks(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            self.release_block(b);
+        }
+    }
+
+    /// Drop one pin from a single block (also the COW path, which
+    /// dereferences the shared original after copying it).
+    pub fn release_block(&mut self, block: u32) {
+        self.tick += 1;
+        if let Some(e) = self.by_block.get(&block).and_then(|h| self.entries.get_mut(h)) {
+            e.refs = e.refs.saturating_sub(1);
+            if e.refs == 0 {
+                e.lru_tick = self.tick;
+            }
+        }
+    }
+
+    /// Register the leading full blocks of a fully-prefilled prompt.
+    /// `blocks` is the owning sequence's table; block `i` holds prompt
+    /// positions `[i*block_tokens, (i+1)*block_tokens)`.  Hashes already
+    /// present are skipped (first publisher wins — a concurrent session
+    /// with the same prompt keeps its copies private), and the chain
+    /// stops at the first skip so every registered entry's full prefix
+    /// is also registered.  Returns the physical blocks registered (the
+    /// arena mirrors exactly these into its sanitizer shadow).
+    pub fn publish(&mut self, tokens: &[i32], blocks: &[u32]) -> Vec<u32> {
+        let hashes = chain_hashes(tokens, self.block_tokens);
+        let mut registered = Vec::new();
+        for (h, &b) in hashes.iter().zip(blocks) {
+            if self.entries.contains_key(h) {
+                continue;
+            }
+            if self.by_block.contains_key(&b) {
+                // this physical block already backs another hash — the
+                // table is inconsistent with the index; refuse quietly
+                break;
+            }
+            self.tick += 1;
+            self.entries.insert(
+                *h,
+                Entry { block: b, refs: 1, owner_live: true, lru_tick: self.tick },
+            );
+            self.by_block.insert(b, *h);
+            registered.push(b);
+        }
+        registered
+    }
+
+    /// The publishing sequence is retiring this block: drop its pin and
+    /// mark the owner dead.  Returns true if the block is registered (the
+    /// arena must then *keep it out of the free list* — the cache owns it
+    /// until eviction); false means the block was never published.
+    pub fn owner_free(&mut self, block: u32) -> bool {
+        self.tick += 1;
+        match self.by_block.get(&block).and_then(|h| self.entries.get_mut(h)) {
+            Some(e) => {
+                e.refs = e.refs.saturating_sub(1);
+                e.owner_live = false;
+                if e.refs == 0 {
+                    e.lru_tick = self.tick;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether `block` is registered (shared KV — writes must COW).
+    pub fn contains_block(&self, block: u32) -> bool {
+        self.by_block.contains_key(&block)
+    }
+
+    /// Registered entries, total.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Blocks whose publisher retired but which adopters still pin —
+    /// physically occupied, yet part of no sequence's fresh reservation.
+    pub fn pinned_dead(&self) -> usize {
+        self.entries.values().filter(|e| !e.owner_live && e.refs > 0).count()
+    }
+
+    /// Zero-ref cached blocks: reclaimable by [`evict_lru`](Self::evict_lru).
+    pub fn evictable(&self) -> usize {
+        self.entries.values().filter(|e| e.refs == 0).count()
+    }
+
+    /// Evict up to `max` zero-ref entries, least recently released
+    /// first, and return their physical blocks for the arena's free
+    /// list.  Entries with live refs are never taken.
+    pub fn evict_lru(&mut self, max: usize) -> Vec<u32> {
+        let mut victims: Vec<(u64, u64)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.refs == 0)
+            .map(|(h, e)| (e.lru_tick, *h))
+            .collect();
+        victims.sort_unstable();
+        let mut freed = Vec::new();
+        for (_, h) in victims.into_iter().take(max) {
+            if let Some(e) = self.entries.remove(&h) {
+                self.by_block.remove(&e.block);
+                freed.push(e.block);
+            }
+        }
+        self.stats.evictions += freed.len() as u64;
+        freed
+    }
+
+    /// Enforce the owner-dead retention cap: evict zero-ref LRU entries
+    /// while more than `cap_blocks` owner-dead entries remain.  Returns
+    /// the reclaimed physical blocks (empty when unbounded or within
+    /// cap).  Pinned owner-dead entries can keep the count above cap —
+    /// they are never evicted.
+    pub fn enforce_cap(&mut self) -> Vec<u32> {
+        if self.cap_blocks == 0 {
+            return Vec::new();
+        }
+        let dead = self.entries.values().filter(|e| !e.owner_live).count();
+        let over = dead.saturating_sub(self.cap_blocks);
+        self.evict_lru(over)
+    }
+
+    /// Record one copy-on-write (the arena performs the copy).
+    pub fn note_cow(&mut self) {
+        self.stats.cows += 1;
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    /// Test hook for the sanitizer suite: forcibly zero a block's
+    /// refcount so a subsequent eviction contradicts the ShadowArena's
+    /// mirror — the kv-sanitizer must catch the premature evict.
+    #[cfg(any(debug_assertions, feature = "kv-sanitizer"))]
+    pub fn corrupt_refs_for_test(&mut self, block: u32) -> bool {
+        self.tick += 1;
+        match self.by_block.get(&block).and_then(|h| self.entries.get_mut(h)) {
+            Some(e) => {
+                e.refs = 0;
+                e.owner_live = false;
+                e.lru_tick = self.tick;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_depends_on_content_and_position() {
+        let a = chain_hashes(&[1, 2, 3, 4], 2);
+        assert_eq!(a.len(), 2, "two full blocks of 2");
+        // same second block after a different first block: different hash
+        let b = chain_hashes(&[9, 9, 3, 4], 2);
+        assert_ne!(a[0], b[0]);
+        assert_ne!(a[1], b[1], "chain hash must fold in the parent");
+        // identical prompts hash identically
+        assert_eq!(a, chain_hashes(&[1, 2, 3, 4], 2));
+        // partial tail block is not hashed
+        assert_eq!(chain_hashes(&[1, 2, 3], 2).len(), 1);
+    }
+
+    #[test]
+    fn acquire_pins_longest_prefix_and_publish_is_idempotent() {
+        let mut ix = PrefixIndex::new(2, 0);
+        let prompt = [1, 2, 3, 4, 5];
+        assert_eq!(ix.publish(&prompt, &[10, 11]), vec![10, 11]);
+        // re-publish (another session, same prompt) registers nothing
+        assert_eq!(ix.publish(&prompt, &[20, 21]), Vec::<u32>::new());
+        assert_eq!(ix.len(), 2);
+
+        // shares block 0 only
+        assert_eq!(ix.probe(&[1, 2, 9, 9], 8), 1);
+        let adopted = ix.acquire(&[1, 2, 9, 9], 8);
+        assert_eq!(adopted, vec![10]);
+        // full match, capped at 1 block
+        assert_eq!(ix.acquire(&[1, 2, 3, 4], 1), vec![10]);
+        let st = ix.stats();
+        assert_eq!(st.hit_blocks, 2);
+        assert_eq!(st.miss_blocks, 1, "block [9,9] missed");
+    }
+
+    #[test]
+    fn eviction_takes_only_zero_ref_entries_in_lru_order() {
+        let mut ix = PrefixIndex::new(2, 0);
+        ix.publish(&[1, 2, 3, 4], &[10, 11]);
+        let pinned = ix.acquire(&[1, 2], 8); // pins block 10
+        assert_eq!(pinned, vec![10]);
+        // owner retires both blocks
+        assert!(ix.owner_free(10));
+        assert!(ix.owner_free(11));
+        assert_eq!(ix.pinned_dead(), 1, "10 still pinned by the adopter");
+        assert_eq!(ix.evictable(), 1);
+        // only 11 can go, no matter how many we ask for
+        assert_eq!(ix.evict_lru(8), vec![11]);
+        assert_eq!(ix.evict_lru(8), Vec::<u32>::new());
+        // adopter releases; now 10 is evictable
+        ix.release_blocks(&pinned);
+        assert_eq!(ix.evict_lru(8), vec![10]);
+        assert!(ix.is_empty());
+        assert_eq!(ix.stats().evictions, 2);
+    }
+
+    #[test]
+    fn enforce_cap_bounds_owner_dead_entries() {
+        let mut ix = PrefixIndex::new(1, 2);
+        ix.publish(&[1, 2, 3, 4], &[10, 11, 12, 13]);
+        assert!(ix.enforce_cap().is_empty(), "owner-live entries are exempt");
+        for b in [10, 11, 12, 13] {
+            assert!(ix.owner_free(b));
+        }
+        let mut evicted = ix.enforce_cap();
+        evicted.sort_unstable();
+        assert_eq!(evicted, vec![10, 11], "oldest-released evicted down to cap 2");
+        assert_eq!(ix.len(), 2);
+    }
+
+    #[test]
+    fn preemption_repin_keeps_blocks_alive() {
+        let mut ix = PrefixIndex::new(2, 0);
+        ix.publish(&[1, 2, 3, 4], &[10, 11]);
+        let adopted = ix.acquire(&[1, 2, 3, 4], 8);
+        // preempt: pin first, then the table free releases the old pins
+        assert!(ix.acquire_blocks(&adopted));
+        ix.release_blocks(&adopted);
+        // owner retires; the preempted session's pins must still hold
+        assert!(ix.owner_free(10));
+        assert!(ix.owner_free(11));
+        assert_eq!(ix.evict_lru(8), Vec::<u32>::new(), "pinned entries survive");
+        ix.release_blocks(&adopted);
+        assert_eq!(ix.evict_lru(8).len(), 2);
+    }
+}

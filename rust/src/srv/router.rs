@@ -309,7 +309,13 @@ impl Router {
             let e = EngineError::Saturated { max_queue: self.engine.max_queue() };
             return Err(engine_error_response(&e));
         }
-        let prefill = parsed.prompt.len();
+        // Prefix-cache-aware admission (DESIGN.md §15): charge the token
+        // budget only for the prefill work the engine will actually do.
+        // The probe is advisory (the worker re-resolves at intake), so a
+        // stale hit can only under-charge transiently — never reject a
+        // request the engine could serve.
+        let cached = self.engine.cached_prefix_tokens(&parsed.prompt);
+        let prefill = parsed.prompt.len().saturating_sub(cached);
         let total = prefill + parsed.sampling.max_tokens;
         let admitted =
             match self.budget.try_admit(prefill, total, self.engine.queue_depth()) {
@@ -353,7 +359,13 @@ impl Router {
                 cancelled = true;
             }
             match session.try_recv() {
-                Ok(Some(TokenEvent::Done { finish, tokens, latency_secs, ttft_secs })) => {
+                Ok(Some(TokenEvent::Done {
+                    finish,
+                    tokens,
+                    latency_secs,
+                    ttft_secs,
+                    cached_tokens,
+                })) => {
                     lock_samples(&self.stats.generate).record(
                         latency_secs,
                         ttft_secs,
@@ -368,6 +380,7 @@ impl Router {
                         ("finish".to_string(), Json::Str(finish_str(&finish).to_string())),
                         ("latency_ms".to_string(), Json::Num(latency_secs * 1e3)),
                         ("ttft_ms".to_string(), Json::Num(ttft_secs * 1e3)),
+                        ("cached_tokens".to_string(), Json::Num(cached_tokens as f64)),
                     ]);
                     let _ = Response::json(200, &body).write_to(w);
                     return;
@@ -432,7 +445,7 @@ impl Router {
                     ]);
                     write_sse_event(w, "delta", &data.to_string()).is_ok()
                 }
-                TokenEvent::Done { finish, tokens, latency_secs, ttft_secs } => {
+                TokenEvent::Done { finish, tokens, latency_secs, ttft_secs, cached_tokens } => {
                     lock_samples(&self.stats.stream).record(
                         *latency_secs,
                         *ttft_secs,
@@ -447,6 +460,7 @@ impl Router {
                         ("finish".to_string(), Json::Str(finish_str(finish).to_string())),
                         ("latency_ms".to_string(), Json::Num(latency_secs * 1e3)),
                         ("ttft_ms".to_string(), Json::Num(ttft_secs * 1e3)),
+                        ("cached_tokens".to_string(), Json::Num(*cached_tokens as f64)),
                     ]);
                     let _ = write_sse_event(w, "done", &data.to_string());
                     return;

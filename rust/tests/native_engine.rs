@@ -64,7 +64,7 @@ fn streamed_events_arrive_in_order_and_match_done() {
         assert_eq!(ev.index(), Some(i + 1));
         streamed.push(*token);
     }
-    let TokenEvent::Done { finish, tokens, latency_secs, ttft_secs: done_ttft } =
+    let TokenEvent::Done { finish, tokens, latency_secs, ttft_secs: done_ttft, .. } =
         events.last().unwrap()
     else {
         panic!("missing Done");
