@@ -1,0 +1,197 @@
+//! Bench: sequence-parallel ring attention (`attn::exec::seqpar`) —
+//! long-sequence forward/backward GFLOP/s, ring-traffic bytes/step, and
+//! scaling efficiency over worker counts {1, 2, 4, 8}, plus the causal
+//! load-balancing comparison (DESIGN.md §16).
+//!
+//! Contracts asserted here:
+//! - outputs at every worker count are byte-identical to the W=1 run
+//!   (the deterministic merge-order invariant);
+//! - measured ring bytes equal the plan's predicted bytes (the gpusim
+//!   calibration contract);
+//! - with ≥ 4 host cores, striped causal assignment idles less than
+//!   contiguous assignment at W=4 (DISTFLASHATTN-style balancing).
+//!
+//! Writes reports/seqpar_attn.csv and the headline numbers into
+//! reports/bench_summary.json for the ci.sh regression gate:
+//!   pass,workers,p50_secs,gflops,efficiency,comm_bytes_per_step
+
+use fa2::attn::exec::seqpar::{backward_spec, forward_spec, SeqParParams, SeqParPlan};
+use fa2::attn::spec::{AttnSpec, HeadMap, Mask};
+use fa2::attn::Pass;
+use fa2::bench::summary;
+use fa2::util::rng::Rng;
+use fa2::util::stats::Bencher;
+
+fn main() {
+    let spec = AttnSpec {
+        batch: 1,
+        heads: HeadMap::mha(4),
+        seq: 1024,
+        head_dim: 64,
+        mask: Mask::Causal,
+    };
+    let dims = spec.q_dims();
+    let chunk = 64usize;
+    let mut rng = Rng::seed_from(0x5E9A);
+    let mut draw = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+    let q = draw(spec.q_elems());
+    let k = draw(spec.kv_elems());
+    let v = draw(spec.kv_elems());
+    let dout = draw(spec.q_elems());
+
+    let b = Bencher::quick();
+    let prm_w = |workers: usize| SeqParParams { workers, chunk, striped: true };
+    let (base_fwd, _) = forward_spec(&q, &k, &v, spec, prm_w(1)).expect("seqpar fwd W=1");
+    let (base_bwd, _) =
+        backward_spec(&q, &k, &v, &base_fwd, &dout, spec, prm_w(1)).expect("seqpar bwd W=1");
+
+    let mut csv = String::from("pass,workers,p50_secs,gflops,efficiency,comm_bytes_per_step\n");
+    let mut records = Vec::new();
+    let mut fwd_serial_p50 = 0.0f64;
+    let mut bwd_serial_p50 = 0.0f64;
+
+    for &workers in &[1usize, 2, 4, 8] {
+        let prm = prm_w(workers);
+        let plan = SeqParPlan::build(&spec, &prm);
+
+        let s = b.run(&format!("seqpar fwd N1024 d64 causal (W={workers})"), || {
+            forward_spec(&q, &k, &v, spec, prm).expect("seqpar fwd")
+        });
+        let (out, st) = forward_spec(&q, &k, &v, spec, prm).expect("seqpar fwd");
+        assert!(
+            out.o == base_fwd.o && out.lse == base_fwd.lse,
+            "seqpar forward at W={workers} is not byte-identical to W=1"
+        );
+        assert_eq!(
+            st.comm_bytes,
+            plan.fwd_comm_bytes(&spec),
+            "measured ring bytes diverge from the plan at W={workers}"
+        );
+        if workers == 1 {
+            fwd_serial_p50 = s.p50;
+        }
+        let efficiency = fwd_serial_p50 / s.p50 / workers as f64;
+        let gflops = dims.flops(Pass::Fwd) / s.p50 / 1e9;
+        let bytes_per_step = st.comm_bytes / st.steps.max(1) as u64;
+        println!(
+            "fwd  W={workers}: {gflops:>7.2} GFLOP/s  eff {efficiency:.2}  \
+             {bytes_per_step} B/step over {} steps",
+            st.steps
+        );
+        csv.push_str(&format!(
+            "fwd,{workers},{:.6},{gflops:.2},{efficiency:.3},{bytes_per_step}\n",
+            s.p50
+        ));
+        records.push(summary::record(
+            "seqpar_attn",
+            &format!("fwd_n1024d64causal_w{workers}"),
+            "gflops",
+            gflops,
+            "GFLOP/s",
+            true,
+        ));
+        records.push(summary::record(
+            "seqpar_attn",
+            &format!("fwd_n1024d64causal_w{workers}"),
+            "comm_bytes_per_step",
+            bytes_per_step as f64,
+            "bytes",
+            false,
+        ));
+        records.push(summary::record(
+            "seqpar_attn",
+            &format!("fwd_n1024d64causal_w{workers}"),
+            "scaling_efficiency",
+            efficiency,
+            "ratio",
+            true,
+        ));
+
+        let s = b.run(&format!("seqpar bwd N1024 d64 causal (W={workers})"), || {
+            backward_spec(&q, &k, &v, &base_fwd, &dout, spec, prm).expect("seqpar bwd")
+        });
+        let (g, stb) =
+            backward_spec(&q, &k, &v, &base_fwd, &dout, spec, prm).expect("seqpar bwd");
+        assert!(
+            g.dq == base_bwd.dq && g.dk == base_bwd.dk && g.dv == base_bwd.dv,
+            "seqpar backward at W={workers} is not byte-identical to W=1"
+        );
+        if workers == 1 {
+            bwd_serial_p50 = s.p50;
+        }
+        let efficiency = bwd_serial_p50 / s.p50 / workers as f64;
+        let gflops = dims.flops(Pass::Bwd) / s.p50 / 1e9;
+        let bytes_per_step = stb.comm_bytes / stb.steps.max(1) as u64;
+        println!(
+            "bwd  W={workers}: {gflops:>7.2} GFLOP/s  eff {efficiency:.2}  \
+             {bytes_per_step} B/step over {} steps",
+            stb.steps
+        );
+        csv.push_str(&format!(
+            "bwd,{workers},{:.6},{gflops:.2},{efficiency:.3},{bytes_per_step}\n",
+            s.p50
+        ));
+        records.push(summary::record(
+            "seqpar_attn",
+            &format!("bwd_n1024d64causal_w{workers}"),
+            "gflops",
+            gflops,
+            "GFLOP/s",
+            true,
+        ));
+    }
+
+    // Causal load balancing: striped vs contiguous Q assignment at W=4.
+    // Contiguous gives worker 0 the short early causal rows and worker 3
+    // the long late ones; striping deals every worker the same row-length
+    // mix, so its per-pass idle time must come out lower.  Idle is noisy
+    // under scheduler jitter, so take the minimum over several passes.
+    let idle_of = |striped: bool| -> u64 {
+        let prm = SeqParParams { workers: 4, chunk, striped };
+        (0..5)
+            .map(|_| forward_spec(&q, &k, &v, spec, prm).expect("seqpar fwd").1.idle_ns)
+            .min()
+            .unwrap_or(0)
+    };
+    let idle_striped = idle_of(true);
+    let idle_contig = idle_of(false);
+    println!(
+        "causal balance W=4: idle striped {:.2} ms vs contiguous {:.2} ms",
+        idle_striped as f64 / 1e6,
+        idle_contig as f64 / 1e6
+    );
+    csv.push_str(&format!("fwd_idle_striped,4,,,,{idle_striped}\n"));
+    csv.push_str(&format!("fwd_idle_contiguous,4,,,,{idle_contig}\n"));
+    records.push(summary::record(
+        "seqpar_attn",
+        "fwd_n1024d64causal_w4_striped",
+        "idle_ms",
+        idle_striped as f64 / 1e6,
+        "ms",
+        false,
+    ));
+    records.push(summary::record(
+        "seqpar_attn",
+        "fwd_n1024d64causal_w4_contiguous",
+        "idle_ms",
+        idle_contig as f64 / 1e6,
+        "ms",
+        false,
+    ));
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/seqpar_attn.csv", &csv).unwrap();
+    println!("wrote reports/seqpar_attn.csv");
+    summary::merge_and_announce(&records);
+
+    let host = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    if host >= 4 {
+        assert!(
+            idle_striped < idle_contig,
+            "striped causal assignment did not reduce idle time on a {host}-core host \
+             (striped {idle_striped} ns vs contiguous {idle_contig} ns)"
+        );
+    } else {
+        println!("(host has {host} cores; skipping the striping idle-time assertion)");
+    }
+}

@@ -43,6 +43,11 @@
 #                              Chrome trace + Prometheus snapshot, and a
 #                              rerun with FA2_TRACE_INJECT_UNCLOSED=1 must
 #                              FAIL on the unclosed-span validator
+#   ./ci.sh --verify-seqpar    one-command failure-path check for the ring
+#                              executor: the seqpar suite must PASS clean,
+#                              then FA2_SEQPAR_INJECT_SKEW=1 (which disables
+#                              the deterministic merge sort) must make the
+#                              worker-count byte-identity test FAIL
 #   ./ci.sh --verify-http      one-command check of the HTTP front-end: boots
 #                              `repro serve --http 127.0.0.1:0` on an
 #                              ephemeral port, probes /health, /generate,
@@ -63,6 +68,7 @@ LINT_ONLY=0
 VERIFY_LINT=0
 VERIFY_TRACE=0
 VERIFY_HTTP=0
+VERIFY_SEQPAR=0
 for arg in "$@"; do
     case "$arg" in
         --quick) QUICK=1 ;;
@@ -72,7 +78,8 @@ for arg in "$@"; do
         --verify-lint) VERIFY_LINT=1 ;;
         --verify-trace) VERIFY_TRACE=1 ;;
         --verify-http) VERIFY_HTTP=1 ;;
-        *) echo "usage: ./ci.sh [--quick] [--lint-only] [--verify-lint] [--update-baseline] [--verify-gate] [--verify-trace] [--verify-http]" >&2; exit 2 ;;
+        --verify-seqpar) VERIFY_SEQPAR=1 ;;
+        *) echo "usage: ./ci.sh [--quick] [--lint-only] [--verify-lint] [--update-baseline] [--verify-gate] [--verify-trace] [--verify-http] [--verify-seqpar]" >&2; exit 2 ;;
     esac
 done
 
@@ -105,7 +112,7 @@ if [ "$VERIFY_GATE" = 1 ]; then
     export FA2_BENCH_INJECT_SLOWDOWN=1.2
     cargo build --release --benches
     rm -f reports/bench_summary.json
-    for bench in coordinator_hotpath native_attn paged_kv prefix_cache \
+    for bench in coordinator_hotpath native_attn seqpar_attn paged_kv prefix_cache \
                  fig4_attn_fwd_bwd fig5_attn_fwd fig6_attn_bwd fig7_h100 \
                  table1_e2e_training runtime_exec; do
         cargo bench --bench "$bench"
@@ -140,6 +147,23 @@ if [ "$VERIFY_TRACE" = 1 ]; then
     fi
     rm -f reports/trace_unclosed.json
     echo "verify-trace: validator correctly FAILED on the unclosed span"
+    exit 0
+fi
+
+if [ "$VERIFY_SEQPAR" = 1 ]; then
+    echo "== verify-seqpar: ring determinism suite must pass clean =="
+    cargo test -q --release --test prop_seqpar_attn
+    echo "== verify-seqpar: injected merge skew must break byte-identity =="
+    # FA2_SEQPAR_INJECT_SKEW=1 makes workers fold partials in arrival
+    # order instead of absolute K-chunk order; the W>1 runs then disagree
+    # with W=1 at the bit level and the identity test MUST go red —
+    # proving the determinism gate is load-bearing, not vacuous.
+    if FA2_SEQPAR_INJECT_SKEW=1 cargo test -q --release --test prop_seqpar_attn \
+        byte_identical; then
+        echo "FAIL: byte-identity test passed despite injected merge skew" >&2
+        exit 1
+    fi
+    echo "verify-seqpar: identity test correctly FAILED under injected skew"
     exit 0
 fi
 
@@ -287,6 +311,17 @@ echo "== native exec: parity + gradcheck + AttnSpec suites (release) =="
 cargo test -q --release --test prop_native_attn --test gradcheck_native_attn \
     --test prop_attn_spec
 
+echo "== seqpar: ring determinism suite + injected-skew failure check =="
+cargo test -q --release --test prop_seqpar_attn
+# The determinism gate must itself be falsifiable: skewed merge order has
+# to break worker-count byte-identity (full check: ./ci.sh --verify-seqpar).
+if FA2_SEQPAR_INJECT_SKEW=1 cargo test -q --release --test prop_seqpar_attn \
+    byte_identical >/dev/null 2>&1; then
+    echo "FAIL: seqpar byte-identity test passed despite injected merge skew" >&2
+    exit 1
+fi
+echo "seqpar: identity test correctly fails under FA2_SEQPAR_INJECT_SKEW=1"
+
 echo "== wiring: benches + examples build (includes native_attn) =="
 cargo build --release --benches --examples
 
@@ -304,8 +339,10 @@ rm -f reports/bench_summary.json
 # paged_kv asserts paged decode is bit-identical to contiguous and records
 # block-fragmentation stats next to the throughput numbers.  prefix_cache
 # asserts warm shared-prefix sessions are byte-identical to cold ones while
-# replaying strictly fewer prompt blocks.
-for bench in coordinator_hotpath native_attn paged_kv prefix_cache \
+# replaying strictly fewer prompt blocks.  seqpar_attn asserts ring outputs
+# are byte-identical at every worker count and that striped causal
+# assignment idles less than contiguous.
+for bench in coordinator_hotpath native_attn seqpar_attn paged_kv prefix_cache \
              fig4_attn_fwd_bwd fig5_attn_fwd fig6_attn_bwd fig7_h100 \
              table1_e2e_training runtime_exec; do
     echo "-- cargo bench --bench $bench"

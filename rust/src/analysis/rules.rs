@@ -541,6 +541,22 @@ mod tests {
     }
 
     #[test]
+    fn seqpar_ring_modules_are_in_hot_path_scope() {
+        // Pin that the sequence-parallel executor and its ring transport
+        // sit inside the attn/exec hot-path prefix: a panic there takes
+        // down a whole ring of workers mid-pass, so both the panic and
+        // the release-assert rules must cover them.
+        for path in ["rust/src/attn/exec/seqpar.rs", "rust/src/attn/exec/comm.rs"] {
+            assert!(is_hot_path(path), "{path} fell out of hot-path scope");
+            let d =
+                diags_for(path, FileKind::Src, "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+            assert_eq!(rule_lines(&d, "no-hotpath-panic"), vec![1], "{path}");
+            let d = diags_for(path, FileKind::Src, "fn g(n: usize) { assert!(n > 0); }\n");
+            assert_eq!(rule_lines(&d, "kernel-release-assert"), vec![1], "{path}");
+        }
+    }
+
+    #[test]
     fn float_eq_flags_literal_comparisons_only() {
         let src = "fn f(x: f32, n: usize) -> bool {\n\
                        let a = x == 0.0;\n\

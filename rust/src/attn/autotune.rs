@@ -8,11 +8,14 @@
 //! the non-matmul mix, the tuner independently rediscovers the paper's
 //! hand-tuned choices (asserted in the tests below).
 
+use crate::gpusim::comm::RingLink;
 use crate::gpusim::device::Device;
 use crate::gpusim::kernel::simulate_pipeline;
 use crate::util::pool;
 
+use super::exec::seqpar::{SeqParParams, SeqParPlan};
 use super::problem::{AttnProblem, Pass};
+use super::spec::AttnSpec;
 use super::schedule::{bwd_kernels, fwd_kernels, Method, ScheduleSpec};
 
 /// Candidate tile/warp grid searched by the tuner.
@@ -90,6 +93,62 @@ pub fn exec_params(p: &AttnProblem, pass: Pass) -> crate::attn::exec::FlashParam
     }
 }
 
+/// Simulated cost of one sequence-parallel configuration: the flash
+/// pipeline's cost-model time split across the ring (ideal §3.2 split —
+/// striping makes the executing layer approach it) plus the
+/// [`RingLink`] exchange term on [`SeqParPlan::fwd_comm_bytes`], the
+/// exact byte count the executing transport meters.  Sharing that
+/// currency is what makes the simulated and executing layers rank shard
+/// counts the same way.
+pub fn seqpar_cost(
+    dev: &Device,
+    link: &RingLink,
+    spec: &AttnSpec,
+    prm: &SeqParParams,
+    pass: Pass,
+) -> f64 {
+    let plan = SeqParPlan::build(spec, prm);
+    let p = spec.q_dims().problem();
+    let sched = ScheduleSpec::for_method(Method::Flash2, p.head_dim);
+    let mut kernels = Vec::new();
+    if pass != Pass::Bwd {
+        kernels.extend(fwd_kernels(&p, &sched));
+    }
+    if pass != Pass::Fwd {
+        kernels.extend(bwd_kernels(&p, &sched));
+    }
+    let compute = simulate_pipeline(dev, &kernels) / plan.workers as f64;
+    // The backward ring re-ships the KV shards and returns dK/dV tiles of
+    // the same shape — model gradient passes as twice the forward
+    // exchange.
+    let comm_mult = if pass == Pass::Fwd { 1.0 } else { 2.0 };
+    let comm =
+        link.exchange_time(plan.fwd_comm_msgs(), plan.fwd_comm_bytes(spec) as f64);
+    compute + comm_mult * comm
+}
+
+/// Rank candidate worker counts for a seqpar execution, fastest first,
+/// on the simulated cost — the shard-count search the executing layer's
+/// benches validate against.
+pub fn seqpar_rank(
+    dev: &Device,
+    link: &RingLink,
+    spec: &AttnSpec,
+    chunk: usize,
+    candidates: &[usize],
+    pass: Pass,
+) -> Vec<(usize, f64)> {
+    let mut out: Vec<(usize, f64)> = candidates
+        .iter()
+        .map(|&workers| {
+            let prm = SeqParParams { workers, chunk, striped: true };
+            (workers, seqpar_cost(dev, link, spec, &prm, pass))
+        })
+        .collect();
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +214,35 @@ mod tests {
         let b = best(&Device::a100(), &p, Method::Flash2, Pass::Fwd);
         assert_eq!((fp.block_q as u64, fp.block_k as u64), (b.block_q, b.block_k));
         assert!(fp.block_q > 0 && fp.block_k > 0);
+    }
+
+    #[test]
+    fn seqpar_ranking_follows_the_compute_comm_tradeoff() {
+        use crate::attn::spec::{HeadMap, Mask};
+        let spec = AttnSpec {
+            batch: 1,
+            heads: HeadMap::mha(8),
+            seq: 8192,
+            head_dim: 64,
+            mask: Mask::Full,
+        };
+        let dev = Device::a100();
+        // a free link: more shards always win (pure 1/W compute split)
+        let free = RingLink { bandwidth: f64::INFINITY, latency: 0.0 };
+        let r = seqpar_rank(&dev, &free, &spec, 64, &[1, 2, 4, 8], Pass::Fwd);
+        assert_eq!(r[0].0, 8, "{r:?}");
+        // an absurdly slow link: sharding can never pay for itself
+        let slow = RingLink { bandwidth: 1e3, latency: 1.0 };
+        let r = seqpar_rank(&dev, &slow, &spec, 64, &[1, 2, 4, 8], Pass::Fwd);
+        assert_eq!(r[0].0, 1, "{r:?}");
+        // realistic link: every candidate priced finite, returned sorted
+        let r =
+            seqpar_rank(&dev, &RingLink::nvlink(), &spec, 64, &[1, 2, 4, 8], Pass::FwdBwd);
+        assert_eq!(r.len(), 4);
+        for w in r.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert!(r.iter().all(|(_, t)| t.is_finite()));
     }
 
     #[test]

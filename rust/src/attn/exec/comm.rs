@@ -1,0 +1,178 @@
+//! In-process ring transport for sequence-parallel attention (DESIGN.md
+//! §16).
+//!
+//! A ring of W endpoints, one per `util::pool` worker: endpoint `w` sends
+//! to its right neighbor `(w + 1) % W` and receives from its left neighbor
+//! `(w − 1) % W` — the classic ring-collective wiring, realized as W
+//! `std::sync::mpsc` channels (std-only; no sockets, no shared-memory
+//! tricks).  Channels are unbounded, so sends never block; receives block
+//! until the left neighbor forwards, which is exactly the per-step
+//! synchronization a KV-rotation schedule needs — no extra barrier.
+//!
+//! Every endpoint meters itself: messages and payload bytes sent, and
+//! nanoseconds spent blocked in `recv` (the transport-visible share of
+//! worker idle time).  `seqpar` aggregates these [`LinkStats`] into the
+//! `seqpar_*` observability counters, and the same byte accounting is what
+//! the `gpusim::comm` cost model is calibrated against.
+//!
+//! Failure model: a ring neighbor can only disappear if its worker task
+//! died, so `send_next`/`recv` surface disconnections as `Result` errors
+//! instead of panicking (this module is inside the `no-hotpath-panic` lint
+//! scope).  A healthy schedule never sees them: the seqpar plan computes,
+//! per shard, exactly how many hops it travels, and every endpoint runs
+//! the same plan.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::util::error::{Error, Result};
+
+/// Per-endpoint transport meters, readable after the worker loop ends.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Messages sent to the right neighbor.
+    pub sends: u64,
+    /// Payload bytes sent (as declared by the caller per send).
+    pub sent_bytes: u64,
+    /// Messages received from the left neighbor.
+    pub recvs: u64,
+    /// Nanoseconds spent blocked inside `recv` waiting for the neighbor.
+    pub recv_idle_ns: u64,
+}
+
+/// One worker's pair of ring links: a sender to the right neighbor and a
+/// receiver from the left one, plus the meters.
+pub struct RingEndpoint<T> {
+    rank: usize,
+    workers: usize,
+    tx: mpsc::Sender<T>,
+    rx: mpsc::Receiver<T>,
+    stats: LinkStats,
+}
+
+impl<T: Send> RingEndpoint<T> {
+    /// This endpoint's position on the ring.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Ring size W.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Send `msg` to the right neighbor, accounting `bytes` payload bytes.
+    /// Errors only if the neighbor's endpoint was dropped (its worker
+    /// died) — never blocks.
+    pub fn send_next(&mut self, msg: T, bytes: usize) -> Result<()> {
+        self.tx.send(msg).map_err(|_| {
+            Error::msg(format!("ring worker {}: right neighbor hung up", self.rank))
+        })?;
+        self.stats.sends += 1;
+        self.stats.sent_bytes += bytes as u64;
+        Ok(())
+    }
+
+    /// Block until the left neighbor sends, metering the wait as idle
+    /// time.  Errors if the neighbor's endpoint was dropped mid-schedule.
+    pub fn recv(&mut self) -> Result<T> {
+        let t0 = Instant::now();
+        let msg = self.rx.recv().map_err(|_| {
+            Error::msg(format!("ring worker {}: left neighbor hung up", self.rank))
+        })?;
+        self.stats.recv_idle_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.recvs += 1;
+        Ok(msg)
+    }
+
+    /// The meters accumulated so far.
+    pub fn stats(&self) -> LinkStats {
+        self.stats
+    }
+}
+
+/// Build a ring of `workers` endpoints (`workers == 0` yields an empty
+/// vec; `workers == 1` is a self-loop that a correct schedule never
+/// sends on).  Endpoint `w` must be moved to pool worker `w`.
+pub fn ring<T: Send>(workers: usize) -> Vec<RingEndpoint<T>> {
+    // chans[w] delivers TO worker w; endpoint w keeps chans[w]'s receiver
+    // and a sender for chans[(w + 1) % W].
+    let chans: Vec<(mpsc::Sender<T>, mpsc::Receiver<T>)> =
+        (0..workers).map(|_| mpsc::channel()).collect();
+    let txs: Vec<mpsc::Sender<T>> = chans.iter().map(|c| c.0.clone()).collect();
+    chans
+        .into_iter()
+        .enumerate()
+        .map(|(w, (_tx, rx))| RingEndpoint {
+            rank: w,
+            workers,
+            tx: txs[(w + 1) % workers].clone(),
+            rx,
+            stats: LinkStats::default(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool;
+
+    #[test]
+    fn tokens_complete_a_full_rotation() {
+        // Each worker injects its rank and forwards whatever arrives for
+        // W-1 steps; after the loop every worker has seen every token and
+        // holds its own again.
+        let w = 4;
+        let eps = ring::<usize>(w);
+        let seen = pool::par_map_with(
+            w,
+            eps.into_iter().collect::<Vec<_>>(),
+            |mut ep| -> Result<(Vec<usize>, LinkStats)> {
+                let mut held = ep.rank();
+                let mut seen = vec![held];
+                for _ in 0..ep.workers() - 1 {
+                    ep.send_next(held, 8)?;
+                    held = ep.recv()?;
+                    seen.push(held);
+                }
+                // one more hop brings the original token home
+                ep.send_next(held, 8)?;
+                held = ep.recv()?;
+                assert_eq!(held, ep.rank(), "token failed to come home");
+                Ok((seen, ep.stats()))
+            },
+        );
+        for (rank, r) in seen.into_iter().enumerate() {
+            let (seen, stats) = r.expect("ring worker failed");
+            // worker w sees w, w-1, w-2, ... (tokens rotate rightward)
+            let want: Vec<usize> = (0..w).map(|t| (rank + w - t) % w).collect();
+            assert_eq!(seen, want, "worker {rank} saw tokens out of order");
+            assert_eq!(stats.sends, w as u64);
+            assert_eq!(stats.recvs, w as u64);
+            assert_eq!(stats.sent_bytes, 8 * w as u64);
+        }
+    }
+
+    #[test]
+    fn disconnection_is_an_error_not_a_hang() {
+        let mut eps = ring::<u8>(2);
+        let b = eps.pop().expect("two endpoints");
+        let mut a = eps.pop().expect("two endpoints");
+        drop(b); // worker 1 "dies": its receiver and sender both drop
+        assert!(a.send_next(1, 1).is_err(), "send to a dead neighbor must error");
+        assert!(a.recv().is_err(), "recv from a dead neighbor must error");
+    }
+
+    #[test]
+    fn empty_and_self_rings_construct() {
+        assert!(ring::<u8>(0).is_empty());
+        let mut solo = ring::<u8>(1);
+        assert_eq!(solo.len(), 1);
+        // a self-loop is wired but unused by any correct 1-worker schedule
+        let ep = &mut solo[0];
+        assert_eq!(ep.rank(), 0);
+        assert_eq!(ep.workers(), 1);
+        assert_eq!(ep.stats(), LinkStats::default());
+    }
+}

@@ -25,13 +25,85 @@
 //! - [`parallel`]: §3.2 work partitioning — (batch, head, Q-block) /
 //!   (batch, head, K-block) tasks fanned across `util::pool`, plus the
 //!   split-KV decode path reduced through `attn::combine`.
+//! - [`seqpar`] + [`comm`]: sequence-parallel ring execution (§16) — W
+//!   workers own KV shards and rotate them over an in-process ring,
+//!   merging per-Q-block partials in deterministic absolute-chunk order;
+//!   the long-context mode [`ExecMode::SeqParallel`] dispatches to.
 
+pub mod comm;
 pub mod flash_bwd;
 pub mod flash_fwd;
 pub mod parallel;
 pub mod reference;
+pub mod seqpar;
+
+use crate::attn::spec::AttnSpec;
+use crate::util::error::Result;
 
 use super::Pass;
+
+/// Which execution subsystem runs an attention call: the single-slab
+/// pool fan-out ([`parallel`]) or the sequence-parallel ring
+/// ([`seqpar`]).  Both produce byte-identical outputs for the math they
+/// share; they differ in how work and KV residency are partitioned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// §3.2 block fan-out over the pool — every worker sees all of KV.
+    Fanned { workers: usize },
+    /// §16 ring KV-exchange — each worker owns a KV shard; shards
+    /// rotate.  The long-context mode.
+    SeqParallel { workers: usize },
+}
+
+/// Forward under `mode`.  `Fanned` uses `p` as tile sizes; `SeqParallel`
+/// reuses `p.block_k` as the absolute chunk granularity (striped causal
+/// balancing on).  Returns seqpar transport stats when the ring ran.
+pub fn forward_spec_mode(
+    mode: ExecMode,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    spec: AttnSpec,
+    p: FlashParams,
+) -> Result<(FlashOut, Option<seqpar::SeqParStats>)> {
+    match mode {
+        ExecMode::Fanned { workers } => {
+            Ok((parallel::forward_spec_with(workers, q, k, v, spec, p), None))
+        }
+        ExecMode::SeqParallel { workers } => {
+            let prm =
+                seqpar::SeqParParams { workers, chunk: p.block_k, striped: true };
+            let (out, stats) = seqpar::forward_spec(q, k, v, spec, prm)?;
+            Ok((out, Some(stats)))
+        }
+    }
+}
+
+/// Backward under `mode` — same dispatch contract as
+/// [`forward_spec_mode`].
+#[allow(clippy::too_many_arguments)]
+pub fn backward_spec_mode(
+    mode: ExecMode,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    fwd: &FlashOut,
+    dout: &[f32],
+    spec: AttnSpec,
+    p: FlashParams,
+) -> Result<(FlashGrads, Option<seqpar::SeqParStats>)> {
+    match mode {
+        ExecMode::Fanned { workers } => {
+            Ok((parallel::backward_spec_with(workers, q, k, v, fwd, dout, spec, p), None))
+        }
+        ExecMode::SeqParallel { workers } => {
+            let prm =
+                seqpar::SeqParParams { workers, chunk: p.block_k, striped: true };
+            let (g, stats) = seqpar::backward_spec(q, k, v, fwd, dout, spec, prm)?;
+            Ok((g, Some(stats)))
+        }
+    }
+}
 
 /// Dimensions + masking of one executing attention problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -183,6 +255,59 @@ mod tests {
         assert_eq!(d.flops(Pass::Bwd), 2.5 * f);
         let dc = AttnDims { causal: true, ..d };
         assert_eq!(dc.flops(Pass::Fwd), f / 2.0);
+    }
+
+    #[test]
+    fn exec_modes_agree_and_report_stats() {
+        use crate::attn::spec::{HeadMap, Mask};
+        let spec = AttnSpec {
+            batch: 1,
+            heads: HeadMap::mha(2),
+            seq: 48,
+            head_dim: 8,
+            mask: Mask::Causal,
+        };
+        let mut rng = crate::util::rng::Rng::seed_from(42);
+        let mut gen = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32).collect()
+        };
+        let q = gen(spec.q_elems());
+        let k = gen(spec.kv_elems());
+        let v = gen(spec.kv_elems());
+        let dout = gen(spec.q_elems());
+        let p = FlashParams { block_q: 16, block_k: 16 };
+        let (fan, none) =
+            forward_spec_mode(ExecMode::Fanned { workers: 2 }, &q, &k, &v, spec, p)
+                .expect("fanned fwd");
+        assert!(none.is_none(), "fanned mode has no ring stats");
+        let (ring, stats) =
+            forward_spec_mode(ExecMode::SeqParallel { workers: 3 }, &q, &k, &v, spec, p)
+                .expect("seqpar fwd");
+        let stats = stats.expect("seqpar mode reports ring stats");
+        assert_eq!(stats.workers, 3);
+        for (a, b) in fan.o.iter().zip(&ring.o) {
+            assert!((a - b).abs() < 1e-4, "modes disagree on O");
+        }
+        for (a, b) in fan.lse.iter().zip(&ring.lse) {
+            assert!((a - b).abs() < 1e-4, "modes disagree on LSE");
+        }
+        let (gf, _) = backward_spec_mode(
+            ExecMode::Fanned { workers: 2 }, &q, &k, &v, &fan, &dout, spec, p,
+        )
+        .expect("fanned bwd");
+        let (gr, _) = backward_spec_mode(
+            ExecMode::SeqParallel { workers: 3 }, &q, &k, &v, &ring, &dout, spec, p,
+        )
+        .expect("seqpar bwd");
+        for (a, b) in gf.dq.iter().zip(&gr.dq) {
+            assert!((a - b).abs() < 1e-4, "modes disagree on dQ");
+        }
+        for (a, b) in gf.dk.iter().zip(&gr.dk) {
+            assert!((a - b).abs() < 1e-4, "modes disagree on dK");
+        }
+        for (a, b) in gf.dv.iter().zip(&gr.dv) {
+            assert!((a - b).abs() < 1e-4, "modes disagree on dV");
+        }
     }
 
     #[test]

@@ -239,7 +239,13 @@ pub fn backward_with(
 /// Fill `out` with the partial softmax state of one KV chunk (`rows`
 /// key/value rows of width `d = qrow.len()`), in f64 like `combine`.
 /// Allocation-free once `out.o` has capacity `d`.
-fn partial_from_chunk(out: &mut Partial, qrow: &[f32], kc: &[f32], vc: &[f32], scale: f32) {
+pub(crate) fn partial_from_chunk(
+    out: &mut Partial,
+    qrow: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    scale: f32,
+) {
     let d = qrow.len();
     out.o.clear();
     out.o.resize(d, 0.0);

@@ -1,0 +1,1085 @@
+//! Sequence-parallel ring attention over the combine algebra (DESIGN.md
+//! §16) — the long-context execution mode.
+//!
+//! The single-slab kernels hold one sequence's whole KV in every worker's
+//! reach; book-length contexts want the opposite: W workers each *own* a
+//! contiguous KV shard plus a set of Q chunks, and KV shards rotate around
+//! an in-process ring ([`super::comm`]) for W steps, Sequence
+//! Parallelism / DISTFLASHATTN style.  What makes this correct is exactly
+//! FlashAttention-2's combine algebra: every (Q row × K chunk) produces a
+//! [`Partial`], and partials merge associatively via `merge_from`.
+//!
+//! **Deterministic-merge invariant.**  Outputs and LSE are byte-identical
+//! at ANY worker count, striping mode, or ring timing.  Two structural
+//! rules buy this:
+//!
+//! 1. Partials are computed at a fixed absolute K-chunk granularity
+//!    ([`SeqParParams::chunk`]) with chunk boundaries at absolute
+//!    positions, never at shard boundaries (shards are unions of whole
+//!    chunks, and shard extents change with W).
+//! 2. Per Q row, partials merge in ascending absolute K-chunk index —
+//!    keyed by chunk index, not ring-arrival order.  Likewise dK/dV
+//!    contributions sum per owner in ascending Q-chunk order and dQ
+//!    contributions in ascending K-chunk order, in f64.
+//!
+//! `FA2_SEQPAR_INJECT_SKEW=1` disables rule 2 (arrival-order merging) so
+//! CI can prove the worker-count-identity test actually guards the
+//! invariant.
+//!
+//! **Causal load balancing.**  With a causal mask and naive contiguous Q
+//! shards, the owner of the earliest rows attends only its own diagonal
+//! shard and idles for the other W−1 steps.  [`SeqParParams::striped`]
+//! assigns Q chunks round-robin (`qc % W`) instead, so every worker holds
+//! a mix of early and late rows and per-step work evens out — the
+//! DISTFLASHATTN rebalancing, visible directly in
+//! [`SeqParStats::idle_ns`].
+//!
+//! **Shard skipping.**  [`SeqParPlan`] classifies every (worker × shard)
+//! pair with [`Mask::cover`]; a shard travels only as many hops as its
+//! farthest attending worker ([`SeqParPlan::fwd_hops`]), so causal
+//! above-diagonal and out-of-window shards are never shipped at all.  The
+//! plan also *predicts* the exact bytes the transport will move
+//! ([`SeqParPlan::fwd_comm_bytes`]) — `gpusim::comm` prices that same
+//! number, which is what keeps the simulated and executing layers ranking
+//! shard counts the same way.
+//!
+//! The backward pass rotates (KV + accumulated dK/dV contributions)
+//! around the full ring: visiting workers append per-(Q-chunk × K-chunk)
+//! contribution tiles to the traveling payload, the K/V rows are dropped
+//! from the payload after the last attending worker, and the shard's
+//! exclusive owner performs the final deterministic accumulation when the
+//! payload comes home.
+//!
+//! [`Partial`]: crate::attn::combine::Partial
+//! [`Mask::cover`]: crate::attn::spec::Mask::cover
+
+use std::time::Instant;
+
+use crate::attn::combine::Partial;
+use crate::attn::spec::{AttnSpec, Cover};
+use crate::bail;
+use crate::util::error::Result;
+use crate::util::pool;
+
+use super::comm::{self, LinkStats, RingEndpoint};
+use super::{parallel, FlashGrads, FlashOut, TensorView};
+
+/// Knobs of one sequence-parallel execution.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqParParams {
+    /// Ring size W (clamped to the chunk count; `1` runs serially).
+    pub workers: usize,
+    /// Absolute K/Q chunk granularity in tokens — the unit partials are
+    /// computed and merged at.  Identical results require an identical
+    /// chunk, NOT an identical worker count.
+    pub chunk: usize,
+    /// Round-robin (striped) Q-chunk ownership for causal load balance;
+    /// `false` is the naive contiguous baseline the benches compare
+    /// against.
+    pub striped: bool,
+}
+
+impl Default for SeqParParams {
+    fn default() -> Self {
+        SeqParParams { workers: pool::threads(), chunk: 64, striped: true }
+    }
+}
+
+/// The static ring schedule: shard and Q-chunk ownership, per-shard hop
+/// counts, and the (worker × shard) attendance matrix — everything both
+/// the executing workers and the `gpusim` comm model need to agree on.
+#[derive(Debug, Clone)]
+pub struct SeqParPlan {
+    /// Ring size after clamping to the chunk count.
+    pub workers: usize,
+    /// Chunk granularity in tokens.
+    pub chunk: usize,
+    /// Number of absolute chunks covering the sequence.
+    pub n_chunks: usize,
+    /// Sequence length the plan was built for.
+    pub seq: usize,
+    /// KV shard `s` owns chunks `shard_start[s]..shard_start[s+1]`.
+    pub shard_start: Vec<usize>,
+    /// Worker owning each Q chunk (striped or contiguous).
+    pub q_owner: Vec<usize>,
+    /// Forward hops shard `s` travels (0 = never leaves its owner).
+    pub fwd_hops: Vec<usize>,
+    /// Whether shard `s`'s backward payload makes the full W-hop loop
+    /// (true iff any non-owner attends it).
+    pub bwd_loop: Vec<bool>,
+    /// `needs[w * workers + s]`: worker `w` attends shard `s`.
+    needs: Vec<bool>,
+}
+
+impl SeqParPlan {
+    /// Build the schedule for `spec` under `prm`.
+    pub fn build(spec: &AttnSpec, prm: &SeqParParams) -> SeqParPlan {
+        let chunk = prm.chunk.max(1);
+        let n_chunks = (spec.seq + chunk - 1) / chunk;
+        let workers = prm.workers.max(1).min(n_chunks.max(1));
+        let shard_start: Vec<usize> =
+            (0..=workers).map(|s| s * n_chunks / workers).collect();
+        let q_owner: Vec<usize> = (0..n_chunks)
+            .map(|qc| {
+                if prm.striped {
+                    qc % workers
+                } else {
+                    let mut owner = workers - 1;
+                    for s in 0..workers {
+                        if qc < shard_start[s + 1] {
+                            owner = s;
+                            break;
+                        }
+                    }
+                    owner
+                }
+            })
+            .collect();
+        let mut plan = SeqParPlan {
+            workers,
+            chunk,
+            n_chunks,
+            seq: spec.seq,
+            shard_start,
+            q_owner,
+            fwd_hops: vec![0; workers],
+            bwd_loop: vec![false; workers],
+            needs: vec![false; workers * workers],
+        };
+        for w in 0..workers {
+            for s in 0..workers {
+                plan.needs[w * workers + s] = plan.worker_attends(w, s, spec);
+            }
+        }
+        for s in 0..workers {
+            let mut hops = 0;
+            let mut looped = false;
+            for w in 0..workers {
+                if plan.needs[w * workers + s] {
+                    hops = hops.max((w + workers - s) % workers);
+                    if w != s {
+                        looped = true;
+                    }
+                }
+            }
+            plan.fwd_hops[s] = hops;
+            plan.bwd_loop[s] = looped;
+        }
+        plan
+    }
+
+    /// Token rows `[lo, hi)` of absolute chunk `c`.
+    pub fn chunk_rows(&self, c: usize) -> (usize, usize) {
+        (c * self.chunk, ((c + 1) * self.chunk).min(self.seq))
+    }
+
+    /// The chunk indices shard `s` owns.
+    pub fn shard_chunks(&self, s: usize) -> std::ops::Range<usize> {
+        self.shard_start[s]..self.shard_start[s + 1]
+    }
+
+    /// Token rows `[lo, hi)` of shard `s` (`lo == hi` for an empty shard).
+    pub fn shard_rows(&self, s: usize) -> (usize, usize) {
+        let (c0, c1) = (self.shard_start[s], self.shard_start[s + 1]);
+        if c0 == c1 {
+            return (0, 0);
+        }
+        (self.chunk_rows(c0).0, self.chunk_rows(c1 - 1).1)
+    }
+
+    /// Whether worker `w` attends any row of shard `s` under the mask.
+    pub fn needs(&self, w: usize, s: usize) -> bool {
+        self.needs[w * self.workers + s]
+    }
+
+    fn worker_attends(&self, w: usize, s: usize, spec: &AttnSpec) -> bool {
+        let (sr0, sr1) = self.shard_rows(s);
+        if sr0 == sr1 {
+            return false;
+        }
+        (0..self.n_chunks).any(|qc| {
+            if self.q_owner[qc] != w {
+                return false;
+            }
+            let (q0, q1) = self.chunk_rows(qc);
+            spec.mask.cover(q0, q1, sr0, sr1) != Cover::Skip
+        })
+    }
+
+    /// Whether shard `s` is live at forward ring position `pos` (hops
+    /// from its owner; 0 = at the owner).
+    pub fn fwd_alive(&self, s: usize, pos: usize) -> bool {
+        let (r0, r1) = self.shard_rows(s);
+        if r0 == r1 {
+            return false;
+        }
+        if pos == 0 {
+            self.needs(s, s) || self.fwd_hops[s] > 0
+        } else {
+            pos <= self.fwd_hops[s]
+        }
+    }
+
+    /// Whether shard `s`'s backward payload exists at ring position
+    /// `pos` (0 = owner start, `workers` = homecoming).
+    pub fn bwd_alive(&self, s: usize, pos: usize) -> bool {
+        let (r0, r1) = self.shard_rows(s);
+        if r0 == r1 {
+            return false;
+        }
+        if pos == 0 {
+            return self.needs(s, s) || self.bwd_loop[s];
+        }
+        self.bwd_loop[s] && pos <= self.workers
+    }
+
+    /// Ring steps one pass executes.
+    pub fn steps(&self) -> usize {
+        self.workers
+    }
+
+    /// Exact payload bytes the executing *forward* transport ships: each
+    /// live hop of shard `s` moves its compact K+V f32 copy.  The
+    /// `gpusim::comm` model prices exactly this number, and the
+    /// `seqpar_comm_bytes_total` counter measures exactly this number —
+    /// the calibration tests pin all three equal.
+    pub fn fwd_comm_bytes(&self, spec: &AttnSpec) -> u64 {
+        (0..self.workers)
+            .map(|s| {
+                let (t0, t1) = self.shard_rows(s);
+                let elems = spec.batch * spec.heads.n_kv_heads * (t1 - t0) * spec.head_dim;
+                self.fwd_hops[s] as u64 * (2 * elems * 4) as u64
+            })
+            .sum()
+    }
+
+    /// Forward messages the transport will send (one per live hop).
+    pub fn fwd_comm_msgs(&self) -> u64 {
+        self.fwd_hops.iter().map(|&h| h as u64).sum()
+    }
+}
+
+/// Transport + load metering of one seqpar pass, aggregated over workers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeqParStats {
+    /// Ring size the pass actually ran with (after clamping).
+    pub workers: usize,
+    /// Ring steps executed (== workers).
+    pub steps: usize,
+    /// Payload bytes shipped over ring links.
+    pub comm_bytes: u64,
+    /// Ring messages sent.
+    pub comm_msgs: u64,
+    /// Shards the mask proved no remote worker attends (never shipped).
+    pub shards_unshipped: u64,
+    /// Σ over workers of nanoseconds inside compute sections.
+    pub compute_ns: u64,
+    /// Σ over workers of (wall − compute): time not spent computing —
+    /// the load-imbalance signal striping exists to shrink.
+    pub idle_ns: u64,
+    /// Wall nanoseconds of the whole pass.
+    pub wall_ns: u64,
+}
+
+/// Arrival-order-merge injection (`FA2_SEQPAR_INJECT_SKEW=1`): the
+/// established honesty hook — CI asserts the worker-count-identity test
+/// FAILS under it, proving the deterministic-merge invariant is
+/// load-bearing rather than vacuously tested.
+fn inject_skew() -> bool {
+    matches!(std::env::var("FA2_SEQPAR_INJECT_SKEW"), Ok(v) if v == "1")
+}
+
+/// Compact copy of one KV shard: token rows `t0..t0+rows` of every
+/// (batch, kv-head) plane, `(batch, n_kv_heads, rows, d)` row-major —
+/// the bytes that actually travel the ring.
+struct KvShardData {
+    t0: usize,
+    rows: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvShardData {
+    fn wire_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// K/V rows `[lo, hi)` (absolute token indices) of plane (b, kvh).
+    fn rows(&self, spec: &AttnSpec, b: usize, kvh: usize, lo: usize, hi: usize) -> (&[f32], &[f32]) {
+        let d = spec.head_dim;
+        debug_assert!(lo >= self.t0 && hi <= self.t0 + self.rows && lo <= hi);
+        let base = ((b * spec.heads.n_kv_heads + kvh) * self.rows + (lo - self.t0)) * d;
+        let len = (hi - lo) * d;
+        (&self.k[base..base + len], &self.v[base..base + len])
+    }
+}
+
+fn extract_shard(
+    plan: &SeqParPlan,
+    s: usize,
+    kvv: TensorView,
+    vvv: TensorView,
+    spec: &AttnSpec,
+) -> KvShardData {
+    let (t0, t1) = plan.shard_rows(s);
+    let d = spec.head_dim;
+    let rows = t1 - t0;
+    let mut k = Vec::with_capacity(spec.batch * spec.heads.n_kv_heads * rows * d);
+    let mut v = Vec::with_capacity(k.capacity());
+    for b in 0..spec.batch {
+        for h in 0..spec.heads.n_kv_heads {
+            k.extend_from_slice(&kvv.head(b, h)[t0 * d..t1 * d]);
+            v.extend_from_slice(&vvv.head(b, h)[t0 * d..t1 * d]);
+        }
+    }
+    KvShardData { t0, rows, k, v }
+}
+
+/// Forward ring message: a KV shard in flight.
+struct FwdMsg {
+    shard: usize,
+    data: KvShardData,
+}
+
+/// One owned Q chunk's finalized forward outputs,
+/// `(batch, n_q_heads, rows, d)` / `(batch, n_q_heads, rows)` compact.
+struct QcTile {
+    qc: usize,
+    o: Vec<f32>,
+    lse: Vec<f32>,
+}
+
+struct FwdWorkerOut {
+    tiles: Vec<QcTile>,
+    compute_ns: u64,
+    link: LinkStats,
+}
+
+/// Sequence-parallel forward: output + LSE byte-identical at any worker
+/// count (see the module docs for the invariant), plus transport stats.
+pub fn forward_spec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    spec: AttnSpec,
+    prm: SeqParParams,
+) -> Result<(FlashOut, SeqParStats)> {
+    let _sp = crate::obs_span!("attn_seqpar_fwd");
+    spec.validate()?;
+    if q.len() != spec.q_elems() || k.len() != spec.kv_elems() || v.len() != spec.kv_elems() {
+        bail!("seqpar forward: tensor lengths do not match {spec:?}");
+    }
+    let qd = spec.q_dims();
+    let kd = spec.kv_dims();
+    let qv = TensorView::new(qd, q);
+    let kvv = TensorView::new(kd, k);
+    let vvv = TensorView::new(kd, v);
+    let plan = SeqParPlan::build(&spec, &prm);
+    let w = plan.workers;
+    let skew = inject_skew();
+    let (nq, d) = (spec.heads.n_q_heads, spec.head_dim);
+
+    let t_wall = Instant::now();
+    let eps = comm::ring::<FwdMsg>(w);
+    let outs = pool::par_map_with(w, eps, |ep| {
+        fwd_worker(ep, &plan, &spec, qv, kvv, vvv, skew)
+    });
+    let wall_ns = t_wall.elapsed().as_nanos() as u64;
+
+    let mut out = FlashOut { o: vec![0.0; spec.q_elems()], lse: vec![0.0; spec.q_rows()] };
+    let mut stats = SeqParStats {
+        workers: w,
+        steps: plan.steps(),
+        shards_unshipped: plan.fwd_hops.iter().filter(|&&h| h == 0).count() as u64,
+        wall_ns,
+        ..SeqParStats::default()
+    };
+    for r in outs {
+        let wo = r?;
+        stats.comm_bytes += wo.link.sent_bytes;
+        stats.comm_msgs += wo.link.sends;
+        stats.compute_ns += wo.compute_ns;
+        stats.idle_ns += wall_ns.saturating_sub(wo.compute_ns);
+        for tile in wo.tiles {
+            let (q0, q1) = plan.chunk_rows(tile.qc);
+            let rl = q1 - q0;
+            for b in 0..spec.batch {
+                for h in 0..nq {
+                    let src = (b * nq + h) * rl;
+                    let ro = qd.row_offset(b, h, q0);
+                    out.o[ro..ro + rl * d].copy_from_slice(&tile.o[src * d..(src + rl) * d]);
+                    let lo = qd.lse_offset(b, h, q0);
+                    out.lse[lo..lo + rl].copy_from_slice(&tile.lse[src..src + rl]);
+                }
+            }
+        }
+    }
+    record_stats(&stats);
+    Ok((out, stats))
+}
+
+fn record_stats(stats: &SeqParStats) {
+    crate::obs_count!("seqpar_comm_bytes_total", stats.comm_bytes);
+    crate::obs_count!("seqpar_comm_msgs_total", stats.comm_msgs);
+    crate::obs_count!("seqpar_steps_total", stats.steps);
+    crate::obs_count!("seqpar_idle_ns_total", stats.idle_ns);
+    crate::obs_count!("seqpar_shards_unshipped_total", stats.shards_unshipped);
+}
+
+fn fwd_worker(
+    mut ep: RingEndpoint<FwdMsg>,
+    plan: &SeqParPlan,
+    spec: &AttnSpec,
+    qv: TensorView,
+    kvv: TensorView,
+    vvv: TensorView,
+    skew: bool,
+) -> Result<FwdWorkerOut> {
+    let rank = ep.rank();
+    let w = plan.workers;
+    let (nq, d) = (spec.heads.n_q_heads, spec.head_dim);
+    let my_qcs: Vec<usize> =
+        (0..plan.n_chunks).filter(|&qc| plan.q_owner[qc] == rank).collect();
+    // per owned qc, per (b, h, local row): the (chunk, Partial) pairs seen
+    let mut acc: Vec<Vec<Vec<(usize, Partial)>>> = my_qcs
+        .iter()
+        .map(|&qc| {
+            let (r0, r1) = plan.chunk_rows(qc);
+            vec![Vec::new(); spec.batch * nq * (r1 - r0)]
+        })
+        .collect();
+    let mut compute_ns = 0u64;
+
+    for t in 0..w {
+        let s = (rank + w - t) % w;
+        let mut payload: Option<FwdMsg> = if !plan.fwd_alive(s, t) {
+            None
+        } else if t == 0 {
+            Some(FwdMsg { shard: s, data: extract_shard(plan, s, kvv, vvv, spec) })
+        } else {
+            let msg = ep.recv()?;
+            if msg.shard != s {
+                bail!("ring skew: fwd worker {rank} step {t} expected shard {s}, got {}", msg.shard);
+            }
+            Some(msg)
+        };
+        if let Some(msg) = &payload {
+            if plan.needs(rank, s) {
+                let c0 = Instant::now();
+                accumulate_shard(&mut acc, &my_qcs, &msg.data, s, plan, spec, qv);
+                compute_ns += c0.elapsed().as_nanos() as u64;
+            }
+        }
+        if plan.fwd_alive(s, t + 1) {
+            match payload.take() {
+                Some(msg) => {
+                    let bytes = msg.data.wire_bytes();
+                    ep.send_next(msg, bytes)?;
+                }
+                None => bail!("ring skew: fwd worker {rank} step {t} must forward shard {s} it never held"),
+            }
+        }
+    }
+
+    let mut tiles = Vec::with_capacity(my_qcs.len());
+    for (qi, &qc) in my_qcs.iter().enumerate() {
+        let (q0, q1) = plan.chunk_rows(qc);
+        let rl = q1 - q0;
+        let mut o = vec![0.0f32; spec.batch * nq * rl * d];
+        let mut lse = vec![0.0f32; spec.batch * nq * rl];
+        for (ri, parts) in acc[qi].iter_mut().enumerate() {
+            if !skew {
+                // the invariant: merge keyed by absolute K-chunk index, not
+                // ring-arrival order
+                parts.sort_unstable_by_key(|&(c, _)| c);
+            }
+            let mut m = Partial::empty(d);
+            for (_, p) in parts.iter() {
+                m.merge_from(p);
+            }
+            let (orow, l) = m.finalize();
+            for (t2, x) in orow.iter().enumerate() {
+                o[ri * d + t2] = *x as f32;
+            }
+            lse[ri] = l as f32;
+        }
+        tiles.push(QcTile { qc, o, lse });
+    }
+    Ok(FwdWorkerOut { tiles, compute_ns, link: ep.stats() })
+}
+
+/// Merge-inputs for every (owned Q row × chunk of shard `s`) pair: one
+/// f64 [`Partial`] per pair, computed from the *payload* copy (the bytes
+/// that actually traveled), with per-row mask bounds intersected per
+/// chunk.  The stored set of (row, chunk) partials depends only on the
+/// mask and chunk grid — never on W.
+fn accumulate_shard(
+    acc: &mut [Vec<Vec<(usize, Partial)>>],
+    my_qcs: &[usize],
+    data: &KvShardData,
+    s: usize,
+    plan: &SeqParPlan,
+    spec: &AttnSpec,
+    qv: TensorView,
+) {
+    let nq = spec.heads.n_q_heads;
+    let d = spec.head_dim;
+    let (sr0, sr1) = plan.shard_rows(s);
+    let scale = spec.scale();
+    for (qi, &qc) in my_qcs.iter().enumerate() {
+        let (q0, q1) = plan.chunk_rows(qc);
+        if spec.mask.cover(q0, q1, sr0, sr1) == Cover::Skip {
+            continue;
+        }
+        let rl = q1 - q0;
+        for b in 0..spec.batch {
+            for h in 0..nq {
+                let kvh = spec.heads.kv_head(h);
+                for i in q0..q1 {
+                    let (lo, hi) = spec.mask.row_bounds(i, spec.seq);
+                    let row_acc = &mut acc[qi][(b * nq + h) * rl + (i - q0)];
+                    for c in plan.shard_chunks(s) {
+                        let (c0, c1) = plan.chunk_rows(c);
+                        let (st, en) = (lo.max(c0), hi.min(c1));
+                        if st >= en {
+                            continue;
+                        }
+                        let (kc, vc) = data.rows(spec, b, kvh, st, en);
+                        let mut part = Partial::empty(d);
+                        parallel::partial_from_chunk(&mut part, qv.row(b, h, i), kc, vc, scale);
+                        row_acc.push((c, part));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One dK/dV contribution tile: what Q-chunk `qc` (computed wherever its
+/// owner sat on the ring) adds to K-chunk `kc` of some shard, for plane
+/// (b, kvh).  Tiles travel with the shard and are summed by the shard's
+/// exclusive owner in ascending `qc` order.
+struct Contrib {
+    b: u32,
+    kvh: u32,
+    qc: u32,
+    kc: u32,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+/// Backward ring message: the KV shard (dropped after its last attending
+/// worker) plus the accumulated contribution tiles riding home.
+struct BwdMsg {
+    shard: usize,
+    data: Option<KvShardData>,
+    contribs: Vec<Contrib>,
+}
+
+impl BwdMsg {
+    fn wire_bytes(&self) -> usize {
+        let kv = self.data.as_ref().map_or(0, KvShardData::wire_bytes);
+        kv + self.contribs.iter().map(|c| (c.dk.len() + c.dv.len()) * 4).sum::<usize>()
+    }
+}
+
+struct BwdWorkerOut {
+    /// dK/dV of this worker's own shard, `(batch, n_kv_heads, rows, d)`.
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    /// Per owned Q chunk: `(qc, dQ tile (batch, n_q_heads, rows, d))`.
+    dq_tiles: Vec<(usize, Vec<f32>)>,
+    compute_ns: u64,
+    link: LinkStats,
+}
+
+/// Sequence-parallel backward: ring-shuttles dK/dV contribution tiles
+/// with the rotating KV shard; each shard's owner accumulates its dK/dV
+/// exclusively, in deterministic ascending-Q-chunk order, and dQ sums
+/// locally in ascending K-chunk order — byte-identical at any worker
+/// count, matching the forward's invariant.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_spec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    fwd: &FlashOut,
+    dout: &[f32],
+    spec: AttnSpec,
+    prm: SeqParParams,
+) -> Result<(FlashGrads, SeqParStats)> {
+    let _sp = crate::obs_span!("attn_seqpar_bwd");
+    spec.validate()?;
+    if q.len() != spec.q_elems() || k.len() != spec.kv_elems() || v.len() != spec.kv_elems() {
+        bail!("seqpar backward: tensor lengths do not match {spec:?}");
+    }
+    if dout.len() != spec.q_elems() || fwd.o.len() != spec.q_elems() || fwd.lse.len() != spec.q_rows()
+    {
+        bail!("seqpar backward: forward-output lengths do not match {spec:?}");
+    }
+    let qd = spec.q_dims();
+    let kd = spec.kv_dims();
+    let qv = TensorView::new(qd, q);
+    let kvv = TensorView::new(kd, k);
+    let vvv = TensorView::new(kd, v);
+    let dov = TensorView::new(qd, dout);
+    let (nq, nkv, d) = (spec.heads.n_q_heads, spec.heads.n_kv_heads, spec.head_dim);
+
+    // D_i = Σ_t dO_it · O_it, once per tensor (Algorithm 2 line 1)
+    let mut dvec = vec![0.0f32; spec.q_rows()];
+    for (r, dvi) in dvec.iter_mut().enumerate() {
+        let (orow, dorow) = (&fwd.o[r * d..(r + 1) * d], &dout[r * d..(r + 1) * d]);
+        let mut a = 0.0f32;
+        for t in 0..d {
+            a += orow[t] * dorow[t];
+        }
+        *dvi = a;
+    }
+
+    let plan = SeqParPlan::build(&spec, &prm);
+    let w = plan.workers;
+    let skew = inject_skew();
+    let lse = &fwd.lse;
+    let dvec_ref = &dvec;
+
+    let t_wall = Instant::now();
+    let eps = comm::ring::<BwdMsg>(w);
+    let outs = pool::par_map_with(w, eps, |ep| {
+        bwd_worker(ep, &plan, &spec, qv, kvv, vvv, dov, lse, dvec_ref, skew)
+    });
+    let wall_ns = t_wall.elapsed().as_nanos() as u64;
+
+    let mut g = FlashGrads {
+        dq: vec![0.0; spec.q_elems()],
+        dk: vec![0.0; spec.kv_elems()],
+        dv: vec![0.0; spec.kv_elems()],
+    };
+    let mut stats = SeqParStats {
+        workers: w,
+        steps: plan.steps(),
+        shards_unshipped: plan.bwd_loop.iter().filter(|&&l| !l).count() as u64,
+        wall_ns,
+        ..SeqParStats::default()
+    };
+    for (rank, r) in outs.into_iter().enumerate() {
+        let wo = r?;
+        stats.comm_bytes += wo.link.sent_bytes;
+        stats.comm_msgs += wo.link.sends;
+        stats.compute_ns += wo.compute_ns;
+        stats.idle_ns += wall_ns.saturating_sub(wo.compute_ns);
+        let (t0s, t1s) = plan.shard_rows(rank);
+        let rows = t1s - t0s;
+        for b in 0..spec.batch {
+            for kvh in 0..nkv {
+                let src = (b * nkv + kvh) * rows * d;
+                let dst = kd.row_offset(b, kvh, t0s);
+                g.dk[dst..dst + rows * d].copy_from_slice(&wo.dk[src..src + rows * d]);
+                g.dv[dst..dst + rows * d].copy_from_slice(&wo.dv[src..src + rows * d]);
+            }
+        }
+        for (qc, tile) in wo.dq_tiles {
+            let (i0, i1) = plan.chunk_rows(qc);
+            let il = i1 - i0;
+            for b in 0..spec.batch {
+                for h in 0..nq {
+                    let src = (b * nq + h) * il * d;
+                    let dst = qd.row_offset(b, h, i0);
+                    g.dq[dst..dst + il * d].copy_from_slice(&tile[src..src + il * d]);
+                }
+            }
+        }
+    }
+    record_stats(&stats);
+    Ok((g, stats))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bwd_worker(
+    mut ep: RingEndpoint<BwdMsg>,
+    plan: &SeqParPlan,
+    spec: &AttnSpec,
+    qv: TensorView,
+    kvv: TensorView,
+    vvv: TensorView,
+    dov: TensorView,
+    lse: &[f32],
+    dvec: &[f32],
+    skew: bool,
+) -> Result<BwdWorkerOut> {
+    let rank = ep.rank();
+    let w = plan.workers;
+    let (nq, nkv, d) = (spec.heads.n_q_heads, spec.heads.n_kv_heads, spec.head_dim);
+    let my_qcs: Vec<usize> =
+        (0..plan.n_chunks).filter(|&qc| plan.q_owner[qc] == rank).collect();
+    // per owned qc: dQ contribution tiles keyed (kc, b, kvh)
+    let mut dq_parts: Vec<Vec<(usize, usize, usize, Vec<f32>)>> =
+        vec![Vec::new(); my_qcs.len()];
+    // contribution tiles for our own shard, local + homecoming
+    let mut home: Vec<Contrib> = Vec::new();
+    let mut compute_ns = 0u64;
+
+    for t in 0..w {
+        let s = (rank + w - t) % w;
+        let mut payload: Option<BwdMsg> = if !plan.bwd_alive(s, t) {
+            None
+        } else if t == 0 {
+            Some(BwdMsg {
+                shard: s,
+                data: Some(extract_shard(plan, s, kvv, vvv, spec)),
+                contribs: Vec::new(),
+            })
+        } else {
+            let msg = ep.recv()?;
+            if msg.shard != s {
+                bail!("ring skew: bwd worker {rank} step {t} expected shard {s}, got {}", msg.shard);
+            }
+            Some(msg)
+        };
+        if let Some(msg) = &mut payload {
+            if plan.needs(rank, s) {
+                let Some(data) = msg.data.as_ref() else {
+                    bail!("ring skew: bwd worker {rank} step {t} attends shard {s} whose K/V was already dropped");
+                };
+                let c0 = Instant::now();
+                bwd_shard_contribs(
+                    &my_qcs,
+                    data,
+                    s,
+                    plan,
+                    spec,
+                    qv,
+                    dov,
+                    lse,
+                    dvec,
+                    &mut msg.contribs,
+                    &mut dq_parts,
+                );
+                compute_ns += c0.elapsed().as_nanos() as u64;
+            }
+            // K/V rows ride only as far as the last attending worker; the
+            // contribution tiles continue the loop home without them
+            if plan.fwd_hops[s] < t + 1 {
+                msg.data = None;
+            }
+        }
+        if plan.bwd_alive(s, t + 1) {
+            match payload.take() {
+                Some(msg) => {
+                    let bytes = msg.wire_bytes();
+                    ep.send_next(msg, bytes)?;
+                }
+                None => bail!("ring skew: bwd worker {rank} step {t} must forward shard {s} it never held"),
+            }
+        }
+        if let Some(msg) = payload.take() {
+            // not forwarded: only our own never-looped shard ends here
+            if msg.shard != rank {
+                bail!("ring skew: bwd worker {rank} stranded shard {}", msg.shard);
+            }
+            home.extend(msg.contribs);
+        }
+    }
+    if plan.bwd_alive(rank, w) {
+        let msg = ep.recv()?;
+        if msg.shard != rank {
+            bail!("ring skew: bwd worker {rank} homecoming got shard {}", msg.shard);
+        }
+        home.extend(msg.contribs);
+    }
+
+    // exclusive-owner accumulation: ascending (b, kvh, kc, qc) — per dK/dV
+    // element that is ascending absolute Q-chunk order, independent of W
+    let (t0s, t1s) = plan.shard_rows(rank);
+    let rows = t1s - t0s;
+    let mut dk_acc = vec![0.0f64; spec.batch * nkv * rows * d];
+    let mut dv_acc = vec![0.0f64; spec.batch * nkv * rows * d];
+    if !skew {
+        home.sort_unstable_by_key(|c| (c.b, c.kvh, c.kc, c.qc));
+    }
+    for c in &home {
+        let (j0, j1) = plan.chunk_rows(c.kc as usize);
+        let base = ((c.b as usize * nkv + c.kvh as usize) * rows + (j0 - t0s)) * d;
+        let len = (j1 - j0) * d;
+        for (x, a) in c.dk.iter().zip(&mut dk_acc[base..base + len]) {
+            *a += *x as f64;
+        }
+        for (x, a) in c.dv.iter().zip(&mut dv_acc[base..base + len]) {
+            *a += *x as f64;
+        }
+    }
+    let dk: Vec<f32> = dk_acc.iter().map(|x| *x as f32).collect();
+    let dv: Vec<f32> = dv_acc.iter().map(|x| *x as f32).collect();
+
+    // dQ: per owned chunk, ascending absolute K-chunk order
+    let mut dq_tiles = Vec::with_capacity(my_qcs.len());
+    for (qi, &qc) in my_qcs.iter().enumerate() {
+        let (i0, i1) = plan.chunk_rows(qc);
+        let il = i1 - i0;
+        let mut acc = vec![0.0f64; spec.batch * nq * il * d];
+        let parts = &mut dq_parts[qi];
+        if !skew {
+            parts.sort_unstable_by_key(|p| (p.0, p.1, p.2));
+        }
+        for (_kc, b, kvh, tile) in parts.iter() {
+            for (gi, h) in spec.heads.q_heads_of(*kvh).enumerate() {
+                for li in 0..il {
+                    let src = (gi * il + li) * d;
+                    let dst = ((*b * nq + h) * il + li) * d;
+                    for t2 in 0..d {
+                        acc[dst + t2] += tile[src + t2] as f64;
+                    }
+                }
+            }
+        }
+        dq_tiles.push((qc, acc.iter().map(|x| *x as f32).collect()));
+    }
+    Ok(BwdWorkerOut { dk, dv, dq_tiles, compute_ns, link: ep.stats() })
+}
+
+/// Contribution tiles of every owned (Q chunk × K chunk of shard `s`)
+/// pair: dK/dV tiles appended to the traveling payload, dQ tiles kept
+/// locally.  Tile values are pure f32 functions of the fixed chunk grid
+/// and the tensor values — identical at any worker count; only *where*
+/// they are computed moves with W.
+#[allow(clippy::too_many_arguments)]
+fn bwd_shard_contribs(
+    my_qcs: &[usize],
+    data: &KvShardData,
+    s: usize,
+    plan: &SeqParPlan,
+    spec: &AttnSpec,
+    qv: TensorView,
+    dov: TensorView,
+    lse: &[f32],
+    dvec: &[f32],
+    contribs: &mut Vec<Contrib>,
+    dq_parts: &mut [Vec<(usize, usize, usize, Vec<f32>)>],
+) {
+    let qd = spec.q_dims();
+    let d = spec.head_dim;
+    let n = spec.seq;
+    let scale = spec.scale();
+    let group = spec.heads.group_size();
+    for (qi, &qc) in my_qcs.iter().enumerate() {
+        let (i0, i1) = plan.chunk_rows(qc);
+        let il = i1 - i0;
+        for kc in plan.shard_chunks(s) {
+            let (j0, j1) = plan.chunk_rows(kc);
+            if spec.mask.cover(i0, i1, j0, j1) == Cover::Skip {
+                continue;
+            }
+            let jl = j1 - j0;
+            for b in 0..spec.batch {
+                for kvh in 0..spec.heads.n_kv_heads {
+                    let mut dk_t = vec![0.0f32; jl * d];
+                    let mut dv_t = vec![0.0f32; jl * d];
+                    let mut dq_t = vec![0.0f32; group * il * d];
+                    for (gi, h) in spec.heads.q_heads_of(kvh).enumerate() {
+                        for i in i0..i1 {
+                            let (lo, hi) = spec.mask.row_bounds(i, n);
+                            let (st, en) = (lo.max(j0), hi.min(j1));
+                            if st >= en {
+                                continue;
+                            }
+                            let qrow = qv.row(b, h, i);
+                            let doi = dov.row(b, h, i);
+                            let lse_i = lse[qd.lse_offset(b, h, i)];
+                            let d_i = dvec[qd.lse_offset(b, h, i)];
+                            let (krows, vrows) = data.rows(spec, b, kvh, st, en);
+                            let dq_at = (gi * il + (i - i0)) * d;
+                            for j in st..en {
+                                let kj = &krows[(j - st) * d..(j - st + 1) * d];
+                                let vj = &vrows[(j - st) * d..(j - st + 1) * d];
+                                let mut sdot = 0.0f32;
+                                for t2 in 0..d {
+                                    sdot += qrow[t2] * kj[t2];
+                                }
+                                let pij = (sdot * scale - lse_i).exp();
+                                let mut dp = 0.0f32;
+                                for t2 in 0..d {
+                                    dp += doi[t2] * vj[t2];
+                                }
+                                let ds = pij * (dp - d_i) * scale;
+                                let cj = (j - j0) * d;
+                                for t2 in 0..d {
+                                    dk_t[cj + t2] += ds * qrow[t2];
+                                    dv_t[cj + t2] += pij * doi[t2];
+                                    dq_t[dq_at + t2] += ds * kj[t2];
+                                }
+                            }
+                        }
+                    }
+                    contribs.push(Contrib {
+                        b: b as u32,
+                        kvh: kvh as u32,
+                        qc: qc as u32,
+                        kc: kc as u32,
+                        dk: dk_t,
+                        dv: dv_t,
+                    });
+                    dq_parts[qi].push((kc, b, kvh, dq_t));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::exec::reference;
+    use crate::attn::spec::{HeadMap, Mask};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    fn spec(seq: usize, heads: HeadMap, mask: Mask) -> AttnSpec {
+        AttnSpec { batch: 1, heads, seq, head_dim: 8, mask }
+    }
+
+    #[test]
+    fn plan_partitions_and_clamps() {
+        let sp = spec(100, HeadMap::mha(2), Mask::Causal);
+        let plan =
+            SeqParPlan::build(&sp, &SeqParParams { workers: 3, chunk: 16, striped: true });
+        assert_eq!(plan.n_chunks, 7);
+        assert_eq!(plan.workers, 3);
+        assert_eq!(plan.shard_start, vec![0, 2, 4, 7]);
+        // striped ownership round-robins chunks
+        assert_eq!(plan.q_owner, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(plan.chunk_rows(6), (96, 100));
+        assert_eq!(plan.shard_rows(2), (64, 100));
+        // more workers than chunks clamps
+        let tiny =
+            SeqParPlan::build(&sp, &SeqParParams { workers: 64, chunk: 64, striped: false });
+        assert_eq!(tiny.workers, 2);
+        // contiguous ownership matches the shard split
+        assert_eq!(tiny.q_owner, vec![0, 1]);
+    }
+
+    #[test]
+    fn causal_contiguous_plan_skips_above_diagonal_shards() {
+        let sp = spec(128, HeadMap::mha(2), Mask::Causal);
+        let plan =
+            SeqParPlan::build(&sp, &SeqParParams { workers: 4, chunk: 16, striped: false });
+        // contiguous causal: shard s is attended only by workers >= s, so
+        // hops shrink toward the last shard and shard 3 never ships
+        assert_eq!(plan.fwd_hops, vec![3, 2, 1, 0]);
+        assert!(!plan.bwd_loop[3]);
+        assert!(plan.bwd_loop[0]);
+        // striping makes every shard needed ring-wide (late rows everywhere)
+        let striped =
+            SeqParPlan::build(&sp, &SeqParParams { workers: 4, chunk: 16, striped: true });
+        assert_eq!(striped.fwd_hops, vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn sliding_window_plan_expires_shards_early() {
+        let sp = spec(256, HeadMap::mha(2), Mask::SlidingWindow(8));
+        let plan =
+            SeqParPlan::build(&sp, &SeqParParams { workers: 8, chunk: 16, striped: false });
+        // a 8-token window never reaches more than one chunk back, so no
+        // shard travels more than one hop under contiguous ownership
+        assert!(plan.fwd_hops.iter().all(|&h| h <= 1), "{:?}", plan.fwd_hops);
+        assert!(plan.fwd_hops.iter().any(|&h| h == 1), "adjacent shards do ship");
+    }
+
+    #[test]
+    fn forward_matches_oracle_and_counts_bytes() {
+        let mut rng = Rng::seed_from(0x5EA1);
+        for (sp, workers) in [
+            (spec(96, HeadMap::mha(2), Mask::Causal), 3),
+            (spec(96, HeadMap { n_q_heads: 4, n_kv_heads: 2 }, Mask::Full), 4),
+            (spec(96, HeadMap::mha(2), Mask::SlidingWindow(13)), 4),
+        ] {
+            let q = rand_vec(&mut rng, sp.q_elems());
+            let k = rand_vec(&mut rng, sp.kv_elems());
+            let v = rand_vec(&mut rng, sp.kv_elems());
+            let prm = SeqParParams { workers, chunk: 16, striped: true };
+            let (out, stats) = forward_spec(&q, &k, &v, sp, prm).expect("seqpar fwd");
+            let want = reference::forward_spec(&q, &k, &v, sp);
+            assert!(max_diff(&out.o, &want.o) < 1e-4, "O diverged ({sp:?})");
+            assert!(max_diff(&out.lse, &want.lse) < 1e-4, "LSE diverged ({sp:?})");
+            // measured transport bytes equal the plan's static prediction
+            let plan = SeqParPlan::build(&sp, &prm);
+            assert_eq!(stats.comm_bytes, plan.fwd_comm_bytes(&sp), "{sp:?}");
+            assert_eq!(stats.comm_msgs, plan.fwd_comm_msgs(), "{sp:?}");
+            assert_eq!(stats.workers, plan.workers);
+        }
+    }
+
+    #[test]
+    fn backward_matches_oracle() {
+        let mut rng = Rng::seed_from(0x5EA2);
+        let sp = spec(64, HeadMap { n_q_heads: 4, n_kv_heads: 2 }, Mask::Causal);
+        let q = rand_vec(&mut rng, sp.q_elems());
+        let k = rand_vec(&mut rng, sp.kv_elems());
+        let v = rand_vec(&mut rng, sp.kv_elems());
+        let dout = rand_vec(&mut rng, sp.q_elems());
+        let prm = SeqParParams { workers: 4, chunk: 8, striped: true };
+        let (fwd, _) = forward_spec(&q, &k, &v, sp, prm).expect("seqpar fwd");
+        let (g, stats) = backward_spec(&q, &k, &v, &fwd, &dout, sp, prm).expect("seqpar bwd");
+        let r = reference::backward_spec(&q, &k, &v, &dout, sp);
+        assert!(max_diff(&g.dq, &r.dq) < 1e-4, "dQ diverged");
+        assert!(max_diff(&g.dk, &r.dk) < 1e-4, "dK diverged");
+        assert!(max_diff(&g.dv, &r.dv) < 1e-4, "dV diverged");
+        assert!(stats.comm_bytes > 0, "backward ring shipped nothing");
+    }
+
+    #[test]
+    fn worker_count_and_striping_do_not_change_bytes_out() {
+        let mut rng = Rng::seed_from(0x5EA3);
+        let sp = spec(70, HeadMap::mha(2), Mask::Causal);
+        let q = rand_vec(&mut rng, sp.q_elems());
+        let k = rand_vec(&mut rng, sp.kv_elems());
+        let v = rand_vec(&mut rng, sp.kv_elems());
+        let dout = rand_vec(&mut rng, sp.q_elems());
+        let base_prm = SeqParParams { workers: 1, chunk: 16, striped: true };
+        let (base, _) = forward_spec(&q, &k, &v, sp, base_prm).expect("base fwd");
+        let (bg, _) =
+            backward_spec(&q, &k, &v, &base, &dout, sp, base_prm).expect("base bwd");
+        for workers in [2usize, 3, 4] {
+            for striped in [true, false] {
+                let prm = SeqParParams { workers, chunk: 16, striped };
+                let (out, _) = forward_spec(&q, &k, &v, sp, prm).expect("fwd");
+                assert_eq!(out.o, base.o, "O not byte-identical (W={workers} striped={striped})");
+                assert_eq!(out.lse, base.lse, "LSE not byte-identical (W={workers})");
+                let (g, _) =
+                    backward_spec(&q, &k, &v, &out, &dout, sp, prm).expect("bwd");
+                assert_eq!(g.dq, bg.dq, "dQ not byte-identical (W={workers} striped={striped})");
+                assert_eq!(g.dk, bg.dk, "dK not byte-identical (W={workers})");
+                assert_eq!(g.dv, bg.dv, "dV not byte-identical (W={workers})");
+            }
+        }
+    }
+
+    #[test]
+    fn never_attended_shards_are_never_shipped() {
+        let mut rng = Rng::seed_from(0x5EA4);
+        // narrow window, contiguous shards: distant shards must not travel
+        let sp = spec(128, HeadMap::mha(2), Mask::SlidingWindow(9));
+        let q = rand_vec(&mut rng, sp.q_elems());
+        let k = rand_vec(&mut rng, sp.kv_elems());
+        let v = rand_vec(&mut rng, sp.kv_elems());
+        let win = SeqParParams { workers: 4, chunk: 16, striped: false };
+        let (_, stats) = forward_spec(&q, &k, &v, sp, win).expect("windowed fwd");
+        let full_spec = AttnSpec { mask: Mask::Full, ..sp };
+        let (_, full) = forward_spec(&q, &k, &v, full_spec, win).expect("full fwd");
+        assert!(
+            stats.comm_bytes < full.comm_bytes,
+            "window must ship fewer bytes than full attention ({} vs {})",
+            stats.comm_bytes,
+            full.comm_bytes
+        );
+        // under a full mask every shard makes the whole loop
+        let plan = SeqParPlan::build(&full_spec, &win);
+        assert!(plan.fwd_hops.iter().all(|&h| h == 3));
+        assert_eq!(full.shards_unshipped, 0);
+    }
+}

@@ -15,7 +15,29 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub serve: ServeConfig,
     pub model: ModelConfig,
+    pub attn: AttnConfig,
     pub bench: BenchConfig,
+}
+
+/// Attention-execution knobs (`[attn]` section) — how `attn-exec` and
+/// long-context callers drive the sequence-parallel ring (DESIGN.md §16).
+#[derive(Debug, Clone)]
+pub struct AttnConfig {
+    /// Ring workers for `ExecMode::SeqParallel`; 0 = one per pool thread.
+    pub seqpar_workers: usize,
+    /// Absolute K/Q chunk granularity in tokens — the unit seqpar
+    /// partials merge at (byte identity requires equal chunk, not equal
+    /// workers).
+    pub seqpar_chunk: usize,
+    /// Striped (round-robin) Q-chunk ownership for causal load balance;
+    /// false = naive contiguous shards (the bench baseline).
+    pub seqpar_stripe: bool,
+}
+
+impl Default for AttnConfig {
+    fn default() -> Self {
+        AttnConfig { seqpar_workers: 0, seqpar_chunk: 64, seqpar_stripe: true }
+    }
 }
 
 /// Model-shape overrides for the native backend (`[model]` section).
@@ -127,6 +149,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             serve: ServeConfig::default(),
             model: ModelConfig::default(),
+            attn: AttnConfig::default(),
             bench: BenchConfig::default(),
         }
     }
@@ -205,6 +228,15 @@ impl RunConfig {
                     .map(|n| n as usize),
                 window: doc.get("model.window").and_then(|v| v.as_i64()).map(|n| n as usize),
             },
+            attn: AttnConfig {
+                seqpar_workers: doc
+                    .i64_or("attn.seqpar_workers", d.attn.seqpar_workers as i64)
+                    as usize,
+                seqpar_chunk: doc
+                    .i64_or("attn.seqpar_chunk", d.attn.seqpar_chunk as i64)
+                    as usize,
+                seqpar_stripe: doc.bool_or("attn.seqpar_stripe", d.attn.seqpar_stripe),
+            },
             bench: BenchConfig {
                 out_dir: doc.str_or("bench.out_dir", &d.bench.out_dir).to_string(),
             },
@@ -235,7 +267,9 @@ mod tests {
              prefix_cache = true\nprefix_cache_blocks = 12\n\
              http = \"127.0.0.1:8080\"\nmax_batch_prefill_tokens = 512\n\
              max_batch_total_tokens = 2048\nwaiting_served_ratio = 1.5\n\
-             [model]\nn_kv_heads = 2\nwindow = 48\n",
+             [model]\nn_kv_heads = 2\nwindow = 48\n\
+             [attn]\nseqpar_workers = 4\nseqpar_chunk = 32\n\
+             seqpar_stripe = false\n",
         )
         .unwrap();
         let c = RunConfig::from_doc(&doc);
@@ -261,6 +295,9 @@ mod tests {
         assert!((c.serve.waiting_served_ratio - 1.5).abs() < 1e-12);
         assert_eq!(c.model.n_kv_heads, Some(2));
         assert_eq!(c.model.window, Some(48));
+        assert_eq!(c.attn.seqpar_workers, 4);
+        assert_eq!(c.attn.seqpar_chunk, 32);
+        assert!(!c.attn.seqpar_stripe);
     }
 
     #[test]
@@ -286,5 +323,9 @@ mod tests {
         assert!((c.serve.waiting_served_ratio - a.waiting_served_ratio).abs() < 1e-12);
         assert_eq!(c.model.n_kv_heads, None);
         assert_eq!(c.model.window, None);
+        // seqpar defaults: auto workers, 64-token chunks, striping on
+        assert_eq!(c.attn.seqpar_workers, 0);
+        assert_eq!(c.attn.seqpar_chunk, 64);
+        assert!(c.attn.seqpar_stripe);
     }
 }

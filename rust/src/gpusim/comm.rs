@@ -1,0 +1,173 @@
+//! Ring-interconnect cost term for sequence-parallel attention (DESIGN.md
+//! §16).
+//!
+//! The executing seqpar layer (`attn::exec::seqpar`) rotates KV shards
+//! around an in-process ring; on real hardware the same schedule rides a
+//! device-to-device interconnect (NVLink-class for intra-node rings).
+//! This module prices that transport with the standard α–β model:
+//!
+//!   t_exchange = msgs · latency + total_bytes / bandwidth
+//!
+//! The **calibration contract**: the byte count fed to this model is
+//! [`SeqParPlan::fwd_comm_bytes`] — the exact same formula the executing
+//! transport meters into `seqpar_comm_bytes_total` (asserted equal in
+//! both layers' tests).  Because bytes-moved is the shared currency, the
+//! simulated and executing layers rank shard counts the same way: more
+//! shards always means more exchanged bytes (each shard visits more
+//! peers), while per-worker compute shrinks — the crossover the
+//! `attn::autotune::seqpar_cost` search exposes.
+//!
+//! [`SeqParPlan::fwd_comm_bytes`]: crate::attn::exec::seqpar::SeqParPlan::fwd_comm_bytes
+
+/// One directed ring link in the α–β (latency–bandwidth) model.
+#[derive(Debug, Clone, Copy)]
+pub struct RingLink {
+    /// Sustained payload bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Per-message latency in seconds (α term).
+    pub latency: f64,
+}
+
+impl RingLink {
+    /// NVLink-class intra-node link: ~250 GB/s per direction, ~1.5 µs
+    /// per-message launch+sync latency.
+    pub fn nvlink() -> RingLink {
+        RingLink { bandwidth: 250e9, latency: 1.5e-6 }
+    }
+
+    /// PCIe-class fallback link: ~25 GB/s, ~5 µs latency — an order of
+    /// magnitude slower, shifting the compute/comm crossover toward
+    /// fewer shards.
+    pub fn pcie() -> RingLink {
+        RingLink { bandwidth: 25e9, latency: 5e-6 }
+    }
+
+    /// Time for one message of `bytes` payload over this link.
+    pub fn hop_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+
+    /// Time for a whole exchange of `msgs` messages totalling
+    /// `total_bytes` — the α–β cost of one seqpar pass's transport.
+    /// Strictly monotone in both arguments (any positive latency and
+    /// finite bandwidth), which is what keeps the shard-count ranking
+    /// honest.
+    pub fn exchange_time(&self, msgs: u64, total_bytes: f64) -> f64 {
+        msgs as f64 * self.latency + total_bytes / self.bandwidth
+    }
+}
+
+impl Default for RingLink {
+    fn default() -> Self {
+        RingLink::nvlink()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::exec::seqpar::{forward_spec, SeqParParams, SeqParPlan};
+    use crate::attn::spec::{AttnSpec, HeadMap, Mask};
+    use crate::util::rng::Rng;
+
+    fn spec(seq: usize) -> AttnSpec {
+        AttnSpec {
+            batch: 1,
+            heads: HeadMap::mha(2),
+            seq,
+            head_dim: 16,
+            mask: Mask::Full,
+        }
+    }
+
+    fn sim_cost(sp: &AttnSpec, workers: usize) -> (u64, f64) {
+        let prm = SeqParParams { workers, chunk: 32, striped: true };
+        let plan = SeqParPlan::build(sp, &prm);
+        let bytes = plan.fwd_comm_bytes(sp);
+        (bytes, RingLink::nvlink().exchange_time(plan.fwd_comm_msgs(), bytes as f64))
+    }
+
+    #[test]
+    fn alpha_beta_terms_price_as_declared() {
+        let l = RingLink { bandwidth: 100e9, latency: 2e-6 };
+        assert!((l.hop_time(100e9) - (1.0 + 2e-6)).abs() < 1e-9);
+        let t = l.exchange_time(10, 200e9);
+        assert!((t - (10.0 * 2e-6 + 2.0)).abs() < 1e-9);
+        // zero-byte exchange still pays latency per message
+        assert!((l.exchange_time(4, 0.0) - 8e-6).abs() < 1e-12);
+        assert!(RingLink::nvlink().bandwidth > RingLink::pcie().bandwidth);
+    }
+
+    #[test]
+    fn simulated_ring_cost_is_monotone_in_shards_and_seq() {
+        // Satellite bugfix pin: under a Full mask, every extra shard adds
+        // ring traffic ((W-1)/W of total KV per rotation grows with W),
+        // and longer sequences ship more bytes at every W.
+        for seq in [256usize, 512, 1024] {
+            let sp = spec(seq);
+            let mut prev = sim_cost(&sp, 1);
+            assert_eq!(prev.0, 0, "W=1 must ship zero bytes");
+            for w in [2usize, 4, 8] {
+                let cur = sim_cost(&sp, w);
+                assert!(
+                    cur.0 > prev.0 && cur.1 > prev.1,
+                    "cost not monotone in shard count at seq {seq}: W={w} {cur:?} vs {prev:?}"
+                );
+                prev = cur;
+            }
+        }
+        for w in [2usize, 4, 8] {
+            let mut prev = sim_cost(&spec(256), w);
+            for seq in [512usize, 1024] {
+                let cur = sim_cost(&spec(seq), w);
+                assert!(
+                    cur.0 > prev.0 && cur.1 > prev.1,
+                    "cost not monotone in seq at W={w}"
+                );
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn simulated_bytes_agree_with_executing_counter_on_two_shapes() {
+        // The calibration contract: the byte count the cost model prices
+        // is the byte count the executing transport actually meters.
+        let mut rng = Rng::seed_from(0xC0DE);
+        for (sp, workers) in [
+            (spec(256), 4usize),
+            (
+                AttnSpec {
+                    batch: 2,
+                    heads: HeadMap { n_q_heads: 4, n_kv_heads: 2 },
+                    seq: 320,
+                    head_dim: 8,
+                    mask: Mask::Causal,
+                },
+                5,
+            ),
+        ] {
+            let gen = |rng: &mut Rng, n: usize| -> Vec<f32> {
+                (0..n).map(|_| rng.normal() as f32).collect()
+            };
+            let q = gen(&mut rng, sp.q_elems());
+            let k = gen(&mut rng, sp.kv_elems());
+            let v = gen(&mut rng, sp.kv_elems());
+            let prm = SeqParParams { workers, chunk: 32, striped: true };
+            let (_, stats) = forward_spec(&q, &k, &v, sp, prm).expect("seqpar fwd");
+            let plan = SeqParPlan::build(&sp, &prm);
+            assert_eq!(
+                stats.comm_bytes,
+                plan.fwd_comm_bytes(&sp),
+                "measured ring bytes diverge from the simulated model's input ({sp:?})"
+            );
+            assert_eq!(stats.comm_msgs, plan.fwd_comm_msgs());
+            // identical inputs → identical simulated price for the
+            // executing run and the planned run
+            let link = RingLink::default();
+            let sim = link.exchange_time(plan.fwd_comm_msgs(), plan.fwd_comm_bytes(&sp) as f64);
+            let exec = link.exchange_time(stats.comm_msgs, stats.comm_bytes as f64);
+            assert!((sim - exec).abs() < 1e-15, "{sim} vs {exec}");
+        }
+    }
+}

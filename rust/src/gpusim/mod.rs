@@ -2,10 +2,12 @@
 //! This is the performance substrate (DESIGN.md section 1) that regenerates
 //! the paper's A100/H100 figures on a machine that has neither.
 
+pub mod comm;
 pub mod device;
 pub mod kernel;
 pub mod occupancy;
 
+pub use comm::RingLink;
 pub use device::Device;
 pub use kernel::{simulate, simulate_pipeline, KernelCost, KernelLaunch};
 pub use occupancy::{occupancy, waves, BlockResources, Limiter, Occupancy};

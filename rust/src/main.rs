@@ -32,7 +32,7 @@ use std::sync::Arc;
 use fa2::bail;
 use fa2::util::error::{Context, Result};
 
-use fa2::attn::exec::{parallel, reference, FlashParams};
+use fa2::attn::exec::{parallel, reference, seqpar, FlashParams};
 use fa2::attn::spec::{AttnSpec, HeadMap, Mask};
 use fa2::attn::{kernels_for, AttnProblem, Method, Pass};
 use fa2::bench::{figures, table1};
@@ -70,7 +70,9 @@ fn usage() -> ! {
                      [--trace FILE] [--metrics-out FILE]  (env: FA2_TRACE=FILE)\n  \
            attn-exec [--batch B] [--heads H] [--kv-heads H] [--seqlen N]\n            \
                      [--head-dim D] [--causal 0|1] [--window W]\n            \
-                     [--threads T] [--check 0|1]\n  \
+                     [--threads T] [--check 0|1] [--config FILE]\n            \
+                     [--seqpar-workers N] [--seqpar-chunk N]\n            \
+                     [--seqpar-stripe 0|1]\n  \
            bench-gate [--summary FILE] [--baseline FILE] [--tolerance F]\n            \
                      [--update-baseline]\n  \
            lint      [--root DIR] [--rules] [--inject-violation]\n  \
@@ -702,6 +704,67 @@ fn cmd_attn_exec(args: &Args) -> Result<()> {
         "decode: {:>6.1} µs/token over {hist} cached rows (chunk 64)",
         s.p50 * 1e6
     );
+
+    // Sequence-parallel ring execution (DESIGN.md §16): opt in with
+    // --seqpar-workers (0 = one worker per pool thread).  A `--config`
+    // file's `[attn]` table supplies the defaults for all three knobs.
+    if args.get("seqpar-workers").is_some() || args.get("config").is_some() {
+        let acfg = match args.get("config") {
+            Some(path) if !path.is_empty() => RunConfig::load(Path::new(path))?.attn,
+            _ => fa2::config::AttnConfig::default(),
+        };
+        let workers = match args.get_usize("seqpar-workers")?.unwrap_or(acfg.seqpar_workers) {
+            0 => fa2::util::pool::threads(),
+            w => w,
+        };
+        let chunk = args
+            .get_usize("seqpar-chunk")?
+            .unwrap_or(acfg.seqpar_chunk)
+            .max(1);
+        let striped = match args.get("seqpar-stripe") {
+            Some("0") | Some("false") => false,
+            Some(_) => true,
+            None => acfg.seqpar_stripe,
+        };
+        let prm = seqpar::SeqParParams { workers, chunk, striped };
+        let (sp_out, st) = seqpar::forward_spec(&q, &k, &v, spec, prm)?;
+        let wall_s = (st.wall_ns as f64 / 1e9).max(1e-12);
+        println!(
+            "seqpar fwd: W={} chunk={chunk} striped={striped} {:>8.2} ms  {:>7.2} GFLOP/s",
+            st.workers,
+            wall_s * 1e3,
+            dims.flops(Pass::Fwd) / wall_s / 1e9
+        );
+        println!(
+            "seqpar comm: {} B over {} msgs ({} B/step, {} steps), \
+             {} shards unshipped, idle {:.2} ms",
+            st.comm_bytes,
+            st.comm_msgs,
+            st.comm_bytes / st.steps.max(1) as u64,
+            st.steps,
+            st.shards_unshipped,
+            st.idle_ns as f64 / 1e6
+        );
+        let (_, stb) = seqpar::backward_spec(&q, &k, &v, &sp_out, &dout, spec, prm)?;
+        let bwall_s = (stb.wall_ns as f64 / 1e9).max(1e-12);
+        println!(
+            "seqpar bwd: {:>8.2} ms  {:>7.2} GFLOP/s  ({} B over {} msgs)",
+            bwall_s * 1e3,
+            dims.flops(Pass::Bwd) / bwall_s / 1e9,
+            stb.comm_bytes,
+            stb.comm_msgs
+        );
+        if check {
+            // the ring's core invariant: bytes out are identical at any
+            // worker count, so W workers must reproduce W=1 exactly
+            let solo = seqpar::SeqParParams { workers: 1, ..prm };
+            let (base, _) = seqpar::forward_spec(&q, &k, &v, spec, solo)?;
+            if sp_out.o != base.o || sp_out.lse != base.lse {
+                bail!("seqpar W={} output is not byte-identical to W=1", st.workers);
+            }
+            println!("seqpar parity: byte-identical to W=1 ✓");
+        }
+    }
 
     if check {
         let rf = reference::forward_spec(&q, &k, &v, spec);

@@ -48,6 +48,8 @@ pub const REGISTRY: &[NameDef] = &[
     NameDef { kind: Span, name: "attn_flash_fwd", help: "one flash forward kernel invocation (whole tensor)" },
     NameDef { kind: Span, name: "attn_flash_bwd", help: "one flash backward kernel invocation (whole tensor)" },
     NameDef { kind: Span, name: "attn_decode_step", help: "one in-place paged decode step over a batch of rows" },
+    NameDef { kind: Span, name: "attn_seqpar_fwd", help: "one sequence-parallel ring forward pass (all workers)" },
+    NameDef { kind: Span, name: "attn_seqpar_bwd", help: "one sequence-parallel ring backward pass (all workers)" },
     NameDef { kind: Span, name: "bench_overhead_span", help: "no-op span used by the tracing-overhead bench" },
     NameDef { kind: Span, name: "http_request", help: "one HTTP request, parse to last response byte" },
     NameDef { kind: Span, name: "test_span_outer", help: "golden-trace fixture: outer span" },
@@ -101,6 +103,11 @@ pub const REGISTRY: &[NameDef] = &[
     NameDef { kind: Counter, name: "kv_prefix_evictions_total", help: "zero-ref cached blocks reclaimed (LRU or retained-cap)" },
     NameDef { kind: Counter, name: "kv_prefix_cow_total", help: "copy-on-write block copies triggered by a divergent write" },
     NameDef { kind: Counter, name: "kv_prefix_cached_tokens_total", help: "prompt tokens whose prefill was skipped via cache adoption" },
+    NameDef { kind: Counter, name: "seqpar_comm_bytes_total", help: "payload bytes shipped over seqpar ring links" },
+    NameDef { kind: Counter, name: "seqpar_comm_msgs_total", help: "messages sent over seqpar ring links" },
+    NameDef { kind: Counter, name: "seqpar_steps_total", help: "seqpar ring steps executed (workers per pass)" },
+    NameDef { kind: Counter, name: "seqpar_idle_ns_total", help: "per-worker non-compute nanoseconds summed over seqpar passes" },
+    NameDef { kind: Counter, name: "seqpar_shards_unshipped_total", help: "KV shards the mask proved never-attended remotely (skipped shipping)" },
     // --- gauges (metrics snapshot) ---
     NameDef { kind: Gauge, name: "kv_blocks_in_use", help: "arena blocks currently granted" },
     NameDef { kind: Gauge, name: "kv_blocks_high_water", help: "max arena blocks ever simultaneously granted" },
@@ -150,7 +157,8 @@ mod tests {
 
     #[test]
     fn lookup_finds_declared_names_only() {
-        assert_eq!(lookup("engine_steps_total"), Some(18));
+        // 12 spans + 8 events precede the first counter
+        assert_eq!(lookup("engine_steps_total"), Some(20));
         assert!(lookup("engine_steps_totall").is_none());
         for (i, def) in REGISTRY.iter().enumerate() {
             assert_eq!(lookup(def.name), Some(i));

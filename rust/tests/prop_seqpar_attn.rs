@@ -1,0 +1,219 @@
+//! Properties of the sequence-parallel ring executor (DESIGN.md §16):
+//!
+//! - oracle parity: ring forward/backward within 1e-4 of the O(N²)
+//!   reference at seq 512 — 4× the single-slab window of 128 — across
+//!   causal, GQA, and sliding-window masks;
+//! - determinism: outputs are **byte-identical** at every worker count,
+//!   including counts that do not divide the chunk count (the merge order
+//!   is keyed by absolute K-chunk index, never arrival order).  ci.sh runs
+//!   this test under FA2_SEQPAR_INJECT_SKEW=1 and requires it to FAIL —
+//!   proving the invariant is load-bearing, not vacuous;
+//! - gradcheck: the ring backward's dQ/dK/dV match central finite
+//!   differences of the reference forward on tiny problems;
+//! - shard skipping: sliding-window shards nobody attends are never
+//!   shipped, and measured ring bytes always equal the plan's prediction
+//!   (the gpusim calibration contract).
+
+use fa2::attn::exec::reference;
+use fa2::attn::exec::seqpar::{backward_spec, forward_spec, SeqParParams, SeqParPlan};
+use fa2::attn::spec::{AttnSpec, HeadMap, Mask};
+use fa2::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn draws(spec: AttnSpec, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::seed_from(seed);
+    let q = rand_vec(&mut rng, spec.q_elems());
+    let k = rand_vec(&mut rng, spec.kv_elems());
+    let v = rand_vec(&mut rng, spec.kv_elems());
+    let dout = rand_vec(&mut rng, spec.q_elems());
+    (q, k, v, dout)
+}
+
+#[test]
+fn oracle_parity_at_4x_the_single_slab_window() {
+    // seq 512 = 4 × the 128-token sliding window: shards expire
+    // mid-ring, GQA groups share KV rows, and the causal diagonal crosses
+    // many chunk boundaries.  Every variant must still match the O(N²)
+    // oracle to 1e-4 in both passes.
+    let cases = [
+        (HeadMap::mha(2), Mask::Causal, 4usize),
+        (HeadMap { n_q_heads: 4, n_kv_heads: 2 }, Mask::Causal, 5),
+        (HeadMap { n_q_heads: 4, n_kv_heads: 1 }, Mask::SlidingWindow(128), 8),
+        (HeadMap::mha(2), Mask::Full, 3),
+    ];
+    for (i, &(heads, mask, workers)) in cases.iter().enumerate() {
+        let spec = AttnSpec { batch: 1, heads, seq: 512, head_dim: 16, mask };
+        spec.validate().unwrap();
+        let (q, k, v, dout) = draws(spec, 0x5EED + i as u64);
+        let prm = SeqParParams { workers, chunk: 64, striped: true };
+
+        let (out, _) = forward_spec(&q, &k, &v, spec, prm).expect("seqpar fwd");
+        let rf = reference::forward_spec(&q, &k, &v, spec);
+        assert!(
+            max_diff(&out.o, &rf.o) < 1e-4,
+            "fwd O diverged from oracle ({mask:?}, W={workers}): {}",
+            max_diff(&out.o, &rf.o)
+        );
+        assert!(max_diff(&out.lse, &rf.lse) < 1e-4, "fwd LSE diverged ({mask:?})");
+
+        let (g, _) = backward_spec(&q, &k, &v, &out, &dout, spec, prm).expect("seqpar bwd");
+        let rg = reference::backward_spec(&q, &k, &v, &dout, spec);
+        for (name, got, want) in
+            [("dQ", &g.dq, &rg.dq), ("dK", &g.dk, &rg.dk), ("dV", &g.dv, &rg.dv)]
+        {
+            assert!(
+                max_diff(got, want) < 1e-4,
+                "bwd {name} diverged from oracle ({mask:?}, W={workers}): {}",
+                max_diff(got, want)
+            );
+        }
+    }
+}
+
+#[test]
+fn byte_identical_across_worker_counts() {
+    // The tentpole invariant: W is an execution detail, not a numeric
+    // input.  seq 193 / chunk 16 gives 13 chunks — indivisible by every
+    // tested W, so shards are ragged and stripes wrap unevenly.
+    // FA2_SEQPAR_INJECT_SKEW=1 disables the deterministic merge sort and
+    // MUST make this test fail (ci.sh --verify-seqpar proves it does).
+    let spec = AttnSpec {
+        batch: 2,
+        heads: HeadMap { n_q_heads: 4, n_kv_heads: 2 },
+        seq: 193,
+        head_dim: 8,
+        mask: Mask::Causal,
+    };
+    let (q, k, v, dout) = draws(spec, 0xB17E);
+    let solo = SeqParParams { workers: 1, chunk: 16, striped: true };
+    let (base, _) = forward_spec(&q, &k, &v, spec, solo).expect("W=1 fwd");
+    let (bg, _) = backward_spec(&q, &k, &v, &base, &dout, spec, solo).expect("W=1 bwd");
+    for workers in [2usize, 3, 5, 8] {
+        for striped in [true, false] {
+            let prm = SeqParParams { workers, chunk: 16, striped };
+            let (out, _) = forward_spec(&q, &k, &v, spec, prm).expect("fwd");
+            assert_eq!(out.o, base.o, "O not byte-identical at W={workers} striped={striped}");
+            assert_eq!(out.lse, base.lse, "LSE not byte-identical at W={workers}");
+            let (g, _) = backward_spec(&q, &k, &v, &base, &dout, spec, prm).expect("bwd");
+            assert_eq!(g.dq, bg.dq, "dQ not byte-identical at W={workers} striped={striped}");
+            assert_eq!(g.dk, bg.dk, "dK not byte-identical at W={workers} striped={striped}");
+            assert_eq!(g.dv, bg.dv, "dV not byte-identical at W={workers} striped={striped}");
+        }
+    }
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// L = Σ O ⊙ W under the reference forward (dL/dO = W is the `dout`).
+fn loss(q: &[f32], k: &[f32], v: &[f32], w: &[f32], spec: AttnSpec) -> f64 {
+    let out = reference::forward_spec(q, k, v, spec);
+    out.o.iter().zip(w).map(|(&o, &wi)| o as f64 * wi as f64).sum()
+}
+
+#[test]
+fn gradcheck_ring_backward() {
+    // Central finite differences against the reference forward, h = 1e-2,
+    // 1e-3 relative tolerance (same recipe as gradcheck_native_attn) —
+    // but the analytic gradients come from the W=3 ring backward, so the
+    // dK/dV contribution shuttle and exclusive-owner accumulation are on
+    // the checked path.  Tiny problem: FD is O(elems² · N).
+    let spec = AttnSpec {
+        batch: 1,
+        heads: HeadMap { n_q_heads: 2, n_kv_heads: 1 },
+        seq: 24,
+        head_dim: 4,
+        mask: Mask::Causal,
+    };
+    let (q, k, v, w) = draws(spec, 0xFD5E);
+    let prm = SeqParParams { workers: 3, chunk: 4, striped: true };
+    let (fwd, _) = forward_spec(&q, &k, &v, spec, prm).expect("fwd");
+    let (g, _) = backward_spec(&q, &k, &v, &fwd, &w, spec, prm).expect("bwd");
+
+    let h = 1e-2f32;
+    let mut bufs = [q.clone(), k.clone(), v.clone()];
+    for (name, which, grad) in [("dQ", 0usize, &g.dq), ("dK", 1, &g.dk), ("dV", 2, &g.dv)] {
+        for e in 0..grad.len() {
+            let orig = bufs[which][e];
+            bufs[which][e] = orig + h;
+            let up = loss(&bufs[0], &bufs[1], &bufs[2], &w, spec);
+            bufs[which][e] = orig - h;
+            let dn = loss(&bufs[0], &bufs[1], &bufs[2], &w, spec);
+            bufs[which][e] = orig;
+            let fd = (up - dn) / (2.0 * h as f64);
+            assert!(
+                close(grad[e] as f64, fd, 1e-3),
+                "{name}[{e}]: ring analytic {} vs FD {fd}",
+                grad[e]
+            );
+        }
+    }
+}
+
+#[test]
+fn window_shards_skip_and_bytes_match_plan_on_two_shapes() {
+    // Calibration contract + shard skipping, on the executing layer's
+    // side: measured ring traffic equals the plan's closed-form byte
+    // count, and a tight sliding window leaves provably-dead shards
+    // unshipped.  The window shape uses contiguous Q ownership: striping
+    // spreads a shard's neighbor Q-chunks across ranks, so only the
+    // contiguous layout can prove a shard fully dead.
+    let shapes = [
+        (
+            AttnSpec {
+                batch: 1,
+                heads: HeadMap::mha(2),
+                seq: 512,
+                head_dim: 16,
+                mask: Mask::SlidingWindow(64),
+            },
+            8usize,
+            false,
+        ),
+        (
+            AttnSpec {
+                batch: 2,
+                heads: HeadMap { n_q_heads: 4, n_kv_heads: 2 },
+                seq: 320,
+                head_dim: 8,
+                mask: Mask::Causal,
+            },
+            4,
+            true,
+        ),
+    ];
+    for &(spec, workers, striped) in &shapes {
+        let (q, k, v, _) = draws(spec, 0xCA1B);
+        let prm = SeqParParams { workers, chunk: 32, striped };
+        let plan = SeqParPlan::build(&spec, &prm);
+        let (_, st) = forward_spec(&q, &k, &v, spec, prm).expect("fwd");
+        assert_eq!(st.comm_bytes, plan.fwd_comm_bytes(&spec), "bytes diverge ({spec:?})");
+        assert_eq!(st.comm_msgs, plan.fwd_comm_msgs(), "msgs diverge ({spec:?})");
+        assert_eq!(st.steps, workers);
+        if matches!(spec.mask, Mask::SlidingWindow(_)) {
+            assert!(
+                st.shards_unshipped > 0,
+                "a 64-token window over 512 tokens at W=8 must strand shards"
+            );
+        }
+    }
+    // and the window must ship strictly less than a Full mask would
+    let (w_spec, workers, _) = shapes[0];
+    let full = AttnSpec { mask: Mask::Full, ..w_spec };
+    let prm = SeqParParams { workers, chunk: 32, striped: true };
+    let windowed = SeqParPlan::build(&w_spec, &prm).fwd_comm_bytes(&w_spec);
+    let shipped_full = SeqParPlan::build(&full, &prm).fwd_comm_bytes(&full);
+    assert!(
+        windowed < shipped_full,
+        "window {windowed} B should undercut full {shipped_full} B"
+    );
+}
